@@ -1,0 +1,90 @@
+//! AI-coding workload: ARL-Tangram vs Kubernetes pods, side by side
+//! (the paper's §6.2 coding row and §6.3 CPU-scaling story at one setting).
+//!
+//! Shows the two over-provisioning effects the paper targets: trajectory-
+//! lifetime reservation (pods idle between actions) and the lack of elastic
+//! DoP for the long-tailed reward computation.
+//!
+//! Run: `cargo run --release --example coding_workload -- --batch 256`
+
+use arl_tangram::action::{ActionKind, TaskId};
+use arl_tangram::baselines::{BaselineBackend, K8sCfg};
+use arl_tangram::coordinator::{run, Backend, RunCfg, TangramBackend, TangramCfg};
+use arl_tangram::metrics::Metrics;
+use arl_tangram::rollout::workloads::{Catalog, CatalogCfg, Workload, WorkloadKind};
+use arl_tangram::util::cli::Args;
+
+fn report(name: &str, m: &Metrics) {
+    let (exec, queue, ovh) = m.act_breakdown();
+    println!("--- {name}");
+    println!("  mean ACT        : {:8.2}s (p99 {:.2}s)", m.mean_act(), m.p99_act());
+    println!(
+        "  env-exec ACT    : {:8.2}s   reward ACT: {:.2}s",
+        m.mean_act_of(ActionKind::EnvExec),
+        m.mean_act_of(ActionKind::RewardCpu)
+    );
+    println!("  exec/queue/ovh  : {exec:.2}s / {queue:.2}s / {ovh:.3}s");
+    println!("  step duration   : {:8.2}s", m.mean_step_dur());
+    println!("  cpu utilization : {:8.3}", m.mean_util("cpu"));
+}
+
+fn main() {
+    let args = Args::new("AI-coding workload: ARL-Tangram vs K8s")
+        .opt("batch", "256", "trajectories per RL step")
+        .opt("steps", "2", "RL steps")
+        .opt("cores-per-node", "256", "cores per CPU node")
+        .opt("nodes", "5", "CPU nodes")
+        .opt("seed", "1", "rng seed")
+        .parse()
+        .unwrap_or_else(|u| {
+            eprintln!("{u}");
+            std::process::exit(2)
+        });
+    let nodes = args.u64("nodes") as u32;
+    let cores = args.u64("cores-per-node") as u32;
+
+    let cat = Catalog::build(&CatalogCfg {
+        cpu_nodes: nodes,
+        cores_per_node: cores,
+        ..CatalogCfg::default()
+    });
+    let wl = Workload::new(TaskId(0), WorkloadKind::Coding);
+    let cfg = RunCfg {
+        batch: args.u64("batch") as usize,
+        steps: args.u64("steps") as u32,
+        seed: args.u64("seed"),
+        ..RunCfg::default()
+    };
+
+    let mut tangram = TangramBackend::new(
+        &cat,
+        TangramCfg {
+            cpu_nodes: nodes,
+            cores_per_numa: cores / 2,
+            ..TangramCfg::default()
+        },
+    );
+    let m_tangram = run(&mut tangram, &cat, &[wl.clone()], &cfg);
+
+    let mut k8s = BaselineBackend::coding(
+        &cat,
+        K8sCfg { nodes, cores_per_node: cores, ..K8sCfg::default() },
+    );
+    let m_k8s = run(&mut k8s, &cat, &[wl], &cfg);
+
+    println!(
+        "AI coding, batch={} steps={} cores={}\n",
+        cfg.batch,
+        cfg.steps,
+        nodes * cores
+    );
+    report("arl-tangram", &m_tangram);
+    report("k8s baseline", &m_k8s);
+    println!(
+        "\nspeedup: mean ACT {:.2}x | step duration {:.2}x | sched decisions {} (avg {:?})",
+        m_k8s.mean_act() / m_tangram.mean_act().max(1e-9),
+        m_k8s.mean_step_dur() / m_tangram.mean_step_dur().max(1e-9),
+        tangram.sched_invocations,
+        tangram.mean_sched_latency(),
+    );
+}

@@ -1,0 +1,219 @@
+//! End-to-end validation: real GRPO training of a small transformer policy
+//! with reward scoring routed through the ARL-Tangram machinery.
+//!
+//! All three layers compose here, with Python nowhere on the path:
+//!   L1/L2 — the Pallas-attention transformer and GRPO train step, AOT-lowered
+//!           to HLO and executed via PJRT (`runtime::{Trainer, RewardModel}`);
+//!   L3   — reward-scoring requests become *actions* scheduled by the elastic
+//!          algorithm onto the EOE GPU manager (warm/cold accounting, chunked
+//!          allocation), exactly like the paper's reward services.
+//!
+//! Per step: sample a group of completions from the policy (autoregressive,
+//! on-device forward), score them through the coordinator, GRPO-normalize
+//! advantages within the group, and apply one Adam step. Logs the loss curve
+//! and per-step reward to stdout + `e2e_training_curve.csv`.
+//!
+//! Run: `cargo run --release --example e2e_grpo_training -- --steps 150`
+
+use arl_tangram::action::{
+    Action, ActionId, ActionKind, ActionSpec, CostSpec, DimCost, ElasticityModel,
+    ResourceClass, ResourceKindId, ResourceRegistry, ServiceId, TaskId, TrajId,
+};
+use arl_tangram::cluster::gpu::RestoreModel;
+use arl_tangram::managers::{GpuManager, ServiceSpec};
+use arl_tangram::runtime::{PjrtEngine, RewardModel, Trainer};
+use arl_tangram::scheduler::{ElasticScheduler, ResourceState, SchedulerConfig};
+use arl_tangram::sim::{SimDur, SimTime};
+use arl_tangram::util::cli::Args;
+use arl_tangram::util::rng::Rng;
+use std::collections::HashMap;
+use std::io::Write;
+use std::time::Instant;
+
+fn softmax_sample(logits: &[f32], temp: f32, rng: &mut Rng) -> usize {
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = logits.iter().map(|&l| ((l - m) / temp).exp()).collect();
+    let total: f32 = exps.iter().sum();
+    let mut u = rng.f64() as f32 * total;
+    for (i, e) in exps.iter().enumerate() {
+        u -= e;
+        if u <= 0.0 {
+            return i;
+        }
+    }
+    exps.len() - 1
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::new("e2e GRPO training through ARL-Tangram")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("steps", "150", "training steps")
+        .opt("lr", "0.0003", "Adam learning rate")
+        .opt("gen-tokens", "24", "completion length sampled per sequence")
+        .opt("temp", "1.0", "sampling temperature")
+        .opt("seed", "7", "rng seed")
+        .opt("csv", "e2e_training_curve.csv", "loss-curve output")
+        .parse()
+        .unwrap_or_else(|u| {
+            eprintln!("{u}");
+            std::process::exit(2)
+        });
+
+    let t_load = Instant::now();
+    let eng = PjrtEngine::load(args.str("artifacts"))?;
+    println!(
+        "loaded {} artifacts on {} in {:.1}s (policy {:.1}M params)",
+        eng.meta.artifacts.len(),
+        eng.platform(),
+        t_load.elapsed().as_secs_f64(),
+        eng.meta.policy.param_count as f64 / 1e6,
+    );
+    let mut trainer = Trainer::init(&eng, args.u64("seed") as u32)?;
+    let judge = RewardModel::init(&eng, 1 + args.u64("seed") as u32)?;
+    let (b, s) = (trainer.batch, trainer.seq);
+    let gen_tokens = (args.u64("gen-tokens") as usize).min(s - 2);
+    let prompt_len = s - gen_tokens;
+
+    // ---- L3: the judge as a managed GPU service -------------------------
+    let mut registry = ResourceRegistry::new();
+    let gpu_kind = registry.register("gpu_units", ResourceClass::GpuUnits, 8);
+    let svc = ServiceSpec {
+        id: ServiceId(0),
+        name: "judge".into(),
+        weights_gb: eng.meta.reward.param_count as f64 * 4.0 / 1e9,
+        dop_choices: vec![1, 2, 4, 8],
+        efficiency: vec![1.0, 0.92, 0.85, 0.82, 0.72, 0.68, 0.65, 0.62],
+    };
+    let mut gpu = GpuManager::new(1, RestoreModel::default(), vec![svc]);
+    gpu.prewarm(SimTime::ZERO);
+    let sched = ElasticScheduler::new(SchedulerConfig::default());
+
+    let mut rng = Rng::new(args.u64("seed"));
+    let steps = args.u64("steps") as u32;
+    let lr = args.f64("lr") as f32;
+    let temp = args.f64("temp") as f32;
+    let mut csv = std::fs::File::create(args.str("csv"))?;
+    writeln!(csv, "step,loss,mean_reward,act_ms,warm_ratio,step_secs")?;
+
+    let mut next_action = 0u64;
+    let run_start = Instant::now();
+    println!("training {steps} steps: batch={b} seq={s} prompt={prompt_len} gen={gen_tokens}");
+
+    for step in 0..steps {
+        let t_step = Instant::now();
+
+        // ---- rollout: autoregressive sampling on-device -----------------
+        let mut tokens = vec![0i32; b * s];
+        for (row, chunk) in tokens.chunks_mut(s).enumerate() {
+            let _ = row;
+            for (p, t) in chunk.iter_mut().take(prompt_len).enumerate() {
+                *t = (p % 17) as i32 + 1; // shared prompt → one GRPO group
+            }
+        }
+        for t in prompt_len..s {
+            let logits = trainer.logits(&tokens)?;
+            let vocab = trainer.vocab;
+            for row in 0..b {
+                let off = (row * s + (t - 1)) * vocab;
+                let tok = softmax_sample(&logits[off..off + vocab], temp, &mut rng);
+                tokens[row * s + t] = tok as i32;
+            }
+        }
+
+        // ---- reward scoring as scheduled actions -------------------------
+        // one action per judge micro-batch, flowing through the elastic
+        // scheduler + EOE GPU manager with real compute as the payload
+        let rb = judge.batch;
+        let n_chunks = b.div_ceil(rb);
+        let mut rewards = vec![0f32; b];
+        let mut acts_ms: Vec<f64> = Vec::new();
+        let virt_now = SimTime(step as u64 * 1_000_000_000);
+        for chunk in 0..n_chunks {
+            let id = ActionId(next_action);
+            next_action += 1;
+            let spec = ActionSpec {
+                task: TaskId(0),
+                trajectory: TrajId(chunk as u64),
+                kind: ActionKind::RewardModel,
+                cost: CostSpec::single(&registry, gpu_kind, DimCost::Discrete(vec![1, 2, 4, 8])),
+                key_resource: Some(gpu_kind),
+                elasticity: ElasticityModel::Table(vec![1.0, 0.92, 0.85, 0.82]),
+                profiled_dur: Some(SimDur::from_millis(50)),
+                service: Some(ServiceId(0)),
+                true_dur: SimDur::from_millis(50),
+            };
+            let action = Action::new(id, spec, virt_now);
+            let queue = [&action];
+            let mut pools: HashMap<ResourceKindId, &dyn ResourceState> = HashMap::new();
+            pools.insert(gpu_kind, &gpu);
+            let decisions = sched.schedule(virt_now, &queue, &pools);
+            let units = decisions.first().map(|d| d.units).unwrap_or(1);
+            let t_act = Instant::now();
+            let _lease = gpu
+                .allocate(id, ServiceId(0), units as u8, virt_now)
+                .map_err(|e| anyhow::anyhow!(e))?;
+            // real compute: build the judge micro-batch and score it.
+            // The judge window is the *tail* of each sequence so the
+            // generated region is always visible to the reward model.
+            let rs = judge.seq.min(s);
+            let tail = s - rs;
+            let mut jt = vec![0i32; rb * judge.seq];
+            let mut jm = vec![0f32; rb * judge.seq];
+            for r in 0..rb {
+                let src = (chunk * rb + r).min(b - 1);
+                for p in 0..rs {
+                    jt[r * judge.seq + p] = tokens[src * s + tail + p];
+                    jm[r * judge.seq + p] = 1.0;
+                }
+            }
+            let scores = judge.score(&jt, &jm)?;
+            for r in 0..rb {
+                let dst = chunk * rb + r;
+                if dst < b {
+                    rewards[dst] = scores[r];
+                }
+            }
+            gpu.complete(id, virt_now).map_err(|e| anyhow::anyhow!(e))?;
+            acts_ms.push(t_act.elapsed().as_secs_f64() * 1e3);
+        }
+
+        // ---- GRPO: group-relative advantages -----------------------------
+        let mean_r: f32 = rewards.iter().sum::<f32>() / b as f32;
+        let var: f32 =
+            rewards.iter().map(|r| (r - mean_r) * (r - mean_r)).sum::<f32>() / b as f32;
+        let std = var.sqrt().max(1e-4);
+        let adv: Vec<f32> = rewards.iter().map(|r| (r - mean_r) / std).collect();
+
+        // mask: train only on the generated region
+        let mut mask = vec![0f32; b * (s - 1)];
+        for row in 0..b {
+            for t in (prompt_len - 1)..(s - 1) {
+                mask[row * (s - 1) + t] = 1.0;
+            }
+        }
+        let old_logp = trainer.logprobs(&tokens)?;
+        let loss = trainer.train_step(&tokens, &mask, &adv, &old_logp, lr)?;
+
+        let act_ms = acts_ms.iter().sum::<f64>() / acts_ms.len() as f64;
+        let step_secs = t_step.elapsed().as_secs_f64();
+        writeln!(
+            csv,
+            "{step},{loss},{mean_r},{act_ms:.2},{:.3},{step_secs:.2}",
+            gpu.warm_ratio()
+        )?;
+        if step % 10 == 0 || step + 1 == steps {
+            println!(
+                "step {step:4}  loss {loss:+.4}  mean_reward {mean_r:+.4}  \
+                 act {act_ms:6.1}ms  warm {:.0}%  ({step_secs:.1}s)",
+                gpu.warm_ratio() * 100.0
+            );
+        }
+    }
+    println!(
+        "done in {:.1}s — loss curve in {}; trainer at step {}",
+        run_start.elapsed().as_secs_f64(),
+        args.str("csv"),
+        trainer.step_count()?
+    );
+    Ok(())
+}

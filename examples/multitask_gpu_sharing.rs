@@ -1,0 +1,80 @@
+//! MOPD + DeepSearch sharing one GPU pool ("MOPD+Search", paper §6.2):
+//! ten reward services multiplexed by the EOE GPU manager vs a static
+//! per-service deployment. Demonstrates task-level pooling — the paper's
+//! second over-provisioning category.
+//!
+//! Run: `cargo run --release --example multitask_gpu_sharing -- --batch 128`
+
+use arl_tangram::action::{ActionKind, TaskId};
+use arl_tangram::baselines::BaselineBackend;
+use arl_tangram::coordinator::{run, RunCfg, TangramBackend, TangramCfg};
+use arl_tangram::metrics::Metrics;
+use arl_tangram::rollout::workloads::{Catalog, CatalogCfg, Workload, WorkloadKind};
+use arl_tangram::util::cli::Args;
+
+fn rm_act(m: &Metrics) -> f64 {
+    m.mean_act_of(ActionKind::RewardModel)
+}
+
+fn main() {
+    let args = Args::new("MOPD+DeepSearch GPU sharing: Tangram vs static services")
+        .opt("batch", "128", "trajectories per step per task")
+        .opt("gpu-nodes", "5", "8-GPU nodes")
+        .opt("seed", "3", "rng seed")
+        .parse()
+        .unwrap_or_else(|u| {
+            eprintln!("{u}");
+            std::process::exit(2)
+        });
+
+    let cat = Catalog::build(&CatalogCfg {
+        gpu_nodes: args.u64("gpu-nodes") as u32,
+        ..CatalogCfg::default()
+    });
+    let wls = [
+        Workload::new(TaskId(1), WorkloadKind::DeepSearch),
+        Workload::new(TaskId(2), WorkloadKind::Mopd),
+    ];
+    let cfg = RunCfg {
+        batch: args.u64("batch") as usize,
+        steps: 1,
+        seed: args.u64("seed"),
+        ..RunCfg::default()
+    };
+
+    let mut tangram = TangramBackend::new(
+        &cat,
+        TangramCfg { gpu_nodes: args.u64("gpu-nodes") as u32, ..TangramCfg::default() },
+    );
+    let m_t = run(&mut tangram, &cat, &wls, &cfg);
+
+    let mut stat = BaselineBackend::mopd_search(&cat);
+    let m_s = run(&mut stat, &cat, &wls, &cfg);
+
+    println!("MOPD+Search, batch={} per task, {} GPUs\n", cfg.batch, args.u64("gpu-nodes") * 8);
+    println!("                        tangram      static");
+    println!("reward-model ACT   : {:8.2}s  {:10.2}s", rm_act(&m_t), rm_act(&m_s));
+    println!("overall mean ACT   : {:8.2}s  {:10.2}s", m_t.mean_act(), m_s.mean_act());
+    println!(
+        "mean step duration : {:8.2}s  {:10.2}s",
+        m_t.mean_step_dur(),
+        m_s.mean_step_dur()
+    );
+    println!(
+        "gpu utilization    : {:8.3}   {:9.3}",
+        m_t.mean_util("gpu"),
+        m_s.mean_util("gpu")
+    );
+    println!(
+        "\nEOE cache: {} warm / {} cold ({:.0}% warm), restore total {:?}",
+        tangram.gpu.n_warm,
+        tangram.gpu.n_cold,
+        tangram.gpu.warm_ratio() * 100.0,
+        tangram.gpu.restore_time_total,
+    );
+    println!(
+        "speedup: reward ACT {:.2}x, step {:.2}x",
+        rm_act(&m_s) / rm_act(&m_t).max(1e-9),
+        m_s.mean_step_dur() / m_t.mean_step_dur().max(1e-9)
+    );
+}

@@ -1,0 +1,189 @@
+"""AOT pipeline: lower the Layer-2 JAX graphs to HLO-text artifacts.
+
+Interchange format is HLO *text*, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the runtime's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (written to ``artifacts/``):
+
+  policy_init.hlo.txt      (seed:u32) -> params…
+  policy_fwd.hlo.txt       (params…, tokens:i32[B,S]) -> logits
+  policy_logprobs.hlo.txt  (params…, tokens) -> logp[B,S-1]
+  train_step.hlo.txt       (params…, m…, v…, step, tokens, mask, adv,
+                            old_logp, lr) -> (params'…, m'…, v'…, step', loss)
+  reward_init.hlo.txt      (seed:u32) -> rparams…
+  reward_fwd.hlo.txt       (rparams…, tokens:i32[RB,S], mask:f32[RB,S]) -> scores
+  meta.json                calling convention: flattening order, shapes,
+                           dtypes, model configs, batch sizes.
+
+"params…" means the pytree flattened in ``jax.tree_util`` order; the order is
+recorded in meta.json and is the contract with ``rust/src/runtime``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-compatible path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _params_spec(cfg: M.ModelConfig, reward: bool):
+    """ShapeDtypeStruct pytree matching init_params/init_reward_params."""
+    init = M.init_reward_params if reward else M.init_params
+    return jax.eval_shape(lambda k: init(k, cfg), _spec((2,), jnp.uint32))
+
+
+def lower_all(
+    policy_cfg: M.ModelConfig,
+    reward_cfg: M.ModelConfig,
+    batch: int,
+    reward_batch: int,
+    out_dir: str,
+) -> dict:
+    """Lower every artifact; returns the meta dict (also written to disk)."""
+    os.makedirs(out_dir, exist_ok=True)
+    seq = policy_cfg.max_seq
+    rseq = reward_cfg.max_seq
+
+    p_spec = _params_spec(policy_cfg, reward=False)
+    r_spec = _params_spec(reward_cfg, reward=True)
+    tokens = _spec((batch, seq), jnp.int32)
+    mask = _spec((batch, seq - 1), jnp.float32)
+    adv = _spec((batch,), jnp.float32)
+    old_logp = _spec((batch, seq - 1), jnp.float32)
+    scalar_f = _spec((), jnp.float32)
+    scalar_i = _spec((), jnp.int32)
+    seed = _spec((), jnp.uint32)
+    r_tokens = _spec((reward_batch, rseq), jnp.int32)
+    r_mask = _spec((reward_batch, rseq), jnp.float32)
+
+    def policy_init(s):
+        return M.init_params(jax.random.PRNGKey(s), policy_cfg)
+
+    def reward_init(s):
+        return M.init_reward_params(jax.random.PRNGKey(s), reward_cfg)
+
+    def policy_fwd(params, toks):
+        return M.forward(params, toks, policy_cfg)
+
+    def policy_logprobs(params, toks):
+        return M.token_logprobs(params, toks, policy_cfg)
+
+    def train_step(params, m, v, step, toks, msk, a, olp, lr):
+        return M.train_step(
+            params, m, v, step, toks, msk, a, olp, lr, policy_cfg
+        )
+
+    def reward_fwd(rparams, toks, msk):
+        return M.reward_forward(rparams, toks, msk, reward_cfg)
+
+    jobs = {
+        "policy_init": (policy_init, (seed,), {}),
+        "policy_fwd": (policy_fwd, (p_spec, tokens), {}),
+        "policy_logprobs": (policy_logprobs, (p_spec, tokens), {}),
+        "train_step": (
+            train_step,
+            (p_spec, p_spec, p_spec, scalar_i, tokens, mask, adv, old_logp, scalar_f),
+            # Donate params + optimizer state: 1:1 input→output aliasing keeps
+            # the training loop allocation-free on the PJRT side.
+            {"donate_argnums": (0, 1, 2, 3)},
+        ),
+        "reward_init": (reward_init, (seed,), {}),
+        "reward_fwd": (reward_fwd, (r_spec, r_tokens, r_mask), {}),
+    }
+
+    files = {}
+    for name, (fn, args, jit_kw) in jobs.items():
+        lowered = jax.jit(fn, **jit_kw).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        files[name] = os.path.basename(path)
+        print(f"  lowered {name:16s} -> {path} ({len(text)} chars)")
+
+    # Calling convention: concrete leaf specs (from eval_shape) in
+    # tree_flatten order.
+    p_leaves = [
+        {"name": jax.tree_util.keystr(kp), "shape": list(l.shape), "dtype": str(l.dtype)}
+        for kp, l in jax.tree_util.tree_flatten_with_path(p_spec)[0]
+    ]
+    r_leaves = [
+        {"name": jax.tree_util.keystr(kp), "shape": list(l.shape), "dtype": str(l.dtype)}
+        for kp, l in jax.tree_util.tree_flatten_with_path(r_spec)[0]
+    ]
+
+    meta = {
+        "format": 1,
+        "policy": {
+            "config": dataclasses.asdict(policy_cfg),
+            "param_count": policy_cfg.param_count(),
+            "params": p_leaves,
+            "batch": batch,
+            "seq": seq,
+        },
+        "reward": {
+            "config": dataclasses.asdict(reward_cfg),
+            "param_count": reward_cfg.param_count(),
+            "params": r_leaves,
+            "batch": reward_batch,
+            "seq": rseq,
+        },
+        "train": {
+            "adam": {"b1": M.ADAM_B1, "b2": M.ADAM_B2, "eps": M.ADAM_EPS},
+            "clip_eps": M.CLIP_EPS,
+            "entropy_coef": M.ENTROPY_COEF,
+            # input order: params…, m…, v…, step, tokens, mask, adv, old_logp, lr
+            # output order: params'…, m'…, v'…, step', loss
+            "n_param_arrays": len(p_leaves),
+        },
+        "artifacts": files,
+    }
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"  wrote {out_dir}/meta.json")
+    return meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--policy", default="small", choices=sorted(M.PRESETS))
+    ap.add_argument("--reward", default="tiny", choices=sorted(M.PRESETS))
+    ap.add_argument("--batch", type=int, default=8, help="train/rollout batch")
+    ap.add_argument("--reward-batch", type=int, default=8)
+    args = ap.parse_args()
+
+    policy_cfg = M.PRESETS[args.policy]
+    reward_cfg = M.PRESETS[args.reward]
+    print(
+        f"AOT: policy={args.policy} ({policy_cfg.param_count()/1e6:.1f}M params) "
+        f"reward={args.reward} ({reward_cfg.param_count()/1e6:.1f}M params)"
+    )
+    lower_all(policy_cfg, reward_cfg, args.batch, args.reward_batch, args.out)
+
+
+if __name__ == "__main__":
+    main()

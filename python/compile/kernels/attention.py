@@ -1,0 +1,205 @@
+"""Layer-1 Pallas flash-attention kernel.
+
+This is the compute hot-spot of the reward-model / policy services that the
+Rust coordinator multiplexes (paper §5.3: "reward model service must compile
+kernels ... load model parameters"). The paper's services run on H-series
+GPUs; per the hardware-adaptation rule we re-express the same insight —
+bounded fast-memory footprint independent of sequence length — TPU-style:
+
+* the HBM↔VMEM schedule is carried by ``BlockSpec``: each grid program sees
+  one ``(block_q, head_dim)`` query tile and streams K/V tiles through an
+  online-softmax accumulator, so the S×S score matrix never materializes;
+* matmul tiles are MXU-shaped (multiples of the 128-lane systolic array for
+  production configs; tests exercise smaller tiles as well);
+* no warp/WMMA decomposition: parallelism is expressed through the grid and
+  the MXU, not threadblocks.
+
+Kernels are lowered with ``interpret=True`` — the CPU PJRT plugin cannot run
+Mosaic custom-calls; real-TPU efficiency is estimated analytically (see
+DESIGN.md §Hardware-Adaptation and EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. 128 matches the MXU systolic array on real TPUs; the
+# kernel accepts any divisor of the sequence length so tiny test shapes work.
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+# Large-negative used for masked logits. Not -inf: -inf - -inf = nan in the
+# running-max rescale.
+_MASK_VALUE = -1e30
+
+
+def _mha_kernel(q_ref, k_ref, v_ref, o_ref, *, sm_scale, causal, block_k):
+    """One (batch·head, q-tile) grid program of online-softmax attention.
+
+    ``q_ref``: (block_q, d) query tile in VMEM.
+    ``k_ref``/``v_ref``: (seq_k, d) — the full K/V for this batch·head; the
+    kernel streams ``block_k``-row tiles out of them, which is the VMEM
+    working set on real hardware (the BlockSpec keeps HBM→VMEM transfers
+    tile-granular under Mosaic).
+    """
+    q = q_ref[...].astype(jnp.float32) * sm_scale
+    block_q, _ = q.shape
+    seq_k = k_ref.shape[0]
+    head_dim_v = v_ref.shape[1]
+    q_tile = pl.program_id(1)
+
+    m0 = jnp.full((block_q,), _MASK_VALUE, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, head_dim_v), jnp.float32)
+
+    def body(kt, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (pl.dslice(kt * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (pl.dslice(kt * block_k, block_k), slice(None)))
+        s = q @ k.astype(jnp.float32).T  # (block_q, block_k) on the MXU
+        if causal:
+            q_pos = q_tile * block_q + jax.lax.iota(jnp.int32, block_q)
+            k_pos = kt * block_k + jax.lax.iota(jnp.int32, block_k)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            s = jnp.where(mask, s, _MASK_VALUE)
+        m_new = jnp.maximum(m, s.max(axis=1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + p.sum(axis=1)
+        acc_new = acc * alpha[:, None] + p @ v.astype(jnp.float32)
+        return m_new, l_new, acc_new
+
+    num_k_tiles = seq_k // block_k
+    if causal:
+        # Tiles strictly above the diagonal contribute nothing; skip them.
+        # (q_tile+1)*block_q is the first masked row bound; ceil-divide.
+        hi = jax.lax.div((q_tile + 1) * block_q + block_k - 1, block_k)
+        hi = jnp.minimum(hi, num_k_tiles)
+    else:
+        hi = num_k_tiles
+    m, l, acc = jax.lax.fori_loop(0, hi, body, (m0, l0, acc0))
+    # Rows with no unmasked key keep l == 0 only if the mask killed the whole
+    # row; causal attention always sees the diagonal, so l > 0 here.
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def _flash_impl(q, k, v, causal, bq, bk, interpret):
+    """The raw pallas_call (no autodiff rule of its own)."""
+    batch, heads, seq_q, head_dim = q.shape
+    seq_k = k.shape[2]
+    sm_scale = 1.0 / (head_dim**0.5)
+    bh = batch * heads
+    head_dim_v = v.shape[3]
+    qr = q.reshape(bh, seq_q, head_dim)
+    kr = k.reshape(bh, seq_k, head_dim)
+    vr = v.reshape(bh, seq_k, head_dim_v)
+
+    grid = (bh, seq_q // bq)
+    out = pl.pallas_call(
+        functools.partial(
+            _mha_kernel, sm_scale=sm_scale, causal=causal, block_k=bk
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, bq, head_dim), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, seq_k, head_dim), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((None, seq_k, head_dim_v), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, head_dim_v), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, seq_q, head_dim_v), q.dtype),
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(batch, heads, seq_q, head_dim_v)
+
+
+# ``pallas_call`` carries no autodiff rule, and the GRPO train step needs
+# gradients through attention. Forward runs the Pallas kernel; backward is
+# the VJP of the jnp reference (mathematically identical attention). A
+# dedicated Pallas backward kernel is the listed future extension.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, causal, bq, bk, interpret):
+    return _flash_impl(q, k, v, causal, bq, bk, interpret)
+
+
+def _flash_fwd(q, k, v, causal, bq, bk, interpret):
+    return _flash_impl(q, k, v, causal, bq, bk, interpret), (q, k, v)
+
+
+def _flash_bwd(causal, bq, bk, interpret, res, g):
+    from .ref import mha_ref  # local import to avoid a cycle at module load
+
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: mha_ref(q_, k_, v_, causal=causal), q, k, v)
+    return vjp(g)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int | None = None,
+    block_k: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Blocked online-softmax attention.
+
+    Args:
+      q, k, v: ``(batch, heads, seq, head_dim)`` arrays (f32 or bf16).
+      causal: apply a causal mask.
+      block_q/block_k: tile sizes; must divide the sequence lengths. Default
+        clamps ``DEFAULT_BLOCK_*`` to the sequence length.
+      interpret: must stay True on CPU PJRT (see module docstring).
+
+    Returns:
+      ``(batch, heads, seq, head_dim)`` attention output, same dtype as q.
+    """
+    batch, heads, seq_q, head_dim = q.shape
+    seq_k = k.shape[2]
+    if k.shape != (batch, heads, seq_k, head_dim):
+        raise ValueError(f"bad k shape {k.shape}")
+    if v.shape[:3] != (batch, heads, seq_k):
+        raise ValueError(f"bad v shape {v.shape}")
+    if causal and seq_q != seq_k:
+        raise ValueError("causal attention requires seq_q == seq_k")
+    bq = min(block_q or DEFAULT_BLOCK_Q, seq_q)
+    bk = min(block_k or DEFAULT_BLOCK_K, seq_k)
+    if seq_q % bq or seq_k % bk:
+        raise ValueError(f"block sizes ({bq},{bk}) must divide ({seq_q},{seq_k})")
+    if causal and bq % bk:
+        raise ValueError("causal tiling requires block_q % block_k == 0")
+    return _flash(q, k, v, causal, bq, bk, interpret)
+
+
+def vmem_bytes(block_q: int, block_k: int, head_dim: int, seq_k: int) -> int:
+    """Analytic VMEM working set of one grid program, in bytes (f32 accum).
+
+    Used by the §Perf analysis: q tile + one K/V tile + accumulator + softmax
+    state. The full-K/V in_spec above is an interpret-mode convenience; on
+    Mosaic the pl.load tiling keeps residency at one (block_k, d) tile per
+    operand, which is what we account here.
+    """
+    f32 = 4
+    q_tile = block_q * head_dim * f32
+    kv_tiles = 2 * block_k * head_dim * f32
+    acc = block_q * head_dim * f32
+    softmax_state = 2 * block_q * f32
+    scores = block_q * block_k * f32
+    return q_tile + kv_tiles + acc + softmax_state + scores
+
+
+def mxu_flops(batch, heads, seq_q, seq_k, head_dim, causal=True) -> int:
+    """Matmul FLOPs of one attention forward (for MXU-utilization estimates)."""
+    full = 2 * batch * heads * seq_q * seq_k * head_dim * 2  # QK^T and PV
+    return full // 2 if causal else full

@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every kernel must match its ref
+within tolerance across the pytest shape/dtype sweeps. Written with the
+most literal formulation possible (materialized score matrix, plain
+softmax) — clarity over speed.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_MASK_VALUE = -1e30
+
+
+def mha_ref(q, k, v, *, causal: bool = True):
+    """Reference multi-head attention. q,k,v: (batch, heads, seq, head_dim)."""
+    head_dim = q.shape[-1]
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) / (head_dim**0.5)
+    if causal:
+        seq_q, seq_k = s.shape[-2], s.shape[-1]
+        mask = jnp.tril(jnp.ones((seq_q, seq_k), bool), k=seq_k - seq_q)
+        s = jnp.where(mask, s, _MASK_VALUE)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rmsnorm_ref(x, w, *, eps: float = 1e-6):
+    """Reference RMSNorm over the last dim."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf / jnp.sqrt(ms + eps) * w.astype(jnp.float32)).astype(x.dtype)

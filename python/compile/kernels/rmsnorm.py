@@ -1,0 +1,91 @@
+"""Layer-1 Pallas RMSNorm kernel.
+
+Row-blocked RMS normalization with learned gain. Small relative to the
+attention kernel, but it is the second-most frequent op in the reward-model
+forward and demonstrates the row-tile BlockSpec pattern (grid over row
+tiles, full feature dim resident in VMEM).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 128
+EPS = 1e-6
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(ms + EPS) * w[None, :]).astype(o_ref.dtype)
+
+
+def _rmsnorm_impl(x, w, block_rows, interpret):
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    rows = 1
+    for s in lead:
+        rows *= s
+    xr = x.reshape(rows, d)
+    br = min(block_rows, rows)
+    padded = (rows + br - 1) // br * br
+    if padded != rows:
+        xr = jnp.concatenate([xr, jnp.zeros((padded - rows, d), x.dtype)], axis=0)
+    out = pl.pallas_call(
+        _rmsnorm_kernel,
+        grid=(padded // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded, d), x.dtype),
+        interpret=interpret,
+    )(xr, w)
+    return out[:rows].reshape(*lead, d)
+
+
+# Forward = Pallas kernel, backward = VJP of the jnp reference (see
+# attention.py for rationale — pallas_call has no autodiff rule).
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _rmsnorm(x, w, block_rows, interpret):
+    return _rmsnorm_impl(x, w, block_rows, interpret)
+
+
+def _rmsnorm_fwd(x, w, block_rows, interpret):
+    return _rmsnorm_impl(x, w, block_rows, interpret), (x, w)
+
+
+def _rmsnorm_bwd(block_rows, interpret, res, g):
+    from .ref import rmsnorm_ref
+
+    x, w = res
+    _, vjp = jax.vjp(rmsnorm_ref, x, w)
+    return vjp(g)
+
+
+_rmsnorm.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def rmsnorm(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block_rows: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """RMS-normalize the last dim of ``x`` (any leading shape) scaled by ``w``.
+
+    ``x``: (..., d); ``w``: (d,). Rows are processed in ``block_rows`` tiles.
+    """
+    if x.shape[-1] != w.shape[0]:
+        raise ValueError(f"feature dims differ: {x.shape[-1]} vs {w.shape[0]}")
+    # Rows are padded up to a tile multiple inside _rmsnorm_impl; padding rows
+    # normalize to 0 (finite thanks to EPS) and get sliced away.
+    return _rmsnorm(x, w, block_rows or DEFAULT_BLOCK_ROWS, interpret)

@@ -1,0 +1,314 @@
+"""Layer-2 JAX model: transformer policy + reward model + GRPO train step.
+
+These are the compute graphs behind the two kinds of model services the
+Rust coordinator manages:
+
+* the **policy** being RL-trained (forward for rollout logits, per-token
+  log-probs for GRPO, and a full Adam train step), and
+* the **reward model / LLM-judge** service multiplexed by the GPU manager
+  (paper §5.3), a smaller transformer with a pooled scalar head.
+
+Everything routes its attention through the Layer-1 Pallas flash-attention
+kernel and its norms through the Pallas RMSNorm kernel, so the AOT-lowered
+HLO artifacts contain the kernels' computation. ``aot.py`` lowers the public
+functions here to HLO text for the Rust runtime; nothing in this file runs
+at serving/training time.
+
+Parameter pytrees are plain nested dicts. Flattening order (which defines
+the artifact calling convention for Rust) is recorded by
+``param_specs`` and serialized to ``artifacts/meta.json``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import flash_attention
+from .kernels.rmsnorm import rmsnorm
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Decoder-only transformer configuration."""
+
+    vocab: int = 512
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    d_ff: int = 512
+    max_seq: int = 64
+    # pallas tile sizes (clamped to seq inside the kernel)
+    block_q: int = 64
+    block_k: int = 64
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        """Total learnable parameters (for reporting/model sizing)."""
+        per_layer = (
+            4 * self.d_model * self.d_model  # wq wk wv wo
+            + 2 * self.d_model * self.d_ff  # mlp in/out
+            + 2 * self.d_model  # two norms
+        )
+        return (
+            self.vocab * self.d_model  # tied embedding/unembedding
+            + self.max_seq * self.d_model  # positional
+            + self.n_layers * per_layer
+            + self.d_model  # final norm
+        )
+
+
+# Preset model sizes. `small` is the e2e-training default (fast enough for a
+# few hundred CPU-PJRT steps); `base` approximates the ~100M-param scale of
+# the system-prompt target and is used for compile-only checks + perf math.
+PRESETS: dict[str, ModelConfig] = {
+    "tiny": ModelConfig(),
+    "small": ModelConfig(
+        vocab=1024, d_model=256, n_layers=4, n_heads=8, d_ff=1024, max_seq=128
+    ),
+    "base": ModelConfig(
+        vocab=32768,
+        d_model=768,
+        n_layers=12,
+        n_heads=12,
+        d_ff=3072,
+        max_seq=256,
+        block_q=128,
+        block_k=128,
+    ),
+}
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> Params:
+    """Initialize a parameter pytree (scaled-normal init, tied unembedding)."""
+    n = cfg.n_layers
+    keys = jax.random.split(key, 2 + 6 * n)
+    d, f = cfg.d_model, cfg.d_ff
+
+    def dense(k, fan_in, shape):
+        return (jax.random.normal(k, shape, jnp.float32) / jnp.sqrt(fan_in)).astype(
+            jnp.float32
+        )
+
+    params: Params = {
+        "embed": dense(keys[0], 1.0, (cfg.vocab, d)) * 0.02 * jnp.sqrt(1.0),
+        "pos": dense(keys[1], 1.0, (cfg.max_seq, d)) * 0.02,
+        "layers": [],
+        "ln_f": jnp.ones((d,), jnp.float32),
+    }
+    for i in range(n):
+        k = keys[2 + 6 * i : 8 + 6 * i]
+        params["layers"].append(
+            {
+                "wq": dense(k[0], d, (d, d)),
+                "wk": dense(k[1], d, (d, d)),
+                "wv": dense(k[2], d, (d, d)),
+                "wo": dense(k[3], d, (d, d)) / jnp.sqrt(2.0 * n),
+                "w1": dense(k[4], d, (d, f)),
+                "w2": dense(k[5], f, (f, d)) / jnp.sqrt(2.0 * n),
+                "ln1": jnp.ones((d,), jnp.float32),
+                "ln2": jnp.ones((d,), jnp.float32),
+            }
+        )
+    return params
+
+
+def _block(x: jax.Array, lp: Params, cfg: ModelConfig) -> jax.Array:
+    """One pre-norm transformer block. x: (batch, seq, d_model)."""
+    b, s, d = x.shape
+    h = rmsnorm(x, lp["ln1"])
+    q = (h @ lp["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+    k = (h @ lp["wk"]).reshape(b, s, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+    v = (h @ lp["wv"]).reshape(b, s, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+    attn = flash_attention(
+        q, k, v, causal=True, block_q=cfg.block_q, block_k=cfg.block_k
+    )
+    attn = attn.transpose(0, 2, 1, 3).reshape(b, s, d)
+    x = x + attn @ lp["wo"]
+    h = rmsnorm(x, lp["ln2"])
+    h = jax.nn.gelu(h @ lp["w1"]) @ lp["w2"]
+    return x + h
+
+
+def forward(params: Params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Policy forward. tokens: (batch, seq) int32 → logits (batch, seq, vocab)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens] + params["pos"][:s][None, :, :]
+    for lp in params["layers"]:
+        x = _block(x, lp, cfg)
+    x = rmsnorm(x, params["ln_f"])
+    return x @ params["embed"].T  # tied unembedding
+
+
+def token_logprobs(
+    params: Params, tokens: jax.Array, cfg: ModelConfig
+) -> jax.Array:
+    """Log p(tokens[t] | tokens[<t]) for t ≥ 1; shape (batch, seq-1)."""
+    logits = forward(params, tokens, cfg)[:, :-1, :]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tgt = tokens[:, 1:]
+    return jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+
+
+# ---------------------------------------------------------------------------
+# Reward model (LLM-as-a-judge service)
+# ---------------------------------------------------------------------------
+
+
+def init_reward_params(key: jax.Array, cfg: ModelConfig) -> Params:
+    """Reward model = transformer trunk + scalar head."""
+    k1, k2 = jax.random.split(key)
+    params = init_params(k1, cfg)
+    params["head"] = (
+        jax.random.normal(k2, (cfg.d_model, 1), jnp.float32)
+        / jnp.sqrt(cfg.d_model)
+    )
+    return params
+
+
+def reward_forward(
+    params: Params, tokens: jax.Array, mask: jax.Array, cfg: ModelConfig
+) -> jax.Array:
+    """Score trajectories. tokens: (batch, seq) int32, mask: (batch, seq) f32.
+
+    Returns (batch,) scores in (-1, 1): masked mean-pool of the final hidden
+    states through a linear head and tanh — the standard RM head shape.
+    """
+    b, s = tokens.shape
+    x = params["embed"][tokens] + params["pos"][:s][None, :, :]
+    for lp in params["layers"]:
+        x = _block(x, lp, cfg)
+    x = rmsnorm(x, params["ln_f"])
+    denom = jnp.maximum(mask.sum(axis=1, keepdims=True), 1.0)
+    pooled = (x * mask[..., None]).sum(axis=1) / denom
+    return jnp.tanh(pooled @ params["head"])[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# GRPO loss + Adam train step
+# ---------------------------------------------------------------------------
+
+CLIP_EPS = 0.2
+ENTROPY_COEF = 0.002
+
+
+def grpo_loss(
+    params: Params,
+    tokens: jax.Array,
+    mask: jax.Array,
+    advantages: jax.Array,
+    old_logp: jax.Array,
+    cfg: ModelConfig,
+) -> jax.Array:
+    """Clipped-ratio policy-gradient loss with group-relative advantages.
+
+    GRPO (Shao et al., 2024) computes advantages per *group* of rollouts for
+    the same prompt: A_i = (r_i - mean_g) / std_g. That normalization happens
+    in the Rust trainer (it owns the groups); here we consume per-sequence
+    ``advantages`` broadcast over tokens, exactly like the paper's VeRL setup.
+
+    tokens: (B, S) int32; mask: (B, S-1) f32 over *target* positions;
+    advantages: (B,) f32; old_logp: (B, S-1) f32 behaviour log-probs.
+    """
+    logits = forward(params, tokens, cfg)[:, :-1, :]
+    logp_all = jax.nn.log_softmax(logits, axis=-1)
+    tgt = tokens[:, 1:]
+    logp = jnp.take_along_axis(logp_all, tgt[..., None], axis=-1)[..., 0]
+
+    ratio = jnp.exp(logp - old_logp)
+    adv = advantages[:, None]
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1.0 - CLIP_EPS, 1.0 + CLIP_EPS) * adv
+    pg = -jnp.minimum(unclipped, clipped)
+
+    entropy = -(jnp.exp(logp_all) * logp_all).sum(axis=-1)
+
+    denom = jnp.maximum(mask.sum(), 1.0)
+    pg_loss = (pg * mask).sum() / denom
+    ent_bonus = (entropy * mask).sum() / denom
+    return pg_loss - ENTROPY_COEF * ent_bonus
+
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.95
+ADAM_EPS = 1e-8
+
+
+def train_step(
+    params: Params,
+    m: Params,
+    v: Params,
+    step: jax.Array,
+    tokens: jax.Array,
+    mask: jax.Array,
+    advantages: jax.Array,
+    old_logp: jax.Array,
+    lr: jax.Array,
+    cfg: ModelConfig,
+):
+    """One GRPO Adam step. Returns (params', m', v', step+1, loss).
+
+    The whole update is a single HLO module so the Rust trainer keeps
+    parameters and optimizer state resident as PJRT buffers between steps
+    (donation-friendly: each input param/opt tensor maps 1:1 to an output).
+    """
+    loss, grads = jax.value_and_grad(grpo_loss)(
+        params, tokens, mask, advantages, old_logp, cfg
+    )
+    step = step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - ADAM_B1**t
+    bc2 = 1.0 - ADAM_B2**t
+
+    def upd(p, g, m_, v_):
+        m_n = ADAM_B1 * m_ + (1.0 - ADAM_B1) * g
+        v_n = ADAM_B2 * v_ + (1.0 - ADAM_B2) * g * g
+        p_n = p - lr * (m_n / bc1) / (jnp.sqrt(v_n / bc2) + ADAM_EPS)
+        return p_n, m_n, v_n
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(m)
+    flat_v = treedef.flatten_up_to(v)
+    new_p, new_m, new_v = [], [], []
+    for p, g, m_, v_ in zip(flat_p, flat_g, flat_m, flat_v):
+        a, b, c = upd(p, g, m_, v_)
+        new_p.append(a)
+        new_m.append(b)
+        new_v.append(c)
+    return (
+        jax.tree_util.tree_unflatten(treedef, new_p),
+        jax.tree_util.tree_unflatten(treedef, new_m),
+        jax.tree_util.tree_unflatten(treedef, new_v),
+        step,
+        loss,
+    )
+
+
+def zeros_like_params(params: Params) -> Params:
+    return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def param_specs(params: Params) -> list[dict[str, Any]]:
+    """Flattening-order spec of a param pytree (the Rust calling convention)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        specs.append(
+            {
+                "name": jax.tree_util.keystr(path),
+                "shape": list(leaf.shape),
+                "dtype": str(leaf.dtype),
+                "elems": int(leaf.size),
+            }
+        )
+    return specs

@@ -1,0 +1,122 @@
+"""Seeded randomized shape/dtype sweep helper.
+
+Offline substitute for `hypothesis` (unavailable in this build image): a
+deterministic generator enumerates randomized parameter combinations so the
+kernel tests cover a broad, reproducible slice of the input space. Failures
+print the exact case tuple for replay.
+"""
+
+from __future__ import annotations
+
+import itertools
+import random
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AttnCase:
+    batch: int
+    heads: int
+    seq: int
+    head_dim: int
+    block_q: int
+    block_k: int
+    causal: bool
+    dtype: str
+
+    def label(self) -> str:
+        return (
+            f"b{self.batch}h{self.heads}s{self.seq}d{self.head_dim}"
+            f"_q{self.block_q}k{self.block_k}_{'c' if self.causal else 'f'}_{self.dtype}"
+        )
+
+
+_DTYPES = ["float32", "bfloat16"]
+
+
+def _divisors(n: int) -> list[int]:
+    return [d for d in range(1, n + 1) if n % d == 0]
+
+
+def attention_cases(n_random: int = 24, seed: int = 20260710) -> list[AttnCase]:
+    """A fixed corner set plus ``n_random`` seeded random cases."""
+    corners = [
+        AttnCase(1, 1, 8, 4, 8, 8, True, "float32"),   # single tile
+        AttnCase(1, 1, 8, 4, 4, 2, True, "float32"),   # multi k-tile per q
+        AttnCase(2, 4, 64, 32, 32, 16, True, "float32"),
+        AttnCase(2, 2, 64, 32, 64, 64, False, "float32"),
+        AttnCase(1, 2, 128, 16, 128, 128, True, "float32"),  # MXU-shaped
+        AttnCase(1, 1, 16, 8, 16, 16, True, "bfloat16"),
+        AttnCase(3, 1, 32, 64, 8, 8, False, "bfloat16"),
+    ]
+    rng = random.Random(seed)
+    out = list(corners)
+    for _ in range(n_random):
+        seq = rng.choice([8, 16, 32, 64, 128])
+        bq = rng.choice(_divisors(seq))
+        # causal tiling requires block_q % block_k == 0
+        bk = rng.choice(_divisors(bq))
+        causal = rng.random() < 0.7
+        if not causal:
+            bk = rng.choice(_divisors(seq))
+        out.append(
+            AttnCase(
+                batch=rng.choice([1, 2, 3]),
+                heads=rng.choice([1, 2, 4]),
+                seq=seq,
+                head_dim=rng.choice([4, 8, 16, 32]),
+                block_q=bq,
+                block_k=bk,
+                causal=causal,
+                dtype=rng.choice(_DTYPES),
+            )
+        )
+    return out
+
+
+@dataclass(frozen=True)
+class NormCase:
+    rows: tuple
+    d: int
+    block_rows: int
+    dtype: str
+
+    def label(self) -> str:
+        return f"r{'x'.join(map(str, self.rows))}_d{self.d}_br{self.block_rows}_{self.dtype}"
+
+
+def rmsnorm_cases(n_random: int = 20, seed: int = 777) -> list[NormCase]:
+    corners = [
+        NormCase((1,), 1, 1, "float32"),
+        NormCase((4, 4), 8, 4, "float32"),
+        NormCase((3, 7), 48, 4, "float32"),      # rows not a tile multiple
+        NormCase((2, 5, 3), 16, 128, "float32"), # block > rows (clamped)
+        NormCase((8,), 32, 3, "bfloat16"),
+    ]
+    rng = random.Random(seed)
+    out = list(corners)
+    for _ in range(n_random):
+        ndim = rng.choice([1, 2, 3])
+        rows = tuple(rng.randint(1, 9) for _ in range(ndim))
+        out.append(
+            NormCase(
+                rows=rows,
+                d=rng.choice([1, 2, 8, 16, 33, 64, 128]),
+                block_rows=rng.choice([1, 2, 4, 8, 64]),
+                dtype=rng.choice(_DTYPES),
+            )
+        )
+    return out
+
+
+def tolerance(dtype: str) -> tuple[float, float]:
+    """(rtol, atol) per dtype: bf16 has ~3 decimal digits."""
+    if dtype == "bfloat16":
+        return 2e-2, 2e-2
+    return 2e-5, 2e-5
+
+
+def as_dtype(name: str):
+    return jnp.bfloat16 if name == "bfloat16" else jnp.float32

@@ -1,0 +1,135 @@
+"""Pallas flash-attention vs pure-jnp oracle — the core L1 correctness signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.attention import (
+    flash_attention,
+    mxu_flops,
+    vmem_bytes,
+)
+from compile.kernels.ref import mha_ref
+
+from .sweep import attention_cases, as_dtype, tolerance
+
+
+def _qkv(case, seed=0):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    shape = (case.batch, case.heads, case.seq, case.head_dim)
+    dt = as_dtype(case.dtype)
+    q = jax.random.normal(keys[0], shape, dt)
+    k = jax.random.normal(keys[1], shape, dt)
+    v = jax.random.normal(keys[2], shape, dt)
+    return q, k, v
+
+
+@pytest.mark.parametrize("case", attention_cases(), ids=lambda c: c.label())
+def test_matches_reference(case):
+    q, k, v = _qkv(case)
+    out = flash_attention(
+        q, k, v, causal=case.causal, block_q=case.block_q, block_k=case.block_k
+    )
+    ref = mha_ref(q, k, v, causal=case.causal)
+    rtol, atol = tolerance(case.dtype)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=rtol, atol=atol
+    )
+
+
+def test_block_size_invariance():
+    """Output must not depend on the tiling — only on the math."""
+    case = attention_cases()[2]
+    q, k, v = _qkv(case)
+    outs = [
+        flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk)
+        for bq, bk in [(64, 64), (32, 32), (16, 8), (64, 16)]
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, rtol=1e-5, atol=1e-5)
+
+
+def test_causal_masks_future():
+    """Perturbing future keys/values must not change earlier outputs."""
+    key = jax.random.PRNGKey(3)
+    q, k, v = _qkv(attention_cases()[2], seed=3)
+    out = flash_attention(q, k, v, causal=True, block_q=16, block_k=16)
+    k2 = k.at[:, :, -8:, :].add(100.0)
+    v2 = v.at[:, :, -8:, :].add(-50.0)
+    out2 = flash_attention(q, k2, v2, causal=True, block_q=16, block_k=16)
+    np.testing.assert_allclose(out[:, :, :-8], out2[:, :, :-8], rtol=1e-5, atol=1e-5)
+    assert not np.allclose(out[:, :, -1], out2[:, :, -1])
+
+
+def test_non_causal_attends_everywhere():
+    q, k, v = _qkv(attention_cases()[3], seed=4)
+    out = flash_attention(q, k, v, causal=False)
+    k2 = k.at[:, :, -1:, :].add(100.0)
+    out2 = flash_attention(q, k2, v, causal=False)
+    assert not np.allclose(out[:, :, 0], out2[:, :, 0])
+
+
+def test_gradients_match_reference():
+    """custom_vjp backward must equal the reference gradient."""
+    q, k, v = _qkv(attention_cases()[1], seed=5)
+
+    def loss_kernel(q, k, v):
+        return (flash_attention(q, k, v, causal=True, block_q=4, block_k=2) ** 2).sum()
+
+    def loss_ref(q, k, v):
+        return (mha_ref(q, k, v, causal=True) ** 2).sum()
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_softmax_numerics_large_logits():
+    """Online softmax must not overflow with huge score magnitudes."""
+    case = attention_cases()[2]
+    q, k, v = _qkv(case, seed=6)
+    q = q * 100.0
+    out = flash_attention(q, k, v, causal=True, block_q=32, block_k=16)
+    assert np.isfinite(np.asarray(out, np.float32)).all()
+    ref = mha_ref(q, k, v, causal=True)
+    # tolerance is looser here: with 100× logits the blocked and reference
+    # accumulation orders legitimately differ in the last ~2 bits
+    np.testing.assert_allclose(out, ref, rtol=5e-4, atol=5e-4)
+
+
+@pytest.mark.parametrize(
+    "bad",
+    [
+        dict(block_q=7),            # does not divide seq
+        dict(block_q=32, block_k=24),  # bk does not divide seq... and bq%bk
+        dict(causal=True, block_q=16, block_k=32),  # bq % bk != 0
+    ],
+)
+def test_rejects_bad_tilings(bad):
+    q, k, v = _qkv(attention_cases()[2])
+    kwargs = dict(causal=True, block_q=32, block_k=16)
+    kwargs.update(bad)
+    with pytest.raises(ValueError):
+        flash_attention(q, k, v, **kwargs)
+
+
+def test_rejects_mismatched_shapes():
+    q, k, v = _qkv(attention_cases()[2])
+    with pytest.raises(ValueError):
+        flash_attention(q, k[:, :, :32], v, causal=True)
+    with pytest.raises(ValueError):
+        flash_attention(q, k[:1], v, causal=False)
+
+
+def test_vmem_estimate_within_tpu_budget():
+    """Production BlockSpec (128×128, d=128) must fit comfortably in 16 MiB VMEM."""
+    bytes_needed = vmem_bytes(block_q=128, block_k=128, head_dim=128, seq_k=4096)
+    assert bytes_needed < 16 * 2**20 / 4, bytes_needed  # ≤ quarter of VMEM
+
+
+def test_flops_accounting():
+    full = mxu_flops(1, 1, 128, 128, 64, causal=False)
+    assert full == 2 * 128 * 128 * 64 * 2
+    assert mxu_flops(1, 1, 128, 128, 64, causal=True) == full // 2

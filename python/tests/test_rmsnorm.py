@@ -1,0 +1,64 @@
+"""Pallas RMSNorm vs pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.ref import rmsnorm_ref
+from compile.kernels.rmsnorm import rmsnorm
+
+from .sweep import as_dtype, rmsnorm_cases, tolerance
+
+
+@pytest.mark.parametrize("case", rmsnorm_cases(), ids=lambda c: c.label())
+def test_matches_reference(case):
+    kx, kw = jax.random.split(jax.random.PRNGKey(1))
+    dt = as_dtype(case.dtype)
+    x = jax.random.normal(kx, (*case.rows, case.d), dt)
+    w = jax.random.normal(kw, (case.d,), dt)
+    out = rmsnorm(x, w, block_rows=case.block_rows)
+    ref = rmsnorm_ref(x, w)
+    rtol, atol = tolerance(case.dtype)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=rtol, atol=atol
+    )
+
+
+def test_block_rows_invariance():
+    x = jax.random.normal(jax.random.PRNGKey(2), (13, 32), jnp.float32)
+    w = jnp.ones((32,))
+    outs = [rmsnorm(x, w, block_rows=br) for br in (1, 2, 5, 13, 64)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, rtol=1e-6, atol=1e-6)
+
+
+def test_zero_rows_are_finite():
+    """EPS keeps all-zero rows finite (exercises the padding path too)."""
+    x = jnp.zeros((3, 16), jnp.float32)
+    out = rmsnorm(x, jnp.ones((16,)), block_rows=2)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(out, np.zeros((3, 16)), atol=1e-6)
+
+
+def test_gradients_match_reference():
+    x = jax.random.normal(jax.random.PRNGKey(4), (5, 24), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(5), (24,), jnp.float32)
+    gk = jax.grad(lambda x, w: (rmsnorm(x, w, block_rows=2) ** 2).sum(), (0, 1))(x, w)
+    gr = jax.grad(lambda x, w: (rmsnorm_ref(x, w) ** 2).sum(), (0, 1))(x, w)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_rejects_mismatched_feature_dim():
+    with pytest.raises(ValueError):
+        rmsnorm(jnp.zeros((2, 8)), jnp.ones((4,)))
+
+
+def test_scale_equivariance():
+    """rmsnorm(c·x) == rmsnorm(x) for c > 0 — the defining invariant."""
+    x = jax.random.normal(jax.random.PRNGKey(6), (4, 32), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(7), (32,), jnp.float32)
+    a = rmsnorm(x, w)
+    b = rmsnorm(x * 37.5, w)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,96 @@
+//! Figure 3 — the motivation measurements (paper §2.2–§2.3).
+//!
+//! (a) mean ACT + step duration under 1× vs 0.5× external resources;
+//! (b) per-teacher GPU activity under static MOPD deployment (avg < 3%);
+//! (c) env-active time ratio of coding trajectories (≈ 47%);
+//! (d) external-invocation counts per window for DeepSearch vs MOPD
+//!     (swinging ~3 orders of magnitude).
+
+use arl_tangram::bench::*;
+use arl_tangram::sim::SimDur;
+
+fn main() {
+    println!("=== Figure 3(a): ACT under 1x vs 0.5x external resources (coding) ===");
+    let (batch, _, _) = cpu_scale(1280);
+    for (label, nodes, cores) in [("1.0x (1280 cores)", 5u32, 256u32), ("0.5x (640 cores)", 5, 128)] {
+        let cat = catalog_with_cores(nodes, cores);
+        let mut be = tangram(&cat, cores, nodes, 5);
+        let (m, wall) = run_experiment(&mut be, &cat, &[coding_wl()], batch, 2, 42);
+        println!(
+            "{}",
+            row(
+                label,
+                &[
+                    format!("ACT {:.2}s", m.mean_act()),
+                    format!("step {:.1}s", m.mean_step_dur()),
+                    format!("[{wall:.0}s wall]"),
+                ],
+            )
+        );
+    }
+
+    println!("\n=== Figure 3(b): teacher-service GPU activity under static MOPD ===");
+    let cat = testbed_catalog();
+    let mut be = mopd_baseline(&cat);
+    let (m, _) = run_experiment(&mut be, &cat, &[mopd_wl()], 2048, 2, 43);
+    let mut names: Vec<String> = m
+        .util
+        .iter()
+        .filter(|u| u.name.starts_with("svc:teacher"))
+        .map(|u| u.name.clone())
+        .collect();
+    names.sort();
+    names.dedup();
+    let mut total = 0.0;
+    for n in &names {
+        let act = m.mean_util(n);
+        total += act;
+        println!("{}", row(n, &[format!("{:.1}% activity", act * 100.0)]));
+    }
+    println!(
+        "{}",
+        row(
+            "mean over teachers",
+            &[format!("{:.1}% occupancy", total / names.len().max(1) as f64 * 100.0)]
+        )
+    );
+    println!("(we report replica *occupancy* — an upper bound on the paper's SM activity,");
+    println!(" which is per-kernel compute utilization and sits ~10x lower; the shape —");
+    println!(" low mean, large cross-service spread — is the reproduced claim)");
+
+    println!("\n=== Figure 3(c): coding env-active time ratio ===");
+    let cat = testbed_catalog();
+    let mut be = coding_baseline(&cat, 256, 5);
+    let (m, _) = run_experiment(&mut be, &cat, &[coding_wl()], 1280, 1, 44);
+    println!(
+        "{}",
+        row(
+            "baseline (pod-per-traj)",
+            &[format!("{:.0}% active (paper: 47%)", m.mean_active_ratio() * 100.0)]
+        )
+    );
+
+    println!("\n=== Figure 3(d): invocations per 60s window ===");
+    let cat = testbed_catalog();
+    let mut be = tangram(&cat, 256, 5, 5);
+    let wls = [deepsearch_wl(), mopd_wl()];
+    let (m, _) = run_experiment(&mut be, &cat, &wls, 2048, 2, 45);
+    for (task, name) in [(wls[0].task, "deepsearch"), (wls[1].task, "mopd")] {
+        let tl = m.invocation_timeline(SimDur::from_secs(60), Some(task));
+        let counts: Vec<u64> = tl.iter().map(|(_, c)| *c).collect();
+        let max = counts.iter().max().copied().unwrap_or(0);
+        let min_nonzero = counts.iter().filter(|&&c| c > 0).min().copied().unwrap_or(1);
+        println!(
+            "{}",
+            row(
+                name,
+                &[
+                    format!("windows {}", counts.len()),
+                    format!("min {min_nonzero}"),
+                    format!("max {max}"),
+                    format!("swing {:.0}x", max as f64 / min_nonzero as f64),
+                ],
+            )
+        );
+    }
+}

@@ -1,0 +1,111 @@
+//! Figure 6 — ACT over training time + step-duration speedups, per workload,
+//! ARL-Tangram vs the workload's baseline (paper §6.2).
+//!
+//! Paper expectations: consistently lower ACT under Tangram; step-duration
+//! speedups ≈1.4× (coding) and ≈1.5× (deepsearch); smaller for MOPD (long-
+//! tail-dominated rollout).
+
+use arl_tangram::bench::*;
+use arl_tangram::coordinator::Backend;
+use arl_tangram::metrics::Metrics;
+use arl_tangram::rollout::workloads::Catalog;
+use arl_tangram::rollout::Workload;
+use arl_tangram::sim::SimDur;
+
+fn timeline(m: &Metrics, label: &str) {
+    let tl = m.act_timeline(SimDur::from_secs(120));
+    let pts: Vec<String> = tl
+        .iter()
+        .take(8)
+        .map(|(t, act)| format!("{:.0}s:{:.1}s", t, act))
+        .collect();
+    println!("  {label:<14} ACT(t): {}", pts.join("  "));
+}
+
+fn compare(
+    name: &str,
+    cat: &Catalog,
+    wls: &[Workload],
+    batch: usize,
+    tangram_be: &mut dyn Backend,
+    baseline_be: &mut dyn Backend,
+    seed: u64,
+) {
+    let (mt, wt) = run_experiment(tangram_be, cat, wls, batch, 2, seed);
+    let (mb, wb) = run_experiment(baseline_be, cat, wls, batch, 2, seed);
+    println!("--- {name} (batch {batch}) [{wt:.0}s + {wb:.0}s wall]");
+    timeline(&mt, "tangram");
+    timeline(&mb, "baseline");
+    println!(
+        "{}",
+        row(
+            "  mean ACT",
+            &[
+                format!("{:.2}s", mt.mean_act()),
+                format!("{:.2}s", mb.mean_act()),
+                format!("{:.2}x", mb.mean_act() / mt.mean_act().max(1e-9)),
+            ],
+        )
+    );
+    println!(
+        "{}",
+        row(
+            "  step duration",
+            &[
+                format!("{:.1}s", mt.mean_step_dur()),
+                format!("{:.1}s", mb.mean_step_dur()),
+                format!("{:.2}x", mb.mean_step_dur() / mt.mean_step_dur().max(1e-9)),
+            ],
+        )
+    );
+}
+
+fn main() {
+    println!("=== Figure 6: ACT timelines + step durations (tangram | baseline | speedup) ===\n");
+    let cat = testbed_catalog();
+
+    // CPU side: contention-preserving scale (batch/cores ratio fixed)
+    let (cb, cn, cpn) = cpu_scale(1280);
+    let ccat = catalog_with_cores(cn, cpn);
+    compare(
+        "AI Coding vs K8s",
+        &ccat,
+        &[coding_wl()],
+        cb,
+        &mut tangram(&ccat, cpn, cn, 5),
+        &mut coding_baseline(&ccat, cpn, cn),
+        101,
+    );
+
+    compare(
+        "MOPD vs SGLang-static",
+        &cat,
+        &[mopd_wl()],
+        gpu_batch(2048),
+        &mut tangram(&cat, 256, 5, 5),
+        &mut mopd_baseline(&cat),
+        102,
+    );
+
+    compare(
+        "DeepSearch vs unmanaged",
+        &cat,
+        &[deepsearch_wl()],
+        gpu_batch(2048),
+        &mut tangram(&cat, 256, 5, 5),
+        &mut deepsearch_baseline(&cat),
+        103,
+    );
+
+    compare(
+        "MOPD+Search vs static-multi",
+        &cat,
+        &[deepsearch_wl(), mopd_wl()],
+        gpu_batch(1024),
+        &mut tangram(&cat, 256, 5, 5),
+        &mut mopd_search_baseline(&cat),
+        104,
+    );
+
+    println!("\npaper expectations: coding step ~1.4x, deepsearch step ~1.5x, MOPD smaller");
+}

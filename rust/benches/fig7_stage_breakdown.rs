@@ -1,0 +1,88 @@
+//! Figure 7 — normalized per-trajectory stage breakdown (gen / tool / reward),
+//! ARL-Tangram vs baseline per workload (paper §6.2).
+//!
+//! Paper expectations for AI coding: env interactions ↓ ~9.0×, reward ↓
+//! ~2.8×, total external ↓ ~4.3×; DeepSearch reward slightly *worse* under
+//! Tangram (single service ⇒ restore overhead); MOPD+Search strongly better.
+
+use arl_tangram::bench::*;
+use arl_tangram::coordinator::Backend;
+use arl_tangram::metrics::Metrics;
+use arl_tangram::rollout::workloads::Catalog;
+use arl_tangram::rollout::Workload;
+
+fn stages(m: &Metrics) -> (f64, f64, f64) {
+    m.stage_totals()
+}
+
+fn compare(name: &str, cat: &Catalog, wls: &[Workload], batch: usize, t: &mut dyn Backend, b: &mut dyn Backend, seed: u64) {
+    let (mt, _) = run_experiment(t, cat, wls, batch, 2, seed);
+    let (mb, _) = run_experiment(b, cat, wls, batch, 2, seed);
+    let (tg, tt, tr) = stages(&mt);
+    let (bg, bt, br) = stages(&mb);
+    let norm = (tg + tt + tr).max(1e-9); // normalize by tangram total (paper convention)
+    println!("--- {name} (batch {batch}; columns normalized by tangram total)");
+    println!(
+        "{}",
+        row("  tangram", &[format!("gen {:.2}", tg / norm), format!("tool {:.3}", tt / norm), format!("reward {:.3}", tr / norm), format!("total {:.2}", (tg + tt + tr) / norm)])
+    );
+    println!(
+        "{}",
+        row("  baseline", &[format!("gen {:.2}", bg / norm), format!("tool {:.3}", bt / norm), format!("reward {:.3}", br / norm), format!("total {:.2}", (bg + bt + br) / norm)])
+    );
+    println!(
+        "{}",
+        row(
+            "  external speedup",
+            &[
+                format!("tool {:.1}x", bt / tt.max(1e-9)),
+                format!("reward {:.1}x", br / tr.max(1e-9)),
+                format!("total {:.1}x", (bt + br) / (tt + tr).max(1e-9)),
+            ],
+        )
+    );
+}
+
+fn main() {
+    println!("=== Figure 7: stage breakdown per trajectory ===\n");
+    let cat = testbed_catalog();
+    let (cb, cn, cpn) = cpu_scale(1280);
+    let ccat = catalog_with_cores(cn, cpn);
+    compare(
+        "AI Coding vs K8s",
+        &ccat,
+        &[coding_wl()],
+        cb,
+        &mut tangram(&ccat, cpn, cn, 5),
+        &mut coding_baseline(&ccat, cpn, cn),
+        201,
+    );
+    compare(
+        "MOPD vs SGLang-static",
+        &cat,
+        &[mopd_wl()],
+        gpu_batch(2048),
+        &mut tangram(&cat, 256, 5, 5),
+        &mut mopd_baseline(&cat),
+        202,
+    );
+    compare(
+        "DeepSearch vs unmanaged",
+        &cat,
+        &[deepsearch_wl()],
+        gpu_batch(2048),
+        &mut tangram(&cat, 256, 5, 5),
+        &mut deepsearch_baseline(&cat),
+        203,
+    );
+    compare(
+        "MOPD+Search vs static-multi",
+        &cat,
+        &[deepsearch_wl(), mopd_wl()],
+        gpu_batch(1024),
+        &mut tangram(&cat, 256, 5, 5),
+        &mut mopd_search_baseline(&cat),
+        204,
+    );
+    println!("\npaper expectations (coding): tool ~9.0x, reward ~2.8x, total ~4.3x");
+}

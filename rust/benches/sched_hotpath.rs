@@ -1,0 +1,147 @@
+//! Scheduler hot-path micro-benchmarks (§Perf, DESIGN.md §8).
+//!
+//! The paper's constraint: action durations go down to ~1ms, so scheduling
+//! decisions must be far below that. Measures Algorithm 1 end-to-end over
+//! synthetic queues (flat-pool and GPU-chunk topologies), `DPArrange` alone,
+//! and the DES engine's raw event throughput.
+
+use arl_tangram::action::{
+    Action, ActionId, ActionKind, ActionSpec, CostSpec, DimCost, ElasticityModel,
+    ResourceClass, ResourceKindId, ResourceRegistry, ServiceId, TaskId, TrajId,
+};
+use arl_tangram::bench::{time_it, timing_header};
+use arl_tangram::scheduler::{
+    dp_arrange, BasicOperator, ChunkOperator, DpOperator, ElasticScheduler, ResourceState,
+    SchedulerConfig,
+};
+use arl_tangram::sim::{Engine, SimDur, SimTime};
+use std::collections::HashMap;
+
+struct Pool {
+    units: u64,
+    chunks: Option<([u32; 4], [u32; 4])>,
+}
+
+impl ResourceState for Pool {
+    fn available_units(&self) -> u64 {
+        self.units
+    }
+    fn accommodate(&self, mins: &[u64]) -> bool {
+        mins.iter().sum::<u64>() <= self.units
+    }
+    fn dp_operator(&self, reserved: &[u64]) -> Box<dyn DpOperator> {
+        match self.chunks {
+            Some((avail, max)) => {
+                let _ = reserved;
+                Box::new(ChunkOperator::new(avail, max))
+            }
+            None => {
+                let used: u64 = reserved.iter().sum();
+                Box::new(BasicOperator::new(self.units.saturating_sub(used)))
+            }
+        }
+    }
+    fn running_completions(&self) -> Vec<(SimTime, u64)> {
+        vec![(SimTime(1_000_000_000), 2); 8]
+    }
+}
+
+fn mk_queue(reg: &ResourceRegistry, kind: ResourceKindId, n: usize, scalable: bool) -> Vec<Action> {
+    (0..n)
+        .map(|i| {
+            let cost = if scalable {
+                if i % 3 == 0 {
+                    CostSpec::single(reg, kind, DimCost::Range { min: 1, max: 32 })
+                } else {
+                    CostSpec::single(reg, kind, DimCost::Fixed(1))
+                }
+            } else {
+                CostSpec::single(reg, kind, DimCost::Discrete(vec![1, 2, 4, 8]))
+            };
+            Action::new(
+                ActionId(i as u64),
+                ActionSpec {
+                    task: TaskId(0),
+                    trajectory: TrajId(i as u64),
+                    kind: ActionKind::RewardCpu,
+                    cost,
+                    key_resource: Some(kind),
+                    elasticity: ElasticityModel::Amdahl { serial_frac: 0.05 },
+                    profiled_dur: Some(SimDur::from_secs(20 + (i as u64 * 7) % 50)),
+                    service: Some(ServiceId(0)),
+                    true_dur: SimDur::from_secs(20),
+                },
+                SimTime::ZERO,
+            )
+        })
+        .collect()
+}
+
+fn main() {
+    let mut reg = ResourceRegistry::new();
+    let cpu = reg.register("cpu", ResourceClass::CpuCores, 256);
+    let sched = ElasticScheduler::new(SchedulerConfig::default());
+    println!("=== scheduler hot path ===");
+    println!("{}", timing_header());
+
+    for &n in &[16usize, 64, 256, 1024] {
+        let queue = mk_queue(&reg, cpu, n, true);
+        let refs: Vec<&Action> = queue.iter().collect();
+        let pool = Pool { units: 256, chunks: None };
+        let mut map: HashMap<ResourceKindId, &dyn ResourceState> = HashMap::new();
+        map.insert(cpu, &pool);
+        let s = time_it(&format!("alg1 cpu-pool queue={n}"), 200, || {
+            std::hint::black_box(sched.schedule(SimTime::ZERO, &refs, &map));
+        });
+        println!("{}", s.row());
+    }
+
+    // GPU chunk topology (40 GPUs)
+    for &n in &[16usize, 64, 256] {
+        let queue = mk_queue(&reg, cpu, n, false);
+        let refs: Vec<&Action> = queue.iter().collect();
+        let bounds = ChunkOperator::cluster_bounds(40);
+        let pool = Pool { units: 40, chunks: Some(([0, 0, 0, 5], bounds)) };
+        let mut map: HashMap<ResourceKindId, &dyn ResourceState> = HashMap::new();
+        map.insert(cpu, &pool);
+        let s = time_it(&format!("alg1 gpu-chunks queue={n}"), 100, || {
+            std::hint::black_box(sched.schedule(SimTime::ZERO, &refs, &map));
+        });
+        println!("{}", s.row());
+    }
+
+    // DPArrange alone
+    for &(m, units) in &[(8usize, 64u64), (16, 128), (32, 256)] {
+        let op = BasicOperator::new(units);
+        let sets: Vec<Vec<u64>> = (0..m).map(|_| (1..=16).collect()).collect();
+        let s = time_it(&format!("dp_arrange tasks={m} units={units}"), 200, || {
+            std::hint::black_box(dp_arrange(&op, &sets, |i, k| {
+                ElasticityModel::Amdahl { serial_frac: 0.05 }
+                    .scaled_dur(SimDur::from_secs(10 + i as u64), k)
+            }));
+        });
+        println!("{}", s.row());
+    }
+
+    // DES engine raw throughput
+    let s = time_it("DES 100k events", 20, || {
+        let mut eng: Engine<u64> = Engine::new();
+        for i in 0..1000u64 {
+            eng.schedule_at(SimTime(i), i);
+        }
+        let mut n = 0u64;
+        eng.run_while(|eng, _, ev| {
+            n += 1;
+            if n < 100_000 {
+                eng.schedule_in(SimDur(1 + ev % 97), ev + 1);
+            }
+            true
+        });
+        std::hint::black_box(n);
+    });
+    println!("{}", s.row());
+    println!(
+        "→ DES throughput ≈ {:.1}M events/s",
+        100_000.0 / (s.mean_ns / 1e9) / 1e6
+    );
+}

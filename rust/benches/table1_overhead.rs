@@ -1,0 +1,61 @@
+//! Table 1 — ACT breakdown: execution / queuing / system overhead, for
+//! AI Coding (CPU-intensive) and MOPD (GPU-intensive) at two batch sizes
+//! each (paper §6.4).
+//!
+//! Paper expectations: CPU overhead ≤3% of exec even congested; GPU
+//! overhead (restore) ≈25% of exec, stable as concurrency grows.
+
+use arl_tangram::bench::*;
+
+fn main() {
+    println!("=== Table 1: ACT breakdown (seconds per action) ===\n");
+    println!(
+        "{}",
+        row(
+            "workload (batch)",
+            &["exec".into(), "queue".into(), "sys ovh".into(), "ovh/exec".into()]
+        )
+    );
+
+    let (_, cn, cpn) = cpu_scale(1280);
+    let coding_batches = vec![1280usize, 1536];
+    for b in coding_batches {
+        let cat = catalog_with_cores(cn, cpn);
+        let mut t = tangram(&cat, cpn, cn, 5);
+        let (m, _) = run_experiment(&mut t, &cat, &[coding_wl()], b, 1, 401);
+        let (exec, queue, ovh) = m.act_breakdown();
+        println!(
+            "{}",
+            row(
+                &format!("Coding ({b})"),
+                &[
+                    format!("{exec:.3}"),
+                    format!("{queue:.3}"),
+                    format!("{ovh:.3}"),
+                    format!("{:.1}%", ovh / exec.max(1e-9) * 100.0),
+                ],
+            )
+        );
+    }
+
+    let mopd_batches = vec![2048usize, 3072];
+    for b in mopd_batches {
+        let cat = testbed_catalog();
+        let mut t = tangram(&cat, 256, 5, 5);
+        let (m, _) = run_experiment(&mut t, &cat, &[mopd_wl()], b, 1, 402);
+        let (exec, queue, ovh) = m.act_breakdown();
+        println!(
+            "{}",
+            row(
+                &format!("MOPD ({b})"),
+                &[
+                    format!("{exec:.3}"),
+                    format!("{queue:.3}"),
+                    format!("{ovh:.3}"),
+                    format!("{:.1}%", ovh / exec.max(1e-9) * 100.0),
+                ],
+            )
+        );
+    }
+    println!("\npaper expectations: coding ovh ≤3% of exec; MOPD ovh ≈25% (restore), stable with batch");
+}

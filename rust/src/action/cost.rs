@@ -1,0 +1,307 @@
+//! Vectorized resource-cost modeling (paper §4.1).
+//!
+//! `C_i = (c_{i,0}, …, c_{i,k-1})` where each dimension constrains the
+//! feasible unit quantities of one resource kind: nothing, a fixed amount,
+//! a contiguous `[min, max]` range, or a discrete set (e.g. GPU DoP
+//! `{1, 2, 4, 8}`).
+
+use super::ResourceKindId;
+use std::ops::{AddAssign, SubAssign};
+
+/// Per-dimension feasible-units constraint.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DimCost {
+    /// The action does not use this resource.
+    None,
+    /// Exactly this many units.
+    Fixed(u64),
+    /// Any amount in `[min, max]` (contiguous elasticity).
+    Range { min: u64, max: u64 },
+    /// One of these unit counts (sorted ascending; e.g. `[1,2,4,8]`).
+    Discrete(Vec<u64>),
+}
+
+impl DimCost {
+    pub fn min_units(&self) -> u64 {
+        match self {
+            DimCost::None => 0,
+            DimCost::Fixed(n) => *n,
+            DimCost::Range { min, .. } => *min,
+            DimCost::Discrete(v) => v.first().copied().unwrap_or(0),
+        }
+    }
+
+    pub fn max_units(&self) -> u64 {
+        match self {
+            DimCost::None => 0,
+            DimCost::Fixed(n) => *n,
+            DimCost::Range { max, .. } => *max,
+            DimCost::Discrete(v) => v.last().copied().unwrap_or(0),
+        }
+    }
+
+    /// Enumerate all feasible unit choices (ascending).
+    pub fn choices(&self) -> Vec<u64> {
+        match self {
+            DimCost::None => vec![0],
+            DimCost::Fixed(n) => vec![*n],
+            DimCost::Range { min, max } => (*min..=*max).collect(),
+            DimCost::Discrete(v) => v.clone(),
+        }
+    }
+
+    pub fn allows(&self, m: u64) -> bool {
+        match self {
+            DimCost::None => m == 0,
+            DimCost::Fixed(n) => m == *n,
+            DimCost::Range { min, max } => (*min..=*max).contains(&m),
+            DimCost::Discrete(v) => v.binary_search(&m).is_ok(),
+        }
+    }
+
+    /// More than one feasible choice ⇒ the dimension is scalable.
+    pub fn has_choice(&self) -> bool {
+        match self {
+            DimCost::None | DimCost::Fixed(_) => false,
+            DimCost::Range { min, max } => max > min,
+            DimCost::Discrete(v) => v.len() > 1,
+        }
+    }
+
+    /// Validate internal consistency (sortedness, non-empty, min≤max).
+    pub fn validate(&self) -> Result<(), String> {
+        match self {
+            DimCost::None => Ok(()),
+            DimCost::Fixed(n) if *n > 0 => Ok(()),
+            DimCost::Fixed(_) => Err("Fixed(0) — use None".into()),
+            DimCost::Range { min, max } => {
+                if *min == 0 {
+                    Err("Range.min must be ≥ 1".into())
+                } else if min > max {
+                    Err(format!("Range min {min} > max {max}"))
+                } else {
+                    Ok(())
+                }
+            }
+            DimCost::Discrete(v) => {
+                if v.is_empty() {
+                    Err("empty Discrete set".into())
+                } else if v[0] == 0 {
+                    Err("Discrete contains 0".into())
+                } else if v.windows(2).any(|w| w[0] >= w[1]) {
+                    Err("Discrete not strictly ascending".into())
+                } else {
+                    Ok(())
+                }
+            }
+        }
+    }
+}
+
+/// Full cost vector of an action: one [`DimCost`] per registered kind.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CostSpec {
+    dims: Vec<DimCost>,
+}
+
+impl CostSpec {
+    pub fn new(dims: Vec<DimCost>) -> Self {
+        CostSpec { dims }
+    }
+
+    /// Cost touching a single dimension (the common case).
+    pub fn single(
+        reg: &super::ResourceRegistry,
+        kind: ResourceKindId,
+        cost: DimCost,
+    ) -> Self {
+        let mut dims = vec![DimCost::None; reg.len()];
+        dims[kind.0 as usize] = cost;
+        CostSpec { dims }
+    }
+
+    /// Builder: set an additional dimension.
+    pub fn with(mut self, kind: ResourceKindId, cost: DimCost) -> Self {
+        self.dims[kind.0 as usize] = cost;
+        self
+    }
+
+    pub fn dim(&self, kind: ResourceKindId) -> &DimCost {
+        &self.dims[kind.0 as usize]
+    }
+
+    pub fn dim_has_choice(&self, kind: ResourceKindId) -> bool {
+        self.dims[kind.0 as usize].has_choice()
+    }
+
+    pub fn len(&self) -> usize {
+        self.dims.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.dims.is_empty()
+    }
+
+    /// Minimum-requirement vector `c_i^min` (candidate-selection constraint).
+    pub fn min_vector(&self) -> ResourceVector {
+        ResourceVector::from_vec(self.dims.iter().map(|d| d.min_units()).collect())
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (ResourceKindId, &DimCost)> {
+        self.dims
+            .iter()
+            .enumerate()
+            .map(|(i, d)| (ResourceKindId(i as u32), d))
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, d) in self.dims.iter().enumerate() {
+            d.validate().map_err(|e| format!("dim {i}: {e}"))?;
+        }
+        if self.dims.iter().all(|d| matches!(d, DimCost::None)) {
+            return Err("cost vector touches no resource".into());
+        }
+        Ok(())
+    }
+}
+
+/// Concrete unit quantities per resource kind (allocations, availability).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ResourceVector {
+    units: Vec<u64>,
+}
+
+impl ResourceVector {
+    pub fn zeros(k: usize) -> Self {
+        ResourceVector { units: vec![0; k] }
+    }
+
+    pub fn from_vec(units: Vec<u64>) -> Self {
+        ResourceVector { units }
+    }
+
+    pub fn get(&self, kind: ResourceKindId) -> u64 {
+        self.units[kind.0 as usize]
+    }
+
+    pub fn set(&mut self, kind: ResourceKindId, v: u64) {
+        self.units[kind.0 as usize] = v;
+    }
+
+    pub fn len(&self) -> usize {
+        self.units.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.units.is_empty()
+    }
+
+    /// Component-wise `self ≥ other` (the `R_j ≥ Σ c^min` check, quantity
+    /// part; topology feasibility is the managers' `accommodate`).
+    pub fn dominates(&self, other: &ResourceVector) -> bool {
+        debug_assert_eq!(self.units.len(), other.units.len());
+        self.units.iter().zip(&other.units).all(|(a, b)| a >= b)
+    }
+
+    pub fn checked_sub(&self, other: &ResourceVector) -> Option<ResourceVector> {
+        if !self.dominates(other) {
+            return None;
+        }
+        Some(ResourceVector::from_vec(
+            self.units.iter().zip(&other.units).map(|(a, b)| a - b).collect(),
+        ))
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (ResourceKindId, u64)> + '_ {
+        self.units
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| (ResourceKindId(i as u32), v))
+    }
+}
+
+impl AddAssign<&ResourceVector> for ResourceVector {
+    fn add_assign(&mut self, o: &ResourceVector) {
+        debug_assert_eq!(self.units.len(), o.units.len());
+        for (a, b) in self.units.iter_mut().zip(&o.units) {
+            *a += b;
+        }
+    }
+}
+
+impl SubAssign<&ResourceVector> for ResourceVector {
+    fn sub_assign(&mut self, o: &ResourceVector) {
+        debug_assert_eq!(self.units.len(), o.units.len());
+        for (a, b) in self.units.iter_mut().zip(&o.units) {
+            debug_assert!(*a >= *b, "resource underflow");
+            *a -= b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::action::{ResourceClass, ResourceRegistry};
+
+    #[test]
+    fn dim_cost_bounds_and_choices() {
+        assert_eq!(DimCost::None.choices(), vec![0]);
+        assert_eq!(DimCost::Fixed(3).choices(), vec![3]);
+        assert_eq!(DimCost::Range { min: 2, max: 4 }.choices(), vec![2, 3, 4]);
+        let d = DimCost::Discrete(vec![1, 2, 4, 8]);
+        assert_eq!(d.min_units(), 1);
+        assert_eq!(d.max_units(), 8);
+        assert!(d.allows(4));
+        assert!(!d.allows(3));
+        assert!(d.has_choice());
+        assert!(!DimCost::Fixed(3).has_choice());
+    }
+
+    #[test]
+    fn validation_catches_malformed() {
+        assert!(DimCost::Fixed(0).validate().is_err());
+        assert!(DimCost::Range { min: 0, max: 3 }.validate().is_err());
+        assert!(DimCost::Range { min: 5, max: 3 }.validate().is_err());
+        assert!(DimCost::Discrete(vec![]).validate().is_err());
+        assert!(DimCost::Discrete(vec![2, 2]).validate().is_err());
+        assert!(DimCost::Discrete(vec![0, 1]).validate().is_err());
+        assert!(DimCost::Discrete(vec![1, 2, 4]).validate().is_ok());
+    }
+
+    #[test]
+    fn cost_spec_multi_dim() {
+        let mut reg = ResourceRegistry::new();
+        let cpu = reg.register("cpu", ResourceClass::CpuCores, 64);
+        let mem = reg.register("mem", ResourceClass::CpuMemoryGb, 512);
+        let spec = CostSpec::single(&reg, cpu, DimCost::Range { min: 1, max: 8 })
+            .with(mem, DimCost::Fixed(4));
+        assert!(spec.validate().is_ok());
+        let min = spec.min_vector();
+        assert_eq!(min.get(cpu), 1);
+        assert_eq!(min.get(mem), 4);
+        assert!(spec.dim_has_choice(cpu));
+        assert!(!spec.dim_has_choice(mem));
+    }
+
+    #[test]
+    fn empty_cost_rejected() {
+        let mut reg = ResourceRegistry::new();
+        let _ = reg.register("cpu", ResourceClass::CpuCores, 1);
+        let spec = CostSpec::new(vec![DimCost::None]);
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn vector_arithmetic() {
+        let mut a = ResourceVector::from_vec(vec![10, 5]);
+        let b = ResourceVector::from_vec(vec![3, 5]);
+        assert!(a.dominates(&b));
+        assert!(!b.dominates(&a));
+        a -= &b;
+        assert_eq!(a, ResourceVector::from_vec(vec![7, 0]));
+        a += &b;
+        assert_eq!(a.get(ResourceKindId(0)), 10);
+        assert_eq!(a.checked_sub(&ResourceVector::from_vec(vec![11, 0])), None);
+    }
+}

@@ -1,0 +1,151 @@
+//! Elasticity modeling (paper §4.1, Eq. 1).
+//!
+//! For a scalable action, elasticity maps allocated units `m` of the key
+//! resource to an efficiency ratio `0 < E(m) ≤ 1`:
+//!
+//! ```text
+//! getDur(m) = T_ori / (E(m) · m)
+//! ```
+//!
+//! `E(1) = 1` by definition (the profile is normalized to one unit).
+
+use crate::sim::SimDur;
+
+/// `E(m)` families. `None` marks actions whose elasticity is unknown —
+/// the scheduler then pins them at their minimum request (§4.2).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ElasticityModel {
+    /// Unknown elasticity (`E_i is None` in Algorithm 1).
+    None,
+    /// Perfect linear scaling: `E(m) = 1`.
+    PerfectScaling,
+    /// Amdahl's law with serial fraction `s`:
+    /// speedup(m) = 1 / (s + (1-s)/m)  ⇒  E(m) = speedup(m)/m.
+    /// Models parallel test-suite execution (pytest -n) with setup cost.
+    Amdahl { serial_frac: f64 },
+    /// Tabulated efficiency at m = 1, 2, 3, …: `table[m-1] = E(m)`.
+    /// Allocations beyond the table clamp to the last entry. Models profiled
+    /// GPU services where TP efficiency is measured per DoP.
+    Table(Vec<f64>),
+}
+
+impl ElasticityModel {
+    /// Efficiency `E(m)`; `m == 0` is a caller bug.
+    pub fn efficiency(&self, m: u64) -> f64 {
+        debug_assert!(m >= 1, "E(m) needs m ≥ 1");
+        let m = m.max(1);
+        match self {
+            // Unknown elasticity never scales: treat extra units as useless.
+            ElasticityModel::None => 1.0 / m as f64,
+            ElasticityModel::PerfectScaling => 1.0,
+            ElasticityModel::Amdahl { serial_frac } => {
+                let s = serial_frac.clamp(0.0, 1.0);
+                let speedup = 1.0 / (s + (1.0 - s) / m as f64);
+                speedup / m as f64
+            }
+            ElasticityModel::Table(t) => {
+                if t.is_empty() {
+                    1.0 / m as f64
+                } else {
+                    let idx = (m as usize - 1).min(t.len() - 1);
+                    t[idx].clamp(1e-6, 1.0)
+                }
+            }
+        }
+    }
+
+    /// Eq. 1: execution duration with `m` units given single-unit `t_ori`.
+    pub fn scaled_dur(&self, t_ori: SimDur, m: u64) -> SimDur {
+        let m = m.max(1);
+        let e = self.efficiency(m);
+        let denom = e * m as f64;
+        debug_assert!(denom > 0.0);
+        SimDur((t_ori.0 as f64 / denom).round() as u64)
+    }
+
+    /// Speedup factor over a single unit.
+    pub fn speedup(&self, m: u64) -> f64 {
+        self.efficiency(m) * m.max(1) as f64
+    }
+
+    /// True if more units can ever help.
+    pub fn is_scalable(&self) -> bool {
+        !matches!(self, ElasticityModel::None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_unit_is_identity() {
+        let t = SimDur::from_secs(10);
+        for e in [
+            ElasticityModel::None,
+            ElasticityModel::PerfectScaling,
+            ElasticityModel::Amdahl { serial_frac: 0.2 },
+            ElasticityModel::Table(vec![1.0, 0.9, 0.8]),
+        ] {
+            assert_eq!(e.scaled_dur(t, 1), t, "{e:?}");
+            assert!((e.efficiency(1) - 1.0).abs() < 1e-9, "{e:?}");
+        }
+    }
+
+    #[test]
+    fn perfect_scaling_divides() {
+        let e = ElasticityModel::PerfectScaling;
+        assert_eq!(e.scaled_dur(SimDur::from_secs(8), 4), SimDur::from_secs(2));
+        assert_eq!(e.speedup(16), 16.0);
+    }
+
+    #[test]
+    fn amdahl_caps_speedup() {
+        let e = ElasticityModel::Amdahl { serial_frac: 0.25 };
+        // asymptotic speedup = 1/0.25 = 4
+        assert!(e.speedup(1_000) < 4.0);
+        assert!(e.speedup(1_000) > 3.9);
+        // speedup(2) = 1/(0.25+0.375) = 1.6
+        assert!((e.speedup(2) - 1.6).abs() < 1e-9);
+        // monotone non-decreasing speedup
+        let mut last = 0.0;
+        for m in 1..64 {
+            let s = e.speedup(m);
+            assert!(s >= last);
+            last = s;
+        }
+    }
+
+    #[test]
+    fn unknown_elasticity_never_speeds_up() {
+        let e = ElasticityModel::None;
+        let t = SimDur::from_secs(10);
+        assert_eq!(e.scaled_dur(t, 8), t);
+        assert!(!e.is_scalable());
+    }
+
+    #[test]
+    fn table_lookup_and_clamp() {
+        let e = ElasticityModel::Table(vec![1.0, 0.95, 0.85, 0.7]);
+        assert!((e.efficiency(2) - 0.95).abs() < 1e-9);
+        assert!((e.efficiency(4) - 0.7).abs() < 1e-9);
+        assert!((e.efficiency(100) - 0.7).abs() < 1e-9); // clamps
+        let t = SimDur::from_secs(19);
+        // dur(2) = 19 / (0.95*2) = 10
+        assert_eq!(e.scaled_dur(t, 2), SimDur::from_secs(10));
+    }
+
+    #[test]
+    fn efficiency_always_in_unit_interval() {
+        for e in [
+            ElasticityModel::PerfectScaling,
+            ElasticityModel::Amdahl { serial_frac: 0.5 },
+            ElasticityModel::Table(vec![0.9, 2.0]), // 2.0 must clamp to 1.0
+        ] {
+            for m in 1..20 {
+                let eff = e.efficiency(m);
+                assert!(eff > 0.0 && eff <= 1.0, "{e:?} m={m} eff={eff}");
+            }
+        }
+    }
+}

@@ -1,0 +1,317 @@
+//! Unified action-level formulation (paper §4.1).
+//!
+//! Every external invocation — a shell command in an AI-coding environment,
+//! a reward-model scoring batch, a search-API call — is normalized into an
+//! [`ActionSpec`]: a vectorized resource cost `C_i` over the resource kinds
+//! registered with the system, an optional *key elasticity resource* with an
+//! elasticity model `E(m)`, and a profiled single-unit duration `T_ori`
+//! (Eq. 1: `getDur(m) = T_ori / (E(m)·m)`).
+
+pub mod cost;
+pub mod elasticity;
+
+pub use cost::{CostSpec, DimCost, ResourceVector};
+pub use elasticity::ElasticityModel;
+
+use crate::sim::{SimDur, SimTime};
+
+/// Index into the [`ResourceRegistry`]. One per managed resource type
+/// (CPU cores, CPU memory, GPU units, each API endpoint's quota, ...).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ResourceKindId(pub u32);
+
+/// Broad class of a resource kind; managers claim kinds by class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResourceClass {
+    /// CPU cores on the environment cluster (AOE manager).
+    CpuCores,
+    /// CPU memory, GiB granularity (co-managed with cores).
+    CpuMemoryGb,
+    /// GPUs on the reward-service cluster (EOE manager).
+    GpuUnits,
+    /// Concurrency-limited external service (Basic manager).
+    ApiConcurrency,
+    /// Quota-per-window external service (Basic manager).
+    ApiQuota,
+}
+
+/// A registered resource kind.
+#[derive(Debug, Clone)]
+pub struct ResourceKindInfo {
+    pub name: String,
+    pub class: ResourceClass,
+    /// Total units in the pool (cores / GPUs / concurrent slots / quota).
+    pub capacity: u64,
+}
+
+/// Registry of all external resource kinds managed by the system.
+/// `ResourceVector`s are indexed by registration order.
+#[derive(Debug, Clone, Default)]
+pub struct ResourceRegistry {
+    kinds: Vec<ResourceKindInfo>,
+}
+
+impl ResourceRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn register(&mut self, name: &str, class: ResourceClass, capacity: u64) -> ResourceKindId {
+        assert!(
+            self.kinds.iter().all(|k| k.name != name),
+            "duplicate resource kind {name}"
+        );
+        self.kinds.push(ResourceKindInfo { name: name.to_string(), class, capacity });
+        ResourceKindId(self.kinds.len() as u32 - 1)
+    }
+
+    pub fn len(&self) -> usize {
+        self.kinds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.kinds.is_empty()
+    }
+
+    pub fn info(&self, id: ResourceKindId) -> &ResourceKindInfo {
+        &self.kinds[id.0 as usize]
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<ResourceKindId> {
+        self.kinds
+            .iter()
+            .position(|k| k.name == name)
+            .map(|i| ResourceKindId(i as u32))
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (ResourceKindId, &ResourceKindInfo)> {
+        self.kinds
+            .iter()
+            .enumerate()
+            .map(|(i, k)| (ResourceKindId(i as u32), k))
+    }
+
+    /// Zeroed vector with one slot per registered kind.
+    pub fn zero_vector(&self) -> ResourceVector {
+        ResourceVector::zeros(self.len())
+    }
+
+    /// Vector of full capacities.
+    pub fn capacity_vector(&self) -> ResourceVector {
+        ResourceVector::from_vec(self.kinds.iter().map(|k| k.capacity).collect())
+    }
+}
+
+/// What kind of external invocation an action is (reporting + workload gen).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ActionKind {
+    /// Tool call inside a coding environment (shell exec, file edit).
+    EnvExec,
+    /// Reward computation on CPUs (e.g. run the test suite).
+    RewardCpu,
+    /// Reward-model / teacher-model inference on GPUs.
+    RewardModel,
+    /// External API call (search, fetch, PDF parse).
+    ApiCall,
+}
+
+impl ActionKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ActionKind::EnvExec => "env_exec",
+            ActionKind::RewardCpu => "reward_cpu",
+            ActionKind::RewardModel => "reward_model",
+            ActionKind::ApiCall => "api_call",
+        }
+    }
+}
+
+/// Identifiers threading actions back to their RL context.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskId(pub u32);
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TrajId(pub u64);
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ActionId(pub u64);
+
+/// A GPU-backed model service (reward model / teacher). The GPU manager
+/// treats each (service, DoP) pair as a distinct deployable variant (§5.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ServiceId(pub u32);
+
+/// The unified action formulation submitted to the coordinator.
+#[derive(Debug, Clone)]
+pub struct ActionSpec {
+    pub task: TaskId,
+    pub trajectory: TrajId,
+    pub kind: ActionKind,
+    /// Vectorized resource cost `C_i`: one [`DimCost`] per registered kind.
+    pub cost: CostSpec,
+    /// The single resource type that dominates elasticity (§4.1 assumption),
+    /// if the action is elastic.
+    pub key_resource: Option<ResourceKindId>,
+    /// Elasticity model `E(m)` on the key resource.
+    pub elasticity: ElasticityModel,
+    /// Profiled execution duration with one unit of the key resource
+    /// (`T_ori`). `None` for unprofiled actions — the scheduler then treats
+    /// them as non-scalable and uses historical averages for heap estimates.
+    pub profiled_dur: Option<SimDur>,
+    /// For [`ActionKind::RewardModel`]: which service must execute it.
+    pub service: Option<ServiceId>,
+    /// True duration the simulator charges (hidden from the scheduler unless
+    /// profiled; models LLM-output-dependent variability).
+    pub true_dur: SimDur,
+}
+
+impl ActionSpec {
+    /// Execution duration under `m` units of the key resource (Eq. 1),
+    /// based on the *true* duration (used by the execution substrate).
+    pub fn exec_dur(&self, m: u64) -> SimDur {
+        self.elasticity.scaled_dur(self.true_dur, m)
+    }
+
+    /// Scheduler-visible duration estimate under `m` units (uses the
+    /// profiled duration; `None` if unprofiled).
+    pub fn est_dur(&self, m: u64) -> Option<SimDur> {
+        self.profiled_dur.map(|d| self.elasticity.scaled_dur(d, m))
+    }
+
+    /// Whether the scheduler may scale this action (§4.2: needs both a known
+    /// elasticity and a profiled duration).
+    pub fn is_scalable(&self) -> bool {
+        self.key_resource.is_some()
+            && !matches!(self.elasticity, ElasticityModel::None)
+            && self.profiled_dur.is_some()
+            && self.cost.dim_has_choice(self.key_resource.unwrap())
+    }
+}
+
+/// Lifecycle states of a submitted action.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ActionState {
+    Waiting,
+    Running,
+    Done,
+    Failed,
+}
+
+/// A submitted action tracked by the coordinator.
+#[derive(Debug, Clone)]
+pub struct Action {
+    pub id: ActionId,
+    pub spec: ActionSpec,
+    pub state: ActionState,
+    pub submitted_at: SimTime,
+    pub started_at: Option<SimTime>,
+    pub finished_at: Option<SimTime>,
+    /// Units of the key resource actually allocated.
+    pub allocated_units: u64,
+    /// Setup/restore overhead charged before execution (EOE restore, cgroup
+    /// update, pod creation for baselines).
+    pub overhead: SimDur,
+    /// Transparent retries performed so far (API transient failures).
+    pub retry_count: u32,
+}
+
+impl Action {
+    pub fn new(id: ActionId, spec: ActionSpec, now: SimTime) -> Self {
+        Action {
+            id,
+            spec,
+            state: ActionState::Waiting,
+            submitted_at: now,
+            started_at: None,
+            finished_at: None,
+            allocated_units: 0,
+            overhead: SimDur::ZERO,
+            retry_count: 0,
+        }
+    }
+
+    /// Action completion time so far (queuing + execution), defined once the
+    /// action finished. The paper's headline per-action metric (Eq. 2).
+    pub fn act(&self) -> Option<SimDur> {
+        Some(self.finished_at? - self.submitted_at)
+    }
+
+    pub fn queue_dur(&self) -> Option<SimDur> {
+        Some(self.started_at? - self.submitted_at)
+    }
+
+    pub fn exec_dur_actual(&self) -> Option<SimDur> {
+        Some(self.finished_at? - self.started_at?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reg() -> ResourceRegistry {
+        let mut r = ResourceRegistry::new();
+        r.register("cpu", ResourceClass::CpuCores, 256);
+        r.register("mem", ResourceClass::CpuMemoryGb, 2048);
+        r.register("gpu", ResourceClass::GpuUnits, 40);
+        r
+    }
+
+    #[test]
+    fn registry_roundtrip() {
+        let r = reg();
+        assert_eq!(r.len(), 3);
+        let cpu = r.by_name("cpu").unwrap();
+        assert_eq!(r.info(cpu).capacity, 256);
+        assert_eq!(r.by_name("nope"), None);
+        assert_eq!(r.capacity_vector().get(ResourceKindId(2)), 40);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate")]
+    fn duplicate_kind_panics() {
+        let mut r = reg();
+        r.register("cpu", ResourceClass::CpuCores, 1);
+    }
+
+    #[test]
+    fn action_lifecycle_metrics() {
+        let r = reg();
+        let cpu = r.by_name("cpu").unwrap();
+        let spec = ActionSpec {
+            task: TaskId(0),
+            trajectory: TrajId(0),
+            kind: ActionKind::RewardCpu,
+            cost: CostSpec::single(&r, cpu, DimCost::Range { min: 1, max: 8 }),
+            key_resource: Some(cpu),
+            elasticity: ElasticityModel::PerfectScaling,
+            profiled_dur: Some(SimDur::from_secs(8)),
+            service: None,
+            true_dur: SimDur::from_secs(8),
+        };
+        assert!(spec.is_scalable());
+        assert_eq!(spec.exec_dur(4), SimDur::from_secs(2));
+        let mut a = Action::new(ActionId(1), spec, SimTime(0));
+        a.started_at = Some(SimTime(5));
+        a.finished_at = Some(SimTime(25));
+        assert_eq!(a.queue_dur(), Some(SimDur(5)));
+        assert_eq!(a.exec_dur_actual(), Some(SimDur(20)));
+        assert_eq!(a.act(), Some(SimDur(25)));
+    }
+
+    #[test]
+    fn fixed_cost_is_not_scalable() {
+        let r = reg();
+        let cpu = r.by_name("cpu").unwrap();
+        let spec = ActionSpec {
+            task: TaskId(0),
+            trajectory: TrajId(0),
+            kind: ActionKind::EnvExec,
+            cost: CostSpec::single(&r, cpu, DimCost::Fixed(1)),
+            key_resource: Some(cpu),
+            elasticity: ElasticityModel::PerfectScaling,
+            profiled_dur: Some(SimDur::from_secs(1)),
+            service: None,
+            true_dur: SimDur::from_secs(1),
+        };
+        assert!(!spec.is_scalable(), "fixed unit set leaves nothing to scale");
+    }
+}

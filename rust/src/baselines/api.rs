@@ -1,0 +1,155 @@
+//! Unmanaged-API baseline for DeepSearch (paper §6.1).
+//!
+//! Each trajectory fires API calls immediately with no admission control;
+//! the provider's rate limits and load-dependent failures hit directly, and
+//! the client retries with exponential backoff (≤3 times, 600s timeout) —
+//! the retry storms that inflate ACT and invalidate trajectories in §6.2.
+
+use crate::action::{Action, ActionId, ResourceKindId};
+use crate::cluster::api::{ApiEndpoint, ApiOutcome};
+use crate::coordinator::backend::Started;
+use crate::sim::{SimDur, SimTime};
+use std::collections::HashMap;
+
+/// The unmanaged API client.
+#[derive(Debug)]
+pub struct UnmanagedApi {
+    endpoints: HashMap<ResourceKindId, ApiEndpoint>,
+    outcomes: HashMap<ActionId, (ResourceKindId, ApiOutcome)>,
+    queue: Vec<Action>,
+}
+
+impl UnmanagedApi {
+    pub fn new(endpoints: HashMap<ResourceKindId, ApiEndpoint>) -> Self {
+        UnmanagedApi { endpoints, outcomes: HashMap::new(), queue: Vec::new() }
+    }
+
+    pub fn handles(&self, a: &Action) -> bool {
+        a.spec
+            .cost
+            .iter()
+            .any(|(k, d)| d.min_units() > 0 && self.endpoints.contains_key(&k))
+    }
+
+    pub fn submit(&mut self, action: &Action) {
+        self.queue.push(action.clone());
+    }
+
+    /// Everything fires immediately — that is the baseline's defining flaw.
+    pub fn drain_started(&mut self, now: SimTime) -> Vec<Started> {
+        let mut out = Vec::new();
+        for a in self.queue.drain(..) {
+            let kind = a
+                .spec
+                .cost
+                .iter()
+                .find(|(k, d)| d.min_units() > 0 && self.endpoints.contains_key(k))
+                .map(|(k, _)| k)
+                .expect("API action with no endpoint dim");
+            let ep = self.endpoints.get_mut(&kind).unwrap();
+            let (outcome, dur) = ep.issue(now);
+            // exponential client backoff on retries (1s, 2s, 4s)
+            let backoff = if a.retry_count > 0 {
+                SimDur::from_secs(1 << (a.retry_count - 1).min(4))
+            } else {
+                SimDur::ZERO
+            };
+            self.outcomes.insert(a.id, (kind, outcome));
+            out.push(Started {
+                action: a.id,
+                overhead: backoff,
+                exec: dur,
+                units: 1,
+            });
+        }
+        out
+    }
+
+    /// Returns the outcome of the attempt; `true` ⇒ success.
+    pub fn complete(&mut self, id: ActionId) -> ApiOutcome {
+        let (kind, outcome) = self
+            .outcomes
+            .remove(&id)
+            .expect("completion for unknown API action");
+        self.endpoints.get_mut(&kind).unwrap().finish(outcome);
+        outcome
+    }
+
+    /// Counters across endpoints: (ok, rate_limited, timeout, error).
+    pub fn failure_counts(&self) -> (u64, u64, u64, u64) {
+        let mut t = (0, 0, 0, 0);
+        for e in self.endpoints.values() {
+            t.0 += e.n_ok;
+            t.1 += e.n_rate_limited;
+            t.2 += e.n_timeout;
+            t.3 += e.n_error;
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::action::{
+        ActionKind, ActionSpec, CostSpec, DimCost, ElasticityModel, ResourceClass,
+        ResourceRegistry, TaskId, TrajId,
+    };
+    use crate::cluster::api::ApiEndpointSpec;
+
+    fn setup() -> (ResourceRegistry, UnmanagedApi, ResourceKindId) {
+        let mut reg = ResourceRegistry::new();
+        let k = reg.register("api:s", ResourceClass::ApiConcurrency, 4);
+        let mut spec = ApiEndpointSpec::search("s");
+        spec.max_concurrency = 4;
+        let mut eps = HashMap::new();
+        eps.insert(k, ApiEndpoint::new(spec, 3));
+        (reg, UnmanagedApi::new(eps), k)
+    }
+
+    fn mk(reg: &ResourceRegistry, k: ResourceKindId, id: u64, retries: u32) -> Action {
+        let mut a = Action::new(
+            ActionId(id),
+            ActionSpec {
+                task: TaskId(0),
+                trajectory: TrajId(id),
+                kind: ActionKind::ApiCall,
+                cost: CostSpec::single(reg, k, DimCost::Fixed(1)),
+                key_resource: None,
+                elasticity: ElasticityModel::None,
+                profiled_dur: None,
+                service: None,
+                true_dur: SimDur::from_millis(500),
+            },
+            SimTime::ZERO,
+        );
+        a.retry_count = retries;
+        a
+    }
+
+    #[test]
+    fn burst_triggers_rate_limits() {
+        let (reg, mut api, k) = setup();
+        for i in 0..20 {
+            api.submit(&mk(&reg, k, i, 0));
+        }
+        let started = api.drain_started(SimTime::ZERO);
+        assert_eq!(started.len(), 20, "unmanaged client fires everything");
+        let mut limited = 0;
+        for s in &started {
+            if api.complete(s.action) == ApiOutcome::RateLimited {
+                limited += 1;
+            }
+        }
+        assert!(limited >= 10, "rate-limited {limited}");
+    }
+
+    #[test]
+    fn retries_carry_backoff() {
+        let (reg, mut api, k) = setup();
+        api.submit(&mk(&reg, k, 1, 2));
+        let started = api.drain_started(SimTime::ZERO);
+        assert_eq!(started[0].overhead, SimDur::from_secs(2));
+        let _ = api.complete(ActionId(1));
+    }
+}

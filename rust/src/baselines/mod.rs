@@ -1,0 +1,357 @@
+//! Paper baselines (§6.1), composed into a single [`Backend`].
+//!
+//! * AI Coding → Kubernetes pod-per-trajectory ([`k8s`]);
+//! * MOPD / DeepSearch-reward → SGLang-style static services ([`static_gpu`]);
+//! * GPU scalability comparison → ServerlessLLM-style MaaS ([`serverless`]);
+//! * DeepSearch tool calls → unmanaged direct API calls ([`api`]).
+
+pub mod api;
+pub mod k8s;
+pub mod serverless;
+pub mod static_gpu;
+
+pub use api::UnmanagedApi;
+pub use k8s::{K8sCfg, K8sCpu};
+pub use serverless::{ServerlessCfg, ServerlessGpu};
+pub use static_gpu::StaticGpu;
+
+use crate::action::{Action, TrajId};
+use crate::cluster::api::{ApiEndpoint, ApiOutcome};
+use crate::coordinator::backend::{Backend, Started, Verdict};
+use crate::rollout::workloads::Catalog;
+use crate::sim::SimTime;
+use std::collections::HashMap;
+
+/// GPU half of a baseline deployment.
+pub enum GpuBaseline {
+    None,
+    Static(StaticGpu),
+    Serverless(ServerlessGpu),
+}
+
+/// A composed baseline backend.
+pub struct BaselineBackend {
+    name: &'static str,
+    cpu_kind: crate::action::ResourceKindId,
+    gpu_kind: crate::action::ResourceKindId,
+    pub k8s: Option<K8sCpu>,
+    pub gpu: GpuBaseline,
+    pub api: Option<UnmanagedApi>,
+}
+
+impl BaselineBackend {
+    /// AI-Coding baseline: Kubernetes CPU cluster only.
+    pub fn coding(cat: &Catalog, k8s_cfg: K8sCfg) -> Self {
+        BaselineBackend {
+            name: "k8s",
+            cpu_kind: cat.cpu_cores,
+            gpu_kind: cat.gpu_units,
+            k8s: Some(K8sCpu::new(k8s_cfg)),
+            gpu: GpuBaseline::None,
+            api: None,
+        }
+    }
+
+    /// MOPD baseline: nine teachers, four GPUs each (TP-4), SGLang-style.
+    pub fn mopd(cat: &Catalog) -> Self {
+        let plan = cat
+            .teachers
+            .iter()
+            .map(|&ti| {
+                let s = &cat.services[ti];
+                (s.id, s.name.clone(), 4u8, 1u32)
+            })
+            .collect();
+        BaselineBackend {
+            name: "sglang-static",
+            cpu_kind: cat.cpu_cores,
+            gpu_kind: cat.gpu_units,
+            k8s: None,
+            gpu: GpuBaseline::Static(StaticGpu::new(plan)),
+            api: None,
+        }
+    }
+
+    /// DeepSearch baseline: unmanaged APIs + judge at TP-8 × 5 replicas.
+    pub fn deepsearch(cat: &Catalog) -> Self {
+        let judge = &cat.services[cat.judge];
+        let plan = vec![(judge.id, judge.name.clone(), 8u8, 5u32)];
+        let endpoints: HashMap<_, _> = cat
+            .api
+            .iter()
+            .enumerate()
+            .map(|(i, (k, spec))| (*k, ApiEndpoint::new(spec.clone(), 0xba5e + i as u64)))
+            .collect();
+        BaselineBackend {
+            name: "unmanaged-api",
+            cpu_kind: cat.cpu_cores,
+            gpu_kind: cat.gpu_units,
+            k8s: None,
+            gpu: GpuBaseline::Static(StaticGpu::new(plan)),
+            api: Some(UnmanagedApi::new(endpoints)),
+        }
+    }
+
+    /// MOPD+Search baseline: ten reward services at TP-4 each (§6.1).
+    pub fn mopd_search(cat: &Catalog) -> Self {
+        let mut plan: Vec<(crate::action::ServiceId, String, u8, u32)> = vec![{
+            let judge = &cat.services[cat.judge];
+            (judge.id, judge.name.clone(), 4u8, 1u32)
+        }];
+        for &ti in &cat.teachers {
+            let s = &cat.services[ti];
+            plan.push((s.id, s.name.clone(), 4, 1));
+        }
+        let endpoints: HashMap<_, _> = cat
+            .api
+            .iter()
+            .enumerate()
+            .map(|(i, (k, spec))| (*k, ApiEndpoint::new(spec.clone(), 0xfee1 + i as u64)))
+            .collect();
+        BaselineBackend {
+            name: "static-multi",
+            cpu_kind: cat.cpu_cores,
+            gpu_kind: cat.gpu_units,
+            k8s: None,
+            gpu: GpuBaseline::Static(StaticGpu::new(plan)),
+            api: Some(UnmanagedApi::new(endpoints)),
+        }
+    }
+
+    /// ServerlessLLM comparison (Fig. 8(b)).
+    pub fn serverless(cat: &Catalog, mut cfg: ServerlessCfg) -> Self {
+        for s in &cat.services {
+            cfg.weights_gb.insert(s.id.0, s.weights_gb);
+        }
+        BaselineBackend {
+            name: "serverless-llm",
+            cpu_kind: cat.cpu_cores,
+            gpu_kind: cat.gpu_units,
+            k8s: None,
+            gpu: GpuBaseline::Serverless(ServerlessGpu::new(cfg)),
+            api: None,
+        }
+    }
+
+    fn is_cpu(&self, a: &Action) -> bool {
+        a.spec.cost.dim(self.cpu_kind).min_units() > 0
+    }
+
+    fn is_gpu(&self, a: &Action) -> bool {
+        a.spec.cost.dim(self.gpu_kind).min_units() > 0
+    }
+}
+
+impl Backend for BaselineBackend {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn traj_start(
+        &mut self,
+        now: SimTime,
+        traj: TrajId,
+        mem_gb: u64,
+        first_cpu_min: Option<u32>,
+    ) -> Result<(), String> {
+        if first_cpu_min.is_some() {
+            if let Some(k8s) = &mut self.k8s {
+                return k8s.traj_start(now, traj, mem_gb);
+            }
+        }
+        Ok(())
+    }
+
+    fn traj_end(&mut self, _now: SimTime, traj: TrajId) {
+        if let Some(k8s) = &mut self.k8s {
+            k8s.traj_end(traj);
+        }
+    }
+
+    fn submit(&mut self, _now: SimTime, action: &Action) {
+        if self.is_cpu(action) {
+            self.k8s
+                .as_mut()
+                .expect("CPU action without k8s baseline")
+                .submit(action);
+        } else if self.is_gpu(action) {
+            match &mut self.gpu {
+                GpuBaseline::Static(s) => s.submit(action),
+                GpuBaseline::Serverless(s) => s.submit(action),
+                GpuBaseline::None => panic!("GPU action without GPU baseline"),
+            }
+        } else {
+            self.api
+                .as_mut()
+                .expect("API action without API baseline")
+                .submit(action);
+        }
+    }
+
+    fn on_complete(&mut self, now: SimTime, action: &Action) -> Verdict {
+        if self.is_cpu(action) {
+            self.k8s.as_mut().unwrap().complete(action.id);
+            Verdict::Done
+        } else if self.is_gpu(action) {
+            match &mut self.gpu {
+                GpuBaseline::Static(s) => {
+                    s.complete(now, action.id);
+                    Verdict::Done
+                }
+                GpuBaseline::Serverless(s) => {
+                    s.complete(now, action.id);
+                    if s.was_timed_out(action.id) {
+                        Verdict::Failed
+                    } else {
+                        Verdict::Done
+                    }
+                }
+                GpuBaseline::None => unreachable!(),
+            }
+        } else {
+            match self.api.as_mut().unwrap().complete(action.id) {
+                ApiOutcome::Ok => Verdict::Done,
+                _ => Verdict::Retry,
+            }
+        }
+    }
+
+    fn drain_started(&mut self, now: SimTime) -> Vec<Started> {
+        let mut out = Vec::new();
+        if let Some(k8s) = &mut self.k8s {
+            out.extend(k8s.drain_started(now));
+        }
+        match &mut self.gpu {
+            GpuBaseline::Static(s) => out.extend(s.drain_started(now)),
+            GpuBaseline::Serverless(s) => out.extend(s.drain_started(now)),
+            GpuBaseline::None => {}
+        }
+        if let Some(api) = &mut self.api {
+            out.extend(api.drain_started(now));
+        }
+        out
+    }
+
+    fn next_wakeup(&self, now: SimTime) -> Option<SimTime> {
+        self.k8s.as_ref().and_then(|k| k.next_wakeup(now))
+    }
+
+    fn tick(&mut self, _now: SimTime) {}
+
+    fn utilization(&self) -> Vec<(String, f64)> {
+        let mut v = Vec::new();
+        if let Some(k8s) = &self.k8s {
+            v.push(("cpu".into(), k8s.utilization()));
+        }
+        match &self.gpu {
+            GpuBaseline::Static(s) => v.extend(s.utilization()),
+            GpuBaseline::Serverless(s) => v.push(("gpu".into(), s.utilization())),
+            GpuBaseline::None => {}
+        }
+        v
+    }
+
+    fn provisioned(&self) -> Vec<(String, u64)> {
+        let mut v = Vec::new();
+        if let Some(k8s) = &self.k8s {
+            v.push(("cpu_cores".into(), k8s.total_cores()));
+        }
+        match &self.gpu {
+            GpuBaseline::Static(s) => v.push(("gpus".into(), s.total_gpus())),
+            GpuBaseline::Serverless(s) => v.push(("gpus".into(), s.total_gpus())),
+            GpuBaseline::None => {}
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::action::TaskId;
+    use crate::coordinator::{run, RunCfg};
+    use crate::rollout::workloads::{CatalogCfg, Workload, WorkloadKind};
+
+    fn small_cat() -> Catalog {
+        Catalog::build(&CatalogCfg {
+            cpu_nodes: 2,
+            cores_per_node: 16,
+            gpu_nodes: 5,
+            n_teachers: 4,
+            ..CatalogCfg::default()
+        })
+    }
+
+    #[test]
+    fn k8s_baseline_runs_coding() {
+        let cat = small_cat();
+        let mut be = BaselineBackend::coding(
+            &cat,
+            K8sCfg {
+                nodes: 2,
+                cores_per_node: 16,
+                node_mem_gb: 256,
+                ..K8sCfg::default()
+            },
+        );
+        let wl = Workload::new(TaskId(0), WorkloadKind::Coding);
+        let cfg = RunCfg { batch: 8, steps: 1, seed: 5, ..RunCfg::default() };
+        let m = run(&mut be, &cat, &[wl], &cfg);
+        assert_eq!(m.trajectories.len(), 8);
+        assert_eq!(m.failed_actions(), 0);
+        // pod creation overhead must show up on first actions
+        assert!(m.actions.iter().any(|a| a.overhead.0 > 0));
+        // no elasticity: units never exceed the 4-core pod limit
+        assert!(m.actions.iter().all(|a| a.units <= 4));
+    }
+
+    #[test]
+    fn static_gpu_baseline_runs_mopd() {
+        let cat = small_cat();
+        let mut be = BaselineBackend::mopd(&cat);
+        let wl = Workload::new(TaskId(2), WorkloadKind::Mopd);
+        let cfg = RunCfg { batch: 16, steps: 1, seed: 6, ..RunCfg::default() };
+        let m = run(&mut be, &cat, &[wl], &cfg);
+        assert_eq!(m.trajectories.len(), 16);
+        // all GPU actions pinned at TP-4
+        assert!(m
+            .actions
+            .iter()
+            .filter(|a| a.kind == crate::action::ActionKind::RewardModel)
+            .all(|a| a.units == 4));
+        // per-service gauges exposed for Fig. 3(b)
+        assert!(m.util.iter().any(|u| u.name.starts_with("svc:")));
+    }
+
+    #[test]
+    fn deepsearch_baseline_has_retries() {
+        let cat = small_cat();
+        let mut be = BaselineBackend::deepsearch(&cat);
+        let wl = Workload::new(TaskId(1), WorkloadKind::DeepSearch);
+        let cfg = RunCfg { batch: 48, steps: 1, seed: 8, ..RunCfg::default() };
+        let m = run(&mut be, &cat, &[wl], &cfg);
+        assert_eq!(m.trajectories.len(), 48);
+        // the burst of unmanaged calls must have produced retries
+        assert!(m.total_retries() > 0, "expected retry storms");
+    }
+
+    #[test]
+    fn serverless_baseline_pays_reload_every_time() {
+        let cat = small_cat();
+        let mut be = BaselineBackend::serverless(
+            &cat,
+            ServerlessCfg { gpu_nodes: 5, ..ServerlessCfg::default() },
+        );
+        let wl = Workload::new(TaskId(2), WorkloadKind::Mopd);
+        let cfg = RunCfg { batch: 8, steps: 1, seed: 10, ..RunCfg::default() };
+        let m = run(&mut be, &cat, &[wl], &cfg);
+        assert_eq!(m.trajectories.len(), 8);
+        let gpu_actions: Vec<_> = m
+            .actions
+            .iter()
+            .filter(|a| a.kind == crate::action::ActionKind::RewardModel && !a.failed)
+            .collect();
+        assert!(!gpu_actions.is_empty());
+        assert!(gpu_actions.iter().all(|a| a.overhead.0 > 0), "always cold");
+    }
+}

@@ -1,0 +1,214 @@
+//! ServerlessLLM-style Model-as-a-Service baseline (paper §6.3).
+//!
+//! Serves many models from a shared GPU pool like ARL-Tangram, but with the
+//! two deficiencies the paper calls out: **no elastic DoP reallocation**
+//! (every instance is a fixed TP-4) and **higher per-invocation system
+//! overhead** (full checkpoint reload on every dispatch — no invariant
+//! host-memory copy to skip write-back, plus a fixed serving-stack startup
+//! cost). A client timeout makes it shed load at very high concurrency,
+//! reproducing the paper's "fails to serve at batch 2048".
+
+use crate::action::{Action, ActionId};
+use crate::cluster::gpu::{GpuCluster, RestoreModel};
+use crate::coordinator::backend::Started;
+use crate::sim::{SimDur, SimTime};
+use std::collections::{HashMap, HashSet};
+
+#[derive(Debug, Clone)]
+pub struct ServerlessCfg {
+    pub gpu_nodes: u32,
+    /// Fixed TP degree of every instance.
+    pub dop: u8,
+    /// Fixed serving-stack startup per dispatch.
+    pub startup: SimDur,
+    /// Checkpoint-reload bandwidth multiplier vs. ARL-Tangram's restore
+    /// (>1 ⇒ slower; models reload without the invariant-copy optimization).
+    pub reload_penalty: f64,
+    /// Client gives up after waiting this long in queue.
+    pub queue_timeout: SimDur,
+    /// Weight footprint per service (GiB) — same catalog as the managers.
+    pub weights_gb: HashMap<u32, f64>,
+}
+
+impl Default for ServerlessCfg {
+    fn default() -> Self {
+        ServerlessCfg {
+            gpu_nodes: 5,
+            dop: 4,
+            startup: SimDur::from_secs(2),
+            reload_penalty: 1.5,
+            queue_timeout: SimDur::from_secs(600),
+            weights_gb: HashMap::new(),
+        }
+    }
+}
+
+/// The MaaS baseline backend part.
+#[derive(Debug)]
+pub struct ServerlessGpu {
+    cfg: ServerlessCfg,
+    cluster: GpuCluster,
+    restore: RestoreModel,
+    queue: Vec<Action>,
+    running: HashMap<ActionId, crate::cluster::gpu::ChunkRef>,
+    /// actions that timed out in queue → report Failed on completion
+    pub timed_out: HashSet<ActionId>,
+}
+
+impl ServerlessGpu {
+    pub fn new(cfg: ServerlessCfg) -> Self {
+        ServerlessGpu {
+            cluster: GpuCluster::new(cfg.gpu_nodes),
+            restore: RestoreModel::default(),
+            cfg,
+            queue: Vec::new(),
+            running: HashMap::new(),
+            timed_out: HashSet::new(),
+        }
+    }
+
+    pub fn submit(&mut self, action: &Action) {
+        self.queue.push(action.clone());
+    }
+
+    pub fn complete(&mut self, now: SimTime, id: ActionId) {
+        if let Some(chunk) = self.running.remove(&id) {
+            // no residency tracking: the next dispatch reloads regardless
+            self.cluster
+                .node_mut(chunk.node)
+                .release(chunk, None);
+        }
+        let _ = now;
+    }
+
+    pub fn was_timed_out(&mut self, id: ActionId) -> bool {
+        self.timed_out.remove(&id)
+    }
+
+    pub fn drain_started(&mut self, now: SimTime) -> Vec<Started> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.queue.len() {
+            let waited = now - self.queue[i].submitted_at;
+            if waited > self.cfg.queue_timeout {
+                // shed: complete instantly as a failure
+                let a = self.queue.remove(i);
+                self.timed_out.insert(a.id);
+                out.push(Started {
+                    action: a.id,
+                    overhead: SimDur::ZERO,
+                    exec: SimDur::from_millis(1),
+                    units: 0,
+                });
+                continue;
+            }
+            let svc = self.queue[i].spec.service.expect("GPU action without service");
+            match self.cluster.allocate(svc, self.cfg.dop) {
+                Some(alloc) => {
+                    let a = self.queue.remove(i);
+                    let weights = self
+                        .cfg
+                        .weights_gb
+                        .get(&svc.0)
+                        .copied()
+                        .unwrap_or(60.0);
+                    // full reload every dispatch — warm or not
+                    let reload = self
+                        .restore
+                        .restore_dur(weights, self.cfg.dop)
+                        .mul_f64(self.cfg.reload_penalty);
+                    let overhead = self.cfg.startup + reload;
+                    let exec = a.spec.exec_dur(self.cfg.dop as u64);
+                    self.running.insert(a.id, alloc.chunk);
+                    out.push(Started { action: a.id, overhead, exec, units: self.cfg.dop as u64 });
+                }
+                None => {
+                    i += 1;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn utilization(&self) -> f64 {
+        let total = self.cluster.total_gpus() as f64;
+        (total - self.cluster.free_gpus() as f64) / total
+    }
+
+    pub fn total_gpus(&self) -> u64 {
+        self.cluster.total_gpus() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::action::{
+        ActionKind, ActionSpec, CostSpec, DimCost, ElasticityModel, ResourceClass,
+        ResourceRegistry, ServiceId, TaskId, TrajId,
+    };
+
+    fn mk_action(reg: &ResourceRegistry, id: u64, svc: u32, at: SimTime) -> Action {
+        let gpu = reg.by_name("gpu").unwrap();
+        Action::new(
+            ActionId(id),
+            ActionSpec {
+                task: TaskId(0),
+                trajectory: TrajId(id),
+                kind: ActionKind::RewardModel,
+                cost: CostSpec::single(reg, gpu, DimCost::Discrete(vec![4])),
+                key_resource: Some(gpu),
+                elasticity: ElasticityModel::PerfectScaling,
+                profiled_dur: Some(SimDur::from_secs(8)),
+                service: Some(ServiceId(svc)),
+                true_dur: SimDur::from_secs(8),
+            },
+            at,
+        )
+    }
+
+    fn reg() -> ResourceRegistry {
+        let mut r = ResourceRegistry::new();
+        r.register("gpu", ResourceClass::GpuUnits, 8);
+        r
+    }
+
+    #[test]
+    fn every_dispatch_pays_reload() {
+        let r = reg();
+        let mut s = ServerlessGpu::new(ServerlessCfg {
+            gpu_nodes: 1,
+            ..ServerlessCfg::default()
+        });
+        s.submit(&mk_action(&r, 1, 0, SimTime::ZERO));
+        let st = s.drain_started(SimTime::ZERO);
+        assert_eq!(st.len(), 1);
+        assert!(st[0].overhead >= ServerlessCfg::default().startup);
+        s.complete(SimTime::ZERO + SimDur::from_secs(5), ActionId(1));
+        // same service again: still cold
+        s.submit(&mk_action(&r, 2, 0, SimTime::ZERO));
+        let st2 = s.drain_started(SimTime::ZERO + SimDur::from_secs(5));
+        assert!(st2[0].overhead >= ServerlessCfg::default().startup);
+    }
+
+    #[test]
+    fn queue_timeout_sheds_load() {
+        let r = reg();
+        let mut s = ServerlessGpu::new(ServerlessCfg {
+            gpu_nodes: 1,
+            queue_timeout: SimDur::from_secs(10),
+            ..ServerlessCfg::default()
+        });
+        // two instances fit (8 GPUs / TP4); the third waits
+        for i in 0..3 {
+            s.submit(&mk_action(&r, i, i as u32, SimTime::ZERO));
+        }
+        let st = s.drain_started(SimTime::ZERO);
+        assert_eq!(st.len(), 2);
+        // far in the future the third times out
+        let late = SimTime::ZERO + SimDur::from_secs(60);
+        let st2 = s.drain_started(late);
+        assert_eq!(st2.len(), 1);
+        assert!(s.was_timed_out(st2[0].action));
+    }
+}

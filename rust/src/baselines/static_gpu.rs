@@ -1,0 +1,220 @@
+//! Static GPU-service baseline (SGLang-style, paper §6.1).
+//!
+//! Task-level static provisioning: every service gets dedicated replicas
+//! pinned to fixed GPUs for the whole training run (e.g. nine teachers ×
+//! TP-4). Requests queue per service; idle replicas of other services
+//! cannot help — the §2.3 "over-provisioning within RL tasks".
+
+use crate::action::{Action, ActionId, ServiceId};
+use crate::coordinator::backend::Started;
+use crate::sim::{SimDur, SimTime};
+use std::collections::HashMap;
+
+/// One pinned replica.
+#[derive(Debug)]
+struct Replica {
+    busy_until: SimTime,
+    busy: bool,
+    /// busy-time integral for Fig. 3(b) SM-activity reporting
+    busy_accum: SimDur,
+    last_change: SimTime,
+}
+
+#[derive(Debug)]
+struct ServiceDeployment {
+    name: String,
+    dop: u8,
+    replicas: Vec<Replica>,
+    queue: Vec<Action>,
+}
+
+/// The static deployment: a fixed map service → replicas.
+#[derive(Debug)]
+pub struct StaticGpu {
+    services: HashMap<ServiceId, ServiceDeployment>,
+    running: HashMap<ActionId, (ServiceId, usize)>,
+    total_gpus: u64,
+}
+
+impl StaticGpu {
+    /// `plan`: (service, name, dop, n_replicas).
+    pub fn new(plan: Vec<(ServiceId, String, u8, u32)>) -> Self {
+        let mut services = HashMap::new();
+        let mut total = 0u64;
+        for (id, name, dop, n) in plan {
+            total += dop as u64 * n as u64;
+            services.insert(
+                id,
+                ServiceDeployment {
+                    name,
+                    dop,
+                    replicas: (0..n)
+                        .map(|_| Replica {
+                            busy_until: SimTime::ZERO,
+                            busy: false,
+                            busy_accum: SimDur::ZERO,
+                            last_change: SimTime::ZERO,
+                        })
+                        .collect(),
+                    queue: Vec::new(),
+                },
+            );
+        }
+        StaticGpu { services, running: HashMap::new(), total_gpus: total }
+    }
+
+    pub fn submit(&mut self, action: &Action) {
+        let svc = action.spec.service.expect("GPU action without service");
+        self.services
+            .get_mut(&svc)
+            .unwrap_or_else(|| panic!("service {svc:?} not deployed"))
+            .queue
+            .push(action.clone());
+    }
+
+    pub fn complete(&mut self, now: SimTime, id: ActionId) {
+        if let Some((svc, ri)) = self.running.remove(&id) {
+            let dep = self.services.get_mut(&svc).unwrap();
+            let r = &mut dep.replicas[ri];
+            r.busy_accum += now - r.last_change;
+            r.busy = false;
+            r.last_change = now;
+        }
+    }
+
+    pub fn drain_started(&mut self, now: SimTime) -> Vec<Started> {
+        let mut out = Vec::new();
+        let mut started_pairs = Vec::new();
+        for (svc, dep) in self.services.iter_mut() {
+            while !dep.queue.is_empty() {
+                let free = dep.replicas.iter().position(|r| !r.busy);
+                let Some(ri) = free else { break };
+                let a = dep.queue.remove(0);
+                let exec = a.spec.exec_dur(dep.dop as u64);
+                let r = &mut dep.replicas[ri];
+                r.busy = true;
+                r.last_change = now;
+                r.busy_until = now + exec;
+                started_pairs.push((a.id, *svc, ri));
+                out.push(Started {
+                    action: a.id,
+                    overhead: SimDur::ZERO, // permanently resident — no restore
+                    exec,
+                    units: dep.dop as u64,
+                });
+            }
+        }
+        for (id, svc, ri) in started_pairs {
+            self.running.insert(id, (svc, ri));
+        }
+        out
+    }
+
+    /// Per-service instantaneous busy fraction (Fig. 3(b) sampling).
+    pub fn utilization(&self) -> Vec<(String, f64)> {
+        let mut v: Vec<(String, f64)> = self
+            .services
+            .values()
+            .map(|d| {
+                let busy = d.replicas.iter().filter(|r| r.busy).count();
+                (format!("svc:{}", d.name), busy as f64 / d.replicas.len().max(1) as f64)
+            })
+            .collect();
+        let total_busy: usize = self
+            .services
+            .values()
+            .map(|d| d.replicas.iter().filter(|r| r.busy).count() * d.dop as usize)
+            .sum();
+        v.push(("gpu".into(), total_busy as f64 / self.total_gpus.max(1) as f64));
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    pub fn total_gpus(&self) -> u64 {
+        self.total_gpus
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::action::{
+        ActionKind, ActionSpec, CostSpec, DimCost, ElasticityModel, ResourceClass,
+        ResourceRegistry, TaskId, TrajId,
+    };
+
+    fn mk_action(reg: &ResourceRegistry, id: u64, svc: u32, secs: u64) -> Action {
+        let gpu = reg.by_name("gpu").unwrap();
+        Action::new(
+            ActionId(id),
+            ActionSpec {
+                task: TaskId(0),
+                trajectory: TrajId(id),
+                kind: ActionKind::RewardModel,
+                cost: CostSpec::single(reg, gpu, DimCost::Discrete(vec![1, 2, 4, 8])),
+                key_resource: Some(gpu),
+                elasticity: ElasticityModel::PerfectScaling,
+                profiled_dur: Some(SimDur::from_secs(secs)),
+                service: Some(ServiceId(svc)),
+                true_dur: SimDur::from_secs(secs),
+            },
+            SimTime::ZERO,
+        )
+    }
+
+    fn reg() -> ResourceRegistry {
+        let mut r = ResourceRegistry::new();
+        r.register("gpu", ResourceClass::GpuUnits, 40);
+        r
+    }
+
+    #[test]
+    fn per_service_queues_do_not_share() {
+        let r = reg();
+        let mut s = StaticGpu::new(vec![
+            (ServiceId(0), "a".into(), 4, 1),
+            (ServiceId(1), "b".into(), 4, 1),
+        ]);
+        assert_eq!(s.total_gpus(), 8);
+        // two requests for service 0, none for service 1
+        s.submit(&mk_action(&r, 1, 0, 8));
+        s.submit(&mk_action(&r, 2, 0, 8));
+        let started = s.drain_started(SimTime::ZERO);
+        // only one replica of service 0 → second request queues even though
+        // service 1's replica idles (the paper's task-level waste)
+        assert_eq!(started.len(), 1);
+        assert_eq!(started[0].units, 4);
+        s.complete(SimTime::ZERO + SimDur::from_secs(2), ActionId(1));
+        let started2 = s.drain_started(SimTime::ZERO + SimDur::from_secs(2));
+        assert_eq!(started2.len(), 1);
+        assert_eq!(started2[0].action, ActionId(2));
+    }
+
+    #[test]
+    fn utilization_reports_per_service() {
+        let r = reg();
+        let mut s = StaticGpu::new(vec![
+            (ServiceId(0), "a".into(), 4, 2),
+            (ServiceId(1), "b".into(), 2, 1),
+        ]);
+        s.submit(&mk_action(&r, 1, 0, 4));
+        let _ = s.drain_started(SimTime::ZERO);
+        let u = s.utilization();
+        let a = u.iter().find(|(n, _)| n == "svc:a").unwrap();
+        let b = u.iter().find(|(n, _)| n == "svc:b").unwrap();
+        assert_eq!(a.1, 0.5);
+        assert_eq!(b.1, 0.0);
+        let g = u.iter().find(|(n, _)| n == "gpu").unwrap();
+        assert!((g.1 - 0.4).abs() < 1e-9); // 4 of 10 GPUs busy
+    }
+
+    #[test]
+    fn exec_uses_pinned_dop() {
+        let r = reg();
+        let mut s = StaticGpu::new(vec![(ServiceId(0), "a".into(), 8, 1)]);
+        s.submit(&mk_action(&r, 1, 0, 8));
+        let started = s.drain_started(SimTime::ZERO);
+        // perfect scaling at dop 8 → 1s
+        assert_eq!(started[0].exec, SimDur::from_secs(1));
+    }
+}

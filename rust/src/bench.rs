@@ -1,0 +1,226 @@
+//! Benchmark support: a small criterion-style timing harness (the real
+//! criterion is unavailable offline) plus shared experiment presets used by
+//! the `rust/benches/*` targets that regenerate the paper's tables/figures.
+//!
+//! Scale: by default the benches run at reduced batch sizes so `cargo bench`
+//! completes in minutes; set `ARL_BENCH_FULL=1` to reproduce the paper's
+//! batch sizes (1280/2048/3072).
+
+use crate::action::TaskId;
+use crate::baselines::{BaselineBackend, K8sCfg, ServerlessCfg};
+use crate::coordinator::{run, Backend, RunCfg, TangramBackend, TangramCfg};
+use crate::metrics::Metrics;
+use crate::rollout::workloads::{Catalog, CatalogCfg, Workload, WorkloadKind};
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// timing harness
+// ---------------------------------------------------------------------------
+
+/// Timing statistics over repeated runs of a closure.
+#[derive(Debug, Clone)]
+pub struct TimingStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl TimingStats {
+    pub fn row(&self) -> String {
+        fn fmt(ns: f64) -> String {
+            if ns < 1e3 {
+                format!("{ns:.0}ns")
+            } else if ns < 1e6 {
+                format!("{:.2}µs", ns / 1e3)
+            } else if ns < 1e9 {
+                format!("{:.2}ms", ns / 1e6)
+            } else {
+                format!("{:.2}s", ns / 1e9)
+            }
+        }
+        format!(
+            "{:<44} {:>10} {:>10} {:>10} {:>10}  x{}",
+            self.name,
+            fmt(self.mean_ns),
+            fmt(self.p50_ns),
+            fmt(self.p99_ns),
+            fmt(self.min_ns),
+            self.iters
+        )
+    }
+}
+
+/// Time `f` repeatedly (after warmup) and report stats.
+pub fn time_it<F: FnMut()>(name: &str, iters: usize, mut f: F) -> TimingStats {
+    let warmup = (iters / 10).max(1);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    TimingStats {
+        name: name.to_string(),
+        iters,
+        mean_ns: samples.iter().sum::<f64>() / samples.len() as f64,
+        p50_ns: crate::util::percentile(&samples, 50.0),
+        p99_ns: crate::util::percentile(&samples, 99.0),
+        min_ns: samples[0],
+    }
+}
+
+pub fn timing_header() -> String {
+    format!(
+        "{:<44} {:>10} {:>10} {:>10} {:>10}",
+        "benchmark", "mean", "p50", "p99", "min"
+    )
+}
+
+// ---------------------------------------------------------------------------
+// experiment presets
+// ---------------------------------------------------------------------------
+
+/// Whether to run at the paper's full batch sizes.
+pub fn full_scale() -> bool {
+    std::env::var("ARL_BENCH_FULL").map_or(false, |v| v == "1")
+}
+
+/// Scale a paper batch size down for the quick default mode.
+pub fn scaled(paper_batch: usize) -> usize {
+    if full_scale() {
+        paper_batch
+    } else {
+        (paper_batch / 4).max(64)
+    }
+}
+
+/// CPU-side scale: always the paper's testbed (the DES makes 1280
+/// trajectories on 1280 cores sub-second, and both the contention ratio and
+/// the DoP-to-node proportion matter) — (batch, cpu_nodes, cores_per_node).
+pub fn cpu_scale(paper_batch: usize) -> (usize, u32, u32) {
+    (paper_batch, 5, 256)
+}
+
+/// GPU-side batches always run at paper scale — the GPU DES is cheap and
+/// the contention ratio against the fixed 40-GPU pool is what matters.
+pub fn gpu_batch(paper_batch: usize) -> usize {
+    paper_batch
+}
+
+/// The §6.1 testbed catalog (5×256-core CPU nodes for Fig. 8(a) parity,
+/// 5×8-GPU nodes, 9 teachers + 1 judge, 4 API endpoints).
+pub fn testbed_catalog() -> Catalog {
+    Catalog::build(&CatalogCfg::default())
+}
+
+/// Catalog with a custom CPU-core provision (Fig. 8(a) right: 768–1280).
+pub fn catalog_with_cores(nodes: u32, cores_per_node: u32) -> Catalog {
+    Catalog::build(&CatalogCfg { cpu_nodes: nodes, cores_per_node, ..CatalogCfg::default() })
+}
+
+pub fn tangram(cat: &Catalog, cores_per_node: u32, cpu_nodes: u32, gpu_nodes: u32) -> TangramBackend {
+    let _ = cat;
+    TangramBackend::new(
+        cat,
+        TangramCfg {
+            cpu_nodes,
+            numa_per_node: 2,
+            cores_per_numa: (cores_per_node / 2).max(1),
+            gpu_nodes,
+            ..TangramCfg::default()
+        },
+    )
+}
+
+pub fn k8s(cores_per_node: u32, cpu_nodes: u32) -> K8sCfg {
+    K8sCfg { nodes: cpu_nodes, cores_per_node, ..K8sCfg::default() }
+}
+
+/// Run one experiment and return metrics + wall time.
+pub fn run_experiment(
+    backend: &mut dyn Backend,
+    cat: &Catalog,
+    wls: &[Workload],
+    batch: usize,
+    steps: u32,
+    seed: u64,
+) -> (Metrics, f64) {
+    let cfg = RunCfg { batch, steps, seed, ..RunCfg::default() };
+    let t = Instant::now();
+    let m = run(backend, cat, wls, &cfg);
+    (m, t.elapsed().as_secs_f64())
+}
+
+pub fn coding_wl() -> Workload {
+    Workload::new(TaskId(0), WorkloadKind::Coding)
+}
+
+pub fn deepsearch_wl() -> Workload {
+    Workload::new(TaskId(1), WorkloadKind::DeepSearch)
+}
+
+pub fn mopd_wl() -> Workload {
+    Workload::new(TaskId(2), WorkloadKind::Mopd)
+}
+
+/// Standard baselines per workload.
+pub fn coding_baseline(cat: &Catalog, cores_per_node: u32, cpu_nodes: u32) -> BaselineBackend {
+    BaselineBackend::coding(cat, k8s(cores_per_node, cpu_nodes))
+}
+
+pub fn mopd_baseline(cat: &Catalog) -> BaselineBackend {
+    BaselineBackend::mopd(cat)
+}
+
+pub fn deepsearch_baseline(cat: &Catalog) -> BaselineBackend {
+    BaselineBackend::deepsearch(cat)
+}
+
+pub fn mopd_search_baseline(cat: &Catalog) -> BaselineBackend {
+    BaselineBackend::mopd_search(cat)
+}
+
+pub fn serverless_baseline(cat: &Catalog, gpu_nodes: u32) -> BaselineBackend {
+    BaselineBackend::serverless(cat, ServerlessCfg { gpu_nodes, ..ServerlessCfg::default() })
+}
+
+/// Pretty-print a (label, value, unit) table row.
+pub fn row(label: &str, cols: &[String]) -> String {
+    let mut s = format!("{label:<28}");
+    for c in cols {
+        s.push_str(&format!("{c:>14}"));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_produces_sane_stats() {
+        let s = time_it("noop-ish", 50, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(s.mean_ns > 0.0);
+        assert!(s.p50_ns <= s.p99_ns);
+        assert!(s.min_ns <= s.p50_ns);
+        assert!(!s.row().is_empty());
+    }
+
+    #[test]
+    fn scaled_respects_env_default() {
+        // default mode: quarter scale with a floor of 64
+        if !full_scale() {
+            assert_eq!(scaled(1280), 320);
+            assert_eq!(scaled(128), 64);
+        }
+    }
+}

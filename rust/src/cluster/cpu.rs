@@ -1,0 +1,342 @@
+//! Simulated CPU cluster substrate (paper testbed: 15 nodes × 256 AMD cores
+//! × 2.4 TB). State machine mirrors what the AOE manager manipulates in
+//! production: per-container cgroup core sets updated through the Docker
+//! API, core exclusivity, NUMA domains, and node-level memory reservation
+//! for long-lived environments.
+
+use crate::action::TrajId;
+use crate::sim::SimDur;
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CoreId {
+    pub node: NodeId,
+    pub idx: u32,
+}
+
+/// Latency model of the container runtime operations AOE performs.
+#[derive(Debug, Clone)]
+pub struct CpuLatency {
+    /// `docker update` of the cgroup (cpuset/cpulimit) before exec.
+    pub cgroup_update: SimDur,
+    /// `docker exec` fork under the updated cgroup.
+    pub exec_fork: SimDur,
+    /// Container creation (first action of a trajectory).
+    pub container_create: SimDur,
+}
+
+impl Default for CpuLatency {
+    fn default() -> Self {
+        CpuLatency {
+            cgroup_update: SimDur::from_millis(3),
+            exec_fork: SimDur::from_millis(2),
+            container_create: SimDur::from_millis(400),
+        }
+    }
+}
+
+/// A long-lived per-trajectory container. Memory stays reserved for the
+/// container's lifetime (paper §5.2: "the memory allocated to each container
+/// is preserved"); cores come and go per action under AOE.
+#[derive(Debug, Clone)]
+pub struct Container {
+    pub trajectory: TrajId,
+    pub mem_gb: u64,
+    /// cores currently in the cgroup (empty between actions — that is the
+    /// whole point of allocate-on-execution)
+    pub cgroup_cores: Vec<CoreId>,
+}
+
+/// One CPU node: cores grouped into NUMA domains + a memory pool.
+#[derive(Debug)]
+pub struct CpuNode {
+    pub id: NodeId,
+    pub cores_per_numa: u32,
+    pub numa_domains: u32,
+    pub mem_total_gb: u64,
+    pub mem_reserved_gb: u64,
+    /// busy flag per core (core idx = numa * cores_per_numa + i)
+    busy: Vec<bool>,
+    free_count: u32,
+    containers: HashMap<TrajId, Container>,
+}
+
+impl CpuNode {
+    pub fn new(id: NodeId, numa_domains: u32, cores_per_numa: u32, mem_total_gb: u64) -> Self {
+        let total = (numa_domains * cores_per_numa) as usize;
+        CpuNode {
+            id,
+            cores_per_numa,
+            numa_domains,
+            mem_total_gb,
+            mem_reserved_gb: 0,
+            busy: vec![false; total],
+            free_count: total as u32,
+            containers: HashMap::new(),
+        }
+    }
+
+    pub fn total_cores(&self) -> u32 {
+        self.numa_domains * self.cores_per_numa
+    }
+
+    pub fn free_cores(&self) -> u32 {
+        self.free_count
+    }
+
+    pub fn free_mem_gb(&self) -> u64 {
+        self.mem_total_gb - self.mem_reserved_gb
+    }
+
+    pub fn has_container(&self, t: TrajId) -> bool {
+        self.containers.contains_key(&t)
+    }
+
+    pub fn container_count(&self) -> usize {
+        self.containers.len()
+    }
+
+    /// Create the trajectory's container, reserving its memory for the whole
+    /// trajectory lifetime. Fails if memory is insufficient.
+    pub fn create_container(&mut self, t: TrajId, mem_gb: u64) -> Result<(), String> {
+        if self.containers.contains_key(&t) {
+            return Err(format!("container for {t:?} already exists"));
+        }
+        if self.free_mem_gb() < mem_gb {
+            return Err(format!(
+                "node {:?}: {} GiB requested, {} free",
+                self.id,
+                mem_gb,
+                self.free_mem_gb()
+            ));
+        }
+        self.mem_reserved_gb += mem_gb;
+        self.containers
+            .insert(t, Container { trajectory: t, mem_gb, cgroup_cores: vec![] });
+        Ok(())
+    }
+
+    /// Tear down at trajectory end; releases memory (and any leaked cores).
+    pub fn destroy_container(&mut self, t: TrajId) -> Result<(), String> {
+        let c = self
+            .containers
+            .remove(&t)
+            .ok_or_else(|| format!("no container for {t:?}"))?;
+        self.mem_reserved_gb -= c.mem_gb;
+        for core in c.cgroup_cores {
+            self.release_core(core);
+        }
+        Ok(())
+    }
+
+    fn release_core(&mut self, core: CoreId) {
+        debug_assert_eq!(core.node, self.id);
+        let i = core.idx as usize;
+        debug_assert!(self.busy[i], "double-free of core {core:?}");
+        self.busy[i] = false;
+        self.free_count += 1;
+    }
+
+    /// Allocate `n` cores, preferring a single NUMA domain (paper §5.2:
+    /// inter-core distance hurts parallel efficiency). Returns the chosen
+    /// cores or None if not enough are free anywhere.
+    pub fn alloc_cores(&mut self, n: u32) -> Option<Vec<CoreId>> {
+        if n == 0 {
+            return Some(vec![]);
+        }
+        if self.free_count < n {
+            return None;
+        }
+        // 1. a NUMA domain with ≥ n free cores (fewest-free-first to reduce
+        //    fragmentation of emptier domains)
+        let mut best: Option<(u32, u32)> = None; // (free_in_domain, domain)
+        for d in 0..self.numa_domains {
+            let free = self.domain_free(d);
+            if free >= n && best.map_or(true, |(bf, _)| free < bf) {
+                best = Some((free, d));
+            }
+        }
+        let mut picked = Vec::with_capacity(n as usize);
+        if let Some((_, d)) = best {
+            let base = d * self.cores_per_numa;
+            for i in 0..self.cores_per_numa {
+                if picked.len() == n as usize {
+                    break;
+                }
+                let idx = (base + i) as usize;
+                if !self.busy[idx] {
+                    picked.push(idx);
+                }
+            }
+        } else {
+            // 2. spill across domains, densest domains first
+            let mut domains: Vec<u32> = (0..self.numa_domains).collect();
+            domains.sort_by_key(|&d| std::cmp::Reverse(self.domain_free(d)));
+            'outer: for d in domains {
+                let base = d * self.cores_per_numa;
+                for i in 0..self.cores_per_numa {
+                    if picked.len() == n as usize {
+                        break 'outer;
+                    }
+                    let idx = (base + i) as usize;
+                    if !self.busy[idx] {
+                        picked.push(idx);
+                    }
+                }
+            }
+        }
+        debug_assert_eq!(picked.len(), n as usize);
+        let cores: Vec<CoreId> = picked
+            .into_iter()
+            .map(|idx| {
+                self.busy[idx] = true;
+                CoreId { node: self.id, idx: idx as u32 }
+            })
+            .collect();
+        self.free_count -= n;
+        Some(cores)
+    }
+
+    /// AOE step 1: put `cores` into the container's cgroup.
+    pub fn cgroup_assign(&mut self, t: TrajId, cores: Vec<CoreId>) -> Result<(), String> {
+        let c = self
+            .containers
+            .get_mut(&t)
+            .ok_or_else(|| format!("no container for {t:?}"))?;
+        debug_assert!(c.cgroup_cores.is_empty(), "cgroup already populated");
+        c.cgroup_cores = cores;
+        Ok(())
+    }
+
+    /// AOE step 3: process exited — reclaim the cgroup's cores.
+    pub fn cgroup_reclaim(&mut self, t: TrajId) -> Result<Vec<CoreId>, String> {
+        let cores = {
+            let c = self
+                .containers
+                .get_mut(&t)
+                .ok_or_else(|| format!("no container for {t:?}"))?;
+            std::mem::take(&mut c.cgroup_cores)
+        };
+        for &core in &cores {
+            self.release_core(core);
+        }
+        Ok(cores)
+    }
+
+    fn domain_free(&self, d: u32) -> u32 {
+        let base = (d * self.cores_per_numa) as usize;
+        (0..self.cores_per_numa as usize)
+            .filter(|&i| !self.busy[base + i])
+            .count() as u32
+    }
+
+    /// How many of the picked cores sit in one NUMA domain (test/metric aid).
+    pub fn numa_spread(&self, cores: &[CoreId]) -> usize {
+        let mut domains: Vec<u32> = cores
+            .iter()
+            .map(|c| c.idx / self.cores_per_numa)
+            .collect();
+        domains.sort_unstable();
+        domains.dedup();
+        domains.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn node() -> CpuNode {
+        CpuNode::new(NodeId(0), 2, 8, 64) // 16 cores, 2 NUMA, 64 GiB
+    }
+
+    #[test]
+    fn container_memory_accounting() {
+        let mut n = node();
+        n.create_container(TrajId(1), 40).unwrap();
+        assert_eq!(n.free_mem_gb(), 24);
+        assert!(n.create_container(TrajId(2), 30).is_err());
+        n.create_container(TrajId(2), 24).unwrap();
+        assert_eq!(n.free_mem_gb(), 0);
+        n.destroy_container(TrajId(1)).unwrap();
+        assert_eq!(n.free_mem_gb(), 40);
+        assert!(n.destroy_container(TrajId(1)).is_err());
+    }
+
+    #[test]
+    fn duplicate_container_rejected() {
+        let mut n = node();
+        n.create_container(TrajId(1), 1).unwrap();
+        assert!(n.create_container(TrajId(1), 1).is_err());
+    }
+
+    #[test]
+    fn cores_prefer_single_numa() {
+        let mut n = node();
+        let cores = n.alloc_cores(8).unwrap();
+        assert_eq!(cores.len(), 8);
+        assert_eq!(n.numa_spread(&cores), 1, "should fit one domain");
+        assert_eq!(n.free_cores(), 8);
+    }
+
+    #[test]
+    fn cores_spill_when_fragmented() {
+        let mut n = node();
+        let _held = n.alloc_cores(4).unwrap(); // domain 0 now has 4 free
+        let wide = n.alloc_cores(10).unwrap(); // needs both domains
+        assert_eq!(wide.len(), 10);
+        assert_eq!(n.numa_spread(&wide), 2);
+        assert_eq!(n.free_cores(), 2);
+    }
+
+    #[test]
+    fn alloc_fails_when_exhausted() {
+        let mut n = node();
+        assert!(n.alloc_cores(17).is_none());
+        let _all = n.alloc_cores(16).unwrap();
+        assert!(n.alloc_cores(1).is_none());
+        assert_eq!(n.free_cores(), 0);
+    }
+
+    #[test]
+    fn aoe_cycle_assign_reclaim() {
+        let mut n = node();
+        n.create_container(TrajId(7), 4).unwrap();
+        let cores = n.alloc_cores(4).unwrap();
+        n.cgroup_assign(TrajId(7), cores).unwrap();
+        assert_eq!(n.free_cores(), 12);
+        let reclaimed = n.cgroup_reclaim(TrajId(7)).unwrap();
+        assert_eq!(reclaimed.len(), 4);
+        assert_eq!(n.free_cores(), 16);
+        // between actions the container holds no cores — Breakdown achieved
+        assert!(n.containers[&TrajId(7)].cgroup_cores.is_empty());
+    }
+
+    #[test]
+    fn destroy_reclaims_leaked_cores() {
+        let mut n = node();
+        n.create_container(TrajId(9), 4).unwrap();
+        let cores = n.alloc_cores(6).unwrap();
+        n.cgroup_assign(TrajId(9), cores).unwrap();
+        n.destroy_container(TrajId(9)).unwrap();
+        assert_eq!(n.free_cores(), 16);
+    }
+
+    #[test]
+    fn fewest_free_domain_chosen_first() {
+        let mut n = node();
+        let a = n.alloc_cores(6).unwrap(); // domain X: 2 free
+        assert_eq!(n.numa_spread(&a), 1);
+        // a 2-core request should pack into the 2-free domain, not break
+        // open the untouched one
+        let b = n.alloc_cores(2).unwrap();
+        assert_eq!(
+            b[0].idx / n.cores_per_numa,
+            a[0].idx / n.cores_per_numa,
+            "should pack into the partially-used domain"
+        );
+    }
+}

@@ -1,0 +1,15 @@
+//! Simulated external-resource substrates.
+//!
+//! The paper evaluates on a production testbed (15 CPU nodes, 5 GPU nodes,
+//! quota-limited third-party APIs). These modules are the from-scratch
+//! substitutes (DESIGN.md §2): state machines faithful to what the resource
+//! managers manipulate, plus latency/failure models calibrated to the
+//! paper's reported characteristics.
+
+pub mod api;
+pub mod cpu;
+pub mod gpu;
+
+pub use api::{ApiEndpoint, ApiEndpointSpec, ApiOutcome};
+pub use cpu::{Container, CoreId, CpuLatency, CpuNode, NodeId};
+pub use gpu::{ChunkRef, GpuAlloc, GpuCluster, GpuNode, GpuNodeId, RestoreModel};

@@ -1,0 +1,182 @@
+//! Typed experiment configuration with JSON loading.
+//!
+//! The launcher (`arl-tangram` binary) reads an experiment description —
+//! cluster scale, workloads, batch/steps, backend — from a JSON file or CLI
+//! flags, so deployments are reproducible artifacts rather than shell
+//! one-liners.
+
+use crate::baselines::K8sCfg;
+use crate::coordinator::{RunCfg, TangramCfg};
+use crate::rollout::workloads::CatalogCfg;
+use crate::sim::SimDur;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+
+/// Which resource-management policy to deploy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    Tangram,
+    K8s,
+    StaticGpu,
+    Serverless,
+    Unmanaged,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "tangram" => BackendKind::Tangram,
+            "k8s" => BackendKind::K8s,
+            "static" | "sglang" => BackendKind::StaticGpu,
+            "serverless" => BackendKind::Serverless,
+            "unmanaged" => BackendKind::Unmanaged,
+            other => bail!("unknown backend {other}"),
+        })
+    }
+}
+
+/// Full experiment description.
+#[derive(Debug, Clone)]
+pub struct ExperimentCfg {
+    pub backend: BackendKind,
+    pub workloads: Vec<String>,
+    pub catalog: CatalogCfg,
+    pub run: RunCfg,
+}
+
+impl Default for ExperimentCfg {
+    fn default() -> Self {
+        ExperimentCfg {
+            backend: BackendKind::Tangram,
+            workloads: vec!["coding".into()],
+            catalog: CatalogCfg::default(),
+            run: RunCfg::default(),
+        }
+    }
+}
+
+impl ExperimentCfg {
+    /// Load from a JSON file; unknown keys are rejected to catch typos.
+    pub fn from_json(text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow!("config: {e}"))?;
+        let obj = j.as_obj().ok_or_else(|| anyhow!("config must be an object"))?;
+        let mut cfg = ExperimentCfg::default();
+        for (k, v) in obj {
+            match k.as_str() {
+                "backend" => {
+                    cfg.backend = BackendKind::parse(
+                        v.as_str().ok_or_else(|| anyhow!("backend must be a string"))?,
+                    )?
+                }
+                "workloads" => {
+                    cfg.workloads = v
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("workloads must be an array"))?
+                        .iter()
+                        .map(|w| {
+                            w.as_str()
+                                .map(String::from)
+                                .ok_or_else(|| anyhow!("workload must be a string"))
+                        })
+                        .collect::<Result<_>>()?
+                }
+                "batch" => cfg.run.batch = need_u64(v, k)? as usize,
+                "steps" => cfg.run.steps = need_u64(v, k)? as u32,
+                "seed" => cfg.run.seed = need_u64(v, k)?,
+                "sample_every_secs" => {
+                    cfg.run.sample_every = SimDur::from_secs(need_u64(v, k)?)
+                }
+                "cpu_nodes" => cfg.catalog.cpu_nodes = need_u64(v, k)? as u32,
+                "cores_per_node" => cfg.catalog.cores_per_node = need_u64(v, k)? as u32,
+                "gpu_nodes" => cfg.catalog.gpu_nodes = need_u64(v, k)? as u32,
+                "n_teachers" => cfg.catalog.n_teachers = need_u64(v, k)? as u32,
+                other => bail!("unknown config key '{other}'"),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.workloads.is_empty() {
+            bail!("no workloads configured");
+        }
+        for w in &self.workloads {
+            if !matches!(w.as_str(), "coding" | "deepsearch" | "mopd") {
+                bail!("unknown workload '{w}'");
+            }
+        }
+        if self.run.batch == 0 || self.run.steps == 0 {
+            bail!("batch and steps must be positive");
+        }
+        if self.catalog.cpu_nodes == 0 || self.catalog.gpu_nodes == 0 {
+            bail!("cluster must have nodes");
+        }
+        Ok(())
+    }
+
+    /// Tangram deployment matching the catalog scale.
+    pub fn tangram_cfg(&self) -> TangramCfg {
+        TangramCfg {
+            cpu_nodes: self.catalog.cpu_nodes,
+            numa_per_node: 2,
+            cores_per_numa: (self.catalog.cores_per_node / 2).max(1),
+            gpu_nodes: self.catalog.gpu_nodes,
+            ..TangramCfg::default()
+        }
+    }
+
+    pub fn k8s_cfg(&self) -> K8sCfg {
+        K8sCfg {
+            nodes: self.catalog.cpu_nodes,
+            cores_per_node: self.catalog.cores_per_node,
+            ..K8sCfg::default()
+        }
+    }
+}
+
+fn need_u64(v: &Json, key: &str) -> Result<u64> {
+    v.as_u64().ok_or_else(|| anyhow!("'{key}' must be a non-negative integer"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = ExperimentCfg::from_json(
+            r#"{
+                "backend": "k8s",
+                "workloads": ["coding", "mopd"],
+                "batch": 256,
+                "steps": 3,
+                "seed": 9,
+                "cpu_nodes": 3,
+                "cores_per_node": 128,
+                "gpu_nodes": 2
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.backend, BackendKind::K8s);
+        assert_eq!(cfg.workloads, vec!["coding", "mopd"]);
+        assert_eq!(cfg.run.batch, 256);
+        assert_eq!(cfg.catalog.cores_per_node, 128);
+        assert_eq!(cfg.tangram_cfg().cores_per_numa, 64);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_values() {
+        assert!(ExperimentCfg::from_json(r#"{"nope": 1}"#).is_err());
+        assert!(ExperimentCfg::from_json(r#"{"backend": "magic"}"#).is_err());
+        assert!(ExperimentCfg::from_json(r#"{"workloads": ["x"]}"#).is_err());
+        assert!(ExperimentCfg::from_json(r#"{"batch": 0}"#).is_err());
+        assert!(ExperimentCfg::from_json(r#"{"batch": -3}"#).is_err());
+    }
+
+    #[test]
+    fn defaults_are_valid() {
+        ExperimentCfg::default().validate().unwrap();
+        assert!(BackendKind::parse("sglang").is_ok());
+    }
+}

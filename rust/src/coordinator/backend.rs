@@ -1,0 +1,75 @@
+//! Execution-backend abstraction.
+//!
+//! The DES driver (rollout engine + RL step loop) is policy-agnostic: it
+//! submits actions and reacts to completions. A [`Backend`] decides *when*
+//! each action starts, with how many units, and at what overhead — this is
+//! where ARL-Tangram and the paper's baselines (Kubernetes pods, static
+//! SGLang services, ServerlessLLM, fixed DoP) differ.
+
+use crate::action::{Action, ActionId, TrajId};
+use crate::sim::{SimDur, SimTime};
+
+/// An action the backend has decided to start now.
+#[derive(Debug, Clone)]
+pub struct Started {
+    pub action: ActionId,
+    /// Setup/restore charged before execution (Table 1 "Sys. Overhead").
+    pub overhead: SimDur,
+    /// Pure execution duration of this attempt.
+    pub exec: SimDur,
+    /// Units of the key resource granted.
+    pub units: u64,
+}
+
+/// What to do when an attempt finishes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Attempt succeeded — record and advance the trajectory.
+    Done,
+    /// Attempt failed transiently — resubmit (driver increments retries).
+    Retry,
+    /// Attempt failed terminally — the trajectory is invalid.
+    Failed,
+}
+
+/// Pluggable resource-management policy under the common rollout driver.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+
+    /// A trajectory is starting; reserve its environment (container memory /
+    /// pod). `Err` ⇒ cannot start yet (driver retries on the next
+    /// completion).
+    fn traj_start(
+        &mut self,
+        now: SimTime,
+        traj: TrajId,
+        mem_gb: u64,
+        first_cpu_min: Option<u32>,
+    ) -> Result<(), String>;
+
+    /// Trajectory finished (or was abandoned); release its environment.
+    fn traj_end(&mut self, now: SimTime, traj: TrajId);
+
+    /// Enqueue one action (also used for retries).
+    fn submit(&mut self, now: SimTime, action: &Action);
+
+    /// An attempt finished executing; release resources and judge it.
+    fn on_complete(&mut self, now: SimTime, action: &Action) -> Verdict;
+
+    /// Collect actions that can start now (called after submits/completions
+    /// and timed wakeups).
+    fn drain_started(&mut self, now: SimTime) -> Vec<Started>;
+
+    /// Earliest future instant at which the backend wants a tick (quota
+    /// window rolls, retry backoffs). The driver schedules it.
+    fn next_wakeup(&self, now: SimTime) -> Option<SimTime>;
+
+    /// Timed wakeup.
+    fn tick(&mut self, now: SimTime);
+
+    /// Named utilization gauges for Fig. 3(b)-style sampling.
+    fn utilization(&self) -> Vec<(String, f64)>;
+
+    /// GPUs/CPUs provisioned (for the resource-saving reports).
+    fn provisioned(&self) -> Vec<(String, u64)>;
+}

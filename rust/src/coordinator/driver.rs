@@ -1,0 +1,370 @@
+//! Discrete-event experiment driver.
+//!
+//! Runs one or more RL tasks (workloads) through a pluggable [`Backend`]
+//! under the virtual clock, reproducing the paper's training loop: each
+//! step, a batch of trajectories rolls out (LLM generation interleaved with
+//! external actions on the backend), then the training phase runs on the
+//! internal GPU cluster, then the next step begins. Collects [`Metrics`].
+
+use super::backend::{Backend, Verdict};
+use crate::action::{Action, ActionId, ActionKind, ActionSpec, ActionState, TrajId};
+use crate::metrics::{ActionRecord, Metrics, StepRecord, TrajRecord, UtilSample};
+use crate::rollout::workloads::Catalog;
+use crate::rollout::{Phase, Workload};
+use crate::sim::{Engine, SimDur, SimTime};
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+/// Experiment-run parameters.
+#[derive(Debug, Clone)]
+pub struct RunCfg {
+    /// Trajectories per step (the paper's "RL batch size" under GRPO).
+    pub batch: usize,
+    pub steps: u32,
+    pub seed: u64,
+    /// Utilization sampling period.
+    pub sample_every: SimDur,
+    /// Max transparent retries per action before it fails terminally.
+    pub max_api_retries: u32,
+    /// Max restarts of a trajectory that had a terminally-failed action.
+    pub max_traj_restarts: u32,
+}
+
+impl Default for RunCfg {
+    fn default() -> Self {
+        RunCfg {
+            batch: 128,
+            steps: 2,
+            seed: 42,
+            sample_every: SimDur::from_secs(5),
+            max_api_retries: 3,
+            max_traj_restarts: 2,
+        }
+    }
+}
+
+#[derive(Debug)]
+enum Ev {
+    StepStart(usize),
+    TrajStart(TrajId),
+    GenDone(TrajId),
+    ActionDone(ActionId),
+    Wakeup,
+    Sample,
+}
+
+struct TrajRt {
+    plan: crate::rollout::TrajectoryPlan,
+    wl: usize,
+    phase: usize,
+    started: SimTime,
+    gen: SimDur,
+    tool: SimDur,
+    reward: SimDur,
+    restarts: u32,
+    failed: bool,
+    env_bound: bool,
+}
+
+struct WlState {
+    workload: Workload,
+    step: u32,
+    remaining: usize,
+    step_started: SimTime,
+    done: bool,
+}
+
+struct Driver<'a> {
+    backend: &'a mut dyn Backend,
+    cat: &'a Catalog,
+    cfg: &'a RunCfg,
+    eng: Engine<Ev>,
+    metrics: Metrics,
+    rng: Rng,
+    actions: HashMap<ActionId, Action>,
+    /// (overhead, exec) of the in-flight attempt
+    attempt: HashMap<ActionId, (SimDur, SimDur)>,
+    trajs: HashMap<TrajId, TrajRt>,
+    wls: Vec<WlState>,
+    next_action: u64,
+    next_traj: u64,
+    /// earliest already-scheduled wakeup (dedup — without this, every pump
+    /// under a waiting backend would enqueue another Wakeup event and the
+    /// event count explodes quadratically)
+    wakeup_at: Option<SimTime>,
+}
+
+/// Run the experiment; returns collected metrics.
+pub fn run(
+    backend: &mut dyn Backend,
+    cat: &Catalog,
+    workloads: &[Workload],
+    cfg: &RunCfg,
+) -> Metrics {
+    let mut d = Driver {
+        backend,
+        cat,
+        cfg,
+        eng: Engine::new(),
+        metrics: Metrics::new(),
+        rng: Rng::new(cfg.seed),
+        actions: HashMap::new(),
+        attempt: HashMap::new(),
+        trajs: HashMap::new(),
+        wls: workloads
+            .iter()
+            .map(|w| WlState {
+                workload: w.clone(),
+                step: 0,
+                remaining: 0,
+                step_started: SimTime::ZERO,
+                done: false,
+            })
+            .collect(),
+        next_action: 0,
+        next_traj: 0,
+        wakeup_at: None,
+    };
+    for wl in 0..d.wls.len() {
+        d.eng.schedule_at(SimTime::ZERO, Ev::StepStart(wl));
+    }
+    d.eng.schedule_in(cfg.sample_every, Ev::Sample);
+    while let Some((now, ev)) = d.eng.next() {
+        d.handle(now, ev);
+    }
+    d.metrics
+}
+
+impl Driver<'_> {
+    fn handle(&mut self, now: SimTime, ev: Ev) {
+        match ev {
+            Ev::StepStart(wl) => self.step_start(now, wl),
+            Ev::TrajStart(t) => self.traj_start(now, t),
+            Ev::GenDone(t) => {
+                if self.trajs.contains_key(&t) {
+                    self.advance(now, t);
+                }
+            }
+            Ev::ActionDone(id) => self.action_done(now, id),
+            Ev::Wakeup => {
+                if self.wakeup_at == Some(now) {
+                    self.wakeup_at = None;
+                }
+                self.backend.tick(now);
+                self.pump(now);
+            }
+            Ev::Sample => {
+                for (name, value) in self.backend.utilization() {
+                    self.metrics.util.push(UtilSample { at: now, name, value });
+                }
+                if !self.wls.iter().all(|w| w.done) {
+                    self.eng.schedule_in(self.cfg.sample_every, Ev::Sample);
+                }
+            }
+        }
+    }
+
+    fn step_start(&mut self, now: SimTime, wl: usize) {
+        let state = &mut self.wls[wl];
+        state.step_started = now;
+        state.remaining = self.cfg.batch;
+        for _ in 0..self.cfg.batch {
+            let t = TrajId(self.next_traj);
+            self.next_traj += 1;
+            let plan = self.wls[wl].workload.gen_trajectory(self.cat, &mut self.rng);
+            self.trajs.insert(
+                t,
+                TrajRt {
+                    plan,
+                    wl,
+                    phase: 0,
+                    started: now,
+                    gen: SimDur::ZERO,
+                    tool: SimDur::ZERO,
+                    reward: SimDur::ZERO,
+                    restarts: 0,
+                    failed: false,
+                    env_bound: false,
+                },
+            );
+            self.eng.schedule_at(now, Ev::TrajStart(t));
+        }
+    }
+
+    fn traj_start(&mut self, now: SimTime, t: TrajId) {
+        let rt = self.trajs.get_mut(&t).unwrap();
+        if !rt.env_bound {
+            let first_cpu = rt.plan.first_cpu_min(self.cat.cpu_cores);
+            let needs_env = first_cpu.is_some();
+            if needs_env {
+                match self.backend.traj_start(now, t, rt.plan.mem_gb, first_cpu) {
+                    Ok(()) => rt.env_bound = true,
+                    Err(_) => {
+                        // environment cluster full — retry shortly
+                        self.eng.schedule_in(SimDur::from_secs(5), Ev::TrajStart(t));
+                        return;
+                    }
+                }
+            } else {
+                let _ = self.backend.traj_start(now, t, rt.plan.mem_gb, None);
+                rt.env_bound = true;
+            }
+        }
+        self.advance(now, t);
+    }
+
+    /// Move a trajectory forward from its current phase.
+    fn advance(&mut self, now: SimTime, t: TrajId) {
+        let rt = self.trajs.get_mut(&t).unwrap();
+        if rt.phase >= rt.plan.phases.len() {
+            self.finish_traj(now, t);
+            return;
+        }
+        match &rt.plan.phases[rt.phase] {
+            Phase::Gen(d) => {
+                let d = *d;
+                rt.gen += d;
+                rt.phase += 1;
+                self.eng.schedule_in(d, Ev::GenDone(t));
+            }
+            Phase::Act(tpl) => {
+                let id = ActionId(self.next_action);
+                self.next_action += 1;
+                let spec = ActionSpec {
+                    task: rt.plan.task,
+                    trajectory: t,
+                    kind: tpl.kind,
+                    cost: tpl.cost.clone(),
+                    key_resource: tpl.key_resource,
+                    elasticity: tpl.elasticity.clone(),
+                    profiled_dur: tpl.profiled_dur,
+                    service: tpl.service,
+                    true_dur: tpl.true_dur,
+                };
+                rt.phase += 1;
+                let a = Action::new(id, spec, now);
+                self.backend.submit(now, &a);
+                self.actions.insert(id, a);
+                self.pump(now);
+            }
+        }
+    }
+
+    fn finish_traj(&mut self, now: SimTime, t: TrajId) {
+        let rt = self.trajs.remove(&t).unwrap();
+        self.backend.traj_end(now, t);
+        self.metrics.trajectories.push(TrajRecord {
+            id: t,
+            task: rt.plan.task,
+            started: rt.started,
+            finished: now,
+            gen_dur: rt.gen,
+            tool_dur: rt.tool,
+            reward_dur: rt.reward,
+            failed: rt.failed,
+            restarts: rt.restarts,
+        });
+        let wl = &mut self.wls[rt.wl];
+        wl.remaining -= 1;
+        if wl.remaining == 0 {
+            self.metrics.steps.push(StepRecord {
+                index: wl.step,
+                rollout_dur: now - wl.step_started,
+                train_dur: wl.workload.train_dur,
+            });
+            wl.step += 1;
+            if wl.step < self.cfg.steps {
+                let at = now + wl.workload.train_dur;
+                let wli = rt.wl;
+                self.eng.schedule_at(at, Ev::StepStart(wli));
+            } else {
+                wl.done = true;
+            }
+        }
+        // resources freed (container teardown) — others may start now
+        self.pump(now);
+    }
+
+    /// Collect backend start decisions and schedule their completions.
+    fn pump(&mut self, now: SimTime) {
+        let started = self.backend.drain_started(now);
+        for s in started {
+            let a = self.actions.get_mut(&s.action).expect("unknown started action");
+            debug_assert_eq!(a.state, ActionState::Waiting);
+            a.state = ActionState::Running;
+            if a.started_at.is_none() {
+                a.started_at = Some(now);
+            }
+            a.allocated_units = s.units;
+            a.overhead += s.overhead;
+            self.attempt.insert(s.action, (s.overhead, s.exec));
+            self.eng.schedule_in(s.overhead + s.exec, Ev::ActionDone(s.action));
+        }
+        if let Some(at) = self.backend.next_wakeup(now) {
+            if at > now && self.wakeup_at.map_or(true, |w| at < w || w <= now) {
+                self.eng.schedule_at(at, Ev::Wakeup);
+                self.wakeup_at = Some(at);
+            }
+        }
+    }
+
+    fn action_done(&mut self, now: SimTime, id: ActionId) {
+        let verdict = self.backend.on_complete(now, &self.actions[&id]);
+        let retries = self.actions[&id].retry_count;
+        let effective = match verdict {
+            Verdict::Retry if retries >= self.cfg.max_api_retries => Verdict::Failed,
+            v => v,
+        };
+        match effective {
+            Verdict::Retry => {
+                let a = self.actions.get_mut(&id).unwrap();
+                a.retry_count += 1;
+                a.state = ActionState::Waiting;
+                let snapshot = a.clone();
+                self.backend.submit(now, &snapshot);
+            }
+            Verdict::Done | Verdict::Failed => {
+                let failed = effective == Verdict::Failed;
+                let a = self.actions.remove(&id).unwrap();
+                let (overhead, _exec) = self.attempt.remove(&id).unwrap_or_default();
+                self.metrics.actions.push(ActionRecord {
+                    id,
+                    task: a.spec.task,
+                    trajectory: a.spec.trajectory,
+                    kind: a.spec.kind,
+                    submitted: a.submitted_at,
+                    started: a.started_at.unwrap_or(now),
+                    finished: now,
+                    overhead,
+                    units: a.allocated_units,
+                    retries: a.retry_count,
+                    failed,
+                });
+                if let Some(rt) = self.trajs.get_mut(&a.spec.trajectory) {
+                    let act_dur = now - a.submitted_at;
+                    match a.spec.kind {
+                        ActionKind::RewardCpu | ActionKind::RewardModel => rt.reward += act_dur,
+                        _ => rt.tool += act_dur,
+                    }
+                    if failed {
+                        if rt.restarts < self.cfg.max_traj_restarts {
+                            // ineffective trajectory — roll it out again
+                            // (paper §6.2: failures reduce the pass rate and
+                            // slow the step)
+                            rt.restarts += 1;
+                            rt.phase = 0;
+                            self.eng.schedule_at(now, Ev::TrajStart(a.spec.trajectory));
+                        } else {
+                            rt.failed = true;
+                            rt.phase = rt.plan.phases.len();
+                            self.advance(now, a.spec.trajectory);
+                        }
+                    } else {
+                        self.advance(now, a.spec.trajectory);
+                    }
+                }
+            }
+        }
+        self.pump(now);
+    }
+}

@@ -1,0 +1,427 @@
+//! The ARL-Tangram coordinator backend: unified action queue + elastic
+//! scheduler + heterogeneous resource managers (paper Fig. 4).
+//!
+//! Routing: CPU actions go to the per-node queue of their trajectory's
+//! bound node (per-node scheduling, §5.2); GPU service actions go to the
+//! cluster-wide GPU queue; API actions go to per-endpoint queues under
+//! Basic-manager admission. Every queue is FCFS and scheduled with the same
+//! elastic algorithm (§4.2).
+
+use super::backend::{Backend, Started, Verdict};
+use crate::action::{Action, ActionId, ResourceKindId, TrajId};
+use crate::cluster::api::{ApiEndpoint, ApiOutcome};
+use crate::cluster::cpu::{CpuLatency, NodeId};
+use crate::managers::{BasicManager, CpuManager, GpuManager, ServiceSpec};
+use crate::cluster::gpu::RestoreModel;
+use crate::rollout::workloads::Catalog;
+use crate::scheduler::{ElasticScheduler, ResourceState, SchedulerConfig};
+use crate::sim::{SimDur, SimTime};
+use std::collections::{HashMap, HashSet};
+
+/// Cluster-scale knobs for the Tangram deployment.
+#[derive(Debug, Clone)]
+pub struct TangramCfg {
+    pub cpu_nodes: u32,
+    pub numa_per_node: u32,
+    pub cores_per_numa: u32,
+    pub node_mem_gb: u64,
+    pub gpu_nodes: u32,
+    pub sched: SchedulerConfig,
+    pub cpu_latency: CpuLatency,
+    pub restore: RestoreModel,
+    pub max_api_retries: u32,
+}
+
+impl Default for TangramCfg {
+    fn default() -> Self {
+        TangramCfg {
+            cpu_nodes: 5,
+            numa_per_node: 2,
+            cores_per_numa: 128,
+            node_mem_gb: 2400,
+            gpu_nodes: 5,
+            sched: SchedulerConfig::default(),
+            cpu_latency: CpuLatency::default(),
+            restore: RestoreModel::default(),
+            max_api_retries: 3,
+        }
+    }
+}
+
+enum Pool {
+    CpuNode(NodeId),
+    Gpu,
+    Api(ResourceKindId),
+}
+
+pub struct TangramBackend {
+    #[allow(dead_code)]
+    cfg: TangramCfg,
+    cpu_kind: ResourceKindId,
+    gpu_kind: ResourceKindId,
+    pub cpu: CpuManager,
+    pub gpu: GpuManager,
+    api_mgrs: HashMap<ResourceKindId, BasicManager>,
+    endpoints: HashMap<ResourceKindId, ApiEndpoint>,
+    sched: ElasticScheduler,
+    cpu_queues: HashMap<NodeId, Vec<Action>>,
+    gpu_queue: Vec<Action>,
+    api_queues: HashMap<ResourceKindId, Vec<Action>>,
+    /// trajectories that have already run their first CPU action (container
+    /// creation charged once)
+    containers_created: HashSet<TrajId>,
+    /// outcome of the in-flight attempt per API action
+    api_outcomes: HashMap<ActionId, ApiOutcome>,
+    /// scheduling-decision count + cumulative wall time (hot-path metric)
+    pub sched_invocations: u64,
+    pub sched_wall: std::time::Duration,
+}
+
+impl TangramBackend {
+    pub fn new(cat: &Catalog, cfg: TangramCfg) -> Self {
+        let cpu = CpuManager::new(
+            cfg.cpu_nodes,
+            cfg.numa_per_node,
+            cfg.cores_per_numa,
+            cfg.node_mem_gb,
+            cfg.cpu_latency.clone(),
+        );
+        let services: Vec<ServiceSpec> = cat.services.clone();
+        let mut gpu = GpuManager::new(cfg.gpu_nodes, cfg.restore.clone(), services);
+        gpu.prewarm(SimTime::ZERO);
+        let mut api_mgrs = HashMap::new();
+        let mut endpoints = HashMap::new();
+        let mut api_queues = HashMap::new();
+        for (i, (kind, spec)) in cat.api.iter().enumerate() {
+            // admit to ~90% of the provider's hard limit: the margin absorbs
+            // in-flight accounting races and keeps the provider out of its
+            // load-shedding regime (where latency inflates and errors grow)
+            let limit = ((spec.max_concurrency as f64 * 0.9) as u64).max(1);
+            api_mgrs.insert(*kind, BasicManager::concurrency(&spec.name, limit));
+            endpoints.insert(*kind, ApiEndpoint::new(spec.clone(), 0x5eed + i as u64));
+            api_queues.insert(*kind, Vec::new());
+        }
+        let cpu_queues = cpu.node_ids().into_iter().map(|n| (n, Vec::new())).collect();
+        TangramBackend {
+            sched: ElasticScheduler::new(cfg.sched.clone()),
+            cfg,
+            cpu_kind: cat.cpu_cores,
+            gpu_kind: cat.gpu_units,
+            cpu,
+            gpu,
+            api_mgrs,
+            endpoints,
+            cpu_queues,
+            gpu_queue: Vec::new(),
+            api_queues,
+            containers_created: HashSet::new(),
+            api_outcomes: HashMap::new(),
+            sched_invocations: 0,
+            sched_wall: std::time::Duration::ZERO,
+        }
+    }
+
+    fn classify(&self, a: &Action) -> Pool {
+        if a.spec.cost.dim(self.cpu_kind).min_units() > 0 {
+            let node = self
+                .cpu
+                .binding(a.spec.trajectory)
+                .expect("CPU action for unbound trajectory");
+            Pool::CpuNode(node)
+        } else if a.spec.cost.dim(self.gpu_kind).min_units() > 0 {
+            Pool::Gpu
+        } else {
+            let kind = a
+                .spec
+                .cost
+                .iter()
+                .find(|(_, d)| d.min_units() > 0)
+                .map(|(k, _)| k)
+                .expect("action with empty cost");
+            Pool::Api(kind)
+        }
+    }
+
+    /// Run the elastic scheduler over one queue and apply its decisions.
+    fn schedule_pool(&mut self, now: SimTime, pool: &Pool, out: &mut Vec<Started>) {
+        match pool {
+            Pool::CpuNode(node) => {
+                let node = *node;
+                let queue = &self.cpu_queues[&node];
+                if queue.is_empty() {
+                    return;
+                }
+                let mut decisions = {
+                    let state = self.cpu.node_state(node);
+                    let mut map: HashMap<ResourceKindId, &dyn ResourceState> = HashMap::new();
+                    map.insert(self.cpu_kind, &state);
+                    let refs: Vec<&Action> = queue.iter().collect();
+                    let t0 = std::time::Instant::now();
+                    let d = self.sched.schedule(now, &refs, &map);
+                    self.sched_wall += t0.elapsed();
+                    self.sched_invocations += 1;
+                    d
+                };
+                // Liveness guard: "wait for more capacity" is only sound
+                // when something is running that will free capacity. With an
+                // idle node, force the queue head at its minimum.
+                if decisions.is_empty()
+                    && self.cpu.node_state(node).running_completions().is_empty()
+                {
+                    if let Some(head) = self.cpu_queues[&node].first() {
+                        let units = head.spec.cost.dim(self.cpu_kind).min_units();
+                        let mut alloc = head.spec.cost.min_vector();
+                        alloc.set(self.cpu_kind, units);
+                        decisions.push(crate::scheduler::Decision {
+                            action: head.id,
+                            units,
+                            alloc,
+                        });
+                    }
+                }
+                for dec in decisions {
+                    let q = self.cpu_queues.get_mut(&node).unwrap();
+                    let idx = match q.iter().position(|a| a.id == dec.action) {
+                        Some(i) => i,
+                        None => continue,
+                    };
+                    let a = q[idx].clone();
+                    let first = self.containers_created.insert(a.spec.trajectory);
+                    let exec = a.spec.exec_dur(dec.units);
+                    // overhead known only after allocate; estimate for the
+                    // expected-done bookkeeping, then patch below
+                    let est_done = now + exec;
+                    match self.cpu.allocate(
+                        a.id,
+                        a.spec.trajectory,
+                        dec.units as u32,
+                        first,
+                        est_done,
+                    ) {
+                        Ok(lease) => {
+                            self.cpu_queues.get_mut(&node).unwrap().remove(idx);
+                            out.push(Started {
+                                action: a.id,
+                                overhead: lease.overhead,
+                                exec,
+                                units: dec.units,
+                            });
+                        }
+                        Err(_) => {
+                            // topology raced; undo the first-action marker
+                            if first {
+                                self.containers_created.remove(&a.spec.trajectory);
+                            }
+                        }
+                    }
+                }
+            }
+            Pool::Gpu => {
+                if self.gpu_queue.is_empty() {
+                    return;
+                }
+                let mut decisions = {
+                    let mut map: HashMap<ResourceKindId, &dyn ResourceState> = HashMap::new();
+                    map.insert(self.gpu_kind, &self.gpu);
+                    let refs: Vec<&Action> = self.gpu_queue.iter().collect();
+                    let t0 = std::time::Instant::now();
+                    let d = self.sched.schedule(now, &refs, &map);
+                    self.sched_wall += t0.elapsed();
+                    self.sched_invocations += 1;
+                    d
+                };
+                // Liveness guard (see CPU pool): an idle cluster must not
+                // "wait" — force the head at its minimum legal DoP.
+                if decisions.is_empty() && self.gpu.running_completions().is_empty() {
+                    if let Some(head) = self.gpu_queue.first() {
+                        let units = head.spec.cost.dim(self.gpu_kind).min_units();
+                        let mut alloc = head.spec.cost.min_vector();
+                        alloc.set(self.gpu_kind, units);
+                        decisions.push(crate::scheduler::Decision {
+                            action: head.id,
+                            units,
+                            alloc,
+                        });
+                    }
+                }
+                for dec in decisions {
+                    let idx = match self.gpu_queue.iter().position(|a| a.id == dec.action) {
+                        Some(i) => i,
+                        None => continue,
+                    };
+                    let a = self.gpu_queue[idx].clone();
+                    let service = a.spec.service.expect("GPU action without service");
+                    let exec = a.spec.exec_dur(dec.units);
+                    match self.gpu.allocate(a.id, service, dec.units as u8, now + exec) {
+                        Ok(lease) => {
+                            self.gpu_queue.remove(idx);
+                            out.push(Started {
+                                action: a.id,
+                                overhead: lease.overhead,
+                                exec,
+                                units: dec.units,
+                            });
+                        }
+                        Err(_) => {}
+                    }
+                }
+            }
+            Pool::Api(kind) => {
+                let kind = *kind;
+                loop {
+                    let mgr = self.api_mgrs.get_mut(&kind).unwrap();
+                    mgr.tick(now);
+                    let ep = self.endpoints.get_mut(&kind).unwrap();
+                    let q = self.api_queues.get_mut(&kind).unwrap();
+                    if q.is_empty() {
+                        break;
+                    }
+                    // admission: provider concurrency via the Basic manager
+                    // plus the provider's remaining window quota
+                    if mgr.available_units() == 0 || ep.quota_left(now) == 0 {
+                        break;
+                    }
+                    let a = q.remove(0);
+                    let (outcome, dur) = ep.issue(now);
+                    debug_assert_ne!(
+                        outcome,
+                        ApiOutcome::RateLimited,
+                        "admission control must prevent provider 429s"
+                    );
+                    mgr.allocate(a.id, 1, now + dur).expect("admission raced");
+                    self.api_outcomes.insert(a.id, outcome);
+                    out.push(Started { action: a.id, overhead: SimDur::ZERO, exec: dur, units: 1 });
+                }
+            }
+        }
+    }
+
+    fn all_pools(&self) -> Vec<Pool> {
+        let mut pools: Vec<Pool> = self
+            .cpu_queues
+            .keys()
+            .map(|&n| Pool::CpuNode(n))
+            .collect();
+        pools.push(Pool::Gpu);
+        pools.extend(self.api_queues.keys().map(|&k| Pool::Api(k)));
+        pools
+    }
+
+    /// Mean scheduler decision latency (wall-clock, for §Perf).
+    pub fn mean_sched_latency(&self) -> std::time::Duration {
+        if self.sched_invocations == 0 {
+            return std::time::Duration::ZERO;
+        }
+        self.sched_wall / self.sched_invocations as u32
+    }
+}
+
+impl Backend for TangramBackend {
+    fn name(&self) -> &'static str {
+        "arl-tangram"
+    }
+
+    fn traj_start(
+        &mut self,
+        _now: SimTime,
+        traj: TrajId,
+        mem_gb: u64,
+        first_cpu_min: Option<u32>,
+    ) -> Result<(), String> {
+        if let Some(min_cores) = first_cpu_min {
+            self.cpu.bind_trajectory(traj, min_cores, mem_gb)?;
+        }
+        Ok(())
+    }
+
+    fn traj_end(&mut self, _now: SimTime, traj: TrajId) {
+        if self.cpu.binding(traj).is_some() {
+            let _ = self.cpu.release_trajectory(traj);
+            self.containers_created.remove(&traj);
+        }
+    }
+
+    fn submit(&mut self, _now: SimTime, action: &Action) {
+        match self.classify(action) {
+            Pool::CpuNode(n) => self.cpu_queues.get_mut(&n).unwrap().push(action.clone()),
+            Pool::Gpu => self.gpu_queue.push(action.clone()),
+            Pool::Api(k) => self.api_queues.get_mut(&k).unwrap().push(action.clone()),
+        }
+    }
+
+    fn on_complete(&mut self, now: SimTime, action: &Action) -> Verdict {
+        match self.classify(action) {
+            Pool::CpuNode(_) => {
+                self.cpu.complete(action.id).expect("cpu complete");
+                Verdict::Done
+            }
+            Pool::Gpu => {
+                self.gpu.complete(action.id, now).expect("gpu complete");
+                Verdict::Done
+            }
+            Pool::Api(k) => {
+                let outcome = self
+                    .api_outcomes
+                    .remove(&action.id)
+                    .unwrap_or(ApiOutcome::Ok);
+                let mgr = self.api_mgrs.get_mut(&k).unwrap();
+                mgr.complete(action.id, 1);
+                self.endpoints.get_mut(&k).unwrap().finish(outcome);
+                match outcome {
+                    ApiOutcome::Ok => Verdict::Done,
+                    _ if action.spec.true_dur == SimDur::ZERO => Verdict::Failed, // unused guard
+                    _ => {
+                        // transient failure — retry under admission control
+                        // (driver enforces the retry budget)
+                        Verdict::Retry
+                    }
+                }
+            }
+        }
+    }
+
+    fn drain_started(&mut self, now: SimTime) -> Vec<Started> {
+        let mut out = Vec::new();
+        for pool in self.all_pools() {
+            self.schedule_pool(now, &pool, &mut out);
+        }
+        out
+    }
+
+    fn next_wakeup(&self, now: SimTime) -> Option<SimTime> {
+        // quota-gated API queues wake at the next window boundary
+        let mut earliest: Option<SimTime> = None;
+        for (kind, q) in &self.api_queues {
+            if q.is_empty() {
+                continue;
+            }
+            let ep = &self.endpoints[kind];
+            if ep.quota_left(now) == 0 {
+                let w = ep.spec.quota_window.0;
+                let next = SimTime((now.0 / w + 1) * w);
+                earliest = Some(earliest.map_or(next, |e: SimTime| e.min(next)));
+            }
+        }
+        earliest
+    }
+
+    fn tick(&mut self, now: SimTime) {
+        for mgr in self.api_mgrs.values_mut() {
+            mgr.tick(now);
+        }
+    }
+
+    fn utilization(&self) -> Vec<(String, f64)> {
+        vec![
+            ("cpu".into(), self.cpu.utilization()),
+            ("gpu".into(), self.gpu.utilization()),
+        ]
+    }
+
+    fn provisioned(&self) -> Vec<(String, u64)> {
+        vec![
+            ("cpu_cores".into(), self.cpu.total_cores()),
+            ("gpus".into(), self.gpu.total_gpus() as u64),
+        ]
+    }
+}

@@ -1,0 +1,35 @@
+//! ARL-Tangram: action-level external-resource orchestration for agentic RL.
+//!
+//! Reproduction of "ARL-Tangram: Unleash the Resource Efficiency in Agentic
+//! Reinforcement Learning" (CS.DC 2026). The crate implements the paper's
+//! three-layer architecture:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: unified action formulation,
+//!   the elastic action-level scheduler (Algorithms 1–4 of the paper), and
+//!   heterogeneous resource managers (Basic / CPU-AOE / GPU-EOE).
+//! * **Layer 2 (python/compile)** — JAX reward-/policy-model compute graphs,
+//!   AOT-lowered to HLO text artifacts.
+//! * **Layer 1 (python/compile/kernels)** — Pallas kernels called by Layer 2.
+//!
+//! The `runtime` module loads the AOT artifacts via PJRT and executes them
+//! from the Rust hot path, so "GPU reward services" in the simulation run
+//! real model compute.
+
+pub mod action;
+pub mod baselines;
+pub mod bench;
+pub mod cluster;
+pub mod coordinator;
+pub mod managers;
+pub mod metrics;
+pub mod config;
+pub mod rollout;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod testkit;
+pub mod util;
+
+pub fn crate_version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,215 @@
+//! `arl-tangram` — the launcher binary.
+//!
+//! Subcommands:
+//!   run        run an experiment (workloads × backend) in the DES and print
+//!              the metric report; `--config file.json` or flags
+//!   serve      load the AOT artifacts and run a reward-scoring smoke loop
+//!              through the coordinator (PJRT on the hot path)
+//!   version    print build info
+//!
+//! Examples:
+//!   arl-tangram run --workloads coding --backend tangram --batch 256
+//!   arl-tangram run --config experiments/coding.json
+//!   arl-tangram serve --artifacts artifacts
+
+use arl_tangram::action::TaskId;
+use arl_tangram::baselines::{BaselineBackend, ServerlessCfg};
+use arl_tangram::config::{BackendKind, ExperimentCfg};
+use arl_tangram::coordinator::{run, Backend, TangramBackend};
+use arl_tangram::rollout::workloads::{Catalog, Workload, WorkloadKind};
+use arl_tangram::runtime::{PjrtEngine, RewardModel};
+use arl_tangram::util::cli::Args;
+use arl_tangram::util::logging;
+
+fn main() {
+    logging::init_from_env();
+    let mut argv: Vec<String> = std::env::args().collect();
+    let sub = if argv.len() > 1 && !argv[1].starts_with('-') {
+        argv.remove(1)
+    } else {
+        "run".to_string()
+    };
+    let code = match sub.as_str() {
+        "run" => cmd_run(argv),
+        "serve" => cmd_serve(argv),
+        "version" => {
+            println!("arl-tangram {}", arl_tangram::crate_version());
+            0
+        }
+        other => {
+            eprintln!("unknown subcommand '{other}' (expected: run | serve | version)");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cmd_run(argv: Vec<String>) -> i32 {
+    let args = match Args::new("run an agentic-RL resource-management experiment")
+        .opt("config", "", "JSON experiment config (overrides other flags)")
+        .opt("workloads", "coding", "comma list: coding,deepsearch,mopd")
+        .opt("backend", "tangram", "tangram | k8s | static | serverless | unmanaged")
+        .opt("batch", "128", "trajectories per RL step")
+        .opt("steps", "2", "RL steps")
+        .opt("seed", "42", "rng seed")
+        .parse_from(argv)
+    {
+        Ok(a) => a,
+        Err(usage) => {
+            eprintln!("{usage}");
+            return 2;
+        }
+    };
+
+    let cfg = if !args.str("config").is_empty() {
+        match std::fs::read_to_string(args.str("config"))
+            .map_err(anyhow::Error::from)
+            .and_then(|t| ExperimentCfg::from_json(&t))
+        {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("config error: {e}");
+                return 2;
+            }
+        }
+    } else {
+        let mut c = ExperimentCfg::default();
+        c.workloads = args
+            .str("workloads")
+            .split(',')
+            .map(str::trim)
+            .map(String::from)
+            .collect();
+        c.backend = match BackendKind::parse(&args.str("backend")) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        c.run.batch = args.u64("batch") as usize;
+        c.run.steps = args.u64("steps") as u32;
+        c.run.seed = args.u64("seed");
+        if let Err(e) = c.validate() {
+            eprintln!("config error: {e}");
+            return 2;
+        }
+        c
+    };
+
+    let cat = Catalog::build(&cfg.catalog);
+    let wls: Vec<Workload> = cfg
+        .workloads
+        .iter()
+        .enumerate()
+        .map(|(i, w)| {
+            let kind = match w.as_str() {
+                "coding" => WorkloadKind::Coding,
+                "deepsearch" => WorkloadKind::DeepSearch,
+                _ => WorkloadKind::Mopd,
+            };
+            Workload::new(TaskId(i as u32), kind)
+        })
+        .collect();
+
+    let mut tangram;
+    let mut baseline;
+    let backend: &mut dyn Backend = match cfg.backend {
+        BackendKind::Tangram => {
+            tangram = TangramBackend::new(&cat, cfg.tangram_cfg());
+            &mut tangram
+        }
+        BackendKind::K8s => {
+            baseline = BaselineBackend::coding(&cat, cfg.k8s_cfg());
+            &mut baseline
+        }
+        BackendKind::StaticGpu => {
+            baseline = BaselineBackend::mopd_search(&cat);
+            &mut baseline
+        }
+        BackendKind::Serverless => {
+            baseline = BaselineBackend::serverless(
+                &cat,
+                ServerlessCfg { gpu_nodes: cfg.catalog.gpu_nodes, ..ServerlessCfg::default() },
+            );
+            &mut baseline
+        }
+        BackendKind::Unmanaged => {
+            baseline = BaselineBackend::deepsearch(&cat);
+            &mut baseline
+        }
+    };
+
+    let name = backend.name();
+    println!(
+        "running {:?} on {name}: batch={} steps={} seed={}",
+        cfg.workloads, cfg.run.batch, cfg.run.steps, cfg.run.seed
+    );
+    let t = std::time::Instant::now();
+    let m = run(backend, &cat, &wls, &cfg.run);
+    println!("simulated in {:.1}s wall\n", t.elapsed().as_secs_f64());
+    println!("trajectories        : {}", m.trajectories.len());
+    println!("actions             : {} ({} failed, {} retries)", m.actions.len(), m.failed_actions(), m.total_retries());
+    println!("mean ACT            : {:9.2}s (p99 {:.2}s)", m.mean_act(), m.p99_act());
+    let (exec, queue, ovh) = m.act_breakdown();
+    println!("ACT breakdown       : exec {exec:.2}s | queue {queue:.2}s | overhead {ovh:.3}s");
+    println!("mean step duration  : {:9.2}s", m.mean_step_dur());
+    println!("env-active ratio    : {:9.2}", m.mean_active_ratio());
+    for (pool, prov) in backend.provisioned() {
+        println!("provisioned {pool:<8}: {prov:9}");
+    }
+    0
+}
+
+fn cmd_serve(argv: Vec<String>) -> i32 {
+    let args = match Args::new("load artifacts and smoke the PJRT hot path")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("requests", "16", "scoring requests to serve")
+        .parse_from(argv)
+    {
+        Ok(a) => a,
+        Err(usage) => {
+            eprintln!("{usage}");
+            return 2;
+        }
+    };
+    let eng = match PjrtEngine::load(args.str("artifacts")) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("failed to load artifacts: {e}");
+            return 1;
+        }
+    };
+    println!("platform {} | {} artifacts", eng.platform(), eng.meta.artifacts.len());
+    let rm = match RewardModel::init(&eng, 1) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("reward init: {e}");
+            return 1;
+        }
+    };
+    let n = args.u64("requests");
+    let t = std::time::Instant::now();
+    for i in 0..n {
+        let tokens: Vec<i32> = (0..rm.batch * rm.seq).map(|j| ((j as u64 + i) % 64) as i32).collect();
+        let mask = vec![1f32; rm.batch * rm.seq];
+        match rm.score(&tokens, &mask) {
+            Ok(s) => {
+                if i == 0 {
+                    println!("first scores: {s:?}");
+                }
+            }
+            Err(e) => {
+                eprintln!("score failed: {e}");
+                return 1;
+            }
+        }
+    }
+    let dt = t.elapsed().as_secs_f64();
+    println!(
+        "served {n} scoring batches in {dt:.2}s ({:.1} req/s, {:.1}ms median-ish)",
+        n as f64 / dt,
+        dt / n as f64 * 1e3
+    );
+    0
+}

@@ -1,0 +1,185 @@
+//! Basic Resource Manager (paper §5.1).
+//!
+//! For external resources that cannot be scaled up — API concurrency and
+//! request quotas — this manager only *admits* actions so the provider's
+//! limits are never violated (preventing the 429/timeout/retry storms the
+//! unmanaged baseline suffers). Two consumption patterns:
+//!
+//! * **concurrency-based**: at most `limit` actions in flight;
+//! * **quota-based**: at most `limit` admissions per rolling window.
+
+use crate::action::ActionId;
+use crate::scheduler::{BasicOperator, DpOperator, ResourceState};
+use crate::sim::{SimDur, SimTime};
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BasicPattern {
+    Concurrency,
+    Quota { window: SimDur },
+}
+
+/// Admission-control manager for one non-scalable resource kind.
+#[derive(Debug)]
+pub struct BasicManager {
+    pub name: String,
+    pub pattern: BasicPattern,
+    pub limit: u64,
+    in_flight: u64,
+    window_start: SimTime,
+    window_used: u64,
+    /// expected completions + held units of admitted actions (Alg 2 seed)
+    active: HashMap<ActionId, (SimTime, u64)>,
+    now: SimTime,
+}
+
+impl BasicManager {
+    pub fn concurrency(name: &str, limit: u64) -> Self {
+        BasicManager {
+            name: name.into(),
+            pattern: BasicPattern::Concurrency,
+            limit,
+            in_flight: 0,
+            window_start: SimTime::ZERO,
+            window_used: 0,
+            active: HashMap::new(),
+            now: SimTime::ZERO,
+        }
+    }
+
+    pub fn quota(name: &str, limit: u64, window: SimDur) -> Self {
+        BasicManager {
+            pattern: BasicPattern::Quota { window },
+            ..Self::concurrency(name, limit)
+        }
+    }
+
+    /// Advance the manager's clock (rolls quota windows).
+    pub fn tick(&mut self, now: SimTime) {
+        self.now = now;
+        if let BasicPattern::Quota { window } = self.pattern {
+            if now - self.window_start >= window {
+                let w = window.0;
+                self.window_start = SimTime((now.0 / w) * w);
+                self.window_used = 0;
+            }
+        }
+    }
+
+    fn slots_free(&self) -> u64 {
+        match self.pattern {
+            BasicPattern::Concurrency => self.limit.saturating_sub(self.in_flight),
+            BasicPattern::Quota { .. } => self
+                .limit
+                .saturating_sub(self.window_used)
+                // quota admissions also hold an in-flight slot until done
+                .min(self.limit.saturating_sub(self.in_flight).max(0)),
+        }
+    }
+
+    /// Admit `action` for `units` slots (almost always 1). Fails when the
+    /// provider limit would be violated — the action must stay queued.
+    pub fn allocate(
+        &mut self,
+        action: ActionId,
+        units: u64,
+        expected_done: SimTime,
+    ) -> Result<(), String> {
+        if units > self.slots_free() {
+            return Err(format!(
+                "{}: {} units requested, {} free",
+                self.name,
+                units,
+                self.slots_free()
+            ));
+        }
+        self.in_flight += units;
+        if matches!(self.pattern, BasicPattern::Quota { .. }) {
+            self.window_used += units;
+        }
+        self.active.insert(action, (expected_done, units));
+        Ok(())
+    }
+
+    pub fn complete(&mut self, action: ActionId, units: u64) {
+        debug_assert!(self.in_flight >= units);
+        self.in_flight -= units;
+        self.active.remove(&action);
+    }
+
+    pub fn in_flight(&self) -> u64 {
+        self.in_flight
+    }
+}
+
+impl ResourceState for BasicManager {
+    fn available_units(&self) -> u64 {
+        self.slots_free()
+    }
+
+    fn accommodate(&self, min_units: &[u64]) -> bool {
+        min_units.iter().sum::<u64>() <= self.slots_free()
+    }
+
+    fn dp_operator(&self, reserved: &[u64]) -> Box<dyn DpOperator> {
+        let used: u64 = reserved.iter().sum();
+        Box::new(BasicOperator::new(self.slots_free().saturating_sub(used)))
+    }
+
+    fn running_completions(&self) -> Vec<(SimTime, u64)> {
+        self.active.values().copied().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn concurrency_admits_up_to_limit() {
+        let mut m = BasicManager::concurrency("search", 2);
+        m.allocate(ActionId(1), 1, SimTime(10)).unwrap();
+        m.allocate(ActionId(2), 1, SimTime(20)).unwrap();
+        assert!(m.allocate(ActionId(3), 1, SimTime(30)).is_err());
+        m.complete(ActionId(1), 1);
+        m.allocate(ActionId(3), 1, SimTime(30)).unwrap();
+        assert_eq!(m.in_flight(), 2);
+    }
+
+    #[test]
+    fn quota_refills_per_window() {
+        let w = SimDur::from_secs(60);
+        let mut m = BasicManager::quota("q", 2, w);
+        m.allocate(ActionId(1), 1, SimTime(1)).unwrap();
+        m.complete(ActionId(1), 1);
+        m.allocate(ActionId(2), 1, SimTime(2)).unwrap();
+        m.complete(ActionId(2), 1);
+        // window quota spent even though nothing is in flight
+        assert_eq!(m.available_units(), 0);
+        assert!(m.allocate(ActionId(3), 1, SimTime(3)).is_err());
+        m.tick(SimTime::ZERO + w);
+        assert_eq!(m.available_units(), 2);
+        m.allocate(ActionId(3), 1, SimTime(3)).unwrap();
+    }
+
+    #[test]
+    fn resource_state_views() {
+        let mut m = BasicManager::concurrency("s", 4);
+        m.allocate(ActionId(1), 1, SimTime(99)).unwrap();
+        assert_eq!(m.available_units(), 3);
+        assert!(m.accommodate(&[1, 1, 1]));
+        assert!(!m.accommodate(&[2, 2]));
+        let op = m.dp_operator(&[1]);
+        assert_eq!(op.max_alloc(), 2);
+        assert_eq!(m.running_completions(), vec![(SimTime(99), 1)]);
+    }
+
+    #[test]
+    fn multi_unit_admission() {
+        let mut m = BasicManager::concurrency("s", 4);
+        m.allocate(ActionId(1), 3, SimTime(5)).unwrap();
+        assert!(m.allocate(ActionId(2), 2, SimTime(5)).is_err());
+        m.complete(ActionId(1), 3);
+        assert_eq!(m.in_flight(), 0);
+    }
+}

@@ -1,0 +1,312 @@
+//! CPU Manager via allocate-on-execution (paper §5.2).
+//!
+//! **Breakdown**: before each `docker exec`, the container's cgroup is
+//! updated to the scheduler-assigned core set; after the process exits the
+//! cores are reclaimed. Memory stays reserved for the trajectory's lifetime
+//! (cheap in memory-rich nodes, and it preserves environment state).
+//!
+//! **Pool**: cores and memory are co-managed. The first action of a
+//! trajectory picks a node — filtered by "enough cores for the action and
+//! enough memory for the whole trajectory", then memory-load-balanced — and
+//! all later actions of that trajectory stay on it. Core selection prefers
+//! a single NUMA domain. Each node runs the elastic scheduling algorithm
+//! independently (128+-core nodes keep fragmentation mild).
+
+use crate::action::{ActionId, TrajId};
+use crate::cluster::cpu::{CoreId, CpuLatency, CpuNode, NodeId};
+use crate::scheduler::{BasicOperator, DpOperator, ResourceState};
+use crate::sim::{SimDur, SimTime};
+use std::collections::HashMap;
+
+/// A granted CPU allocation for one action.
+#[derive(Debug, Clone)]
+pub struct CpuLease {
+    pub action: ActionId,
+    pub trajectory: TrajId,
+    pub node: NodeId,
+    pub cores: Vec<CoreId>,
+    /// AOE overhead charged before execution (cgroup update + fork, plus
+    /// container creation on the trajectory's first action).
+    pub overhead: SimDur,
+}
+
+#[derive(Debug)]
+struct Active {
+    trajectory: TrajId,
+    node: NodeId,
+    expected_done: SimTime,
+    units: u64,
+}
+
+/// The AOE CPU manager.
+#[derive(Debug)]
+pub struct CpuManager {
+    nodes: Vec<CpuNode>,
+    pub latency: CpuLatency,
+    bindings: HashMap<TrajId, NodeId>,
+    active: HashMap<ActionId, Active>,
+}
+
+impl CpuManager {
+    pub fn new(
+        n_nodes: u32,
+        numa_domains: u32,
+        cores_per_numa: u32,
+        mem_gb: u64,
+        latency: CpuLatency,
+    ) -> Self {
+        CpuManager {
+            nodes: (0..n_nodes)
+                .map(|i| CpuNode::new(NodeId(i), numa_domains, cores_per_numa, mem_gb))
+                .collect(),
+            latency,
+            bindings: HashMap::new(),
+            active: HashMap::new(),
+        }
+    }
+
+    pub fn node_ids(&self) -> Vec<NodeId> {
+        self.nodes.iter().map(|n| n.id).collect()
+    }
+
+    pub fn total_cores(&self) -> u64 {
+        self.nodes.iter().map(|n| n.total_cores() as u64).sum()
+    }
+
+    pub fn free_cores(&self) -> u64 {
+        self.nodes.iter().map(|n| n.free_cores() as u64).sum()
+    }
+
+    pub fn binding(&self, t: TrajId) -> Option<NodeId> {
+        self.bindings.get(&t).copied()
+    }
+
+    /// Bind a new trajectory to a node (§5.2 "Pool"): filter by action cores
+    /// + trajectory memory, then pick the node with the most free memory
+    /// (CPU-memory load balancing). Creates the container.
+    pub fn bind_trajectory(
+        &mut self,
+        t: TrajId,
+        min_cores: u32,
+        traj_mem_gb: u64,
+    ) -> Result<NodeId, String> {
+        if let Some(n) = self.bindings.get(&t) {
+            return Ok(*n);
+        }
+        let best = self
+            .nodes
+            .iter()
+            .filter(|n| n.free_cores() >= min_cores && n.free_mem_gb() >= traj_mem_gb)
+            .max_by_key(|n| n.free_mem_gb())
+            .map(|n| n.id)
+            .ok_or_else(|| {
+                format!("no node with {min_cores} cores and {traj_mem_gb} GiB free")
+            })?;
+        self.node_mut(best).create_container(t, traj_mem_gb)?;
+        self.bindings.insert(t, best);
+        Ok(best)
+    }
+
+    /// Tear down a finished trajectory's container and binding.
+    pub fn release_trajectory(&mut self, t: TrajId) -> Result<(), String> {
+        let node = self
+            .bindings
+            .remove(&t)
+            .ok_or_else(|| format!("{t:?} not bound"))?;
+        self.node_mut(node).destroy_container(t)
+    }
+
+    /// AOE allocate: put `cores_n` cores into the trajectory's cgroup.
+    /// `first_action` charges container creation. Fails (action stays
+    /// queued) if the node cannot supply the cores right now.
+    pub fn allocate(
+        &mut self,
+        action: ActionId,
+        t: TrajId,
+        cores_n: u32,
+        first_action: bool,
+        expected_done: SimTime,
+    ) -> Result<CpuLease, String> {
+        let node_id = *self
+            .bindings
+            .get(&t)
+            .ok_or_else(|| format!("{t:?} not bound to a node"))?;
+        let lat = self.latency.clone();
+        let node = self.node_mut(node_id);
+        let cores = node
+            .alloc_cores(cores_n)
+            .ok_or_else(|| format!("node {node_id:?} lacks {cores_n} cores"))?;
+        node.cgroup_assign(t, cores.clone())?;
+        let mut overhead = lat.cgroup_update + lat.exec_fork;
+        if first_action {
+            overhead += lat.container_create;
+        }
+        self.active.insert(
+            action,
+            Active { trajectory: t, node: node_id, expected_done, units: cores_n as u64 },
+        );
+        Ok(CpuLease { action, trajectory: t, node: node_id, cores, overhead })
+    }
+
+    /// AOE reclaim: process exited; cores leave the cgroup and free up.
+    pub fn complete(&mut self, action: ActionId) -> Result<(), String> {
+        let a = self
+            .active
+            .remove(&action)
+            .ok_or_else(|| format!("{action:?} not active"))?;
+        self.node_mut(a.node).cgroup_reclaim(a.trajectory)?;
+        Ok(())
+    }
+
+    /// Scheduler view over one node (per-node scheduling, §5.2).
+    pub fn node_state(&self, node: NodeId) -> CpuNodeState<'_> {
+        CpuNodeState { mgr: self, node }
+    }
+
+    pub fn node(&self, id: NodeId) -> &CpuNode {
+        &self.nodes[id.0 as usize]
+    }
+
+    fn node_mut(&mut self, id: NodeId) -> &mut CpuNode {
+        &mut self.nodes[id.0 as usize]
+    }
+
+    /// Fraction of all cores currently allocated (utilization sample).
+    pub fn utilization(&self) -> f64 {
+        let total = self.total_cores() as f64;
+        (total - self.free_cores() as f64) / total
+    }
+}
+
+/// Per-node [`ResourceState`]: cores within a node are a flat pool (NUMA
+/// preference is a soft placement policy inside `alloc_cores`, not a
+/// feasibility constraint).
+pub struct CpuNodeState<'a> {
+    mgr: &'a CpuManager,
+    node: NodeId,
+}
+
+impl ResourceState for CpuNodeState<'_> {
+    fn available_units(&self) -> u64 {
+        self.mgr.node(self.node).free_cores() as u64
+    }
+
+    fn accommodate(&self, min_units: &[u64]) -> bool {
+        min_units.iter().sum::<u64>() <= self.available_units()
+    }
+
+    fn dp_operator(&self, reserved: &[u64]) -> Box<dyn DpOperator> {
+        let used: u64 = reserved.iter().sum();
+        Box::new(BasicOperator::new(self.available_units().saturating_sub(used)))
+    }
+
+    fn running_completions(&self) -> Vec<(SimTime, u64)> {
+        self.mgr
+            .active
+            .values()
+            .filter(|a| a.node == self.node)
+            .map(|a| (a.expected_done, a.units))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mgr() -> CpuManager {
+        // 2 nodes × (2 NUMA × 4 cores) × 32 GiB
+        CpuManager::new(2, 2, 4, 32, CpuLatency::default())
+    }
+
+    #[test]
+    fn binding_prefers_most_free_memory() {
+        let mut m = mgr();
+        let n1 = m.bind_trajectory(TrajId(1), 1, 20).unwrap();
+        // node n1 now has 12 GiB free; the other has 32 → next binding goes there
+        let n2 = m.bind_trajectory(TrajId(2), 1, 20).unwrap();
+        assert_ne!(n1, n2);
+        // rebinding the same trajectory is a no-op returning the same node
+        assert_eq!(m.bind_trajectory(TrajId(1), 1, 999).unwrap(), n1);
+    }
+
+    #[test]
+    fn binding_fails_when_nothing_fits() {
+        let mut m = mgr();
+        assert!(m.bind_trajectory(TrajId(1), 9, 1).is_err()); // > 8 cores
+        assert!(m.bind_trajectory(TrajId(1), 1, 33).is_err()); // > 32 GiB
+    }
+
+    #[test]
+    fn aoe_allocate_complete_cycle() {
+        let mut m = mgr();
+        let node = m.bind_trajectory(TrajId(1), 1, 4).unwrap();
+        let lease = m
+            .allocate(ActionId(1), TrajId(1), 4, true, SimTime(100))
+            .unwrap();
+        assert_eq!(lease.cores.len(), 4);
+        assert_eq!(lease.node, node);
+        // first action pays container creation
+        assert!(lease.overhead >= CpuLatency::default().container_create);
+        assert_eq!(m.node(node).free_cores(), 4);
+        m.complete(ActionId(1)).unwrap();
+        assert_eq!(m.node(node).free_cores(), 8);
+        // subsequent actions pay only cgroup + fork
+        let lease2 = m
+            .allocate(ActionId(2), TrajId(1), 2, false, SimTime(200))
+            .unwrap();
+        assert!(lease2.overhead < CpuLatency::default().container_create);
+        m.complete(ActionId(2)).unwrap();
+    }
+
+    #[test]
+    fn allocate_fails_without_binding_or_cores() {
+        let mut m = mgr();
+        assert!(m
+            .allocate(ActionId(1), TrajId(1), 1, true, SimTime(1))
+            .is_err());
+        m.bind_trajectory(TrajId(1), 1, 1).unwrap();
+        assert!(m
+            .allocate(ActionId(1), TrajId(1), 9, true, SimTime(1))
+            .is_err());
+    }
+
+    #[test]
+    fn release_trajectory_frees_memory() {
+        let mut m = mgr();
+        let node = m.bind_trajectory(TrajId(1), 1, 30).unwrap();
+        assert_eq!(m.node(node).free_mem_gb(), 2);
+        m.release_trajectory(TrajId(1)).unwrap();
+        assert_eq!(m.node(node).free_mem_gb(), 32);
+        assert!(m.release_trajectory(TrajId(1)).is_err());
+    }
+
+    #[test]
+    fn node_state_tracks_running() {
+        let mut m = mgr();
+        let node = m.bind_trajectory(TrajId(1), 1, 4).unwrap();
+        let _ = m
+            .allocate(ActionId(1), TrajId(1), 3, true, SimTime(777))
+            .unwrap();
+        let st = m.node_state(node);
+        assert_eq!(st.available_units(), 5);
+        assert!(st.accommodate(&[2, 3]));
+        assert!(!st.accommodate(&[3, 3]));
+        assert_eq!(st.running_completions(), vec![(SimTime(777), 3)]);
+        let other = m
+            .node_ids()
+            .into_iter()
+            .find(|&n| n != node)
+            .unwrap();
+        assert!(m.node_state(other).running_completions().is_empty());
+    }
+
+    #[test]
+    fn utilization_tracks_allocations() {
+        let mut m = mgr();
+        assert_eq!(m.utilization(), 0.0);
+        m.bind_trajectory(TrajId(1), 1, 1).unwrap();
+        let _ = m.allocate(ActionId(1), TrajId(1), 8, true, SimTime(1)).unwrap();
+        assert_eq!(m.utilization(), 0.5);
+    }
+}

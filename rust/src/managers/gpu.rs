@@ -1,0 +1,329 @@
+//! GPU Manager via evict-on-execution (paper §5.3).
+//!
+//! **Breakdown**: every service keeps an invariant copy of its state in host
+//! memory (prepared at initialization). When an action requests a service,
+//! the manager allocates a chunk; if the (service, DoP) variant is already
+//! resident on that chunk's GPUs the action runs immediately (warm),
+//! otherwise the service is restored from host memory — evicting whatever
+//! was cached on those GPUs, which is free because the GPU copy is
+//! invariant. After completion the chunk returns to the pool with the
+//! service still cached.
+//!
+//! **Pool**: multi-level chunk structure with LRU + prefer-warm selection
+//! (implemented in [`crate::cluster::gpu::GpuCluster`]); elastic DoP falls
+//! out of treating every DoP configuration as a distinct service variant.
+
+use crate::action::{ActionId, ServiceId};
+use crate::cluster::gpu::{ChunkRef, GpuCluster, RestoreModel};
+use crate::scheduler::{ChunkOperator, DpOperator, ResourceState};
+use crate::sim::{SimDur, SimTime};
+use std::collections::HashMap;
+
+/// Static description of a deployable model service (reward model, teacher
+/// model, LLM judge).
+#[derive(Debug, Clone)]
+pub struct ServiceSpec {
+    pub id: ServiceId,
+    pub name: String,
+    /// Total parameter footprint in GiB (restore traffic source).
+    pub weights_gb: f64,
+    /// Legal tensor-parallel degrees, ascending (e.g. `[1,2,4,8]`).
+    pub dop_choices: Vec<u8>,
+    /// Measured parallel efficiency per DoP index (E(m) table for the
+    /// action formulation; length ≥ `dop_choices.len()` not required —
+    /// clamps).
+    pub efficiency: Vec<f64>,
+}
+
+impl ServiceSpec {
+    /// A DoP is legal if listed.
+    pub fn allows_dop(&self, dop: u8) -> bool {
+        self.dop_choices.contains(&dop)
+    }
+}
+
+/// A granted GPU allocation for one action.
+#[derive(Debug, Clone)]
+pub struct GpuLease {
+    pub action: ActionId,
+    pub service: ServiceId,
+    pub dop: u8,
+    pub chunk: ChunkRef,
+    /// true ⇒ no restore needed (service variant already resident).
+    pub warm: bool,
+    /// Restore overhead charged before execution (zero when warm).
+    pub overhead: SimDur,
+}
+
+#[derive(Debug)]
+struct Active {
+    lease: GpuLease,
+    expected_done: SimTime,
+}
+
+/// The EOE GPU manager.
+#[derive(Debug)]
+pub struct GpuManager {
+    cluster: GpuCluster,
+    pub restore: RestoreModel,
+    services: HashMap<ServiceId, ServiceSpec>,
+    active: HashMap<ActionId, Active>,
+    // counters for Table-1-style overhead accounting
+    pub n_warm: u64,
+    pub n_cold: u64,
+    pub restore_time_total: SimDur,
+}
+
+impl GpuManager {
+    pub fn new(n_nodes: u32, restore: RestoreModel, services: Vec<ServiceSpec>) -> Self {
+        GpuManager {
+            cluster: GpuCluster::new(n_nodes),
+            restore,
+            services: services.into_iter().map(|s| (s.id, s)).collect(),
+            active: HashMap::new(),
+            n_warm: 0,
+            n_cold: 0,
+            restore_time_total: SimDur::ZERO,
+        }
+    }
+
+    pub fn service(&self, id: ServiceId) -> &ServiceSpec {
+        &self.services[&id]
+    }
+
+    pub fn services(&self) -> impl Iterator<Item = &ServiceSpec> {
+        self.services.values()
+    }
+
+    pub fn total_gpus(&self) -> u32 {
+        self.cluster.total_gpus()
+    }
+
+    pub fn free_gpus(&self) -> u32 {
+        self.cluster.free_gpus()
+    }
+
+    pub fn utilization(&self) -> f64 {
+        let total = self.total_gpus() as f64;
+        (total - self.free_gpus() as f64) / total
+    }
+
+    /// Pre-warm caches at initialization (§5.3: "iteratively prepares all
+    /// required services by deploying them on each feasible group of GPUs
+    /// and backing up their states in CPU memory"). Deploy each service once
+    /// at its *largest* DoP round-robin until the cluster is covered.
+    pub fn prewarm(&mut self, now: SimTime) {
+        let mut specs: Vec<ServiceSpec> = self.services.values().cloned().collect();
+        specs.sort_by_key(|s| s.id);
+        'outer: loop {
+            for s in &specs {
+                let dop = s.dop_choices.last().copied().unwrap_or(1);
+                match self.cluster.allocate(s.id, dop) {
+                    Some(a) => self.cluster.release(a.chunk, s.id, dop, now),
+                    None => break 'outer,
+                }
+            }
+            // every service seeded once per sweep; one sweep is enough
+            break;
+        }
+    }
+
+    /// Allocate a chunk for `action` requesting `service` at `dop`.
+    pub fn allocate(
+        &mut self,
+        action: ActionId,
+        service: ServiceId,
+        dop: u8,
+        expected_done: SimTime,
+    ) -> Result<GpuLease, String> {
+        let spec = self
+            .services
+            .get(&service)
+            .ok_or_else(|| format!("unknown service {service:?}"))?;
+        if !spec.allows_dop(dop) {
+            return Err(format!("{}: illegal DoP {dop}", spec.name));
+        }
+        let weights = spec.weights_gb;
+        let alloc = self
+            .cluster
+            .allocate(service, dop)
+            .ok_or_else(|| format!("no chunk for DoP {dop}"))?;
+        let overhead = if alloc.warm {
+            self.n_warm += 1;
+            SimDur::ZERO
+        } else {
+            self.n_cold += 1;
+            let d = self.restore.restore_dur(weights, dop);
+            self.restore_time_total += d;
+            d
+        };
+        let lease = GpuLease {
+            action,
+            service,
+            dop,
+            chunk: alloc.chunk,
+            warm: alloc.warm,
+            overhead,
+        };
+        self.active
+            .insert(action, Active { lease: lease.clone(), expected_done });
+        Ok(lease)
+    }
+
+    /// Action finished: the chunk returns to the pool, service still cached.
+    pub fn complete(&mut self, action: ActionId, now: SimTime) -> Result<(), String> {
+        let a = self
+            .active
+            .remove(&action)
+            .ok_or_else(|| format!("{action:?} not active"))?;
+        self.cluster
+            .release(a.lease.chunk, a.lease.service, a.lease.dop, now);
+        Ok(())
+    }
+
+    /// Warm-hit ratio over all allocations so far.
+    pub fn warm_ratio(&self) -> f64 {
+        let total = self.n_warm + self.n_cold;
+        if total == 0 {
+            return 0.0;
+        }
+        self.n_warm as f64 / total as f64
+    }
+}
+
+impl ResourceState for GpuManager {
+    fn available_units(&self) -> u64 {
+        self.free_gpus() as u64
+    }
+
+    fn accommodate(&self, min_units: &[u64]) -> bool {
+        self.cluster.can_accommodate(min_units)
+    }
+
+    fn dp_operator(&self, reserved: &[u64]) -> Box<dyn DpOperator> {
+        let counts = self.cluster.free_chunk_counts();
+        let bounds = ChunkOperator::cluster_bounds(self.total_gpus());
+        let op = ChunkOperator::new(counts, bounds);
+        // pre-consume reservations from co-scheduled non-key actions
+        let mut state = op.full_state();
+        for &r in reserved {
+            if let Some(s2) = op.consume(state, r) {
+                state = s2;
+            }
+        }
+        let avail = op.decode(state);
+        Box::new(ChunkOperator::new(avail, bounds))
+    }
+
+    fn running_completions(&self) -> Vec<(SimTime, u64)> {
+        self.active
+            .values()
+            .map(|a| (a.expected_done, a.lease.dop as u64))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs(n: u32) -> Vec<ServiceSpec> {
+        (0..n)
+            .map(|i| ServiceSpec {
+                id: ServiceId(i),
+                name: format!("teacher-{i}"),
+                weights_gb: 60.0,
+                dop_choices: vec![1, 2, 4, 8],
+                efficiency: vec![1.0, 0.95, 0.85, 0.8, 0.7, 0.7, 0.7, 0.65],
+            })
+            .collect()
+    }
+
+    fn mgr(nodes: u32, services: u32) -> GpuManager {
+        GpuManager::new(nodes, RestoreModel::default(), specs(services))
+    }
+
+    #[test]
+    fn cold_then_warm_allocation() {
+        let mut m = mgr(1, 2);
+        let l1 = m
+            .allocate(ActionId(1), ServiceId(0), 4, SimTime(10))
+            .unwrap();
+        assert!(!l1.warm);
+        assert!(l1.overhead > SimDur::ZERO);
+        m.complete(ActionId(1), SimTime(10)).unwrap();
+        let l2 = m
+            .allocate(ActionId(2), ServiceId(0), 4, SimTime(20))
+            .unwrap();
+        assert!(l2.warm);
+        assert_eq!(l2.overhead, SimDur::ZERO);
+        assert_eq!(l2.chunk, l1.chunk);
+        assert_eq!(m.n_warm, 1);
+        assert_eq!(m.n_cold, 1);
+        assert!((m.warm_ratio() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn illegal_dop_rejected() {
+        let mut m = GpuManager::new(
+            1,
+            RestoreModel::default(),
+            vec![ServiceSpec {
+                id: ServiceId(0),
+                name: "rm".into(),
+                weights_gb: 10.0,
+                dop_choices: vec![4, 8],
+                efficiency: vec![1.0; 8],
+            }],
+        );
+        assert!(m.allocate(ActionId(1), ServiceId(0), 2, SimTime(1)).is_err());
+        assert!(m.allocate(ActionId(1), ServiceId(9), 4, SimTime(1)).is_err());
+    }
+
+    #[test]
+    fn exhaustion_fails_cleanly() {
+        let mut m = mgr(1, 1);
+        let _l = m.allocate(ActionId(1), ServiceId(0), 8, SimTime(1)).unwrap();
+        assert!(m.allocate(ActionId(2), ServiceId(0), 1, SimTime(1)).is_err());
+        assert_eq!(m.free_gpus(), 0);
+        assert_eq!(m.utilization(), 1.0);
+    }
+
+    #[test]
+    fn prewarm_seeds_caches() {
+        let mut m = mgr(2, 2);
+        m.prewarm(SimTime::ZERO);
+        assert_eq!(m.free_gpus(), 16); // everything released again
+        // both services should now warm-start at DoP 8
+        let l = m.allocate(ActionId(1), ServiceId(0), 8, SimTime(1)).unwrap();
+        assert!(l.warm);
+        let l2 = m.allocate(ActionId(2), ServiceId(1), 8, SimTime(1)).unwrap();
+        assert!(l2.warm);
+    }
+
+    #[test]
+    fn resource_state_for_scheduler() {
+        let mut m = mgr(1, 1);
+        assert_eq!(m.available_units(), 8);
+        assert!(m.accommodate(&[4, 2, 1, 1]));
+        assert!(!m.accommodate(&[8, 1]));
+        let _l = m.allocate(ActionId(1), ServiceId(0), 4, SimTime(42)).unwrap();
+        assert_eq!(m.available_units(), 4);
+        assert_eq!(m.running_completions(), vec![(SimTime(42), 4)]);
+        // dp operator reflects the free 4-chunk
+        let op = m.dp_operator(&[]);
+        assert_eq!(op.max_alloc(), 4);
+        // reserving those 4 leaves nothing
+        let op2 = m.dp_operator(&[4]);
+        assert_eq!(op2.max_alloc(), 0);
+    }
+
+    #[test]
+    fn restore_totals_accumulate() {
+        let mut m = mgr(1, 2);
+        let _a = m.allocate(ActionId(1), ServiceId(0), 4, SimTime(1)).unwrap();
+        let _b = m.allocate(ActionId(2), ServiceId(1), 4, SimTime(1)).unwrap();
+        assert_eq!(m.n_cold, 2);
+        assert!(m.restore_time_total > SimDur::ZERO);
+    }
+}

@@ -1,0 +1,21 @@
+//! Heterogeneous resource managers (paper §5).
+//!
+//! Each manager owns one class of external resource and implements the two
+//! halves of action-level management:
+//!
+//! * **Breakdown** — release resources after every action while preserving
+//!   environment/service state (AOE cgroup cycling, EOE service caching);
+//! * **Pool** — allocate from a shared pool with fragmentation- and
+//!   parallel-efficiency-aware policies (NUMA affinity, chunk structure).
+//!
+//! All managers expose the scheduler's [`ResourceState`] so the elastic
+//! algorithm stays topology-agnostic (§5: "a standardized interface …
+//! maintaining transparency of heterogeneous resources").
+
+pub mod basic;
+pub mod cpu;
+pub mod gpu;
+
+pub use basic::BasicManager;
+pub use cpu::{CpuLease, CpuManager};
+pub use gpu::{GpuLease, GpuManager, ServiceSpec};

@@ -1,0 +1,324 @@
+//! Experiment metrics: ACTs, stage breakdowns, utilization timelines.
+//!
+//! Every figure/table in the paper's evaluation reduces to aggregations
+//! over these records: Fig. 6 = windowed mean ACT; Fig. 7 = per-stage
+//! normalized durations; Fig. 8 = mean ACT vs batch/capacity; Table 1 =
+//! exec/queue/overhead decomposition.
+
+use crate::action::{ActionId, ActionKind, TaskId, TrajId};
+use crate::sim::{SimDur, SimTime};
+use crate::util::{mean, percentile};
+use std::collections::HashMap;
+
+/// Final record of one action.
+#[derive(Debug, Clone)]
+pub struct ActionRecord {
+    pub id: ActionId,
+    pub task: TaskId,
+    pub trajectory: TrajId,
+    pub kind: ActionKind,
+    pub submitted: SimTime,
+    pub started: SimTime,
+    pub finished: SimTime,
+    /// setup/restore portion of the busy time (Table 1 "Sys. Overhead")
+    pub overhead: SimDur,
+    pub units: u64,
+    pub retries: u32,
+    pub failed: bool,
+}
+
+impl ActionRecord {
+    pub fn act(&self) -> SimDur {
+        self.finished - self.submitted
+    }
+
+    pub fn queue_dur(&self) -> SimDur {
+        self.started - self.submitted
+    }
+
+    /// Pure execution (busy minus overhead).
+    pub fn exec_dur(&self) -> SimDur {
+        (self.finished - self.started) - self.overhead
+    }
+}
+
+/// Final record of one trajectory.
+#[derive(Debug, Clone)]
+pub struct TrajRecord {
+    pub id: TrajId,
+    pub task: TaskId,
+    pub started: SimTime,
+    pub finished: SimTime,
+    /// total LLM-generation time
+    pub gen_dur: SimDur,
+    /// summed ACT of tool/environment actions
+    pub tool_dur: SimDur,
+    /// summed ACT of reward actions
+    pub reward_dur: SimDur,
+    pub failed: bool,
+    pub restarts: u32,
+}
+
+impl TrajRecord {
+    pub fn lifetime(&self) -> SimDur {
+        self.finished - self.started
+    }
+
+    /// Fig. 3(c): fraction of the lifetime spent in external actions.
+    pub fn active_ratio(&self) -> f64 {
+        let l = self.lifetime().secs_f64();
+        if l <= 0.0 {
+            return 0.0;
+        }
+        ((self.tool_dur + self.reward_dur).secs_f64() / l).min(1.0)
+    }
+}
+
+/// Record of one RL training step.
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    pub index: u32,
+    pub rollout_dur: SimDur,
+    pub train_dur: SimDur,
+}
+
+impl StepRecord {
+    pub fn total(&self) -> SimDur {
+        self.rollout_dur + self.train_dur
+    }
+}
+
+/// A named utilization timeline sample.
+#[derive(Debug, Clone)]
+pub struct UtilSample {
+    pub at: SimTime,
+    pub name: String,
+    pub value: f64,
+}
+
+/// Collector for one experiment run.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub actions: Vec<ActionRecord>,
+    pub trajectories: Vec<TrajRecord>,
+    pub steps: Vec<StepRecord>,
+    pub util: Vec<UtilSample>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    // ---- aggregations -----------------------------------------------------
+
+    /// Mean ACT in seconds over all (successful) actions.
+    pub fn mean_act(&self) -> f64 {
+        mean(&self
+            .actions
+            .iter()
+            .filter(|a| !a.failed)
+            .map(|a| a.act().secs_f64())
+            .collect::<Vec<_>>())
+    }
+
+    pub fn mean_act_of(&self, kind: ActionKind) -> f64 {
+        mean(&self
+            .actions
+            .iter()
+            .filter(|a| !a.failed && a.kind == kind)
+            .map(|a| a.act().secs_f64())
+            .collect::<Vec<_>>())
+    }
+
+    pub fn p99_act(&self) -> f64 {
+        let mut v: Vec<f64> = self
+            .actions
+            .iter()
+            .filter(|a| !a.failed)
+            .map(|a| a.act().secs_f64())
+            .collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        percentile(&v, 99.0)
+    }
+
+    /// Windowed mean ACT (Fig. 6): buckets of `window` over the run.
+    pub fn act_timeline(&self, window: SimDur) -> Vec<(f64, f64)> {
+        let mut buckets: HashMap<u64, Vec<f64>> = HashMap::new();
+        for a in self.actions.iter().filter(|a| !a.failed) {
+            let b = a.submitted.0 / window.0.max(1);
+            buckets.entry(b).or_default().push(a.act().secs_f64());
+        }
+        let mut out: Vec<(f64, f64)> = buckets
+            .into_iter()
+            .map(|(b, v)| ((b * window.0) as f64 / 1e9, mean(&v)))
+            .collect();
+        out.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        out
+    }
+
+    /// Invocation counts per window (Fig. 3(d)).
+    pub fn invocation_timeline(&self, window: SimDur, task: Option<TaskId>) -> Vec<(f64, u64)> {
+        let mut buckets: HashMap<u64, u64> = HashMap::new();
+        for a in &self.actions {
+            if task.map_or(false, |t| a.task != t) {
+                continue;
+            }
+            *buckets.entry(a.submitted.0 / window.0.max(1)).or_default() += 1;
+        }
+        let mut out: Vec<(f64, u64)> = buckets
+            .into_iter()
+            .map(|(b, v)| ((b * window.0) as f64 / 1e9, v))
+            .collect();
+        out.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        out
+    }
+
+    /// Table 1 rows: (mean exec, mean queue, mean overhead) seconds.
+    pub fn act_breakdown(&self) -> (f64, f64, f64) {
+        let ok: Vec<&ActionRecord> = self.actions.iter().filter(|a| !a.failed).collect();
+        let exec = mean(&ok.iter().map(|a| a.exec_dur().secs_f64()).collect::<Vec<_>>());
+        let queue = mean(&ok.iter().map(|a| a.queue_dur().secs_f64()).collect::<Vec<_>>());
+        let ovh = mean(&ok.iter().map(|a| a.overhead.secs_f64()).collect::<Vec<_>>());
+        (exec, queue, ovh)
+    }
+
+    /// Fig. 7 stage sums over trajectories: (gen, tool, reward) seconds.
+    pub fn stage_totals(&self) -> (f64, f64, f64) {
+        let g = mean(&self.trajectories.iter().map(|t| t.gen_dur.secs_f64()).collect::<Vec<_>>());
+        let t = mean(&self.trajectories.iter().map(|t| t.tool_dur.secs_f64()).collect::<Vec<_>>());
+        let r = mean(&self
+            .trajectories
+            .iter()
+            .map(|t| t.reward_dur.secs_f64())
+            .collect::<Vec<_>>());
+        (g, t, r)
+    }
+
+    /// Mean step duration in seconds (paper's "step duration").
+    pub fn mean_step_dur(&self) -> f64 {
+        mean(&self.steps.iter().map(|s| s.total().secs_f64()).collect::<Vec<_>>())
+    }
+
+    /// Mean active ratio across trajectories (Fig. 3(c)).
+    pub fn mean_active_ratio(&self) -> f64 {
+        mean(&self.trajectories.iter().map(|t| t.active_ratio()).collect::<Vec<_>>())
+    }
+
+    /// Mean utilization of a named pool over its samples (Fig. 3(b)).
+    pub fn mean_util(&self, name: &str) -> f64 {
+        mean(&self
+            .util
+            .iter()
+            .filter(|u| u.name == name)
+            .map(|u| u.value)
+            .collect::<Vec<_>>())
+    }
+
+    pub fn failed_actions(&self) -> usize {
+        self.actions.iter().filter(|a| a.failed).count()
+    }
+
+    pub fn total_retries(&self) -> u64 {
+        self.actions.iter().map(|a| a.retries as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u64, sub: u64, start: u64, fin: u64, kind: ActionKind) -> ActionRecord {
+        ActionRecord {
+            id: ActionId(id),
+            task: TaskId(0),
+            trajectory: TrajId(id),
+            kind,
+            submitted: SimTime(sub * 1_000_000_000),
+            started: SimTime(start * 1_000_000_000),
+            finished: SimTime(fin * 1_000_000_000),
+            overhead: SimDur::from_secs(1),
+            units: 1,
+            retries: 0,
+            failed: false,
+        }
+    }
+
+    #[test]
+    fn act_and_breakdown() {
+        let mut m = Metrics::new();
+        m.actions.push(rec(1, 0, 2, 10, ActionKind::EnvExec));
+        m.actions.push(rec(2, 0, 0, 4, ActionKind::RewardCpu));
+        assert!((m.mean_act() - 7.0).abs() < 1e-9); // (10 + 4)/2
+        let (exec, queue, ovh) = m.act_breakdown();
+        assert!((queue - 1.0).abs() < 1e-9); // (2 + 0)/2
+        assert!((ovh - 1.0).abs() < 1e-9);
+        assert!((exec - ((8.0 - 1.0) + (4.0 - 1.0)) / 2.0).abs() < 1e-9);
+        assert!((m.mean_act_of(ActionKind::EnvExec) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn failed_actions_excluded_from_act() {
+        let mut m = Metrics::new();
+        m.actions.push(rec(1, 0, 2, 10, ActionKind::ApiCall));
+        let mut f = rec(2, 0, 0, 600, ActionKind::ApiCall);
+        f.failed = true;
+        f.retries = 3;
+        m.actions.push(f);
+        assert!((m.mean_act() - 10.0).abs() < 1e-9);
+        assert_eq!(m.failed_actions(), 1);
+        assert_eq!(m.total_retries(), 3);
+    }
+
+    #[test]
+    fn timelines_bucket_correctly() {
+        let mut m = Metrics::new();
+        m.actions.push(rec(1, 5, 6, 7, ActionKind::ApiCall));
+        m.actions.push(rec(2, 8, 9, 10, ActionKind::ApiCall));
+        m.actions.push(rec(3, 15, 16, 17, ActionKind::ApiCall));
+        let tl = m.act_timeline(SimDur::from_secs(10));
+        assert_eq!(tl.len(), 2);
+        assert_eq!(tl[0].0, 0.0);
+        assert_eq!(tl[1].0, 10.0);
+        let inv = m.invocation_timeline(SimDur::from_secs(10), Some(TaskId(0)));
+        assert_eq!(inv[0].1, 2);
+        assert_eq!(inv[1].1, 1);
+    }
+
+    #[test]
+    fn trajectory_ratios() {
+        let t = TrajRecord {
+            id: TrajId(1),
+            task: TaskId(0),
+            started: SimTime::ZERO,
+            finished: SimTime::ZERO + SimDur::from_secs(100),
+            gen_dur: SimDur::from_secs(50),
+            tool_dur: SimDur::from_secs(20),
+            reward_dur: SimDur::from_secs(27),
+            failed: false,
+            restarts: 0,
+        };
+        assert!((t.active_ratio() - 0.47).abs() < 1e-9);
+        assert_eq!(t.lifetime(), SimDur::from_secs(100));
+    }
+
+    #[test]
+    fn step_and_util_aggregates() {
+        let mut m = Metrics::new();
+        m.steps.push(StepRecord {
+            index: 0,
+            rollout_dur: SimDur::from_secs(100),
+            train_dur: SimDur::from_secs(60),
+        });
+        m.steps.push(StepRecord {
+            index: 1,
+            rollout_dur: SimDur::from_secs(80),
+            train_dur: SimDur::from_secs(60),
+        });
+        assert!((m.mean_step_dur() - 150.0).abs() < 1e-9);
+        m.util.push(UtilSample { at: SimTime(0), name: "gpu".into(), value: 0.2 });
+        m.util.push(UtilSample { at: SimTime(1), name: "gpu".into(), value: 0.4 });
+        m.util.push(UtilSample { at: SimTime(1), name: "cpu".into(), value: 0.9 });
+        assert!((m.mean_util("gpu") - 0.3).abs() < 1e-9);
+    }
+}

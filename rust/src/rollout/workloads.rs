@@ -1,0 +1,450 @@
+//! Workload catalogs for the paper's three agentic RL tasks (§6.1).
+//!
+//! * **AI Coding** — SWEBench-style: multi-turn shell/file actions in a
+//!   per-trajectory CPU environment; reward = running the test suite
+//!   (long-tailed, CPU-scalable — the only CPU-scalable action kind, as in
+//!   the paper's ablation).
+//! * **DeepSearch** — BrowseComp-style: bursts of rate-limited API calls,
+//!   reward via an LLM-judge GPU service.
+//! * **MOPD** — multi-teacher on-policy distillation: trajectory log-probs
+//!   against 9–12 teacher-model GPU services, highly bursty at batch
+//!   boundaries.
+//!
+//! Distribution parameters are calibrated so the *baseline* run reproduces
+//! the paper's Fig. 3 motivation numbers (≈47% coding env-active ratio,
+//! invocation counts swinging ~3 orders of magnitude, <3% mean teacher-GPU
+//! activity under static deployment).
+
+use super::{ActionTemplate, Phase, TrajectoryPlan};
+use crate::action::{
+    ActionKind, CostSpec, DimCost, ElasticityModel, ResourceClass,
+    ResourceKindId, ResourceRegistry, ServiceId, TaskId,
+};
+use crate::cluster::api::ApiEndpointSpec;
+use crate::managers::ServiceSpec;
+use crate::sim::SimDur;
+use crate::util::rng::Rng;
+
+/// Everything the experiments need to know about the external world:
+/// resource kinds, API endpoints, GPU services.
+#[derive(Debug)]
+pub struct Catalog {
+    pub registry: ResourceRegistry,
+    pub cpu_cores: ResourceKindId,
+    pub gpu_units: ResourceKindId,
+    /// (kind, endpoint spec) per managed API endpoint.
+    pub api: Vec<(ResourceKindId, ApiEndpointSpec)>,
+    pub services: Vec<ServiceSpec>,
+    /// index into `services` of the DeepSearch judge.
+    pub judge: usize,
+    /// indices into `services` of the MOPD teachers.
+    pub teachers: Vec<usize>,
+}
+
+/// Catalog scale knobs (testbed §6.1 by default).
+#[derive(Debug, Clone)]
+pub struct CatalogCfg {
+    pub cpu_nodes: u32,
+    pub cores_per_node: u32,
+    pub gpu_nodes: u32,
+    pub n_teachers: u32,
+    pub teacher_gb: f64,
+    pub judge_gb: f64,
+    pub n_search_endpoints: u32,
+}
+
+impl Default for CatalogCfg {
+    fn default() -> Self {
+        CatalogCfg {
+            cpu_nodes: 5,
+            cores_per_node: 256,
+            gpu_nodes: 5,
+            n_teachers: 9,
+            teacher_gb: 60.0,
+            judge_gb: 40.0,
+            n_search_endpoints: 3,
+        }
+    }
+}
+
+impl Catalog {
+    pub fn build(cfg: &CatalogCfg) -> Self {
+        let mut registry = ResourceRegistry::new();
+        let cpu_cores = registry.register(
+            "cpu_cores",
+            ResourceClass::CpuCores,
+            (cfg.cpu_nodes * cfg.cores_per_node) as u64,
+        );
+        let gpu_units =
+            registry.register("gpu_units", ResourceClass::GpuUnits, (cfg.gpu_nodes * 8) as u64);
+
+        let mut api = Vec::new();
+        for i in 0..cfg.n_search_endpoints {
+            let spec = ApiEndpointSpec::search(&format!("search-{i}"));
+            let kind = registry.register(
+                &format!("api:search-{i}"),
+                ResourceClass::ApiConcurrency,
+                spec.max_concurrency as u64,
+            );
+            api.push((kind, spec));
+        }
+        let pdf = ApiEndpointSpec::pdf_parse("pdf-parse");
+        let pdf_kind = registry.register(
+            "api:pdf-parse",
+            ResourceClass::ApiConcurrency,
+            pdf.max_concurrency as u64,
+        );
+        api.push((pdf_kind, pdf));
+
+        // GPU efficiency per DoP 1..8 (TP efficiency measured offline)
+        let eff = vec![1.0, 0.92, 0.85, 0.82, 0.72, 0.68, 0.65, 0.62];
+        let mut services = Vec::new();
+        let judge = 0usize;
+        services.push(ServiceSpec {
+            id: ServiceId(0),
+            name: "judge".into(),
+            weights_gb: cfg.judge_gb,
+            dop_choices: vec![1, 2, 4, 8],
+            efficiency: eff.clone(),
+        });
+        let mut teachers = Vec::new();
+        for i in 0..cfg.n_teachers {
+            teachers.push(services.len());
+            services.push(ServiceSpec {
+                id: ServiceId(1 + i),
+                name: format!("teacher-{i}"),
+                weights_gb: cfg.teacher_gb,
+                dop_choices: vec![1, 2, 4, 8],
+                efficiency: eff.clone(),
+            });
+        }
+
+        Catalog { registry, cpu_cores, gpu_units, api, services, judge, teachers }
+    }
+
+    pub fn service_elasticity(&self, idx: usize) -> ElasticityModel {
+        ElasticityModel::Table(self.services[idx].efficiency.clone())
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkloadKind {
+    Coding,
+    DeepSearch,
+    Mopd,
+}
+
+impl WorkloadKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            WorkloadKind::Coding => "coding",
+            WorkloadKind::DeepSearch => "deepsearch",
+            WorkloadKind::Mopd => "mopd",
+        }
+    }
+}
+
+/// One RL task generating trajectories of a given kind.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub task: TaskId,
+    pub kind: WorkloadKind,
+    /// Duration of the (GPU-training-cluster) train phase per step.
+    pub train_dur: SimDur,
+    /// Max CPU DoP for scalable reward actions (paper ablation: 32).
+    pub max_reward_dop: u64,
+    /// Fig. 9 ablation: pin scalable reward actions at this DoP instead of
+    /// letting the scheduler choose (None = elastic).
+    pub fixed_dop: Option<u64>,
+}
+
+impl Workload {
+    pub fn new(task: TaskId, kind: WorkloadKind) -> Self {
+        let train_dur = match kind {
+            WorkloadKind::Coding => SimDur::from_secs(90),
+            WorkloadKind::DeepSearch => SimDur::from_secs(60),
+            WorkloadKind::Mopd => SimDur::from_secs(120),
+        };
+        Workload { task, kind, train_dur, max_reward_dop: 32, fixed_dop: None }
+    }
+
+    /// Materialize one trajectory plan.
+    pub fn gen_trajectory(&self, cat: &Catalog, rng: &mut Rng) -> TrajectoryPlan {
+        match self.kind {
+            WorkloadKind::Coding => self.gen_coding(cat, rng),
+            WorkloadKind::DeepSearch => self.gen_deepsearch(cat, rng),
+            WorkloadKind::Mopd => self.gen_mopd(cat, rng),
+        }
+    }
+
+    fn gen_coding(&self, cat: &Catalog, rng: &mut Rng) -> TrajectoryPlan {
+        let turns = rng.range(4, 9);
+        let mut phases = Vec::new();
+        for _ in 0..turns {
+            // LLM thinks…
+            phases.push(Phase::Gen(SimDur::from_secs_f64(
+                rng.lognormal(12.0f64.ln(), 0.45).clamp(2.0, 120.0),
+            )));
+            // …then edits files / runs shell commands (1–2 per turn)
+            for _ in 0..rng.range(1, 2) {
+                let dur = rng.lognormal(0.4f64.ln(), 1.6).clamp(0.001, 60.0);
+                phases.push(Phase::Act(ActionTemplate {
+                    kind: ActionKind::EnvExec,
+                    cost: CostSpec::single(&cat.registry, cat.cpu_cores, DimCost::Fixed(1)),
+                    key_resource: Some(cat.cpu_cores),
+                    elasticity: ElasticityModel::None,
+                    profiled_dur: None, // env execs are LLM-dependent, unprofiled
+                    service: None,
+                    true_dur: SimDur::from_secs_f64(dur),
+                    is_reward: false,
+                }));
+            }
+        }
+        // reward: run the test suite — long-tailed and CPU-scalable
+        phases.push(Phase::Gen(SimDur::from_secs_f64(
+            rng.lognormal(8.0f64.ln(), 0.4).clamp(1.0, 60.0),
+        )));
+        let t_ori = rng.pareto(60.0, 1.6).clamp(15.0, 600.0);
+        let reward_cost = match self.fixed_dop {
+            Some(d) => DimCost::Fixed(d),
+            None => DimCost::Range { min: 1, max: self.max_reward_dop },
+        };
+        phases.push(Phase::Act(ActionTemplate {
+            kind: ActionKind::RewardCpu,
+            cost: CostSpec::single(&cat.registry, cat.cpu_cores, reward_cost),
+            key_resource: Some(cat.cpu_cores),
+            elasticity: ElasticityModel::Amdahl { serial_frac: 0.04 },
+            // profiled in advance (§6.1: "scalability and execution durations
+            // profiled … only for reward calculation on CPUs and reward model
+            // inference on GPUs") — with profiling noise
+            profiled_dur: Some(SimDur::from_secs_f64(
+                t_ori * rng.normal(1.0, 0.1).clamp(0.7, 1.3),
+            )),
+            service: None,
+            true_dur: SimDur::from_secs_f64(t_ori),
+            is_reward: true,
+        }));
+        TrajectoryPlan { task: self.task, mem_gb: rng.range(2, 8), phases }
+    }
+
+    fn gen_deepsearch(&self, cat: &Catalog, rng: &mut Rng) -> TrajectoryPlan {
+        let turns = rng.range(5, 12);
+        let mut phases = Vec::new();
+        for _ in 0..turns {
+            phases.push(Phase::Gen(SimDur::from_secs_f64(
+                rng.lognormal(12.0f64.ln(), 0.5).clamp(1.0, 120.0),
+            )));
+            let calls = if rng.chance(0.8) { 1 } else { 2 };
+            for _ in 0..calls {
+                // skewed endpoint choice: search dominates, pdf occasional
+                let idx = if rng.chance(0.9) {
+                    rng.zipf(cat.api.len() - 1, 0.9)
+                } else {
+                    cat.api.len() - 1 // pdf
+                };
+                let (kind_id, _) = cat.api[idx];
+                phases.push(Phase::Act(ActionTemplate {
+                    kind: ActionKind::ApiCall,
+                    cost: CostSpec::single(&cat.registry, kind_id, DimCost::Fixed(1)),
+                    key_resource: None, // APIs are inherently non-scalable
+                    elasticity: ElasticityModel::None,
+                    profiled_dur: None,
+                    service: None,
+                    // placeholder — real latency comes from the endpoint sim
+                    true_dur: SimDur::from_millis(500),
+                    is_reward: false,
+                }));
+            }
+        }
+        // reward: LLM-judge scores the trajectory on the GPU service
+        let judge = cat.judge;
+        let t_ori = rng.lognormal(6.0f64.ln(), 0.5).clamp(2.0, 30.0);
+        phases.push(Phase::Act(ActionTemplate {
+            kind: ActionKind::RewardModel,
+            cost: CostSpec::single(
+                &cat.registry,
+                cat.gpu_units,
+                DimCost::Discrete(cat.services[judge].dop_choices.iter().map(|&d| d as u64).collect()),
+            ),
+            key_resource: Some(cat.gpu_units),
+            elasticity: cat.service_elasticity(judge),
+            profiled_dur: Some(SimDur::from_secs_f64(
+                t_ori * rng.normal(1.0, 0.08).clamp(0.8, 1.2),
+            )),
+            service: Some(cat.services[judge].id),
+            true_dur: SimDur::from_secs_f64(t_ori),
+            is_reward: true,
+        }));
+        TrajectoryPlan { task: self.task, mem_gb: 0, phases }
+    }
+
+    fn gen_mopd(&self, cat: &Catalog, rng: &mut Rng) -> TrajectoryPlan {
+        let mut phases = Vec::new();
+        // long single/dual-turn rollout; external resources untouched.
+        // The heavy tail dominates the step (paper §6.2: MOPD's rollout is
+        // "dominated by the long-tail trajectory").
+        for _ in 0..rng.range(1, 2) {
+            phases.push(Phase::Gen(SimDur::from_secs_f64(
+                rng.lognormal(60.0f64.ln(), 0.8).clamp(10.0, 900.0),
+            )));
+        }
+        // reward: log-probs against a skewed subset of teacher services —
+        // all fired at trajectory end (the paper's bursty pattern)
+        let k = rng.range(2, cat.teachers.len().min(5) as u64) as usize;
+        let mut picked = std::collections::BTreeSet::new();
+        while picked.len() < k {
+            picked.insert(rng.zipf(cat.teachers.len(), 0.8));
+        }
+        for t in picked {
+            let idx = cat.teachers[t];
+            // a log-prob pass over one trajectory: seconds at DoP 1 (short
+            // enough that teacher GPUs idle most of the time — Fig. 3(b) —
+            // yet long enough that EOE restore stays ~25% of exec, Table 1)
+            let t_ori = rng.lognormal(6.0f64.ln(), 0.5).clamp(1.5, 30.0);
+            phases.push(Phase::Act(ActionTemplate {
+                kind: ActionKind::RewardModel,
+                cost: CostSpec::single(
+                    &cat.registry,
+                    cat.gpu_units,
+                    DimCost::Discrete(
+                        cat.services[idx].dop_choices.iter().map(|&d| d as u64).collect(),
+                    ),
+                ),
+                key_resource: Some(cat.gpu_units),
+                elasticity: cat.service_elasticity(idx),
+                profiled_dur: Some(SimDur::from_secs_f64(
+                    t_ori * rng.normal(1.0, 0.08).clamp(0.8, 1.2),
+                )),
+                service: Some(cat.services[idx].id),
+                true_dur: SimDur::from_secs_f64(t_ori),
+                is_reward: true,
+            }));
+        }
+        TrajectoryPlan { task: self.task, mem_gb: 0, phases }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cat() -> Catalog {
+        Catalog::build(&CatalogCfg::default())
+    }
+
+    #[test]
+    fn catalog_registers_everything() {
+        let c = cat();
+        assert_eq!(c.registry.info(c.cpu_cores).capacity, 5 * 256);
+        assert_eq!(c.registry.info(c.gpu_units).capacity, 40);
+        assert_eq!(c.api.len(), 4); // 3 search + 1 pdf
+        assert_eq!(c.services.len(), 10); // judge + 9 teachers
+        assert_eq!(c.teachers.len(), 9);
+    }
+
+    #[test]
+    fn coding_plans_are_well_formed() {
+        let c = cat();
+        let w = Workload::new(TaskId(0), WorkloadKind::Coding);
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let p = w.gen_trajectory(&c, &mut rng);
+            assert!(p.n_actions() >= 5);
+            assert!(p.mem_gb >= 2 && p.mem_gb <= 8);
+            // last action is the scalable reward
+            let last = p
+                .phases
+                .iter()
+                .rev()
+                .find_map(|ph| match ph {
+                    Phase::Act(a) => Some(a),
+                    _ => None,
+                })
+                .unwrap();
+            assert!(last.is_reward);
+            assert_eq!(last.kind, ActionKind::RewardCpu);
+            assert!(matches!(last.elasticity, ElasticityModel::Amdahl { .. }));
+            assert!(last.profiled_dur.is_some());
+            for ph in &p.phases {
+                if let Phase::Act(a) = ph {
+                    a.cost.validate().unwrap();
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn coding_env_active_ratio_near_paper() {
+        // sanity: the *inherent* active ratio (no queuing) should be in the
+        // ballpark of the paper's 47% so the baseline lands near Fig. 3(c).
+        let c = cat();
+        let w = Workload::new(TaskId(0), WorkloadKind::Coding);
+        let mut rng = Rng::new(7);
+        let mut act = 0.0;
+        let mut total = 0.0;
+        for _ in 0..300 {
+            let p = w.gen_trajectory(&c, &mut rng);
+            act += p.total_act_true().secs_f64();
+            total += (p.total_gen() + p.total_act_true()).secs_f64();
+        }
+        let ratio = act / total;
+        assert!((0.30..0.65).contains(&ratio), "active ratio {ratio}");
+    }
+
+    #[test]
+    fn deepsearch_uses_apis_and_judge() {
+        let c = cat();
+        let w = Workload::new(TaskId(1), WorkloadKind::DeepSearch);
+        let mut rng = Rng::new(2);
+        let p = w.gen_trajectory(&c, &mut rng);
+        let acts: Vec<&ActionTemplate> = p
+            .phases
+            .iter()
+            .filter_map(|ph| match ph {
+                Phase::Act(a) => Some(a),
+                _ => None,
+            })
+            .collect();
+        assert!(acts.iter().filter(|a| a.kind == ActionKind::ApiCall).count() >= 4);
+        let reward = acts.last().unwrap();
+        assert_eq!(reward.kind, ActionKind::RewardModel);
+        assert_eq!(reward.service, Some(ServiceId(0)));
+        assert_eq!(p.mem_gb, 0);
+    }
+
+    #[test]
+    fn mopd_hits_multiple_teachers() {
+        let c = cat();
+        let w = Workload::new(TaskId(2), WorkloadKind::Mopd);
+        let mut rng = Rng::new(3);
+        let mut distinct = std::collections::BTreeSet::new();
+        for _ in 0..100 {
+            let p = w.gen_trajectory(&c, &mut rng);
+            let rewards: Vec<ServiceId> = p
+                .phases
+                .iter()
+                .filter_map(|ph| match ph {
+                    Phase::Act(a) if a.kind == ActionKind::RewardModel => a.service,
+                    _ => None,
+                })
+                .collect();
+            assert!(rewards.len() >= 2);
+            // no duplicate teacher per trajectory
+            let set: std::collections::BTreeSet<_> = rewards.iter().collect();
+            assert_eq!(set.len(), rewards.len());
+            distinct.extend(rewards);
+        }
+        assert!(distinct.len() >= 6, "zipf should still touch most teachers");
+    }
+
+    #[test]
+    fn plans_are_deterministic_per_seed() {
+        let c = cat();
+        let w = Workload::new(TaskId(0), WorkloadKind::Coding);
+        let p1 = w.gen_trajectory(&c, &mut Rng::new(42));
+        let p2 = w.gen_trajectory(&c, &mut Rng::new(42));
+        assert_eq!(p1.phases.len(), p2.phases.len());
+        assert_eq!(p1.total_gen(), p2.total_gen());
+        assert_eq!(p1.mem_gb, p2.mem_gb);
+    }
+}

@@ -1,0 +1,154 @@
+//! `artifacts/meta.json` — the calling-convention contract with aot.py.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+
+/// One parameter-pytree leaf (flattening order = artifact argument order).
+#[derive(Debug, Clone)]
+pub struct LeafSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl LeafSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Model-side config mirrored from `python/compile/model.py`.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub param_count: u64,
+    pub params: Vec<LeafSpec>,
+    pub batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+}
+
+/// Parsed meta.json.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub policy: ModelMeta,
+    pub reward: ModelMeta,
+    pub n_param_arrays: usize,
+    pub artifacts: BTreeMap<String, String>,
+}
+
+fn leafs(j: &Json) -> Result<Vec<LeafSpec>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("params not an array"))?
+        .iter()
+        .map(|l| {
+            Ok(LeafSpec {
+                name: l
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("leaf missing name"))?
+                    .to_string(),
+                shape: l
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("leaf missing shape"))?
+                    .iter()
+                    .map(|d| d.as_u64().map(|v| v as usize))
+                    .collect::<Option<Vec<_>>>()
+                    .ok_or_else(|| anyhow!("bad shape"))?,
+                dtype: l
+                    .get("dtype")
+                    .and_then(Json::as_str)
+                    .unwrap_or("float32")
+                    .to_string(),
+            })
+        })
+        .collect()
+}
+
+fn model(j: &Json) -> Result<ModelMeta> {
+    Ok(ModelMeta {
+        param_count: j
+            .get("param_count")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow!("missing param_count"))?,
+        params: leafs(j.get("params").ok_or_else(|| anyhow!("missing params"))?)?,
+        batch: j.get("batch").and_then(Json::as_u64).unwrap_or(1) as usize,
+        seq: j.get("seq").and_then(Json::as_u64).unwrap_or(1) as usize,
+        vocab: j
+            .path(&["config", "vocab"])
+            .and_then(Json::as_u64)
+            .unwrap_or(0) as usize,
+    })
+}
+
+impl ArtifactMeta {
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow!("meta.json: {e}"))?;
+        let artifacts = j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("missing artifacts"))?
+            .iter()
+            .map(|(k, v)| {
+                Ok((
+                    k.clone(),
+                    v.as_str().ok_or_else(|| anyhow!("bad artifact path"))?.to_string(),
+                ))
+            })
+            .collect::<Result<BTreeMap<_, _>>>()?;
+        Ok(ArtifactMeta {
+            policy: model(j.get("policy").ok_or_else(|| anyhow!("missing policy"))?)?,
+            reward: model(j.get("reward").ok_or_else(|| anyhow!("missing reward"))?)?,
+            n_param_arrays: j
+                .path(&["train", "n_param_arrays"])
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("missing n_param_arrays"))? as usize,
+            artifacts,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "policy": {
+        "config": {"vocab": 512, "d_model": 128},
+        "param_count": 541696,
+        "params": [
+          {"name": "['embed']", "shape": [512, 128], "dtype": "float32"},
+          {"name": "['ln_f']", "shape": [128], "dtype": "float32"}
+        ],
+        "batch": 4, "seq": 64
+      },
+      "reward": {
+        "config": {"vocab": 512},
+        "param_count": 541824,
+        "params": [{"name": "['embed']", "shape": [512, 128], "dtype": "float32"}],
+        "batch": 2, "seq": 64
+      },
+      "train": {"n_param_arrays": 2},
+      "artifacts": {"policy_init": "policy_init.hlo.txt"}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = ArtifactMeta::parse(SAMPLE).unwrap();
+        assert_eq!(m.policy.params.len(), 2);
+        assert_eq!(m.policy.params[0].elems(), 512 * 128);
+        assert_eq!(m.policy.batch, 4);
+        assert_eq!(m.policy.vocab, 512);
+        assert_eq!(m.n_param_arrays, 2);
+        assert_eq!(m.artifacts["policy_init"], "policy_init.hlo.txt");
+        assert_eq!(m.reward.batch, 2);
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(ArtifactMeta::parse("{}").is_err());
+        assert!(ArtifactMeta::parse("not json").is_err());
+    }
+}

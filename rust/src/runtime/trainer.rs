@@ -1,0 +1,168 @@
+//! GRPO trainer + reward-model service over the PJRT engine.
+//!
+//! State (policy params, Adam moments, step counter) lives as XLA literals
+//! owned by the trainer and threaded through the `train_step` artifact —
+//! the whole update is one compiled module, so Rust never touches math.
+
+use super::{f32_matrix, tokens_literal, PjrtEngine};
+use anyhow::{anyhow, ensure, Result};
+use xla::Literal;
+
+/// The xla crate's `Literal` is not `Clone` and `execute` consumes inputs;
+/// round-trip through host data to duplicate. (The §Perf pass replaces the
+/// per-step param copies with device-resident buffers if this shows up.)
+fn clone_lit(l: &Literal) -> Result<Literal> {
+    let shape = l.array_shape().map_err(|e| anyhow!("{e}"))?;
+    let dims: Vec<i64> = shape.dims().to_vec();
+    let v = l.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+    Literal::vec1(&v).reshape(&dims).map_err(|e| anyhow!("{e}"))
+}
+
+/// The RL policy under training.
+pub struct Trainer<'e> {
+    eng: &'e PjrtEngine,
+    params: Vec<Literal>,
+    m: Vec<Literal>,
+    v: Vec<Literal>,
+    step: Literal,
+    pub batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+}
+
+impl<'e> Trainer<'e> {
+    /// Initialize policy parameters on-device via the `policy_init` artifact.
+    pub fn init(eng: &'e PjrtEngine, seed: u32) -> Result<Self> {
+        let p = eng.run("policy_init", &[Literal::scalar(seed)])?;
+        let n = eng.meta.n_param_arrays;
+        ensure!(p.len() == n, "policy_init returned {} arrays, want {n}", p.len());
+        let zeros = || -> Result<Vec<Literal>> {
+            eng.meta
+                .policy
+                .params
+                .iter()
+                .map(|spec| {
+                    let z = vec![0f32; spec.elems()];
+                    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+                    Literal::vec1(&z)
+                        .reshape(&dims)
+                        .map_err(|e| anyhow!("zeros: {e}"))
+                })
+                .collect()
+        };
+        Ok(Trainer {
+            eng,
+            params: p,
+            m: zeros()?,
+            v: zeros()?,
+            step: Literal::scalar(0i32),
+            batch: eng.meta.policy.batch,
+            seq: eng.meta.policy.seq,
+            vocab: eng.meta.policy.vocab,
+        })
+    }
+
+    /// Forward logits for sampling: `tokens` i32[batch,seq] →
+    /// f32[batch, seq, vocab] flattened row-major.
+    pub fn logits(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let t = tokens_literal(tokens, self.batch, self.seq)?;
+        let mut inputs: Vec<Literal> = self
+            .params
+            .iter()
+            .map(clone_lit)
+            .collect::<Result<_>>()?;
+        inputs.push(t);
+        let out = self.eng.run("policy_fwd", &inputs)?;
+        out[0].to_vec::<f32>().map_err(|e| anyhow!("{e}"))
+    }
+
+    /// Per-token behaviour log-probs: f32[batch, seq-1] flattened.
+    pub fn logprobs(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let t = tokens_literal(tokens, self.batch, self.seq)?;
+        let mut inputs: Vec<Literal> = self
+            .params
+            .iter()
+            .map(clone_lit)
+            .collect::<Result<_>>()?;
+        inputs.push(t);
+        let out = self.eng.run("policy_logprobs", &inputs)?;
+        out[0].to_vec::<f32>().map_err(|e| anyhow!("{e}"))
+    }
+
+    /// One GRPO Adam step; returns the loss. `mask`/`old_logp` are
+    /// `[batch, seq-1]`, `advantages` is `[batch]`.
+    pub fn train_step(
+        &mut self,
+        tokens: &[i32],
+        mask: &[f32],
+        advantages: &[f32],
+        old_logp: &[f32],
+        lr: f32,
+    ) -> Result<f32> {
+        let n = self.params.len();
+        let mut inputs: Vec<Literal> = Vec::with_capacity(3 * n + 6);
+        for l in self.params.iter().chain(&self.m).chain(&self.v) {
+            inputs.push(clone_lit(l)?);
+        }
+        inputs.push(Self::clone_i32(&self.step)?);
+        inputs.push(tokens_literal(tokens, self.batch, self.seq)?);
+        inputs.push(f32_matrix(mask, self.batch, self.seq - 1)?);
+        inputs.push(Literal::vec1(advantages));
+        inputs.push(f32_matrix(old_logp, self.batch, self.seq - 1)?);
+        inputs.push(Literal::scalar(lr));
+        let mut out = self.eng.run("train_step", &inputs)?;
+        ensure!(out.len() == 3 * n + 2, "train_step returned {}", out.len());
+        let loss = out
+            .pop()
+            .unwrap()
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow!("{e}"))?;
+        self.step = out.pop().unwrap();
+        self.v = out.split_off(2 * n);
+        self.m = out.split_off(n);
+        self.params = out;
+        Ok(loss)
+    }
+
+    fn clone_i32(l: &Literal) -> Result<Literal> {
+        let v = l.get_first_element::<i32>().map_err(|e| anyhow!("{e}"))?;
+        Ok(Literal::scalar(v))
+    }
+
+    pub fn step_count(&self) -> Result<i32> {
+        self.step.get_first_element::<i32>().map_err(|e| anyhow!("{e}"))
+    }
+}
+
+/// The reward-model service (what the GPU manager's EOE multiplexes).
+pub struct RewardModel<'e> {
+    eng: &'e PjrtEngine,
+    params: Vec<Literal>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl<'e> RewardModel<'e> {
+    pub fn init(eng: &'e PjrtEngine, seed: u32) -> Result<Self> {
+        let p = eng.run("reward_init", &[Literal::scalar(seed)])?;
+        Ok(RewardModel {
+            eng,
+            params: p,
+            batch: eng.meta.reward.batch,
+            seq: eng.meta.reward.seq,
+        })
+    }
+
+    /// Score a batch: tokens i32[batch,seq], mask f32[batch,seq] → f32[batch].
+    pub fn score(&self, tokens: &[i32], mask: &[f32]) -> Result<Vec<f32>> {
+        let mut inputs: Vec<Literal> = self
+            .params
+            .iter()
+            .map(clone_lit)
+            .collect::<Result<_>>()?;
+        inputs.push(tokens_literal(tokens, self.batch, self.seq)?);
+        inputs.push(f32_matrix(mask, self.batch, self.seq)?);
+        let out = self.eng.run("reward_fwd", &inputs)?;
+        out[0].to_vec::<f32>().map_err(|e| anyhow!("{e}"))
+    }
+}

@@ -1,0 +1,535 @@
+//! Topology-agnostic `DPArrange` (paper Algorithm 3) and its DP operators
+//! (Basic + GPU-chunk, Algorithm 4).
+//!
+//! `DPArrange` solves: given scalable tasks `c_1..c_m` with per-task
+//! feasible unit sets `S_i` and duration functions `T_i(k)`, and a resource
+//! whose *topology* is abstracted behind a [`DpOperator`], find the discrete
+//! allocation minimizing `Σ T_i(k_i)` subject to topological feasibility.
+//!
+//! The operator abstracts the resource as a finite state space: a state is
+//! "what remains available"; consuming `k` units maps one state to another
+//! (or is infeasible). The Basic operator's state is simply the remaining
+//! unit count; the GPU operator's state is the multiset of free chunks,
+//! mixed-radix-encoded exactly as in Algorithm 4.
+//!
+//! Deviation from the paper's pseudocode, documented: Algorithm 3's
+//! `IsValid(j', S_{1:i-1})` recursive feasibility probe is redundant under
+//! forward DP — a state is reachable for tasks `1..i-1` iff
+//! `dp[i-1][state] < ∞` — so we iterate reachable states directly. Same
+//! semantics, strictly less work (their stated complexity bound
+//! `O(k·n²·m²)` is preserved).
+
+use crate::sim::SimDur;
+use std::collections::HashMap;
+
+/// Topology abstraction for one resource kind (paper Appendix B).
+pub trait DpOperator {
+    /// Size of the state space. States are `0..num_states()`.
+    fn num_states(&self) -> usize;
+
+    /// The state representing the currently-available capacity.
+    fn full_state(&self) -> usize;
+
+    /// Consume `k` units from state `j`; `None` if topologically infeasible.
+    fn consume(&self, j: usize, k: u64) -> Option<usize>;
+
+    /// Largest single-task allocation this operator can ever satisfy
+    /// (used to prune per-task unit sets before the DP).
+    fn max_alloc(&self) -> u64;
+}
+
+/// Basic DP operator: a flat pool of `units` interchangeable units
+/// (CPU cores within one NUMA-checked node, API slots). State = remaining
+/// units; `consume` is plain subtraction (paper Alg. 3 "Basic DP Operator").
+#[derive(Debug, Clone)]
+pub struct BasicOperator {
+    units: u64,
+}
+
+impl BasicOperator {
+    pub fn new(units: u64) -> Self {
+        BasicOperator { units }
+    }
+}
+
+impl DpOperator for BasicOperator {
+    fn num_states(&self) -> usize {
+        self.units as usize + 1
+    }
+
+    fn full_state(&self) -> usize {
+        self.units as usize
+    }
+
+    fn consume(&self, j: usize, k: u64) -> Option<usize> {
+        (j as u64 >= k).then(|| j - k as usize)
+    }
+
+    fn max_alloc(&self) -> u64 {
+        self.units
+    }
+}
+
+/// GPU-topology-aware DP operator (paper Algorithm 4).
+///
+/// A state is `(a, b, c, d)` — the number of free chunks of sizes 1, 2, 4, 8
+/// — linearized by mixed-radix encoding with bounds `(n1, n2, n4, n8)`.
+/// Consuming `k ∈ {1,2,4,8}` GPUs takes the smallest free chunk of level
+/// ≥ log2(k) and buddy-splits it (§5.3: "GPU Manager splits the chunk into
+/// several legal chunks"); non-power-of-two `k` rounds up to the next legal
+/// DoP, matching the manager's allocation rule.
+#[derive(Debug, Clone)]
+pub struct ChunkOperator {
+    max: [u32; 4], // n1, n2, n4, n8 bounds
+    avail: [u32; 4],
+}
+
+impl ChunkOperator {
+    /// `avail[i]` = currently free chunks of size `2^i`; `max[i]` = bound on
+    /// how many such chunks can ever exist (for the radix encoding). The
+    /// natural bound for a cluster of `g` GPUs is `g / 2^i`.
+    pub fn new(avail: [u32; 4], max: [u32; 4]) -> Self {
+        for i in 0..4 {
+            assert!(avail[i] <= max[i], "avail {avail:?} exceeds max {max:?}");
+        }
+        ChunkOperator { max, avail }
+    }
+
+    /// Convenience: bounds for a cluster of `total_gpus`.
+    pub fn cluster_bounds(total_gpus: u32) -> [u32; 4] {
+        [total_gpus, total_gpus / 2, total_gpus / 4, total_gpus / 8]
+    }
+
+    pub fn encode(&self, s: [u32; 4]) -> usize {
+        let r1 = (self.max[0] + 1) as usize;
+        let r2 = (self.max[1] + 1) as usize;
+        let r4 = (self.max[2] + 1) as usize;
+        s[0] as usize
+            + r1 * (s[1] as usize + r2 * (s[2] as usize + r4 * s[3] as usize))
+    }
+
+    pub fn decode(&self, mut j: usize) -> [u32; 4] {
+        let r1 = (self.max[0] + 1) as usize;
+        let r2 = (self.max[1] + 1) as usize;
+        let r4 = (self.max[2] + 1) as usize;
+        let a = (j % r1) as u32;
+        j /= r1;
+        let b = (j % r2) as u32;
+        j /= r2;
+        let c = (j % r4) as u32;
+        j /= r4;
+        [a, b, c, j as u32]
+    }
+
+    /// Round `k` up to the next legal chunk level; `None` if k > 8.
+    fn level_for(k: u64) -> Option<usize> {
+        match k {
+            1 => Some(0),
+            2 => Some(1),
+            3..=4 => Some(2),
+            5..=8 => Some(3),
+            _ => None,
+        }
+    }
+}
+
+impl DpOperator for ChunkOperator {
+    fn num_states(&self) -> usize {
+        (self.max[0] as usize + 1)
+            * (self.max[1] as usize + 1)
+            * (self.max[2] as usize + 1)
+            * (self.max[3] as usize + 1)
+    }
+
+    fn full_state(&self) -> usize {
+        self.encode(self.avail)
+    }
+
+    fn consume(&self, j: usize, k: u64) -> Option<usize> {
+        if k == 0 {
+            return Some(j);
+        }
+        let lvl = Self::level_for(k)?;
+        let mut s = self.decode(j);
+        // smallest free chunk at level ≥ lvl
+        let src = (lvl..4).find(|&l| s[l] > 0)?;
+        s[src] -= 1;
+        // buddy-split down to the target level, leaving one free chunk at
+        // each intermediate level
+        for l in lvl..src {
+            if s[l] >= self.max[l] {
+                return None; // cannot represent (bound too tight) — reject
+            }
+            s[l] += 1;
+        }
+        Some(self.encode(s))
+    }
+
+    fn max_alloc(&self) -> u64 {
+        (0..4).rev().find(|&l| self.avail[l] > 0).map_or(0, |l| 1 << l)
+    }
+}
+
+/// Result of `dp_arrange`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Arrangement {
+    /// Allocated units per task (same order as input).
+    pub units: Vec<u64>,
+    /// `Σ T_i(k_i)` under the optimal allocation, seconds.
+    pub total_dur_secs: f64,
+}
+
+/// Topology-agnostic DPArrange (paper Algorithm 3), sparse formulation.
+///
+/// `unit_sets[i]` — feasible unit counts for task `i` (ascending);
+/// `dur(i, k)` — execution duration of task `i` with `k` units.
+/// Returns `None` when no feasible joint allocation exists.
+///
+/// §Perf note: the paper's pseudocode iterates the full state space
+/// (`O(k·n²·m²)`); for the GPU chunk topology that is ~57k states per node
+/// group and showed up as 40–200 ms per decision in `sched_hotpath`. The
+/// set of states actually *reachable* by consume-chains from the start
+/// state is tiny (bounded by `∏|S_i|`), so we propagate a sparse frontier
+/// instead — identical results, ~100× faster (see EXPERIMENTS.md §Perf).
+pub fn dp_arrange(
+    op: &dyn DpOperator,
+    unit_sets: &[Vec<u64>],
+    dur: impl Fn(usize, u64) -> SimDur,
+) -> Option<Arrangement> {
+    let m = unit_sets.len();
+    if m == 0 {
+        return Some(Arrangement { units: vec![], total_dur_secs: 0.0 });
+    }
+    // Hybrid: small state spaces (flat pools — BasicOperator) are faster
+    // with a dense table (no hashing); big ones (chunk topologies) need the
+    // sparse frontier. Crossover measured in sched_hotpath.
+    if op.num_states() <= 4096 {
+        return dp_arrange_dense(op, unit_sets, dur);
+    }
+    let max_alloc = op.max_alloc();
+
+    // frontier: reachable state -> best cost
+    let mut dp: HashMap<usize, f64> = HashMap::with_capacity(64);
+    dp.insert(op.full_state(), 0.0);
+    // choice[i][state] = (units, prev_state) for backtracking
+    let mut choice: Vec<HashMap<usize, (u64, usize)>> = Vec::with_capacity(m);
+
+    for (i, set) in unit_sets.iter().enumerate() {
+        // memoize durations per distinct k for this task
+        let mut cur: HashMap<usize, f64> = HashMap::with_capacity(dp.len() * 2);
+        let mut ch: HashMap<usize, (u64, usize)> = HashMap::with_capacity(dp.len() * 2);
+        for (&j, &base) in &dp {
+            for &k in set {
+                if k > max_alloc {
+                    break; // sets ascend; nothing larger fits either
+                }
+                if let Some(j2) = op.consume(j, k) {
+                    let cost = base + dur(i, k).secs_f64();
+                    let slot = cur.entry(j2).or_insert(f64::INFINITY);
+                    if cost < *slot {
+                        *slot = cost;
+                        ch.insert(j2, (k, j));
+                    }
+                }
+            }
+        }
+        if cur.is_empty() {
+            return None; // task i cannot be placed under any reachable state
+        }
+        dp = cur;
+        choice.push(ch);
+    }
+
+    // best terminal state
+    let (mut state, total) = dp
+        .iter()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(&s, &c)| (s, c))?;
+
+    // backtrack
+    let mut units = vec![0u64; m];
+    for i in (0..m).rev() {
+        let (k, prev) = choice[i][&state];
+        units[i] = k;
+        state = prev;
+    }
+    Some(Arrangement { units, total_dur_secs: total })
+}
+
+/// Dense-table variant for small state spaces (the paper's literal Alg. 3
+/// shape, minus the redundant `IsValid` — see module docs).
+fn dp_arrange_dense(
+    op: &dyn DpOperator,
+    unit_sets: &[Vec<u64>],
+    dur: impl Fn(usize, u64) -> SimDur,
+) -> Option<Arrangement> {
+    let m = unit_sets.len();
+    let n = op.num_states();
+    let max_alloc = op.max_alloc();
+    const INF: f64 = f64::INFINITY;
+
+    let mut dp = vec![INF; n];
+    let mut cur = vec![INF; n];
+    dp[op.full_state()] = 0.0;
+    let mut choice: Vec<Vec<(u64, u32)>> = Vec::with_capacity(m);
+
+    for (i, set) in unit_sets.iter().enumerate() {
+        cur.iter_mut().for_each(|x| *x = INF);
+        let mut ch = vec![(0u64, u32::MAX); n];
+        let mut any = false;
+        for (j, &base) in dp.iter().enumerate() {
+            if base.is_infinite() {
+                continue;
+            }
+            for &k in set {
+                if k > max_alloc {
+                    break;
+                }
+                if let Some(j2) = op.consume(j, k) {
+                    let cost = base + dur(i, k).secs_f64();
+                    if cost < cur[j2] {
+                        cur[j2] = cost;
+                        ch[j2] = (k, j as u32);
+                        any = true;
+                    }
+                }
+            }
+        }
+        if !any {
+            return None;
+        }
+        std::mem::swap(&mut dp, &mut cur);
+        choice.push(ch);
+    }
+
+    let (mut state, best) = dp
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())?;
+    if best.is_infinite() {
+        return None;
+    }
+    let total = *best;
+    let mut units = vec![0u64; m];
+    for i in (0..m).rev() {
+        let (k, prev) = choice[i][state];
+        debug_assert_ne!(prev, u32::MAX, "broken backtrack at task {i}");
+        units[i] = k;
+        state = prev as usize;
+    }
+    Some(Arrangement { units, total_dur_secs: total })
+}
+
+/// Brute-force reference for testing: enumerate the cartesian product.
+#[cfg(test)]
+pub fn brute_force(
+    op: &dyn DpOperator,
+    unit_sets: &[Vec<u64>],
+    dur: impl Fn(usize, u64) -> SimDur + Copy,
+) -> Option<Arrangement> {
+    fn rec(
+        op: &dyn DpOperator,
+        sets: &[Vec<u64>],
+        dur: impl Fn(usize, u64) -> SimDur + Copy,
+        i: usize,
+        state: usize,
+        acc: f64,
+        picks: &mut Vec<u64>,
+        best: &mut Option<Arrangement>,
+    ) {
+        if i == sets.len() {
+            if best.as_ref().map_or(true, |b| acc < b.total_dur_secs) {
+                *best = Some(Arrangement { units: picks.clone(), total_dur_secs: acc });
+            }
+            return;
+        }
+        for &k in &sets[i] {
+            if let Some(s2) = op.consume(state, k) {
+                picks.push(k);
+                rec(op, sets, dur, i + 1, s2, acc + dur(i, k).secs_f64(), picks, best);
+                picks.pop();
+            }
+        }
+    }
+    let mut best = None;
+    let mut picks = Vec::new();
+    rec(op, unit_sets, dur, 0, op.full_state(), 0.0, &mut picks, &mut best);
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::action::ElasticityModel;
+
+    fn perfect_dur(t_secs: u64) -> impl Fn(usize, u64) -> SimDur + Copy {
+        move |_, k| {
+            ElasticityModel::PerfectScaling.scaled_dur(SimDur::from_secs(t_secs), k)
+        }
+    }
+
+    #[test]
+    fn basic_single_task_takes_everything() {
+        let op = BasicOperator::new(8);
+        let sets = vec![(1..=8).collect::<Vec<u64>>()];
+        let arr = dp_arrange(&op, &sets, perfect_dur(8)).unwrap();
+        assert_eq!(arr.units, vec![8]);
+        assert!((arr.total_dur_secs - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn basic_two_tasks_split_evenly_when_identical() {
+        let op = BasicOperator::new(8);
+        let sets = vec![(1..=8).collect::<Vec<u64>>(), (1..=8).collect::<Vec<u64>>()];
+        let arr = dp_arrange(&op, &sets, perfect_dur(8)).unwrap();
+        assert_eq!(arr.units.iter().sum::<u64>(), 8);
+        // 8/m4 + 8/4 = 4 is optimal (any split summing 8 with equal perfect
+        // scaling gives ≥ 4; 4+4 achieves 4).
+        assert!((arr.total_dur_secs - 4.0).abs() < 1e-9);
+        assert_eq!(arr.units, vec![4, 4]);
+    }
+
+    #[test]
+    fn favors_the_long_task() {
+        // task0: 16s perfect-scaling, task1: 2s fixed 1 unit
+        let op = BasicOperator::new(4);
+        let sets = vec![vec![1, 2, 3], vec![1]];
+        let arr = dp_arrange(&op, &sets, |i, k| {
+            if i == 0 {
+                ElasticityModel::PerfectScaling.scaled_dur(SimDur::from_secs(16), k)
+            } else {
+                SimDur::from_secs(2)
+            }
+        })
+        .unwrap();
+        assert_eq!(arr.units, vec![3, 1]);
+    }
+
+    #[test]
+    fn infeasible_when_min_exceeds_capacity() {
+        let op = BasicOperator::new(3);
+        let sets = vec![vec![2], vec![2]];
+        assert!(dp_arrange(&op, &sets, perfect_dur(1)).is_none());
+    }
+
+    #[test]
+    fn empty_task_list_is_trivially_feasible() {
+        let op = BasicOperator::new(3);
+        let arr = dp_arrange(&op, &[], perfect_dur(1)).unwrap();
+        assert!(arr.units.is_empty());
+        assert_eq!(arr.total_dur_secs, 0.0);
+    }
+
+    #[test]
+    fn matches_brute_force_basic() {
+        // randomized-ish small instances, deterministic seeds
+        let cases: Vec<(u64, Vec<Vec<u64>>, Vec<u64>)> = vec![
+            (6, vec![vec![1, 2, 4], vec![1, 3], vec![1]], vec![10, 6, 3]),
+            (5, vec![vec![1, 2], vec![1, 2], vec![1, 2]], vec![4, 9, 2]),
+            (10, vec![vec![2, 4, 8], vec![1, 5]], vec![12, 7]),
+        ];
+        for (units, sets, durs) in cases {
+            let op = BasicOperator::new(units);
+            let dur = |i: usize, k: u64| {
+                ElasticityModel::Amdahl { serial_frac: 0.1 }
+                    .scaled_dur(SimDur::from_secs(durs[i]), k)
+            };
+            let a = dp_arrange(&op, &sets, dur);
+            let b = brute_force(&op, &sets, dur);
+            match (a, b) {
+                (Some(a), Some(b)) => {
+                    assert!((a.total_dur_secs - b.total_dur_secs).abs() < 1e-9)
+                }
+                (None, None) => {}
+                (a, b) => panic!("mismatch {a:?} vs {b:?}"),
+            }
+        }
+    }
+
+    // -- chunk operator -------------------------------------------------------
+
+    #[test]
+    fn chunk_encode_decode_roundtrip() {
+        let op = ChunkOperator::new([3, 2, 1, 2], [8, 4, 2, 2]);
+        for a in 0..=8u32 {
+            for b in 0..=4 {
+                for c in 0..=2 {
+                    for d in 0..=2 {
+                        let s = [a, b, c, d];
+                        assert_eq!(op.decode(op.encode(s)), s);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_consume_exact_size() {
+        // one free 8-chunk
+        let op = ChunkOperator::new([0, 0, 0, 1], [8, 4, 2, 1]);
+        let j = op.full_state();
+        let j2 = op.consume(j, 8).unwrap();
+        assert_eq!(op.decode(j2), [0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn chunk_consume_splits_buddies() {
+        // allocating 1 GPU from a free 8-chunk leaves 1+2+4 free
+        let op = ChunkOperator::new([0, 0, 0, 1], [8, 4, 2, 1]);
+        let j2 = op.consume(op.full_state(), 1).unwrap();
+        assert_eq!(op.decode(j2), [1, 1, 1, 0]);
+    }
+
+    #[test]
+    fn chunk_rounds_up_odd_requests() {
+        // k=3 consumes a 4-chunk
+        let op = ChunkOperator::new([0, 0, 2, 0], [8, 4, 2, 1]);
+        let j2 = op.consume(op.full_state(), 3).unwrap();
+        assert_eq!(op.decode(j2), [0, 0, 1, 0]);
+    }
+
+    #[test]
+    fn chunk_infeasible_when_fragmented() {
+        // 8 GPUs free but as 8 singles: a DoP-8 service cannot be placed
+        let op = ChunkOperator::new([8, 0, 0, 0], [8, 4, 2, 1]);
+        assert_eq!(op.consume(op.full_state(), 8), None);
+        assert_eq!(op.consume(op.full_state(), 2), None);
+        assert!(op.consume(op.full_state(), 1).is_some());
+        assert_eq!(op.max_alloc(), 1);
+    }
+
+    #[test]
+    fn chunk_rejects_oversize() {
+        let op = ChunkOperator::new([0, 0, 0, 1], [8, 4, 2, 1]);
+        assert_eq!(op.consume(op.full_state(), 9), None);
+    }
+
+    #[test]
+    fn dp_arrange_over_chunks() {
+        // Cluster: two free 8-chunks. Tasks: one elastic service (DoP 1/2/4/8)
+        // with an 8s profile, one fixed DoP-4, one fixed DoP-1.
+        let bounds = ChunkOperator::cluster_bounds(16);
+        let op = ChunkOperator::new([0, 0, 0, 2], bounds);
+        let sets = vec![vec![1, 2, 4, 8], vec![4], vec![1]];
+        let arr = dp_arrange(&op, &sets, |i, k| match i {
+            0 => ElasticityModel::Table(vec![1.0, 0.95, 0.85, 0.85, 0.7, 0.7, 0.7, 0.7])
+                .scaled_dur(SimDur::from_secs(8), k),
+            1 => SimDur::from_secs(3),
+            _ => SimDur::from_secs(1),
+        })
+        .unwrap();
+        // elastic service should take the whole second 8-chunk
+        assert_eq!(arr.units[0], 8);
+        assert_eq!(arr.units[1], 4);
+        assert_eq!(arr.units[2], 1);
+        // cross-check vs brute force
+        let bf = brute_force(&op, &sets, |i, k| match i {
+            0 => ElasticityModel::Table(vec![1.0, 0.95, 0.85, 0.85, 0.7, 0.7, 0.7, 0.7])
+                .scaled_dur(SimDur::from_secs(8), k),
+            1 => SimDur::from_secs(3),
+            _ => SimDur::from_secs(1),
+        })
+        .unwrap();
+        assert!((arr.total_dur_secs - bf.total_dur_secs).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,620 @@
+//! Elastic action-level scheduler (paper §4.2, Algorithms 1–2).
+//!
+//! Invoked by the coordinator whenever resources free up or actions arrive.
+//! FCFS determines ordering (starvation would invalidate whole
+//! trajectories); the algorithm decides *how many units* each candidate
+//! gets, via greedy eviction over an approximated ACT objective, with
+//! `DPArrange` (Algorithm 3) resolving optimal discrete allocations on the
+//! resource topology.
+
+pub mod dp;
+pub mod heap;
+
+pub use dp::{dp_arrange, Arrangement, BasicOperator, ChunkOperator, DpOperator};
+pub use heap::CompletionHeap;
+
+use crate::action::{
+    Action, ActionId, ActionKind, ResourceKindId, ResourceVector,
+};
+use crate::sim::{SimDur, SimTime};
+use std::collections::HashMap;
+
+/// Scheduler tunables.
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// Lookahead depth of the objective approximation (paper: 2–3 suffices).
+    pub depth: u64,
+    /// Upper bound on the candidate window (keeps the decision latency
+    /// within the sub-ms budget under bursty queues).
+    pub max_candidates: usize,
+    /// Fallback duration estimate when nothing is profiled or observed yet.
+    pub default_dur: SimDur,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            depth: 2,
+            max_candidates: 32,
+            default_dur: SimDur::from_millis(500),
+        }
+    }
+}
+
+/// View of one resource pool that the scheduler needs: quantities, topology
+/// feasibility, and a DP operator. Implemented by the resource managers
+/// (§5's "standardized interface").
+pub trait ResourceState {
+    /// Remaining units of this kind.
+    fn available_units(&self) -> u64;
+
+    /// Topology check: can actions with these per-action unit minimums all
+    /// be placed simultaneously right now?
+    fn accommodate(&self, min_units: &[u64]) -> bool;
+
+    /// DP operator over the current availability with `reserved` allocations
+    /// pre-consumed (unit amounts belonging to co-scheduled actions whose
+    /// key elasticity resource is a *different* kind).
+    fn dp_operator(&self, reserved: &[u64]) -> Box<dyn DpOperator>;
+
+    /// Expected completion times and held units of actions currently
+    /// executing on this kind (seeds the completion heap of Algorithm 2).
+    fn running_completions(&self) -> Vec<(SimTime, u64)>;
+}
+
+/// Historical execution-duration averages per action kind (EWMA). Used for
+/// unprofiled actions in heap estimates — the paper accepts historical
+/// averages because "scalable actions typically last much longer … and
+/// dominate the evolution of the completion heap".
+#[derive(Debug, Clone, Default)]
+pub struct DurationStats {
+    ewma: HashMap<ActionKind, f64>,
+}
+
+impl DurationStats {
+    const ALPHA: f64 = 0.1;
+
+    pub fn observe(&mut self, kind: ActionKind, dur: SimDur) {
+        let x = dur.secs_f64();
+        self.ewma
+            .entry(kind)
+            .and_modify(|m| *m += Self::ALPHA * (x - *m))
+            .or_insert(x);
+    }
+
+    pub fn estimate(&self, kind: ActionKind, default: SimDur) -> SimDur {
+        self.ewma
+            .get(&kind)
+            .map(|m| SimDur::from_secs_f64(*m))
+            .unwrap_or(default)
+    }
+}
+
+/// One scheduling decision: run `action` now with `units` of its key
+/// resource (and its minimums on every other dimension).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Decision {
+    pub action: ActionId,
+    /// Units of the key elasticity resource (== the key-dim minimum for
+    /// non-scalable actions).
+    pub units: u64,
+    /// Full allocation vector across all kinds.
+    pub alloc: ResourceVector,
+}
+
+/// The elastic scheduler. Stateless apart from duration statistics; the
+/// coordinator owns queues and resource managers.
+#[derive(Debug, Default)]
+pub struct ElasticScheduler {
+    pub cfg: SchedulerConfig,
+    pub stats: DurationStats,
+}
+
+impl ElasticScheduler {
+    pub fn new(cfg: SchedulerConfig) -> Self {
+        ElasticScheduler { cfg, stats: DurationStats::default() }
+    }
+
+    /// Best-known execution-duration estimate for `a` at `m` units.
+    fn est(&self, a: &Action, m: u64) -> SimDur {
+        a.spec
+            .est_dur(m)
+            .unwrap_or_else(|| self.stats.estimate(a.spec.kind, self.cfg.default_dur))
+    }
+
+    /// Algorithm 1. `queue` is the FCFS waiting queue; `resources[kind]`
+    /// exposes each pool. Returns decisions for the selected actions
+    /// (everything else stays queued).
+    pub fn schedule(
+        &self,
+        now: SimTime,
+        queue: &[&Action],
+        resources: &HashMap<ResourceKindId, &dyn ResourceState>,
+    ) -> Vec<Decision> {
+        if queue.is_empty() {
+            return vec![];
+        }
+        // ---- candidate selection (Alg 1 line 2) --------------------------
+        // Largest FCFS prefix whose summed minimum requirements fit every
+        // pool by quantity, and whose per-action minimums the topologies can
+        // accommodate.
+        let mut cand: Vec<&Action> = Vec::new();
+        let mut budget: HashMap<ResourceKindId, u64> = resources
+            .iter()
+            .map(|(k, r)| (*k, r.available_units()))
+            .collect();
+        'outer: for a in queue.iter().take(self.cfg.max_candidates) {
+            // quantity check
+            for (kind, dim) in a.spec.cost.iter() {
+                let need = dim.min_units();
+                if need == 0 {
+                    continue;
+                }
+                match budget.get(&kind) {
+                    Some(&have) if have >= need => {}
+                    _ => break 'outer,
+                }
+            }
+            // topology check on the grown prefix, per kind
+            let mut ok = true;
+            for (&kind, res) in resources.iter() {
+                let mins: Vec<u64> = cand
+                    .iter()
+                    .chain(std::iter::once(a))
+                    .map(|c| c.spec.cost.dim(kind).min_units())
+                    .filter(|&m| m > 0)
+                    .collect();
+                if !mins.is_empty() && !res.accommodate(&mins) {
+                    ok = false;
+                    break;
+                }
+            }
+            if !ok {
+                break;
+            }
+            for (kind, dim) in a.spec.cost.iter() {
+                if dim.min_units() > 0 {
+                    *budget.get_mut(&kind).unwrap() -= dim.min_units();
+                }
+            }
+            cand.push(a);
+        }
+        if cand.is_empty() {
+            return vec![];
+        }
+
+        // ---- group by key elasticity resource (Alg 1 lines 3-4) ----------
+        // Actions whose key resource is a given kind form that kind's group;
+        // their minimums on *other* kinds stay fixed (the single-key-resource
+        // assumption of §4.1 decouples the groups).
+        let mut selected: Vec<Decision> = Vec::new();
+        let mut grouped: HashMap<ResourceKindId, Vec<&Action>> = HashMap::new();
+        for a in &cand {
+            match a.spec.key_resource {
+                Some(k) if resources.contains_key(&k) => {
+                    grouped.entry(k).or_default().push(a)
+                }
+                _ => selected.push(min_decision(a)),
+            }
+        }
+
+        let mut kinds: Vec<ResourceKindId> = grouped.keys().copied().collect();
+        kinds.sort(); // deterministic iteration
+        for kind in kinds {
+            let group = &grouped[&kind];
+            let res = resources[&kind];
+
+            // Alg 1 lines 5-6: if elasticity is unknown (or zero) for every
+            // member, select all at minimum units.
+            if group.iter().all(|a| !a.spec.is_scalable()) {
+                selected.extend(group.iter().map(|a| min_decision(a)));
+                continue;
+            }
+
+            // units already pinned on this kind by candidates keyed elsewhere
+            let reserved: Vec<u64> = cand
+                .iter()
+                .filter(|a| a.spec.key_resource != Some(kind))
+                .map(|a| a.spec.cost.dim(kind).min_units())
+                .filter(|&m| m > 0)
+                .collect();
+            let reserved_sum: u64 = reserved.iter().sum();
+            let budget = res.available_units().saturating_sub(reserved_sum);
+
+            // waiting-queue tail on this kind (actions behind the candidate
+            // window) — the `AC_j` of Algorithm 2.
+            let tail: Vec<&Action> = queue
+                .iter()
+                .skip(cand.len())
+                .filter(|a| a.spec.key_resource == Some(kind))
+                .copied()
+                .collect();
+
+            // Reserve minimum units for the visible waiting tail so the DP
+            // does not hand the entire pool to the current candidates and
+            // starve imminent arrivals (honest-capacity variant of Alg. 1;
+            // falls back to the unreserved pool when minimums don't fit).
+            let tail_reserve: u64 = tail
+                .iter()
+                .take(self.cfg.max_candidates)
+                .map(|a| a.spec.cost.dim(kind).min_units())
+                .sum();
+            let min_needed: u64 = group
+                .iter()
+                .map(|a| a.spec.cost.dim(kind).min_units())
+                .sum();
+            let mut with_tail = reserved.clone();
+            let spare = budget.saturating_sub(min_needed);
+            if tail_reserve > 0 && tail_reserve <= spare {
+                with_tail.push(tail_reserve.min(spare));
+            }
+            let op = res.dp_operator(&with_tail);
+            let heap = CompletionHeap::from_entries(res.running_completions());
+
+            // ---- greedy eviction (Alg 1 lines 7-11) -----------------------
+            let mut evict = 0usize;
+            let mut best_obj = f64::INFINITY;
+            let mut best_arr: Option<Arrangement> = None;
+            // t runs to |C_j| inclusive (paper Alg. 1 line 8): evicting the
+            // whole group means "wait for more capacity instead of starting
+            // now" — crucial when one freed core would otherwise trap a
+            // long scalable action at DoP 1.
+            //
+            // Deviation from the paper's early break (`newObj >= obj`):
+            // evicting a cheap action (a 1-core env exec) is often obj-
+            // neutral, and breaking there hides the strictly better deeper
+            // levels (e.g. full eviction). We scan all |C_j|+1 levels and
+            // take the argmin — same asymptotics (window-bounded), strictly
+            // better decisions.
+            for t in 0..=group.len() {
+                let keep = &group[..group.len() - t];
+                let evicted = &group[group.len() - t..];
+                let (obj, arr) = self.approx_objective(
+                    now, kind, budget, keep, evicted, &tail, op.as_ref(), &heap,
+                );
+                if obj < best_obj {
+                    best_obj = obj;
+                    best_arr = arr;
+                    evict = t;
+                }
+            }
+
+            let keep = &group[..group.len() - evict];
+            match best_arr {
+                Some(arr) => {
+                    for (a, &units) in keep.iter().zip(&arr.units) {
+                        let mut alloc = a.spec.cost.min_vector();
+                        alloc.set(kind, units);
+                        selected.push(Decision { action: a.id, units, alloc });
+                    }
+                }
+                // No feasible arrangement even at minimums (topology moved
+                // under us) — fall back to minimum decisions; the managers'
+                // allocate() will reject what truly cannot be placed.
+                None => selected.extend(keep.iter().map(|a| min_decision(a))),
+            }
+        }
+        selected
+    }
+
+    /// Algorithm 2: approximated total-ACT objective of scheduling `keep`
+    /// now (exact part via DPArrange) plus the estimated ACTs of
+    /// `evicted ++ tail` drained through the unit-aware completion heap.
+    #[allow(clippy::too_many_arguments)]
+    fn approx_objective(
+        &self,
+        now: SimTime,
+        kind: ResourceKindId,
+        budget: u64,
+        keep: &[&Action],
+        evicted: &[&Action],
+        tail: &[&Action],
+        op: &dyn DpOperator,
+        heap: &CompletionHeap,
+    ) -> (f64, Option<Arrangement>) {
+        // Exact part: optimal allocation among kept candidates.
+        let sets: Vec<Vec<u64>> = keep
+            .iter()
+            .map(|a| {
+                if a.spec.is_scalable() {
+                    a.spec.cost.dim(a.spec.key_resource.unwrap()).choices()
+                } else {
+                    vec![a.spec.cost.dim(a.spec.key_resource.unwrap()).min_units()]
+                }
+            })
+            .collect();
+        let arr = match dp_arrange(op, &sets, |i, k| self.est(keep[i], k)) {
+            Some(a) => a,
+            None => return (f64::INFINITY, None),
+        };
+
+        // Updated heap: kept candidates complete at now + dur, freeing their
+        // units; capacity not taken by them is free immediately.
+        let mut h = heap.clone();
+        let mut taken = 0u64;
+        for (a, &units) in keep.iter().zip(&arr.units) {
+            h.push(now + self.est(a, units), units.max(1));
+            taken += units;
+        }
+        h.push(now, budget.saturating_sub(taken));
+
+        // Estimated part: evicted candidates first (they re-queue at the
+        // front), then the waiting tail. The first remaining action explores
+        // `depth` allocation choices spread across its feasible unit set
+        // (min … max), so "wait for a wide allocation" is a visible option.
+        let rest: Vec<&Action> = evicted.iter().chain(tail.iter()).copied().collect();
+        let explore: Vec<u64> = rest
+            .first()
+            .map(|a| {
+                let choices = a.spec.cost.dim(kind).choices();
+                spread(&choices, self.cfg.depth as usize)
+            })
+            .unwrap_or_default();
+        let est = h.estimate(
+            now,
+            rest.len(),
+            &explore,
+            |i| rest[i].spec.cost.dim(kind).min_units().max(1),
+            |i, u| self.est(rest[i], u),
+        );
+        (arr.total_dur_secs + est, Some(arr))
+    }
+}
+
+/// Pick up to `n` values spread across a sorted choice set, always
+/// including the extremes (the depth-bounded exploration of Algorithm 2).
+fn spread(choices: &[u64], n: usize) -> Vec<u64> {
+    if choices.is_empty() || n == 0 {
+        return vec![1];
+    }
+    if choices.len() <= n {
+        return choices.to_vec();
+    }
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let idx = i * (choices.len() - 1) / (n.max(2) - 1);
+        out.push(choices[idx]);
+    }
+    out.dedup();
+    out
+}
+
+/// Minimum-allocation decision for non-scalable / key-less actions.
+fn min_decision(a: &Action) -> Decision {
+    let alloc = a.spec.cost.min_vector();
+    let units = a
+        .spec
+        .key_resource
+        .map(|k| alloc.get(k))
+        .unwrap_or(0);
+    Decision { action: a.id, units, alloc }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::action::{
+        ActionSpec, CostSpec, DimCost, ElasticityModel, ResourceClass,
+        ResourceRegistry, TaskId, TrajId,
+    };
+
+    /// Flat-pool resource for tests.
+    struct Pool {
+        units: u64,
+        running: Vec<(SimTime, u64)>,
+    }
+
+    impl ResourceState for Pool {
+        fn available_units(&self) -> u64 {
+            self.units
+        }
+        fn accommodate(&self, mins: &[u64]) -> bool {
+            mins.iter().sum::<u64>() <= self.units
+        }
+        fn dp_operator(&self, reserved: &[u64]) -> Box<dyn DpOperator> {
+            let used: u64 = reserved.iter().sum();
+            Box::new(BasicOperator::new(self.units.saturating_sub(used)))
+        }
+        fn running_completions(&self) -> Vec<(SimTime, u64)> {
+            self.running.clone()
+        }
+    }
+
+    fn reg() -> (ResourceRegistry, ResourceKindId) {
+        let mut r = ResourceRegistry::new();
+        let cpu = r.register("cpu", ResourceClass::CpuCores, 16);
+        (r, cpu)
+    }
+
+    fn scalable(reg: &ResourceRegistry, kind: ResourceKindId, id: u64, secs: u64, max: u64) -> Action {
+        let spec = ActionSpec {
+            task: TaskId(0),
+            trajectory: TrajId(id),
+            kind: ActionKind::RewardCpu,
+            cost: CostSpec::single(reg, kind, DimCost::Range { min: 1, max }),
+            key_resource: Some(kind),
+            elasticity: ElasticityModel::PerfectScaling,
+            profiled_dur: Some(SimDur::from_secs(secs)),
+            service: None,
+            true_dur: SimDur::from_secs(secs),
+        };
+        Action::new(ActionId(id), spec, SimTime::ZERO)
+    }
+
+    fn rigid(reg: &ResourceRegistry, kind: ResourceKindId, id: u64, units: u64) -> Action {
+        let spec = ActionSpec {
+            task: TaskId(0),
+            trajectory: TrajId(id),
+            kind: ActionKind::EnvExec,
+            cost: CostSpec::single(reg, kind, DimCost::Fixed(units)),
+            key_resource: Some(kind),
+            elasticity: ElasticityModel::None,
+            profiled_dur: Some(SimDur::from_secs(1)),
+            service: None,
+            true_dur: SimDur::from_secs(1),
+        };
+        Action::new(ActionId(id), spec, SimTime::ZERO)
+    }
+
+    fn run(
+        sched: &ElasticScheduler,
+        queue: &[&Action],
+        pool: &Pool,
+        kind: ResourceKindId,
+    ) -> Vec<Decision> {
+        let mut map: HashMap<ResourceKindId, &dyn ResourceState> = HashMap::new();
+        map.insert(kind, pool);
+        sched.schedule(SimTime::ZERO, queue, &map)
+    }
+
+    #[test]
+    fn empty_queue_no_decisions() {
+        let (r, cpu) = reg();
+        let _ = r;
+        let sched = ElasticScheduler::default();
+        let pool = Pool { units: 16, running: vec![] };
+        assert!(run(&sched, &[], &pool, cpu).is_empty());
+    }
+
+    #[test]
+    fn single_scalable_action_gets_all_units() {
+        let (r, cpu) = reg();
+        let sched = ElasticScheduler::default();
+        let a = scalable(&r, cpu, 1, 16, 16);
+        let pool = Pool { units: 16, running: vec![] };
+        let d = run(&sched, &[&a], &pool, cpu);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].units, 16);
+    }
+
+    #[test]
+    fn rigid_actions_get_min_units() {
+        let (r, cpu) = reg();
+        let sched = ElasticScheduler::default();
+        let a = rigid(&r, cpu, 1, 2);
+        let b = rigid(&r, cpu, 2, 3);
+        let pool = Pool { units: 16, running: vec![] };
+        let d = run(&sched, &[&a, &b], &pool, cpu);
+        assert_eq!(d.len(), 2);
+        assert_eq!(d[0].units, 2);
+        assert_eq!(d[1].units, 3);
+    }
+
+    #[test]
+    fn candidate_window_respects_capacity() {
+        let (r, cpu) = reg();
+        let sched = ElasticScheduler::default();
+        let actions: Vec<Action> = (0..10).map(|i| rigid(&r, cpu, i, 3)).collect();
+        let refs: Vec<&Action> = actions.iter().collect();
+        let pool = Pool { units: 10, running: vec![] };
+        let d = run(&sched, &refs, &pool, cpu);
+        // only ⌊10/3⌋ = 3 fit
+        assert_eq!(d.len(), 3);
+        assert_eq!(d[0].action, ActionId(0));
+        assert_eq!(d[2].action, ActionId(2));
+    }
+
+    #[test]
+    fn eviction_fires_when_wide_rigid_action_starves_scalable() {
+        // A: 16s perfectly-scalable (range 1..16). B: rigid, needs 15 units,
+        // runs 0.1s. Keeping both pins A at 1 unit → obj ≈ 16.1s. Evicting B
+        // lets A take all 16 units (1s); B slots in right after (est ≈ 1.1s)
+        // → obj ≈ 2.1s. Greedy eviction must pick the latter.
+        let (r, cpu) = reg();
+        let sched = ElasticScheduler::default();
+        let a = scalable(&r, cpu, 1, 16, 16);
+        let mut b = rigid(&r, cpu, 2, 15);
+        b.spec.profiled_dur = Some(SimDur::from_millis(100));
+        b.spec.true_dur = SimDur::from_millis(100);
+        let pool = Pool { units: 16, running: vec![] };
+        let d = run(&sched, &[&a, &b], &pool, cpu);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].action, ActionId(1));
+        assert_eq!(d[0].units, 16);
+    }
+
+    #[test]
+    fn identical_scalable_actions_serialize_for_lower_total_act() {
+        // Two identical 16s perfectly-scalable actions on 16 units: sharing
+        // 8/8 gives ACTs 2+2=4; serializing at 16 units gives 1+2=3. With
+        // the unit-aware completion heap (and the min..max exploration of
+        // Alg. 2), greedy eviction finds the serialization.
+        let (r, cpu) = reg();
+        let sched = ElasticScheduler::default();
+        let a = scalable(&r, cpu, 1, 16, 16);
+        let b = scalable(&r, cpu, 2, 16, 16);
+        let pool = Pool { units: 16, running: vec![] };
+        let d = run(&sched, &[&a, &b], &pool, cpu);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].action, ActionId(1), "FCFS head runs first");
+        assert_eq!(d[0].units, 16);
+    }
+
+    #[test]
+    fn no_eviction_when_parallel_is_better() {
+        // Short actions with capped scalability: running both in parallel at
+        // max (8 units each) beats serializing them.
+        let (r, cpu) = reg();
+        let sched = ElasticScheduler::default();
+        let a = scalable(&r, cpu, 1, 8, 8);
+        let b = scalable(&r, cpu, 2, 8, 8);
+        let pool = Pool { units: 16, running: vec![] };
+        let d = run(&sched, &[&a, &b], &pool, cpu);
+        assert_eq!(d.len(), 2, "{d:?}");
+        assert_eq!(d[0].units, 8);
+        assert_eq!(d[1].units, 8);
+    }
+
+    #[test]
+    fn mixed_scalable_and_rigid_share_the_pool() {
+        let (r, cpu) = reg();
+        let sched = ElasticScheduler::default();
+        let a = rigid(&r, cpu, 1, 4);
+        let b = scalable(&r, cpu, 2, 12, 16);
+        let pool = Pool { units: 16, running: vec![] };
+        let d = run(&sched, &[&a, &b], &pool, cpu);
+        assert_eq!(d.len(), 2);
+        let da = d.iter().find(|x| x.action == ActionId(1)).unwrap();
+        let db = d.iter().find(|x| x.action == ActionId(2)).unwrap();
+        assert_eq!(da.units, 4);
+        assert_eq!(db.units, 12); // everything that's left
+    }
+
+    #[test]
+    fn unknown_elasticity_group_selected_at_min() {
+        let (r, cpu) = reg();
+        let sched = ElasticScheduler::default();
+        // Range cost but elasticity None → not scalable → min units.
+        let mut a = scalable(&r, cpu, 1, 8, 8);
+        a.spec.elasticity = ElasticityModel::None;
+        let pool = Pool { units: 16, running: vec![] };
+        let d = run(&sched, &[&a], &pool, cpu);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].units, 1);
+    }
+
+    #[test]
+    fn fcfs_order_is_preserved_for_selection() {
+        let (r, cpu) = reg();
+        let sched = ElasticScheduler::default();
+        let actions: Vec<Action> = (0..5).map(|i| rigid(&r, cpu, i, 4)).collect();
+        let refs: Vec<&Action> = actions.iter().collect();
+        let pool = Pool { units: 8, running: vec![] };
+        let d = run(&sched, &refs, &pool, cpu);
+        // first two fit; 3rd does not (12 > 8)
+        let ids: Vec<u64> = d.iter().map(|x| x.action.0).collect();
+        assert_eq!(ids, vec![0, 1]);
+    }
+
+    #[test]
+    fn duration_stats_ewma() {
+        let mut s = DurationStats::default();
+        let d = SimDur::from_secs(10);
+        assert_eq!(s.estimate(ActionKind::ApiCall, d), d); // default
+        s.observe(ActionKind::ApiCall, SimDur::from_secs(2));
+        assert_eq!(s.estimate(ActionKind::ApiCall, d), SimDur::from_secs(2));
+        s.observe(ActionKind::ApiCall, SimDur::from_secs(4));
+        let e = s.estimate(ActionKind::ApiCall, d).secs_f64();
+        assert!(e > 2.0 && e < 4.0);
+    }
+}

@@ -1,0 +1,176 @@
+//! Virtual time for the discrete-event simulator.
+//!
+//! `SimTime`/`SimDur` are nanosecond-resolution fixed-point values. All paper
+//! metrics (ACT, step duration, utilization) are integrals over this clock;
+//! nanosecond ticks keep sub-millisecond actions (paper §2.4: "down to 1ms
+//! in AI coding", scheduling windows shorter still) exactly representable.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// Absolute virtual time (ns since simulation start).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimTime(pub u64);
+
+/// A duration in virtual time (ns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimDur(pub u64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+
+    pub fn secs_f64(self) -> f64 {
+        self.0 as f64 / 1e9
+    }
+
+    pub fn saturating_sub(self, other: SimTime) -> SimDur {
+        SimDur(self.0.saturating_sub(other.0))
+    }
+}
+
+impl SimDur {
+    pub const ZERO: SimDur = SimDur(0);
+
+    pub fn from_secs_f64(s: f64) -> SimDur {
+        debug_assert!(s >= 0.0, "negative duration {s}");
+        SimDur((s.max(0.0) * 1e9).round() as u64)
+    }
+
+    pub fn from_millis(ms: u64) -> SimDur {
+        SimDur(ms * 1_000_000)
+    }
+
+    pub fn from_micros(us: u64) -> SimDur {
+        SimDur(us * 1_000)
+    }
+
+    pub fn from_secs(s: u64) -> SimDur {
+        SimDur(s * 1_000_000_000)
+    }
+
+    pub fn secs_f64(self) -> f64 {
+        self.0 as f64 / 1e9
+    }
+
+    pub fn millis_f64(self) -> f64 {
+        self.0 as f64 / 1e6
+    }
+
+    pub fn mul_f64(self, f: f64) -> SimDur {
+        debug_assert!(f >= 0.0);
+        SimDur((self.0 as f64 * f).round() as u64)
+    }
+
+    pub fn div_u64(self, d: u64) -> SimDur {
+        SimDur(self.0 / d.max(1))
+    }
+}
+
+impl Add<SimDur> for SimTime {
+    type Output = SimTime;
+    fn add(self, d: SimDur) -> SimTime {
+        SimTime(self.0 + d.0)
+    }
+}
+
+impl AddAssign<SimDur> for SimTime {
+    fn add_assign(&mut self, d: SimDur) {
+        self.0 += d.0;
+    }
+}
+
+impl Sub<SimTime> for SimTime {
+    type Output = SimDur;
+    fn sub(self, other: SimTime) -> SimDur {
+        debug_assert!(self >= other, "time went backwards: {self:?} - {other:?}");
+        SimDur(self.0 - other.0)
+    }
+}
+
+impl Add for SimDur {
+    type Output = SimDur;
+    fn add(self, o: SimDur) -> SimDur {
+        SimDur(self.0 + o.0)
+    }
+}
+
+impl AddAssign for SimDur {
+    fn add_assign(&mut self, o: SimDur) {
+        self.0 += o.0;
+    }
+}
+
+impl Sub for SimDur {
+    type Output = SimDur;
+    fn sub(self, o: SimDur) -> SimDur {
+        SimDur(self.0.saturating_sub(o.0))
+    }
+}
+
+impl std::iter::Sum for SimDur {
+    fn sum<I: Iterator<Item = SimDur>>(iter: I) -> SimDur {
+        iter.fold(SimDur::ZERO, |a, b| a + b)
+    }
+}
+
+impl fmt::Display for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.3}s", self.secs_f64())
+    }
+}
+
+impl fmt::Display for SimDur {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.0 < 1_000 {
+            write!(f, "{}ns", self.0)
+        } else if self.0 < 1_000_000 {
+            write!(f, "{:.1}µs", self.0 as f64 / 1e3)
+        } else if self.0 < 1_000_000_000 {
+            write!(f, "{:.1}ms", self.0 as f64 / 1e6)
+        } else {
+            write!(f, "{:.2}s", self.secs_f64())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic() {
+        let t = SimTime::ZERO + SimDur::from_millis(5);
+        assert_eq!(t.0, 5_000_000);
+        assert_eq!((t + SimDur::from_micros(1)) - t, SimDur::from_micros(1));
+        assert_eq!(SimDur::from_secs_f64(1.5).0, 1_500_000_000);
+    }
+
+    #[test]
+    fn conversions_round_trip() {
+        let d = SimDur::from_secs_f64(0.123456789);
+        assert!((d.secs_f64() - 0.123456789).abs() < 1e-9);
+        assert_eq!(SimDur::from_secs(2).millis_f64(), 2000.0);
+    }
+
+    #[test]
+    fn scaling() {
+        assert_eq!(SimDur::from_millis(10).mul_f64(0.5), SimDur::from_millis(5));
+        assert_eq!(SimDur::from_millis(10).div_u64(4), SimDur::from_micros(2500));
+        assert_eq!(SimDur::from_millis(1).div_u64(0), SimDur::from_millis(1));
+    }
+
+    #[test]
+    fn display_units() {
+        assert_eq!(format!("{}", SimDur(500)), "500ns");
+        assert_eq!(format!("{}", SimDur::from_micros(1500)), "1.5ms");
+        assert_eq!(format!("{}", SimDur::from_secs(3)), "3.00s");
+    }
+
+    #[test]
+    fn saturating_sub() {
+        let a = SimTime(5);
+        let b = SimTime(9);
+        assert_eq!(a.saturating_sub(b), SimDur::ZERO);
+        assert_eq!(b.saturating_sub(a), SimDur(4));
+    }
+}

@@ -1,0 +1,163 @@
+//! Property-testing kit (offline substitute for `proptest`).
+//!
+//! A seeded generator framework with greedy input shrinking: when a property
+//! fails, the runner re-tries progressively simpler inputs derived from the
+//! failing case and reports the smallest reproduction found, plus the seed
+//! for exact replay.
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (override with `ARL_PROPTEST_CASES`).
+pub fn default_cases() -> u32 {
+    std::env::var("ARL_PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(256)
+}
+
+/// A generator of values + their shrink candidates.
+pub trait Gen {
+    type Value: std::fmt::Debug + Clone;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Simpler variants of `v` to try when it fails (ordered simplest-first).
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let _ = v;
+        vec![]
+    }
+}
+
+/// Run `prop` over `cases` random inputs; panics with the smallest failing
+/// input and its seed.
+pub fn check<G: Gen, F: Fn(&G::Value) -> Result<(), String>>(
+    name: &str,
+    gen: &G,
+    cases: u32,
+    prop: F,
+) {
+    let base_seed = 0xa11_5eed;
+    for case in 0..cases {
+        let mut rng = Rng::new(base_seed + case as u64);
+        let v = gen.generate(&mut rng);
+        if let Err(msg) = prop(&v) {
+            // shrink greedily
+            let mut best = (v.clone(), msg.clone());
+            let mut frontier = gen.shrink(&v);
+            let mut budget = 500;
+            while let Some(cand) = frontier.pop() {
+                if budget == 0 {
+                    break;
+                }
+                budget -= 1;
+                if let Err(m) = prop(&cand) {
+                    frontier = gen.shrink(&cand);
+                    best = (cand, m);
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {}):\n  input: {:?}\n  error: {}",
+                base_seed + case as u64,
+                best.0,
+                best.1
+            );
+        }
+    }
+}
+
+/// Uniform integer in [lo, hi].
+pub struct IntRange(pub u64, pub u64);
+
+impl Gen for IntRange {
+    type Value = u64;
+    fn generate(&self, rng: &mut Rng) -> u64 {
+        rng.range(self.0, self.1)
+    }
+    fn shrink(&self, v: &u64) -> Vec<u64> {
+        let mut out = vec![];
+        if *v > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (v - self.0) / 2);
+            out.push(v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Vector of values from an element generator, length in [min_len, max_len].
+pub struct VecOf<G> {
+    pub elem: G,
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+impl<G: Gen> Gen for VecOf<G> {
+    type Value = Vec<G::Value>;
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        let n = rng.range(self.min_len as u64, self.max_len as u64) as usize;
+        (0..n).map(|_| self.elem.generate(rng)).collect()
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = vec![];
+        if v.len() > self.min_len {
+            out.push(v[..self.min_len].to_vec()); // shortest prefix
+            out.push(v[..v.len() / 2].to_vec()); // half
+            let mut minus_one = v.clone();
+            minus_one.pop();
+            out.push(minus_one);
+        }
+        // element-wise shrink of the first element
+        if let Some(first) = v.first() {
+            for s in self.elem.shrink(first) {
+                let mut w = v.clone();
+                w[0] = s;
+                out.push(w);
+            }
+        }
+        out.retain(|w| w.len() >= self.min_len);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum fits", &VecOf { elem: IntRange(0, 9), min_len: 0, max_len: 10 }, 64, |v| {
+            if v.iter().sum::<u64>() <= 90 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let caught = std::panic::catch_unwind(|| {
+            check("len<3", &VecOf { elem: IntRange(0, 9), min_len: 0, max_len: 16 }, 64, |v| {
+                if v.len() < 3 {
+                    Ok(())
+                } else {
+                    Err(format!("len {}", v.len()))
+                }
+            });
+        });
+        let msg = format!("{:?}", caught.unwrap_err().downcast_ref::<String>());
+        // shrinker should find a minimal-ish failing case (len 3-ish, not 16)
+        assert!(msg.contains("failed"), "{msg}");
+    }
+
+    #[test]
+    fn int_range_respects_bounds() {
+        let g = IntRange(3, 7);
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let v = g.generate(&mut rng);
+            assert!((3..=7).contains(&v));
+        }
+        assert!(g.shrink(&3).is_empty());
+        assert!(g.shrink(&7).contains(&3));
+    }
+}

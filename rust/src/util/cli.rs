@@ -1,0 +1,186 @@
+//! Tiny CLI argument parser (offline substitute for `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! generates usage text. Enough for the launcher binary and examples.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_flag: bool,
+}
+
+/// Declarative arg set + parsed values.
+#[derive(Debug, Default)]
+pub struct Args {
+    specs: Vec<ArgSpec>,
+    values: BTreeMap<String, String>,
+    positional: Vec<String>,
+    program: String,
+    about: &'static str,
+}
+
+impl Args {
+    pub fn new(about: &'static str) -> Self {
+        Args { about, ..Default::default() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    /// Parse from an iterator (first item = program name). Returns usage text
+    /// as Err on `--help` or malformed input.
+    pub fn parse_from<I: IntoIterator<Item = String>>(mut self, args: I) -> Result<Self, String> {
+        let mut it = args.into_iter();
+        self.program = it.next().unwrap_or_else(|| "prog".into());
+        for s in &self.specs {
+            if let Some(d) = &s.default {
+                self.values.insert(s.name.to_string(), d.clone());
+            }
+        }
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n{}", self.usage()))?;
+                let val = if spec.is_flag {
+                    inline_val.unwrap_or_else(|| "true".into())
+                } else {
+                    match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("--{key} needs a value"))?,
+                    }
+                };
+                self.values.insert(key, val);
+            } else {
+                self.positional.push(a);
+            }
+        }
+        Ok(self)
+    }
+
+    pub fn parse(self) -> Result<Self, String> {
+        self.parse_from(std::env::args())
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{}\n\nUSAGE: {} [OPTIONS]\n\nOPTIONS:\n", self.about, self.program);
+        for spec in &self.specs {
+            let d = spec
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{:<22} {}{}\n", spec.name, spec.help, d));
+        }
+        s
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> String {
+        self.values.get(name).cloned().unwrap_or_default()
+    }
+
+    pub fn u64(&self, name: &str) -> u64 {
+        self.values
+            .get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| panic!("--{name}: expected integer"))
+    }
+
+    pub fn f64(&self, name: &str) -> f64 {
+        self.values
+            .get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| panic!("--{name}: expected number"))
+    }
+
+    pub fn bool(&self, name: &str) -> bool {
+        matches!(self.values.get(name).map(|s| s.as_str()), Some("true" | "1" | "yes"))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk() -> Args {
+        Args::new("test")
+            .opt("batch", "128", "batch size")
+            .opt("mode", "sim", "mode")
+            .flag("verbose", "chatty")
+    }
+
+    fn parse(args: &[&str]) -> Result<Args, String> {
+        mk().parse_from(
+            std::iter::once("prog".to_string()).chain(args.iter().map(|s| s.to_string())),
+        )
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]).unwrap();
+        assert_eq!(a.u64("batch"), 128);
+        assert_eq!(a.str("mode"), "sim");
+        assert!(!a.bool("verbose"));
+    }
+
+    #[test]
+    fn overrides_and_flags() {
+        let a = parse(&["--batch", "64", "--verbose", "--mode=real", "pos1"]).unwrap();
+        assert_eq!(a.u64("batch"), 64);
+        assert!(a.bool("verbose"));
+        assert_eq!(a.str("mode"), "real");
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(parse(&["--nope"]).is_err());
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let e = parse(&["--help"]).unwrap_err();
+        assert!(e.contains("--batch"));
+        assert!(e.contains("batch size"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(parse(&["--batch"]).is_err());
+    }
+}

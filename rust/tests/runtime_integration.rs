@@ -1,0 +1,79 @@
+//! Integration tests over the real AOT artifacts: load HLO text, compile on
+//! the PJRT CPU client, run init/forward/train — the full L2↔L3 bridge.
+//!
+//! Requires `make artifacts` (skipped gracefully if absent so unit-test runs
+//! don't depend on Python). The PJRT client is `Rc`-based (not `Send`), and
+//! compiling the six artifacts takes tens of seconds, so all checks share
+//! one engine inside a single #[test].
+
+use arl_tangram::runtime::{PjrtEngine, RewardModel, Trainer};
+
+#[test]
+fn runtime_end_to_end() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("meta.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let eng = PjrtEngine::load(dir).expect("engine load");
+
+    // -- artifacts load and compile --------------------------------------
+    assert_eq!(eng.platform().to_lowercase(), "cpu");
+    for name in [
+        "policy_init",
+        "policy_fwd",
+        "policy_logprobs",
+        "train_step",
+        "reward_init",
+        "reward_fwd",
+    ] {
+        assert!(eng.has(name), "missing artifact {name}");
+    }
+
+    // -- policy init determinism + logits shape --------------------------
+    let t1 = Trainer::init(&eng, 1234).unwrap();
+    let t2 = Trainer::init(&eng, 1234).unwrap();
+    let ones = vec![1i32; t1.batch * t1.seq];
+    let l1 = t1.logits(&ones).unwrap();
+    let l2 = t2.logits(&ones).unwrap();
+    assert_eq!(l1.len(), t1.batch * t1.seq * t1.vocab);
+    assert_eq!(l1, l2, "same seed must give identical params");
+    let t3 = Trainer::init(&eng, 999).unwrap();
+    assert_ne!(l1, t3.logits(&ones).unwrap(), "different seed must differ");
+
+    // -- logprobs sane ----------------------------------------------------
+    let toks_mod: Vec<i32> = (0..t1.batch * t1.seq).map(|i| (i % 100) as i32).collect();
+    let lp = t1.logprobs(&toks_mod).unwrap();
+    assert_eq!(lp.len(), t1.batch * (t1.seq - 1));
+    assert!(lp.iter().all(|&x| x.is_finite() && x <= 1e-4), "bad logprobs");
+
+    // -- GRPO train step moves logprobs in the advantage direction -------
+    let mut tr = Trainer::init(&eng, 42).unwrap();
+    let (b, s) = (tr.batch, tr.seq);
+    let tokens: Vec<i32> = (0..b * s).map(|i| ((i * 7) % 50) as i32).collect();
+    let mask = vec![1f32; b * (s - 1)];
+    let adv: Vec<f32> = (0..b).map(|i| if i < b / 2 { 1.0 } else { -1.0 }).collect();
+    let lp0 = tr.logprobs(&tokens).unwrap();
+    let sum0: f32 = lp0[..s - 1].iter().sum();
+    for step in 1..=4 {
+        let old = tr.logprobs(&tokens).unwrap();
+        let loss = tr.train_step(&tokens, &mask, &adv, &old, 3e-4).unwrap();
+        assert!(loss.is_finite(), "loss {loss} at step {step}");
+        assert_eq!(tr.step_count().unwrap(), step);
+    }
+    let lp1 = tr.logprobs(&tokens).unwrap();
+    let sum1: f32 = lp1[..s - 1].iter().sum();
+    assert!(
+        sum1 > sum0,
+        "positively-advantaged sequence logprob should rise: {sum0} -> {sum1}"
+    );
+
+    // -- reward model -----------------------------------------------------
+    let rm = RewardModel::init(&eng, 5).unwrap();
+    let rt: Vec<i32> = (0..rm.batch * rm.seq).map(|i| (i % 64) as i32).collect();
+    let rmask = vec![1f32; rm.batch * rm.seq];
+    let scores = rm.score(&rt, &rmask).unwrap();
+    assert_eq!(scores.len(), rm.batch);
+    assert!(scores.iter().all(|s| s.abs() < 1.0 && s.is_finite()));
+    assert_eq!(scores, rm.score(&rt, &rmask).unwrap(), "deterministic");
+}
