@@ -44,7 +44,7 @@ fn softmax_sample(logits: &[f32], temp: f32, rng: &mut Rng) -> usize {
     exps.len() - 1
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> arl_tangram::util::error::Result<()> {
     let args = Args::new("e2e GRPO training through ARL-Tangram")
         .opt("artifacts", "artifacts", "artifact directory")
         .opt("steps", "150", "training steps")
@@ -151,7 +151,7 @@ fn main() -> anyhow::Result<()> {
             let t_act = Instant::now();
             let _lease = gpu
                 .allocate(id, ServiceId(0), units as u8, virt_now)
-                .map_err(|e| anyhow::anyhow!(e))?;
+                .map_err(arl_tangram::util::error::Error::from)?;
             // real compute: build the judge micro-batch and score it.
             // The judge window is the *tail* of each sequence so the
             // generated region is always visible to the reward model.
@@ -173,7 +173,7 @@ fn main() -> anyhow::Result<()> {
                     rewards[dst] = scores[r];
                 }
             }
-            gpu.complete(id, virt_now).map_err(|e| anyhow::anyhow!(e))?;
+            gpu.complete(id, virt_now).map_err(arl_tangram::util::error::Error::from)?;
             acts_ms.push(t_act.elapsed().as_secs_f64() * 1e3);
         }
 

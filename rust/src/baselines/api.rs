@@ -75,6 +75,14 @@ impl UnmanagedApi {
         outcome
     }
 
+    /// Scenario rate-limit flap: scale every endpoint's provider limits
+    /// (the unmanaged client doesn't react — that's its defining flaw).
+    pub fn scale_limits(&mut self, factor: f64) {
+        for ep in self.endpoints.values_mut() {
+            ep.scale_limits(factor);
+        }
+    }
+
     /// Counters across endpoints: (ok, rate_limited, timeout, error).
     pub fn failure_counts(&self) -> (u64, u64, u64, u64) {
         let mut t = (0, 0, 0, 0);

@@ -19,6 +19,7 @@ use crate::action::{Action, TrajId};
 use crate::cluster::api::{ApiEndpoint, ApiOutcome};
 use crate::coordinator::backend::{Backend, Started, Verdict};
 use crate::rollout::workloads::Catalog;
+use crate::scenario::ScenarioEvent;
 use crate::sim::SimTime;
 use std::collections::HashMap;
 
@@ -262,6 +263,27 @@ impl Backend for BaselineBackend {
             GpuBaseline::None => {}
         }
         v
+    }
+
+    fn inject(&mut self, _now: SimTime, event: &ScenarioEvent) -> bool {
+        match event {
+            // a provider flap hits the unmanaged client like anything else;
+            // the client just keeps firing into it
+            ScenarioEvent::ApiLimitScale { factor } => match &mut self.api {
+                Some(api) => {
+                    api.scale_limits(*factor);
+                    true
+                }
+                None => false,
+            },
+            // static deployments pin weights to GPUs for the whole run and
+            // never restore; serverless reloads on every dispatch anyway —
+            // neither has a cache to storm
+            ScenarioEvent::GpuCacheFlush => false,
+            // pods are provisioned per-trajectory up front; the baseline has
+            // no mechanism to resize its pool mid-run (the paper's point)
+            ScenarioEvent::CpuPoolScale { .. } => false,
+        }
     }
 }
 

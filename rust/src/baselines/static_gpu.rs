@@ -85,7 +85,13 @@ impl StaticGpu {
     pub fn drain_started(&mut self, now: SimTime) -> Vec<Started> {
         let mut out = Vec::new();
         let mut started_pairs = Vec::new();
-        for (svc, dep) in self.services.iter_mut() {
+        // sorted service order: HashMap iteration varies across processes,
+        // and the drain order decides same-timestamp event ordering — this
+        // keeps recorded scenario traces byte-replayable
+        let mut ids: Vec<ServiceId> = self.services.keys().copied().collect();
+        ids.sort();
+        for svc in &ids {
+            let dep = self.services.get_mut(svc).expect("known service");
             while !dep.queue.is_empty() {
                 let free = dep.replicas.iter().position(|r| !r.busy);
                 let Some(ri) = free else { break };

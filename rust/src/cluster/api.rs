@@ -74,6 +74,9 @@ impl ApiEndpointSpec {
 #[derive(Debug)]
 pub struct ApiEndpoint {
     pub spec: ApiEndpointSpec,
+    /// spec limits at construction (baseline for `scale_limits`)
+    base_concurrency: u32,
+    base_quota: u32,
     in_flight: u32,
     window_start: SimTime,
     window_used: u32,
@@ -88,6 +91,8 @@ pub struct ApiEndpoint {
 impl ApiEndpoint {
     pub fn new(spec: ApiEndpointSpec, seed: u64) -> Self {
         ApiEndpoint {
+            base_concurrency: spec.max_concurrency,
+            base_quota: spec.quota,
             spec,
             in_flight: 0,
             window_start: SimTime::ZERO,
@@ -102,6 +107,17 @@ impl ApiEndpoint {
 
     pub fn in_flight(&self) -> u32 {
         self.in_flight
+    }
+
+    /// Provider-side limit change (scenario rate-limit flap): scale the
+    /// concurrency and window-quota limits to `factor` × their construction
+    /// baseline (floor 1 so the endpoint stays reachable). Requests already
+    /// in flight keep running; new admissions see the new limits.
+    pub fn scale_limits(&mut self, factor: f64) {
+        let f = factor.max(0.0);
+        self.spec.max_concurrency =
+            ((self.base_concurrency as f64 * f).round() as u32).max(1);
+        self.spec.quota = ((self.base_quota as f64 * f).round() as u32).max(1);
     }
 
     /// Remaining quota in the current window as of `now`.
@@ -230,6 +246,26 @@ mod tests {
             }
             e.finish(o);
         }
+    }
+
+    #[test]
+    fn scale_limits_flaps_and_restores() {
+        let mut e = ep(); // concurrency 2, quota 3
+        e.scale_limits(0.5);
+        assert_eq!(e.spec.max_concurrency, 1);
+        assert_eq!(e.spec.quota, 2);
+        let (o1, _) = e.issue(SimTime::ZERO);
+        assert_eq!(o1, ApiOutcome::Ok);
+        let (o2, _) = e.issue(SimTime::ZERO);
+        assert_eq!(o2, ApiOutcome::RateLimited, "flapped concurrency must bite");
+        // restore returns to the construction baseline, not a compounded value
+        e.scale_limits(1.0);
+        assert_eq!(e.spec.max_concurrency, 2);
+        assert_eq!(e.spec.quota, 3);
+        // floor at 1 even for extreme factors
+        e.scale_limits(0.0001);
+        assert_eq!(e.spec.max_concurrency, 1);
+        assert_eq!(e.spec.quota, 1);
     }
 
     #[test]

@@ -62,6 +62,8 @@ pub struct CpuNode {
     busy: Vec<bool>,
     free_count: u32,
     containers: HashMap<TrajId, Container>,
+    /// cores taken offline by a scenario pool-resize (held out of the pool)
+    cordoned: Vec<CoreId>,
 }
 
 impl CpuNode {
@@ -76,6 +78,7 @@ impl CpuNode {
             busy: vec![false; total],
             free_count: total as u32,
             containers: HashMap::new(),
+            cordoned: Vec::new(),
         }
     }
 
@@ -226,6 +229,32 @@ impl CpuNode {
         Ok(cores)
     }
 
+    /// Scenario pool-resize: grow or shrink the set of cordoned (offline)
+    /// cores toward `target`. Shrinking releases cores back to the pool;
+    /// growing is best-effort — only currently-free cores can be taken
+    /// (busy cores are never preempted). Returns the cordon size reached.
+    pub fn set_cordon(&mut self, target: u32) -> u32 {
+        while self.cordoned.len() as u32 > target {
+            let c = self.cordoned.pop().expect("cordon list non-empty");
+            self.release_core(c);
+        }
+        if (self.cordoned.len() as u32) < target {
+            let want = target - self.cordoned.len() as u32;
+            let take = want.min(self.free_count);
+            if take > 0 {
+                let cores = self
+                    .alloc_cores(take)
+                    .expect("free_count-bounded cordon allocation");
+                self.cordoned.extend(cores);
+            }
+        }
+        self.cordoned.len() as u32
+    }
+
+    pub fn cordoned_cores(&self) -> u32 {
+        self.cordoned.len() as u32
+    }
+
     fn domain_free(&self, d: u32) -> u32 {
         let base = (d * self.cores_per_numa) as usize;
         (0..self.cores_per_numa as usize)
@@ -323,6 +352,23 @@ mod tests {
         n.cgroup_assign(TrajId(9), cores).unwrap();
         n.destroy_container(TrajId(9)).unwrap();
         assert_eq!(n.free_cores(), 16);
+    }
+
+    #[test]
+    fn cordon_shrinks_and_restores_the_pool() {
+        let mut n = node(); // 16 cores
+        assert_eq!(n.set_cordon(8), 8);
+        assert_eq!(n.free_cores(), 8);
+        assert_eq!(n.cordoned_cores(), 8);
+        // allocations respect the shrunken pool
+        assert!(n.alloc_cores(9).is_none());
+        let _held = n.alloc_cores(6).unwrap();
+        // best-effort growth: only 2 cores are still free
+        assert_eq!(n.set_cordon(12), 10);
+        assert_eq!(n.free_cores(), 0);
+        // restore everything (the 6 busy cores stay allocated)
+        assert_eq!(n.set_cordon(0), 0);
+        assert_eq!(n.free_cores(), 10);
     }
 
     #[test]

@@ -98,6 +98,13 @@ impl GpuNode {
         self.cache.get(&Self::key(c)).copied()
     }
 
+    /// Drop every cached service residency (scenario restore-storm: models
+    /// a node-level fault that loses GPU memory contents — the invariant
+    /// host copies survive, so subsequent allocations restore cold).
+    pub fn flush_cache(&mut self) {
+        self.cache.clear();
+    }
+
     pub fn free_gpus(&self) -> u32 {
         self.free_chunks().iter().map(|c| c.size() as u32).sum()
     }
@@ -369,6 +376,13 @@ impl GpuCluster {
             return false;
         }
         true
+    }
+
+    /// Drop all service caches cluster-wide (see [`GpuNode::flush_cache`]).
+    pub fn flush_caches(&mut self) {
+        for n in &mut self.nodes {
+            n.flush_cache();
+        }
     }
 
     pub fn node_mut(&mut self, id: GpuNodeId) -> &mut GpuNode {

@@ -9,8 +9,9 @@ use crate::baselines::K8sCfg;
 use crate::coordinator::{RunCfg, TangramCfg};
 use crate::rollout::workloads::CatalogCfg;
 use crate::sim::SimDur;
+use crate::util::error::Result;
 use crate::util::json::Json;
-use anyhow::{anyhow, bail, Result};
+use crate::{bail, err};
 
 /// Which resource-management policy to deploy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -33,6 +34,26 @@ impl BackendKind {
             other => bail!("unknown backend {other}"),
         })
     }
+
+    /// Canonical CLI/config name (inverse of [`BackendKind::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Tangram => "tangram",
+            BackendKind::K8s => "k8s",
+            BackendKind::StaticGpu => "static",
+            BackendKind::Serverless => "serverless",
+            BackendKind::Unmanaged => "unmanaged",
+        }
+    }
+
+    /// All deployable backends, in reporting order.
+    pub const ALL: [BackendKind; 5] = [
+        BackendKind::Tangram,
+        BackendKind::K8s,
+        BackendKind::StaticGpu,
+        BackendKind::Serverless,
+        BackendKind::Unmanaged,
+    ];
 }
 
 /// Full experiment description.
@@ -58,25 +79,25 @@ impl Default for ExperimentCfg {
 impl ExperimentCfg {
     /// Load from a JSON file; unknown keys are rejected to catch typos.
     pub fn from_json(text: &str) -> Result<Self> {
-        let j = Json::parse(text).map_err(|e| anyhow!("config: {e}"))?;
-        let obj = j.as_obj().ok_or_else(|| anyhow!("config must be an object"))?;
+        let j = Json::parse(text).map_err(|e| err!("config: {e}"))?;
+        let obj = j.as_obj().ok_or_else(|| err!("config must be an object"))?;
         let mut cfg = ExperimentCfg::default();
         for (k, v) in obj {
             match k.as_str() {
                 "backend" => {
                     cfg.backend = BackendKind::parse(
-                        v.as_str().ok_or_else(|| anyhow!("backend must be a string"))?,
+                        v.as_str().ok_or_else(|| err!("backend must be a string"))?,
                     )?
                 }
                 "workloads" => {
                     cfg.workloads = v
                         .as_arr()
-                        .ok_or_else(|| anyhow!("workloads must be an array"))?
+                        .ok_or_else(|| err!("workloads must be an array"))?
                         .iter()
                         .map(|w| {
                             w.as_str()
                                 .map(String::from)
-                                .ok_or_else(|| anyhow!("workload must be a string"))
+                                .ok_or_else(|| err!("workload must be a string"))
                         })
                         .collect::<Result<_>>()?
                 }
@@ -136,7 +157,7 @@ impl ExperimentCfg {
 }
 
 fn need_u64(v: &Json, key: &str) -> Result<u64> {
-    v.as_u64().ok_or_else(|| anyhow!("'{key}' must be a non-negative integer"))
+    v.as_u64().ok_or_else(|| err!("'{key}' must be a non-negative integer"))
 }
 
 #[cfg(test)]

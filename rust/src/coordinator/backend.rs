@@ -7,6 +7,7 @@
 //! SGLang services, ServerlessLLM, fixed DoP) differ.
 
 use crate::action::{Action, ActionId, TrajId};
+use crate::scenario::ScenarioEvent;
 use crate::sim::{SimDur, SimTime};
 
 /// An action the backend has decided to start now.
@@ -72,4 +73,14 @@ pub trait Backend {
 
     /// GPUs/CPUs provisioned (for the resource-saving reports).
     fn provisioned(&self) -> Vec<(String, u64)>;
+
+    /// Apply a scenario fault/perturbation (rate-limit flap, cache flush,
+    /// pool resize). Returns `true` when the backend's substrate honored
+    /// it; the default ignores everything — static baselines are
+    /// deliberately inelastic, which is exactly the asymmetry the scenario
+    /// packs measure.
+    fn inject(&mut self, now: SimTime, event: &ScenarioEvent) -> bool {
+        let _ = (now, event);
+        false
+    }
 }

@@ -5,12 +5,19 @@
 //! step, a batch of trajectories rolls out (LLM generation interleaved with
 //! external actions on the backend), then the training phase runs on the
 //! internal GPU cluster, then the next step begins. Collects [`Metrics`].
+//!
+//! [`run_traced`] additionally wires in the scenario subsystem: timed
+//! [`ScenarioEvent`] fault injections delivered through
+//! [`Backend::inject`], and an optional [`TraceRecorder`] that captures
+//! every scheduling decision for differential replay.
 
 use super::backend::{Backend, Verdict};
 use crate::action::{Action, ActionId, ActionKind, ActionSpec, ActionState, TrajId};
 use crate::metrics::{ActionRecord, Metrics, StepRecord, TrajRecord, UtilSample};
 use crate::rollout::workloads::Catalog;
 use crate::rollout::{Phase, Workload};
+use crate::scenario::trace::{TraceKind, TraceRecorder};
+use crate::scenario::{ScenarioEvent, TimedEvent};
 use crate::sim::{Engine, SimDur, SimTime};
 use crate::util::rng::Rng;
 use std::collections::HashMap;
@@ -28,6 +35,10 @@ pub struct RunCfg {
     pub max_api_retries: u32,
     /// Max restarts of a trajectory that had a terminally-failed action.
     pub max_traj_restarts: u32,
+    /// Spread each step's trajectory arrivals evenly over this window
+    /// (ZERO = the thundering-herd batch arrival the paper measures;
+    /// scenario packs use it to model staggered dataset loading).
+    pub arrival_spread: SimDur,
 }
 
 impl Default for RunCfg {
@@ -39,6 +50,7 @@ impl Default for RunCfg {
             sample_every: SimDur::from_secs(5),
             max_api_retries: 3,
             max_traj_restarts: 2,
+            arrival_spread: SimDur::ZERO,
         }
     }
 }
@@ -51,6 +63,8 @@ enum Ev {
     ActionDone(ActionId),
     Wakeup,
     Sample,
+    /// Deliver scenario injection `i` to the backend.
+    Inject(usize),
 }
 
 struct TrajRt {
@@ -92,6 +106,12 @@ struct Driver<'a> {
     /// under a waiting backend would enqueue another Wakeup event and the
     /// event count explodes quadratically)
     wakeup_at: Option<SimTime>,
+    /// scenario fault timeline (delivered via `Ev::Inject`)
+    injections: &'a [TimedEvent],
+    /// decision-trace sink (scenario record/replay)
+    rec: Option<&'a mut TraceRecorder>,
+    /// actions submitted but not yet started (trace queue-depth gauge)
+    waiting: u64,
 }
 
 /// Run the experiment; returns collected metrics.
@@ -100,6 +120,20 @@ pub fn run(
     cat: &Catalog,
     workloads: &[Workload],
     cfg: &RunCfg,
+) -> Metrics {
+    run_traced(backend, cat, workloads, cfg, &[], None)
+}
+
+/// [`run`] with the scenario hooks: `injections` are delivered to
+/// [`Backend::inject`] at their timestamps, and every scheduling decision is
+/// recorded into `recorder` (when given) for differential replay.
+pub fn run_traced(
+    backend: &mut dyn Backend,
+    cat: &Catalog,
+    workloads: &[Workload],
+    cfg: &RunCfg,
+    injections: &[TimedEvent],
+    recorder: Option<&mut TraceRecorder>,
 ) -> Metrics {
     let mut d = Driver {
         backend,
@@ -124,9 +158,15 @@ pub fn run(
         next_action: 0,
         next_traj: 0,
         wakeup_at: None,
+        injections,
+        rec: recorder,
+        waiting: 0,
     };
     for wl in 0..d.wls.len() {
         d.eng.schedule_at(SimTime::ZERO, Ev::StepStart(wl));
+    }
+    for (i, te) in injections.iter().enumerate() {
+        d.eng.schedule_at(te.at, Ev::Inject(i));
     }
     d.eng.schedule_in(cfg.sample_every, Ev::Sample);
     while let Some((now, ev)) = d.eng.next() {
@@ -136,6 +176,13 @@ pub fn run(
 }
 
 impl Driver<'_> {
+    /// Record a trace event (no-op without a recorder).
+    fn trace(&mut self, at: SimTime, kind: TraceKind) {
+        if let Some(r) = self.rec.as_deref_mut() {
+            r.push(at, kind);
+        }
+    }
+
     fn handle(&mut self, now: SimTime, ev: Ev) {
         match ev {
             Ev::StepStart(wl) => self.step_start(now, wl),
@@ -161,24 +208,48 @@ impl Driver<'_> {
                     self.eng.schedule_in(self.cfg.sample_every, Ev::Sample);
                 }
             }
+            Ev::Inject(i) => self.inject(now, i),
         }
+    }
+
+    fn inject(&mut self, now: SimTime, i: usize) {
+        let event: ScenarioEvent = self.injections[i].event.clone();
+        let applied = self.backend.inject(now, &event);
+        self.trace(
+            now,
+            TraceKind::Inject { index: i as u64, desc: event.describe(), applied },
+        );
+        // capacity may have appeared (restored pool) or vanished; either way
+        // re-run admission so the backend's queues react at the fault instant
+        self.backend.tick(now);
+        self.pump(now);
     }
 
     fn step_start(&mut self, now: SimTime, wl: usize) {
         let state = &mut self.wls[wl];
+        let step = state.step;
         state.step_started = now;
         state.remaining = self.cfg.batch;
-        for _ in 0..self.cfg.batch {
+        let task = self.wls[wl].workload.task;
+        self.trace(now, TraceKind::StepStart { task: task.0, step });
+        for i in 0..self.cfg.batch {
             let t = TrajId(self.next_traj);
             self.next_traj += 1;
             let plan = self.wls[wl].workload.gen_trajectory(self.cat, &mut self.rng);
+            // staggered arrivals: trajectory i of the batch enters at an
+            // even offset inside the spread window (ZERO ⇒ thundering herd)
+            let offset = if self.cfg.arrival_spread.0 == 0 {
+                SimDur::ZERO
+            } else {
+                SimDur(self.cfg.arrival_spread.0 * i as u64 / self.cfg.batch as u64)
+            };
             self.trajs.insert(
                 t,
                 TrajRt {
                     plan,
                     wl,
                     phase: 0,
-                    started: now,
+                    started: now + offset,
                     gen: SimDur::ZERO,
                     tool: SimDur::ZERO,
                     reward: SimDur::ZERO,
@@ -187,7 +258,8 @@ impl Driver<'_> {
                     env_bound: false,
                 },
             );
-            self.eng.schedule_at(now, Ev::TrajStart(t));
+            self.trace(now, TraceKind::TrajSpawn { traj: t.0, task: task.0 });
+            self.eng.schedule_at(now + offset, Ev::TrajStart(t));
         }
     }
 
@@ -242,9 +314,20 @@ impl Driver<'_> {
                     true_dur: tpl.true_dur,
                 };
                 rt.phase += 1;
+                let kind = spec.kind;
                 let a = Action::new(id, spec, now);
                 self.backend.submit(now, &a);
                 self.actions.insert(id, a);
+                self.waiting += 1;
+                self.trace(
+                    now,
+                    TraceKind::Submit {
+                        action: id.0,
+                        traj: t.0,
+                        kind: kind.name().to_string(),
+                        queue_depth: self.waiting,
+                    },
+                );
                 self.pump(now);
             }
         }
@@ -253,6 +336,10 @@ impl Driver<'_> {
     fn finish_traj(&mut self, now: SimTime, t: TrajId) {
         let rt = self.trajs.remove(&t).unwrap();
         self.backend.traj_end(now, t);
+        self.trace(
+            now,
+            TraceKind::TrajEnd { traj: t.0, failed: rt.failed, restarts: rt.restarts },
+        );
         self.metrics.trajectories.push(TrajRecord {
             id: t,
             task: rt.plan.task,
@@ -267,9 +354,12 @@ impl Driver<'_> {
         let wl = &mut self.wls[rt.wl];
         wl.remaining -= 1;
         if wl.remaining == 0 {
+            let task = wl.workload.task.0;
+            let step = wl.step;
+            let rollout = now - wl.step_started;
             self.metrics.steps.push(StepRecord {
                 index: wl.step,
-                rollout_dur: now - wl.step_started,
+                rollout_dur: rollout,
                 train_dur: wl.workload.train_dur,
             });
             wl.step += 1;
@@ -280,6 +370,7 @@ impl Driver<'_> {
             } else {
                 wl.done = true;
             }
+            self.trace(now, TraceKind::StepEnd { task, step, rollout_ns: rollout.0 });
         }
         // resources freed (container teardown) — others may start now
         self.pump(now);
@@ -298,6 +389,17 @@ impl Driver<'_> {
             a.allocated_units = s.units;
             a.overhead += s.overhead;
             self.attempt.insert(s.action, (s.overhead, s.exec));
+            self.waiting = self.waiting.saturating_sub(1);
+            self.trace(
+                now,
+                TraceKind::Start {
+                    action: s.action.0,
+                    units: s.units,
+                    overhead_ns: s.overhead.0,
+                    exec_ns: s.exec.0,
+                    queue_depth: self.waiting,
+                },
+            );
             self.eng.schedule_in(s.overhead + s.exec, Ev::ActionDone(s.action));
         }
         if let Some(at) = self.backend.next_wakeup(now) {
@@ -320,13 +422,27 @@ impl Driver<'_> {
                 let a = self.actions.get_mut(&id).unwrap();
                 a.retry_count += 1;
                 a.state = ActionState::Waiting;
+                let retries = a.retry_count;
                 let snapshot = a.clone();
                 self.backend.submit(now, &snapshot);
+                self.waiting += 1;
+                self.trace(
+                    now,
+                    TraceKind::Complete { action: id.0, outcome: "retry".to_string(), retries },
+                );
             }
             Verdict::Done | Verdict::Failed => {
                 let failed = effective == Verdict::Failed;
                 let a = self.actions.remove(&id).unwrap();
                 let (overhead, _exec) = self.attempt.remove(&id).unwrap_or_default();
+                self.trace(
+                    now,
+                    TraceKind::Complete {
+                        action: id.0,
+                        outcome: if failed { "failed" } else { "done" }.to_string(),
+                        retries: a.retry_count,
+                    },
+                );
                 self.metrics.actions.push(ActionRecord {
                     id,
                     task: a.spec.task,

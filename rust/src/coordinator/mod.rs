@@ -6,7 +6,7 @@ pub mod driver;
 pub mod tangram;
 
 pub use backend::{Backend, Started, Verdict};
-pub use driver::{run, RunCfg};
+pub use driver::{run, run_traced, RunCfg};
 pub use tangram::{TangramBackend, TangramCfg};
 
 #[cfg(test)]

@@ -11,9 +11,10 @@ use super::backend::{Backend, Started, Verdict};
 use crate::action::{Action, ActionId, ResourceKindId, TrajId};
 use crate::cluster::api::{ApiEndpoint, ApiOutcome};
 use crate::cluster::cpu::{CpuLatency, NodeId};
-use crate::managers::{BasicManager, CpuManager, GpuManager, ServiceSpec};
 use crate::cluster::gpu::RestoreModel;
+use crate::managers::{BasicManager, CpuManager, GpuManager, ServiceSpec};
 use crate::rollout::workloads::Catalog;
+use crate::scenario::ScenarioEvent;
 use crate::scheduler::{ElasticScheduler, ResourceState, SchedulerConfig};
 use crate::sim::{SimDur, SimTime};
 use std::collections::{HashMap, HashSet};
@@ -296,14 +297,18 @@ impl TangramBackend {
         }
     }
 
+    /// Every pool in *sorted* order. HashMap iteration order varies across
+    /// processes (RandomState), and the pool order decides the ordering of
+    /// same-timestamp `Started` events — sorting is what makes recorded
+    /// traces replay byte-identically in a fresh process.
     fn all_pools(&self) -> Vec<Pool> {
-        let mut pools: Vec<Pool> = self
-            .cpu_queues
-            .keys()
-            .map(|&n| Pool::CpuNode(n))
-            .collect();
+        let mut nodes: Vec<NodeId> = self.cpu_queues.keys().copied().collect();
+        nodes.sort();
+        let mut pools: Vec<Pool> = nodes.into_iter().map(Pool::CpuNode).collect();
         pools.push(Pool::Gpu);
-        pools.extend(self.api_queues.keys().map(|&k| Pool::Api(k)));
+        let mut kinds: Vec<ResourceKindId> = self.api_queues.keys().copied().collect();
+        kinds.sort();
+        pools.extend(kinds.into_iter().map(Pool::Api));
         pools
     }
 
@@ -423,5 +428,30 @@ impl Backend for TangramBackend {
             ("cpu_cores".into(), self.cpu.total_cores()),
             ("gpus".into(), self.gpu.total_gpus() as u64),
         ]
+    }
+
+    fn inject(&mut self, _now: SimTime, event: &ScenarioEvent) -> bool {
+        match event {
+            ScenarioEvent::ApiLimitScale { factor } => {
+                for (kind, ep) in self.endpoints.iter_mut() {
+                    ep.scale_limits(*factor);
+                    if let Some(mgr) = self.api_mgrs.get_mut(kind) {
+                        // track the provider: re-derive the 90%-of-limit
+                        // admission margin from the flapped spec
+                        mgr.limit =
+                            ((ep.spec.max_concurrency as f64 * 0.9) as u64).max(1);
+                    }
+                }
+                !self.endpoints.is_empty()
+            }
+            ScenarioEvent::GpuCacheFlush => {
+                self.gpu.flush_caches();
+                true
+            }
+            ScenarioEvent::CpuPoolScale { factor } => {
+                self.cpu.set_pool_scale(*factor);
+                true
+            }
+        }
     }
 }

@@ -25,6 +25,7 @@ pub mod metrics;
 pub mod config;
 pub mod rollout;
 pub mod runtime;
+pub mod scenario;
 pub mod scheduler;
 pub mod sim;
 pub mod testkit;

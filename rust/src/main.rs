@@ -3,6 +3,9 @@
 //! Subcommands:
 //!   run        run an experiment (workloads × backend) in the DES and print
 //!              the metric report; `--config file.json` or flags
+//!   scenario   record/replay deterministic scenario traces: run a named
+//!              pack (or a spec file), capture every scheduling decision as
+//!              JSONL, and byte-diff a later replay against it
 //!   serve      load the AOT artifacts and run a reward-scoring smoke loop
 //!              through the coordinator (PJRT on the hot path)
 //!   version    print build info
@@ -10,14 +13,20 @@
 //! Examples:
 //!   arl-tangram run --workloads coding --backend tangram --batch 256
 //!   arl-tangram run --config experiments/coding.json
+//!   arl-tangram scenario --list
+//!   arl-tangram scenario --pack api-flap --backend tangram --record t.jsonl
+//!   arl-tangram scenario --replay t.jsonl
 //!   arl-tangram serve --artifacts artifacts
 
 use arl_tangram::action::TaskId;
-use arl_tangram::baselines::{BaselineBackend, ServerlessCfg};
 use arl_tangram::config::{BackendKind, ExperimentCfg};
-use arl_tangram::coordinator::{run, Backend, TangramBackend};
+use arl_tangram::coordinator::{run, Backend};
 use arl_tangram::rollout::workloads::{Catalog, Workload, WorkloadKind};
 use arl_tangram::runtime::{PjrtEngine, RewardModel};
+use arl_tangram::scenario::{
+    build_backend, builtin_packs, pack_by_name, read_trace_file, replay_trace, run_scenario,
+    summary_json, write_trace_file, ScenarioSpec,
+};
 use arl_tangram::util::cli::Args;
 use arl_tangram::util::logging;
 
@@ -31,13 +40,14 @@ fn main() {
     };
     let code = match sub.as_str() {
         "run" => cmd_run(argv),
+        "scenario" => cmd_scenario(argv),
         "serve" => cmd_serve(argv),
         "version" => {
             println!("arl-tangram {}", arl_tangram::crate_version());
             0
         }
         other => {
-            eprintln!("unknown subcommand '{other}' (expected: run | serve | version)");
+            eprintln!("unknown subcommand '{other}' (expected: run | scenario | serve | version)");
             2
         }
     };
@@ -63,7 +73,7 @@ fn cmd_run(argv: Vec<String>) -> i32 {
 
     let cfg = if !args.str("config").is_empty() {
         match std::fs::read_to_string(args.str("config"))
-            .map_err(anyhow::Error::from)
+            .map_err(arl_tangram::util::error::Error::from)
             .and_then(|t| ExperimentCfg::from_json(&t))
         {
             Ok(c) => c,
@@ -103,42 +113,14 @@ fn cmd_run(argv: Vec<String>) -> i32 {
         .iter()
         .enumerate()
         .map(|(i, w)| {
-            let kind = match w.as_str() {
-                "coding" => WorkloadKind::Coding,
-                "deepsearch" => WorkloadKind::DeepSearch,
-                _ => WorkloadKind::Mopd,
-            };
+            // cfg.validate() already rejected unknown names
+            let kind = WorkloadKind::parse(w).unwrap_or(WorkloadKind::Mopd);
             Workload::new(TaskId(i as u32), kind)
         })
         .collect();
 
-    let mut tangram;
-    let mut baseline;
-    let backend: &mut dyn Backend = match cfg.backend {
-        BackendKind::Tangram => {
-            tangram = TangramBackend::new(&cat, cfg.tangram_cfg());
-            &mut tangram
-        }
-        BackendKind::K8s => {
-            baseline = BaselineBackend::coding(&cat, cfg.k8s_cfg());
-            &mut baseline
-        }
-        BackendKind::StaticGpu => {
-            baseline = BaselineBackend::mopd_search(&cat);
-            &mut baseline
-        }
-        BackendKind::Serverless => {
-            baseline = BaselineBackend::serverless(
-                &cat,
-                ServerlessCfg { gpu_nodes: cfg.catalog.gpu_nodes, ..ServerlessCfg::default() },
-            );
-            &mut baseline
-        }
-        BackendKind::Unmanaged => {
-            baseline = BaselineBackend::deepsearch(&cat);
-            &mut baseline
-        }
-    };
+    // same BackendKind→deployment matrix as `arl-tangram scenario`
+    let mut backend = build_backend(&cfg.catalog, &cat, cfg.backend);
 
     let name = backend.name();
     println!(
@@ -146,7 +128,7 @@ fn cmd_run(argv: Vec<String>) -> i32 {
         cfg.workloads, cfg.run.batch, cfg.run.steps, cfg.run.seed
     );
     let t = std::time::Instant::now();
-    let m = run(backend, &cat, &wls, &cfg.run);
+    let m = run(backend.as_mut(), &cat, &wls, &cfg.run);
     println!("simulated in {:.1}s wall\n", t.elapsed().as_secs_f64());
     println!("trajectories        : {}", m.trajectories.len());
     println!("actions             : {} ({} failed, {} retries)", m.actions.len(), m.failed_actions(), m.total_retries());
@@ -159,6 +141,143 @@ fn cmd_run(argv: Vec<String>) -> i32 {
         println!("provisioned {pool:<8}: {prov:9}");
     }
     0
+}
+
+fn cmd_scenario(argv: Vec<String>) -> i32 {
+    let args = match Args::new("record/replay deterministic scenario traces")
+        .opt("pack", "", "built-in scenario pack (see --list)")
+        .opt("spec", "", "scenario spec JSON file (overrides --pack)")
+        .opt("backend", "tangram", "tangram | k8s | static | serverless | unmanaged")
+        .opt("seed", "", "override the spec's seed")
+        .opt("record", "", "write the decision trace + summary to this JSONL file")
+        .opt("replay", "", "re-run a recorded trace file and diff (exit 1 on divergence)")
+        .flag("list", "list built-in scenario packs")
+        .parse_from(argv)
+    {
+        Ok(a) => a,
+        Err(usage) => {
+            eprintln!("{usage}");
+            return 2;
+        }
+    };
+
+    if args.bool("list") {
+        for p in builtin_packs() {
+            let wls: Vec<&str> = p.workloads.iter().map(|w| w.name()).collect();
+            println!(
+                "{:<16} workloads=[{}] batch={} steps={} seed={} events={}",
+                p.name,
+                wls.join(","),
+                p.batch,
+                p.steps,
+                p.seed,
+                p.events.len()
+            );
+        }
+        return 0;
+    }
+
+    // ---- replay path ----------------------------------------------------
+    if !args.str("replay").is_empty() {
+        let recorded = match read_trace_file(&args.str("replay")) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("replay error: {e}");
+                return 2;
+            }
+        };
+        println!(
+            "replaying '{}' on {} ({} recorded events)",
+            recorded.spec.name,
+            recorded.backend.name(),
+            recorded.events.len()
+        );
+        let report = match replay_trace(&recorded) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("replay error: {e}");
+                return 2;
+            }
+        };
+        if report.identical {
+            println!(
+                "replay OK: {} events and metrics summary byte-identical",
+                report.replayed_events
+            );
+            return 0;
+        }
+        eprintln!("REPLAY DIVERGED");
+        if let Some(d) = &report.summary_diff {
+            eprintln!("  summary: {d}");
+        }
+        for d in &report.trace_divergences {
+            eprintln!("  {d}");
+        }
+        1
+    } else {
+        // ---- record/run path --------------------------------------------
+        let mut spec = if !args.str("spec").is_empty() {
+            match std::fs::read_to_string(args.str("spec"))
+                .map_err(arl_tangram::util::error::Error::from)
+                .and_then(|t| ScenarioSpec::from_json(&t))
+            {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("spec error: {e}");
+                    return 2;
+                }
+            }
+        } else if !args.str("pack").is_empty() {
+            match pack_by_name(&args.str("pack")) {
+                Some(s) => s,
+                None => {
+                    eprintln!(
+                        "unknown pack '{}' — try `arl-tangram scenario --list`",
+                        args.str("pack")
+                    );
+                    return 2;
+                }
+            }
+        } else {
+            eprintln!("need --pack, --spec, --replay, or --list");
+            return 2;
+        };
+        if !args.str("seed").is_empty() {
+            spec.seed = args.u64("seed");
+        }
+        let backend = match BackendKind::parse(&args.str("backend")) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        let t = std::time::Instant::now();
+        let outcome = match run_scenario(&spec, backend) {
+            Ok(o) => o,
+            Err(e) => {
+                eprintln!("scenario error: {e}");
+                return 2;
+            }
+        };
+        println!(
+            "scenario '{}' on {}: {} trace events in {:.1}s wall",
+            spec.name,
+            backend.name(),
+            outcome.events.len(),
+            t.elapsed().as_secs_f64()
+        );
+        println!("summary: {}", summary_json(&outcome.metrics));
+        if !args.str("record").is_empty() {
+            let path = args.str("record");
+            if let Err(e) = write_trace_file(&path, &spec, backend, &outcome) {
+                eprintln!("{e}");
+                return 1;
+            }
+            println!("trace written to {path} (verify with: arl-tangram scenario --replay {path})");
+        }
+        0
+    }
 }
 
 fn cmd_serve(argv: Vec<String>) -> i32 {

@@ -172,9 +172,31 @@ impl CpuManager {
     }
 
     /// Fraction of all cores currently allocated (utilization sample).
+    /// Cordoned cores count as busy — an offline core is not idle capacity.
     pub fn utilization(&self) -> f64 {
         let total = self.total_cores() as f64;
         (total - self.free_cores() as f64) / total
+    }
+
+    /// Scenario pool-resize: keep only `available_frac` of every node's
+    /// cores schedulable (best-effort — busy cores are never preempted; at
+    /// least one core per node stays online so minimum-width actions keep
+    /// making progress). `1.0` restores the full pool. Returns the total
+    /// cordoned core count reached.
+    pub fn set_pool_scale(&mut self, available_frac: f64) -> u32 {
+        let f = available_frac.clamp(0.0, 1.0);
+        let mut cordoned = 0;
+        for n in &mut self.nodes {
+            let total = n.total_cores();
+            let avail_target = ((total as f64 * f).round() as u32).clamp(1, total);
+            cordoned += n.set_cordon(total - avail_target);
+        }
+        cordoned
+    }
+
+    /// Cores currently cordoned (offline) across the cluster.
+    pub fn cordoned_cores(&self) -> u32 {
+        self.nodes.iter().map(|n| n.cordoned_cores()).sum()
     }
 }
 
@@ -299,6 +321,19 @@ mod tests {
             .find(|&n| n != node)
             .unwrap();
         assert!(m.node_state(other).running_completions().is_empty());
+    }
+
+    #[test]
+    fn pool_scale_cordons_and_restores() {
+        let mut m = mgr(); // 2 nodes × 8 cores
+        assert_eq!(m.set_pool_scale(0.5), 8);
+        assert_eq!(m.free_cores(), 8);
+        assert_eq!(m.cordoned_cores(), 8);
+        // at least one core per node always stays online
+        assert_eq!(m.set_pool_scale(0.05), 14);
+        assert_eq!(m.free_cores(), 2);
+        assert_eq!(m.set_pool_scale(1.0), 0);
+        assert_eq!(m.free_cores(), 16);
     }
 
     #[test]

@@ -181,6 +181,13 @@ impl GpuManager {
         Ok(())
     }
 
+    /// Scenario restore-storm: drop every warm (service, DoP) residency so
+    /// the next allocation of each variant pays a cold restore. Running
+    /// actions are unaffected (their chunks re-cache on release).
+    pub fn flush_caches(&mut self) {
+        self.cluster.flush_caches();
+    }
+
     /// Warm-hit ratio over all allocations so far.
     pub fn warm_ratio(&self) -> f64 {
         let total = self.n_warm + self.n_cold;
@@ -316,6 +323,18 @@ mod tests {
         // reserving those 4 leaves nothing
         let op2 = m.dp_operator(&[4]);
         assert_eq!(op2.max_alloc(), 0);
+    }
+
+    #[test]
+    fn flush_forces_cold_restart() {
+        let mut m = mgr(1, 1);
+        let l1 = m.allocate(ActionId(1), ServiceId(0), 4, SimTime(1)).unwrap();
+        assert!(!l1.warm);
+        m.complete(ActionId(1), SimTime(1)).unwrap();
+        m.flush_caches();
+        let l2 = m.allocate(ActionId(2), ServiceId(0), 4, SimTime(2)).unwrap();
+        assert!(!l2.warm, "flushed cache must force a cold restore");
+        assert_eq!(m.n_cold, 2);
     }
 
     #[test]

@@ -7,6 +7,7 @@
 
 use crate::action::{ActionId, ActionKind, TaskId, TrajId};
 use crate::sim::{SimDur, SimTime};
+use crate::util::json::Json;
 use crate::util::{mean, percentile};
 use std::collections::HashMap;
 
@@ -222,6 +223,65 @@ impl Metrics {
     pub fn total_retries(&self) -> u64 {
         self.actions.iter().map(|a| a.retries as u64).sum()
     }
+
+    /// Full-fidelity deterministic JSON serialization: every record, all
+    /// times as integer virtual nanoseconds, object keys sorted. Two
+    /// same-seed runs must serialize **byte-identically** — this is the
+    /// diff target of the scenario replay engine (`scenario::replay`) and
+    /// the system-level determinism tests.
+    pub fn to_json(&self) -> Json {
+        fn ns(n: u64) -> Json {
+            Json::Num(n as f64)
+        }
+        let actions = Json::arr(self.actions.iter().map(|a| {
+            Json::obj(vec![
+                ("id", ns(a.id.0)),
+                ("task", ns(a.task.0 as u64)),
+                ("traj", ns(a.trajectory.0)),
+                ("kind", Json::str(a.kind.name())),
+                ("submitted", ns(a.submitted.0)),
+                ("started", ns(a.started.0)),
+                ("finished", ns(a.finished.0)),
+                ("overhead", ns(a.overhead.0)),
+                ("units", ns(a.units)),
+                ("retries", ns(a.retries as u64)),
+                ("failed", Json::Bool(a.failed)),
+            ])
+        }));
+        let trajectories = Json::arr(self.trajectories.iter().map(|t| {
+            Json::obj(vec![
+                ("id", ns(t.id.0)),
+                ("task", ns(t.task.0 as u64)),
+                ("started", ns(t.started.0)),
+                ("finished", ns(t.finished.0)),
+                ("gen_dur", ns(t.gen_dur.0)),
+                ("tool_dur", ns(t.tool_dur.0)),
+                ("reward_dur", ns(t.reward_dur.0)),
+                ("failed", Json::Bool(t.failed)),
+                ("restarts", ns(t.restarts as u64)),
+            ])
+        }));
+        let steps = Json::arr(self.steps.iter().map(|s| {
+            Json::obj(vec![
+                ("index", ns(s.index as u64)),
+                ("rollout_dur", ns(s.rollout_dur.0)),
+                ("train_dur", ns(s.train_dur.0)),
+            ])
+        }));
+        let util = Json::arr(self.util.iter().map(|u| {
+            Json::obj(vec![
+                ("at", ns(u.at.0)),
+                ("name", Json::str(u.name.clone())),
+                ("value", Json::num(u.value)),
+            ])
+        }));
+        Json::obj(vec![
+            ("actions", actions),
+            ("steps", steps),
+            ("trajectories", trajectories),
+            ("util", util),
+        ])
+    }
 }
 
 #[cfg(test)]
@@ -300,6 +360,32 @@ mod tests {
         };
         assert!((t.active_ratio() - 0.47).abs() < 1e-9);
         assert_eq!(t.lifetime(), SimDur::from_secs(100));
+    }
+
+    #[test]
+    fn to_json_is_deterministic_and_complete() {
+        let mut m = Metrics::new();
+        m.actions.push(rec(1, 0, 2, 10, ActionKind::EnvExec));
+        m.steps.push(StepRecord {
+            index: 0,
+            rollout_dur: SimDur::from_secs(10),
+            train_dur: SimDur::from_secs(5),
+        });
+        m.util.push(UtilSample { at: SimTime(3), name: "cpu".into(), value: 0.5 });
+        let a = m.to_json().to_string();
+        let b = m.to_json().to_string();
+        assert_eq!(a, b);
+        let j = Json::parse(&a).unwrap();
+        assert_eq!(j.get("actions").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(
+            j.path(&["actions"]).unwrap().as_arr().unwrap()[0]
+                .get("kind")
+                .unwrap()
+                .as_str(),
+            Some("env_exec")
+        );
+        assert_eq!(j.get("steps").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(j.get("util").unwrap().as_arr().unwrap().len(), 1);
     }
 
     #[test]

@@ -142,6 +142,16 @@ impl WorkloadKind {
             WorkloadKind::Mopd => "mopd",
         }
     }
+
+    /// Inverse of [`WorkloadKind::name`] (config/spec parsing).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "coding" => Some(WorkloadKind::Coding),
+            "deepsearch" => Some(WorkloadKind::DeepSearch),
+            "mopd" => Some(WorkloadKind::Mopd),
+            _ => None,
+        }
+    }
 }
 
 /// One RL task generating trajectories of a given kind.

@@ -1,7 +1,8 @@
 //! `artifacts/meta.json` — the calling-convention contract with aot.py.
 
+use crate::err;
+use crate::util::error::Result;
 use crate::util::json::Json;
-use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
 
 /// One parameter-pytree leaf (flattening order = artifact argument order).
@@ -39,23 +40,23 @@ pub struct ArtifactMeta {
 
 fn leafs(j: &Json) -> Result<Vec<LeafSpec>> {
     j.as_arr()
-        .ok_or_else(|| anyhow!("params not an array"))?
+        .ok_or_else(|| err!("params not an array"))?
         .iter()
         .map(|l| {
             Ok(LeafSpec {
                 name: l
                     .get("name")
                     .and_then(Json::as_str)
-                    .ok_or_else(|| anyhow!("leaf missing name"))?
+                    .ok_or_else(|| err!("leaf missing name"))?
                     .to_string(),
                 shape: l
                     .get("shape")
                     .and_then(Json::as_arr)
-                    .ok_or_else(|| anyhow!("leaf missing shape"))?
+                    .ok_or_else(|| err!("leaf missing shape"))?
                     .iter()
                     .map(|d| d.as_u64().map(|v| v as usize))
                     .collect::<Option<Vec<_>>>()
-                    .ok_or_else(|| anyhow!("bad shape"))?,
+                    .ok_or_else(|| err!("bad shape"))?,
                 dtype: l
                     .get("dtype")
                     .and_then(Json::as_str)
@@ -71,8 +72,8 @@ fn model(j: &Json) -> Result<ModelMeta> {
         param_count: j
             .get("param_count")
             .and_then(Json::as_u64)
-            .ok_or_else(|| anyhow!("missing param_count"))?,
-        params: leafs(j.get("params").ok_or_else(|| anyhow!("missing params"))?)?,
+            .ok_or_else(|| err!("missing param_count"))?,
+        params: leafs(j.get("params").ok_or_else(|| err!("missing params"))?)?,
         batch: j.get("batch").and_then(Json::as_u64).unwrap_or(1) as usize,
         seq: j.get("seq").and_then(Json::as_u64).unwrap_or(1) as usize,
         vocab: j
@@ -84,26 +85,26 @@ fn model(j: &Json) -> Result<ModelMeta> {
 
 impl ArtifactMeta {
     pub fn parse(text: &str) -> Result<Self> {
-        let j = Json::parse(text).map_err(|e| anyhow!("meta.json: {e}"))?;
+        let j = Json::parse(text).map_err(|e| err!("meta.json: {e}"))?;
         let artifacts = j
             .get("artifacts")
             .and_then(Json::as_obj)
-            .ok_or_else(|| anyhow!("missing artifacts"))?
+            .ok_or_else(|| err!("missing artifacts"))?
             .iter()
             .map(|(k, v)| {
                 Ok((
                     k.clone(),
-                    v.as_str().ok_or_else(|| anyhow!("bad artifact path"))?.to_string(),
+                    v.as_str().ok_or_else(|| err!("bad artifact path"))?.to_string(),
                 ))
             })
             .collect::<Result<BTreeMap<_, _>>>()?;
         Ok(ArtifactMeta {
-            policy: model(j.get("policy").ok_or_else(|| anyhow!("missing policy"))?)?,
-            reward: model(j.get("reward").ok_or_else(|| anyhow!("missing reward"))?)?,
+            policy: model(j.get("policy").ok_or_else(|| err!("missing policy"))?)?,
+            reward: model(j.get("reward").ok_or_else(|| err!("missing reward"))?)?,
             n_param_arrays: j
                 .path(&["train", "n_param_arrays"])
                 .and_then(Json::as_u64)
-                .ok_or_else(|| anyhow!("missing n_param_arrays"))? as usize,
+                .ok_or_else(|| err!("missing n_param_arrays"))? as usize,
             artifacts,
         })
     }

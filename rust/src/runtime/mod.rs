@@ -1,99 +1,28 @@
 //! PJRT runtime: load the AOT-lowered HLO-text artifacts and execute them
 //! from the Rust hot path (Python never runs at serving/training time).
 //!
-//! The interchange format is HLO *text* — see `python/compile/aot.py` and
-//! /opt/xla-example/README.md for why serialized protos don't round-trip
-//! through xla_extension 0.5.1.
+//! The heavy half binds to vendored `xla` PJRT bindings and is gated behind
+//! `--cfg arl_pjrt`; the default (offline, zero-dependency) build swaps in
+//! [`stub`], which exposes the same types with constructors that fail with
+//! an actionable message. [`meta`] — the calling-convention contract with
+//! `python/compile/aot.py` — is pure JSON and always available.
 
 pub mod meta;
+
+#[cfg(arl_pjrt)]
+mod pjrt;
+#[cfg(arl_pjrt)]
 pub mod trainer;
 
+#[cfg(not(arl_pjrt))]
+mod stub;
+
 pub use meta::{ArtifactMeta, LeafSpec};
+
+#[cfg(arl_pjrt)]
+pub use pjrt::{f32_matrix, f32_vector, tokens_literal, PjrtEngine};
+#[cfg(arl_pjrt)]
 pub use trainer::{RewardModel, Trainer};
 
-use anyhow::{anyhow, Context, Result};
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-
-/// A loaded PJRT engine: CPU client + compiled executables per artifact.
-pub struct PjrtEngine {
-    client: xla::PjRtClient,
-    exes: HashMap<String, xla::PjRtLoadedExecutable>,
-    pub meta: ArtifactMeta,
-    dir: PathBuf,
-}
-
-impl PjrtEngine {
-    /// Load `meta.json` and compile every artifact it lists.
-    pub fn load(artifact_dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = artifact_dir.as_ref().to_path_buf();
-        let meta_path = dir.join("meta.json");
-        let meta_text = std::fs::read_to_string(&meta_path)
-            .with_context(|| format!("reading {meta_path:?} — run `make artifacts` first"))?;
-        let meta = ArtifactMeta::parse(&meta_text)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e}"))?;
-        let mut exes = HashMap::new();
-        for (name, file) in &meta.artifacts {
-            let path = dir.join(file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )
-            .map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compiling {name}: {e}"))?;
-            exes.insert(name.clone(), exe);
-        }
-        Ok(PjrtEngine { client, exes, meta, dir })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    pub fn artifact_dir(&self) -> &Path {
-        &self.dir
-    }
-
-    pub fn has(&self, name: &str) -> bool {
-        self.exes.contains_key(name)
-    }
-
-    /// Execute an artifact: flat literal inputs → flat literal outputs
-    /// (artifacts are lowered with `return_tuple=True`; this un-tuples).
-    pub fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let exe = self
-            .exes
-            .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
-        let result = exe
-            .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow!("executing {name}: {e}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching result of {name}: {e}"))?;
-        lit.to_tuple().map_err(|e| anyhow!("untupling {name}: {e}"))
-    }
-}
-
-/// Build an `i32[batch, seq]` literal from row-major data.
-pub fn tokens_literal(data: &[i32], batch: usize, seq: usize) -> Result<xla::Literal> {
-    anyhow::ensure!(data.len() == batch * seq, "shape mismatch");
-    xla::Literal::vec1(data)
-        .reshape(&[batch as i64, seq as i64])
-        .map_err(|e| anyhow!("reshape: {e}"))
-}
-
-/// Build an `f32[batch, n]` literal.
-pub fn f32_matrix(data: &[f32], batch: usize, n: usize) -> Result<xla::Literal> {
-    anyhow::ensure!(data.len() == batch * n, "shape mismatch");
-    xla::Literal::vec1(data)
-        .reshape(&[batch as i64, n as i64])
-        .map_err(|e| anyhow!("reshape: {e}"))
-}
-
-/// Build an `f32[n]` vector literal.
-pub fn f32_vector(data: &[f32]) -> xla::Literal {
-    xla::Literal::vec1(data)
-}
+#[cfg(not(arl_pjrt))]
+pub use stub::{PjrtEngine, RewardModel, Trainer};

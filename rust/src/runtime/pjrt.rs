@@ -1,0 +1,96 @@
+//! The real PJRT engine (compiled only with `--cfg arl_pjrt`): load the
+//! AOT-lowered HLO-text artifacts and execute them from the Rust hot path.
+//!
+//! The interchange format is HLO *text* — see `python/compile/aot.py` and
+//! /opt/xla-example/README.md for why serialized protos don't round-trip
+//! through xla_extension 0.5.1.
+
+use super::meta::ArtifactMeta;
+use crate::util::error::{Error, Result};
+use crate::{ensure, err};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A loaded PJRT engine: CPU client + compiled executables per artifact.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub meta: ArtifactMeta,
+    dir: PathBuf,
+}
+
+impl PjrtEngine {
+    /// Load `meta.json` and compile every artifact it lists.
+    pub fn load(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifact_dir.as_ref().to_path_buf();
+        let meta_path = dir.join("meta.json");
+        let meta_text = std::fs::read_to_string(&meta_path).map_err(|e| {
+            Error::from(e).context(format!("reading {meta_path:?} — run `make artifacts` first"))
+        })?;
+        let meta = ArtifactMeta::parse(&meta_text)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| err!("PJRT client: {e}"))?;
+        let mut exes = HashMap::new();
+        for (name, file) in &meta.artifacts {
+            let path = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| err!("non-utf8 path"))?,
+            )
+            .map_err(|e| err!("parsing {path:?}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| err!("compiling {name}: {e}"))?;
+            exes.insert(name.clone(), exe);
+        }
+        Ok(PjrtEngine { client, exes, meta, dir })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.exes.contains_key(name)
+    }
+
+    /// Execute an artifact: flat literal inputs → flat literal outputs
+    /// (artifacts are lowered with `return_tuple=True`; this un-tuples).
+    pub fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| err!("unknown artifact {name}"))?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| err!("executing {name}: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| err!("fetching result of {name}: {e}"))?;
+        lit.to_tuple().map_err(|e| err!("untupling {name}: {e}"))
+    }
+}
+
+/// Build an `i32[batch, seq]` literal from row-major data.
+pub fn tokens_literal(data: &[i32], batch: usize, seq: usize) -> Result<xla::Literal> {
+    ensure!(data.len() == batch * seq, "shape mismatch");
+    xla::Literal::vec1(data)
+        .reshape(&[batch as i64, seq as i64])
+        .map_err(|e| err!("reshape: {e}"))
+}
+
+/// Build an `f32[batch, n]` literal.
+pub fn f32_matrix(data: &[f32], batch: usize, n: usize) -> Result<xla::Literal> {
+    ensure!(data.len() == batch * n, "shape mismatch");
+    xla::Literal::vec1(data)
+        .reshape(&[batch as i64, n as i64])
+        .map_err(|e| err!("reshape: {e}"))
+}
+
+/// Build an `f32[n]` vector literal.
+pub fn f32_vector(data: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}

@@ -1,0 +1,107 @@
+//! API-compatible stand-in for the PJRT runtime when the crate is built
+//! without the vendored `xla` bindings (the default — the offline build has
+//! no cargo registry). Every constructor fails with a clear message, so the
+//! launcher's `serve` subcommand and the examples degrade gracefully instead
+//! of failing to link.
+//!
+//! Build with `RUSTFLAGS="--cfg arl_pjrt"` (and the `xla` crate vendored)
+//! to swap in the real engine from [`super::pjrt`].
+
+use super::meta::ArtifactMeta;
+use crate::util::error::Result;
+use crate::{bail, err};
+use std::marker::PhantomData;
+use std::path::{Path, PathBuf};
+
+const UNAVAILABLE: &str =
+    "PJRT runtime not compiled in — vendor the xla bindings and rebuild with RUSTFLAGS=\"--cfg arl_pjrt\"";
+
+/// Stub engine: loading always fails (no PJRT client is linked).
+pub struct PjrtEngine {
+    pub meta: ArtifactMeta,
+    dir: PathBuf,
+}
+
+impl PjrtEngine {
+    pub fn load(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let _ = artifact_dir.as_ref();
+        bail!("{UNAVAILABLE}");
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn has(&self, _name: &str) -> bool {
+        false
+    }
+}
+
+/// Stub trainer, mirroring `runtime::trainer::Trainer`'s public surface.
+pub struct Trainer<'e> {
+    pub batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+    _eng: PhantomData<&'e PjrtEngine>,
+}
+
+impl<'e> Trainer<'e> {
+    pub fn init(_eng: &'e PjrtEngine, _seed: u32) -> Result<Self> {
+        Err(err!("{UNAVAILABLE}"))
+    }
+
+    pub fn logits(&self, _tokens: &[i32]) -> Result<Vec<f32>> {
+        Err(err!("{UNAVAILABLE}"))
+    }
+
+    pub fn logprobs(&self, _tokens: &[i32]) -> Result<Vec<f32>> {
+        Err(err!("{UNAVAILABLE}"))
+    }
+
+    pub fn train_step(
+        &mut self,
+        _tokens: &[i32],
+        _mask: &[f32],
+        _advantages: &[f32],
+        _old_logp: &[f32],
+        _lr: f32,
+    ) -> Result<f32> {
+        Err(err!("{UNAVAILABLE}"))
+    }
+
+    pub fn step_count(&self) -> Result<i32> {
+        Err(err!("{UNAVAILABLE}"))
+    }
+}
+
+/// Stub reward model, mirroring `runtime::trainer::RewardModel`.
+pub struct RewardModel<'e> {
+    pub batch: usize,
+    pub seq: usize,
+    _eng: PhantomData<&'e PjrtEngine>,
+}
+
+impl<'e> RewardModel<'e> {
+    pub fn init(_eng: &'e PjrtEngine, _seed: u32) -> Result<Self> {
+        Err(err!("{UNAVAILABLE}"))
+    }
+
+    pub fn score(&self, _tokens: &[i32], _mask: &[f32]) -> Result<Vec<f32>> {
+        Err(err!("{UNAVAILABLE}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_loudly_but_cleanly() {
+        let e = PjrtEngine::load("artifacts").unwrap_err();
+        assert!(e.to_string().contains("arl_pjrt"), "{e}");
+    }
+}

@@ -5,17 +5,18 @@
 //! the whole update is one compiled module, so Rust never touches math.
 
 use super::{f32_matrix, tokens_literal, PjrtEngine};
-use anyhow::{anyhow, ensure, Result};
+use crate::util::error::Result;
+use crate::{ensure, err};
 use xla::Literal;
 
 /// The xla crate's `Literal` is not `Clone` and `execute` consumes inputs;
 /// round-trip through host data to duplicate. (The §Perf pass replaces the
 /// per-step param copies with device-resident buffers if this shows up.)
 fn clone_lit(l: &Literal) -> Result<Literal> {
-    let shape = l.array_shape().map_err(|e| anyhow!("{e}"))?;
+    let shape = l.array_shape().map_err(|e| err!("{e}"))?;
     let dims: Vec<i64> = shape.dims().to_vec();
-    let v = l.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
-    Literal::vec1(&v).reshape(&dims).map_err(|e| anyhow!("{e}"))
+    let v = l.to_vec::<f32>().map_err(|e| err!("{e}"))?;
+    Literal::vec1(&v).reshape(&dims).map_err(|e| err!("{e}"))
 }
 
 /// The RL policy under training.
@@ -46,7 +47,7 @@ impl<'e> Trainer<'e> {
                     let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
                     Literal::vec1(&z)
                         .reshape(&dims)
-                        .map_err(|e| anyhow!("zeros: {e}"))
+                        .map_err(|e| err!("zeros: {e}"))
                 })
                 .collect()
         };
@@ -73,7 +74,7 @@ impl<'e> Trainer<'e> {
             .collect::<Result<_>>()?;
         inputs.push(t);
         let out = self.eng.run("policy_fwd", &inputs)?;
-        out[0].to_vec::<f32>().map_err(|e| anyhow!("{e}"))
+        out[0].to_vec::<f32>().map_err(|e| err!("{e}"))
     }
 
     /// Per-token behaviour log-probs: f32[batch, seq-1] flattened.
@@ -86,7 +87,7 @@ impl<'e> Trainer<'e> {
             .collect::<Result<_>>()?;
         inputs.push(t);
         let out = self.eng.run("policy_logprobs", &inputs)?;
-        out[0].to_vec::<f32>().map_err(|e| anyhow!("{e}"))
+        out[0].to_vec::<f32>().map_err(|e| err!("{e}"))
     }
 
     /// One GRPO Adam step; returns the loss. `mask`/`old_logp` are
@@ -116,7 +117,7 @@ impl<'e> Trainer<'e> {
             .pop()
             .unwrap()
             .get_first_element::<f32>()
-            .map_err(|e| anyhow!("{e}"))?;
+            .map_err(|e| err!("{e}"))?;
         self.step = out.pop().unwrap();
         self.v = out.split_off(2 * n);
         self.m = out.split_off(n);
@@ -125,12 +126,12 @@ impl<'e> Trainer<'e> {
     }
 
     fn clone_i32(l: &Literal) -> Result<Literal> {
-        let v = l.get_first_element::<i32>().map_err(|e| anyhow!("{e}"))?;
+        let v = l.get_first_element::<i32>().map_err(|e| err!("{e}"))?;
         Ok(Literal::scalar(v))
     }
 
     pub fn step_count(&self) -> Result<i32> {
-        self.step.get_first_element::<i32>().map_err(|e| anyhow!("{e}"))
+        self.step.get_first_element::<i32>().map_err(|e| err!("{e}"))
     }
 }
 
@@ -163,6 +164,6 @@ impl<'e> RewardModel<'e> {
         inputs.push(tokens_literal(tokens, self.batch, self.seq)?);
         inputs.push(f32_matrix(mask, self.batch, self.seq)?);
         let out = self.eng.run("reward_fwd", &inputs)?;
-        out[0].to_vec::<f32>().map_err(|e| anyhow!("{e}"))
+        out[0].to_vec::<f32>().map_err(|e| err!("{e}"))
     }
 }

@@ -1,0 +1,422 @@
+//! Scenario packs + deterministic trace-record/replay (the repo's quality
+//! ratchet for scheduler changes).
+//!
+//! The paper's evaluation covers three calibrated tasks; production-grade
+//! confidence needs *many* workload shapes. This subsystem makes workload
+//! composition declarative and every run auditable:
+//!
+//! * [`ScenarioSpec`] — a JSON-loadable description of an experiment
+//!   scenario: workload mix, batch/steps/seed, arrival spread (thundering
+//!   herd vs staggered), cluster catalog scale, and a timeline of
+//!   [`ScenarioEvent`] fault injections (API rate-limit flaps, GPU
+//!   restore-storms via cache flush, CPU pool squeezes).
+//! * [`trace`] — a [`TraceRecorder`] hooked into the DES driver captures
+//!   every scheduling decision as a compact JSONL stream.
+//! * [`replay`] — re-runs a recorded scenario and **byte-diffs** the
+//!   serialized metrics and the decision trace, failing loudly on any
+//!   divergence; `arl-tangram scenario --record/--replay` exposes this on
+//!   the CLI.
+//! * [`packs`] — named built-in scenarios exercised by the conformance
+//!   suite across every backend.
+//!
+//! Determinism contract: same spec + same seed ⇒ byte-identical metrics
+//! JSON and trace, *across processes*. Everything on the decision path
+//! iterates in sorted order (see `TangramBackend::all_pools`,
+//! `StaticGpu::drain_started`, and the sparse-DP frontier ordering in
+//! `scheduler::dp`).
+
+pub mod packs;
+pub mod replay;
+pub mod trace;
+
+pub use packs::{builtin_packs, pack_by_name};
+pub use replay::{
+    build_backend, diff_summaries, diff_traces, parse_trace_file, read_trace_file, replay_trace,
+    run_scenario, summary_json, trace_file_contents, write_trace_file, RecordedTrace,
+    ReplayReport, ScenarioOutcome,
+};
+pub use trace::{TraceEvent, TraceKind, TraceRecorder};
+
+use crate::action::TaskId;
+use crate::config::BackendKind;
+use crate::coordinator::RunCfg;
+use crate::rollout::workloads::{CatalogCfg, Workload, WorkloadKind};
+use crate::sim::{SimDur, SimTime};
+use crate::util::error::Result;
+use crate::util::json::Json;
+use crate::{bail, err};
+
+/// A mid-run perturbation delivered to the backend at a scheduled instant.
+///
+/// Backends apply what their substrate supports and ignore the rest (the
+/// static baselines are *deliberately* inelastic — that asymmetry is the
+/// paper's point); the trace records whether each injection was applied.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScenarioEvent {
+    /// Scale every API endpoint's provider limits (concurrency + window
+    /// quota) to `factor` × their spec baseline. `factor < 1` models a
+    /// rate-limit flap; `1.0` restores the original limits.
+    ApiLimitScale { factor: f64 },
+    /// Drop all warm GPU service caches: the next allocation of every
+    /// (service, DoP) variant pays a cold restore (a restore-storm follows
+    /// under MOPD-style bursts).
+    GpuCacheFlush,
+    /// Resize the CPU pool mid-run: cordon cores on every node so only
+    /// `factor` of each node's cores stay schedulable (best-effort — busy
+    /// cores are not preempted; at least one core per node stays online).
+    /// `1.0` returns cordoned cores to the pool.
+    CpuPoolScale { factor: f64 },
+}
+
+impl ScenarioEvent {
+    /// Human-readable one-liner (trace + CLI reporting).
+    pub fn describe(&self) -> String {
+        match self {
+            ScenarioEvent::ApiLimitScale { factor } => format!("api_limit_scale {factor}"),
+            ScenarioEvent::GpuCacheFlush => "gpu_cache_flush".to_string(),
+            ScenarioEvent::CpuPoolScale { factor } => format!("cpu_pool_scale {factor}"),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            ScenarioEvent::ApiLimitScale { factor } => Json::obj(vec![
+                ("kind", Json::str("api_limit_scale")),
+                ("factor", Json::num(*factor)),
+            ]),
+            ScenarioEvent::GpuCacheFlush => {
+                Json::obj(vec![("kind", Json::str("gpu_cache_flush"))])
+            }
+            ScenarioEvent::CpuPoolScale { factor } => Json::obj(vec![
+                ("kind", Json::str("cpu_pool_scale")),
+                ("factor", Json::num(*factor)),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let kind = j
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| err!("scenario event missing 'kind'"))?;
+        let factor = || {
+            j.get("factor")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| err!("scenario event '{kind}' missing 'factor'"))
+        };
+        Ok(match kind {
+            "api_limit_scale" => ScenarioEvent::ApiLimitScale { factor: factor()? },
+            "gpu_cache_flush" => ScenarioEvent::GpuCacheFlush,
+            "cpu_pool_scale" => ScenarioEvent::CpuPoolScale { factor: factor()? },
+            other => bail!("unknown scenario event kind '{other}'"),
+        })
+    }
+}
+
+/// A [`ScenarioEvent`] pinned to a virtual-time instant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimedEvent {
+    pub at: SimTime,
+    pub event: ScenarioEvent,
+}
+
+/// Declarative scenario description (JSON-loadable via `util::json`).
+#[derive(Debug, Clone)]
+pub struct ScenarioSpec {
+    pub name: String,
+    /// Workload mix; task ids are assigned by position.
+    pub workloads: Vec<WorkloadKind>,
+    pub batch: usize,
+    pub steps: u32,
+    pub seed: u64,
+    /// Spread each step's trajectory arrivals uniformly over this window
+    /// (ZERO = the thundering-herd batch arrival the paper measures).
+    pub arrival_spread: SimDur,
+    /// External-world scale (cluster nodes, teachers, endpoints).
+    pub catalog: CatalogCfg,
+    /// Fault-injection timeline.
+    pub events: Vec<TimedEvent>,
+}
+
+fn workload_kind_parse(s: &str) -> Result<WorkloadKind> {
+    WorkloadKind::parse(s).ok_or_else(|| err!("unknown workload '{s}'"))
+}
+
+fn catalog_to_json(c: &CatalogCfg) -> Json {
+    Json::obj(vec![
+        ("cpu_nodes", Json::num(c.cpu_nodes as f64)),
+        ("cores_per_node", Json::num(c.cores_per_node as f64)),
+        ("gpu_nodes", Json::num(c.gpu_nodes as f64)),
+        ("n_teachers", Json::num(c.n_teachers as f64)),
+        ("teacher_gb", Json::num(c.teacher_gb)),
+        ("judge_gb", Json::num(c.judge_gb)),
+        ("n_search_endpoints", Json::num(c.n_search_endpoints as f64)),
+    ])
+}
+
+fn catalog_from_json(j: &Json) -> Result<CatalogCfg> {
+    let mut c = CatalogCfg::default();
+    let obj = j.as_obj().ok_or_else(|| err!("'catalog' must be an object"))?;
+    for (k, v) in obj {
+        let u = || v.as_u64().ok_or_else(|| err!("catalog key '{k}' must be an integer"));
+        let f = || v.as_f64().ok_or_else(|| err!("catalog key '{k}' must be a number"));
+        match k.as_str() {
+            "cpu_nodes" => c.cpu_nodes = u()? as u32,
+            "cores_per_node" => c.cores_per_node = u()? as u32,
+            "gpu_nodes" => c.gpu_nodes = u()? as u32,
+            "n_teachers" => c.n_teachers = u()? as u32,
+            "teacher_gb" => c.teacher_gb = f()?,
+            "judge_gb" => c.judge_gb = f()?,
+            "n_search_endpoints" => c.n_search_endpoints = u()? as u32,
+            other => bail!("unknown catalog key '{other}'"),
+        }
+    }
+    Ok(c)
+}
+
+impl ScenarioSpec {
+    /// Which workload kinds a backend composition can execute at all (the
+    /// baselines are single-purpose deployments, §6.1).
+    pub fn backend_supports(backend: BackendKind, kind: WorkloadKind) -> bool {
+        match backend {
+            BackendKind::Tangram => true,
+            BackendKind::K8s => kind == WorkloadKind::Coding,
+            // static multi-service deployment: judge + teachers + APIs
+            BackendKind::StaticGpu => {
+                matches!(kind, WorkloadKind::DeepSearch | WorkloadKind::Mopd)
+            }
+            // GPU pool only — no CPU environments, no API client
+            BackendKind::Serverless => kind == WorkloadKind::Mopd,
+            // unmanaged APIs + judge service
+            BackendKind::Unmanaged => kind == WorkloadKind::DeepSearch,
+        }
+    }
+
+    /// The subset of this scenario's workload mix the backend supports,
+    /// with task ids stable across backends (assigned by mix position).
+    pub fn workloads_for(&self, backend: BackendKind) -> Vec<Workload> {
+        self.workloads
+            .iter()
+            .enumerate()
+            .filter(|(_, &k)| Self::backend_supports(backend, k))
+            .map(|(i, &k)| Workload::new(TaskId(i as u32), k))
+            .collect()
+    }
+
+    /// Driver configuration for this scenario.
+    pub fn run_cfg(&self) -> RunCfg {
+        RunCfg {
+            batch: self.batch,
+            steps: self.steps,
+            seed: self.seed,
+            arrival_spread: self.arrival_spread,
+            ..RunCfg::default()
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.name.is_empty() {
+            bail!("scenario needs a name");
+        }
+        if self.workloads.is_empty() {
+            bail!("scenario '{}' has no workloads", self.name);
+        }
+        if self.batch == 0 || self.steps == 0 {
+            bail!("scenario '{}': batch and steps must be positive", self.name);
+        }
+        // the spec round-trips through JSON numbers (f64): seeds above 2^53
+        // would record rounded and replay a different RNG stream
+        if self.seed > (1u64 << 53) {
+            bail!("scenario '{}': seed must be ≤ 2^53 (JSON round-trip)", self.name);
+        }
+        if self.catalog.cpu_nodes == 0 || self.catalog.gpu_nodes == 0 {
+            bail!("scenario '{}': cluster must have nodes", self.name);
+        }
+        for te in &self.events {
+            match te.event {
+                ScenarioEvent::ApiLimitScale { factor } => {
+                    if !(0.01..=10.0).contains(&factor) {
+                        bail!("api_limit_scale factor {factor} out of [0.01, 10]");
+                    }
+                }
+                ScenarioEvent::CpuPoolScale { factor } => {
+                    if !(0.05..=1.0).contains(&factor) {
+                        bail!("cpu_pool_scale factor {factor} out of [0.05, 1]");
+                    }
+                }
+                ScenarioEvent::GpuCacheFlush => {}
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            (
+                "workloads",
+                Json::arr(self.workloads.iter().map(|w| Json::str(w.name()))),
+            ),
+            ("batch", Json::num(self.batch as f64)),
+            ("steps", Json::num(self.steps as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("arrival_spread_secs", Json::num(self.arrival_spread.secs_f64())),
+            ("catalog", catalog_to_json(&self.catalog)),
+            (
+                "events",
+                Json::arr(self.events.iter().map(|te| {
+                    let mut o = match te.event.to_json() {
+                        Json::Obj(m) => m,
+                        _ => unreachable!("event json is an object"),
+                    };
+                    o.insert("at_secs".into(), Json::num(te.at.secs_f64()));
+                    Json::Obj(o)
+                })),
+            ),
+        ])
+    }
+
+    pub fn from_json_value(j: &Json) -> Result<Self> {
+        let obj = j.as_obj().ok_or_else(|| err!("scenario spec must be an object"))?;
+        let mut spec = ScenarioSpec {
+            name: String::new(),
+            workloads: vec![],
+            batch: 16,
+            steps: 1,
+            seed: 42,
+            arrival_spread: SimDur::ZERO,
+            catalog: CatalogCfg::default(),
+            events: vec![],
+        };
+        for (k, v) in obj {
+            match k.as_str() {
+                "name" => {
+                    spec.name = v
+                        .as_str()
+                        .ok_or_else(|| err!("'name' must be a string"))?
+                        .to_string()
+                }
+                "workloads" => {
+                    spec.workloads = v
+                        .as_arr()
+                        .ok_or_else(|| err!("'workloads' must be an array"))?
+                        .iter()
+                        .map(|w| {
+                            workload_kind_parse(
+                                w.as_str().ok_or_else(|| err!("workload must be a string"))?,
+                            )
+                        })
+                        .collect::<Result<_>>()?
+                }
+                "batch" => {
+                    spec.batch =
+                        v.as_u64().ok_or_else(|| err!("'batch' must be an integer"))? as usize
+                }
+                "steps" => {
+                    spec.steps =
+                        v.as_u64().ok_or_else(|| err!("'steps' must be an integer"))? as u32
+                }
+                "seed" => {
+                    spec.seed = v.as_u64().ok_or_else(|| err!("'seed' must be an integer"))?
+                }
+                "arrival_spread_secs" => {
+                    let s = v.as_f64().ok_or_else(|| err!("'arrival_spread_secs' must be a number"))?;
+                    if s < 0.0 {
+                        bail!("'arrival_spread_secs' must be non-negative");
+                    }
+                    spec.arrival_spread = SimDur::from_secs_f64(s);
+                }
+                "catalog" => spec.catalog = catalog_from_json(v)?,
+                "events" => {
+                    spec.events = v
+                        .as_arr()
+                        .ok_or_else(|| err!("'events' must be an array"))?
+                        .iter()
+                        .map(|e| {
+                            let at = e
+                                .get("at_secs")
+                                .and_then(Json::as_f64)
+                                .ok_or_else(|| err!("event missing 'at_secs'"))?;
+                            if at < 0.0 {
+                                bail!("event 'at_secs' must be non-negative");
+                            }
+                            Ok(TimedEvent {
+                                at: SimTime(SimDur::from_secs_f64(at).0),
+                                event: ScenarioEvent::from_json(e)?,
+                            })
+                        })
+                        .collect::<Result<_>>()?
+                }
+                other => bail!("unknown scenario key '{other}'"),
+            }
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn from_json(text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| err!("scenario spec: {e}"))?;
+        Self::from_json_value(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_packs_validate_and_round_trip() {
+        for spec in builtin_packs() {
+            spec.validate().unwrap();
+            let j = spec.to_json().to_string();
+            let back = ScenarioSpec::from_json(&j).unwrap();
+            assert_eq!(back.to_json().to_string(), j, "round trip for '{}'", spec.name);
+        }
+    }
+
+    #[test]
+    fn spec_json_rejects_garbage() {
+        assert!(ScenarioSpec::from_json("{}").is_err()); // no name/workloads
+        assert!(ScenarioSpec::from_json(r#"{"name":"x","workloads":["nope"]}"#).is_err());
+        assert!(ScenarioSpec::from_json(
+            r#"{"name":"x","workloads":["coding"],"events":[{"kind":"warp_drive","at_secs":1}]}"#
+        )
+        .is_err());
+        assert!(ScenarioSpec::from_json(
+            r#"{"name":"x","workloads":["coding"],"events":[{"kind":"cpu_pool_scale","factor":0.0,"at_secs":1}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn capability_matrix() {
+        use BackendKind::*;
+        assert!(ScenarioSpec::backend_supports(Tangram, WorkloadKind::Coding));
+        assert!(ScenarioSpec::backend_supports(K8s, WorkloadKind::Coding));
+        assert!(!ScenarioSpec::backend_supports(K8s, WorkloadKind::Mopd));
+        assert!(ScenarioSpec::backend_supports(StaticGpu, WorkloadKind::DeepSearch));
+        assert!(!ScenarioSpec::backend_supports(Serverless, WorkloadKind::DeepSearch));
+        assert!(ScenarioSpec::backend_supports(Unmanaged, WorkloadKind::DeepSearch));
+    }
+
+    #[test]
+    fn workloads_for_keeps_task_ids_stable() {
+        let spec = pack_by_name("steady-mix").unwrap();
+        let all = spec.workloads_for(BackendKind::Tangram);
+        let k8s = spec.workloads_for(BackendKind::K8s);
+        assert_eq!(all.len(), spec.workloads.len());
+        for w in &k8s {
+            let same = all.iter().find(|a| a.task == w.task).unwrap();
+            assert_eq!(same.kind, w.kind, "task ids must identify the same workload");
+        }
+    }
+
+    #[test]
+    fn event_descriptions_are_stable() {
+        assert_eq!(
+            ScenarioEvent::ApiLimitScale { factor: 0.25 }.describe(),
+            "api_limit_scale 0.25"
+        );
+        assert_eq!(ScenarioEvent::GpuCacheFlush.describe(), "gpu_cache_flush");
+    }
+}

@@ -1,0 +1,149 @@
+//! Built-in scenario packs.
+//!
+//! Each pack is a [`ScenarioSpec`] the conformance suite runs across every
+//! backend (each backend executes the subset of the mix it supports). Packs
+//! are deliberately small — the DES makes them seconds-fast — while still
+//! hitting the stress axes the paper motivates: workload mixing, arrival
+//! bursts, API rate-limit flaps, GPU restore-storms, and mid-run CPU pool
+//! squeezes. `arl-tangram scenario --list` prints this catalog.
+
+use super::{ScenarioEvent, ScenarioSpec, TimedEvent};
+use crate::rollout::workloads::{CatalogCfg, WorkloadKind};
+use crate::sim::{SimDur, SimTime};
+
+fn small_catalog() -> CatalogCfg {
+    CatalogCfg {
+        cpu_nodes: 2,
+        cores_per_node: 64,
+        gpu_nodes: 2,
+        n_teachers: 4,
+        ..CatalogCfg::default()
+    }
+}
+
+fn at(secs: u64, event: ScenarioEvent) -> TimedEvent {
+    TimedEvent { at: SimTime(SimDur::from_secs(secs).0), event }
+}
+
+/// All built-in packs, in catalog order.
+pub fn builtin_packs() -> Vec<ScenarioSpec> {
+    vec![
+        // Fault-free tri-workload mix: the conformance baseline every
+        // backend must reproduce bit-for-bit.
+        ScenarioSpec {
+            name: "steady-mix".into(),
+            workloads: vec![WorkloadKind::Coding, WorkloadKind::DeepSearch, WorkloadKind::Mopd],
+            batch: 10,
+            steps: 1,
+            seed: 101,
+            arrival_spread: SimDur::ZERO,
+            catalog: small_catalog(),
+            events: vec![],
+        },
+        // Thundering-herd arrivals plus a mid-burst provider flap: the
+        // §2.3 burstiness story with the provider fighting back.
+        ScenarioSpec {
+            name: "burst-arrivals".into(),
+            workloads: vec![WorkloadKind::Coding, WorkloadKind::DeepSearch],
+            batch: 24,
+            steps: 1,
+            seed: 202,
+            arrival_spread: SimDur::ZERO,
+            catalog: small_catalog(),
+            events: vec![
+                at(20, ScenarioEvent::ApiLimitScale { factor: 0.5 }),
+                at(120, ScenarioEvent::ApiLimitScale { factor: 1.0 }),
+            ],
+        },
+        // Repeated deep rate-limit flaps on the DeepSearch path: quota and
+        // concurrency collapse to 5% of baseline, twice, so the admission
+        // layer must queue and ride the quota-window wakeups.
+        ScenarioSpec {
+            name: "api-flap".into(),
+            workloads: vec![WorkloadKind::DeepSearch],
+            batch: 16,
+            steps: 1,
+            seed: 303,
+            arrival_spread: SimDur::from_secs(5),
+            catalog: small_catalog(),
+            events: vec![
+                at(15, ScenarioEvent::ApiLimitScale { factor: 0.05 }),
+                at(60, ScenarioEvent::ApiLimitScale { factor: 1.0 }),
+                at(90, ScenarioEvent::ApiLimitScale { factor: 0.05 }),
+                at(150, ScenarioEvent::ApiLimitScale { factor: 1.0 }),
+            ],
+        },
+        // Restore storms: warm (service, DoP) caches are dropped every few
+        // tens of seconds across the reward-burst window, so teacher and
+        // judge invocations keep paying cold restores.
+        ScenarioSpec {
+            name: "restore-storm".into(),
+            workloads: vec![WorkloadKind::Mopd, WorkloadKind::DeepSearch],
+            batch: 12,
+            steps: 1,
+            seed: 404,
+            arrival_spread: SimDur::ZERO,
+            catalog: small_catalog(),
+            events: vec![
+                at(10, ScenarioEvent::GpuCacheFlush),
+                at(30, ScenarioEvent::GpuCacheFlush),
+                at(50, ScenarioEvent::GpuCacheFlush),
+                at(70, ScenarioEvent::GpuCacheFlush),
+                at(90, ScenarioEvent::GpuCacheFlush),
+                at(120, ScenarioEvent::GpuCacheFlush),
+                at(150, ScenarioEvent::GpuCacheFlush),
+                at(180, ScenarioEvent::GpuCacheFlush),
+                at(240, ScenarioEvent::GpuCacheFlush),
+                at(300, ScenarioEvent::GpuCacheFlush),
+            ],
+        },
+        // Mid-run CPU pool squeeze: half of every node's cores cordon off
+        // at t=20s and return at t=100s (elastic-pool resizing; Mopd rides
+        // along so the GPU-only serverless baseline is exercised too).
+        ScenarioSpec {
+            name: "pool-squeeze".into(),
+            workloads: vec![WorkloadKind::Coding, WorkloadKind::Mopd],
+            batch: 16,
+            steps: 1,
+            seed: 505,
+            arrival_spread: SimDur::from_secs(10),
+            catalog: small_catalog(),
+            events: vec![
+                at(20, ScenarioEvent::CpuPoolScale { factor: 0.5 }),
+                at(100, ScenarioEvent::CpuPoolScale { factor: 1.0 }),
+            ],
+        },
+    ]
+}
+
+/// Look up a built-in pack by name.
+pub fn pack_by_name(name: &str) -> Option<ScenarioSpec> {
+    builtin_packs().into_iter().find(|p| p.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::BackendKind;
+    use crate::scenario::ScenarioSpec as Spec;
+
+    #[test]
+    fn lookup_works() {
+        assert!(pack_by_name("api-flap").is_some());
+        assert!(pack_by_name("nope").is_none());
+        assert!(builtin_packs().len() >= 5);
+    }
+
+    #[test]
+    fn every_backend_is_exercised_by_at_least_three_packs() {
+        for backend in BackendKind::ALL {
+            let n = builtin_packs()
+                .iter()
+                .filter(|p| {
+                    p.workloads.iter().any(|&w| Spec::backend_supports(backend, w))
+                })
+                .count();
+            assert!(n >= 3, "{backend:?} only covered by {n} packs");
+        }
+    }
+}

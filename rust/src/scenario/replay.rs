@@ -1,0 +1,298 @@
+//! Replay/diff engine: re-run a recorded scenario and byte-diff the result.
+//!
+//! A recorded trace file is self-contained JSONL:
+//!
+//! ```text
+//! {"arl_tangram_trace":1,"backend":"tangram","spec":{…}}   ← header
+//! {"at":0,"ev":"step_start",…}                             ← events …
+//! {"summary":{…}}                                          ← footer
+//! ```
+//!
+//! [`replay_trace`] rebuilds the catalog/backend from the embedded spec,
+//! re-runs it under the same seed, and compares both the serialized metrics
+//! summary (byte equality, including an FNV-1a digest over the *full*
+//! [`Metrics::to_json`] record stream) and the decision trace event-by-
+//! event. Any divergence means the scheduler is nondeterministic or its
+//! behaviour drifted — both are release blockers for scale/perf PRs.
+
+use super::trace::{TraceEvent, TraceRecorder};
+use super::ScenarioSpec;
+use crate::baselines::{BaselineBackend, ServerlessCfg};
+use crate::config::{BackendKind, ExperimentCfg};
+use crate::coordinator::{run_traced, Backend, TangramBackend};
+use crate::metrics::Metrics;
+use crate::rollout::workloads::{Catalog, CatalogCfg};
+use crate::util::error::Result;
+use crate::util::json::Json;
+use crate::{bail, err};
+
+/// Metrics + decision trace of one scenario run.
+pub struct ScenarioOutcome {
+    pub metrics: Metrics,
+    pub events: Vec<TraceEvent>,
+}
+
+/// FNV-1a 64-bit digest (stable, dependency-free content fingerprint).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Deploy the backend composition for a catalog scale — the single
+/// BackendKind→deployment matrix shared by `arl-tangram run` and the
+/// scenario engine (so both commands always deploy identically).
+pub fn build_backend(
+    catalog: &CatalogCfg,
+    cat: &Catalog,
+    backend: BackendKind,
+) -> Box<dyn Backend> {
+    // reuse the launcher's catalog→deployment scaling rules
+    let exp = ExperimentCfg { catalog: catalog.clone(), ..ExperimentCfg::default() };
+    match backend {
+        BackendKind::Tangram => Box::new(TangramBackend::new(cat, exp.tangram_cfg())),
+        BackendKind::K8s => Box::new(BaselineBackend::coding(cat, exp.k8s_cfg())),
+        BackendKind::StaticGpu => Box::new(BaselineBackend::mopd_search(cat)),
+        BackendKind::Serverless => Box::new(BaselineBackend::serverless(
+            cat,
+            ServerlessCfg { gpu_nodes: catalog.gpu_nodes, ..ServerlessCfg::default() },
+        )),
+        BackendKind::Unmanaged => Box::new(BaselineBackend::deepsearch(cat)),
+    }
+}
+
+/// Run one scenario on one backend, recording the decision trace.
+pub fn run_scenario(spec: &ScenarioSpec, backend: BackendKind) -> Result<ScenarioOutcome> {
+    spec.validate()?;
+    let wls = spec.workloads_for(backend);
+    if wls.is_empty() {
+        bail!(
+            "backend '{}' supports none of the workloads in scenario '{}'",
+            backend.name(),
+            spec.name
+        );
+    }
+    let cat = Catalog::build(&spec.catalog);
+    let mut be = build_backend(&spec.catalog, &cat, backend);
+    let mut rec = TraceRecorder::new();
+    let cfg = spec.run_cfg();
+    let metrics = run_traced(be.as_mut(), &cat, &wls, &cfg, &spec.events, Some(&mut rec));
+    Ok(ScenarioOutcome { metrics, events: rec.events })
+}
+
+/// Deterministic metrics summary: headline aggregates plus an FNV digest
+/// over the full serialized record stream. Byte-compare two of these to
+/// byte-compare entire runs.
+pub fn summary_json(m: &Metrics) -> Json {
+    let full = m.to_json().to_string();
+    let (exec, queue, ovh) = m.act_breakdown();
+    Json::obj(vec![
+        ("actions", Json::num(m.actions.len() as f64)),
+        ("failed_actions", Json::num(m.failed_actions() as f64)),
+        ("retries", Json::num(m.total_retries() as f64)),
+        ("trajectories", Json::num(m.trajectories.len() as f64)),
+        ("steps", Json::num(m.steps.len() as f64)),
+        ("mean_act_secs", Json::num(m.mean_act())),
+        ("p99_act_secs", Json::num(m.p99_act())),
+        ("exec_secs", Json::num(exec)),
+        ("queue_secs", Json::num(queue)),
+        ("overhead_secs", Json::num(ovh)),
+        ("mean_step_secs", Json::num(m.mean_step_dur())),
+        ("metrics_fnv64", Json::str(format!("{:016x}", fnv1a64(full.as_bytes())))),
+    ])
+}
+
+/// `None` when the serialized summaries are byte-identical; otherwise the
+/// first differing key (or a length note).
+pub fn diff_summaries(a: &Json, b: &Json) -> Option<String> {
+    if a.to_string() == b.to_string() {
+        return None;
+    }
+    if let (Some(ma), Some(mb)) = (a.as_obj(), b.as_obj()) {
+        for (k, va) in ma {
+            match mb.get(k) {
+                Some(vb) if va == vb => {}
+                Some(vb) => return Some(format!("'{k}': {va} != {vb}")),
+                None => return Some(format!("'{k}' missing from replay")),
+            }
+        }
+        for k in mb.keys() {
+            if !ma.contains_key(k) {
+                return Some(format!("'{k}' only in replay"));
+            }
+        }
+    }
+    Some("summaries differ".to_string())
+}
+
+/// First `max` divergences between two decision traces.
+pub fn diff_traces(a: &[TraceEvent], b: &[TraceEvent], max: usize) -> Vec<String> {
+    let mut out = Vec::new();
+    let n = a.len().min(b.len());
+    for i in 0..n {
+        if out.len() >= max {
+            return out;
+        }
+        if a[i] != b[i] {
+            out.push(format!(
+                "event {i}: recorded {:?} vs replayed {:?}",
+                a[i], b[i]
+            ));
+        }
+    }
+    if a.len() != b.len() && out.len() < max {
+        out.push(format!(
+            "trace length: recorded {} vs replayed {} events",
+            a.len(),
+            b.len()
+        ));
+    }
+    out
+}
+
+/// A parsed trace file (header spec + events + recorded summary).
+pub struct RecordedTrace {
+    pub spec: ScenarioSpec,
+    pub backend: BackendKind,
+    pub events: Vec<TraceEvent>,
+    pub summary: Json,
+}
+
+/// Serialize a run to the self-contained trace-file format.
+pub fn trace_file_contents(
+    spec: &ScenarioSpec,
+    backend: BackendKind,
+    outcome: &ScenarioOutcome,
+) -> String {
+    let header = Json::obj(vec![
+        ("arl_tangram_trace", Json::num(1.0)),
+        ("backend", Json::str(backend.name())),
+        ("spec", spec.to_json()),
+    ]);
+    let mut s = String::new();
+    s.push_str(&header.to_string());
+    s.push('\n');
+    for e in &outcome.events {
+        s.push_str(&e.to_json().to_string());
+        s.push('\n');
+    }
+    let footer = Json::obj(vec![("summary", summary_json(&outcome.metrics))]);
+    s.push_str(&footer.to_string());
+    s.push('\n');
+    s
+}
+
+pub fn write_trace_file(
+    path: &str,
+    spec: &ScenarioSpec,
+    backend: BackendKind,
+    outcome: &ScenarioOutcome,
+) -> Result<()> {
+    std::fs::write(path, trace_file_contents(spec, backend, outcome))
+        .map_err(|e| err!("writing trace {path}: {e}"))
+}
+
+/// Parse the trace-file format produced by [`trace_file_contents`].
+pub fn parse_trace_file(text: &str) -> Result<RecordedTrace> {
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let header_line = lines.next().ok_or_else(|| err!("empty trace file"))?;
+    let header = Json::parse(header_line).map_err(|e| err!("trace header: {e}"))?;
+    if header.get("arl_tangram_trace").and_then(Json::as_u64) != Some(1) {
+        bail!("not an arl-tangram trace file (missing/unknown version marker)");
+    }
+    let backend = BackendKind::parse(
+        header
+            .get("backend")
+            .and_then(Json::as_str)
+            .ok_or_else(|| err!("trace header missing 'backend'"))?,
+    )?;
+    let spec = ScenarioSpec::from_json_value(
+        header.get("spec").ok_or_else(|| err!("trace header missing 'spec'"))?,
+    )?;
+    let mut events = Vec::new();
+    let mut summary = None;
+    for line in lines {
+        let j = Json::parse(line).map_err(|e| err!("trace line: {e}"))?;
+        if let Some(s) = j.get("summary") {
+            summary = Some(s.clone());
+        } else {
+            events.push(TraceEvent::from_json(&j)?);
+        }
+    }
+    let summary = summary.ok_or_else(|| err!("trace file missing summary footer"))?;
+    Ok(RecordedTrace { spec, backend, events, summary })
+}
+
+pub fn read_trace_file(path: &str) -> Result<RecordedTrace> {
+    let text = std::fs::read_to_string(path).map_err(|e| err!("reading trace {path}: {e}"))?;
+    parse_trace_file(&text)
+}
+
+/// Result of replaying a recorded trace.
+pub struct ReplayReport {
+    /// Byte-identical summary AND identical event stream.
+    pub identical: bool,
+    pub summary_diff: Option<String>,
+    pub trace_divergences: Vec<String>,
+    pub fresh_summary: Json,
+    pub replayed_events: usize,
+}
+
+/// Re-run the recorded scenario and diff against the recording.
+pub fn replay_trace(recorded: &RecordedTrace) -> Result<ReplayReport> {
+    let outcome = run_scenario(&recorded.spec, recorded.backend)?;
+    let fresh_summary = summary_json(&outcome.metrics);
+    let summary_diff = diff_summaries(&recorded.summary, &fresh_summary);
+    let trace_divergences = diff_traces(&recorded.events, &outcome.events, 10);
+    Ok(ReplayReport {
+        identical: summary_diff.is_none() && trace_divergences.is_empty(),
+        summary_diff,
+        trace_divergences,
+        fresh_summary,
+        replayed_events: outcome.events.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_is_stable() {
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), fnv1a64(b"a"));
+        assert_ne!(fnv1a64(b"a"), fnv1a64(b"b"));
+    }
+
+    #[test]
+    fn trace_file_round_trips() {
+        let spec = crate::scenario::pack_by_name("steady-mix").unwrap();
+        let outcome = run_scenario(&spec, BackendKind::Serverless).unwrap();
+        let text = trace_file_contents(&spec, BackendKind::Serverless, &outcome);
+        let rt = parse_trace_file(&text).unwrap();
+        assert_eq!(rt.backend, BackendKind::Serverless);
+        assert_eq!(rt.spec.to_json().to_string(), spec.to_json().to_string());
+        assert_eq!(rt.events, outcome.events);
+        assert_eq!(
+            rt.summary.to_string(),
+            summary_json(&outcome.metrics).to_string()
+        );
+    }
+
+    #[test]
+    fn diff_reports_divergence() {
+        let a = Json::obj(vec![("x", Json::num(1.0))]);
+        let b = Json::obj(vec![("x", Json::num(2.0))]);
+        assert!(diff_summaries(&a, &a).is_none());
+        assert!(diff_summaries(&a, &b).unwrap().contains("'x'"));
+    }
+
+    #[test]
+    fn unsupported_backend_is_an_error() {
+        let spec = crate::scenario::pack_by_name("api-flap").unwrap(); // deepsearch only
+        assert!(run_scenario(&spec, BackendKind::K8s).is_err());
+    }
+}

@@ -1,0 +1,310 @@
+//! Deterministic decision-trace recording (the scenario subsystem's flight
+//! recorder).
+//!
+//! The [`TraceRecorder`] hooks into the DES driver
+//! ([`crate::coordinator::driver::run_traced`]) and captures every
+//! scheduling-relevant transition — action submit/start/complete, trajectory
+//! and step boundaries, fault injections — as a compact JSONL event stream.
+//! Two same-seed runs of the same [`crate::scenario::ScenarioSpec`] must
+//! produce *byte-identical* streams; the replay engine
+//! ([`crate::scenario::replay`]) diffs them to catch any nondeterminism or
+//! behavioural drift introduced by a scheduler change.
+//!
+//! Event timestamps are virtual nanoseconds (exact integers — every value a
+//! run can produce is far below 2^53, so the JSON number round-trip is
+//! lossless).
+
+use crate::sim::SimTime;
+use crate::util::error::Result;
+use crate::util::json::Json;
+use crate::{bail, err};
+
+/// One recorded driver transition.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceKind {
+    /// An RL step began for a task.
+    StepStart { task: u32, step: u32 },
+    /// All trajectories of the step finished rolling out.
+    StepEnd { task: u32, step: u32, rollout_ns: u64 },
+    /// A trajectory was spawned (plan materialized).
+    TrajSpawn { traj: u64, task: u32 },
+    /// A trajectory finished (all phases done or terminally failed).
+    TrajEnd { traj: u64, failed: bool, restarts: u32 },
+    /// An action entered the backend's waiting queue.
+    Submit { action: u64, traj: u64, kind: String, queue_depth: u64 },
+    /// The backend started an attempt: granted units, charged overhead.
+    Start { action: u64, units: u64, overhead_ns: u64, exec_ns: u64, queue_depth: u64 },
+    /// An attempt finished with the driver's effective verdict
+    /// (`done` | `retry` | `failed`); `retry` means the action was evicted
+    /// from its slot and re-queued.
+    Complete { action: u64, outcome: String, retries: u32 },
+    /// A scenario fault was injected; `applied` is false when the backend
+    /// has no substrate for it (e.g. a CPU cordon on a GPU-only baseline).
+    Inject { index: u64, desc: String, applied: bool },
+}
+
+impl TraceKind {
+    /// Short tag used as the `ev` field in JSONL.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            TraceKind::StepStart { .. } => "step_start",
+            TraceKind::StepEnd { .. } => "step_end",
+            TraceKind::TrajSpawn { .. } => "traj_spawn",
+            TraceKind::TrajEnd { .. } => "traj_end",
+            TraceKind::Submit { .. } => "submit",
+            TraceKind::Start { .. } => "start",
+            TraceKind::Complete { .. } => "complete",
+            TraceKind::Inject { .. } => "inject",
+        }
+    }
+}
+
+/// A trace event: virtual timestamp + transition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub at: SimTime,
+    pub kind: TraceKind,
+}
+
+fn num(n: u64) -> Json {
+    Json::Num(n as f64)
+}
+
+fn get_u64(j: &Json, key: &str) -> Result<u64> {
+    j.get(key)
+        .and_then(Json::as_u64)
+        .ok_or_else(|| err!("trace event missing integer field '{key}'"))
+}
+
+fn get_str(j: &Json, key: &str) -> Result<String> {
+    Ok(j.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| err!("trace event missing string field '{key}'"))?
+        .to_string())
+}
+
+fn get_bool(j: &Json, key: &str) -> Result<bool> {
+    j.get(key)
+        .and_then(Json::as_bool)
+        .ok_or_else(|| err!("trace event missing boolean field '{key}'"))
+}
+
+impl TraceEvent {
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> =
+            vec![("at", num(self.at.0)), ("ev", Json::str(self.kind.tag()))];
+        match &self.kind {
+            TraceKind::StepStart { task, step } => {
+                pairs.push(("task", num(*task as u64)));
+                pairs.push(("step", num(*step as u64)));
+            }
+            TraceKind::StepEnd { task, step, rollout_ns } => {
+                pairs.push(("task", num(*task as u64)));
+                pairs.push(("step", num(*step as u64)));
+                pairs.push(("rollout_ns", num(*rollout_ns)));
+            }
+            TraceKind::TrajSpawn { traj, task } => {
+                pairs.push(("traj", num(*traj)));
+                pairs.push(("task", num(*task as u64)));
+            }
+            TraceKind::TrajEnd { traj, failed, restarts } => {
+                pairs.push(("traj", num(*traj)));
+                pairs.push(("failed", Json::Bool(*failed)));
+                pairs.push(("restarts", num(*restarts as u64)));
+            }
+            TraceKind::Submit { action, traj, kind, queue_depth } => {
+                pairs.push(("action", num(*action)));
+                pairs.push(("traj", num(*traj)));
+                pairs.push(("kind", Json::str(kind.clone())));
+                pairs.push(("queue_depth", num(*queue_depth)));
+            }
+            TraceKind::Start { action, units, overhead_ns, exec_ns, queue_depth } => {
+                pairs.push(("action", num(*action)));
+                pairs.push(("units", num(*units)));
+                pairs.push(("overhead_ns", num(*overhead_ns)));
+                pairs.push(("exec_ns", num(*exec_ns)));
+                pairs.push(("queue_depth", num(*queue_depth)));
+            }
+            TraceKind::Complete { action, outcome, retries } => {
+                pairs.push(("action", num(*action)));
+                pairs.push(("outcome", Json::str(outcome.clone())));
+                pairs.push(("retries", num(*retries as u64)));
+            }
+            TraceKind::Inject { index, desc, applied } => {
+                pairs.push(("index", num(*index)));
+                pairs.push(("desc", Json::str(desc.clone())));
+                pairs.push(("applied", Json::Bool(*applied)));
+            }
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<TraceEvent> {
+        let at = SimTime(get_u64(j, "at")?);
+        let tag = get_str(j, "ev")?;
+        let kind = match tag.as_str() {
+            "step_start" => TraceKind::StepStart {
+                task: get_u64(j, "task")? as u32,
+                step: get_u64(j, "step")? as u32,
+            },
+            "step_end" => TraceKind::StepEnd {
+                task: get_u64(j, "task")? as u32,
+                step: get_u64(j, "step")? as u32,
+                rollout_ns: get_u64(j, "rollout_ns")?,
+            },
+            "traj_spawn" => TraceKind::TrajSpawn {
+                traj: get_u64(j, "traj")?,
+                task: get_u64(j, "task")? as u32,
+            },
+            "traj_end" => TraceKind::TrajEnd {
+                traj: get_u64(j, "traj")?,
+                failed: get_bool(j, "failed")?,
+                restarts: get_u64(j, "restarts")? as u32,
+            },
+            "submit" => TraceKind::Submit {
+                action: get_u64(j, "action")?,
+                traj: get_u64(j, "traj")?,
+                kind: get_str(j, "kind")?,
+                queue_depth: get_u64(j, "queue_depth")?,
+            },
+            "start" => TraceKind::Start {
+                action: get_u64(j, "action")?,
+                units: get_u64(j, "units")?,
+                overhead_ns: get_u64(j, "overhead_ns")?,
+                exec_ns: get_u64(j, "exec_ns")?,
+                queue_depth: get_u64(j, "queue_depth")?,
+            },
+            "complete" => TraceKind::Complete {
+                action: get_u64(j, "action")?,
+                outcome: get_str(j, "outcome")?,
+                retries: get_u64(j, "retries")? as u32,
+            },
+            "inject" => TraceKind::Inject {
+                index: get_u64(j, "index")?,
+                desc: get_str(j, "desc")?,
+                applied: get_bool(j, "applied")?,
+            },
+            other => bail!("unknown trace event tag '{other}'"),
+        };
+        Ok(TraceEvent { at, kind })
+    }
+}
+
+/// Collects [`TraceEvent`]s during a driver run.
+#[derive(Debug, Default)]
+pub struct TraceRecorder {
+    pub events: Vec<TraceEvent>,
+}
+
+impl TraceRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, at: SimTime, kind: TraceKind) {
+        self.events.push(TraceEvent { at, kind });
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// One JSON object per line; keys sorted (BTreeMap) ⇒ byte-deterministic.
+    pub fn to_jsonl(&self) -> String {
+        let mut s = String::new();
+        for e in &self.events {
+            s.push_str(&e.to_json().to_string());
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Parse an event-only JSONL stream (no header/summary lines).
+    pub fn parse_jsonl(text: &str) -> Result<Vec<TraceEvent>> {
+        text.lines()
+            .filter(|l| !l.trim().is_empty())
+            .map(|l| {
+                let j = Json::parse(l).map_err(|e| err!("trace line: {e}"))?;
+                TraceEvent::from_json(&j)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent {
+                at: SimTime(0),
+                kind: TraceKind::StepStart { task: 0, step: 0 },
+            },
+            TraceEvent {
+                at: SimTime(5),
+                kind: TraceKind::Submit {
+                    action: 1,
+                    traj: 2,
+                    kind: "env_exec".into(),
+                    queue_depth: 1,
+                },
+            },
+            TraceEvent {
+                at: SimTime(9),
+                kind: TraceKind::Start {
+                    action: 1,
+                    units: 4,
+                    overhead_ns: 3,
+                    exec_ns: 100,
+                    queue_depth: 0,
+                },
+            },
+            TraceEvent {
+                at: SimTime(112),
+                kind: TraceKind::Complete { action: 1, outcome: "done".into(), retries: 0 },
+            },
+            TraceEvent {
+                at: SimTime(200),
+                kind: TraceKind::Inject { index: 0, desc: "api_limit_scale 0.25".into(), applied: true },
+            },
+            TraceEvent {
+                at: SimTime(300),
+                kind: TraceKind::TrajEnd { traj: 2, failed: false, restarts: 1 },
+            },
+        ]
+    }
+
+    #[test]
+    fn jsonl_round_trips() {
+        let mut rec = TraceRecorder::new();
+        for e in sample() {
+            rec.push(e.at, e.kind);
+        }
+        let text = rec.to_jsonl();
+        let back = TraceRecorder::parse_jsonl(&text).unwrap();
+        assert_eq!(back, rec.events);
+    }
+
+    #[test]
+    fn serialization_is_byte_deterministic() {
+        let mut a = TraceRecorder::new();
+        let mut b = TraceRecorder::new();
+        for e in sample() {
+            a.push(e.at, e.kind.clone());
+            b.push(e.at, e.kind);
+        }
+        assert_eq!(a.to_jsonl(), b.to_jsonl());
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(TraceRecorder::parse_jsonl("{\"ev\":\"start\"}").is_err());
+        assert!(TraceRecorder::parse_jsonl("{\"at\":1,\"ev\":\"nope\"}").is_err());
+        assert!(TraceRecorder::parse_jsonl("not json").is_err());
+    }
+}

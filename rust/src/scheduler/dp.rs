@@ -218,7 +218,13 @@ pub fn dp_arrange(
         // memoize durations per distinct k for this task
         let mut cur: HashMap<usize, f64> = HashMap::with_capacity(dp.len() * 2);
         let mut ch: HashMap<usize, (u64, usize)> = HashMap::with_capacity(dp.len() * 2);
-        for (&j, &base) in &dp {
+        // Sorted frontier iteration: cost ties between predecessor states
+        // must resolve identically in every process (HashMap order is
+        // per-process random), or recorded scenario traces would not
+        // replay byte-identically. Sorting fixes the tie-winner.
+        let mut frontier: Vec<(usize, f64)> = dp.iter().map(|(&j, &c)| (j, c)).collect();
+        frontier.sort_unstable_by_key(|&(j, _)| j);
+        for (j, base) in frontier {
             for &k in set {
                 if k > max_alloc {
                     break; // sets ascend; nothing larger fits either
@@ -240,10 +246,10 @@ pub fn dp_arrange(
         choice.push(ch);
     }
 
-    // best terminal state
+    // best terminal state (ties broken by state id — see frontier note)
     let (mut state, total) = dp
         .iter()
-        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(a.0.cmp(b.0)))
         .map(|(&s, &c)| (s, c))?;
 
     // backtrack

@@ -39,20 +39,7 @@ pub fn check<G: Gen, F: Fn(&G::Value) -> Result<(), String>>(
         let mut rng = Rng::new(base_seed + case as u64);
         let v = gen.generate(&mut rng);
         if let Err(msg) = prop(&v) {
-            // shrink greedily
-            let mut best = (v.clone(), msg.clone());
-            let mut frontier = gen.shrink(&v);
-            let mut budget = 500;
-            while let Some(cand) = frontier.pop() {
-                if budget == 0 {
-                    break;
-                }
-                budget -= 1;
-                if let Err(m) = prop(&cand) {
-                    frontier = gen.shrink(&cand);
-                    best = (cand, m);
-                }
-            }
+            let best = shrink_failure(gen, v, msg, &prop, 500);
             panic!(
                 "property '{name}' failed (case {case}, seed {}):\n  input: {:?}\n  error: {}",
                 base_seed + case as u64,
@@ -61,6 +48,34 @@ pub fn check<G: Gen, F: Fn(&G::Value) -> Result<(), String>>(
             );
         }
     }
+}
+
+/// Greedy shrink of a failing input: [`Gen::shrink`] candidates are ordered
+/// simplest-first, so we try them **front-to-back** and restart the frontier
+/// from the first candidate that still fails. (The runner used to `pop()`
+/// from the back, which tried the *least*-simplified candidate first and
+/// burned the whole budget on near-original inputs.) Returns the simplest
+/// failing input found and its error.
+pub fn shrink_failure<G: Gen, F: Fn(&G::Value) -> Result<(), String>>(
+    gen: &G,
+    v: G::Value,
+    msg: String,
+    prop: &F,
+    mut budget: u32,
+) -> (G::Value, String) {
+    let mut best = (v, msg);
+    let mut frontier = std::collections::VecDeque::from(gen.shrink(&best.0));
+    while let Some(cand) = frontier.pop_front() {
+        if budget == 0 {
+            break;
+        }
+        budget -= 1;
+        if let Err(m) = prop(&cand) {
+            frontier = std::collections::VecDeque::from(gen.shrink(&cand));
+            best = (cand, m);
+        }
+    }
+    best
 }
 
 /// Uniform integer in [lo, hi].
@@ -147,6 +162,25 @@ mod tests {
         let msg = format!("{:?}", caught.unwrap_err().downcast_ref::<String>());
         // shrinker should find a minimal-ish failing case (len 3-ish, not 16)
         assert!(msg.contains("failed"), "{msg}");
+    }
+
+    #[test]
+    fn shrink_tries_simplest_candidates_first() {
+        // Regression: a len-16 failing vector must shrink to the minimal
+        // failing length (3). With the old back-first `pop()`, the runner
+        // kept re-trying element-wise shrinks of the full-length vector and
+        // reported a len-16 input.
+        let gen = VecOf { elem: IntRange(0, 9), min_len: 0, max_len: 16 };
+        let prop = |v: &Vec<u64>| {
+            if v.len() < 3 {
+                Ok(())
+            } else {
+                Err(format!("len {}", v.len()))
+            }
+        };
+        let failing = vec![9u64; 16];
+        let (best, msg) = shrink_failure(&gen, failing, "len 16".into(), &prop, 500);
+        assert_eq!(best.len(), 3, "expected minimal failing length, got {best:?} ({msg})");
     }
 
     #[test]

@@ -1,0 +1,120 @@
+//! Minimal error type (offline substitute for `anyhow`/`thiserror`).
+//!
+//! The crate builds with zero external dependencies (see the note in
+//! Cargo.toml); fallible paths that previously leaned on `anyhow` use this
+//! string-backed error plus the [`err!`]/[`bail!`]/[`ensure!`] macros, which
+//! mirror the `anyhow!` idiom closely enough that call sites read the same.
+
+use std::fmt;
+
+/// A string-backed error with `anyhow::Error`-like ergonomics.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Self {
+        Error(m.into())
+    }
+
+    /// Prefix the message with context (the `anyhow::Context` pattern).
+    pub fn context(self, ctx: impl fmt::Display) -> Self {
+        Error(format!("{ctx}: {}", self.0))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(s: String) -> Self {
+        Error(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Self {
+        Error(s.to_string())
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error(e.to_string())
+    }
+}
+
+impl From<super::json::JsonError> for Error {
+    fn from(e: super::json::JsonError) -> Self {
+        Error(e.to_string())
+    }
+}
+
+/// `Result` defaulted to [`Error`] (the `anyhow::Result` shape).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Build an [`Error`] from a format string (substitute for `anyhow!`).
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] (substitute for `anyhow::bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*).into())
+    };
+}
+
+/// Return early with an error unless `cond` holds (substitute for
+/// `anyhow::ensure!`).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<u32> {
+        ensure!(!flag, "flag was {flag}");
+        Ok(7)
+    }
+
+    #[test]
+    fn construction_and_display() {
+        let e = err!("bad value {}", 3);
+        assert_eq!(e.to_string(), "bad value 3");
+        assert_eq!(e.context("loading config").to_string(), "loading config: bad value 3");
+    }
+
+    #[test]
+    fn conversions() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "missing");
+        assert!(Error::from(io).to_string().contains("missing"));
+        let e: Error = "plain".into();
+        assert_eq!(e.to_string(), "plain");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f() -> Result<()> {
+            bail!("nope {}", 1);
+        }
+        assert_eq!(f().unwrap_err().to_string(), "nope 1");
+        assert_eq!(fails(false).unwrap(), 7);
+        assert!(fails(true).is_err());
+    }
+}

@@ -2,9 +2,10 @@
 //!
 //! These replace the crates a networked project would pull in (see the note
 //! in Cargo.toml): [`rng`] ↔ rand/rand_distr, [`json`] ↔ serde_json,
-//! [`cli`] ↔ clap, [`logging`] ↔ tracing.
+//! [`cli`] ↔ clap, [`logging`] ↔ tracing, [`error`] ↔ anyhow/thiserror.
 
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod logging;
 pub mod rng;

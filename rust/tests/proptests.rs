@@ -19,8 +19,8 @@ use arl_tangram::cluster::cpu::CpuLatency;
 use arl_tangram::cluster::gpu::GpuCluster;
 use arl_tangram::managers::{BasicManager, CpuManager};
 use arl_tangram::scheduler::{
-    dp_arrange, BasicOperator, ChunkOperator, DpOperator, ElasticScheduler, ResourceState,
-    SchedulerConfig,
+    dp_arrange, BasicOperator, ChunkOperator, CompletionHeap, DpOperator, ElasticScheduler,
+    ResourceState, SchedulerConfig,
 };
 use arl_tangram::sim::{Engine, SimDur, SimTime};
 use arl_tangram::testkit::{check, default_cases, Gen};
@@ -175,10 +175,207 @@ fn prop_dp_arrange_matches_brute_force_chunks() {
         let got = dp_arrange(&op, &sets, dur);
         let want = brute_force_best(&op, &sets, dur);
         match (got, want) {
-            (Some(g), Some(w)) if (g.total_dur_secs - w).abs() < 1e-9 => Ok(()),
+            (Some(g), Some(w)) if (g.total_dur_secs - w).abs() < 1e-9 => {
+                // the returned allocation must itself be topology-feasible
+                // and drawn from each task's unit set
+                let mut state = op.full_state();
+                for (i, &k) in g.units.iter().enumerate() {
+                    if !sets[i].contains(&k) {
+                        return Err(format!("unit {k} not in set {:?}", sets[i]));
+                    }
+                    state = op
+                        .consume(state, k)
+                        .ok_or(format!("infeasible chunk backtrack at task {i}"))?;
+                }
+                Ok(())
+            }
             (None, None) => Ok(()),
             (g, w) => Err(format!("mismatch {g:?} vs {w:?}")),
         }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// CompletionHeap vs a naive Vec-scan reference model
+// ---------------------------------------------------------------------------
+
+/// Op stream for the model test: push, pop, peek, and "update" (pop the
+/// earliest entry and re-push it with a shifted completion time — the
+/// pattern `estimate`'s drain loop performs).
+#[derive(Debug, Clone)]
+enum HeapOp {
+    Push(u64, u64),
+    Pop,
+    Peek,
+    Update(u64),
+}
+
+struct HeapOpsGen;
+
+impl Gen for HeapOpsGen {
+    type Value = Vec<HeapOp>;
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (0..rng.range(1, 60))
+            .map(|_| match rng.range(0, 3) {
+                0 => HeapOp::Push(rng.range(0, 50), rng.range(0, 6)),
+                1 => HeapOp::Pop,
+                2 => HeapOp::Peek,
+                _ => HeapOp::Update(rng.range(1, 20)),
+            })
+            .collect()
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = vec![];
+        if v.len() > 1 {
+            out.push(v[..v.len() / 2].to_vec());
+            let mut w = v.clone();
+            w.pop();
+            out.push(w);
+        }
+        out
+    }
+}
+
+/// Naive reference: an unsorted Vec scanned for the minimum (time, units)
+/// entry — the spec the heap must agree with on every observable.
+#[derive(Default)]
+struct VecHeap {
+    entries: Vec<(SimTime, u64)>,
+    total: u64,
+}
+
+impl VecHeap {
+    fn push(&mut self, t: SimTime, u: u64) {
+        if u == 0 {
+            return;
+        }
+        self.total += u;
+        self.entries.push((t, u));
+    }
+    fn pop(&mut self) -> Option<(SimTime, u64)> {
+        let i = self
+            .entries
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &(t, u))| (t, u))
+            .map(|(i, _)| i)?;
+        let e = self.entries.swap_remove(i);
+        self.total -= e.1;
+        Some(e)
+    }
+    fn peek(&self) -> Option<SimTime> {
+        self.entries.iter().map(|&(t, _)| t).min()
+    }
+}
+
+#[test]
+fn prop_completion_heap_matches_vec_reference() {
+    check("heap=vec model", &HeapOpsGen, default_cases(), |ops| {
+        let mut heap = CompletionHeap::new();
+        let mut reference = VecHeap::default();
+        for (step, op) in ops.iter().enumerate() {
+            match *op {
+                HeapOp::Push(t, u) => {
+                    heap.push(SimTime(t), u);
+                    reference.push(SimTime(t), u);
+                }
+                HeapOp::Pop => {
+                    let got = heap.pop();
+                    // the heap must pop the earliest time; among equal
+                    // times the entry is interchangeable, so compare
+                    // against the reference's (time, units) minimum time
+                    // and remove the exact pair the heap returned
+                    match got {
+                        None => {
+                            if reference.peek().is_some() {
+                                return Err(format!("step {step}: heap empty, ref not"));
+                            }
+                        }
+                        Some((t, u)) => {
+                            let min_t = reference
+                                .peek()
+                                .ok_or(format!("step {step}: ref empty, heap not"))?;
+                            if t != min_t {
+                                return Err(format!(
+                                    "step {step}: popped {t:?}, earliest is {min_t:?}"
+                                ));
+                            }
+                            let i = reference
+                                .entries
+                                .iter()
+                                .position(|&e| e == (t, u))
+                                .ok_or(format!(
+                                    "step {step}: heap popped {t:?}/{u} not in reference"
+                                ))?;
+                            reference.entries.swap_remove(i);
+                            reference.total -= u;
+                        }
+                    }
+                }
+                HeapOp::Peek => {
+                    if heap.peek() != reference.peek() {
+                        return Err(format!(
+                            "step {step}: peek {:?} vs ref {:?}",
+                            heap.peek(),
+                            reference.peek()
+                        ));
+                    }
+                }
+                HeapOp::Update(delta) => {
+                    if let Some((t, u)) = heap.pop() {
+                        let min_t =
+                            reference.peek().ok_or(format!("step {step}: ref empty on update"))?;
+                        if t != min_t {
+                            return Err(format!("step {step}: update popped non-min"));
+                        }
+                        let i = reference
+                            .entries
+                            .iter()
+                            .position(|&e| e == (t, u))
+                            .ok_or(format!("step {step}: update pair missing in ref"))?;
+                        reference.entries.swap_remove(i);
+                        reference.total -= u;
+                        let t2 = SimTime(t.0 + delta);
+                        heap.push(t2, u);
+                        reference.push(t2, u);
+                    }
+                }
+            }
+            if heap.total_units() != reference.total {
+                return Err(format!(
+                    "step {step}: total_units {} vs ref {}",
+                    heap.total_units(),
+                    reference.total
+                ));
+            }
+            if heap.len() != reference.entries.len() {
+                return Err(format!(
+                    "step {step}: len {} vs ref {}",
+                    heap.len(),
+                    reference.entries.len()
+                ));
+            }
+        }
+        // drain: both must empty in identical (time, units) order up to
+        // equal-time permutations; compare sorted multisets
+        let mut a = vec![];
+        while let Some(e) = heap.pop() {
+            a.push(e);
+        }
+        let mut b = std::mem::take(&mut reference.entries);
+        let mut a_sorted = a.clone();
+        a_sorted.sort();
+        b.sort();
+        if a_sorted != b {
+            return Err(format!("drain multiset mismatch {a_sorted:?} vs {b:?}"));
+        }
+        // drained sequence must be non-decreasing in time
+        for w in a.windows(2) {
+            if w[1].0 < w[0].0 {
+                return Err(format!("drain not time-ordered: {w:?}"));
+            }
+        }
+        Ok(())
     });
 }
 

@@ -2,9 +2,13 @@
 //! the PJRT CPU client, run init/forward/train — the full L2↔L3 bridge.
 //!
 //! Requires `make artifacts` (skipped gracefully if absent so unit-test runs
-//! don't depend on Python). The PJRT client is `Rc`-based (not `Send`), and
-//! compiling the six artifacts takes tens of seconds, so all checks share
-//! one engine inside a single #[test].
+//! don't depend on Python) and a build with the real PJRT runtime
+//! (`RUSTFLAGS="--cfg arl_pjrt"`); the default zero-dependency build
+//! compiles this file to an empty test target. The PJRT client is
+//! `Rc`-based (not `Send`), and compiling the six artifacts takes tens of
+//! seconds, so all checks share one engine inside a single #[test].
+
+#![cfg(arl_pjrt)]
 
 use arl_tangram::runtime::{PjrtEngine, RewardModel, Trainer};
 

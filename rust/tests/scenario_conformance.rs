@@ -1,0 +1,178 @@
+//! Differential conformance suite: every built-in scenario pack × every
+//! backend, each run twice through the trace recorder, asserting that
+//! metrics summaries and decision traces are **byte-identical** and that
+//! the runs complete with full accounting. This is the quality ratchet for
+//! scheduler changes: any nondeterminism or behavioural drift shows up as
+//! a trace divergence here before it can corrupt an experiment.
+
+use arl_tangram::config::BackendKind;
+use arl_tangram::scenario::{
+    builtin_packs, diff_traces, pack_by_name, run_scenario, summary_json, trace_file_contents,
+    ScenarioSpec, TraceKind,
+};
+
+fn expected_trajectories(spec: &ScenarioSpec, backend: BackendKind) -> usize {
+    spec.workloads_for(backend).len() * spec.batch * spec.steps as usize
+}
+
+#[test]
+fn every_pack_replays_byte_identically_on_every_backend() {
+    let mut combos = 0usize;
+    let mut per_backend = std::collections::HashMap::new();
+    for spec in builtin_packs() {
+        let mut backends_run = 0usize;
+        for backend in BackendKind::ALL {
+            if spec.workloads_for(backend).is_empty() {
+                continue; // single-purpose baseline: unsupported mix subset
+            }
+            let first = run_scenario(&spec, backend).unwrap();
+            let second = run_scenario(&spec, backend).unwrap();
+
+            // differential check: byte-identical summaries…
+            let s1 = summary_json(&first.metrics).to_string();
+            let s2 = summary_json(&second.metrics).to_string();
+            assert_eq!(s1, s2, "summary diverged: '{}' on {:?}", spec.name, backend);
+            // …and identical decision traces
+            let div = diff_traces(&first.events, &second.events, 5);
+            assert!(
+                div.is_empty(),
+                "trace diverged: '{}' on {:?}: {div:?}",
+                spec.name,
+                backend
+            );
+
+            // completion accounting
+            assert_eq!(
+                first.metrics.trajectories.len(),
+                expected_trajectories(&spec, backend),
+                "'{}' on {:?} lost trajectories",
+                spec.name,
+                backend
+            );
+            assert!(!first.events.is_empty());
+            // every injection in the spec must appear in the trace
+            let injected = first
+                .events
+                .iter()
+                .filter(|e| matches!(e.kind, TraceKind::Inject { .. }))
+                .count();
+            assert_eq!(
+                injected,
+                spec.events.len(),
+                "'{}' on {:?} dropped injections",
+                spec.name,
+                backend
+            );
+
+            combos += 1;
+            backends_run += 1;
+            *per_backend.entry(backend.name()).or_insert(0usize) += 1;
+        }
+        assert!(
+            backends_run >= 2,
+            "pack '{}' must exercise at least two backends",
+            spec.name
+        );
+    }
+    // acceptance floor: ≥3 packs × all 4 execution backends
+    for backend in ["tangram", "k8s", "static", "serverless"] {
+        assert!(
+            per_backend.get(backend).copied().unwrap_or(0) >= 3,
+            "backend {backend} covered by {:?} pack-combos",
+            per_backend.get(backend)
+        );
+    }
+    assert!(combos >= 12, "only {combos} pack×backend combos ran");
+}
+
+#[test]
+fn recorded_trace_file_round_trips_and_replays() {
+    use arl_tangram::scenario::{parse_trace_file, replay_trace};
+    let spec = pack_by_name("restore-storm").unwrap();
+    let outcome = run_scenario(&spec, BackendKind::Tangram).unwrap();
+    let text = trace_file_contents(&spec, BackendKind::Tangram, &outcome);
+    let recorded = parse_trace_file(&text).unwrap();
+    let report = replay_trace(&recorded).unwrap();
+    assert!(
+        report.identical,
+        "record→replay must be byte-identical: {:?} {:?}",
+        report.summary_diff, report.trace_divergences
+    );
+}
+
+#[test]
+fn injections_change_behaviour_on_tangram() {
+    // The fault timeline must actually bite: the restore-storm pack has to
+    // produce strictly more restore overhead than the same spec without its
+    // events, and the api-flap pack must inflate API queueing on DeepSearch.
+    use arl_tangram::action::ActionKind;
+    let reward_overhead_secs = |m: &arl_tangram::metrics::Metrics| -> f64 {
+        m.actions
+            .iter()
+            .filter(|a| a.kind == ActionKind::RewardModel)
+            .map(|a| a.overhead.secs_f64())
+            .sum()
+    };
+    let api_queue_secs = |m: &arl_tangram::metrics::Metrics| -> f64 {
+        m.actions
+            .iter()
+            .filter(|a| a.kind == ActionKind::ApiCall)
+            .map(|a| a.queue_dur().secs_f64())
+            .sum()
+    };
+
+    let storm = pack_by_name("restore-storm").unwrap();
+    let mut calm = storm.clone();
+    calm.events.clear();
+    let with = run_scenario(&storm, BackendKind::Tangram).unwrap();
+    let without = run_scenario(&calm, BackendKind::Tangram).unwrap();
+    assert!(
+        reward_overhead_secs(&with.metrics) > reward_overhead_secs(&without.metrics),
+        "cache flushes must raise restore overhead: {} !> {}",
+        reward_overhead_secs(&with.metrics),
+        reward_overhead_secs(&without.metrics)
+    );
+
+    let flap = pack_by_name("api-flap").unwrap();
+    let mut steady = flap.clone();
+    steady.events.clear();
+    let with = run_scenario(&flap, BackendKind::Tangram).unwrap();
+    let without = run_scenario(&steady, BackendKind::Tangram).unwrap();
+    assert!(
+        api_queue_secs(&with.metrics) > api_queue_secs(&without.metrics),
+        "quota flaps must inflate API queueing: {} !> {}",
+        api_queue_secs(&with.metrics),
+        api_queue_secs(&without.metrics)
+    );
+}
+
+#[test]
+fn cpu_pool_squeeze_applies_and_recovers() {
+    let spec = pack_by_name("pool-squeeze").unwrap();
+    let outcome = run_scenario(&spec, BackendKind::Tangram).unwrap();
+    // both injections delivered and applied by the tangram backend
+    let applied: Vec<bool> = outcome
+        .events
+        .iter()
+        .filter_map(|e| match &e.kind {
+            TraceKind::Inject { applied, .. } => Some(*applied),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(applied, vec![true, true]);
+    // the run still completes every trajectory despite the squeeze
+    assert_eq!(
+        outcome.metrics.trajectories.len(),
+        expected_trajectories(&spec, BackendKind::Tangram)
+    );
+    assert_eq!(outcome.metrics.failed_actions(), 0);
+}
+
+#[test]
+fn spec_files_round_trip_through_json() {
+    for spec in builtin_packs() {
+        let text = spec.to_json().to_string();
+        let back = ScenarioSpec::from_json(&text).unwrap();
+        assert_eq!(back.to_json().to_string(), text);
+    }
+}

@@ -139,6 +139,68 @@ fn failure_injection_unmanaged_api_storms_recover() {
 }
 
 #[test]
+fn determinism_two_same_seed_runs_serialize_byte_identically() {
+    // Locks in the sim engine's tie-break-by-seq guarantee at system level:
+    // for every workload × backend composition, two same-seed runs must
+    // produce byte-identical serialized Metrics JSON. This is what makes
+    // the scenario record/replay harness able to byte-diff runs across
+    // processes (all decision paths iterate pools in sorted order).
+    let c = cat();
+    type Mk = Box<dyn Fn(&Catalog) -> Box<dyn Backend>>;
+    let cases: Vec<(Mk, WorkloadKind, &str)> = vec![
+        (Box::new(|c: &Catalog| Box::new(tangram(c)) as Box<dyn Backend>), WorkloadKind::Coding, "tangram/coding"),
+        (Box::new(|c: &Catalog| Box::new(tangram(c)) as Box<dyn Backend>), WorkloadKind::DeepSearch, "tangram/deepsearch"),
+        (Box::new(|c: &Catalog| Box::new(tangram(c)) as Box<dyn Backend>), WorkloadKind::Mopd, "tangram/mopd"),
+        (
+            Box::new(|c: &Catalog| {
+                Box::new(BaselineBackend::coding(
+                    c,
+                    K8sCfg { nodes: 2, cores_per_node: 64, node_mem_gb: 512, ..K8sCfg::default() },
+                )) as Box<dyn Backend>
+            }),
+            WorkloadKind::Coding,
+            "k8s/coding",
+        ),
+        (
+            Box::new(|c: &Catalog| Box::new(BaselineBackend::mopd_search(c)) as Box<dyn Backend>),
+            WorkloadKind::Mopd,
+            "static/mopd",
+        ),
+        (
+            Box::new(|c: &Catalog| Box::new(BaselineBackend::mopd_search(c)) as Box<dyn Backend>),
+            WorkloadKind::DeepSearch,
+            "static/deepsearch",
+        ),
+        (
+            Box::new(|c: &Catalog| {
+                Box::new(BaselineBackend::serverless(
+                    c,
+                    ServerlessCfg { gpu_nodes: 2, ..ServerlessCfg::default() },
+                )) as Box<dyn Backend>
+            }),
+            WorkloadKind::Mopd,
+            "serverless/mopd",
+        ),
+        (
+            Box::new(|c: &Catalog| Box::new(BaselineBackend::deepsearch(c)) as Box<dyn Backend>),
+            WorkloadKind::DeepSearch,
+            "unmanaged/deepsearch",
+        ),
+    ];
+    for (mk, kind, label) in cases {
+        let cfg = RunCfg { batch: 8, steps: 1, seed: 71, ..RunCfg::default() };
+        let wl = Workload::new(TaskId(0), kind);
+        let m1 = run(mk(&c).as_mut(), &c, &[wl.clone()], &cfg);
+        let m2 = run(mk(&c).as_mut(), &c, &[wl], &cfg);
+        assert_eq!(
+            m1.to_json().to_string(),
+            m2.to_json().to_string(),
+            "metrics JSON diverged for {label}"
+        );
+    }
+}
+
+#[test]
 fn config_driven_launch_matches_direct() {
     use arl_tangram::config::ExperimentCfg;
     let cfg = ExperimentCfg::from_json(
