@@ -1,0 +1,63 @@
+//! Dirty-pool scheduler bench: every built-in scenario pack on the tangram
+//! backend, dirty-pool vs legacy full-sweep scheduling, reporting elastic-
+//! scheduler invocation counts and mean `drain_started` wall time. Writes
+//! `BENCH_sched.json` (override the path with `ARL_BENCH_OUT`).
+//!
+//! The hot-path claim this regenerates: scheduling only dirty pools cuts
+//! invocations super-linearly with pool count on multi-node packs — one
+//! completion pumps one pool, not `O(pools)` — at identical metrics.
+
+use arl_tangram::bench::{sched_bench_json, sched_bench_rows};
+
+fn main() {
+    println!("=== dirty-pool scheduling vs full sweep (tangram) ===");
+    println!(
+        "{:<16} {:>6} {:>12} {:>12} {:>9} {:>12} {:>12}  {}",
+        "pack", "pools", "invocations", "sweep", "reduction", "mean sched", "mean drain", "metrics"
+    );
+    let rows = sched_bench_rows();
+    for r in &rows {
+        println!(
+            "{:<16} {:>6} {:>12} {:>12} {:>8.1}x {:>10}ns {:>10}ns  {}",
+            r.pack,
+            r.pools,
+            r.sched_invocations,
+            r.sched_invocations_sweep,
+            r.reduction(),
+            r.mean_sched_ns,
+            r.mean_drain_ns,
+            if r.metrics_equal { "equal" } else { "DIVERGED" },
+        );
+    }
+    let out = std::env::var("ARL_BENCH_OUT").unwrap_or_else(|_| "BENCH_sched.json".to_string());
+    let json = sched_bench_json(&rows);
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => {
+            eprintln!("failed to write {out}: {e}");
+            std::process::exit(1);
+        }
+    }
+    // the acceptance bar is fewer invocations *at equal metrics* — a
+    // divergent row is a regression, not a report line
+    let diverged: Vec<&str> =
+        rows.iter().filter(|r| !r.metrics_equal).map(|r| r.pack.as_str()).collect();
+    if !diverged.is_empty() {
+        eprintln!("dirty-pool scheduling diverged from full sweep on: {}", diverged.join(", "));
+        std::process::exit(1);
+    }
+    if let Some(r) = rows.iter().find(|r| r.sched_invocations > r.sched_invocations_sweep) {
+        eprintln!(
+            "dirty-pool scheduling did MORE work on '{}': {} > {}",
+            r.pack, r.sched_invocations, r.sched_invocations_sweep
+        );
+        std::process::exit(1);
+    }
+    let (dirty_total, sweep_total) = rows.iter().fold((0u64, 0u64), |(d, s), r| {
+        (d + r.sched_invocations, s + r.sched_invocations_sweep)
+    });
+    if dirty_total >= sweep_total {
+        eprintln!("no aggregate invocation reduction: {dirty_total} !< {sweep_total}");
+        std::process::exit(1);
+    }
+}

@@ -9,19 +9,20 @@ use crate::action::{Action, ActionId, ResourceKindId};
 use crate::cluster::api::{ApiEndpoint, ApiOutcome};
 use crate::coordinator::backend::Started;
 use crate::sim::{SimDur, SimTime};
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
+use std::rc::Rc;
 
 /// The unmanaged API client.
 #[derive(Debug)]
 pub struct UnmanagedApi {
     endpoints: HashMap<ResourceKindId, ApiEndpoint>,
     outcomes: HashMap<ActionId, (ResourceKindId, ApiOutcome)>,
-    queue: Vec<Action>,
+    queue: VecDeque<Rc<Action>>,
 }
 
 impl UnmanagedApi {
     pub fn new(endpoints: HashMap<ResourceKindId, ApiEndpoint>) -> Self {
-        UnmanagedApi { endpoints, outcomes: HashMap::new(), queue: Vec::new() }
+        UnmanagedApi { endpoints, outcomes: HashMap::new(), queue: VecDeque::new() }
     }
 
     pub fn handles(&self, a: &Action) -> bool {
@@ -31,8 +32,14 @@ impl UnmanagedApi {
             .any(|(k, d)| d.min_units() > 0 && self.endpoints.contains_key(&k))
     }
 
-    pub fn submit(&mut self, action: &Action) {
-        self.queue.push(action.clone());
+    pub fn submit(&mut self, action: &Rc<Action>) {
+        self.queue.push_back(action.clone());
+    }
+
+    /// Anything waiting to fire (dirty-pool contract: the unmanaged client
+    /// fires on the next pump whenever its queue is non-empty).
+    pub fn has_queued(&self) -> bool {
+        !self.queue.is_empty()
     }
 
     /// Everything fires immediately — that is the baseline's defining flaw.
@@ -105,6 +112,10 @@ mod tests {
     };
     use crate::cluster::api::ApiEndpointSpec;
 
+    fn rc(a: Action) -> Rc<Action> {
+        Rc::new(a)
+    }
+
     fn setup() -> (ResourceRegistry, UnmanagedApi, ResourceKindId) {
         let mut reg = ResourceRegistry::new();
         let k = reg.register("api:s", ResourceClass::ApiConcurrency, 4);
@@ -139,8 +150,9 @@ mod tests {
     fn burst_triggers_rate_limits() {
         let (reg, mut api, k) = setup();
         for i in 0..20 {
-            api.submit(&mk(&reg, k, i, 0));
+            api.submit(&rc(mk(&reg, k, i, 0)));
         }
+        assert!(api.has_queued());
         let started = api.drain_started(SimTime::ZERO);
         assert_eq!(started.len(), 20, "unmanaged client fires everything");
         let mut limited = 0;
@@ -155,7 +167,7 @@ mod tests {
     #[test]
     fn retries_carry_backoff() {
         let (reg, mut api, k) = setup();
-        api.submit(&mk(&reg, k, 1, 2));
+        api.submit(&rc(mk(&reg, k, 1, 2)));
         let started = api.drain_started(SimTime::ZERO);
         assert_eq!(started[0].overhead, SimDur::from_secs(2));
         let _ = api.complete(ActionId(1));

@@ -10,7 +10,8 @@
 use crate::action::{Action, ActionId, TrajId};
 use crate::coordinator::backend::Started;
 use crate::sim::{SimDur, SimTime};
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
+use std::rc::Rc;
 
 #[derive(Debug, Clone)]
 pub struct K8sCfg {
@@ -67,7 +68,7 @@ pub struct K8sCpu {
     pods: HashMap<TrajId, Pod>,
     /// when the control plane frees up for the next creation
     cp_next_free: SimTime,
-    queue: Vec<Action>,
+    queue: VecDeque<Rc<Action>>,
     running: HashMap<ActionId, (TrajId, u32)>, // cores held
     pub n_cp_timeouts: u64,
 }
@@ -81,7 +82,7 @@ impl K8sCpu {
             cfg,
             pods: HashMap::new(),
             cp_next_free: SimTime::ZERO,
-            queue: Vec::new(),
+            queue: VecDeque::new(),
             running: HashMap::new(),
             n_cp_timeouts: 0,
         }
@@ -138,8 +139,14 @@ impl K8sCpu {
         }
     }
 
-    pub fn submit(&mut self, action: &Action) {
-        self.queue.push(action.clone());
+    pub fn submit(&mut self, action: &Rc<Action>) {
+        self.queue.push_back(action.clone());
+    }
+
+    /// Anything waiting on a pod (dirty-pool contract: pod readiness is
+    /// time-gated, so a non-empty queue must be rescanned on every pump).
+    pub fn has_queued(&self) -> bool {
+        !self.queue.is_empty()
     }
 
     pub fn complete(&mut self, id: ActionId) {
@@ -179,7 +186,7 @@ impl K8sCpu {
             }
             let cores = cap.min(free).max(1);
             node.busy_cores += cores;
-            let a = self.queue.remove(i);
+            let a = self.queue.remove(i).expect("index in bounds");
             // first action additionally waited for pod readiness, which is
             // already modeled via ready_at gating; charge creation latency
             // as overhead on the first action for Table-1-style accounting
@@ -262,7 +269,7 @@ mod tests {
             ..K8sCfg::default()
         });
         k.traj_start(SimTime::ZERO, TrajId(1), 4).unwrap();
-        k.submit(&action(&r, 1, 1, 32));
+        k.submit(&Rc::new(action(&r, 1, 1, 32)));
         // pod not ready yet
         assert!(k.drain_started(SimTime::ZERO).is_empty());
         let later = SimTime::ZERO + SimDur::from_secs(10);
@@ -311,7 +318,7 @@ mod tests {
         }
         let t = SimTime::ZERO + SimDur::from_secs(30);
         for i in 0..16 {
-            k.submit(&action(&r, i, i, 4));
+            k.submit(&Rc::new(action(&r, i, i, 4)));
         }
         let started = k.drain_started(t);
         // physical cores (8) gate actual execution: 4+4 = 2 actions at limit,

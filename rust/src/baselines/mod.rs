@@ -22,6 +22,7 @@ use crate::rollout::workloads::Catalog;
 use crate::scenario::ScenarioEvent;
 use crate::sim::SimTime;
 use std::collections::HashMap;
+use std::rc::Rc;
 
 /// GPU half of a baseline deployment.
 pub enum GpuBaseline {
@@ -169,7 +170,7 @@ impl Backend for BaselineBackend {
         }
     }
 
-    fn submit(&mut self, _now: SimTime, action: &Action) {
+    fn submit(&mut self, _now: SimTime, action: &Rc<Action>) {
         if self.is_cpu(action) {
             self.k8s
                 .as_mut()
@@ -231,6 +232,21 @@ impl Backend for BaselineBackend {
             out.extend(api.drain_started(now));
         }
         out
+    }
+
+    fn has_dirty(&self) -> bool {
+        // The baselines' admissions are time-gated (pod readiness, queue
+        // timeouts, provider load), not event-gated, so their dirty-pool
+        // contract is the simplest sound one: dirty while anything waits.
+        // An empty deployment has nothing to start — skipping the drain is
+        // exactly the legacy no-op scan.
+        self.k8s.as_ref().map_or(false, |k| k.has_queued())
+            || match &self.gpu {
+                GpuBaseline::Static(s) => s.has_queued(),
+                GpuBaseline::Serverless(s) => s.has_queued(),
+                GpuBaseline::None => false,
+            }
+            || self.api.as_ref().map_or(false, |a| a.has_queued())
     }
 
     fn next_wakeup(&self, now: SimTime) -> Option<SimTime> {

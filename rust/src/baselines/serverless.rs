@@ -12,7 +12,8 @@ use crate::action::{Action, ActionId};
 use crate::cluster::gpu::{GpuCluster, RestoreModel};
 use crate::coordinator::backend::Started;
 use crate::sim::{SimDur, SimTime};
-use std::collections::{HashMap, HashSet};
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::rc::Rc;
 
 #[derive(Debug, Clone)]
 pub struct ServerlessCfg {
@@ -49,7 +50,7 @@ pub struct ServerlessGpu {
     cfg: ServerlessCfg,
     cluster: GpuCluster,
     restore: RestoreModel,
-    queue: Vec<Action>,
+    queue: VecDeque<Rc<Action>>,
     running: HashMap<ActionId, crate::cluster::gpu::ChunkRef>,
     /// actions that timed out in queue → report Failed on completion
     pub timed_out: HashSet<ActionId>,
@@ -61,14 +62,20 @@ impl ServerlessGpu {
             cluster: GpuCluster::new(cfg.gpu_nodes),
             restore: RestoreModel::default(),
             cfg,
-            queue: Vec::new(),
+            queue: VecDeque::new(),
             running: HashMap::new(),
             timed_out: HashSet::new(),
         }
     }
 
-    pub fn submit(&mut self, action: &Action) {
-        self.queue.push(action.clone());
+    pub fn submit(&mut self, action: &Rc<Action>) {
+        self.queue.push_back(action.clone());
+    }
+
+    /// Anything waiting to dispatch (dirty-pool contract: the queue
+    /// timeout is time-gated, so waiting work must be rescanned per pump).
+    pub fn has_queued(&self) -> bool {
+        !self.queue.is_empty()
     }
 
     pub fn complete(&mut self, now: SimTime, id: ActionId) {
@@ -92,7 +99,7 @@ impl ServerlessGpu {
             let waited = now - self.queue[i].submitted_at;
             if waited > self.cfg.queue_timeout {
                 // shed: complete instantly as a failure
-                let a = self.queue.remove(i);
+                let a = self.queue.remove(i).expect("index in bounds");
                 self.timed_out.insert(a.id);
                 out.push(Started {
                     action: a.id,
@@ -105,7 +112,7 @@ impl ServerlessGpu {
             let svc = self.queue[i].spec.service.expect("GPU action without service");
             match self.cluster.allocate(svc, self.cfg.dop) {
                 Some(alloc) => {
-                    let a = self.queue.remove(i);
+                    let a = self.queue.remove(i).expect("index in bounds");
                     let weights = self
                         .cfg
                         .weights_gb
@@ -180,13 +187,13 @@ mod tests {
             gpu_nodes: 1,
             ..ServerlessCfg::default()
         });
-        s.submit(&mk_action(&r, 1, 0, SimTime::ZERO));
+        s.submit(&Rc::new(mk_action(&r, 1, 0, SimTime::ZERO)));
         let st = s.drain_started(SimTime::ZERO);
         assert_eq!(st.len(), 1);
         assert!(st[0].overhead >= ServerlessCfg::default().startup);
         s.complete(SimTime::ZERO + SimDur::from_secs(5), ActionId(1));
         // same service again: still cold
-        s.submit(&mk_action(&r, 2, 0, SimTime::ZERO));
+        s.submit(&Rc::new(mk_action(&r, 2, 0, SimTime::ZERO)));
         let st2 = s.drain_started(SimTime::ZERO + SimDur::from_secs(5));
         assert!(st2[0].overhead >= ServerlessCfg::default().startup);
     }
@@ -201,7 +208,7 @@ mod tests {
         });
         // two instances fit (8 GPUs / TP4); the third waits
         for i in 0..3 {
-            s.submit(&mk_action(&r, i, i as u32, SimTime::ZERO));
+            s.submit(&Rc::new(mk_action(&r, i, i as u32, SimTime::ZERO)));
         }
         let st = s.drain_started(SimTime::ZERO);
         assert_eq!(st.len(), 2);

@@ -8,7 +8,8 @@
 use crate::action::{Action, ActionId, ServiceId};
 use crate::coordinator::backend::Started;
 use crate::sim::{SimDur, SimTime};
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
+use std::rc::Rc;
 
 /// One pinned replica.
 #[derive(Debug)]
@@ -25,7 +26,7 @@ struct ServiceDeployment {
     name: String,
     dop: u8,
     replicas: Vec<Replica>,
-    queue: Vec<Action>,
+    queue: VecDeque<Rc<Action>>,
 }
 
 /// The static deployment: a fixed map service → replicas.
@@ -56,20 +57,25 @@ impl StaticGpu {
                             last_change: SimTime::ZERO,
                         })
                         .collect(),
-                    queue: Vec::new(),
+                    queue: VecDeque::new(),
                 },
             );
         }
         StaticGpu { services, running: HashMap::new(), total_gpus: total }
     }
 
-    pub fn submit(&mut self, action: &Action) {
+    pub fn submit(&mut self, action: &Rc<Action>) {
         let svc = action.spec.service.expect("GPU action without service");
         self.services
             .get_mut(&svc)
             .unwrap_or_else(|| panic!("service {svc:?} not deployed"))
             .queue
-            .push(action.clone());
+            .push_back(action.clone());
+    }
+
+    /// Anything waiting on a replica (dirty-pool contract).
+    pub fn has_queued(&self) -> bool {
+        self.services.values().any(|d| !d.queue.is_empty())
     }
 
     pub fn complete(&mut self, now: SimTime, id: ActionId) {
@@ -95,7 +101,7 @@ impl StaticGpu {
             while !dep.queue.is_empty() {
                 let free = dep.replicas.iter().position(|r| !r.busy);
                 let Some(ri) = free else { break };
-                let a = dep.queue.remove(0);
+                let a = dep.queue.pop_front().expect("non-empty queue has a head");
                 let exec = a.spec.exec_dur(dep.dop as u64);
                 let r = &mut dep.replicas[ri];
                 r.busy = true;
@@ -183,8 +189,8 @@ mod tests {
         ]);
         assert_eq!(s.total_gpus(), 8);
         // two requests for service 0, none for service 1
-        s.submit(&mk_action(&r, 1, 0, 8));
-        s.submit(&mk_action(&r, 2, 0, 8));
+        s.submit(&Rc::new(mk_action(&r, 1, 0, 8)));
+        s.submit(&Rc::new(mk_action(&r, 2, 0, 8)));
         let started = s.drain_started(SimTime::ZERO);
         // only one replica of service 0 → second request queues even though
         // service 1's replica idles (the paper's task-level waste)
@@ -203,7 +209,7 @@ mod tests {
             (ServiceId(0), "a".into(), 4, 2),
             (ServiceId(1), "b".into(), 2, 1),
         ]);
-        s.submit(&mk_action(&r, 1, 0, 4));
+        s.submit(&Rc::new(mk_action(&r, 1, 0, 4)));
         let _ = s.drain_started(SimTime::ZERO);
         let u = s.utilization();
         let a = u.iter().find(|(n, _)| n == "svc:a").unwrap();
@@ -218,7 +224,7 @@ mod tests {
     fn exec_uses_pinned_dop() {
         let r = reg();
         let mut s = StaticGpu::new(vec![(ServiceId(0), "a".into(), 8, 1)]);
-        s.submit(&mk_action(&r, 1, 0, 8));
+        s.submit(&Rc::new(mk_action(&r, 1, 0, 8)));
         let started = s.drain_started(SimTime::ZERO);
         // perfect scaling at dop 8 → 1s
         assert_eq!(started[0].exec, SimDur::from_secs(1));

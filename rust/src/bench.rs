@@ -200,6 +200,96 @@ pub fn row(label: &str, cols: &[String]) -> String {
     s
 }
 
+// ---------------------------------------------------------------------------
+// dirty-pool scheduler bench (BENCH_sched.json)
+// ---------------------------------------------------------------------------
+
+/// One scenario pack measured under dirty-pool scheduling vs the legacy
+/// full sweep (same spec, same seed, tangram backend).
+#[derive(Debug, Clone)]
+pub struct SchedBenchRow {
+    pub pack: String,
+    /// Schedulable pools in the deployment (CPU nodes + GPU + endpoints).
+    pub pools: usize,
+    /// Elastic-scheduler invocations under dirty-pool scheduling.
+    pub sched_invocations: u64,
+    /// …and under the full-sweep baseline.
+    pub sched_invocations_sweep: u64,
+    pub drain_calls: u64,
+    pub mean_sched_ns: u64,
+    pub mean_drain_ns: u64,
+    /// Byte-identical metrics summaries between the two modes.
+    pub metrics_equal: bool,
+    pub trajectories: usize,
+    pub actions: usize,
+}
+
+impl SchedBenchRow {
+    /// sweep / dirty invocation ratio (how much scanning the dirty set saves).
+    pub fn reduction(&self) -> f64 {
+        self.sched_invocations_sweep as f64 / self.sched_invocations.max(1) as f64
+    }
+}
+
+/// Run every built-in scenario pack on the tangram backend twice — dirty-
+/// pool and full-sweep — and report scheduler-invocation counts and mean
+/// `drain_started` wall time. The acceptance bar: strictly fewer
+/// invocations than the sweep at equal metrics, growing with pool count.
+pub fn sched_bench_rows() -> Vec<SchedBenchRow> {
+    use crate::scenario::{builtin_packs, run_scenario_tangram, summary_json};
+    builtin_packs()
+        .iter()
+        .map(|spec| {
+            let (dirty, sd) = run_scenario_tangram(spec, false).expect("dirty-pool run");
+            let (sweep, ss) = run_scenario_tangram(spec, true).expect("full-sweep run");
+            SchedBenchRow {
+                pack: spec.name.clone(),
+                pools: sd.pools,
+                sched_invocations: sd.invocations,
+                sched_invocations_sweep: ss.invocations,
+                drain_calls: sd.drain_calls,
+                mean_sched_ns: sd.mean_sched_ns,
+                mean_drain_ns: sd.mean_drain_ns,
+                metrics_equal: summary_json(&dirty.metrics).to_string()
+                    == summary_json(&sweep.metrics).to_string(),
+                trajectories: dirty.metrics.trajectories.len(),
+                actions: dirty.metrics.actions.len(),
+            }
+        })
+        .collect()
+}
+
+/// Serialize bench rows to the `BENCH_sched.json` format.
+pub fn sched_bench_json(rows: &[SchedBenchRow]) -> String {
+    use crate::util::json::Json;
+    Json::obj(vec![
+        ("bench", Json::str("sched_dirty_pool")),
+        ("backend", Json::str("tangram")),
+        (
+            "rows",
+            Json::arr(rows.iter().map(|r| {
+                Json::obj(vec![
+                    ("pack", Json::str(r.pack.clone())),
+                    ("pools", Json::num(r.pools as f64)),
+                    ("sched_invocations", Json::num(r.sched_invocations as f64)),
+                    (
+                        "sched_invocations_sweep",
+                        Json::num(r.sched_invocations_sweep as f64),
+                    ),
+                    ("reduction", Json::num(r.reduction())),
+                    ("drain_calls", Json::num(r.drain_calls as f64)),
+                    ("mean_sched_ns", Json::num(r.mean_sched_ns as f64)),
+                    ("mean_drain_ns", Json::num(r.mean_drain_ns as f64)),
+                    ("metrics_equal", Json::Bool(r.metrics_equal)),
+                    ("trajectories", Json::num(r.trajectories as f64)),
+                    ("actions", Json::num(r.actions as f64)),
+                ])
+            })),
+        ),
+    ])
+    .to_string()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

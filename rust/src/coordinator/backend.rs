@@ -5,10 +5,48 @@
 //! each action starts, with how many units, and at what overhead — this is
 //! where ARL-Tangram and the paper's baselines (Kubernetes pods, static
 //! SGLang services, ServerlessLLM, fixed DoP) differ.
+//!
+//! # The dirty-pool contract
+//!
+//! The driver pumps ([`Backend::drain_started`]) after every submit,
+//! completion, timed wakeup, and fault injection — under bursty queues that
+//! is thousands of pumps, and re-scanning *every* resource pool on each one
+//! breaks the paper's sub-ms decision budget (§4.2). Backends therefore
+//! track a **dirty set** of pools and the driver honors it:
+//!
+//! * A pool becomes dirty when its state changes in a way that could start
+//!   a queued action: an action is submitted into it, an action completes
+//!   on it, a quota window rolls over ([`Backend::tick`]), a fault
+//!   injection touches it ([`Backend::inject`]), or a duration observation
+//!   moves the historical-average estimate of a kind the pool holds
+//!   unprofiled queued actions of (the one *cross-pool* coupling — the
+//!   EWMA feeds every pool's decision objective).
+//! * [`Backend::drain_started`] schedules **only dirty pools, in sorted
+//!   order** (sorted so same-timestamp `Started` ordering — and therefore
+//!   recorded scenario traces — stays deterministic across processes), and
+//!   clears the set. Two kinds of pool re-arm themselves: one that
+//!   *started* work (its own state changed; the next pump may start more
+//!   on the leftover capacity, exactly as the legacy full sweep did), and
+//!   one that is *stalled* (non-empty queue, nothing running that will
+//!   free capacity, nothing started) — re-arming the latter is what keeps
+//!   a cordoned-then-restored CPU node live.
+//! * [`Backend::has_dirty`] tells the driver whether a drain could start
+//!   anything at all; the driver skips `drain_started` entirely when it
+//!   returns `false`. Backends whose admission is time-gated rather than
+//!   event-gated (pod readiness, queue timeouts) simply report "dirty while
+//!   anything is queued" — the default implementation returns `true`, which
+//!   is always correct and merely forfeits the optimization.
+//!
+//! Actions are handed over as [`Rc<Action>`] so queue management moves
+//! 8-byte handles instead of cloning full `Action`s on every submit and
+//! retry. While an action is queued (state `Waiting`) the driver never
+//! mutates it; backends drop their handle when they start the action, which
+//! is what lets the driver reclaim exclusive ownership for bookkeeping.
 
 use crate::action::{Action, ActionId, TrajId};
 use crate::scenario::ScenarioEvent;
 use crate::sim::{SimDur, SimTime};
+use std::rc::Rc;
 
 /// An action the backend has decided to start now.
 #[derive(Debug, Clone)]
@@ -51,15 +89,27 @@ pub trait Backend {
     /// Trajectory finished (or was abandoned); release its environment.
     fn traj_end(&mut self, now: SimTime, traj: TrajId);
 
-    /// Enqueue one action (also used for retries).
-    fn submit(&mut self, now: SimTime, action: &Action);
+    /// Enqueue one action (also used for retries). The backend keeps a
+    /// clone of the `Rc` handle while the action waits and drops it when
+    /// the action starts (see the dirty-pool contract above).
+    fn submit(&mut self, now: SimTime, action: &Rc<Action>);
 
     /// An attempt finished executing; release resources and judge it.
     fn on_complete(&mut self, now: SimTime, action: &Action) -> Verdict;
 
     /// Collect actions that can start now (called after submits/completions
-    /// and timed wakeups).
+    /// and timed wakeups). Under the dirty-pool contract this schedules
+    /// only pools whose state changed since the previous drain.
     fn drain_started(&mut self, now: SimTime) -> Vec<Started>;
+
+    /// Dirty-pool contract: `true` when at least one pool's state changed
+    /// since the last [`Backend::drain_started`], so draining could start
+    /// something. The driver skips `drain_started` when this is `false`.
+    /// The default (always `true`) is correct for any backend and simply
+    /// keeps the legacy every-pump scan.
+    fn has_dirty(&self) -> bool {
+        true
+    }
 
     /// Earliest future instant at which the backend wants a tick (quota
     /// window rolls, retry backoffs). The driver schedules it.

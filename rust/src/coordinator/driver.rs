@@ -21,6 +21,7 @@ use crate::scenario::{ScenarioEvent, TimedEvent};
 use crate::sim::{Engine, SimDur, SimTime};
 use crate::util::rng::Rng;
 use std::collections::HashMap;
+use std::rc::Rc;
 
 /// Experiment-run parameters.
 #[derive(Debug, Clone)]
@@ -95,7 +96,11 @@ struct Driver<'a> {
     eng: Engine<Ev>,
     metrics: Metrics,
     rng: Rng,
-    actions: HashMap<ActionId, Action>,
+    /// Single owner of every live action. Backends hold `Rc` handles only
+    /// while an action waits in a queue and drop them on start, so the
+    /// driver can reclaim exclusive access (`Rc::get_mut`) for the mutable
+    /// bookkeeping — no full-`Action` clones on submit or retry.
+    actions: HashMap<ActionId, Rc<Action>>,
     /// (overhead, exec) of the in-flight attempt
     attempt: HashMap<ActionId, (SimDur, SimDur)>,
     trajs: HashMap<TrajId, TrajRt>,
@@ -315,7 +320,7 @@ impl Driver<'_> {
                 };
                 rt.phase += 1;
                 let kind = spec.kind;
-                let a = Action::new(id, spec, now);
+                let a = Rc::new(Action::new(id, spec, now));
                 self.backend.submit(now, &a);
                 self.actions.insert(id, a);
                 self.waiting += 1;
@@ -377,30 +382,36 @@ impl Driver<'_> {
     }
 
     /// Collect backend start decisions and schedule their completions.
+    /// Honors the dirty-pool contract: when the backend reports no dirty
+    /// pool, the drain is skipped entirely (nothing could start).
     fn pump(&mut self, now: SimTime) {
-        let started = self.backend.drain_started(now);
-        for s in started {
-            let a = self.actions.get_mut(&s.action).expect("unknown started action");
-            debug_assert_eq!(a.state, ActionState::Waiting);
-            a.state = ActionState::Running;
-            if a.started_at.is_none() {
-                a.started_at = Some(now);
+        if self.backend.has_dirty() {
+            let started = self.backend.drain_started(now);
+            for s in started {
+                let rc = self.actions.get_mut(&s.action).expect("unknown started action");
+                let a = Rc::get_mut(rc)
+                    .expect("started action still referenced by a backend queue");
+                debug_assert_eq!(a.state, ActionState::Waiting);
+                a.state = ActionState::Running;
+                if a.started_at.is_none() {
+                    a.started_at = Some(now);
+                }
+                a.allocated_units = s.units;
+                a.overhead += s.overhead;
+                self.attempt.insert(s.action, (s.overhead, s.exec));
+                self.waiting = self.waiting.saturating_sub(1);
+                self.trace(
+                    now,
+                    TraceKind::Start {
+                        action: s.action.0,
+                        units: s.units,
+                        overhead_ns: s.overhead.0,
+                        exec_ns: s.exec.0,
+                        queue_depth: self.waiting,
+                    },
+                );
+                self.eng.schedule_in(s.overhead + s.exec, Ev::ActionDone(s.action));
             }
-            a.allocated_units = s.units;
-            a.overhead += s.overhead;
-            self.attempt.insert(s.action, (s.overhead, s.exec));
-            self.waiting = self.waiting.saturating_sub(1);
-            self.trace(
-                now,
-                TraceKind::Start {
-                    action: s.action.0,
-                    units: s.units,
-                    overhead_ns: s.overhead.0,
-                    exec_ns: s.exec.0,
-                    queue_depth: self.waiting,
-                },
-            );
-            self.eng.schedule_in(s.overhead + s.exec, Ev::ActionDone(s.action));
         }
         if let Some(at) = self.backend.next_wakeup(now) {
             if at > now && self.wakeup_at.map_or(true, |w| at < w || w <= now) {
@@ -419,12 +430,16 @@ impl Driver<'_> {
         };
         match effective {
             Verdict::Retry => {
-                let a = self.actions.get_mut(&id).unwrap();
-                a.retry_count += 1;
-                a.state = ActionState::Waiting;
-                let retries = a.retry_count;
-                let snapshot = a.clone();
-                self.backend.submit(now, &snapshot);
+                let retries = {
+                    let rc = self.actions.get_mut(&id).unwrap();
+                    let a = Rc::get_mut(rc)
+                        .expect("retried action still referenced by a backend queue");
+                    a.retry_count += 1;
+                    a.state = ActionState::Waiting;
+                    a.retry_count
+                };
+                let handle = self.actions[&id].clone();
+                self.backend.submit(now, &handle);
                 self.waiting += 1;
                 self.trace(
                     now,

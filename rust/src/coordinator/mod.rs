@@ -3,10 +3,12 @@
 
 pub mod backend;
 pub mod driver;
+pub mod queue;
 pub mod tangram;
 
 pub use backend::{Backend, Started, Verdict};
 pub use driver::{run, run_traced, RunCfg};
+pub use queue::ActionQueue;
 pub use tangram::{TangramBackend, TangramCfg};
 
 #[cfg(test)]
@@ -124,6 +126,29 @@ mod tests {
         assert_eq!(m1.actions.len(), m2.actions.len());
         assert!((m1.mean_act() - m2.mean_act()).abs() < 1e-12);
         assert!((m1.mean_step_dur() - m2.mean_step_dur()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn completions_feed_the_duration_estimator() {
+        // Satellite bugfix regression: EnvExec actions are unprofiled, so
+        // the scheduler's only handle on their duration is the historical
+        // EWMA — which used to be dead code (observe() never called). After
+        // a run the estimator must hold observed history, not the fallback.
+        let cat = small_cat();
+        let mut be = tangram_for(&cat);
+        let wl = Workload::new(TaskId(0), WorkloadKind::Coding);
+        let cfg = RunCfg { batch: 8, steps: 1, seed: 23, ..RunCfg::default() };
+        let m = run(&mut be, &cat, &[wl], &cfg);
+        assert!(!m.actions.is_empty());
+        let sentinel = SimDur::from_secs(123_456);
+        let est = be
+            .sched
+            .stats
+            .estimate(crate::action::ActionKind::EnvExec, sentinel);
+        assert_ne!(est, sentinel, "estimator never observed a completion");
+        // coding env execs are clamped to (1ms, 60s) — the EWMA of observed
+        // exec durations must land inside that range
+        assert!(est.secs_f64() > 0.0 && est.secs_f64() <= 60.0, "{est:?}");
     }
 
     #[test]

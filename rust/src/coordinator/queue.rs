@@ -1,0 +1,208 @@
+//! FCFS waiting queue over shared action handles.
+//!
+//! The coordinator's hot path used to keep `Vec<Action>` queues: `remove(0)`
+//! shifted the whole tail on every admission, positional removal re-shifted
+//! it on every scheduler decision, and every submit/retry cloned a full
+//! `Action` (spec, cost vectors, elasticity model). [`ActionQueue`] replaces
+//! that with a `VecDeque<Rc<Action>>` — pops are O(1), queue entries are
+//! 8-byte handles — plus an id index so decisions for actions that already
+//! left the queue (topology raced) are rejected in O(1).
+
+use crate::action::{Action, ActionId, ActionKind};
+use std::collections::{HashSet, VecDeque};
+use std::rc::Rc;
+
+/// Index of an [`ActionKind`] into the per-kind unprofiled counters.
+fn kind_index(k: ActionKind) -> usize {
+    match k {
+        ActionKind::EnvExec => 0,
+        ActionKind::RewardCpu => 1,
+        ActionKind::RewardModel => 2,
+        ActionKind::ApiCall => 3,
+    }
+}
+
+/// FCFS queue of waiting actions, indexed by [`ActionId`].
+#[derive(Debug, Default)]
+pub struct ActionQueue {
+    items: VecDeque<Rc<Action>>,
+    ids: HashSet<ActionId>,
+    /// Queued actions per kind with no profiled duration. The scheduler
+    /// estimates these from the historical-average EWMA, so a pool holding
+    /// any must be re-dirtied when that kind's EWMA moves (the dirty-pool
+    /// contract's only cross-pool coupling).
+    unprofiled: [usize; 4],
+}
+
+impl ActionQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn contains(&self, id: ActionId) -> bool {
+        self.ids.contains(&id)
+    }
+
+    /// Queued actions of `kind` whose duration the scheduler can only
+    /// estimate from the historical-average EWMA.
+    pub fn has_unprofiled(&self, kind: ActionKind) -> bool {
+        self.unprofiled[kind_index(kind)] > 0
+    }
+
+    fn track(&mut self, action: &Action, delta: isize) {
+        if action.spec.profiled_dur.is_none() {
+            let slot = &mut self.unprofiled[kind_index(action.spec.kind)];
+            *slot = slot.checked_add_signed(delta).expect("unprofiled count underflow");
+        }
+    }
+
+    /// Enqueue at the tail (FCFS order = submit order).
+    pub fn push_back(&mut self, action: Rc<Action>) {
+        debug_assert!(!self.ids.contains(&action.id), "duplicate queue entry");
+        self.ids.insert(action.id);
+        self.track(&action, 1);
+        self.items.push_back(action);
+    }
+
+    /// The FCFS head, if any.
+    pub fn front(&self) -> Option<&Action> {
+        self.items.front().map(|a| a.as_ref())
+    }
+
+    /// Dequeue the FCFS head.
+    pub fn pop_front(&mut self) -> Option<Rc<Action>> {
+        let a = self.items.pop_front()?;
+        self.ids.remove(&a.id);
+        self.track(&a, -1);
+        Some(a)
+    }
+
+    /// Shared handle for a queued action (`None` if it already left the
+    /// queue — the id index makes the miss O(1)).
+    pub fn get(&self, id: ActionId) -> Option<&Rc<Action>> {
+        if !self.ids.contains(&id) {
+            return None;
+        }
+        self.items.iter().find(|a| a.id == id)
+    }
+
+    /// Remove a queued action by id (scheduler decisions apply out of FCFS
+    /// order within one drain).
+    pub fn remove(&mut self, id: ActionId) -> Option<Rc<Action>> {
+        if !self.ids.remove(&id) {
+            return None;
+        }
+        let idx = self
+            .items
+            .iter()
+            .position(|a| a.id == id)
+            .expect("queue id index out of sync");
+        let a = self.items.remove(idx)?;
+        self.track(&a, -1);
+        Some(a)
+    }
+
+    /// Borrowed FCFS view for the scheduler (`&[&Action]`).
+    pub fn refs(&self) -> Vec<&Action> {
+        self.items.iter().map(|a| a.as_ref()).collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Rc<Action>> {
+        self.items.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::action::{
+        ActionKind, ActionSpec, CostSpec, DimCost, ElasticityModel, ResourceClass,
+        ResourceRegistry, TaskId, TrajId,
+    };
+    use crate::sim::{SimDur, SimTime};
+
+    fn mk(id: u64) -> Rc<Action> {
+        let mut reg = ResourceRegistry::new();
+        let cpu = reg.register("cpu", ResourceClass::CpuCores, 8);
+        Rc::new(Action::new(
+            ActionId(id),
+            ActionSpec {
+                task: TaskId(0),
+                trajectory: TrajId(id),
+                kind: ActionKind::EnvExec,
+                cost: CostSpec::single(&reg, cpu, DimCost::Fixed(1)),
+                key_resource: Some(cpu),
+                elasticity: ElasticityModel::None,
+                profiled_dur: None,
+                service: None,
+                true_dur: SimDur::from_secs(1),
+            },
+            SimTime::ZERO,
+        ))
+    }
+
+    #[test]
+    fn fifo_order_and_id_index() {
+        let mut q = ActionQueue::new();
+        for i in 0..4 {
+            q.push_back(mk(i));
+        }
+        assert_eq!(q.len(), 4);
+        assert!(q.contains(ActionId(2)));
+        assert_eq!(q.front().unwrap().id, ActionId(0));
+        let refs = q.refs();
+        assert_eq!(refs.iter().map(|a| a.id.0).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        assert_eq!(q.pop_front().unwrap().id, ActionId(0));
+        assert!(!q.contains(ActionId(0)));
+    }
+
+    #[test]
+    fn remove_by_id_keeps_relative_order() {
+        let mut q = ActionQueue::new();
+        for i in 0..5 {
+            q.push_back(mk(i));
+        }
+        assert_eq!(q.remove(ActionId(2)).unwrap().id, ActionId(2));
+        assert!(q.remove(ActionId(2)).is_none(), "second removal is a miss");
+        assert!(q.get(ActionId(2)).is_none());
+        let order: Vec<u64> = q.iter().map(|a| a.id.0).collect();
+        assert_eq!(order, vec![0, 1, 3, 4]);
+        assert_eq!(q.get(ActionId(3)).unwrap().id, ActionId(3));
+    }
+
+    #[test]
+    fn unprofiled_counts_track_membership() {
+        // mk() builds unprofiled EnvExec actions — the counter must follow
+        // every push/pop/remove so the EWMA re-dirty coupling stays exact.
+        let mut q = ActionQueue::new();
+        assert!(!q.has_unprofiled(ActionKind::EnvExec));
+        for i in 0..3 {
+            q.push_back(mk(i));
+        }
+        assert!(q.has_unprofiled(ActionKind::EnvExec));
+        assert!(!q.has_unprofiled(ActionKind::ApiCall), "kind-precise tracking");
+        let _ = q.pop_front();
+        let _ = q.remove(ActionId(1));
+        assert!(q.has_unprofiled(ActionKind::EnvExec));
+        let _ = q.remove(ActionId(2));
+        assert!(!q.has_unprofiled(ActionKind::EnvExec), "drained queue has none");
+    }
+
+    #[test]
+    fn queue_holds_handles_not_clones() {
+        let mut q = ActionQueue::new();
+        let a = mk(7);
+        q.push_back(a.clone());
+        assert_eq!(Rc::strong_count(&a), 2);
+        let back = q.pop_front().unwrap();
+        assert!(Rc::ptr_eq(&a, &back), "queue must hand back the same allocation");
+    }
+}

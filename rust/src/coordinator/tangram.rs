@@ -6,8 +6,18 @@
 //! cluster-wide GPU queue; API actions go to per-endpoint queues under
 //! Basic-manager admission. Every queue is FCFS and scheduled with the same
 //! elastic algorithm (§4.2).
+//!
+//! Scheduling is **dirty-pool incremental** (see the contract on
+//! [`Backend`]): each pump re-runs the elastic scheduler only over pools
+//! whose state changed — a completion on one CPU node no longer rescans
+//! every node, the GPU cluster, and every API endpoint. Pools are drained
+//! in sorted [`PoolId`] order so same-timestamp decisions (and therefore
+//! recorded scenario traces) stay byte-deterministic across processes.
+//! `TangramCfg::full_sweep` restores the legacy scan-everything behaviour
+//! for differential testing and the scheduler-invocation benchmarks.
 
 use super::backend::{Backend, Started, Verdict};
+use super::queue::ActionQueue;
 use crate::action::{Action, ActionId, ResourceKindId, TrajId};
 use crate::cluster::api::{ApiEndpoint, ApiOutcome};
 use crate::cluster::cpu::{CpuLatency, NodeId};
@@ -17,7 +27,8 @@ use crate::rollout::workloads::Catalog;
 use crate::scenario::ScenarioEvent;
 use crate::scheduler::{ElasticScheduler, ResourceState, SchedulerConfig};
 use crate::sim::{SimDur, SimTime};
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeSet, HashMap, HashSet};
+use std::rc::Rc;
 
 /// Cluster-scale knobs for the Tangram deployment.
 #[derive(Debug, Clone)]
@@ -31,6 +42,9 @@ pub struct TangramCfg {
     pub cpu_latency: CpuLatency,
     pub restore: RestoreModel,
     pub max_api_retries: u32,
+    /// Debug/bench escape hatch: schedule every pool on every pump (the
+    /// pre-dirty-pool behaviour) instead of only dirty pools.
+    pub full_sweep: bool,
 }
 
 impl Default for TangramCfg {
@@ -45,18 +59,23 @@ impl Default for TangramCfg {
             cpu_latency: CpuLatency::default(),
             restore: RestoreModel::default(),
             max_api_retries: 3,
+            full_sweep: false,
         }
     }
 }
 
-enum Pool {
+/// One schedulable resource pool. The derived ordering (CPU nodes by id,
+/// then the GPU cluster, then API endpoints by kind) is the deterministic
+/// drain order — `BTreeSet<PoolId>` iteration visits dirty pools exactly
+/// the way the legacy full sweep visited all pools.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum PoolId {
     CpuNode(NodeId),
     Gpu,
     Api(ResourceKindId),
 }
 
 pub struct TangramBackend {
-    #[allow(dead_code)]
     cfg: TangramCfg,
     cpu_kind: ResourceKindId,
     gpu_kind: ResourceKindId,
@@ -64,18 +83,26 @@ pub struct TangramBackend {
     pub gpu: GpuManager,
     api_mgrs: HashMap<ResourceKindId, BasicManager>,
     endpoints: HashMap<ResourceKindId, ApiEndpoint>,
-    sched: ElasticScheduler,
-    cpu_queues: HashMap<NodeId, Vec<Action>>,
-    gpu_queue: Vec<Action>,
-    api_queues: HashMap<ResourceKindId, Vec<Action>>,
+    pub sched: ElasticScheduler,
+    cpu_queues: HashMap<NodeId, ActionQueue>,
+    gpu_queue: ActionQueue,
+    api_queues: HashMap<ResourceKindId, ActionQueue>,
+    /// pools whose state changed since the last drain (sorted iteration)
+    dirty: BTreeSet<PoolId>,
     /// trajectories that have already run their first CPU action (container
     /// creation charged once)
     containers_created: HashSet<TrajId>,
     /// outcome of the in-flight attempt per API action
     api_outcomes: HashMap<ActionId, ApiOutcome>,
+    /// exec duration of the in-flight attempt (feeds the §4.2 historical-
+    /// average estimator on successful completion)
+    inflight_exec: HashMap<ActionId, SimDur>,
     /// scheduling-decision count + cumulative wall time (hot-path metric)
     pub sched_invocations: u64,
     pub sched_wall: std::time::Duration,
+    /// drain_started call count + cumulative wall time
+    pub drain_calls: u64,
+    pub drain_wall: std::time::Duration,
 }
 
 impl TangramBackend {
@@ -100,9 +127,13 @@ impl TangramBackend {
             let limit = ((spec.max_concurrency as f64 * 0.9) as u64).max(1);
             api_mgrs.insert(*kind, BasicManager::concurrency(&spec.name, limit));
             endpoints.insert(*kind, ApiEndpoint::new(spec.clone(), 0x5eed + i as u64));
-            api_queues.insert(*kind, Vec::new());
+            api_queues.insert(*kind, ActionQueue::new());
         }
-        let cpu_queues = cpu.node_ids().into_iter().map(|n| (n, Vec::new())).collect();
+        let cpu_queues = cpu
+            .node_ids()
+            .into_iter()
+            .map(|n| (n, ActionQueue::new()))
+            .collect();
         TangramBackend {
             sched: ElasticScheduler::new(cfg.sched.clone()),
             cfg,
@@ -113,24 +144,28 @@ impl TangramBackend {
             api_mgrs,
             endpoints,
             cpu_queues,
-            gpu_queue: Vec::new(),
+            gpu_queue: ActionQueue::new(),
             api_queues,
+            dirty: BTreeSet::new(),
             containers_created: HashSet::new(),
             api_outcomes: HashMap::new(),
+            inflight_exec: HashMap::new(),
             sched_invocations: 0,
             sched_wall: std::time::Duration::ZERO,
+            drain_calls: 0,
+            drain_wall: std::time::Duration::ZERO,
         }
     }
 
-    fn classify(&self, a: &Action) -> Pool {
+    fn classify(&self, a: &Action) -> PoolId {
         if a.spec.cost.dim(self.cpu_kind).min_units() > 0 {
             let node = self
                 .cpu
                 .binding(a.spec.trajectory)
                 .expect("CPU action for unbound trajectory");
-            Pool::CpuNode(node)
+            PoolId::CpuNode(node)
         } else if a.spec.cost.dim(self.gpu_kind).min_units() > 0 {
-            Pool::Gpu
+            PoolId::Gpu
         } else {
             let kind = a
                 .spec
@@ -139,24 +174,22 @@ impl TangramBackend {
                 .find(|(_, d)| d.min_units() > 0)
                 .map(|(k, _)| k)
                 .expect("action with empty cost");
-            Pool::Api(kind)
+            PoolId::Api(kind)
         }
     }
 
     /// Run the elastic scheduler over one queue and apply its decisions.
-    fn schedule_pool(&mut self, now: SimTime, pool: &Pool, out: &mut Vec<Started>) {
+    fn schedule_pool(&mut self, now: SimTime, pool: PoolId, out: &mut Vec<Started>) {
         match pool {
-            Pool::CpuNode(node) => {
-                let node = *node;
-                let queue = &self.cpu_queues[&node];
-                if queue.is_empty() {
+            PoolId::CpuNode(node) => {
+                if self.cpu_queues[&node].is_empty() {
                     return;
                 }
                 let mut decisions = {
                     let state = self.cpu.node_state(node);
                     let mut map: HashMap<ResourceKindId, &dyn ResourceState> = HashMap::new();
                     map.insert(self.cpu_kind, &state);
-                    let refs: Vec<&Action> = queue.iter().collect();
+                    let refs = self.cpu_queues[&node].refs();
                     let t0 = std::time::Instant::now();
                     let d = self.sched.schedule(now, &refs, &map);
                     self.sched_wall += t0.elapsed();
@@ -169,7 +202,7 @@ impl TangramBackend {
                 if decisions.is_empty()
                     && self.cpu.node_state(node).running_completions().is_empty()
                 {
-                    if let Some(head) = self.cpu_queues[&node].first() {
+                    if let Some(head) = self.cpu_queues[&node].front() {
                         let units = head.spec.cost.dim(self.cpu_kind).min_units();
                         let mut alloc = head.spec.cost.min_vector();
                         alloc.set(self.cpu_kind, units);
@@ -181,12 +214,10 @@ impl TangramBackend {
                     }
                 }
                 for dec in decisions {
-                    let q = self.cpu_queues.get_mut(&node).unwrap();
-                    let idx = match q.iter().position(|a| a.id == dec.action) {
-                        Some(i) => i,
+                    let a = match self.cpu_queues[&node].get(dec.action) {
+                        Some(rc) => rc.clone(),
                         None => continue,
                     };
-                    let a = q[idx].clone();
                     let first = self.containers_created.insert(a.spec.trajectory);
                     let exec = a.spec.exec_dur(dec.units);
                     // overhead known only after allocate; estimate for the
@@ -200,7 +231,8 @@ impl TangramBackend {
                         est_done,
                     ) {
                         Ok(lease) => {
-                            self.cpu_queues.get_mut(&node).unwrap().remove(idx);
+                            let _ = self.cpu_queues.get_mut(&node).unwrap().remove(a.id);
+                            self.inflight_exec.insert(a.id, exec);
                             out.push(Started {
                                 action: a.id,
                                 overhead: lease.overhead,
@@ -209,7 +241,11 @@ impl TangramBackend {
                             });
                         }
                         Err(_) => {
-                            // topology raced; undo the first-action marker
+                            // topology raced (or the pool was cordoned under
+                            // us); the action stays queued — the stall
+                            // re-arm in drain_started and the cordon-restore
+                            // injection keep the pool scheduled. Undo the
+                            // first-action marker.
                             if first {
                                 self.containers_created.remove(&a.spec.trajectory);
                             }
@@ -217,14 +253,14 @@ impl TangramBackend {
                     }
                 }
             }
-            Pool::Gpu => {
+            PoolId::Gpu => {
                 if self.gpu_queue.is_empty() {
                     return;
                 }
                 let mut decisions = {
                     let mut map: HashMap<ResourceKindId, &dyn ResourceState> = HashMap::new();
                     map.insert(self.gpu_kind, &self.gpu);
-                    let refs: Vec<&Action> = self.gpu_queue.iter().collect();
+                    let refs = self.gpu_queue.refs();
                     let t0 = std::time::Instant::now();
                     let d = self.sched.schedule(now, &refs, &map);
                     self.sched_wall += t0.elapsed();
@@ -234,7 +270,7 @@ impl TangramBackend {
                 // Liveness guard (see CPU pool): an idle cluster must not
                 // "wait" — force the head at its minimum legal DoP.
                 if decisions.is_empty() && self.gpu.running_completions().is_empty() {
-                    if let Some(head) = self.gpu_queue.first() {
+                    if let Some(head) = self.gpu_queue.front() {
                         let units = head.spec.cost.dim(self.gpu_kind).min_units();
                         let mut alloc = head.spec.cost.min_vector();
                         alloc.set(self.gpu_kind, units);
@@ -246,16 +282,16 @@ impl TangramBackend {
                     }
                 }
                 for dec in decisions {
-                    let idx = match self.gpu_queue.iter().position(|a| a.id == dec.action) {
-                        Some(i) => i,
+                    let a = match self.gpu_queue.get(dec.action) {
+                        Some(rc) => rc.clone(),
                         None => continue,
                     };
-                    let a = self.gpu_queue[idx].clone();
                     let service = a.spec.service.expect("GPU action without service");
                     let exec = a.spec.exec_dur(dec.units);
                     match self.gpu.allocate(a.id, service, dec.units as u8, now + exec) {
                         Ok(lease) => {
-                            self.gpu_queue.remove(idx);
+                            let _ = self.gpu_queue.remove(a.id);
+                            self.inflight_exec.insert(a.id, exec);
                             out.push(Started {
                                 action: a.id,
                                 overhead: lease.overhead,
@@ -267,8 +303,7 @@ impl TangramBackend {
                     }
                 }
             }
-            Pool::Api(kind) => {
-                let kind = *kind;
+            PoolId::Api(kind) => {
                 loop {
                     let mgr = self.api_mgrs.get_mut(&kind).unwrap();
                     mgr.tick(now);
@@ -282,7 +317,7 @@ impl TangramBackend {
                     if mgr.available_units() == 0 || ep.quota_left(now) == 0 {
                         break;
                     }
-                    let a = q.remove(0);
+                    let a = q.pop_front().expect("non-empty queue has a head");
                     let (outcome, dur) = ep.issue(now);
                     debug_assert_ne!(
                         outcome,
@@ -291,25 +326,28 @@ impl TangramBackend {
                     );
                     mgr.allocate(a.id, 1, now + dur).expect("admission raced");
                     self.api_outcomes.insert(a.id, outcome);
+                    self.inflight_exec.insert(a.id, dur);
                     out.push(Started { action: a.id, overhead: SimDur::ZERO, exec: dur, units: 1 });
                 }
             }
         }
     }
 
-    /// Every pool in *sorted* order. HashMap iteration order varies across
-    /// processes (RandomState), and the pool order decides the ordering of
-    /// same-timestamp `Started` events — sorting is what makes recorded
-    /// traces replay byte-identically in a fresh process.
-    fn all_pools(&self) -> Vec<Pool> {
+    /// Every pool in *sorted* order (the legacy full sweep; see [`PoolId`]).
+    fn all_pools(&self) -> Vec<PoolId> {
         let mut nodes: Vec<NodeId> = self.cpu_queues.keys().copied().collect();
         nodes.sort();
-        let mut pools: Vec<Pool> = nodes.into_iter().map(Pool::CpuNode).collect();
-        pools.push(Pool::Gpu);
+        let mut pools: Vec<PoolId> = nodes.into_iter().map(PoolId::CpuNode).collect();
+        pools.push(PoolId::Gpu);
         let mut kinds: Vec<ResourceKindId> = self.api_queues.keys().copied().collect();
         kinds.sort();
-        pools.extend(kinds.into_iter().map(Pool::Api));
+        pools.extend(kinds.into_iter().map(PoolId::Api));
         pools
+    }
+
+    /// Schedulable pools in this deployment (CPU nodes + GPU + endpoints).
+    pub fn pool_count(&self) -> usize {
+        self.cpu_queues.len() + 1 + self.api_queues.len()
     }
 
     /// Mean scheduler decision latency (wall-clock, for §Perf).
@@ -318,6 +356,14 @@ impl TangramBackend {
             return std::time::Duration::ZERO;
         }
         self.sched_wall / self.sched_invocations as u32
+    }
+
+    /// Mean `drain_started` wall time (the whole pump hot path).
+    pub fn mean_drain_latency(&self) -> std::time::Duration {
+        if self.drain_calls == 0 {
+            return std::time::Duration::ZERO;
+        }
+        self.drain_wall / self.drain_calls as u32
     }
 }
 
@@ -340,31 +386,39 @@ impl Backend for TangramBackend {
     }
 
     fn traj_end(&mut self, _now: SimTime, traj: TrajId) {
-        if self.cpu.binding(traj).is_some() {
+        if let Some(node) = self.cpu.binding(traj) {
             let _ = self.cpu.release_trajectory(traj);
             self.containers_created.remove(&traj);
+            // container teardown returns memory and any still-assigned
+            // cgroup cores to the node — capacity moved, so the pool must
+            // be rescheduled on the pump that follows
+            self.dirty.insert(PoolId::CpuNode(node));
         }
     }
 
-    fn submit(&mut self, _now: SimTime, action: &Action) {
-        match self.classify(action) {
-            Pool::CpuNode(n) => self.cpu_queues.get_mut(&n).unwrap().push(action.clone()),
-            Pool::Gpu => self.gpu_queue.push(action.clone()),
-            Pool::Api(k) => self.api_queues.get_mut(&k).unwrap().push(action.clone()),
+    fn submit(&mut self, _now: SimTime, action: &Rc<Action>) {
+        let pool = self.classify(action);
+        match pool {
+            PoolId::CpuNode(n) => self.cpu_queues.get_mut(&n).unwrap().push_back(action.clone()),
+            PoolId::Gpu => self.gpu_queue.push_back(action.clone()),
+            PoolId::Api(k) => self.api_queues.get_mut(&k).unwrap().push_back(action.clone()),
         }
+        self.dirty.insert(pool);
     }
 
     fn on_complete(&mut self, now: SimTime, action: &Action) -> Verdict {
-        match self.classify(action) {
-            Pool::CpuNode(_) => {
+        let pool = self.classify(action);
+        let exec = self.inflight_exec.remove(&action.id);
+        let verdict = match pool {
+            PoolId::CpuNode(_) => {
                 self.cpu.complete(action.id).expect("cpu complete");
                 Verdict::Done
             }
-            Pool::Gpu => {
+            PoolId::Gpu => {
                 self.gpu.complete(action.id, now).expect("gpu complete");
                 Verdict::Done
             }
-            Pool::Api(k) => {
+            PoolId::Api(k) => {
                 let outcome = self
                     .api_outcomes
                     .remove(&action.id)
@@ -374,7 +428,6 @@ impl Backend for TangramBackend {
                 self.endpoints.get_mut(&k).unwrap().finish(outcome);
                 match outcome {
                     ApiOutcome::Ok => Verdict::Done,
-                    _ if action.spec.true_dur == SimDur::ZERO => Verdict::Failed, // unused guard
                     _ => {
                         // transient failure — retry under admission control
                         // (driver enforces the retry budget)
@@ -382,15 +435,88 @@ impl Backend for TangramBackend {
                     }
                 }
             }
+        };
+        // §4.2 historical-average estimator: successful attempts feed the
+        // per-kind EWMA the scheduler uses for unprofiled actions. The
+        // observation moves the estimate for every queued unprofiled action
+        // of this kind — the one cross-pool coupling in the dirty contract —
+        // so any pool holding one must be re-evaluated, exactly as the
+        // legacy full sweep would have.
+        if verdict == Verdict::Done {
+            if let Some(exec) = exec {
+                let kind = action.spec.kind;
+                self.sched.stats.observe(kind, exec);
+                for (&node, q) in self.cpu_queues.iter() {
+                    if q.has_unprofiled(kind) {
+                        self.dirty.insert(PoolId::CpuNode(node));
+                    }
+                }
+                if self.gpu_queue.has_unprofiled(kind) {
+                    self.dirty.insert(PoolId::Gpu);
+                }
+            }
         }
+        // capacity freed (or the retry will resubmit) — the pool must be
+        // rescheduled on this pump
+        self.dirty.insert(pool);
+        verdict
     }
 
     fn drain_started(&mut self, now: SimTime) -> Vec<Started> {
+        let t0 = std::time::Instant::now();
         let mut out = Vec::new();
-        for pool in self.all_pools() {
-            self.schedule_pool(now, &pool, &mut out);
+        let pools: Vec<PoolId> = if self.cfg.full_sweep {
+            self.all_pools()
+        } else {
+            // BTreeSet iteration = sorted PoolId order (determinism)
+            std::mem::take(&mut self.dirty).into_iter().collect()
+        };
+        for pool in pools {
+            let before = out.len();
+            self.schedule_pool(now, pool, &mut out);
+            if self.cfg.full_sweep {
+                continue;
+            }
+            if out.len() > before {
+                // Started something — the pool's own state changed, so it
+                // is dirty again by definition. Re-arming keeps parity with
+                // the legacy sweep: the eviction estimate may have planned
+                // an immediate follow-on start on the leftover budget, which
+                // the sweep realized at the driver's next same-instant pump.
+                self.dirty.insert(pool);
+                continue;
+            }
+            // Stall re-arm: a pool with waiting work, nothing running that
+            // will free capacity, and nothing started (e.g. the liveness
+            // guard's forced head lost its cores to a cordon) has no future
+            // event of its own to dirty it — keep it dirty so every pump
+            // retries until capacity returns (cordon restore, traj teardown).
+            let stalled = match pool {
+                PoolId::CpuNode(n) => {
+                    !self.cpu_queues[&n].is_empty()
+                        && self.cpu.node_state(n).running_completions().is_empty()
+                }
+                PoolId::Gpu => {
+                    !self.gpu_queue.is_empty() && self.gpu.running_completions().is_empty()
+                }
+                // API admission is covered by completions and the quota-
+                // window wakeup contract — never stalled silently
+                PoolId::Api(_) => false,
+            };
+            if stalled {
+                self.dirty.insert(pool);
+            }
         }
+        self.drain_calls += 1;
+        self.drain_wall += t0.elapsed();
         out
+    }
+
+    fn has_dirty(&self) -> bool {
+        if self.cfg.full_sweep {
+            return true;
+        }
+        !self.dirty.is_empty()
     }
 
     fn next_wakeup(&self, now: SimTime) -> Option<SimTime> {
@@ -413,6 +539,13 @@ impl Backend for TangramBackend {
     fn tick(&mut self, now: SimTime) {
         for mgr in self.api_mgrs.values_mut() {
             mgr.tick(now);
+        }
+        // a tick can roll quota windows open — any endpoint with waiting
+        // work must be rescheduled on the pump that follows
+        for (kind, q) in &self.api_queues {
+            if !q.is_empty() {
+                self.dirty.insert(PoolId::Api(*kind));
+            }
         }
     }
 
@@ -441,15 +574,24 @@ impl Backend for TangramBackend {
                         mgr.limit =
                             ((ep.spec.max_concurrency as f64 * 0.9) as u64).max(1);
                     }
+                    self.dirty.insert(PoolId::Api(*kind));
                 }
                 !self.endpoints.is_empty()
             }
             ScenarioEvent::GpuCacheFlush => {
                 self.gpu.flush_caches();
+                self.dirty.insert(PoolId::Gpu);
                 true
             }
             ScenarioEvent::CpuPoolScale { factor } => {
                 self.cpu.set_pool_scale(*factor);
+                // every node's schedulable capacity moved — re-dirty them
+                // all so a cordon *restore* immediately revives queues whose
+                // forced-head allocations were failing (queue-stall bugfix)
+                let nodes: Vec<NodeId> = self.cpu_queues.keys().copied().collect();
+                for n in nodes {
+                    self.dirty.insert(PoolId::CpuNode(n));
+                }
                 true
             }
         }

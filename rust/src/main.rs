@@ -25,7 +25,7 @@ use arl_tangram::rollout::workloads::{Catalog, Workload, WorkloadKind};
 use arl_tangram::runtime::{PjrtEngine, RewardModel};
 use arl_tangram::scenario::{
     build_backend, builtin_packs, pack_by_name, read_trace_file, replay_trace, run_scenario,
-    summary_json, write_trace_file, ScenarioSpec,
+    run_scenario_tangram, summary_json, write_trace_file, ScenarioSpec,
 };
 use arl_tangram::util::cli::Args;
 use arl_tangram::util::logging;
@@ -152,6 +152,7 @@ fn cmd_scenario(argv: Vec<String>) -> i32 {
         .opt("record", "", "write the decision trace + summary to this JSONL file")
         .opt("replay", "", "re-run a recorded trace file and diff (exit 1 on divergence)")
         .flag("list", "list built-in scenario packs")
+        .flag("full-sweep", "tangram only: schedule every pool on every pump (legacy A/B baseline)")
         .parse_from(argv)
     {
         Ok(a) => a,
@@ -252,12 +253,35 @@ fn cmd_scenario(argv: Vec<String>) -> i32 {
                 return 2;
             }
         };
+        let full_sweep = args.bool("full-sweep");
+        if full_sweep && backend != BackendKind::Tangram {
+            eprintln!("--full-sweep only applies to the tangram backend");
+            return 2;
+        }
+        if full_sweep && !args.str("record").is_empty() {
+            // a recorded trace replays through the default (dirty-pool)
+            // scheduler; pinning a sweep-mode recording would report
+            // spurious divergences
+            eprintln!("--full-sweep is an A/B debug mode and cannot be combined with --record");
+            return 2;
+        }
         let t = std::time::Instant::now();
-        let outcome = match run_scenario(&spec, backend) {
-            Ok(o) => o,
-            Err(e) => {
-                eprintln!("scenario error: {e}");
-                return 2;
+        // the tangram path also surfaces the scheduler hot-path counters
+        let (outcome, sched) = if backend == BackendKind::Tangram {
+            match run_scenario_tangram(&spec, full_sweep) {
+                Ok((o, s)) => (o, Some(s)),
+                Err(e) => {
+                    eprintln!("scenario error: {e}");
+                    return 2;
+                }
+            }
+        } else {
+            match run_scenario(&spec, backend) {
+                Ok(o) => (o, None),
+                Err(e) => {
+                    eprintln!("scenario error: {e}");
+                    return 2;
+                }
             }
         };
         println!(
@@ -268,6 +292,17 @@ fn cmd_scenario(argv: Vec<String>) -> i32 {
             t.elapsed().as_secs_f64()
         );
         println!("summary: {}", summary_json(&outcome.metrics));
+        if let Some(s) = sched {
+            println!(
+                "scheduler: {} invocations over {} drains across {} pools ({}ns mean decision, {}ns mean drain{})",
+                s.invocations,
+                s.drain_calls,
+                s.pools,
+                s.mean_sched_ns,
+                s.mean_drain_ns,
+                if full_sweep { ", full sweep" } else { "" }
+            );
+        }
         if !args.str("record").is_empty() {
             let path = args.str("record");
             if let Err(e) = write_trace_file(&path, &spec, backend, &outcome) {

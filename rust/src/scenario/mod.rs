@@ -32,8 +32,8 @@ pub mod trace;
 pub use packs::{builtin_packs, pack_by_name};
 pub use replay::{
     build_backend, diff_summaries, diff_traces, parse_trace_file, read_trace_file, replay_trace,
-    run_scenario, summary_json, trace_file_contents, write_trace_file, RecordedTrace,
-    ReplayReport, ScenarioOutcome,
+    run_scenario, run_scenario_tangram, summary_json, trace_file_contents, write_trace_file,
+    RecordedTrace, ReplayReport, ScenarioOutcome, SchedStats,
 };
 pub use trace::{TraceEvent, TraceKind, TraceRecorder};
 

@@ -42,6 +42,13 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
     h
 }
 
+/// The Tangram deployment for a catalog scale — shared by [`build_backend`]
+/// and [`run_scenario_tangram`] so record/replay and the differential test
+/// paths always deploy identically.
+fn tangram_cfg_for(catalog: &CatalogCfg) -> crate::coordinator::TangramCfg {
+    ExperimentCfg { catalog: catalog.clone(), ..ExperimentCfg::default() }.tangram_cfg()
+}
+
 /// Deploy the backend composition for a catalog scale — the single
 /// BackendKind→deployment matrix shared by `arl-tangram run` and the
 /// scenario engine (so both commands always deploy identically).
@@ -53,7 +60,7 @@ pub fn build_backend(
     // reuse the launcher's catalog→deployment scaling rules
     let exp = ExperimentCfg { catalog: catalog.clone(), ..ExperimentCfg::default() };
     match backend {
-        BackendKind::Tangram => Box::new(TangramBackend::new(cat, exp.tangram_cfg())),
+        BackendKind::Tangram => Box::new(TangramBackend::new(cat, tangram_cfg_for(catalog))),
         BackendKind::K8s => Box::new(BaselineBackend::coding(cat, exp.k8s_cfg())),
         BackendKind::StaticGpu => Box::new(BaselineBackend::mopd_search(cat)),
         BackendKind::Serverless => Box::new(BaselineBackend::serverless(
@@ -81,6 +88,53 @@ pub fn run_scenario(spec: &ScenarioSpec, backend: BackendKind) -> Result<Scenari
     let cfg = spec.run_cfg();
     let metrics = run_traced(be.as_mut(), &cat, &wls, &cfg, &spec.events, Some(&mut rec));
     Ok(ScenarioOutcome { metrics, events: rec.events })
+}
+
+/// Scheduler hot-path counters of one Tangram scenario run (the dirty-pool
+/// benchmark surface; see `BENCH_sched.json`).
+#[derive(Debug, Clone)]
+pub struct SchedStats {
+    /// Elastic-scheduler invocations (Algorithm 1 runs over one pool).
+    pub invocations: u64,
+    /// `drain_started` calls the driver issued.
+    pub drain_calls: u64,
+    /// Mean wall-clock per scheduler invocation (ns).
+    pub mean_sched_ns: u64,
+    /// Mean wall-clock per `drain_started` (ns).
+    pub mean_drain_ns: u64,
+    /// Schedulable pools in the deployment (CPU nodes + GPU + endpoints).
+    pub pools: usize,
+}
+
+/// [`run_scenario`] specialized to the Tangram backend, returning the
+/// scheduler hot-path counters alongside the outcome. `full_sweep` restores
+/// the legacy schedule-every-pool-per-pump behaviour — the differential
+/// baseline for the dirty-pool refactor.
+pub fn run_scenario_tangram(
+    spec: &ScenarioSpec,
+    full_sweep: bool,
+) -> Result<(ScenarioOutcome, SchedStats)> {
+    spec.validate()?;
+    let wls = spec.workloads_for(BackendKind::Tangram);
+    if wls.is_empty() {
+        bail!("scenario '{}' has no workloads the tangram backend supports", spec.name);
+    }
+    let cat = Catalog::build(&spec.catalog);
+    // same catalog→deployment scaling as build_backend, plus the sweep knob
+    let mut tcfg = tangram_cfg_for(&spec.catalog);
+    tcfg.full_sweep = full_sweep;
+    let mut be = TangramBackend::new(&cat, tcfg);
+    let mut rec = TraceRecorder::new();
+    let cfg = spec.run_cfg();
+    let metrics = run_traced(&mut be, &cat, &wls, &cfg, &spec.events, Some(&mut rec));
+    let stats = SchedStats {
+        invocations: be.sched_invocations,
+        drain_calls: be.drain_calls,
+        mean_sched_ns: be.mean_sched_latency().as_nanos() as u64,
+        mean_drain_ns: be.mean_drain_latency().as_nanos() as u64,
+        pools: be.pool_count(),
+    };
+    Ok((ScenarioOutcome { metrics, events: rec.events }, stats))
 }
 
 /// Deterministic metrics summary: headline aggregates plus an FNV digest

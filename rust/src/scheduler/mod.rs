@@ -361,18 +361,23 @@ impl ElasticScheduler {
     }
 }
 
-/// Pick up to `n` values spread across a sorted choice set, always
-/// including the extremes (the depth-bounded exploration of Algorithm 2).
+/// Pick roughly `n` values spread across a sorted choice set, always
+/// including both extremes (the depth-bounded exploration of Algorithm 2).
+/// The extremes are non-negotiable — "wait for the wide allocation" must
+/// stay a visible option — so a budget of `n == 1` still yields both ends
+/// (the old code returned only `choices[0]`, blinding depth-1 configs to
+/// wide allocations).
 fn spread(choices: &[u64], n: usize) -> Vec<u64> {
     if choices.is_empty() || n == 0 {
         return vec![1];
     }
+    let n = n.max(2);
     if choices.len() <= n {
         return choices.to_vec();
     }
     let mut out = Vec::with_capacity(n);
     for i in 0..n {
-        let idx = i * (choices.len() - 1) / (n.max(2) - 1);
+        let idx = i * (choices.len() - 1) / (n - 1);
         out.push(choices[idx]);
     }
     out.dedup();
@@ -604,6 +609,49 @@ mod tests {
         // first two fit; 3rd does not (12 > 8)
         let ids: Vec<u64> = d.iter().map(|x| x.action.0).collect();
         assert_eq!(ids, vec![0, 1]);
+    }
+
+    #[test]
+    fn spread_always_includes_the_extremes() {
+        let choices: Vec<u64> = vec![1, 2, 4, 8, 16];
+        // n == 1 (depth-1 config): both extremes must survive — the wide-
+        // allocation option is the whole point of the exploration
+        assert_eq!(spread(&choices, 1), vec![1, 16]);
+        assert_eq!(spread(&choices, 2), vec![1, 16]);
+        // interior budgets keep the extremes and spread the middle
+        let s = spread(&choices, 3);
+        assert_eq!(s.first(), Some(&1));
+        assert_eq!(s.last(), Some(&16));
+        assert!(s.len() <= 3);
+        // n ≥ len: the whole choice set verbatim
+        assert_eq!(spread(&choices, 5), choices);
+        assert_eq!(spread(&choices, 50), choices);
+        // degenerate inputs
+        assert_eq!(spread(&[], 3), vec![1]);
+        assert_eq!(spread(&choices, 0), vec![1]);
+        assert_eq!(spread(&[4], 1), vec![4]);
+        assert_eq!(spread(&[2, 9], 1), vec![2, 9]);
+    }
+
+    #[test]
+    fn unprofiled_estimate_converges_to_observed_history() {
+        // Satellite bugfix: the historical-average estimator must converge
+        // to what `observe` feeds it, so unprofiled actions stop falling
+        // back to `default_dur` once completions flow in.
+        let mut s = DurationStats::default();
+        let fallback = SimDur::from_millis(500);
+        assert_eq!(s.estimate(ActionKind::EnvExec, fallback), fallback);
+        for _ in 0..50 {
+            s.observe(ActionKind::EnvExec, SimDur::from_secs(4));
+        }
+        let est = s.estimate(ActionKind::EnvExec, fallback).secs_f64();
+        assert!((est - 4.0).abs() < 1e-9, "{est}");
+        // EWMA tracks drifting history toward the new regime
+        for _ in 0..200 {
+            s.observe(ActionKind::EnvExec, SimDur::from_secs(1));
+        }
+        let est = s.estimate(ActionKind::EnvExec, fallback).secs_f64();
+        assert!((est - 1.0).abs() < 0.05, "{est}");
     }
 
     #[test]

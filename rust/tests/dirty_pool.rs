@@ -1,0 +1,164 @@
+//! Differential verification of dirty-pool incremental scheduling.
+//!
+//! The coordinator schedules only pools whose state changed since the last
+//! pump (`TangramCfg::full_sweep = false`, the default). These tests run
+//! every built-in scenario pack under both modes and assert the dirty set
+//! (1) completes identical work and (2) does it with strictly fewer
+//! elastic-scheduler invocations — the paper's sub-ms decision budget is
+//! won by not rescanning `O(pools)` queues per event.
+//!
+//! Also hosts the queue-stall-under-cordon regression (bugfix satellite):
+//! a `cpu_pool_scale` cordon that shrinks a node below the queue head's
+//! minimum used to swallow the forced-head allocation error with no wakeup
+//! to retry it; the cordon-restore injection now re-dirties every CPU pool.
+
+use arl_tangram::action::TaskId;
+use arl_tangram::config::BackendKind;
+use arl_tangram::coordinator::{run_traced, RunCfg, TangramBackend, TangramCfg};
+use arl_tangram::rollout::workloads::{Catalog, CatalogCfg, Workload, WorkloadKind};
+use arl_tangram::scenario::{builtin_packs, run_scenario_tangram, ScenarioEvent, TimedEvent};
+use arl_tangram::sim::{SimDur, SimTime};
+
+#[test]
+fn dirty_pool_matches_full_sweep_at_fewer_invocations() {
+    for spec in builtin_packs() {
+        if spec.workloads_for(BackendKind::Tangram).is_empty() {
+            continue;
+        }
+        let (dirty, sd) = run_scenario_tangram(&spec, false).unwrap();
+        let (sweep, ss) = run_scenario_tangram(&spec, true).unwrap();
+
+        // identical work completed…
+        assert_eq!(
+            dirty.metrics.trajectories.len(),
+            sweep.metrics.trajectories.len(),
+            "'{}': trajectory counts diverged",
+            spec.name
+        );
+        assert_eq!(
+            dirty.metrics.actions.len(),
+            sweep.metrics.actions.len(),
+            "'{}': action counts diverged",
+            spec.name
+        );
+        assert_eq!(
+            dirty.metrics.failed_actions(),
+            sweep.metrics.failed_actions(),
+            "'{}': failure counts diverged",
+            spec.name
+        );
+        assert_eq!(
+            dirty.metrics.total_retries(),
+            sweep.metrics.total_retries(),
+            "'{}': retry counts diverged",
+            spec.name
+        );
+
+        // …at no more scheduler invocations; packs exercising the CPU/GPU
+        // elastic pools (coding / mopd mixes) must be *strictly* cheaper.
+        assert!(
+            sd.invocations <= ss.invocations,
+            "'{}': dirty {} > sweep {}",
+            spec.name,
+            sd.invocations,
+            ss.invocations
+        );
+        let has_elastic_pools = spec
+            .workloads
+            .iter()
+            .any(|&w| matches!(w, WorkloadKind::Coding | WorkloadKind::Mopd));
+        if has_elastic_pools {
+            assert!(
+                sd.invocations < ss.invocations,
+                "'{}': dirty-pool scheduling saved nothing ({} vs {})",
+                spec.name,
+                sd.invocations,
+                ss.invocations
+            );
+        }
+    }
+}
+
+#[test]
+fn dirty_pool_and_sweep_agree_per_action() {
+    // Stronger differential on the fault-free pack: the per-action records
+    // (allocation, timing, retries) must match decision-for-decision.
+    let spec = builtin_packs().into_iter().find(|s| s.name == "steady-mix").unwrap();
+    let (dirty, _) = run_scenario_tangram(&spec, false).unwrap();
+    let (sweep, _) = run_scenario_tangram(&spec, true).unwrap();
+    assert_eq!(dirty.metrics.actions.len(), sweep.metrics.actions.len());
+    for (d, s) in dirty.metrics.actions.iter().zip(sweep.metrics.actions.iter()) {
+        assert_eq!(d.id, s.id, "record order diverged");
+        assert_eq!(d.units, s.units, "allocation diverged for {:?}", d.id);
+        assert_eq!(d.started, s.started, "start time diverged for {:?}", d.id);
+        assert_eq!(d.finished, s.finished, "finish time diverged for {:?}", d.id);
+        assert_eq!(d.retries, s.retries, "retries diverged for {:?}", d.id);
+    }
+}
+
+fn at(secs: u64, event: ScenarioEvent) -> TimedEvent {
+    TimedEvent { at: SimTime(SimDur::from_secs(secs).0), event }
+}
+
+#[test]
+fn cordoned_node_recovers_on_restore() {
+    // Wide reward actions (fixed 8-core DoP) on a single 16-core node; a
+    // 0.1× cordon leaves 2 schedulable cores, so once every trajectory is
+    // blocked at its reward the node is idle with a queue it cannot start
+    // and NO event of its own will ever fire again. The only remaining
+    // event is the cordon restore — which must re-dirty the pool and let
+    // every trajectory finish (pre-fix: the allocation error was swallowed
+    // and the run ended with the queue still loaded).
+    let cat = Catalog::build(&CatalogCfg {
+        cpu_nodes: 1,
+        cores_per_node: 16,
+        gpu_nodes: 1,
+        n_teachers: 2,
+        ..CatalogCfg::default()
+    });
+    let mut be = TangramBackend::new(
+        &cat,
+        TangramCfg {
+            cpu_nodes: 1,
+            numa_per_node: 2,
+            cores_per_numa: 8,
+            node_mem_gb: 512,
+            gpu_nodes: 1,
+            ..TangramCfg::default()
+        },
+    );
+    let mut wl = Workload::new(TaskId(0), WorkloadKind::Coding);
+    wl.fixed_dop = Some(8); // every reward needs 8 cores — cordon starves it
+    let cfg = RunCfg { batch: 4, steps: 1, seed: 77, ..RunCfg::default() };
+    let events = vec![
+        at(30, ScenarioEvent::CpuPoolScale { factor: 0.1 }),
+        at(2_000, ScenarioEvent::CpuPoolScale { factor: 1.0 }),
+    ];
+    let m = run_traced(&mut be, &cat, &[wl], &cfg, &events, None);
+    assert_eq!(m.trajectories.len(), 4, "trajectories lost under cordon");
+    assert_eq!(m.failed_actions(), 0);
+    assert_eq!(be.cpu.free_cores(), 16, "cores leaked across the cordon");
+}
+
+#[test]
+fn deep_pool_squeeze_scenario_completes() {
+    // Scenario-level regression: the pool-squeeze pack at a 0.1× cordon
+    // (instead of its stock 0.5×) must still finish every trajectory after
+    // the restore event.
+    let mut spec = builtin_packs().into_iter().find(|s| s.name == "pool-squeeze").unwrap();
+    spec.name = "deep-squeeze".into();
+    spec.events = vec![
+        at(20, ScenarioEvent::CpuPoolScale { factor: 0.1 }),
+        at(150, ScenarioEvent::CpuPoolScale { factor: 1.0 }),
+    ];
+    let (outcome, _) = run_scenario_tangram(&spec, false).unwrap();
+    let expected = spec.workloads_for(BackendKind::Tangram).len()
+        * spec.batch
+        * spec.steps as usize;
+    assert_eq!(
+        outcome.metrics.trajectories.len(),
+        expected,
+        "trajectories lost under the deep squeeze"
+    );
+    assert_eq!(outcome.metrics.failed_actions(), 0);
+}

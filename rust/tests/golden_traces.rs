@@ -1,0 +1,112 @@
+//! Golden-trace regression suite: every built-in scenario pack × every
+//! supported backend must replay **byte-identical** against the trace files
+//! committed under `rust/testdata/golden/`.
+//!
+//! This is the cross-PR quality ratchet for scheduler changes: the
+//! conformance suite catches nondeterminism *within* one build, the golden
+//! files catch behavioural drift *between* builds. Workflow:
+//!
+//! * Missing golden files are recorded ("blessed") by this test and the
+//!   test passes — commit the generated files to pin current behaviour.
+//! * When a scheduling change is **intentional**, regenerate with
+//!   `ARL_GOLDEN_BLESS=1 cargo test --test golden_traces` and commit the
+//!   diff (reviewers see exactly which decisions moved). See ROADMAP.md
+//!   "Golden traces".
+
+use arl_tangram::config::BackendKind;
+use arl_tangram::scenario::{builtin_packs, run_scenario, trace_file_contents};
+use std::path::PathBuf;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("testdata").join("golden")
+}
+
+/// Both tests touch the golden directory; serialize them (tests in one
+/// binary run concurrently) so the parser never sees a half-written bless.
+static GOLDEN_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+#[test]
+fn every_pack_and_backend_replays_byte_identical_against_golden() {
+    let _guard = GOLDEN_LOCK.lock().unwrap();
+    let bless_all = std::env::var("ARL_GOLDEN_BLESS").map_or(false, |v| v == "1");
+    let dir = golden_dir();
+    std::fs::create_dir_all(&dir).expect("create golden dir");
+    let mut blessed: Vec<String> = Vec::new();
+    let mut checked = 0usize;
+    for spec in builtin_packs() {
+        for backend in BackendKind::ALL {
+            if spec.workloads_for(backend).is_empty() {
+                continue; // single-purpose baseline: unsupported mix subset
+            }
+            let path = dir.join(format!("{}__{}.jsonl", spec.name, backend.name()));
+            let outcome = run_scenario(&spec, backend).expect("scenario runs");
+            let fresh = trace_file_contents(&spec, backend, &outcome);
+            if bless_all || !path.exists() {
+                std::fs::write(&path, &fresh).expect("write golden trace");
+                blessed.push(path.display().to_string());
+                continue;
+            }
+            let recorded = std::fs::read_to_string(&path).expect("read golden trace");
+            if recorded != fresh {
+                let diverged = recorded
+                    .lines()
+                    .zip(fresh.lines())
+                    .enumerate()
+                    .find(|(_, (a, b))| a != b)
+                    .map(|(i, (a, b))| {
+                        format!("line {}:\n  golden: {a}\n  fresh:  {b}", i + 1)
+                    })
+                    .unwrap_or_else(|| {
+                        format!(
+                            "line counts differ: golden {} vs fresh {}",
+                            recorded.lines().count(),
+                            fresh.lines().count()
+                        )
+                    });
+                panic!(
+                    "golden trace diverged: {}\n{diverged}\n\
+                     If this scheduling change is INTENTIONAL, regenerate with\n  \
+                     ARL_GOLDEN_BLESS=1 cargo test --test golden_traces\n\
+                     and commit the updated rust/testdata/golden/ files (ROADMAP.md \"Golden traces\").",
+                    path.display(),
+                );
+            }
+            checked += 1;
+        }
+    }
+    if !blessed.is_empty() {
+        eprintln!(
+            "blessed {} golden trace(s) — commit rust/testdata/golden/ to pin them:\n  {}",
+            blessed.len(),
+            blessed.join("\n  ")
+        );
+    }
+    // acceptance floor from the conformance suite: 5 packs × ≥2 backends
+    assert!(
+        checked + blessed.len() >= 12,
+        "pack×backend golden coverage shrank: {} combos",
+        checked + blessed.len()
+    );
+}
+
+#[test]
+fn blessed_golden_files_parse_as_trace_files() {
+    // Whatever is committed (or just blessed) must round-trip through the
+    // trace-file parser — guards against hand-edited golden files.
+    use arl_tangram::scenario::parse_trace_file;
+    let _guard = GOLDEN_LOCK.lock().unwrap();
+    let dir = golden_dir();
+    let Ok(entries) = std::fs::read_dir(&dir) else {
+        return; // nothing blessed yet
+    };
+    for entry in entries {
+        let path = entry.expect("dir entry").path();
+        if path.extension().and_then(|e| e.to_str()) != Some("jsonl") {
+            continue;
+        }
+        let text = std::fs::read_to_string(&path).expect("read golden");
+        let parsed = parse_trace_file(&text)
+            .unwrap_or_else(|e| panic!("{} is not a valid trace file: {e}", path.display()));
+        assert!(!parsed.events.is_empty(), "{} has no events", path.display());
+    }
+}
