@@ -1,0 +1,527 @@
+//! Elastic pool autoscaler: size external pools to demand instead of peak.
+//!
+//! The paper's headline efficiency claim (§1, §6: up to 71.2% external-
+//! resource savings) comes from *elasticity* — growing and shrinking CPU
+//! nodes, serverless containers, and API quota lanes around rollout demand
+//! rather than provisioning for the burst. This subsystem turns that claim
+//! into a measurable quantity:
+//!
+//! * a [`ScalePolicy`] trait ([`policy`]) with two built-in policies —
+//!   queue-pressure (decaying-peak demand tracking with an any-queue burst
+//!   response) and EWMA arrival forecasting;
+//! * an [`Autoscaler`] wrapper that adds the policy-agnostic safety rails:
+//!   scale-**up** applies after a per-class **cold-start penalty** (CPU node
+//!   warm-up, serverless-container/quota-lane cold start) and is billed from
+//!   the decision instant (requisitioned capacity costs money while it
+//!   boots); scale-**down** is gated by hysteresis (`down_hold`) so
+//!   oscillating arrivals cannot flap the pool;
+//! * [`PoolClass`]/[`PoolPressure`] — the observation interface backends
+//!   expose (`Backend::scale_classes`) and the resize entry point consumes
+//!   (`Backend::resize`, which reuses the `cpu_pool_scale` /
+//!   `api_limit_scale` fault-injection machinery).
+//!
+//! # Determinism contract
+//!
+//! Autoscaler decisions are part of recorded scenario traces, so they must
+//! be byte-reproducible across processes: evaluations happen on a fixed
+//! virtual-time cadence (`interval`), factors are quantized to multiples of
+//! `quantum` (defaults to 1/8 — exactly representable in f64 *and* in the
+//! JSON round-trip), and every input is derived from deterministic backend
+//! state. Keep it that way: no wall-clock reads, no unordered iteration.
+
+pub mod policy;
+
+pub use policy::{EwmaForecast, QueuePressure, ScalePolicy};
+
+use crate::sim::{SimDur, SimTime};
+use crate::util::error::Result;
+use crate::util::json::Json;
+use crate::{bail, err};
+use std::collections::BTreeMap;
+
+/// An elastically-resizable class of external pool. The derived ordering is
+/// the deterministic evaluation order (backends return observations sorted
+/// by class).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum PoolClass {
+    /// CPU environment nodes (resized through the cordon machinery).
+    Cpu,
+    /// API quota lanes (resized through the provider-limit machinery).
+    Api,
+}
+
+impl PoolClass {
+    /// Stable pool name — matches the `Backend::provisioned` gauge names so
+    /// provision records form one series per pool.
+    pub fn name(self) -> &'static str {
+        match self {
+            PoolClass::Cpu => "cpu_cores",
+            PoolClass::Api => "api_lanes",
+        }
+    }
+}
+
+/// A live demand observation for one pool class (`Backend::scale_classes`).
+#[derive(Debug, Clone)]
+pub struct PoolPressure {
+    pub class: PoolClass,
+    /// Actions waiting in this class's queues.
+    pub queued: u64,
+    /// Minimum units the queued actions demand (so unit-denominated
+    /// policies never mix an action count into a resource-unit sum).
+    pub queued_units: u64,
+    /// Units currently allocated to running attempts.
+    pub in_use_units: u64,
+    /// Currently schedulable units (after prior resizes).
+    pub provisioned_units: u64,
+    /// Full static provision (scale factor 1.0).
+    pub baseline_units: u64,
+}
+
+/// Which built-in [`ScalePolicy`] to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// Decaying-peak queue-pressure tracking with an any-queue burst jump.
+    Queue,
+    /// EWMA arrival/demand forecast.
+    Ewma,
+}
+
+impl PolicyKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            PolicyKind::Queue => "queue",
+            PolicyKind::Ewma => "ewma",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<PolicyKind> {
+        Ok(match s {
+            "queue" => PolicyKind::Queue,
+            "ewma" => PolicyKind::Ewma,
+            other => bail!("unknown autoscale policy '{other}' (expected: queue | ewma)"),
+        })
+    }
+}
+
+/// Autoscaler knobs. Defaults are tuned so the cold-start-storm pack saves
+/// well over the acceptance bar at mean-ACT parity: scale-up is eager (any
+/// queued action jumps to full provision), scale-down is conservative
+/// (decaying-peak demand memory plus `down_hold` hysteresis).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutoscaleCfg {
+    pub policy: PolicyKind,
+    /// Evaluation cadence (virtual time).
+    pub interval: SimDur,
+    /// Floor on the scale factor (never deprovision below this).
+    pub min_factor: f64,
+    /// Capacity margin over tracked demand.
+    pub headroom: f64,
+    /// Queue depth at which the queue policy jumps straight to full
+    /// provision (burst response).
+    pub up_queue: u64,
+    /// Per-evaluation decay of the queue policy's demand peak (1.0 = never
+    /// forget; 0.95 at a 2s interval ≈ 27s half-life).
+    pub peak_decay: f64,
+    /// EWMA smoothing factor of the forecast policy.
+    pub ewma_alpha: f64,
+    /// Hysteresis: the policy must want less capacity for this long,
+    /// continuously, before a scale-down applies.
+    pub down_hold: SimDur,
+    /// Cold-start penalty of CPU node capacity (warm-up before scaled-up
+    /// cores become schedulable; billed from the decision).
+    pub cpu_warmup: SimDur,
+    /// Cold-start penalty of API quota lanes / serverless containers.
+    pub api_warmup: SimDur,
+    /// Scale-factor quantization step (multiples are exact in f64/JSON).
+    pub quantum: f64,
+}
+
+impl Default for AutoscaleCfg {
+    fn default() -> Self {
+        AutoscaleCfg {
+            policy: PolicyKind::Queue,
+            interval: SimDur::from_secs(2),
+            min_factor: 0.25,
+            headroom: 1.5,
+            up_queue: 1,
+            peak_decay: 0.95,
+            ewma_alpha: 0.3,
+            down_hold: SimDur::from_secs(10),
+            cpu_warmup: SimDur::from_secs(5),
+            api_warmup: SimDur::from_secs(2),
+            quantum: 0.125,
+        }
+    }
+}
+
+impl AutoscaleCfg {
+    pub fn validate(&self) -> Result<()> {
+        if self.interval.0 == 0 {
+            bail!("autoscale interval must be positive");
+        }
+        if !(0.05..=1.0).contains(&self.min_factor) {
+            bail!("autoscale min_factor {} out of [0.05, 1]", self.min_factor);
+        }
+        if self.headroom < 1.0 {
+            bail!("autoscale headroom {} must be >= 1", self.headroom);
+        }
+        if !(0.0..=1.0).contains(&self.peak_decay) {
+            bail!("autoscale peak_decay {} out of [0, 1]", self.peak_decay);
+        }
+        if !(0.0..=1.0).contains(&self.ewma_alpha) || self.ewma_alpha == 0.0 {
+            bail!("autoscale ewma_alpha {} out of (0, 1]", self.ewma_alpha);
+        }
+        if !(0.0..=0.5).contains(&self.quantum) || self.quantum == 0.0 {
+            bail!("autoscale quantum {} out of (0, 0.5]", self.quantum);
+        }
+        if self.up_queue == 0 {
+            bail!("autoscale up_queue must be >= 1");
+        }
+        Ok(())
+    }
+
+    pub fn warmup(&self, class: PoolClass) -> SimDur {
+        match class {
+            PoolClass::Cpu => self.cpu_warmup,
+            PoolClass::Api => self.api_warmup,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("policy", Json::str(self.policy.name())),
+            ("interval_secs", Json::num(self.interval.secs_f64())),
+            ("min_factor", Json::num(self.min_factor)),
+            ("headroom", Json::num(self.headroom)),
+            ("up_queue", Json::num(self.up_queue as f64)),
+            ("peak_decay", Json::num(self.peak_decay)),
+            ("ewma_alpha", Json::num(self.ewma_alpha)),
+            ("down_hold_secs", Json::num(self.down_hold.secs_f64())),
+            ("cpu_warmup_secs", Json::num(self.cpu_warmup.secs_f64())),
+            ("api_warmup_secs", Json::num(self.api_warmup.secs_f64())),
+            ("quantum", Json::num(self.quantum)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let obj = j.as_obj().ok_or_else(|| err!("'autoscale' must be an object"))?;
+        let mut cfg = AutoscaleCfg::default();
+        for (k, v) in obj {
+            let f = || v.as_f64().ok_or_else(|| err!("autoscale key '{k}' must be a number"));
+            let d = || {
+                let secs = f()?;
+                if secs < 0.0 {
+                    bail!("autoscale key '{k}' must be non-negative");
+                }
+                Ok::<SimDur, crate::util::error::Error>(SimDur::from_secs_f64(secs))
+            };
+            match k.as_str() {
+                "policy" => {
+                    cfg.policy = PolicyKind::parse(
+                        v.as_str().ok_or_else(|| err!("'policy' must be a string"))?,
+                    )?
+                }
+                "interval_secs" => cfg.interval = d()?,
+                "min_factor" => cfg.min_factor = f()?,
+                "headroom" => cfg.headroom = f()?,
+                "up_queue" => {
+                    cfg.up_queue =
+                        v.as_u64().ok_or_else(|| err!("'up_queue' must be an integer"))?
+                }
+                "peak_decay" => cfg.peak_decay = f()?,
+                "ewma_alpha" => cfg.ewma_alpha = f()?,
+                "down_hold_secs" => cfg.down_hold = d()?,
+                "cpu_warmup_secs" => cfg.cpu_warmup = d()?,
+                "api_warmup_secs" => cfg.api_warmup = d()?,
+                "quantum" => cfg.quantum = f()?,
+                other => bail!("unknown autoscale key '{other}'"),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// What the autoscaler wants done, in evaluation order.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScaleCmd {
+    /// Scale-up decided: capacity is billed from now (`est_units` is the
+    /// requisitioned provision) but only becomes schedulable once the
+    /// cold-start penalty elapses — the matching [`ScaleCmd::Apply`] fires
+    /// at the first evaluation past the warm-up.
+    Decide { class: PoolClass, factor: f64, est_units: u64 },
+    /// Resize the substrate now (`Backend::resize`).
+    Apply { class: PoolClass, factor: f64 },
+}
+
+#[derive(Debug)]
+struct ClassState {
+    /// Last factor applied in the substrate.
+    factor: f64,
+    /// Scale-up awaiting its cold start: (schedulable at, factor).
+    pending: Option<(SimTime, f64)>,
+    /// When the policy first started wanting less than the current factor
+    /// (hysteresis clock; any higher wish resets it).
+    below_since: Option<SimTime>,
+}
+
+impl ClassState {
+    fn new() -> Self {
+        ClassState { factor: 1.0, pending: None, below_since: None }
+    }
+
+    /// The factor scale-up decisions compare against: a pending scale-up
+    /// counts as already granted (no double-requisition while warming).
+    fn effective(&self) -> f64 {
+        self.pending.map_or(self.factor, |(_, f)| f)
+    }
+}
+
+const EPS: f64 = 1e-9;
+
+/// Policy wrapper owning the hysteresis / cold-start state machine.
+pub struct Autoscaler {
+    cfg: AutoscaleCfg,
+    policy: Box<dyn ScalePolicy>,
+    classes: BTreeMap<PoolClass, ClassState>,
+    /// Applied resizes (test/reporting aid).
+    pub applied: u64,
+}
+
+impl Autoscaler {
+    pub fn new(cfg: AutoscaleCfg) -> Self {
+        let policy: Box<dyn ScalePolicy> = match cfg.policy {
+            PolicyKind::Queue => Box::new(QueuePressure::default()),
+            PolicyKind::Ewma => Box::new(EwmaForecast::default()),
+        };
+        Autoscaler { cfg, policy, classes: BTreeMap::new(), applied: 0 }
+    }
+
+    pub fn interval(&self) -> SimDur {
+        self.cfg.interval
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// Factor currently applied in the substrate for a class (1.0 before
+    /// any resize).
+    pub fn applied_factor(&self, class: PoolClass) -> f64 {
+        self.classes.get(&class).map_or(1.0, |s| s.factor)
+    }
+
+    fn quantize(x: f64, cfg: &AutoscaleCfg) -> f64 {
+        // round demand UP to the next quantum (capacity safety margin) and
+        // clamp to [min_factor, 1]; quantum multiples stay exact in f64
+        let q = (x / cfg.quantum).ceil() * cfg.quantum;
+        q.clamp(cfg.min_factor, 1.0)
+    }
+
+    /// One evaluation tick: feed per-class observations (sorted by class),
+    /// get back the resize commands to run. Deterministic in (`now`, `obs`,
+    /// prior evaluations).
+    pub fn eval(&mut self, now: SimTime, obs: &[PoolPressure]) -> Vec<ScaleCmd> {
+        let mut cmds = Vec::new();
+        for o in obs {
+            let desired = Self::quantize(self.policy.desired(now, o, &self.cfg), &self.cfg);
+            let st = self.classes.entry(o.class).or_insert_with(ClassState::new);
+            // 1. a warming scale-up matured → apply it in the substrate
+            if let Some((ready, f)) = st.pending {
+                if now >= ready {
+                    st.pending = None;
+                    st.factor = f;
+                    self.applied += 1;
+                    cmds.push(ScaleCmd::Apply { class: o.class, factor: f });
+                }
+            }
+            let effective = st.effective();
+            if desired > effective + EPS {
+                // 2. scale-up: requisition now, schedulable after warm-up
+                st.below_since = None;
+                let warm = self.cfg.warmup(o.class);
+                let est_units = ((o.baseline_units as f64 * desired).round() as u64).max(1);
+                if warm.0 == 0 {
+                    st.pending = None;
+                    st.factor = desired;
+                    self.applied += 1;
+                    cmds.push(ScaleCmd::Apply { class: o.class, factor: desired });
+                } else {
+                    st.pending = Some((now + warm, desired));
+                    cmds.push(ScaleCmd::Decide { class: o.class, factor: desired, est_units });
+                }
+            } else if desired < effective - EPS {
+                // 3. scale-down: only after wanting less for down_hold
+                match st.below_since {
+                    None => st.below_since = Some(now),
+                    Some(since) if now - since >= self.cfg.down_hold => {
+                        st.below_since = None;
+                        st.pending = None;
+                        st.factor = desired;
+                        self.applied += 1;
+                        cmds.push(ScaleCmd::Apply { class: o.class, factor: desired });
+                    }
+                    Some(_) => {}
+                }
+            } else {
+                st.below_since = None;
+            }
+        }
+        cmds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(class: PoolClass, queued: u64, in_use: u64, base: u64) -> PoolPressure {
+        PoolPressure {
+            class,
+            queued,
+            queued_units: queued,
+            in_use_units: in_use,
+            provisioned_units: base,
+            baseline_units: base,
+        }
+    }
+
+    fn t(secs: u64) -> SimTime {
+        SimTime(SimDur::from_secs(secs).0)
+    }
+
+    #[test]
+    fn cfg_round_trips_through_json() {
+        let cfg = AutoscaleCfg {
+            policy: PolicyKind::Ewma,
+            min_factor: 0.25,
+            down_hold: SimDur::from_secs(30),
+            ..AutoscaleCfg::default()
+        };
+        let j = cfg.to_json();
+        let back = AutoscaleCfg::from_json(&j).unwrap();
+        assert_eq!(back, cfg);
+        assert_eq!(back.to_json().to_string(), j.to_string());
+    }
+
+    #[test]
+    fn cfg_rejects_garbage() {
+        assert!(AutoscaleCfg::from_json(&Json::parse(r#"{"warp":1}"#).unwrap()).is_err());
+        assert!(
+            AutoscaleCfg::from_json(&Json::parse(r#"{"min_factor":0.001}"#).unwrap()).is_err()
+        );
+        assert!(AutoscaleCfg::from_json(&Json::parse(r#"{"policy":"nope"}"#).unwrap()).is_err());
+        assert!(AutoscaleCfg::from_json(&Json::parse(r#"{"quantum":0.9}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn quantized_factors_are_json_exact() {
+        let cfg = AutoscaleCfg::default();
+        for i in 1..=8u32 {
+            let f = Autoscaler::quantize(i as f64 / 8.0, &cfg);
+            let j = Json::num(f).to_string();
+            let back = Json::parse(&j).unwrap().as_f64().unwrap();
+            assert_eq!(back, f, "factor {f} must round-trip exactly");
+        }
+    }
+
+    #[test]
+    fn idle_scales_down_only_after_hold() {
+        let mut a = Autoscaler::new(AutoscaleCfg::default());
+        let idle = [obs(PoolClass::Cpu, 0, 0, 128)];
+        // hysteresis: wanting less since t=0, hold is 10s
+        assert!(a.eval(t(0), &idle).is_empty());
+        assert!(a.eval(t(2), &idle).is_empty());
+        assert!(a.eval(t(8), &idle).is_empty());
+        let cmds = a.eval(t(10), &idle);
+        assert_eq!(
+            cmds,
+            vec![ScaleCmd::Apply { class: PoolClass::Cpu, factor: 0.25 }],
+            "sustained idle must scale down to the floor"
+        );
+        assert_eq!(a.applied_factor(PoolClass::Cpu), 0.25);
+        // and stays there without further commands
+        assert!(a.eval(t(12), &idle).is_empty());
+    }
+
+    #[test]
+    fn burst_decides_up_then_applies_after_warmup() {
+        let mut a = Autoscaler::new(AutoscaleCfg::default());
+        let idle = [obs(PoolClass::Cpu, 0, 0, 128)];
+        for s in [0u64, 2, 4, 6, 8, 10] {
+            let _ = a.eval(t(s), &idle);
+        }
+        assert_eq!(a.applied_factor(PoolClass::Cpu), 0.25);
+        // burst arrives: decision is immediate, capacity bills at once…
+        let busy = [obs(PoolClass::Cpu, 5, 10, 128)];
+        let cmds = a.eval(t(12), &busy);
+        assert_eq!(
+            cmds,
+            vec![ScaleCmd::Decide { class: PoolClass::Cpu, factor: 1.0, est_units: 128 }]
+        );
+        // …but the substrate resize waits out the 5s cold start
+        assert_eq!(a.applied_factor(PoolClass::Cpu), 0.25);
+        assert!(a.eval(t(14), &busy).is_empty(), "still warming");
+        let cmds = a.eval(t(18), &busy);
+        assert_eq!(cmds, vec![ScaleCmd::Apply { class: PoolClass::Cpu, factor: 1.0 }]);
+        assert_eq!(a.applied_factor(PoolClass::Cpu), 1.0);
+    }
+
+    #[test]
+    fn oscillating_arrivals_do_not_flap() {
+        // queue flips between empty and deep every evaluation (period well
+        // under down_hold): the factor must never leave 1.0 and no resize
+        // may be issued — this is the hysteresis acceptance test.
+        let mut a = Autoscaler::new(AutoscaleCfg::default());
+        let mut resizes = 0;
+        for i in 0..50u64 {
+            let queued = if i % 2 == 0 { 40 } else { 0 };
+            let in_use = if i % 2 == 0 { 0 } else { 64 };
+            let cmds = a.eval(t(i * 2), &[obs(PoolClass::Cpu, queued, in_use, 128)]);
+            resizes += cmds.len();
+        }
+        assert_eq!(resizes, 0, "oscillation under down_hold must not move the pool");
+        assert_eq!(a.applied_factor(PoolClass::Cpu), 1.0);
+    }
+
+    #[test]
+    fn classes_scale_independently() {
+        let mut a = Autoscaler::new(AutoscaleCfg::default());
+        let both = [
+            obs(PoolClass::Cpu, 3, 50, 128), // busy → stays up
+            obs(PoolClass::Api, 0, 0, 200),  // idle → scales down after hold
+        ];
+        for s in [0u64, 2, 4, 6, 8] {
+            let _ = a.eval(t(s), &both);
+        }
+        let cmds = a.eval(t(10), &both);
+        assert_eq!(cmds, vec![ScaleCmd::Apply { class: PoolClass::Api, factor: 0.25 }]);
+        assert_eq!(a.applied_factor(PoolClass::Cpu), 1.0);
+        assert_eq!(a.applied_factor(PoolClass::Api), 0.25);
+    }
+
+    #[test]
+    fn renewed_demand_resets_peak_and_hold() {
+        let mut a = Autoscaler::new(AutoscaleCfg::default());
+        let idle = [obs(PoolClass::Cpu, 0, 0, 128)];
+        assert!(a.eval(t(0), &idle).is_empty());
+        assert!(a.eval(t(8), &idle).is_empty());
+        // a burst at t=9 refills the demand peak and resets the hold clock
+        assert!(a.eval(t(9), &[obs(PoolClass::Cpu, 4, 60, 128)]).is_empty());
+        // idle again: the peak must first decay below full provision, then a
+        // fresh down_hold must elapse — nothing moves until t=25
+        for s in [11u64, 13, 15, 17, 19, 21, 23] {
+            assert!(a.eval(t(s), &idle).is_empty(), "still decaying/holding at t={s}");
+        }
+        let cmds = a.eval(t(25), &idle);
+        assert_eq!(cmds.len(), 1, "hold elapsed from the post-burst reset");
+        match &cmds[0] {
+            ScaleCmd::Apply { class, factor } => {
+                assert_eq!(*class, PoolClass::Cpu);
+                assert!(*factor < 1.0, "stepped decay must be moving down, got {factor}");
+            }
+            other => panic!("expected a scale-down Apply, got {other:?}"),
+        }
+    }
+}

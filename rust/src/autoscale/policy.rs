@@ -1,0 +1,149 @@
+//! Built-in scale policies.
+//!
+//! A [`ScalePolicy`] maps one pool class's live demand observation to a
+//! *desired* capacity factor in `[0, 1]`; the [`super::Autoscaler`] wrapper
+//! owns everything temporal (quantization, cold-start warm-ups, scale-down
+//! hysteresis), so policies stay pure demand models and remain trivially
+//! deterministic.
+
+use super::{AutoscaleCfg, PoolClass, PoolPressure};
+use crate::sim::SimTime;
+use std::collections::BTreeMap;
+
+/// Demand model: observation → desired capacity factor (pre-quantization;
+/// the autoscaler clamps into `[min_factor, 1]`).
+pub trait ScalePolicy {
+    fn name(&self) -> &'static str;
+
+    fn desired(&mut self, now: SimTime, obs: &PoolPressure, cfg: &AutoscaleCfg) -> f64;
+}
+
+/// Queue-pressure policy with decaying-peak demand memory.
+///
+/// Any queued action is treated as the front of a burst and jumps the
+/// desire straight to full provision (rollout arrivals are thundering
+/// herds, §2.3 — ramping would starve them through the whole climb). With
+/// an empty queue the desire tracks a decaying peak of `in_use × headroom`,
+/// so short quiet windows inside a step keep capacity hot while sustained
+/// idle (inter-step training gaps, run tails) steps the pool down.
+#[derive(Debug, Default)]
+pub struct QueuePressure {
+    peak: BTreeMap<PoolClass, f64>,
+}
+
+impl ScalePolicy for QueuePressure {
+    fn name(&self) -> &'static str {
+        "queue"
+    }
+
+    fn desired(&mut self, _now: SimTime, obs: &PoolPressure, cfg: &AutoscaleCfg) -> f64 {
+        let base = obs.baseline_units.max(1) as f64;
+        let peak = self.peak.entry(obs.class).or_insert(0.0);
+        if obs.queued >= cfg.up_queue {
+            // burst response: demand is at least everything we have
+            *peak = base;
+            return 1.0;
+        }
+        let inst = obs.in_use_units as f64 * cfg.headroom;
+        *peak = (*peak * cfg.peak_decay).max(inst);
+        (*peak / base).min(1.0)
+    }
+}
+
+/// EWMA arrival-forecast policy.
+///
+/// Smooths instantaneous unit demand (`in_use_units + queued_units`) with
+/// an exponential moving average and provisions `forecast × headroom`.
+/// Reacts slower than [`QueuePressure`] on bursts but is immune to sampling
+/// noise — the right trade for steady high-duty workloads.
+#[derive(Debug, Default)]
+pub struct EwmaForecast {
+    demand: BTreeMap<PoolClass, f64>,
+}
+
+impl ScalePolicy for EwmaForecast {
+    fn name(&self) -> &'static str {
+        "ewma"
+    }
+
+    fn desired(&mut self, _now: SimTime, obs: &PoolPressure, cfg: &AutoscaleCfg) -> f64 {
+        let base = obs.baseline_units.max(1) as f64;
+        let inst = (obs.in_use_units + obs.queued_units) as f64;
+        let d = self.demand.entry(obs.class).or_insert(inst);
+        *d += cfg.ewma_alpha * (inst - *d);
+        (*d * cfg.headroom / base).min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(queued: u64, in_use: u64, base: u64) -> PoolPressure {
+        PoolPressure {
+            class: PoolClass::Cpu,
+            queued,
+            queued_units: queued,
+            in_use_units: in_use,
+            provisioned_units: base,
+            baseline_units: base,
+        }
+    }
+
+    #[test]
+    fn queue_policy_jumps_on_any_queue() {
+        let cfg = AutoscaleCfg::default();
+        let mut p = QueuePressure::default();
+        assert_eq!(p.desired(SimTime::ZERO, &obs(1, 0, 128), &cfg), 1.0);
+        // …and stays near full through one quiet observation (peak memory)
+        let quiet = p.desired(SimTime::ZERO, &obs(0, 0, 128), &cfg);
+        assert!(quiet > 0.9, "peak must decay slowly, got {quiet}");
+    }
+
+    #[test]
+    fn queue_policy_tracks_usage_with_headroom() {
+        let cfg = AutoscaleCfg::default();
+        let mut p = QueuePressure::default();
+        let d = p.desired(SimTime::ZERO, &obs(0, 32, 128), &cfg);
+        assert!((d - 32.0 * cfg.headroom / 128.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn queue_policy_decays_to_zero_when_idle() {
+        let cfg = AutoscaleCfg::default();
+        let mut p = QueuePressure::default();
+        let _ = p.desired(SimTime::ZERO, &obs(3, 100, 128), &cfg);
+        let mut last = 1.0;
+        for _ in 0..200 {
+            last = p.desired(SimTime::ZERO, &obs(0, 0, 128), &cfg);
+        }
+        assert!(last < 0.01, "idle peak must decay away, got {last}");
+    }
+
+    #[test]
+    fn ewma_converges_to_steady_demand() {
+        let cfg = AutoscaleCfg::default();
+        let mut p = EwmaForecast::default();
+        let mut d = 0.0;
+        for _ in 0..100 {
+            d = p.desired(SimTime::ZERO, &obs(0, 32, 128), &cfg);
+        }
+        assert!((d - 32.0 * cfg.headroom / 128.0).abs() < 1e-6, "got {d}");
+        // demand vanishes → forecast follows
+        for _ in 0..100 {
+            d = p.desired(SimTime::ZERO, &obs(0, 0, 128), &cfg);
+        }
+        assert!(d < 1e-3, "got {d}");
+    }
+
+    #[test]
+    fn desired_is_capped_at_one() {
+        let cfg = AutoscaleCfg::default();
+        let mut q = QueuePressure::default();
+        let mut e = EwmaForecast::default();
+        for _ in 0..10 {
+            assert!(q.desired(SimTime::ZERO, &obs(0, 1000, 128), &cfg) <= 1.0);
+            assert!(e.desired(SimTime::ZERO, &obs(500, 1000, 128), &cfg) <= 1.0);
+        }
+    }
+}

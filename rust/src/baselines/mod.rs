@@ -281,6 +281,13 @@ impl Backend for BaselineBackend {
         v
     }
 
+    // `scale_classes` / `resize` stay at the inelastic defaults on purpose:
+    // pods are provisioned per trajectory, static services pin weights for
+    // the whole run, and the unmanaged API client holds no quota contract
+    // to renegotiate. Running the autoscaler against a baseline therefore
+    // observes nothing and saves nothing — exactly the asymmetry the
+    // `--against` A/B packs measure.
+
     fn inject(&mut self, _now: SimTime, event: &ScenarioEvent) -> bool {
         match event {
             // a provider flap hits the unmanaged client like anything else;

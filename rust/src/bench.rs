@@ -290,6 +290,135 @@ pub fn sched_bench_json(rows: &[SchedBenchRow]) -> String {
     .to_string()
 }
 
+// ---------------------------------------------------------------------------
+// bench regression gate (BENCH_sched.json vs committed baseline)
+// ---------------------------------------------------------------------------
+
+/// One parsed row of a `BENCH_sched.json` report — the unit the CI perf
+/// ratchet compares.
+#[derive(Debug, Clone)]
+pub struct GateRow {
+    pub pack: String,
+    /// sweep / dirty invocation ratio (higher = dirty-pool saves more).
+    pub reduction: f64,
+    pub metrics_equal: bool,
+}
+
+/// Parse the `BENCH_sched.json` format written by [`sched_bench_json`].
+pub fn parse_sched_bench(text: &str) -> crate::util::error::Result<Vec<GateRow>> {
+    use crate::err;
+    let j = crate::util::json::Json::parse(text).map_err(|e| err!("BENCH_sched.json: {e}"))?;
+    let rows = j
+        .get("rows")
+        .and_then(|r| r.as_arr())
+        .ok_or_else(|| err!("BENCH_sched.json has no 'rows' array"))?;
+    rows.iter()
+        .map(|r| {
+            let field = |k: &str| {
+                r.get(k)
+                    .and_then(|v| v.as_f64())
+                    .ok_or_else(|| err!("bench row missing number '{k}'"))
+            };
+            Ok(GateRow {
+                pack: r
+                    .get("pack")
+                    .and_then(|p| p.as_str())
+                    .ok_or_else(|| err!("bench row missing 'pack'"))?
+                    .to_string(),
+                reduction: field("reduction")?,
+                metrics_equal: r
+                    .get("metrics_equal")
+                    .and_then(|b| b.as_bool())
+                    .unwrap_or(false),
+            })
+        })
+        .collect()
+}
+
+/// Result of the bench regression gate.
+#[derive(Debug)]
+pub struct GateReport {
+    /// Human-readable per-pack comparison lines.
+    pub lines: Vec<String>,
+    /// Hard failures (regressions, divergence, missing packs).
+    pub failures: Vec<String>,
+}
+
+impl GateReport {
+    pub fn passed(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+/// The CI perf ratchet: compare a fresh `BENCH_sched.json` against the
+/// committed baseline and fail on a >`tolerance` relative regression of
+/// the dirty-vs-sweep invocation ratio, on dirty/sweep metric divergence,
+/// or on a baseline pack vanishing from the fresh report. New packs in the
+/// fresh report are reported but never fail (they have no baseline yet).
+pub fn sched_bench_gate(
+    baseline: &str,
+    fresh: &str,
+    tolerance: f64,
+) -> crate::util::error::Result<GateReport> {
+    let base_rows = parse_sched_bench(baseline)?;
+    let fresh_rows = parse_sched_bench(fresh)?;
+    let mut report = GateReport { lines: Vec::new(), failures: Vec::new() };
+    // an empty report on either side would pass vacuously — refuse
+    if base_rows.is_empty() {
+        report.failures.push("baseline report has no rows (refusing a vacuous pass)".into());
+    }
+    if fresh_rows.is_empty() {
+        report.failures.push("fresh report has no rows (bench produced nothing?)".into());
+    }
+    for b in &base_rows {
+        let Some(f) = fresh_rows.iter().find(|f| f.pack == b.pack) else {
+            report
+                .failures
+                .push(format!("pack '{}' present in baseline but missing from fresh run", b.pack));
+            continue;
+        };
+        if !f.metrics_equal {
+            report.failures.push(format!(
+                "pack '{}': dirty-pool metrics diverged from full sweep",
+                f.pack
+            ));
+        }
+        let floor = b.reduction * (1.0 - tolerance);
+        let verdict = if f.reduction < floor { "REGRESSED" } else { "ok" };
+        report.lines.push(format!(
+            "{:<16} reduction {:.2}x -> {:.2}x (floor {:.2}x) {}",
+            b.pack, b.reduction, f.reduction, floor, verdict
+        ));
+        if f.reduction < floor {
+            report.failures.push(format!(
+                "pack '{}': dirty-vs-sweep invocation ratio regressed {:.2}x -> {:.2}x \
+                 (>{:.0}% loss)",
+                b.pack,
+                b.reduction,
+                f.reduction,
+                tolerance * 100.0
+            ));
+        }
+    }
+    for f in &fresh_rows {
+        if !base_rows.iter().any(|b| b.pack == f.pack) {
+            // no ratio baseline yet, but dirty/sweep divergence is a hard
+            // failure regardless of how new the pack is
+            if !f.metrics_equal {
+                report.failures.push(format!(
+                    "pack '{}': dirty-pool metrics diverged from full sweep",
+                    f.pack
+                ));
+            }
+            report.lines.push(format!(
+                "{:<16} new pack (reduction {:.2}x) — no baseline, commit one to ratchet it",
+                f.pack, f.reduction
+            ));
+        }
+    }
+    Ok(report)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -312,5 +441,75 @@ mod tests {
             assert_eq!(scaled(1280), 320);
             assert_eq!(scaled(128), 64);
         }
+    }
+
+    fn bench_json(rows: &[(&str, f64, bool)]) -> String {
+        let body: Vec<String> = rows
+            .iter()
+            .map(|(p, r, eq)| {
+                format!(r#"{{"pack":"{p}","reduction":{r},"metrics_equal":{eq}}}"#)
+            })
+            .collect();
+        format!(r#"{{"bench":"sched_dirty_pool","rows":[{}]}}"#, body.join(","))
+    }
+
+    #[test]
+    fn gate_passes_within_tolerance() {
+        let base = bench_json(&[("steady-mix", 4.0, true), ("api-flap", 3.0, true)]);
+        let fresh = bench_json(&[("steady-mix", 3.7, true), ("api-flap", 3.2, true)]);
+        let g = sched_bench_gate(&base, &fresh, 0.10).unwrap();
+        assert!(g.passed(), "{:?}", g.failures);
+        assert_eq!(g.lines.len(), 2);
+    }
+
+    #[test]
+    fn gate_fails_on_ratio_regression() {
+        let base = bench_json(&[("steady-mix", 4.0, true)]);
+        let fresh = bench_json(&[("steady-mix", 3.0, true)]); // 25% loss
+        let g = sched_bench_gate(&base, &fresh, 0.10).unwrap();
+        assert!(!g.passed());
+        assert!(g.failures[0].contains("regressed"));
+    }
+
+    #[test]
+    fn gate_fails_on_divergence_and_missing_pack() {
+        let base = bench_json(&[("steady-mix", 4.0, true), ("api-flap", 3.0, true)]);
+        let fresh = bench_json(&[("steady-mix", 4.0, false)]);
+        let g = sched_bench_gate(&base, &fresh, 0.10).unwrap();
+        assert_eq!(g.failures.len(), 2, "{:?}", g.failures);
+        assert!(g.failures.iter().any(|f| f.contains("missing")));
+        assert!(g.failures.iter().any(|f| f.contains("diverged")));
+    }
+
+    #[test]
+    fn gate_tolerates_new_packs() {
+        let base = bench_json(&[("steady-mix", 4.0, true)]);
+        let fresh = bench_json(&[("steady-mix", 4.0, true), ("brand-new", 9.0, true)]);
+        let g = sched_bench_gate(&base, &fresh, 0.10).unwrap();
+        assert!(g.passed());
+        assert!(g.lines.iter().any(|l| l.contains("new pack")));
+    }
+
+    #[test]
+    fn gate_fails_on_divergent_new_pack_and_empty_reports() {
+        // a brand-new pack with dirty/sweep divergence must still fail
+        let base = bench_json(&[("steady-mix", 4.0, true)]);
+        let fresh = bench_json(&[("steady-mix", 4.0, true), ("brand-new", 9.0, false)]);
+        let g = sched_bench_gate(&base, &fresh, 0.10).unwrap();
+        assert!(!g.passed());
+        assert!(g.failures[0].contains("diverged"));
+        // empty reports must not pass vacuously
+        let empty = r#"{"rows":[]}"#;
+        let g = sched_bench_gate(empty, &base, 0.10).unwrap();
+        assert!(!g.passed());
+        let g = sched_bench_gate(&base, empty, 0.10).unwrap();
+        assert!(!g.passed());
+    }
+
+    #[test]
+    fn gate_rejects_malformed_reports() {
+        assert!(sched_bench_gate("not json", "{}", 0.1).is_err());
+        assert!(sched_bench_gate(r#"{"rows":[]}"#, "{}", 0.1).is_err());
+        assert!(parse_sched_bench(r#"{"rows":[{"pack":"x"}]}"#).is_err());
     }
 }

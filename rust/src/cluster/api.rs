@@ -109,6 +109,12 @@ impl ApiEndpoint {
         self.in_flight
     }
 
+    /// Concurrency limit at construction — the static-provision baseline
+    /// `scale_limits` factors apply to (resource-hour accounting reference).
+    pub fn base_concurrency(&self) -> u32 {
+        self.base_concurrency
+    }
+
     /// Provider-side limit change (scenario rate-limit flap): scale the
     /// concurrency and window-quota limits to `factor` × their construction
     /// baseline (floor 1 so the endpoint stays reachable). Requests already

@@ -44,6 +44,7 @@
 //! is what lets the driver reclaim exclusive ownership for bookkeeping.
 
 use crate::action::{Action, ActionId, TrajId};
+use crate::autoscale::{PoolClass, PoolPressure};
 use crate::scenario::ScenarioEvent;
 use crate::sim::{SimDur, SimTime};
 use std::rc::Rc;
@@ -132,5 +133,27 @@ pub trait Backend {
     fn inject(&mut self, now: SimTime, event: &ScenarioEvent) -> bool {
         let _ = (now, event);
         false
+    }
+
+    /// Live demand observations for every pool class this backend can
+    /// elastically resize, sorted by [`PoolClass`] (the autoscaler's
+    /// deterministic evaluation order). The default — no resizable classes
+    /// — is the statically-provisioned deployment the paper baselines
+    /// model.
+    fn scale_classes(&self) -> Vec<PoolPressure> {
+        Vec::new()
+    }
+
+    /// Elastically resize a pool class to `factor` × its full static
+    /// provision, returning the provisioned unit count actually reached
+    /// (resizes are best-effort: busy capacity is never preempted).
+    /// Implementations reuse the same substrate machinery as the
+    /// `cpu_pool_scale` / `api_limit_scale` fault injections — including
+    /// dirtying the affected pools, so the pump that follows reschedules
+    /// them. `None` means the substrate cannot resize this class (the
+    /// deliberately-inelastic default).
+    fn resize(&mut self, now: SimTime, class: PoolClass, factor: f64) -> Option<u64> {
+        let _ = (now, class, factor);
+        None
     }
 }

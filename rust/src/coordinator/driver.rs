@@ -13,7 +13,8 @@
 
 use super::backend::{Backend, Verdict};
 use crate::action::{Action, ActionId, ActionKind, ActionSpec, ActionState, TrajId};
-use crate::metrics::{ActionRecord, Metrics, StepRecord, TrajRecord, UtilSample};
+use crate::autoscale::{Autoscaler, ScaleCmd};
+use crate::metrics::{ActionRecord, Metrics, ProvisionRecord, StepRecord, TrajRecord, UtilSample};
 use crate::rollout::workloads::Catalog;
 use crate::rollout::{Phase, Workload};
 use crate::scenario::trace::{TraceKind, TraceRecorder};
@@ -66,6 +67,8 @@ enum Ev {
     Sample,
     /// Deliver scenario injection `i` to the backend.
     Inject(usize),
+    /// Periodic autoscaler evaluation (only scheduled when one is wired).
+    Autoscale,
 }
 
 struct TrajRt {
@@ -115,6 +118,8 @@ struct Driver<'a> {
     injections: &'a [TimedEvent],
     /// decision-trace sink (scenario record/replay)
     rec: Option<&'a mut TraceRecorder>,
+    /// elastic pool autoscaler (None = static provisioning)
+    asc: Option<&'a mut Autoscaler>,
     /// actions submitted but not yet started (trace queue-depth gauge)
     waiting: u64,
 }
@@ -126,12 +131,15 @@ pub fn run(
     workloads: &[Workload],
     cfg: &RunCfg,
 ) -> Metrics {
-    run_traced(backend, cat, workloads, cfg, &[], None)
+    run_traced(backend, cat, workloads, cfg, &[], None, None)
 }
 
 /// [`run`] with the scenario hooks: `injections` are delivered to
-/// [`Backend::inject`] at their timestamps, and every scheduling decision is
-/// recorded into `recorder` (when given) for differential replay.
+/// [`Backend::inject`] at their timestamps, every scheduling decision is
+/// recorded into `recorder` (when given) for differential replay, and
+/// `autoscaler` (when given) is evaluated on its virtual-time cadence,
+/// resizing pools through [`Backend::resize`] and billing capacity into
+/// the provision records.
 pub fn run_traced(
     backend: &mut dyn Backend,
     cat: &Catalog,
@@ -139,6 +147,7 @@ pub fn run_traced(
     cfg: &RunCfg,
     injections: &[TimedEvent],
     recorder: Option<&mut TraceRecorder>,
+    autoscaler: Option<&mut Autoscaler>,
 ) -> Metrics {
     let mut d = Driver {
         backend,
@@ -165,8 +174,19 @@ pub fn run_traced(
         wakeup_at: None,
         injections,
         rec: recorder,
+        asc: autoscaler,
         waiting: 0,
     };
+    // pin the initial provision of every pool (the resource-hour series
+    // baseline; without resizes this is the whole static bill)
+    for (pool, units) in d.backend.provisioned() {
+        d.metrics.provision.push(ProvisionRecord {
+            at: SimTime::ZERO,
+            pool: pool.clone(),
+            units,
+        });
+        d.trace(SimTime::ZERO, TraceKind::Provision { pool, units });
+    }
     for wl in 0..d.wls.len() {
         d.eng.schedule_at(SimTime::ZERO, Ev::StepStart(wl));
     }
@@ -174,6 +194,9 @@ pub fn run_traced(
         d.eng.schedule_at(te.at, Ev::Inject(i));
     }
     d.eng.schedule_in(cfg.sample_every, Ev::Sample);
+    if let Some(interval) = d.asc.as_ref().map(|a| a.interval()) {
+        d.eng.schedule_in(interval, Ev::Autoscale);
+    }
     while let Some((now, ev)) = d.eng.next() {
         d.handle(now, ev);
     }
@@ -214,6 +237,68 @@ impl Driver<'_> {
                 }
             }
             Ev::Inject(i) => self.inject(now, i),
+            Ev::Autoscale => self.autoscale(now),
+        }
+    }
+
+    /// One autoscaler evaluation: observe pool pressure, let the policy
+    /// decide, bill scale-up capacity from the decision instant, and apply
+    /// matured resizes through [`Backend::resize`] (which dirties the
+    /// affected pools exactly like the fault-injection path, so the pump
+    /// that follows reschedules them at the resize instant).
+    fn autoscale(&mut self, now: SimTime) {
+        let obs = self.backend.scale_classes();
+        let (cmds, interval) = match self.asc.as_deref_mut() {
+            Some(a) => (a.eval(now, &obs), a.interval()),
+            None => return,
+        };
+        let mut applied = false;
+        for cmd in cmds {
+            match cmd {
+                ScaleCmd::Decide { class, factor, est_units } => {
+                    // requisitioned: billed now, schedulable after warm-up
+                    let pool = class.name().to_string();
+                    self.metrics.provision.push(ProvisionRecord {
+                        at: now,
+                        pool: pool.clone(),
+                        units: est_units,
+                    });
+                    self.trace(
+                        now,
+                        TraceKind::Scale { pool: pool.clone(), phase: "decide".into(), factor },
+                    );
+                    self.trace(now, TraceKind::Provision { pool, units: est_units });
+                }
+                ScaleCmd::Apply { class, factor } => {
+                    if let Some(units) = self.backend.resize(now, class, factor) {
+                        applied = true;
+                        let pool = class.name().to_string();
+                        self.metrics.provision.push(ProvisionRecord {
+                            at: now,
+                            pool: pool.clone(),
+                            units,
+                        });
+                        self.trace(
+                            now,
+                            TraceKind::Scale {
+                                pool: pool.clone(),
+                                phase: "apply".into(),
+                                factor,
+                            },
+                        );
+                        self.trace(now, TraceKind::Provision { pool, units });
+                    }
+                }
+            }
+        }
+        if applied {
+            // capacity moved — re-run admission at the resize instant, the
+            // same re-arm the fault-injection path performs
+            self.backend.tick(now);
+            self.pump(now);
+        }
+        if !self.wls.iter().all(|w| w.done) {
+            self.eng.schedule_in(interval, Ev::Autoscale);
         }
     }
 

@@ -152,6 +152,34 @@ mod tests {
     }
 
     #[test]
+    fn autoscaler_resize_composes_with_injected_faults() {
+        // Fault injections and autoscaler resizes own separate factors and
+        // the substrate sees their product — a scale-up must never cancel a
+        // provider fault, and a fault restore must never undo a scale-down.
+        use crate::autoscale::PoolClass;
+        use crate::scenario::ScenarioEvent;
+        use crate::sim::SimTime;
+        let cat = small_cat();
+        let mut be = tangram_for(&cat); // 2 nodes × 16 = 32 cores
+        let t = SimTime::ZERO;
+        assert!(be.inject(t, &ScenarioEvent::CpuPoolScale { factor: 0.5 }));
+        // autoscaler squeezes the faulted pool further: 0.5 × 0.5 = 0.25
+        assert_eq!(be.resize(t, PoolClass::Cpu, 0.5), Some(8));
+        // fault restores, autoscaler factor survives: capacity = 0.5 × 32
+        assert!(be.inject(t, &ScenarioEvent::CpuPoolScale { factor: 1.0 }));
+        assert_eq!(be.cpu.total_cores() - be.cpu.cordoned_cores() as u64, 16);
+        // autoscaler restores under no fault → the full pool returns
+        assert_eq!(be.resize(t, PoolClass::Cpu, 1.0), Some(32));
+        // API side: a provider flap survives an autoscaler scale-up
+        let lanes0 = be.provisioned_lanes();
+        assert!(be.inject(t, &ScenarioEvent::ApiLimitScale { factor: 0.5 }));
+        let flapped = be.provisioned_lanes();
+        assert!(flapped < lanes0);
+        let after = be.resize(t, PoolClass::Api, 1.0).unwrap();
+        assert_eq!(after, flapped, "scale-up must not cancel the provider fault");
+    }
+
+    #[test]
     fn small_window_still_makes_progress() {
         // queue far larger than the candidate window
         let cat = small_cat();

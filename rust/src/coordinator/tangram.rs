@@ -19,6 +19,7 @@
 use super::backend::{Backend, Started, Verdict};
 use super::queue::ActionQueue;
 use crate::action::{Action, ActionId, ResourceKindId, TrajId};
+use crate::autoscale::{PoolClass, PoolPressure};
 use crate::cluster::api::{ApiEndpoint, ApiOutcome};
 use crate::cluster::cpu::{CpuLatency, NodeId};
 use crate::cluster::gpu::RestoreModel;
@@ -103,6 +104,15 @@ pub struct TangramBackend {
     /// drain_started call count + cumulative wall time
     pub drain_calls: u64,
     pub drain_wall: std::time::Duration,
+    /// Scenario-fault scale factors (injections) and autoscaler scale
+    /// factors are tracked separately and COMPOSED (product) into the
+    /// substrate, so a scale-up never cancels an injected provider flap
+    /// and an injected restore never silently undoes an autoscaler
+    /// scale-down (the two layers own different knobs in production too).
+    fault_cpu_scale: f64,
+    auto_cpu_scale: f64,
+    fault_api_scale: f64,
+    auto_api_scale: f64,
 }
 
 impl TangramBackend {
@@ -154,6 +164,36 @@ impl TangramBackend {
             sched_wall: std::time::Duration::ZERO,
             drain_calls: 0,
             drain_wall: std::time::Duration::ZERO,
+            fault_cpu_scale: 1.0,
+            auto_cpu_scale: 1.0,
+            fault_api_scale: 1.0,
+            auto_api_scale: 1.0,
+        }
+    }
+
+    /// Push the composed (fault × autoscale) CPU scale into the cordon
+    /// machinery and re-dirty every node — capacity moved either way, and a
+    /// restore must immediately revive stalled queues (queue-stall bugfix).
+    fn apply_cpu_scale(&mut self) {
+        let f = (self.fault_cpu_scale * self.auto_cpu_scale).clamp(0.0, 1.0);
+        self.cpu.set_pool_scale(f);
+        let nodes: Vec<NodeId> = self.cpu_queues.keys().copied().collect();
+        for n in nodes {
+            self.dirty.insert(PoolId::CpuNode(n));
+        }
+    }
+
+    /// Push the composed (fault × autoscale) API scale into every provider
+    /// limit, re-derive the 90%-of-limit admission margins, and re-dirty
+    /// the endpoint pools.
+    fn apply_api_scale(&mut self) {
+        let f = (self.fault_api_scale * self.auto_api_scale).max(0.0);
+        for (kind, ep) in self.endpoints.iter_mut() {
+            ep.scale_limits(f);
+            if let Some(mgr) = self.api_mgrs.get_mut(kind) {
+                mgr.limit = ((ep.spec.max_concurrency as f64 * 0.9) as u64).max(1);
+            }
+            self.dirty.insert(PoolId::Api(*kind));
         }
     }
 
@@ -348,6 +388,12 @@ impl TangramBackend {
     /// Schedulable pools in this deployment (CPU nodes + GPU + endpoints).
     pub fn pool_count(&self) -> usize {
         self.cpu_queues.len() + 1 + self.api_queues.len()
+    }
+
+    /// Currently-provisioned API quota lanes (sum of provider concurrency
+    /// limits after any flaps/resizes).
+    pub fn provisioned_lanes(&self) -> u64 {
+        self.endpoints.values().map(|e| e.spec.max_concurrency as u64).sum()
     }
 
     /// Mean scheduler decision latency (wall-clock, for §Perf).
@@ -558,24 +604,77 @@ impl Backend for TangramBackend {
 
     fn provisioned(&self) -> Vec<(String, u64)> {
         vec![
-            ("cpu_cores".into(), self.cpu.total_cores()),
+            ("cpu_cores".into(), self.cpu.total_cores() - self.cpu.cordoned_cores() as u64),
             ("gpus".into(), self.gpu.total_gpus() as u64),
+            ("api_lanes".into(), self.provisioned_lanes()),
         ]
+    }
+
+    fn scale_classes(&self) -> Vec<PoolPressure> {
+        // sorted by PoolClass (Cpu < Api) — the autoscaler's eval order
+        let total = self.cpu.total_cores();
+        let cordoned = self.cpu.cordoned_cores() as u64;
+        let free = self.cpu.free_cores();
+        let cpu = PoolPressure {
+            class: PoolClass::Cpu,
+            queued: self.cpu_queues.values().map(|q| q.len() as u64).sum(),
+            // minimum core demand of the waiting work (unit-denominated,
+            // so policies never mix action counts into core sums)
+            queued_units: self
+                .cpu_queues
+                .values()
+                .flat_map(|q| q.iter())
+                .map(|a| a.spec.cost.dim(self.cpu_kind).min_units())
+                .sum(),
+            // cordoned cores read as busy in free_cores; subtract them so
+            // in-use reflects real allocations only
+            in_use_units: total.saturating_sub(free).saturating_sub(cordoned),
+            provisioned_units: total - cordoned,
+            baseline_units: total,
+        };
+        let api_queued: u64 = self.api_queues.values().map(|q| q.len() as u64).sum();
+        let api = PoolPressure {
+            class: PoolClass::Api,
+            queued: api_queued,
+            // every API call occupies exactly one provider lane
+            queued_units: api_queued,
+            in_use_units: self.endpoints.values().map(|e| e.in_flight() as u64).sum(),
+            provisioned_units: self.provisioned_lanes(),
+            baseline_units: self
+                .endpoints
+                .values()
+                .map(|e| e.base_concurrency() as u64)
+                .sum(),
+        };
+        vec![cpu, api]
+    }
+
+    fn resize(&mut self, _now: SimTime, class: PoolClass, factor: f64) -> Option<u64> {
+        // the autoscaler owns its own factor; the substrate sees the
+        // composition with any injected fault, through the same cordon /
+        // provider-limit machinery (incl. pool dirtying) as `inject`
+        match class {
+            PoolClass::Cpu => {
+                self.auto_cpu_scale = factor.clamp(0.0, 1.0);
+                self.apply_cpu_scale();
+                Some(self.cpu.total_cores() - self.cpu.cordoned_cores() as u64)
+            }
+            PoolClass::Api => {
+                self.auto_api_scale = factor.max(0.0);
+                self.apply_api_scale();
+                Some(self.provisioned_lanes())
+            }
+        }
     }
 
     fn inject(&mut self, _now: SimTime, event: &ScenarioEvent) -> bool {
         match event {
             ScenarioEvent::ApiLimitScale { factor } => {
-                for (kind, ep) in self.endpoints.iter_mut() {
-                    ep.scale_limits(*factor);
-                    if let Some(mgr) = self.api_mgrs.get_mut(kind) {
-                        // track the provider: re-derive the 90%-of-limit
-                        // admission margin from the flapped spec
-                        mgr.limit =
-                            ((ep.spec.max_concurrency as f64 * 0.9) as u64).max(1);
-                    }
-                    self.dirty.insert(PoolId::Api(*kind));
-                }
+                // track the provider: the fault factor composes with any
+                // autoscaler factor (re-deriving the 90%-of-limit admission
+                // margins from the flapped specs)
+                self.fault_api_scale = *factor;
+                self.apply_api_scale();
                 !self.endpoints.is_empty()
             }
             ScenarioEvent::GpuCacheFlush => {
@@ -584,14 +683,8 @@ impl Backend for TangramBackend {
                 true
             }
             ScenarioEvent::CpuPoolScale { factor } => {
-                self.cpu.set_pool_scale(*factor);
-                // every node's schedulable capacity moved — re-dirty them
-                // all so a cordon *restore* immediately revives queues whose
-                // forced-head allocations were failing (queue-stall bugfix)
-                let nodes: Vec<NodeId> = self.cpu_queues.keys().copied().collect();
-                for n in nodes {
-                    self.dirty.insert(PoolId::CpuNode(n));
-                }
+                self.fault_cpu_scale = *factor;
+                self.apply_cpu_scale();
                 true
             }
         }

@@ -16,6 +16,7 @@
 //! real model compute.
 
 pub mod action;
+pub mod autoscale;
 pub mod baselines;
 pub mod bench;
 pub mod cluster;

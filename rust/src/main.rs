@@ -5,7 +5,12 @@
 //!              the metric report; `--config file.json` or flags
 //!   scenario   record/replay deterministic scenario traces: run a named
 //!              pack (or a spec file), capture every scheduling decision as
-//!              JSONL, and byte-diff a later replay against it
+//!              JSONL, and byte-diff a later replay against it; `--against`
+//!              A/B-diffs two recordings (per-pool ACT/resource-hour table);
+//!              `--autoscale` sizes pools to demand and reports the
+//!              resource-hour savings vs static provisioning
+//!   bench-gate compare a fresh BENCH_sched.json against the committed
+//!              baseline (CI perf ratchet; exit 1 on >tolerance regression)
 //!   serve      load the AOT artifacts and run a reward-scoring smoke loop
 //!              through the coordinator (PJRT on the hot path)
 //!   version    print build info
@@ -16,16 +21,21 @@
 //!   arl-tangram scenario --list
 //!   arl-tangram scenario --pack api-flap --backend tangram --record t.jsonl
 //!   arl-tangram scenario --replay t.jsonl
+//!   arl-tangram scenario --pack coldstart-storm --autoscale --record auto.jsonl
+//!   arl-tangram scenario --replay static.jsonl --against auto.jsonl
+//!   arl-tangram bench-gate --baseline testdata/BENCH_sched.baseline.json
 //!   arl-tangram serve --artifacts artifacts
 
 use arl_tangram::action::TaskId;
+use arl_tangram::autoscale::{AutoscaleCfg, PolicyKind};
 use arl_tangram::config::{BackendKind, ExperimentCfg};
 use arl_tangram::coordinator::{run, Backend};
+use arl_tangram::metrics::Metrics;
 use arl_tangram::rollout::workloads::{Catalog, Workload, WorkloadKind};
 use arl_tangram::runtime::{PjrtEngine, RewardModel};
 use arl_tangram::scenario::{
-    build_backend, builtin_packs, pack_by_name, read_trace_file, replay_trace, run_scenario,
-    run_scenario_tangram, summary_json, write_trace_file, ScenarioSpec,
+    ab_compare, build_backend, builtin_packs, pack_by_name, read_trace_file, replay_trace,
+    run_scenario, run_scenario_tangram, summary_json, write_trace_file, ScenarioSpec,
 };
 use arl_tangram::util::cli::Args;
 use arl_tangram::util::logging;
@@ -41,13 +51,16 @@ fn main() {
     let code = match sub.as_str() {
         "run" => cmd_run(argv),
         "scenario" => cmd_scenario(argv),
+        "bench-gate" => cmd_bench_gate(argv),
         "serve" => cmd_serve(argv),
         "version" => {
             println!("arl-tangram {}", arl_tangram::crate_version());
             0
         }
         other => {
-            eprintln!("unknown subcommand '{other}' (expected: run | scenario | serve | version)");
+            eprintln!(
+                "unknown subcommand '{other}' (expected: run | scenario | bench-gate | serve | version)"
+            );
             2
         }
     };
@@ -140,6 +153,7 @@ fn cmd_run(argv: Vec<String>) -> i32 {
     for (pool, prov) in backend.provisioned() {
         println!("provisioned {pool:<8}: {prov:9}");
     }
+    print_resource_report(&m, false);
     0
 }
 
@@ -151,8 +165,11 @@ fn cmd_scenario(argv: Vec<String>) -> i32 {
         .opt("seed", "", "override the spec's seed")
         .opt("record", "", "write the decision trace + summary to this JSONL file")
         .opt("replay", "", "re-run a recorded trace file and diff (exit 1 on divergence)")
+        .opt("against", "", "with --replay: A/B-diff the two trace files offline instead")
         .flag("list", "list built-in scenario packs")
         .flag("full-sweep", "tangram only: schedule every pool on every pump (legacy A/B baseline)")
+        .flag("autoscale", "size pools to demand with the elastic autoscaler (embedded in the trace)")
+        .opt("autoscale-policy", "queue", "autoscaler policy: queue | ewma")
         .parse_from(argv)
     {
         Ok(a) => a,
@@ -176,6 +193,15 @@ fn cmd_scenario(argv: Vec<String>) -> i32 {
             );
         }
         return 0;
+    }
+
+    // ---- A/B path (--replay a.jsonl --against b.jsonl) ------------------
+    if !args.str("against").is_empty() {
+        if args.str("replay").is_empty() {
+            eprintln!("--against needs --replay (the A side of the comparison)");
+            return 2;
+        }
+        return cmd_scenario_against(&args.str("replay"), &args.str("against"));
     }
 
     // ---- replay path ----------------------------------------------------
@@ -246,6 +272,16 @@ fn cmd_scenario(argv: Vec<String>) -> i32 {
         if !args.str("seed").is_empty() {
             spec.seed = args.u64("seed");
         }
+        if args.bool("autoscale") {
+            let policy = match PolicyKind::parse(&args.str("autoscale-policy")) {
+                Ok(p) => p,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 2;
+                }
+            };
+            spec.autoscale = Some(AutoscaleCfg { policy, ..AutoscaleCfg::default() });
+        }
         let backend = match BackendKind::parse(&args.str("backend")) {
             Ok(b) => b,
             Err(e) => {
@@ -292,6 +328,7 @@ fn cmd_scenario(argv: Vec<String>) -> i32 {
             t.elapsed().as_secs_f64()
         );
         println!("summary: {}", summary_json(&outcome.metrics));
+        print_resource_report(&outcome.metrics, spec.autoscale.is_some());
         if let Some(s) = sched {
             println!(
                 "scheduler: {} invocations over {} drains across {} pools ({}ns mean decision, {}ns mean drain{})",
@@ -312,6 +349,132 @@ fn cmd_scenario(argv: Vec<String>) -> i32 {
             println!("trace written to {path} (verify with: arl-tangram scenario --replay {path})");
         }
         0
+    }
+}
+
+/// Per-pool resource-hour report (the paper's §6 savings surface).
+fn print_resource_report(m: &Metrics, autoscaled: bool) {
+    for (pool, used, stat) in m.resource_rows() {
+        println!("resource-hours {pool:<10}: {used:10.2} unit-h (static {stat:10.2} unit-h)");
+    }
+    let savings = m.savings_vs_static();
+    println!(
+        "savings_vs_static   : {:9.1}%{}",
+        savings * 100.0,
+        if autoscaled { "" } else { " (static provisioning)" }
+    );
+}
+
+/// Offline A/B diff of two recorded traces: event-stream divergence check
+/// plus the per-pool ACT/resource-hour delta table. Exit 0 only when the
+/// traces are byte-identical — a non-zero exit is the "these schedulers
+/// behave differently" signal for scripts and CI.
+fn cmd_scenario_against(path_a: &str, path_b: &str) -> i32 {
+    let (a, b) = match (read_trace_file(path_a), read_trace_file(path_b)) {
+        (Ok(a), Ok(b)) => (a, b),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("A/B error: {e}");
+            return 2;
+        }
+    };
+    println!(
+        "A: '{}' on {} ({} events) | B: '{}' on {} ({} events)",
+        a.spec.name,
+        a.backend.name(),
+        a.events.len(),
+        b.spec.name,
+        b.backend.name(),
+        b.events.len()
+    );
+    let report = ab_compare(&a, &b);
+    let fmt_delta = |d: Option<f64>| match d {
+        Some(d) => format!("{:+7.1}%", d * 100.0),
+        None => "      -".to_string(),
+    };
+    println!(
+        "{:<10} {:>8} {:>8} {:>11} {:>11} {:>8} {:>11} {:>11} {:>8}",
+        "pool", "acts A", "acts B", "ACT A (s)", "ACT B (s)", "dACT", "unit-h A", "unit-h B",
+        "dRES"
+    );
+    for r in &report.rows {
+        println!(
+            "{:<10} {:>8} {:>8} {:>11.2} {:>11.2} {:>8} {:>11.2} {:>11.2} {:>8}",
+            r.pool,
+            r.a.actions,
+            r.b.actions,
+            r.a.mean_act_secs,
+            r.b.mean_act_secs,
+            fmt_delta(r.act_delta()),
+            r.a.unit_hours,
+            r.b.unit_hours,
+            fmt_delta(r.hours_delta()),
+        );
+    }
+    if report.identical {
+        println!("traces are byte-identical");
+        return 0;
+    }
+    if let Some(d) = &report.summary_diff {
+        eprintln!("summary diverges: {d}");
+    }
+    for d in &report.divergences {
+        eprintln!("  {d}");
+    }
+    eprintln!("TRACES DIVERGE (expected for an A/B of different schedulers)");
+    1
+}
+
+/// CI perf ratchet: compare a fresh BENCH_sched.json against the committed
+/// baseline; exit 1 on regression, 2 on unreadable/malformed input.
+fn cmd_bench_gate(argv: Vec<String>) -> i32 {
+    let args = match Args::new("gate BENCH_sched.json against a committed baseline")
+        .opt("baseline", "testdata/BENCH_sched.baseline.json", "committed baseline report")
+        .opt("fresh", "BENCH_sched.json", "freshly generated report")
+        .opt("tolerance", "0.10", "allowed relative loss of the dirty-vs-sweep ratio")
+        .parse_from(argv)
+    {
+        Ok(a) => a,
+        Err(usage) => {
+            eprintln!("{usage}");
+            return 2;
+        }
+    };
+    let tolerance = match args.str("tolerance").parse::<f64>() {
+        Ok(t) if (0.0..1.0).contains(&t) => t,
+        _ => {
+            eprintln!("--tolerance must be a number in [0, 1)");
+            return 2;
+        }
+    };
+    let read = |path: &str| {
+        std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))
+    };
+    let (base, fresh) = match (read(&args.str("baseline")), read(&args.str("fresh"))) {
+        (Ok(b), Ok(f)) => (b, f),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("bench-gate: {e}");
+            return 2;
+        }
+    };
+    match arl_tangram::bench::sched_bench_gate(&base, &fresh, tolerance) {
+        Ok(report) => {
+            for line in &report.lines {
+                println!("{line}");
+            }
+            if report.passed() {
+                println!("bench gate OK ({:.0}% tolerance)", tolerance * 100.0);
+                0
+            } else {
+                for f in &report.failures {
+                    eprintln!("BENCH REGRESSION: {f}");
+                }
+                1
+            }
+        }
+        Err(e) => {
+            eprintln!("bench-gate: {e}");
+            2
+        }
     }
 }
 

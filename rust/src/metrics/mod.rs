@@ -97,6 +97,31 @@ pub struct UtilSample {
     pub value: f64,
 }
 
+/// A provisioned-capacity change point: pool `pool` holds `units` from `at`
+/// until its next record. The driver emits one per pool at run start and one
+/// per autoscaler billing point (scale-up decisions bill from the decision
+/// instant — capacity costs money while it warms — and every applied resize
+/// records the units actually reached).
+#[derive(Debug, Clone)]
+pub struct ProvisionRecord {
+    pub at: SimTime,
+    pub pool: String,
+    pub units: u64,
+}
+
+/// Step-integrate a provision point series to `end`: each point's units
+/// hold until the next point (or `end`). Unit-seconds. The single billing
+/// convention shared by the in-run accounting and the offline `--against`
+/// trace comparison.
+pub fn integrate_unit_secs(points: &[(SimTime, u64)], end: SimTime) -> f64 {
+    let mut secs = 0.0;
+    for (i, &(t0, units)) in points.iter().enumerate() {
+        let until = points.get(i + 1).map_or(end, |&(t1, _)| t1);
+        secs += units as f64 * until.saturating_sub(t0).secs_f64();
+    }
+    secs
+}
+
 /// Collector for one experiment run.
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -104,6 +129,7 @@ pub struct Metrics {
     pub trajectories: Vec<TrajRecord>,
     pub steps: Vec<StepRecord>,
     pub util: Vec<UtilSample>,
+    pub provision: Vec<ProvisionRecord>,
 }
 
 impl Metrics {
@@ -216,6 +242,81 @@ impl Metrics {
             .collect::<Vec<_>>())
     }
 
+    /// Last instant anything happened (the resource-hour integration bound).
+    pub fn run_end(&self) -> SimTime {
+        let mut end = SimTime::ZERO;
+        for a in &self.actions {
+            end = end.max(a.finished);
+        }
+        for t in &self.trajectories {
+            end = end.max(t.finished);
+        }
+        for u in &self.util {
+            end = end.max(u.at);
+        }
+        for p in &self.provision {
+            end = end.max(p.at);
+        }
+        end
+    }
+
+    /// Resource-hour accounting for one pool: integrate the provision step
+    /// function over the run. Returns `(used, static)` unit-hours, where
+    /// *static* is what a peak-provisioned deployment would have paid over
+    /// the same span — the paper's savings denominator.
+    pub fn pool_unit_hours(&self, pool: &str) -> (f64, f64) {
+        self.pool_unit_hours_to(pool, self.run_end())
+    }
+
+    fn pool_unit_hours_to(&self, pool: &str, end: SimTime) -> (f64, f64) {
+        let points: Vec<(SimTime, u64)> = self
+            .provision
+            .iter()
+            .filter(|r| r.pool == pool)
+            .map(|r| (r.at, r.units))
+            .collect();
+        let Some(&(first, _)) = points.first() else {
+            return (0.0, 0.0);
+        };
+        let peak = points.iter().map(|&(_, u)| u).max().unwrap_or(0);
+        let used_secs = integrate_unit_secs(&points, end);
+        let static_secs = peak as f64 * end.saturating_sub(first).secs_f64();
+        (used_secs / 3600.0, static_secs / 3600.0)
+    }
+
+    /// Per-pool resource-hour rows, sorted by pool name:
+    /// `(pool, used unit-hours, static unit-hours)`. The run-end scan
+    /// happens once, not per pool.
+    pub fn resource_rows(&self) -> Vec<(String, f64, f64)> {
+        let end = self.run_end();
+        let mut pools: Vec<String> = self.provision.iter().map(|r| r.pool.clone()).collect();
+        pools.sort();
+        pools.dedup();
+        pools
+            .into_iter()
+            .map(|p| {
+                let (used, stat) = self.pool_unit_hours_to(&p, end);
+                (p, used, stat)
+            })
+            .collect()
+    }
+
+    /// Aggregate external-resource savings vs a static peak-provisioned
+    /// deployment (the paper's headline §6 metric; 0.712 ⇒ 71.2%). Pools
+    /// are weighted by their static unit-hour share. 0 when nothing was
+    /// ever resized — a static run pays the static bill by definition.
+    pub fn savings_vs_static(&self) -> f64 {
+        let (mut used, mut stat) = (0.0, 0.0);
+        for (_, u, s) in self.resource_rows() {
+            used += u;
+            stat += s;
+        }
+        if stat <= 0.0 {
+            return 0.0;
+        }
+        1.0 - used / stat
+    }
+
     pub fn failed_actions(&self) -> usize {
         self.actions.iter().filter(|a| a.failed).count()
     }
@@ -275,8 +376,17 @@ impl Metrics {
                 ("value", Json::num(u.value)),
             ])
         }));
+        let provision = Json::arr(self.provision.iter().map(|p| {
+            Json::obj(vec![
+                ("at", ns(p.at.0)),
+                ("pool", Json::str(p.pool.clone())),
+                ("units", ns(p.units)),
+            ])
+        }));
         Json::obj(vec![
             ("actions", actions),
+            ("provision", provision),
+            ("savings_vs_static", Json::num(self.savings_vs_static())),
             ("steps", steps),
             ("trajectories", trajectories),
             ("util", util),
@@ -386,6 +496,55 @@ mod tests {
         );
         assert_eq!(j.get("steps").unwrap().as_arr().unwrap().len(), 1);
         assert_eq!(j.get("util").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    fn prov(at_secs: u64, pool: &str, units: u64) -> ProvisionRecord {
+        ProvisionRecord {
+            at: SimTime(at_secs * 1_000_000_000),
+            pool: pool.into(),
+            units,
+        }
+    }
+
+    #[test]
+    fn resource_hours_integrate_the_step_function() {
+        let mut m = Metrics::new();
+        // run spans 0..3600s (one action pins the end of the run)
+        m.actions.push(rec(1, 0, 1, 3600, ActionKind::EnvExec));
+        // 100 units for 1800s, then 25 units for the remaining 1800s
+        m.provision.push(prov(0, "cpu_cores", 100));
+        m.provision.push(prov(1800, "cpu_cores", 25));
+        let (used, stat) = m.pool_unit_hours("cpu_cores");
+        assert!((used - (100.0 * 0.5 + 25.0 * 0.5)).abs() < 1e-9, "used {used}");
+        assert!((stat - 100.0).abs() < 1e-9, "static {stat}");
+        assert!((m.savings_vs_static() - 0.375).abs() < 1e-9);
+    }
+
+    #[test]
+    fn static_provision_reports_zero_savings() {
+        let mut m = Metrics::new();
+        m.actions.push(rec(1, 0, 1, 100, ActionKind::EnvExec));
+        m.provision.push(prov(0, "cpu_cores", 64));
+        m.provision.push(prov(0, "gpus", 16));
+        assert!(m.savings_vs_static().abs() < 1e-12);
+        let rows = m.resource_rows();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].0, "cpu_cores"); // sorted
+        assert_eq!(rows[1].0, "gpus");
+        // no provision records at all → defined zero, not NaN
+        assert_eq!(Metrics::new().savings_vs_static(), 0.0);
+    }
+
+    #[test]
+    fn savings_weight_pools_by_static_share() {
+        let mut m = Metrics::new();
+        m.actions.push(rec(1, 0, 1, 100, ActionKind::EnvExec));
+        m.provision.push(prov(0, "cpu_cores", 90));
+        m.provision.push(prov(0, "api_lanes", 10));
+        // halve the big pool halfway through
+        m.provision.push(prov(50, "cpu_cores", 45));
+        // aggregate: used = 90*.5 + 45*.5 + 10 = 77.5 of 100 static
+        assert!((m.savings_vs_static() - 0.225).abs() < 1e-9);
     }
 
     #[test]

@@ -31,13 +31,15 @@ pub mod trace;
 
 pub use packs::{builtin_packs, pack_by_name};
 pub use replay::{
-    build_backend, diff_summaries, diff_traces, parse_trace_file, read_trace_file, replay_trace,
-    run_scenario, run_scenario_tangram, summary_json, trace_file_contents, write_trace_file,
-    RecordedTrace, ReplayReport, ScenarioOutcome, SchedStats,
+    ab_compare, build_backend, diff_summaries, diff_traces, parse_trace_file, read_trace_file,
+    replay_trace, run_scenario, run_scenario_tangram, summary_json, trace_file_contents,
+    trace_pool_stats, write_trace_file, AbReport, AbRow, RecordedTrace, ReplayReport,
+    ScenarioOutcome, SchedStats, TracePoolStats,
 };
 pub use trace::{TraceEvent, TraceKind, TraceRecorder};
 
 use crate::action::TaskId;
+use crate::autoscale::AutoscaleCfg;
 use crate::config::BackendKind;
 use crate::coordinator::RunCfg;
 use crate::rollout::workloads::{CatalogCfg, Workload, WorkloadKind};
@@ -136,6 +138,9 @@ pub struct ScenarioSpec {
     pub catalog: CatalogCfg,
     /// Fault-injection timeline.
     pub events: Vec<TimedEvent>,
+    /// Elastic pool autoscaler (None = static provisioning). Embedded in
+    /// the spec so recorded traces replay with the same scaling decisions.
+    pub autoscale: Option<AutoscaleCfg>,
 }
 
 fn workload_kind_parse(s: &str) -> Result<WorkloadKind> {
@@ -232,6 +237,9 @@ impl ScenarioSpec {
         if self.catalog.cpu_nodes == 0 || self.catalog.gpu_nodes == 0 {
             bail!("scenario '{}': cluster must have nodes", self.name);
         }
+        if let Some(asc) = &self.autoscale {
+            asc.validate()?;
+        }
         for te in &self.events {
             match te.event {
                 ScenarioEvent::ApiLimitScale { factor } => {
@@ -251,7 +259,7 @@ impl ScenarioSpec {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("name", Json::str(self.name.clone())),
             (
                 "workloads",
@@ -273,7 +281,11 @@ impl ScenarioSpec {
                     Json::Obj(o)
                 })),
             ),
-        ])
+        ];
+        if let Some(asc) = &self.autoscale {
+            pairs.push(("autoscale", asc.to_json()));
+        }
+        Json::obj(pairs)
     }
 
     pub fn from_json_value(j: &Json) -> Result<Self> {
@@ -287,6 +299,7 @@ impl ScenarioSpec {
             arrival_spread: SimDur::ZERO,
             catalog: CatalogCfg::default(),
             events: vec![],
+            autoscale: None,
         };
         for (k, v) in obj {
             match k.as_str() {
@@ -327,6 +340,7 @@ impl ScenarioSpec {
                     spec.arrival_spread = SimDur::from_secs_f64(s);
                 }
                 "catalog" => spec.catalog = catalog_from_json(v)?,
+                "autoscale" => spec.autoscale = Some(AutoscaleCfg::from_json(v)?),
                 "events" => {
                     spec.events = v
                         .as_arr()
@@ -409,6 +423,24 @@ mod tests {
             let same = all.iter().find(|a| a.task == w.task).unwrap();
             assert_eq!(same.kind, w.kind, "task ids must identify the same workload");
         }
+    }
+
+    #[test]
+    fn autoscale_spec_round_trips() {
+        let mut spec = pack_by_name("steady-mix").unwrap();
+        spec.autoscale = Some(crate::autoscale::AutoscaleCfg {
+            min_factor: 0.25,
+            ..crate::autoscale::AutoscaleCfg::default()
+        });
+        let j = spec.to_json().to_string();
+        let back = ScenarioSpec::from_json(&j).unwrap();
+        assert_eq!(back.to_json().to_string(), j);
+        assert_eq!(back.autoscale, spec.autoscale);
+        // invalid autoscaler configs are rejected at spec load
+        assert!(ScenarioSpec::from_json(
+            r#"{"name":"x","workloads":["coding"],"autoscale":{"min_factor":0.001}}"#
+        )
+        .is_err());
     }
 
     #[test]

@@ -39,6 +39,7 @@ pub fn builtin_packs() -> Vec<ScenarioSpec> {
             arrival_spread: SimDur::ZERO,
             catalog: small_catalog(),
             events: vec![],
+            autoscale: None,
         },
         // Thundering-herd arrivals plus a mid-burst provider flap: the
         // §2.3 burstiness story with the provider fighting back.
@@ -54,6 +55,7 @@ pub fn builtin_packs() -> Vec<ScenarioSpec> {
                 at(20, ScenarioEvent::ApiLimitScale { factor: 0.5 }),
                 at(120, ScenarioEvent::ApiLimitScale { factor: 1.0 }),
             ],
+            autoscale: None,
         },
         // Repeated deep rate-limit flaps on the DeepSearch path: quota and
         // concurrency collapse to 5% of baseline, twice, so the admission
@@ -72,6 +74,7 @@ pub fn builtin_packs() -> Vec<ScenarioSpec> {
                 at(90, ScenarioEvent::ApiLimitScale { factor: 0.05 }),
                 at(150, ScenarioEvent::ApiLimitScale { factor: 1.0 }),
             ],
+            autoscale: None,
         },
         // Restore storms: warm (service, DoP) caches are dropped every few
         // tens of seconds across the reward-burst window, so teacher and
@@ -96,6 +99,7 @@ pub fn builtin_packs() -> Vec<ScenarioSpec> {
                 at(240, ScenarioEvent::GpuCacheFlush),
                 at(300, ScenarioEvent::GpuCacheFlush),
             ],
+            autoscale: None,
         },
         // Mid-run CPU pool squeeze: half of every node's cores cordon off
         // at t=20s and return at t=100s (elastic-pool resizing; Mopd rides
@@ -112,6 +116,73 @@ pub fn builtin_packs() -> Vec<ScenarioSpec> {
                 at(20, ScenarioEvent::CpuPoolScale { factor: 0.5 }),
                 at(100, ScenarioEvent::CpuPoolScale { factor: 1.0 }),
             ],
+            autoscale: None,
+        },
+        // Serverless cold-start storm: two RL steps of coding + MOPD with
+        // repeated warm-cache drops, so GPU restores keep going cold while
+        // the CPU side cycles between rollout bursts and idle training
+        // gaps. This is the autoscaler's A/B reference pack: run it with
+        // `--autoscale` and the inter-step gaps plus the idle API lanes are
+        // where the resource-hour savings live, while the storm exercises
+        // scale-up latency against cold capacity.
+        ScenarioSpec {
+            name: "coldstart-storm".into(),
+            workloads: vec![WorkloadKind::Coding, WorkloadKind::Mopd],
+            batch: 16,
+            steps: 2,
+            seed: 606,
+            arrival_spread: SimDur::from_secs(10),
+            catalog: small_catalog(),
+            events: vec![
+                at(15, ScenarioEvent::GpuCacheFlush),
+                at(45, ScenarioEvent::GpuCacheFlush),
+                at(75, ScenarioEvent::GpuCacheFlush),
+                at(150, ScenarioEvent::GpuCacheFlush),
+                at(300, ScenarioEvent::GpuCacheFlush),
+            ],
+            autoscale: None,
+        },
+        // Teacher-count sweep: MOPD against twice the teacher fleet on a
+        // pool that cannot pin them all resident — multiplexing pressure,
+        // restore churn, and scale-down safety on the long reward tail.
+        ScenarioSpec {
+            name: "teacher-sweep".into(),
+            workloads: vec![WorkloadKind::Mopd],
+            batch: 20,
+            steps: 1,
+            seed: 707,
+            arrival_spread: SimDur::from_secs(5),
+            catalog: CatalogCfg {
+                cpu_nodes: 2,
+                cores_per_node: 64,
+                gpu_nodes: 3,
+                n_teachers: 8,
+                ..CatalogCfg::default()
+            },
+            events: vec![at(30, ScenarioEvent::GpuCacheFlush)],
+            autoscale: None,
+        },
+        // Multi-step flap+squeeze composition: API rate-limit flaps and CPU
+        // pool squeezes interleave across two RL steps, so admission rides
+        // quota windows while the cordon machinery shrinks and restores the
+        // environment pool mid-rollout.
+        ScenarioSpec {
+            name: "flap-squeeze".into(),
+            workloads: vec![WorkloadKind::Coding, WorkloadKind::DeepSearch],
+            batch: 12,
+            steps: 2,
+            seed: 808,
+            arrival_spread: SimDur::from_secs(5),
+            catalog: small_catalog(),
+            events: vec![
+                at(15, ScenarioEvent::ApiLimitScale { factor: 0.3 }),
+                at(40, ScenarioEvent::CpuPoolScale { factor: 0.5 }),
+                at(70, ScenarioEvent::ApiLimitScale { factor: 1.0 }),
+                at(110, ScenarioEvent::CpuPoolScale { factor: 1.0 }),
+                at(180, ScenarioEvent::ApiLimitScale { factor: 0.2 }),
+                at(260, ScenarioEvent::ApiLimitScale { factor: 1.0 }),
+            ],
+            autoscale: None,
         },
     ]
 }
@@ -130,8 +201,11 @@ mod tests {
     #[test]
     fn lookup_works() {
         assert!(pack_by_name("api-flap").is_some());
+        assert!(pack_by_name("coldstart-storm").is_some());
+        assert!(pack_by_name("teacher-sweep").is_some());
+        assert!(pack_by_name("flap-squeeze").is_some());
         assert!(pack_by_name("nope").is_none());
-        assert!(builtin_packs().len() >= 5);
+        assert!(builtin_packs().len() >= 8);
     }
 
     #[test]

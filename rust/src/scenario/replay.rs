@@ -15,16 +15,20 @@
 //! event. Any divergence means the scheduler is nondeterministic or its
 //! behaviour drifted — both are release blockers for scale/perf PRs.
 
-use super::trace::{TraceEvent, TraceRecorder};
+use super::trace::{TraceEvent, TraceKind, TraceRecorder};
 use super::ScenarioSpec;
+use crate::autoscale::Autoscaler;
 use crate::baselines::{BaselineBackend, ServerlessCfg};
 use crate::config::{BackendKind, ExperimentCfg};
 use crate::coordinator::{run_traced, Backend, TangramBackend};
 use crate::metrics::Metrics;
 use crate::rollout::workloads::{Catalog, CatalogCfg};
+use crate::sim::SimTime;
 use crate::util::error::Result;
 use crate::util::json::Json;
 use crate::{bail, err};
+use std::collections::BTreeMap;
+use std::collections::HashMap;
 
 /// Metrics + decision trace of one scenario run.
 pub struct ScenarioOutcome {
@@ -71,7 +75,10 @@ pub fn build_backend(
     }
 }
 
-/// Run one scenario on one backend, recording the decision trace.
+/// Run one scenario on one backend, recording the decision trace. When the
+/// spec embeds an autoscale config, the elastic pool autoscaler runs too
+/// (on inelastic baselines it observes nothing and never resizes — that
+/// asymmetry is the paper's point).
 pub fn run_scenario(spec: &ScenarioSpec, backend: BackendKind) -> Result<ScenarioOutcome> {
     spec.validate()?;
     let wls = spec.workloads_for(backend);
@@ -85,8 +92,17 @@ pub fn run_scenario(spec: &ScenarioSpec, backend: BackendKind) -> Result<Scenari
     let cat = Catalog::build(&spec.catalog);
     let mut be = build_backend(&spec.catalog, &cat, backend);
     let mut rec = TraceRecorder::new();
+    let mut asc = spec.autoscale.clone().map(Autoscaler::new);
     let cfg = spec.run_cfg();
-    let metrics = run_traced(be.as_mut(), &cat, &wls, &cfg, &spec.events, Some(&mut rec));
+    let metrics = run_traced(
+        be.as_mut(),
+        &cat,
+        &wls,
+        &cfg,
+        &spec.events,
+        Some(&mut rec),
+        asc.as_mut(),
+    );
     Ok(ScenarioOutcome { metrics, events: rec.events })
 }
 
@@ -125,8 +141,17 @@ pub fn run_scenario_tangram(
     tcfg.full_sweep = full_sweep;
     let mut be = TangramBackend::new(&cat, tcfg);
     let mut rec = TraceRecorder::new();
+    let mut asc = spec.autoscale.clone().map(Autoscaler::new);
     let cfg = spec.run_cfg();
-    let metrics = run_traced(&mut be, &cat, &wls, &cfg, &spec.events, Some(&mut rec));
+    let metrics = run_traced(
+        &mut be,
+        &cat,
+        &wls,
+        &cfg,
+        &spec.events,
+        Some(&mut rec),
+        asc.as_mut(),
+    );
     let stats = SchedStats {
         invocations: be.sched_invocations,
         drain_calls: be.drain_calls,
@@ -143,6 +168,12 @@ pub fn run_scenario_tangram(
 pub fn summary_json(m: &Metrics) -> Json {
     let full = m.to_json().to_string();
     let (exec, queue, ovh) = m.act_breakdown();
+    let hours = Json::obj(
+        m.resource_rows()
+            .iter()
+            .map(|(pool, used, _)| (pool.as_str(), Json::num(*used)))
+            .collect(),
+    );
     Json::obj(vec![
         ("actions", Json::num(m.actions.len() as f64)),
         ("failed_actions", Json::num(m.failed_actions() as f64)),
@@ -155,6 +186,8 @@ pub fn summary_json(m: &Metrics) -> Json {
         ("queue_secs", Json::num(queue)),
         ("overhead_secs", Json::num(ovh)),
         ("mean_step_secs", Json::num(m.mean_step_dur())),
+        ("resource_unit_hours", hours),
+        ("savings_vs_static", Json::num(m.savings_vs_static())),
         ("metrics_fnv64", Json::str(format!("{:016x}", fnv1a64(full.as_bytes())))),
     ])
 }
@@ -308,6 +341,131 @@ pub fn replay_trace(recorded: &RecordedTrace) -> Result<ReplayReport> {
         fresh_summary,
         replayed_events: outcome.events.len(),
     })
+}
+
+// ---------------------------------------------------------------------------
+// A/B trace comparison (`--replay a.jsonl --against b.jsonl`)
+// ---------------------------------------------------------------------------
+
+/// Which provision pool an action kind draws from (the A/B table rows).
+fn pool_of_kind(kind: &str) -> &'static str {
+    match kind {
+        "env_exec" | "reward_cpu" => "cpu_cores",
+        "reward_model" => "gpus",
+        "api_call" => "api_lanes",
+        _ => "other",
+    }
+}
+
+/// Per-pool ACT and resource-hour aggregates of one recorded trace.
+#[derive(Debug, Default, Clone)]
+pub struct TracePoolStats {
+    pub actions: usize,
+    pub mean_act_secs: f64,
+    pub unit_hours: f64,
+}
+
+/// One row of the `--against` comparison table.
+#[derive(Debug, Clone)]
+pub struct AbRow {
+    pub pool: String,
+    pub a: TracePoolStats,
+    pub b: TracePoolStats,
+}
+
+impl AbRow {
+    /// Relative delta of B vs A, `None` when A has no signal.
+    fn delta(a: f64, b: f64) -> Option<f64> {
+        if a.abs() < 1e-12 {
+            return None;
+        }
+        Some((b - a) / a)
+    }
+
+    pub fn act_delta(&self) -> Option<f64> {
+        Self::delta(self.a.mean_act_secs, self.b.mean_act_secs)
+    }
+
+    pub fn hours_delta(&self) -> Option<f64> {
+        Self::delta(self.a.unit_hours, self.b.unit_hours)
+    }
+}
+
+/// A/B comparison of two recorded traces.
+pub struct AbReport {
+    /// Byte-identical event streams and summaries (A/B of a no-op change).
+    pub identical: bool,
+    /// First event-stream divergences (capped), for the exit-code path.
+    pub divergences: Vec<String>,
+    pub summary_diff: Option<String>,
+    /// Per-pool ACT / resource-hour table, sorted by pool name.
+    pub rows: Vec<AbRow>,
+}
+
+/// Reduce one trace's event stream to per-pool ACT and resource-hour stats.
+/// ACT is final-completion minus first-submit per action (retries fold into
+/// their action); resource-hours integrate the `provision` billing events
+/// to the last event timestamp.
+pub fn trace_pool_stats(events: &[TraceEvent]) -> BTreeMap<String, TracePoolStats> {
+    let end = events.last().map_or(SimTime::ZERO, |e| e.at);
+    let mut submits: HashMap<u64, (SimTime, &'static str)> = HashMap::new();
+    let mut acts: BTreeMap<&'static str, Vec<f64>> = BTreeMap::new();
+    let mut series: BTreeMap<String, Vec<(SimTime, u64)>> = BTreeMap::new();
+    for e in events {
+        match &e.kind {
+            TraceKind::Submit { action, kind, .. } => {
+                submits.entry(*action).or_insert((e.at, pool_of_kind(kind)));
+            }
+            TraceKind::Complete { action, outcome, .. } if outcome != "retry" => {
+                if let Some((t0, pool)) = submits.remove(action) {
+                    acts.entry(pool).or_default().push(e.at.saturating_sub(t0).secs_f64());
+                }
+            }
+            TraceKind::Provision { pool, units } => {
+                series.entry(pool.clone()).or_default().push((e.at, *units));
+            }
+            _ => {}
+        }
+    }
+    let mut out: BTreeMap<String, TracePoolStats> = BTreeMap::new();
+    for (pool, v) in acts {
+        let st = out.entry(pool.to_string()).or_default();
+        st.actions = v.len();
+        st.mean_act_secs = crate::util::mean(&v);
+    }
+    for (pool, points) in series {
+        // same billing convention as the in-run accounting
+        let unit_secs = crate::metrics::integrate_unit_secs(&points, end);
+        out.entry(pool).or_default().unit_hours = unit_secs / 3600.0;
+    }
+    out
+}
+
+/// Compare two recorded traces event-by-event and build the per-pool
+/// ACT/resource-hour delta table — the A/B harness for autoscaler-on vs
+/// static (or any two scheduler variants). Purely offline: nothing re-runs.
+pub fn ab_compare(a: &RecordedTrace, b: &RecordedTrace) -> AbReport {
+    let divergences = diff_traces(&a.events, &b.events, 5);
+    let summary_diff = diff_summaries(&a.summary, &b.summary);
+    let sa = trace_pool_stats(&a.events);
+    let sb = trace_pool_stats(&b.events);
+    let mut pools: Vec<String> = sa.keys().chain(sb.keys()).cloned().collect();
+    pools.sort();
+    pools.dedup();
+    let rows = pools
+        .into_iter()
+        .map(|pool| AbRow {
+            a: sa.get(&pool).cloned().unwrap_or_default(),
+            b: sb.get(&pool).cloned().unwrap_or_default(),
+            pool,
+        })
+        .collect();
+    AbReport {
+        identical: divergences.is_empty() && summary_diff.is_none(),
+        divergences,
+        summary_diff,
+        rows,
+    }
 }
 
 #[cfg(test)]

@@ -41,6 +41,15 @@ pub enum TraceKind {
     /// A scenario fault was injected; `applied` is false when the backend
     /// has no substrate for it (e.g. a CPU cordon on a GPU-only baseline).
     Inject { index: u64, desc: String, applied: bool },
+    /// A provisioned-capacity billing point: pool `pool` holds (and is paid
+    /// for at) `units` from here until its next `provision` event. Emitted
+    /// per pool at run start and at every autoscaler billing point — the
+    /// `--against` A/B comparison integrates these into resource-hours.
+    Provision { pool: String, units: u64 },
+    /// An autoscaler transition: `phase` is `"decide"` (scale-up chosen,
+    /// capacity billed, cold start begins) or `"apply"` (substrate resized).
+    /// Factors are quantized so the f64 survives the JSON round-trip.
+    Scale { pool: String, phase: String, factor: f64 },
 }
 
 impl TraceKind {
@@ -55,6 +64,8 @@ impl TraceKind {
             TraceKind::Start { .. } => "start",
             TraceKind::Complete { .. } => "complete",
             TraceKind::Inject { .. } => "inject",
+            TraceKind::Provision { .. } => "provision",
+            TraceKind::Scale { .. } => "scale",
         }
     }
 }
@@ -87,6 +98,12 @@ fn get_bool(j: &Json, key: &str) -> Result<bool> {
     j.get(key)
         .and_then(Json::as_bool)
         .ok_or_else(|| err!("trace event missing boolean field '{key}'"))
+}
+
+fn get_f64(j: &Json, key: &str) -> Result<f64> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| err!("trace event missing number field '{key}'"))
 }
 
 impl TraceEvent {
@@ -134,6 +151,15 @@ impl TraceEvent {
                 pairs.push(("index", num(*index)));
                 pairs.push(("desc", Json::str(desc.clone())));
                 pairs.push(("applied", Json::Bool(*applied)));
+            }
+            TraceKind::Provision { pool, units } => {
+                pairs.push(("pool", Json::str(pool.clone())));
+                pairs.push(("units", num(*units)));
+            }
+            TraceKind::Scale { pool, phase, factor } => {
+                pairs.push(("pool", Json::str(pool.clone())));
+                pairs.push(("phase", Json::str(phase.clone())));
+                pairs.push(("factor", Json::num(*factor)));
             }
         }
         Json::obj(pairs)
@@ -183,6 +209,15 @@ impl TraceEvent {
                 index: get_u64(j, "index")?,
                 desc: get_str(j, "desc")?,
                 applied: get_bool(j, "applied")?,
+            },
+            "provision" => TraceKind::Provision {
+                pool: get_str(j, "pool")?,
+                units: get_u64(j, "units")?,
+            },
+            "scale" => TraceKind::Scale {
+                pool: get_str(j, "pool")?,
+                phase: get_str(j, "phase")?,
+                factor: get_f64(j, "factor")?,
             },
             other => bail!("unknown trace event tag '{other}'"),
         };
@@ -271,6 +306,18 @@ mod tests {
             TraceEvent {
                 at: SimTime(200),
                 kind: TraceKind::Inject { index: 0, desc: "api_limit_scale 0.25".into(), applied: true },
+            },
+            TraceEvent {
+                at: SimTime(250),
+                kind: TraceKind::Provision { pool: "cpu_cores".into(), units: 640 },
+            },
+            TraceEvent {
+                at: SimTime(260),
+                kind: TraceKind::Scale {
+                    pool: "cpu_cores".into(),
+                    phase: "decide".into(),
+                    factor: 0.375,
+                },
             },
             TraceEvent {
                 at: SimTime(300),

@@ -1,0 +1,182 @@
+//! Autoscaler system tests: the differential resource-hour/ACT harness on
+//! the cold-start-storm pack, determinism of autoscaled runs, and the
+//! `--against` A/B comparison path.
+//!
+//! The unit-level hysteresis/cold-start behaviour lives in
+//! `src/autoscale/mod.rs`; these tests run the whole driver stack.
+
+use arl_tangram::autoscale::{AutoscaleCfg, PolicyKind};
+use arl_tangram::config::BackendKind;
+use arl_tangram::scenario::{
+    ab_compare, pack_by_name, parse_trace_file, run_scenario, summary_json, trace_file_contents,
+    trace_pool_stats, TraceKind,
+};
+
+/// The A/B pair for one pack: (static outcome, autoscaled outcome).
+fn ab_outcomes(
+    pack: &str,
+) -> (
+    arl_tangram::scenario::ScenarioOutcome,
+    arl_tangram::scenario::ScenarioOutcome,
+    arl_tangram::scenario::ScenarioSpec,
+    arl_tangram::scenario::ScenarioSpec,
+) {
+    let spec = pack_by_name(pack).unwrap();
+    let mut auto_spec = spec.clone();
+    auto_spec.autoscale = Some(AutoscaleCfg::default());
+    let stat = run_scenario(&spec, BackendKind::Tangram).unwrap();
+    let auto = run_scenario(&auto_spec, BackendKind::Tangram).unwrap();
+    (stat, auto, spec, auto_spec)
+}
+
+#[test]
+fn coldstart_storm_saves_resource_hours_at_act_parity() {
+    // The acceptance differential: autoscaling the cold-start-storm pack
+    // must save resource-hours vs the static run while staying within 10%
+    // of its mean ACT, with full completion on both sides.
+    let (stat, auto, spec, _) = ab_outcomes("coldstart-storm");
+    let expected =
+        spec.workloads_for(BackendKind::Tangram).len() * spec.batch * spec.steps as usize;
+    assert_eq!(stat.metrics.trajectories.len(), expected);
+    assert_eq!(auto.metrics.trajectories.len(), expected, "autoscaling lost trajectories");
+    assert_eq!(auto.metrics.failed_actions(), 0, "autoscaling failed actions");
+
+    // a static run never resizes, so it reports zero savings by definition
+    assert!(stat.metrics.savings_vs_static().abs() < 1e-12);
+
+    let savings = auto.metrics.savings_vs_static();
+    assert!(savings > 0.0, "autoscaler saved nothing: {savings}");
+
+    let (a, b) = (stat.metrics.mean_act(), auto.metrics.mean_act());
+    assert!(a > 0.0);
+    let drift = (b - a).abs() / a;
+    assert!(
+        drift <= 0.10,
+        "mean ACT drifted {:.1}% (static {a:.2}s vs autoscaled {b:.2}s)",
+        drift * 100.0
+    );
+}
+
+#[test]
+fn autoscaled_runs_are_deterministic() {
+    let spec = {
+        let mut s = pack_by_name("coldstart-storm").unwrap();
+        s.autoscale = Some(AutoscaleCfg::default());
+        s
+    };
+    let first = run_scenario(&spec, BackendKind::Tangram).unwrap();
+    let second = run_scenario(&spec, BackendKind::Tangram).unwrap();
+    assert_eq!(
+        summary_json(&first.metrics).to_string(),
+        summary_json(&second.metrics).to_string(),
+        "autoscaled summaries must be byte-identical"
+    );
+    assert_eq!(first.events, second.events, "autoscaled traces must be identical");
+    // the autoscaler actually acted: scale events present in the trace
+    let scales = first
+        .events
+        .iter()
+        .filter(|e| matches!(e.kind, TraceKind::Scale { .. }))
+        .count();
+    assert!(scales > 0, "no scale decisions recorded");
+}
+
+#[test]
+fn autoscaled_trace_records_and_replays() {
+    // record → parse → replay must be byte-identical with the autoscale
+    // config embedded in the spec (self-contained trace files)
+    use arl_tangram::scenario::replay_trace;
+    let mut spec = pack_by_name("teacher-sweep").unwrap();
+    spec.autoscale = Some(AutoscaleCfg { policy: PolicyKind::Ewma, ..AutoscaleCfg::default() });
+    let outcome = run_scenario(&spec, BackendKind::Tangram).unwrap();
+    let text = trace_file_contents(&spec, BackendKind::Tangram, &outcome);
+    let recorded = parse_trace_file(&text).unwrap();
+    assert_eq!(recorded.spec.autoscale, spec.autoscale, "autoscale must survive the trace file");
+    let report = replay_trace(&recorded).unwrap();
+    assert!(
+        report.identical,
+        "autoscaled replay diverged: {:?} {:?}",
+        report.summary_diff, report.trace_divergences
+    );
+}
+
+#[test]
+fn ab_compare_quantifies_the_savings() {
+    let (stat, auto, spec, auto_spec) = ab_outcomes("coldstart-storm");
+    let a = parse_trace_file(&trace_file_contents(&spec, BackendKind::Tangram, &stat)).unwrap();
+    let b =
+        parse_trace_file(&trace_file_contents(&auto_spec, BackendKind::Tangram, &auto)).unwrap();
+    let report = ab_compare(&a, &b);
+    assert!(!report.identical, "autoscaled vs static must diverge");
+    assert!(!report.divergences.is_empty());
+    assert!(!report.rows.is_empty());
+    let cpu = report.rows.iter().find(|r| r.pool == "cpu_cores").unwrap();
+    assert!(cpu.a.actions > 0);
+    assert!(
+        cpu.b.unit_hours < cpu.a.unit_hours,
+        "autoscaled cpu unit-hours must shrink: {} !< {}",
+        cpu.b.unit_hours,
+        cpu.a.unit_hours
+    );
+    // self-comparison is the identity
+    let same = ab_compare(&a, &a);
+    assert!(same.identical);
+    assert!(same.divergences.is_empty());
+}
+
+#[test]
+fn trace_pool_stats_integrates_provision_series() {
+    // hand-built stream: 100 units for 100s, then 50 units for 100s
+    use arl_tangram::scenario::TraceEvent;
+    use arl_tangram::sim::SimTime;
+    let ns = 1_000_000_000u64;
+    let events = vec![
+        TraceEvent {
+            at: SimTime(0),
+            kind: TraceKind::Provision { pool: "cpu_cores".into(), units: 100 },
+        },
+        TraceEvent {
+            at: SimTime(5 * ns),
+            kind: TraceKind::Submit {
+                action: 1,
+                traj: 1,
+                kind: "env_exec".into(),
+                queue_depth: 1,
+            },
+        },
+        TraceEvent {
+            at: SimTime(15 * ns),
+            kind: TraceKind::Complete { action: 1, outcome: "done".into(), retries: 0 },
+        },
+        TraceEvent {
+            at: SimTime(100 * ns),
+            kind: TraceKind::Provision { pool: "cpu_cores".into(), units: 50 },
+        },
+        TraceEvent {
+            at: SimTime(200 * ns),
+            kind: TraceKind::TrajEnd { traj: 1, failed: false, restarts: 0 },
+        },
+    ];
+    let stats = trace_pool_stats(&events);
+    let cpu = &stats["cpu_cores"];
+    assert_eq!(cpu.actions, 1);
+    assert!((cpu.mean_act_secs - 10.0).abs() < 1e-9);
+    // 100u × 100s + 50u × 100s = 15000 unit-s
+    assert!((cpu.unit_hours - 15000.0 / 3600.0).abs() < 1e-9, "{}", cpu.unit_hours);
+}
+
+#[test]
+fn inelastic_baselines_ignore_the_autoscaler() {
+    // serverless supports the pack but exposes no resizable class: the run
+    // must complete with zero scale events and zero savings
+    let mut spec = pack_by_name("coldstart-storm").unwrap();
+    spec.autoscale = Some(AutoscaleCfg::default());
+    let outcome = run_scenario(&spec, BackendKind::Serverless).unwrap();
+    let scales = outcome
+        .events
+        .iter()
+        .filter(|e| matches!(e.kind, TraceKind::Scale { .. }))
+        .count();
+    assert_eq!(scales, 0, "inelastic baseline must never scale");
+    assert!(outcome.metrics.savings_vs_static().abs() < 1e-12);
+}

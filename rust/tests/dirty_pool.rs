@@ -134,7 +134,7 @@ fn cordoned_node_recovers_on_restore() {
         at(30, ScenarioEvent::CpuPoolScale { factor: 0.1 }),
         at(2_000, ScenarioEvent::CpuPoolScale { factor: 1.0 }),
     ];
-    let m = run_traced(&mut be, &cat, &[wl], &cfg, &events, None);
+    let m = run_traced(&mut be, &cat, &[wl], &cfg, &events, None, None);
     assert_eq!(m.trajectories.len(), 4, "trajectories lost under cordon");
     assert_eq!(m.failed_actions(), 0);
     assert_eq!(be.cpu.free_cores(), 16, "cores leaked across the cordon");

@@ -18,6 +18,15 @@ use arl_tangram::scenario::{builtin_packs, run_scenario, trace_file_contents};
 use std::path::PathBuf;
 
 fn golden_dir() -> PathBuf {
+    // ARL_GOLDEN_DIR redirects the suite to another tree — the CI staleness
+    // guard blesses into a temp dir and `diff -r`s it against the committed
+    // rust/testdata/golden/, so an uncommitted behaviour change fails even
+    // when a pack has no golden file yet.
+    if let Ok(dir) = std::env::var("ARL_GOLDEN_DIR") {
+        if !dir.is_empty() {
+            return PathBuf::from(dir);
+        }
+    }
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("testdata").join("golden")
 }
 
@@ -81,9 +90,9 @@ fn every_pack_and_backend_replays_byte_identical_against_golden() {
             blessed.join("\n  ")
         );
     }
-    // acceptance floor from the conformance suite: 5 packs × ≥2 backends
+    // acceptance floor from the conformance suite: 8 packs × their backends
     assert!(
-        checked + blessed.len() >= 12,
+        checked + blessed.len() >= 28,
         "pack×backend golden coverage shrank: {} combos",
         checked + blessed.len()
     );

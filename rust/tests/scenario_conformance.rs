@@ -74,15 +74,16 @@ fn every_pack_replays_byte_identically_on_every_backend() {
             spec.name
         );
     }
-    // acceptance floor: ≥3 packs × all 4 execution backends
+    // acceptance floor: ≥4 packs × all 4 execution backends (the PR-3 packs
+    // raised every backend's coverage)
     for backend in ["tangram", "k8s", "static", "serverless"] {
         assert!(
-            per_backend.get(backend).copied().unwrap_or(0) >= 3,
+            per_backend.get(backend).copied().unwrap_or(0) >= 4,
             "backend {backend} covered by {:?} pack-combos",
             per_backend.get(backend)
         );
     }
-    assert!(combos >= 12, "only {combos} pack×backend combos ran");
+    assert!(combos >= 28, "only {combos} pack×backend combos ran");
 }
 
 #[test]
@@ -175,4 +176,76 @@ fn spec_files_round_trip_through_json() {
         let back = ScenarioSpec::from_json(&text).unwrap();
         assert_eq!(back.to_json().to_string(), text);
     }
+}
+
+#[test]
+fn coldstart_storm_flushes_bite_and_multi_step_completes() {
+    // Two RL steps with cache-flush storms: tangram must complete every
+    // trajectory of both steps and the flushes must raise GPU restore
+    // overhead vs the same spec without them.
+    use arl_tangram::action::ActionKind;
+    let storm = pack_by_name("coldstart-storm").unwrap();
+    assert_eq!(storm.steps, 2, "coldstart-storm is a multi-step pack");
+    let mut calm = storm.clone();
+    calm.events.clear();
+    let with = run_scenario(&storm, BackendKind::Tangram).unwrap();
+    let without = run_scenario(&calm, BackendKind::Tangram).unwrap();
+    assert_eq!(
+        with.metrics.trajectories.len(),
+        expected_trajectories(&storm, BackendKind::Tangram)
+    );
+    let restore = |m: &arl_tangram::metrics::Metrics| -> f64 {
+        m.actions
+            .iter()
+            .filter(|a| a.kind == ActionKind::RewardModel)
+            .map(|a| a.overhead.secs_f64())
+            .sum()
+    };
+    assert!(
+        restore(&with.metrics) > restore(&without.metrics),
+        "cold-start storm must raise restore overhead: {} !> {}",
+        restore(&with.metrics),
+        restore(&without.metrics)
+    );
+}
+
+#[test]
+fn teacher_sweep_multiplexes_the_larger_fleet() {
+    // Eight teachers on a pool that cannot pin them all resident: tangram
+    // must still complete, and the trace must touch every teacher service.
+    let spec = pack_by_name("teacher-sweep").unwrap();
+    assert_eq!(spec.catalog.n_teachers, 8);
+    let outcome = run_scenario(&spec, BackendKind::Tangram).unwrap();
+    assert_eq!(
+        outcome.metrics.trajectories.len(),
+        expected_trajectories(&spec, BackendKind::Tangram)
+    );
+    let rm_actions = outcome
+        .metrics
+        .actions
+        .iter()
+        .filter(|a| a.kind == arl_tangram::action::ActionKind::RewardModel)
+        .count();
+    assert!(rm_actions >= spec.batch, "teacher fleet barely exercised: {rm_actions}");
+}
+
+#[test]
+fn flap_squeeze_applies_every_injection_on_tangram() {
+    let spec = pack_by_name("flap-squeeze").unwrap();
+    assert_eq!(spec.steps, 2, "flap-squeeze composes faults across steps");
+    let outcome = run_scenario(&spec, BackendKind::Tangram).unwrap();
+    let applied: Vec<bool> = outcome
+        .events
+        .iter()
+        .filter_map(|e| match &e.kind {
+            TraceKind::Inject { applied, .. } => Some(*applied),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(applied.len(), spec.events.len());
+    assert!(applied.iter().all(|&a| a), "tangram must honor flaps and squeezes");
+    assert_eq!(
+        outcome.metrics.trajectories.len(),
+        expected_trajectories(&spec, BackendKind::Tangram)
+    );
 }
