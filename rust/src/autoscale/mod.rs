@@ -2,23 +2,34 @@
 //!
 //! The paper's headline efficiency claim (§1, §6: up to 71.2% external-
 //! resource savings) comes from *elasticity* — growing and shrinking CPU
-//! nodes, serverless containers, and API quota lanes around rollout demand
-//! rather than provisioning for the burst. This subsystem turns that claim
-//! into a measurable quantity:
+//! nodes, GPU reward/teacher nodes, serverless containers, and API quota
+//! lanes around rollout demand rather than provisioning for the burst. This
+//! subsystem turns that claim into a measurable quantity:
 //!
 //! * a [`ScalePolicy`] trait ([`policy`]) with two built-in policies —
 //!   queue-pressure (decaying-peak demand tracking with an any-queue burst
 //!   response) and EWMA arrival forecasting;
 //! * an [`Autoscaler`] wrapper that adds the policy-agnostic safety rails:
 //!   scale-**up** applies after a per-class **cold-start penalty** (CPU node
-//!   warm-up, serverless-container/quota-lane cold start) and is billed from
-//!   the decision instant (requisitioned capacity costs money while it
-//!   boots); scale-**down** is gated by hysteresis (`down_hold`) so
-//!   oscillating arrivals cannot flap the pool;
+//!   warm-up, GPU node restore, serverless-container/quota-lane cold start)
+//!   and is billed from the decision instant (requisitioned capacity costs
+//!   money while it boots); scale-**down** is gated by hysteresis
+//!   (`down_hold`) so oscillating arrivals cannot flap the pool;
 //! * [`PoolClass`]/[`PoolPressure`] — the observation interface backends
 //!   expose (`Backend::scale_classes`) and the resize entry point consumes
 //!   (`Backend::resize`, which reuses the `cpu_pool_scale` /
-//!   `api_limit_scale` fault-injection machinery).
+//!   `gpu_pool_scale` / `api_limit_scale` fault-injection machinery).
+//!
+//! # Scale targets
+//!
+//! A *target* is `(PoolClass, Option<endpoint>)`: the CPU and GPU pools are
+//! single-target classes (`endpoint == None`), while the API class reports
+//! one [`PoolPressure`] row **per provider endpoint** (sorted by endpoint
+//! id) so each provider's quota lanes resize independently — a flapping
+//! search provider no longer drags the PDF-parse lanes down with it. All
+//! targets of a class bill into one provision series (`PoolClass::name`);
+//! [`Autoscaler::billed_units`] folds per-target requisitions into the pool
+//! total the driver records.
 //!
 //! # Determinism contract
 //!
@@ -27,7 +38,8 @@
 //! virtual-time cadence (`interval`), factors are quantized to multiples of
 //! `quantum` (defaults to 1/8 — exactly representable in f64 *and* in the
 //! JSON round-trip), and every input is derived from deterministic backend
-//! state. Keep it that way: no wall-clock reads, no unordered iteration.
+//! state (observation rows arrive sorted by target). Keep it that way: no
+//! wall-clock reads, no unordered iteration.
 
 pub mod policy;
 
@@ -41,31 +53,40 @@ use std::collections::BTreeMap;
 
 /// An elastically-resizable class of external pool. The derived ordering is
 /// the deterministic evaluation order (backends return observations sorted
-/// by class).
+/// by `(class, endpoint)`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum PoolClass {
     /// CPU environment nodes (resized through the cordon machinery).
     Cpu,
-    /// API quota lanes (resized through the provider-limit machinery).
+    /// GPU reward/teacher nodes (resized through whole-node cordons that
+    /// respect the EOE residency cache — see `GpuCluster::set_pool_scale`).
+    Gpu,
+    /// API quota lanes (resized through the provider-limit machinery, one
+    /// target per endpoint).
     Api,
 }
 
 impl PoolClass {
     /// Stable pool name — matches the `Backend::provisioned` gauge names so
-    /// provision records form one series per pool.
+    /// provision records form one series per pool (per-endpoint API targets
+    /// share the `api_lanes` series; see [`Autoscaler::billed_units`]).
     pub fn name(self) -> &'static str {
         match self {
             PoolClass::Cpu => "cpu_cores",
+            PoolClass::Gpu => "gpus",
             PoolClass::Api => "api_lanes",
         }
     }
 }
 
-/// A live demand observation for one pool class (`Backend::scale_classes`).
+/// A live demand observation for one scale target (`Backend::scale_classes`).
 #[derive(Debug, Clone)]
 pub struct PoolPressure {
     pub class: PoolClass,
-    /// Actions waiting in this class's queues.
+    /// Sub-pool identity inside the class: `None` for the single-target CPU
+    /// and GPU pools, `Some(endpoint kind id)` for per-endpoint API rows.
+    pub endpoint: Option<u32>,
+    /// Actions waiting in this target's queues.
     pub queued: u64,
     /// Minimum units the queued actions demand (so unit-denominated
     /// policies never mix an action count into a resource-unit sum).
@@ -76,6 +97,13 @@ pub struct PoolPressure {
     pub provisioned_units: u64,
     /// Full static provision (scale factor 1.0).
     pub baseline_units: u64,
+}
+
+impl PoolPressure {
+    /// The deterministic target key this observation scales.
+    pub fn key(&self) -> (PoolClass, Option<u32>) {
+        (self.class, self.endpoint)
+    }
 }
 
 /// Which built-in [`ScalePolicy`] to run.
@@ -104,10 +132,10 @@ impl PolicyKind {
     }
 }
 
-/// Autoscaler knobs. Defaults are tuned so the cold-start-storm pack saves
-/// well over the acceptance bar at mean-ACT parity: scale-up is eager (any
-/// queued action jumps to full provision), scale-down is conservative
-/// (decaying-peak demand memory plus `down_hold` hysteresis).
+/// Autoscaler knobs. Defaults are tuned so the cold-start-storm and
+/// gpu-thrash packs save well over the acceptance bar at mean-ACT parity:
+/// scale-up is eager (any queued action jumps to full provision), scale-down
+/// is conservative (decaying-peak demand memory plus `down_hold` hysteresis).
 #[derive(Debug, Clone, PartialEq)]
 pub struct AutoscaleCfg {
     pub policy: PolicyKind,
@@ -131,6 +159,11 @@ pub struct AutoscaleCfg {
     /// Cold-start penalty of CPU node capacity (warm-up before scaled-up
     /// cores become schedulable; billed from the decision).
     pub cpu_warmup: SimDur,
+    /// Cold-start penalty of GPU node capacity (node boot; the *service*
+    /// re-warm cost is separate — an uncordoned node comes back with a
+    /// flushed residency cache, so restores flow through the existing EOE
+    /// cache-miss path).
+    pub gpu_warmup: SimDur,
     /// Cold-start penalty of API quota lanes / serverless containers.
     pub api_warmup: SimDur,
     /// Scale-factor quantization step (multiples are exact in f64/JSON).
@@ -149,6 +182,7 @@ impl Default for AutoscaleCfg {
             ewma_alpha: 0.3,
             down_hold: SimDur::from_secs(10),
             cpu_warmup: SimDur::from_secs(5),
+            gpu_warmup: SimDur::from_secs(5),
             api_warmup: SimDur::from_secs(2),
             quantum: 0.125,
         }
@@ -184,6 +218,7 @@ impl AutoscaleCfg {
     pub fn warmup(&self, class: PoolClass) -> SimDur {
         match class {
             PoolClass::Cpu => self.cpu_warmup,
+            PoolClass::Gpu => self.gpu_warmup,
             PoolClass::Api => self.api_warmup,
         }
     }
@@ -199,6 +234,7 @@ impl AutoscaleCfg {
             ("ewma_alpha", Json::num(self.ewma_alpha)),
             ("down_hold_secs", Json::num(self.down_hold.secs_f64())),
             ("cpu_warmup_secs", Json::num(self.cpu_warmup.secs_f64())),
+            ("gpu_warmup_secs", Json::num(self.gpu_warmup.secs_f64())),
             ("api_warmup_secs", Json::num(self.api_warmup.secs_f64())),
             ("quantum", Json::num(self.quantum)),
         ])
@@ -233,6 +269,7 @@ impl AutoscaleCfg {
                 "ewma_alpha" => cfg.ewma_alpha = f()?,
                 "down_hold_secs" => cfg.down_hold = d()?,
                 "cpu_warmup_secs" => cfg.cpu_warmup = d()?,
+                "gpu_warmup_secs" => cfg.gpu_warmup = d()?,
                 "api_warmup_secs" => cfg.api_warmup = d()?,
                 "quantum" => cfg.quantum = f()?,
                 other => bail!("unknown autoscale key '{other}'"),
@@ -243,20 +280,23 @@ impl AutoscaleCfg {
     }
 }
 
-/// What the autoscaler wants done, in evaluation order.
+/// What the autoscaler wants done, in evaluation order. `pool_units` on
+/// [`ScaleCmd::Decide`] is the new **pool-total** billed provision for the
+/// class (per-target requisitions folded via [`Autoscaler::billed_units`]),
+/// so the driver can record one coherent provision series per pool even
+/// when API endpoints scale independently.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ScaleCmd {
-    /// Scale-up decided: capacity is billed from now (`est_units` is the
-    /// requisitioned provision) but only becomes schedulable once the
-    /// cold-start penalty elapses — the matching [`ScaleCmd::Apply`] fires
-    /// at the first evaluation past the warm-up.
-    Decide { class: PoolClass, factor: f64, est_units: u64 },
+    /// Scale-up decided: capacity is billed from now but only becomes
+    /// schedulable once the cold-start penalty elapses — the matching
+    /// [`ScaleCmd::Apply`] fires at the first evaluation past the warm-up.
+    Decide { class: PoolClass, endpoint: Option<u32>, factor: f64, pool_units: u64 },
     /// Resize the substrate now (`Backend::resize`).
-    Apply { class: PoolClass, factor: f64 },
+    Apply { class: PoolClass, endpoint: Option<u32>, factor: f64 },
 }
 
 #[derive(Debug)]
-struct ClassState {
+struct TargetState {
     /// Last factor applied in the substrate.
     factor: f64,
     /// Scale-up awaiting its cold start: (schedulable at, factor).
@@ -264,11 +304,13 @@ struct ClassState {
     /// When the policy first started wanting less than the current factor
     /// (hysteresis clock; any higher wish resets it).
     below_since: Option<SimTime>,
+    /// Last observed static baseline of the target (billing denominator).
+    baseline: u64,
 }
 
-impl ClassState {
+impl TargetState {
     fn new() -> Self {
-        ClassState { factor: 1.0, pending: None, below_since: None }
+        TargetState { factor: 1.0, pending: None, below_since: None, baseline: 1 }
     }
 
     /// The factor scale-up decisions compare against: a pending scale-up
@@ -280,11 +322,12 @@ impl ClassState {
 
 const EPS: f64 = 1e-9;
 
-/// Policy wrapper owning the hysteresis / cold-start state machine.
+/// Policy wrapper owning the hysteresis / cold-start state machine, keyed
+/// by scale target (`(PoolClass, Option<endpoint>)`).
 pub struct Autoscaler {
     cfg: AutoscaleCfg,
     policy: Box<dyn ScalePolicy>,
-    classes: BTreeMap<PoolClass, ClassState>,
+    targets: BTreeMap<(PoolClass, Option<u32>), TargetState>,
     /// Applied resizes (test/reporting aid).
     pub applied: u64,
 }
@@ -295,7 +338,7 @@ impl Autoscaler {
             PolicyKind::Queue => Box::new(QueuePressure::default()),
             PolicyKind::Ewma => Box::new(EwmaForecast::default()),
         };
-        Autoscaler { cfg, policy, classes: BTreeMap::new(), applied: 0 }
+        Autoscaler { cfg, policy, targets: BTreeMap::new(), applied: 0 }
     }
 
     pub fn interval(&self) -> SimDur {
@@ -306,10 +349,29 @@ impl Autoscaler {
         self.policy.name()
     }
 
-    /// Factor currently applied in the substrate for a class (1.0 before
-    /// any resize).
+    /// Factor currently applied in the substrate for a single-target class
+    /// (1.0 before any resize).
     pub fn applied_factor(&self, class: PoolClass) -> f64 {
-        self.classes.get(&class).map_or(1.0, |s| s.factor)
+        self.applied_factor_of(class, None)
+    }
+
+    /// Factor currently applied for one target (1.0 before any resize).
+    pub fn applied_factor_of(&self, class: PoolClass, endpoint: Option<u32>) -> f64 {
+        self.targets.get(&(class, endpoint)).map_or(1.0, |s| s.factor)
+    }
+
+    /// Pool-total billed units of a class: per-target `baseline × effective
+    /// factor` (pending scale-ups count — requisitioned capacity is paid for
+    /// while it warms), summed over every target of the class. This is the
+    /// single series the driver records under `class.name()`.
+    pub fn billed_units(&self, class: PoolClass) -> u64 {
+        let sum: u64 = self
+            .targets
+            .iter()
+            .filter(|((c, _), _)| *c == class)
+            .map(|(_, st)| (st.baseline as f64 * st.effective()).round() as u64)
+            .sum();
+        sum.max(1)
     }
 
     fn quantize(x: f64, cfg: &AutoscaleCfg) -> f64 {
@@ -319,53 +381,77 @@ impl Autoscaler {
         q.clamp(cfg.min_factor, 1.0)
     }
 
-    /// One evaluation tick: feed per-class observations (sorted by class),
-    /// get back the resize commands to run. Deterministic in (`now`, `obs`,
-    /// prior evaluations).
+    /// One evaluation tick: feed per-target observations (sorted by
+    /// `(class, endpoint)`), get back the resize commands to run.
+    /// Deterministic in (`now`, `obs`, prior evaluations).
     pub fn eval(&mut self, now: SimTime, obs: &[PoolPressure]) -> Vec<ScaleCmd> {
+        // register every target (and refresh its baseline) up front so a
+        // Decide on the first target of a class bills the whole class
+        for o in obs {
+            let st = self.targets.entry(o.key()).or_insert_with(TargetState::new);
+            st.baseline = o.baseline_units.max(1);
+        }
         let mut cmds = Vec::new();
         for o in obs {
             let desired = Self::quantize(self.policy.desired(now, o, &self.cfg), &self.cfg);
-            let st = self.classes.entry(o.class).or_insert_with(ClassState::new);
-            // 1. a warming scale-up matured → apply it in the substrate
-            if let Some((ready, f)) = st.pending {
-                if now >= ready {
-                    st.pending = None;
-                    st.factor = f;
-                    self.applied += 1;
-                    cmds.push(ScaleCmd::Apply { class: o.class, factor: f });
+            let warm = self.cfg.warmup(o.class);
+            let mut matured: Option<f64> = None;
+            let mut apply: Option<f64> = None;
+            let mut decide: Option<f64> = None;
+            {
+                let st = self.targets.get_mut(&o.key()).expect("target registered above");
+                // 1. a warming scale-up matured → apply it in the substrate
+                if let Some((ready, f)) = st.pending {
+                    if now >= ready {
+                        st.pending = None;
+                        st.factor = f;
+                        matured = Some(f);
+                    }
                 }
-            }
-            let effective = st.effective();
-            if desired > effective + EPS {
-                // 2. scale-up: requisition now, schedulable after warm-up
-                st.below_since = None;
-                let warm = self.cfg.warmup(o.class);
-                let est_units = ((o.baseline_units as f64 * desired).round() as u64).max(1);
-                if warm.0 == 0 {
-                    st.pending = None;
-                    st.factor = desired;
-                    self.applied += 1;
-                    cmds.push(ScaleCmd::Apply { class: o.class, factor: desired });
-                } else {
-                    st.pending = Some((now + warm, desired));
-                    cmds.push(ScaleCmd::Decide { class: o.class, factor: desired, est_units });
-                }
-            } else if desired < effective - EPS {
-                // 3. scale-down: only after wanting less for down_hold
-                match st.below_since {
-                    None => st.below_since = Some(now),
-                    Some(since) if now - since >= self.cfg.down_hold => {
-                        st.below_since = None;
+                let effective = st.effective();
+                if desired > effective + EPS {
+                    // 2. scale-up: requisition now, schedulable after warm-up
+                    st.below_since = None;
+                    if warm.0 == 0 {
                         st.pending = None;
                         st.factor = desired;
-                        self.applied += 1;
-                        cmds.push(ScaleCmd::Apply { class: o.class, factor: desired });
+                        apply = Some(desired);
+                    } else {
+                        st.pending = Some((now + warm, desired));
+                        decide = Some(desired);
                     }
-                    Some(_) => {}
+                } else if desired < effective - EPS {
+                    // 3. scale-down: only after wanting less for down_hold
+                    match st.below_since {
+                        None => st.below_since = Some(now),
+                        Some(since) if now - since >= self.cfg.down_hold => {
+                            st.below_since = None;
+                            st.pending = None;
+                            st.factor = desired;
+                            apply = Some(desired);
+                        }
+                        Some(_) => {}
+                    }
+                } else {
+                    st.below_since = None;
                 }
-            } else {
-                st.below_since = None;
+            }
+            if let Some(f) = matured {
+                self.applied += 1;
+                cmds.push(ScaleCmd::Apply { class: o.class, endpoint: o.endpoint, factor: f });
+            }
+            if let Some(f) = apply {
+                self.applied += 1;
+                cmds.push(ScaleCmd::Apply { class: o.class, endpoint: o.endpoint, factor: f });
+            }
+            if let Some(f) = decide {
+                let pool_units = self.billed_units(o.class);
+                cmds.push(ScaleCmd::Decide {
+                    class: o.class,
+                    endpoint: o.endpoint,
+                    factor: f,
+                    pool_units,
+                });
             }
         }
         cmds
@@ -377,8 +463,19 @@ mod tests {
     use super::*;
 
     fn obs(class: PoolClass, queued: u64, in_use: u64, base: u64) -> PoolPressure {
+        obs_ep(class, None, queued, in_use, base)
+    }
+
+    fn obs_ep(
+        class: PoolClass,
+        endpoint: Option<u32>,
+        queued: u64,
+        in_use: u64,
+        base: u64,
+    ) -> PoolPressure {
         PoolPressure {
             class,
+            endpoint,
             queued,
             queued_units: queued,
             in_use_units: in_use,
@@ -397,6 +494,7 @@ mod tests {
             policy: PolicyKind::Ewma,
             min_factor: 0.25,
             down_hold: SimDur::from_secs(30),
+            gpu_warmup: SimDur::from_secs(8),
             ..AutoscaleCfg::default()
         };
         let j = cfg.to_json();
@@ -437,7 +535,7 @@ mod tests {
         let cmds = a.eval(t(10), &idle);
         assert_eq!(
             cmds,
-            vec![ScaleCmd::Apply { class: PoolClass::Cpu, factor: 0.25 }],
+            vec![ScaleCmd::Apply { class: PoolClass::Cpu, endpoint: None, factor: 0.25 }],
             "sustained idle must scale down to the floor"
         );
         assert_eq!(a.applied_factor(PoolClass::Cpu), 0.25);
@@ -458,14 +556,53 @@ mod tests {
         let cmds = a.eval(t(12), &busy);
         assert_eq!(
             cmds,
-            vec![ScaleCmd::Decide { class: PoolClass::Cpu, factor: 1.0, est_units: 128 }]
+            vec![ScaleCmd::Decide {
+                class: PoolClass::Cpu,
+                endpoint: None,
+                factor: 1.0,
+                pool_units: 128
+            }]
         );
         // …but the substrate resize waits out the 5s cold start
         assert_eq!(a.applied_factor(PoolClass::Cpu), 0.25);
         assert!(a.eval(t(14), &busy).is_empty(), "still warming");
         let cmds = a.eval(t(18), &busy);
-        assert_eq!(cmds, vec![ScaleCmd::Apply { class: PoolClass::Cpu, factor: 1.0 }]);
+        assert_eq!(
+            cmds,
+            vec![ScaleCmd::Apply { class: PoolClass::Cpu, endpoint: None, factor: 1.0 }]
+        );
         assert_eq!(a.applied_factor(PoolClass::Cpu), 1.0);
+    }
+
+    #[test]
+    fn gpu_class_uses_its_own_warmup() {
+        let mut a = Autoscaler::new(AutoscaleCfg {
+            gpu_warmup: SimDur::from_secs(8),
+            ..AutoscaleCfg::default()
+        });
+        let idle = [obs(PoolClass::Gpu, 0, 0, 24)];
+        for s in [0u64, 2, 4, 6, 8, 10] {
+            let _ = a.eval(t(s), &idle);
+        }
+        assert_eq!(a.applied_factor(PoolClass::Gpu), 0.25);
+        let busy = [obs(PoolClass::Gpu, 3, 8, 24)];
+        let cmds = a.eval(t(12), &busy);
+        assert_eq!(
+            cmds,
+            vec![ScaleCmd::Decide {
+                class: PoolClass::Gpu,
+                endpoint: None,
+                factor: 1.0,
+                pool_units: 24
+            }]
+        );
+        // 8s gpu warm-up: not schedulable at +6s, applies at +8s
+        assert!(a.eval(t(18), &busy).is_empty(), "gpu cold start still running");
+        let cmds = a.eval(t(20), &busy);
+        assert_eq!(
+            cmds,
+            vec![ScaleCmd::Apply { class: PoolClass::Gpu, endpoint: None, factor: 1.0 }]
+        );
     }
 
     #[test]
@@ -488,17 +625,75 @@ mod tests {
     #[test]
     fn classes_scale_independently() {
         let mut a = Autoscaler::new(AutoscaleCfg::default());
-        let both = [
-            obs(PoolClass::Cpu, 3, 50, 128), // busy → stays up
-            obs(PoolClass::Api, 0, 0, 200),  // idle → scales down after hold
+        let all = [
+            obs(PoolClass::Cpu, 3, 50, 128),  // busy → stays up
+            obs(PoolClass::Gpu, 2, 12, 24),   // busy → stays up
+            obs(PoolClass::Api, 0, 0, 200),   // idle → scales down after hold
         ];
         for s in [0u64, 2, 4, 6, 8] {
-            let _ = a.eval(t(s), &both);
+            let _ = a.eval(t(s), &all);
         }
-        let cmds = a.eval(t(10), &both);
-        assert_eq!(cmds, vec![ScaleCmd::Apply { class: PoolClass::Api, factor: 0.25 }]);
+        let cmds = a.eval(t(10), &all);
+        assert_eq!(
+            cmds,
+            vec![ScaleCmd::Apply { class: PoolClass::Api, endpoint: None, factor: 0.25 }]
+        );
         assert_eq!(a.applied_factor(PoolClass::Cpu), 1.0);
+        assert_eq!(a.applied_factor(PoolClass::Gpu), 1.0);
         assert_eq!(a.applied_factor(PoolClass::Api), 0.25);
+    }
+
+    #[test]
+    fn api_endpoints_scale_independently() {
+        // one busy provider, one idle provider: only the idle endpoint's
+        // lanes scale down, and the command carries its endpoint id
+        let mut a = Autoscaler::new(AutoscaleCfg::default());
+        let rows = [
+            obs_ep(PoolClass::Api, Some(2), 4, 40, 64), // busy
+            obs_ep(PoolClass::Api, Some(3), 0, 0, 24),  // idle
+        ];
+        for s in [0u64, 2, 4, 6, 8] {
+            let _ = a.eval(t(s), &rows);
+        }
+        let cmds = a.eval(t(10), &rows);
+        assert_eq!(
+            cmds,
+            vec![ScaleCmd::Apply { class: PoolClass::Api, endpoint: Some(3), factor: 0.25 }]
+        );
+        assert_eq!(a.applied_factor_of(PoolClass::Api, Some(2)), 1.0);
+        assert_eq!(a.applied_factor_of(PoolClass::Api, Some(3)), 0.25);
+    }
+
+    #[test]
+    fn decide_bills_the_whole_class_pool() {
+        // two endpoints; endpoint 0 scales down to the floor, then bursts:
+        // the Decide's pool_units must cover BOTH endpoints — endpoint 0 at
+        // its requisitioned full provision, endpoint 1 untouched at 1.0
+        let mut a = Autoscaler::new(AutoscaleCfg::default());
+        let idle0 = [
+            obs_ep(PoolClass::Api, Some(0), 0, 0, 100),
+            obs_ep(PoolClass::Api, Some(1), 2, 80, 100),
+        ];
+        for s in [0u64, 2, 4, 6, 8, 10] {
+            let _ = a.eval(t(s), &idle0);
+        }
+        assert_eq!(a.applied_factor_of(PoolClass::Api, Some(0)), 0.25);
+        assert_eq!(a.billed_units(PoolClass::Api), 25 + 100);
+        let burst = [
+            obs_ep(PoolClass::Api, Some(0), 6, 10, 100),
+            obs_ep(PoolClass::Api, Some(1), 2, 80, 100),
+        ];
+        let cmds = a.eval(t(12), &burst);
+        assert_eq!(
+            cmds,
+            vec![ScaleCmd::Decide {
+                class: PoolClass::Api,
+                endpoint: Some(0),
+                factor: 1.0,
+                pool_units: 200
+            }],
+            "requisitioned endpoint 0 plus endpoint 1 at full provision"
+        );
     }
 
     #[test]
@@ -517,8 +712,9 @@ mod tests {
         let cmds = a.eval(t(25), &idle);
         assert_eq!(cmds.len(), 1, "hold elapsed from the post-burst reset");
         match &cmds[0] {
-            ScaleCmd::Apply { class, factor } => {
+            ScaleCmd::Apply { class, endpoint, factor } => {
                 assert_eq!(*class, PoolClass::Cpu);
+                assert_eq!(*endpoint, None);
                 assert!(*factor < 1.0, "stepped decay must be moving down, got {factor}");
             }
             other => panic!("expected a scale-down Apply, got {other:?}"),

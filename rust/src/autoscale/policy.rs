@@ -1,10 +1,12 @@
 //! Built-in scale policies.
 //!
-//! A [`ScalePolicy`] maps one pool class's live demand observation to a
+//! A [`ScalePolicy`] maps one scale target's live demand observation to a
 //! *desired* capacity factor in `[0, 1]`; the [`super::Autoscaler`] wrapper
 //! owns everything temporal (quantization, cold-start warm-ups, scale-down
 //! hysteresis), so policies stay pure demand models and remain trivially
-//! deterministic.
+//! deterministic. Targets are `(PoolClass, Option<endpoint>)` — the API
+//! class feeds one observation per provider endpoint, and each keeps its
+//! own demand memory.
 
 use super::{AutoscaleCfg, PoolClass, PoolPressure};
 use crate::sim::SimTime;
@@ -28,7 +30,7 @@ pub trait ScalePolicy {
 /// idle (inter-step training gaps, run tails) steps the pool down.
 #[derive(Debug, Default)]
 pub struct QueuePressure {
-    peak: BTreeMap<PoolClass, f64>,
+    peak: BTreeMap<(PoolClass, Option<u32>), f64>,
 }
 
 impl ScalePolicy for QueuePressure {
@@ -38,7 +40,7 @@ impl ScalePolicy for QueuePressure {
 
     fn desired(&mut self, _now: SimTime, obs: &PoolPressure, cfg: &AutoscaleCfg) -> f64 {
         let base = obs.baseline_units.max(1) as f64;
-        let peak = self.peak.entry(obs.class).or_insert(0.0);
+        let peak = self.peak.entry(obs.key()).or_insert(0.0);
         if obs.queued >= cfg.up_queue {
             // burst response: demand is at least everything we have
             *peak = base;
@@ -58,7 +60,7 @@ impl ScalePolicy for QueuePressure {
 /// noise — the right trade for steady high-duty workloads.
 #[derive(Debug, Default)]
 pub struct EwmaForecast {
-    demand: BTreeMap<PoolClass, f64>,
+    demand: BTreeMap<(PoolClass, Option<u32>), f64>,
 }
 
 impl ScalePolicy for EwmaForecast {
@@ -69,7 +71,7 @@ impl ScalePolicy for EwmaForecast {
     fn desired(&mut self, _now: SimTime, obs: &PoolPressure, cfg: &AutoscaleCfg) -> f64 {
         let base = obs.baseline_units.max(1) as f64;
         let inst = (obs.in_use_units + obs.queued_units) as f64;
-        let d = self.demand.entry(obs.class).or_insert(inst);
+        let d = self.demand.entry(obs.key()).or_insert(inst);
         *d += cfg.ewma_alpha * (inst - *d);
         (*d * cfg.headroom / base).min(1.0)
     }
@@ -82,6 +84,7 @@ mod tests {
     fn obs(queued: u64, in_use: u64, base: u64) -> PoolPressure {
         PoolPressure {
             class: PoolClass::Cpu,
+            endpoint: None,
             queued,
             queued_units: queued,
             in_use_units: in_use,
@@ -118,6 +121,23 @@ mod tests {
             last = p.desired(SimTime::ZERO, &obs(0, 0, 128), &cfg);
         }
         assert!(last < 0.01, "idle peak must decay away, got {last}");
+    }
+
+    #[test]
+    fn per_endpoint_demand_memories_are_disjoint() {
+        // hammering endpoint 0 must not inflate endpoint 1's desire
+        let cfg = AutoscaleCfg::default();
+        let mut p = QueuePressure::default();
+        let mut hot = obs(0, 100, 128);
+        hot.class = PoolClass::Api;
+        hot.endpoint = Some(0);
+        let mut cold = obs(0, 0, 128);
+        cold.class = PoolClass::Api;
+        cold.endpoint = Some(1);
+        let d_hot = p.desired(SimTime::ZERO, &hot, &cfg);
+        let d_cold = p.desired(SimTime::ZERO, &cold, &cfg);
+        assert!(d_hot > 0.9, "hot endpoint near full, got {d_hot}");
+        assert_eq!(d_cold, 0.0, "cold endpoint must see no demand");
     }
 
     #[test]

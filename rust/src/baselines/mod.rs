@@ -303,6 +303,10 @@ impl Backend for BaselineBackend {
             // never restore; serverless reloads on every dispatch anyway —
             // neither has a cache to storm
             ScenarioEvent::GpuCacheFlush => false,
+            // static services pin their GPUs for the run and serverless
+            // containers are provisioned per dispatch — neither deployment
+            // can cordon nodes mid-run (the paper's elasticity asymmetry)
+            ScenarioEvent::GpuPoolScale { .. } => false,
             // pods are provisioned per-trajectory up front; the baseline has
             // no mechanism to resize its pool mid-run (the paper's point)
             ScenarioEvent::CpuPoolScale { .. } => false,

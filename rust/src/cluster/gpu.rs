@@ -64,6 +64,13 @@ pub struct GpuNode {
     pub id: GpuNodeId,
     state: HashMap<(u8, u8), ChunkState>, // (level, start>>level? no: start)
     cache: HashMap<(u8, u8), CacheTag>,
+    /// Node taken offline by an elastic pool resize. A cordoned node takes
+    /// no new allocations; busy chunks are never preempted and drain out
+    /// normally. Cordoning flushes the residency cache (a deprovisioned
+    /// node loses its GPU memory contents — the invariant host copies
+    /// survive), so restores after an un-cordon flow through the ordinary
+    /// EOE cache-miss path.
+    cordoned: bool,
 }
 
 impl GpuNode {
@@ -71,7 +78,37 @@ impl GpuNode {
         let mut state = HashMap::new();
         // root chunk free, everything else nonexistent until split
         state.insert((3u8, 0u8), ChunkState::Free);
-        GpuNode { id, state, cache: HashMap::new() }
+        GpuNode { id, state, cache: HashMap::new(), cordoned: false }
+    }
+
+    pub fn is_cordoned(&self) -> bool {
+        self.cordoned
+    }
+
+    fn set_cordoned(&mut self, cordoned: bool) {
+        if cordoned && !self.cordoned {
+            // powering the node down drops every warm residency
+            self.flush_cache();
+        }
+        self.cordoned = cordoned;
+    }
+
+    /// GPUs currently held by allocated chunks (every GPU sits in exactly
+    /// one Free or Allocated leaf chunk, so busy = 8 − free).
+    pub fn busy_gpus(&self) -> u32 {
+        8 - self.free_gpus()
+    }
+
+    /// Most recent `last_used` over the node's cache tags — the coldest-
+    /// first cordon ordering key ([`SimTime::ZERO`] when nothing is
+    /// resident). A max over an unordered map is order-independent, so
+    /// this stays deterministic.
+    pub fn cache_hotness(&self) -> SimTime {
+        self.cache
+            .values()
+            .map(|t| t.last_used)
+            .max()
+            .unwrap_or(SimTime::ZERO)
     }
 
     fn key(c: &ChunkRef) -> (u8, u8) {
@@ -145,10 +182,14 @@ impl GpuNode {
     }
 
     /// Return an allocated chunk to the free pool, recording what service
-    /// its GPUs now hold (stays cached until evicted — EOE).
+    /// its GPUs now hold (stays cached until evicted — EOE). A chunk
+    /// draining on a *cordoned* node records no residency — the node is
+    /// being deprovisioned, so a later un-cordon must not offer stale warm
+    /// hits.
     pub fn release(&mut self, c: ChunkRef, tag: Option<CacheTag>) {
         debug_assert_eq!(self.chunk_state(&c), Some(ChunkState::Allocated), "{c:?}");
         self.state.insert(Self::key(&c), ChunkState::Free);
+        let tag = if self.cordoned { None } else { tag };
         match tag {
             Some(t) => {
                 self.cache.insert(Self::key(&c), t);
@@ -228,19 +269,81 @@ impl GpuCluster {
         self.nodes.len() as u32 * 8
     }
 
+    /// Schedulable free GPUs (cordoned nodes are offline capacity).
     pub fn free_gpus(&self) -> u32 {
-        self.nodes.iter().map(|n| n.free_gpus()).sum()
+        self.nodes
+            .iter()
+            .filter(|n| !n.cordoned)
+            .map(|n| n.free_gpus())
+            .sum()
+    }
+
+    /// GPUs currently provisioned (paid for): every GPU of an online node,
+    /// plus the still-draining busy GPUs of cordoned nodes — busy chunks
+    /// are never preempted, and capacity that is still running is still
+    /// billed.
+    pub fn provisioned_gpus(&self) -> u32 {
+        self.nodes
+            .iter()
+            .map(|n| if n.cordoned { n.busy_gpus() } else { 8 })
+            .sum()
+    }
+
+    /// Nodes currently cordoned by an elastic resize.
+    pub fn cordoned_nodes(&self) -> u32 {
+        self.nodes.iter().filter(|n| n.cordoned).count() as u32
     }
 
     /// Count of free chunks per level across the cluster (DP-operator seed).
+    /// Cordoned nodes contribute nothing — their chunks are off-limits.
     pub fn free_chunk_counts(&self) -> [u32; 4] {
         let mut c = [0u32; 4];
-        for n in &self.nodes {
+        for n in self.nodes.iter().filter(|n| !n.cordoned) {
             for ch in n.free_chunks() {
                 c[ch.level as usize] += 1;
             }
         }
         c
+    }
+
+    /// Elastic pool resize (`PoolClass::Gpu`): keep `available_frac` of the
+    /// nodes online, cordoning whole nodes. Determinism invariant — the
+    /// cordon rank is **already-cordoned nodes first** (cordons are sticky:
+    /// re-applying an unchanged composed factor must not migrate the cordon
+    /// onto a node that warmed up in the meantime and flush its cache),
+    /// then **idle nodes before busy ones** (busy chunks are never
+    /// preempted; a cordoned busy node merely drains), then **coldest EOE
+    /// residency first** (a node whose free chunks carry recently-used
+    /// service caches is evicted last), ties broken by higher node id (low
+    /// ids stay online). At least one node stays online so minimum-DoP
+    /// actions keep making progress. `1.0` restores every node — with
+    /// flushed caches, so the re-warm cost of restored capacity flows
+    /// through the ordinary cache-miss restore path. Returns the number of
+    /// cordoned nodes reached.
+    pub fn set_pool_scale(&mut self, available_frac: f64) -> u32 {
+        let f = available_frac.clamp(0.0, 1.0);
+        let n = self.nodes.len() as u32;
+        let target_online = ((n as f64 * f).round() as u32).clamp(1, n);
+        let target_cordoned = n - target_online;
+        let mut order: Vec<(bool, bool, SimTime, std::cmp::Reverse<u32>, usize)> = self
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(i, nd)| {
+                (
+                    !nd.cordoned,
+                    nd.busy_gpus() > 0,
+                    nd.cache_hotness(),
+                    std::cmp::Reverse(nd.id.0),
+                    i,
+                )
+            })
+            .collect();
+        order.sort();
+        for (rank, &(_, _, _, _, i)) in order.iter().enumerate() {
+            self.nodes[i].set_cordoned((rank as u32) < target_cordoned);
+        }
+        target_cordoned
     }
 
     fn level_for(dop: u8) -> u8 {
@@ -263,9 +366,9 @@ impl GpuCluster {
         debug_assert!((1..=8).contains(&dop));
         let level = Self::level_for(dop);
 
-        // (1) warm chunk at the exact level
+        // (1) warm chunk at the exact level (cordoned nodes are offline)
         let mut warm_hit: Option<ChunkRef> = None;
-        for n in &self.nodes {
+        for n in self.nodes.iter().filter(|n| !n.cordoned) {
             for c in n.free_at(level) {
                 if let Some(t) = n.cache_tag(&c) {
                     if t.service == service && t.dop == dop {
@@ -285,7 +388,7 @@ impl GpuCluster {
 
         // (2) smallest sufficient free chunk; prefer uncached, then LRU
         let mut best: Option<(ChunkRef, u8, bool, SimTime)> = None;
-        for n in &self.nodes {
+        for n in self.nodes.iter().filter(|n| !n.cordoned) {
             for c in n.free_chunks() {
                 if c.level < level {
                     continue;
@@ -315,7 +418,7 @@ impl GpuCluster {
             None => {
                 // (4) merge free buddies somewhere to manufacture a chunk
                 let nid = (0..self.nodes.len())
-                    .find(|&i| self.nodes[i].merge_up_to(level))?;
+                    .find(|&i| !self.nodes[i].cordoned && self.nodes[i].merge_up_to(level))?;
                 self.nodes[nid].free_at(level).first().copied()?
             }
         };
@@ -344,10 +447,12 @@ impl GpuCluster {
     /// merging)? Pure — operates on chunk counts, over-approximating merges
     /// per node only when buddies are actually free.
     pub fn can_accommodate(&self, dops: &[u64]) -> bool {
-        // conservative simulation on cloned per-node free lists
+        // conservative simulation on cloned per-node free lists (cordoned
+        // nodes offer no capacity)
         let mut per_node: Vec<Vec<u8>> = self
             .nodes
             .iter()
+            .filter(|n| !n.cordoned)
             .map(|n| n.free_chunks().iter().map(|c| c.level).collect())
             .collect();
         let mut reqs: Vec<u8> = dops.iter().map(|&d| Self::level_for(d as u8)).collect();
@@ -549,6 +654,94 @@ mod tests {
         let m = RestoreModel { pcie_gbps: 10.0, fixed: SimDur::ZERO };
         assert_eq!(m.restore_dur(40.0, 1), SimDur::from_secs(4));
         assert_eq!(m.restore_dur(40.0, 4), SimDur::from_secs(1));
+    }
+
+    #[test]
+    fn cordon_takes_coldest_node_first() {
+        let mut g = GpuCluster::new(2);
+        // warm node 0's cache recently; node 1 stays cold
+        let a = g.allocate(svc(0), 8).unwrap();
+        let hot_node = a.chunk.node;
+        g.release(a.chunk, svc(0), 8, SimTime(1_000));
+        let cold_node = GpuNodeId(if hot_node.0 == 0 { 1 } else { 0 });
+        assert_eq!(g.set_pool_scale(0.5), 1);
+        assert!(g.node(cold_node).is_cordoned(), "cold node must cordon first");
+        assert!(!g.node(hot_node).is_cordoned(), "hot residency is evicted last");
+        assert_eq!(g.free_gpus(), 8);
+        assert_eq!(g.provisioned_gpus(), 8);
+        assert_eq!(g.cordoned_nodes(), 1);
+        // allocations only land on the online node
+        let b = g.allocate(svc(1), 8).unwrap();
+        assert_eq!(b.chunk.node, hot_node);
+        assert!(g.allocate(svc(2), 1).is_none(), "cordoned capacity is offline");
+        assert!(!g.can_accommodate(&[1]));
+        g.release(b.chunk, svc(1), 8, SimTime(2_000));
+        // restore: the cordoned node returns with a flushed cache, so the
+        // re-warm cost flows through the ordinary cache-miss path
+        assert_eq!(g.set_pool_scale(1.0), 0);
+        assert_eq!(g.free_gpus(), 16);
+        assert_eq!(g.provisioned_gpus(), 16);
+        assert!(g.node(cold_node).cache_hotness() == SimTime::ZERO);
+    }
+
+    #[test]
+    fn cordon_prefers_idle_nodes_and_never_preempts_busy_chunks() {
+        let mut g = GpuCluster::new(2);
+        let a = g.allocate(svc(0), 4).unwrap(); // one node busy
+        let busy_node = a.chunk.node;
+        assert_eq!(g.set_pool_scale(0.5), 1);
+        assert!(
+            !g.node(busy_node).is_cordoned(),
+            "idle node must cordon before the busy one"
+        );
+        // squeeze to the floor: one node must stay online even at 0.05
+        assert_eq!(g.set_pool_scale(0.05), 1);
+        // the busy node's running chunk keeps draining wherever it lives
+        assert_eq!(g.node(busy_node).busy_gpus(), 4);
+        g.release(a.chunk, svc(0), 4, SimTime(5));
+    }
+
+    #[test]
+    fn reapplied_scale_keeps_cordons_sticky() {
+        let mut g = GpuCluster::new(2);
+        let a = g.allocate(svc(0), 8).unwrap();
+        let b = g.allocate(svc(1), 8).unwrap();
+        assert_eq!(g.set_pool_scale(0.5), 1); // both busy → node 1 cordons
+        assert!(g.node(GpuNodeId(1)).is_cordoned());
+        // the online node drains and re-caches a hot residency (a is on 0)
+        g.release(a.chunk, svc(0), 8, SimTime(1_000));
+        // re-applying the same factor must NOT migrate the cordon onto the
+        // now-idle hot node 0 (that would flush the hottest cache while
+        // bringing the draining node back online)
+        assert_eq!(g.set_pool_scale(0.5), 1);
+        assert!(g.node(GpuNodeId(1)).is_cordoned(), "cordon must stay sticky");
+        assert!(!g.node(GpuNodeId(0)).is_cordoned());
+        let warm = g.allocate(svc(0), 8).unwrap();
+        assert!(warm.warm, "hot residency must survive the re-apply");
+        let _ = b;
+    }
+
+    #[test]
+    fn cordoned_drain_bills_until_release_and_leaves_no_stale_cache() {
+        // both nodes busy → the cordon must take a busy node (never
+        // preempting it): new work is refused, the running chunk drains,
+        // and its release neither re-caches nor stays on the bill
+        let mut g = GpuCluster::new(2);
+        let a = g.allocate(svc(0), 8).unwrap();
+        let b = g.allocate(svc(1), 8).unwrap();
+        assert_eq!(g.set_pool_scale(0.5), 1);
+        let cordoned = if g.node(a.chunk.node).is_cordoned() { a } else { b };
+        let kept = if cordoned.chunk == a.chunk { b } else { a };
+        assert_eq!(g.provisioned_gpus(), 16, "draining GPUs still billed");
+        let svc_id = if cordoned.chunk == a.chunk { svc(0) } else { svc(1) };
+        g.release(cordoned.chunk, svc_id, 8, SimTime(99));
+        assert_eq!(g.provisioned_gpus(), 8, "drained node leaves the bill");
+        assert_eq!(g.free_gpus(), 0, "cordoned free capacity is offline");
+        g.set_pool_scale(1.0);
+        // the drained release on the cordoned node must not have cached
+        let again = g.allocate(svc_id, 8).unwrap();
+        assert!(!again.warm, "stale residency survived the cordon");
+        let _ = kept;
     }
 
     #[test]

@@ -135,25 +135,36 @@ pub trait Backend {
         false
     }
 
-    /// Live demand observations for every pool class this backend can
-    /// elastically resize, sorted by [`PoolClass`] (the autoscaler's
-    /// deterministic evaluation order). The default — no resizable classes
-    /// — is the statically-provisioned deployment the paper baselines
-    /// model.
+    /// Live demand observations for every scale target this backend can
+    /// elastically resize, sorted by `(PoolClass, endpoint)` (the
+    /// autoscaler's deterministic evaluation order). The CPU and GPU pools
+    /// are single-target classes (`endpoint == None`); the API class
+    /// reports one row **per provider endpoint** (sorted by endpoint kind
+    /// id) so quota lanes resize per provider. The default — no resizable
+    /// targets — is the statically-provisioned deployment the paper
+    /// baselines model.
     fn scale_classes(&self) -> Vec<PoolPressure> {
         Vec::new()
     }
 
-    /// Elastically resize a pool class to `factor` × its full static
-    /// provision, returning the provisioned unit count actually reached
-    /// (resizes are best-effort: busy capacity is never preempted).
+    /// Elastically resize one scale target to `factor` × its full static
+    /// provision, returning the provisioned unit count the **whole class**
+    /// actually reached (resizes are best-effort: busy capacity is never
+    /// preempted). `endpoint` narrows an API-class resize to one provider
+    /// (`None` on single-target classes, or to sweep every endpoint).
     /// Implementations reuse the same substrate machinery as the
-    /// `cpu_pool_scale` / `api_limit_scale` fault injections — including
-    /// dirtying the affected pools, so the pump that follows reschedules
-    /// them. `None` means the substrate cannot resize this class (the
-    /// deliberately-inelastic default).
-    fn resize(&mut self, now: SimTime, class: PoolClass, factor: f64) -> Option<u64> {
-        let _ = (now, class, factor);
+    /// `cpu_pool_scale` / `gpu_pool_scale` / `api_limit_scale` fault
+    /// injections — including dirtying the affected pools, so the pump
+    /// that follows reschedules them. `None` means the substrate cannot
+    /// resize this class (the deliberately-inelastic default).
+    fn resize(
+        &mut self,
+        now: SimTime,
+        class: PoolClass,
+        endpoint: Option<u32>,
+        factor: f64,
+    ) -> Option<u64> {
+        let _ = (now, class, endpoint, factor);
         None
     }
 }

@@ -241,12 +241,25 @@ impl Driver<'_> {
         }
     }
 
-    /// One autoscaler evaluation: observe pool pressure, let the policy
-    /// decide, bill scale-up capacity from the decision instant, and apply
-    /// matured resizes through [`Backend::resize`] (which dirties the
+    /// One autoscaler evaluation: observe per-target pool pressure, let the
+    /// policy decide, bill scale-up capacity from the decision instant, and
+    /// apply matured resizes through [`Backend::resize`] (which dirties the
     /// affected pools exactly like the fault-injection path, so the pump
-    /// that follows reschedules them at the resize instant).
+    /// that follows reschedules them at the resize instant). Billing is
+    /// per **pool** even though scaling is per target: a `Decide` records
+    /// the autoscaler's folded pool total (per-endpoint requisitions
+    /// included), an `Apply` records the substrate units the class actually
+    /// reached.
     fn autoscale(&mut self, now: SimTime) {
+        // the scale-trace label carries the endpoint so per-provider
+        // decisions stay auditable; provision records keep the plain pool
+        // name — one billing series per pool
+        fn scale_label(class: crate::autoscale::PoolClass, endpoint: Option<u32>) -> String {
+            match endpoint {
+                Some(e) => format!("{}@{e}", class.name()),
+                None => class.name().to_string(),
+            }
+        }
         let obs = self.backend.scale_classes();
         let (cmds, interval) = match self.asc.as_deref_mut() {
             Some(a) => (a.eval(now, &obs), a.interval()),
@@ -255,23 +268,38 @@ impl Driver<'_> {
         let mut applied = false;
         for cmd in cmds {
             match cmd {
-                ScaleCmd::Decide { class, factor, est_units } => {
+                ScaleCmd::Decide { class, endpoint, factor, pool_units } => {
                     // requisitioned: billed now, schedulable after warm-up
                     let pool = class.name().to_string();
                     self.metrics.provision.push(ProvisionRecord {
                         at: now,
                         pool: pool.clone(),
-                        units: est_units,
+                        units: pool_units,
                     });
                     self.trace(
                         now,
-                        TraceKind::Scale { pool: pool.clone(), phase: "decide".into(), factor },
+                        TraceKind::Scale {
+                            pool: scale_label(class, endpoint),
+                            phase: "decide".into(),
+                            factor,
+                        },
                     );
-                    self.trace(now, TraceKind::Provision { pool, units: est_units });
+                    self.trace(now, TraceKind::Provision { pool, units: pool_units });
                 }
-                ScaleCmd::Apply { class, factor } => {
-                    if let Some(units) = self.backend.resize(now, class, factor) {
+                ScaleCmd::Apply { class, endpoint, factor } => {
+                    if let Some(reached) = self.backend.resize(now, class, endpoint, factor) {
                         applied = true;
+                        // substrate truth, floored by the autoscaler's
+                        // billed pool total: without the floor, an Apply on
+                        // one endpoint would re-record the class series at
+                        // substrate level and silently un-bill another
+                        // endpoint's still-warming requisition (billed from
+                        // its decision instant). Over-billing under an
+                        // active provider fault is the conservative side
+                        // for the savings claim.
+                        let billed =
+                            self.asc.as_deref().map_or(0, |a| a.billed_units(class));
+                        let units = reached.max(billed);
                         let pool = class.name().to_string();
                         self.metrics.provision.push(ProvisionRecord {
                             at: now,
@@ -281,7 +309,7 @@ impl Driver<'_> {
                         self.trace(
                             now,
                             TraceKind::Scale {
-                                pool: pool.clone(),
+                                pool: scale_label(class, endpoint),
                                 phase: "apply".into(),
                                 factor,
                             },

@@ -164,19 +164,97 @@ mod tests {
         let t = SimTime::ZERO;
         assert!(be.inject(t, &ScenarioEvent::CpuPoolScale { factor: 0.5 }));
         // autoscaler squeezes the faulted pool further: 0.5 × 0.5 = 0.25
-        assert_eq!(be.resize(t, PoolClass::Cpu, 0.5), Some(8));
+        assert_eq!(be.resize(t, PoolClass::Cpu, None, 0.5), Some(8));
         // fault restores, autoscaler factor survives: capacity = 0.5 × 32
         assert!(be.inject(t, &ScenarioEvent::CpuPoolScale { factor: 1.0 }));
         assert_eq!(be.cpu.total_cores() - be.cpu.cordoned_cores() as u64, 16);
         // autoscaler restores under no fault → the full pool returns
-        assert_eq!(be.resize(t, PoolClass::Cpu, 1.0), Some(32));
+        assert_eq!(be.resize(t, PoolClass::Cpu, None, 1.0), Some(32));
         // API side: a provider flap survives an autoscaler scale-up
         let lanes0 = be.provisioned_lanes();
         assert!(be.inject(t, &ScenarioEvent::ApiLimitScale { factor: 0.5 }));
         let flapped = be.provisioned_lanes();
         assert!(flapped < lanes0);
-        let after = be.resize(t, PoolClass::Api, 1.0).unwrap();
+        let after = be.resize(t, PoolClass::Api, None, 1.0).unwrap();
         assert_eq!(after, flapped, "scale-up must not cancel the provider fault");
+    }
+
+    #[test]
+    fn gpu_resize_composes_with_flushes_and_fault_restores() {
+        // The PoolClass::Gpu mirror of the CPU/API composition regression:
+        // a gpu_cache_flush injected mid-scale-down must not cancel the
+        // autoscale factor, a gpu_pool_scale fault composes (product), and
+        // a fault restore must not undo the autoscaler's scale-down.
+        use crate::autoscale::PoolClass;
+        use crate::scenario::ScenarioEvent;
+        use crate::sim::SimTime;
+        let cat = small_cat();
+        let mut be = TangramBackend::new(
+            &cat,
+            TangramCfg {
+                cpu_nodes: 2,
+                numa_per_node: 2,
+                cores_per_numa: 8,
+                node_mem_gb: 256,
+                gpu_nodes: 4, // 32 GPUs
+                ..TangramCfg::default()
+            },
+        );
+        let t = SimTime::ZERO;
+        assert_eq!(be.gpu.provisioned_gpus(), 32);
+        // autoscaler cordons half the nodes
+        assert_eq!(be.resize(t, PoolClass::Gpu, None, 0.5), Some(16));
+        assert_eq!(be.gpu.cordoned_nodes(), 2);
+        // a cache flush mid-scale-down drops residencies but NOT cordons
+        assert!(be.inject(t, &ScenarioEvent::GpuCacheFlush));
+        assert_eq!(be.gpu.cordoned_nodes(), 2, "flush must not cancel the scale-down");
+        assert_eq!(be.gpu.provisioned_gpus(), 16);
+        // a provider-side squeeze composes: 0.5 × 0.5 = 0.25 → 1 node
+        assert!(be.inject(t, &ScenarioEvent::GpuPoolScale { factor: 0.5 }));
+        assert_eq!(be.gpu.provisioned_gpus(), 8);
+        // fault restores, the autoscaler's scale-down survives: 0.5 × 32
+        assert!(be.inject(t, &ScenarioEvent::GpuPoolScale { factor: 1.0 }));
+        assert_eq!(be.gpu.provisioned_gpus(), 16, "fault restore must not undo it");
+        // autoscaler restores under no fault → the full pool returns
+        assert_eq!(be.resize(t, PoolClass::Gpu, None, 1.0), Some(32));
+        assert_eq!(be.gpu.cordoned_nodes(), 0);
+    }
+
+    #[test]
+    fn api_endpoints_resize_independently() {
+        use crate::autoscale::{PoolClass, PoolPressure};
+        use crate::sim::SimTime;
+        let cat = small_cat();
+        let mut be = tangram_for(&cat);
+        let t = SimTime::ZERO;
+        let rows: Vec<PoolPressure> = be.scale_classes();
+        // one row per class target: cpu, gpu, then one per endpoint sorted
+        // by endpoint kind id
+        assert_eq!(rows[0].class, PoolClass::Cpu);
+        assert_eq!(rows[1].class, PoolClass::Gpu);
+        let eps: Vec<u32> = rows[2..].iter().map(|r| r.endpoint.unwrap()).collect();
+        assert_eq!(rows[2..].len(), cat.api.len());
+        let mut sorted = eps.clone();
+        sorted.sort_unstable();
+        assert_eq!(eps, sorted, "endpoint rows must be sorted by kind id");
+        // squeeze only the first endpoint: its lanes shrink, the rest stay
+        let lanes0 = be.provisioned_lanes();
+        let first = eps[0];
+        let after = be.resize(t, PoolClass::Api, Some(first), 0.25).unwrap();
+        assert!(after < lanes0);
+        let rows2 = be.scale_classes();
+        let row_first = rows2.iter().find(|r| r.endpoint == Some(first)).unwrap();
+        assert!(row_first.provisioned_units < row_first.baseline_units);
+        for r in rows2.iter().filter(|r| r.class == PoolClass::Api) {
+            if r.endpoint != Some(first) {
+                assert_eq!(
+                    r.provisioned_units, r.baseline_units,
+                    "untouched endpoints must keep their static provision"
+                );
+            }
+        }
+        // restoring the endpoint returns the full lane count
+        assert_eq!(be.resize(t, PoolClass::Api, Some(first), 1.0), Some(lanes0));
     }
 
     #[test]

@@ -109,10 +109,15 @@ pub struct TangramBackend {
     /// substrate, so a scale-up never cancels an injected provider flap
     /// and an injected restore never silently undoes an autoscaler
     /// scale-down (the two layers own different knobs in production too).
+    /// The API autoscale factor is **per endpoint** (quota lanes resize
+    /// per provider); a `gpu_cache_flush` is orthogonal to both GPU
+    /// factors — it drops residencies, never cordons.
     fault_cpu_scale: f64,
     auto_cpu_scale: f64,
+    fault_gpu_scale: f64,
+    auto_gpu_scale: f64,
     fault_api_scale: f64,
-    auto_api_scale: f64,
+    auto_api_scale: HashMap<ResourceKindId, f64>,
 }
 
 impl TangramBackend {
@@ -166,8 +171,10 @@ impl TangramBackend {
             drain_wall: std::time::Duration::ZERO,
             fault_cpu_scale: 1.0,
             auto_cpu_scale: 1.0,
+            fault_gpu_scale: 1.0,
+            auto_gpu_scale: 1.0,
             fault_api_scale: 1.0,
-            auto_api_scale: 1.0,
+            auto_api_scale: HashMap::new(),
         }
     }
 
@@ -183,17 +190,37 @@ impl TangramBackend {
         }
     }
 
-    /// Push the composed (fault × autoscale) API scale into every provider
-    /// limit, re-derive the 90%-of-limit admission margins, and re-dirty
-    /// the endpoint pools.
-    fn apply_api_scale(&mut self) {
-        let f = (self.fault_api_scale * self.auto_api_scale).max(0.0);
-        for (kind, ep) in self.endpoints.iter_mut() {
+    /// Push the composed (fault × autoscale) GPU scale into the whole-node
+    /// cordon machinery and re-dirty the GPU pool — capacity moved either
+    /// way, and a restore must immediately revive a stalled queue.
+    fn apply_gpu_scale(&mut self) {
+        let f = (self.fault_gpu_scale * self.auto_gpu_scale).clamp(0.0, 1.0);
+        let _ = self.gpu.set_pool_scale(f);
+        self.dirty.insert(PoolId::Gpu);
+    }
+
+    /// Push the composed (fault × per-endpoint autoscale) API scale into
+    /// one provider's limits, re-derive its 90%-of-limit admission margin,
+    /// and re-dirty the endpoint pool.
+    fn apply_api_scale_one(&mut self, kind: ResourceKindId) {
+        let auto = self.auto_api_scale.get(&kind).copied().unwrap_or(1.0);
+        let f = (self.fault_api_scale * auto).max(0.0);
+        if let Some(ep) = self.endpoints.get_mut(&kind) {
             ep.scale_limits(f);
-            if let Some(mgr) = self.api_mgrs.get_mut(kind) {
+            if let Some(mgr) = self.api_mgrs.get_mut(&kind) {
                 mgr.limit = ((ep.spec.max_concurrency as f64 * 0.9) as u64).max(1);
             }
-            self.dirty.insert(PoolId::Api(*kind));
+            self.dirty.insert(PoolId::Api(kind));
+        }
+    }
+
+    /// [`Self::apply_api_scale_one`] over every endpoint (fault flaps hit
+    /// all providers at once; autoscaler resizes come in per-endpoint).
+    fn apply_api_scale(&mut self) {
+        let mut kinds: Vec<ResourceKindId> = self.endpoints.keys().copied().collect();
+        kinds.sort();
+        for kind in kinds {
+            self.apply_api_scale_one(kind);
         }
     }
 
@@ -605,18 +632,20 @@ impl Backend for TangramBackend {
     fn provisioned(&self) -> Vec<(String, u64)> {
         vec![
             ("cpu_cores".into(), self.cpu.total_cores() - self.cpu.cordoned_cores() as u64),
-            ("gpus".into(), self.gpu.total_gpus() as u64),
+            ("gpus".into(), self.gpu.provisioned_gpus() as u64),
             ("api_lanes".into(), self.provisioned_lanes()),
         ]
     }
 
     fn scale_classes(&self) -> Vec<PoolPressure> {
-        // sorted by PoolClass (Cpu < Api) — the autoscaler's eval order
+        // sorted by (class, endpoint): Cpu < Gpu < Api, endpoints by kind
+        // id — the autoscaler's deterministic eval order
         let total = self.cpu.total_cores();
         let cordoned = self.cpu.cordoned_cores() as u64;
         let free = self.cpu.free_cores();
         let cpu = PoolPressure {
             class: PoolClass::Cpu,
+            endpoint: None,
             queued: self.cpu_queues.values().map(|q| q.len() as u64).sum(),
             // minimum core demand of the waiting work (unit-denominated,
             // so policies never mix action counts into core sums)
@@ -632,24 +661,49 @@ impl Backend for TangramBackend {
             provisioned_units: total - cordoned,
             baseline_units: total,
         };
-        let api_queued: u64 = self.api_queues.values().map(|q| q.len() as u64).sum();
-        let api = PoolPressure {
-            class: PoolClass::Api,
-            queued: api_queued,
-            // every API call occupies exactly one provider lane
-            queued_units: api_queued,
-            in_use_units: self.endpoints.values().map(|e| e.in_flight() as u64).sum(),
-            provisioned_units: self.provisioned_lanes(),
-            baseline_units: self
-                .endpoints
-                .values()
-                .map(|e| e.base_concurrency() as u64)
+        let gpu = PoolPressure {
+            class: PoolClass::Gpu,
+            endpoint: None,
+            queued: self.gpu_queue.len() as u64,
+            queued_units: self
+                .gpu_queue
+                .iter()
+                .map(|a| a.spec.cost.dim(self.gpu_kind).min_units())
                 .sum(),
+            in_use_units: self.gpu.in_use_gpus(),
+            provisioned_units: self.gpu.provisioned_gpus() as u64,
+            baseline_units: self.gpu.total_gpus() as u64,
         };
-        vec![cpu, api]
+        let mut rows = vec![cpu, gpu];
+        // per-endpoint API pressure: each provider's quota lanes scale
+        // independently (a flapping search provider must not drag the
+        // PDF-parse lanes down with it)
+        let mut kinds: Vec<ResourceKindId> = self.endpoints.keys().copied().collect();
+        kinds.sort();
+        for kind in kinds {
+            let ep = &self.endpoints[&kind];
+            let queued = self.api_queues[&kind].len() as u64;
+            rows.push(PoolPressure {
+                class: PoolClass::Api,
+                endpoint: Some(kind.0),
+                queued,
+                // every API call occupies exactly one provider lane
+                queued_units: queued,
+                in_use_units: ep.in_flight() as u64,
+                provisioned_units: ep.spec.max_concurrency as u64,
+                baseline_units: ep.base_concurrency() as u64,
+            });
+        }
+        rows
     }
 
-    fn resize(&mut self, _now: SimTime, class: PoolClass, factor: f64) -> Option<u64> {
+    fn resize(
+        &mut self,
+        _now: SimTime,
+        class: PoolClass,
+        endpoint: Option<u32>,
+        factor: f64,
+    ) -> Option<u64> {
         // the autoscaler owns its own factor; the substrate sees the
         // composition with any injected fault, through the same cordon /
         // provider-limit machinery (incl. pool dirtying) as `inject`
@@ -659,9 +713,28 @@ impl Backend for TangramBackend {
                 self.apply_cpu_scale();
                 Some(self.cpu.total_cores() - self.cpu.cordoned_cores() as u64)
             }
+            PoolClass::Gpu => {
+                self.auto_gpu_scale = factor.clamp(0.0, 1.0);
+                self.apply_gpu_scale();
+                Some(self.gpu.provisioned_gpus() as u64)
+            }
             PoolClass::Api => {
-                self.auto_api_scale = factor.max(0.0);
-                self.apply_api_scale();
+                let f = factor.max(0.0);
+                match endpoint {
+                    Some(e) => {
+                        self.auto_api_scale.insert(ResourceKindId(e), f);
+                        self.apply_api_scale_one(ResourceKindId(e));
+                    }
+                    None => {
+                        // blanket resize (tests / class-wide policies)
+                        let kinds: Vec<ResourceKindId> =
+                            self.endpoints.keys().copied().collect();
+                        for k in kinds {
+                            self.auto_api_scale.insert(k, f);
+                        }
+                        self.apply_api_scale();
+                    }
+                }
                 Some(self.provisioned_lanes())
             }
         }
@@ -678,8 +751,16 @@ impl Backend for TangramBackend {
                 !self.endpoints.is_empty()
             }
             ScenarioEvent::GpuCacheFlush => {
+                // orthogonal to the GPU scale factors: residencies drop,
+                // cordons are untouched — a flush mid-scale-down must not
+                // cancel the autoscale factor
                 self.gpu.flush_caches();
                 self.dirty.insert(PoolId::Gpu);
+                true
+            }
+            ScenarioEvent::GpuPoolScale { factor } => {
+                self.fault_gpu_scale = *factor;
+                self.apply_gpu_scale();
                 true
             }
             ScenarioEvent::CpuPoolScale { factor } => {

@@ -22,6 +22,7 @@
 //!   arl-tangram scenario --pack api-flap --backend tangram --record t.jsonl
 //!   arl-tangram scenario --replay t.jsonl
 //!   arl-tangram scenario --pack coldstart-storm --autoscale --record auto.jsonl
+//!   arl-tangram scenario --pack gpu-thrash --autoscale   # GPU-elastic A/B reference
 //!   arl-tangram scenario --replay static.jsonl --against auto.jsonl
 //!   arl-tangram bench-gate --baseline testdata/BENCH_sched.baseline.json
 //!   arl-tangram serve --artifacts artifacts

@@ -536,6 +536,23 @@ mod tests {
     }
 
     #[test]
+    fn gpu_pool_series_contributes_to_savings() {
+        // a gpus scale-down mid-run must shrink the gpus unit-hours and
+        // surface in the aggregate savings alongside the other pools
+        let mut m = Metrics::new();
+        m.actions.push(rec(1, 0, 1, 100, ActionKind::RewardModel));
+        m.provision.push(prov(0, "cpu_cores", 128));
+        m.provision.push(prov(0, "gpus", 24));
+        m.provision.push(prov(50, "gpus", 8)); // cordoned to one node
+        let (used, stat) = m.pool_unit_hours("gpus");
+        assert!(used < stat, "gpus used {used} !< static {stat}");
+        assert!((used - (24.0 * 50.0 + 8.0 * 50.0) / 3600.0).abs() < 1e-9);
+        // aggregate: cpu 128×100 + gpus (24×50 + 8×50) of 12800+2400 static
+        let expected = 1.0 - (12800.0 + 1600.0) / (12800.0 + 2400.0);
+        assert!((m.savings_vs_static() - expected).abs() < 1e-9);
+    }
+
+    #[test]
     fn savings_weight_pools_by_static_share() {
         let mut m = Metrics::new();
         m.actions.push(rec(1, 0, 1, 100, ActionKind::EnvExec));

@@ -63,6 +63,13 @@ pub enum ScenarioEvent {
     /// (service, DoP) variant pays a cold restore (a restore-storm follows
     /// under MOPD-style bursts).
     GpuCacheFlush,
+    /// Resize the GPU pool mid-run: cordon whole GPU nodes coldest-first
+    /// (EOE-residency-aware; busy chunks are never preempted, at least one
+    /// node stays online) so only ~`factor` of the nodes keep taking work.
+    /// `1.0` restores cordoned nodes — with flushed caches, so restored
+    /// capacity re-warms through the ordinary cache-miss path. Composes
+    /// (product) with any autoscaler `PoolClass::Gpu` factor.
+    GpuPoolScale { factor: f64 },
     /// Resize the CPU pool mid-run: cordon cores on every node so only
     /// `factor` of each node's cores stay schedulable (best-effort — busy
     /// cores are not preempted; at least one core per node stays online).
@@ -76,6 +83,7 @@ impl ScenarioEvent {
         match self {
             ScenarioEvent::ApiLimitScale { factor } => format!("api_limit_scale {factor}"),
             ScenarioEvent::GpuCacheFlush => "gpu_cache_flush".to_string(),
+            ScenarioEvent::GpuPoolScale { factor } => format!("gpu_pool_scale {factor}"),
             ScenarioEvent::CpuPoolScale { factor } => format!("cpu_pool_scale {factor}"),
         }
     }
@@ -89,6 +97,10 @@ impl ScenarioEvent {
             ScenarioEvent::GpuCacheFlush => {
                 Json::obj(vec![("kind", Json::str("gpu_cache_flush"))])
             }
+            ScenarioEvent::GpuPoolScale { factor } => Json::obj(vec![
+                ("kind", Json::str("gpu_pool_scale")),
+                ("factor", Json::num(*factor)),
+            ]),
             ScenarioEvent::CpuPoolScale { factor } => Json::obj(vec![
                 ("kind", Json::str("cpu_pool_scale")),
                 ("factor", Json::num(*factor)),
@@ -109,6 +121,7 @@ impl ScenarioEvent {
         Ok(match kind {
             "api_limit_scale" => ScenarioEvent::ApiLimitScale { factor: factor()? },
             "gpu_cache_flush" => ScenarioEvent::GpuCacheFlush,
+            "gpu_pool_scale" => ScenarioEvent::GpuPoolScale { factor: factor()? },
             "cpu_pool_scale" => ScenarioEvent::CpuPoolScale { factor: factor()? },
             other => bail!("unknown scenario event kind '{other}'"),
         })
@@ -250,6 +263,11 @@ impl ScenarioSpec {
                 ScenarioEvent::CpuPoolScale { factor } => {
                     if !(0.05..=1.0).contains(&factor) {
                         bail!("cpu_pool_scale factor {factor} out of [0.05, 1]");
+                    }
+                }
+                ScenarioEvent::GpuPoolScale { factor } => {
+                    if !(0.05..=1.0).contains(&factor) {
+                        bail!("gpu_pool_scale factor {factor} out of [0.05, 1]");
                     }
                 }
                 ScenarioEvent::GpuCacheFlush => {}
@@ -450,5 +468,27 @@ mod tests {
             "api_limit_scale 0.25"
         );
         assert_eq!(ScenarioEvent::GpuCacheFlush.describe(), "gpu_cache_flush");
+        assert_eq!(
+            ScenarioEvent::GpuPoolScale { factor: 0.5 }.describe(),
+            "gpu_pool_scale 0.5"
+        );
+    }
+
+    #[test]
+    fn gpu_pool_scale_round_trips_and_validates() {
+        let spec = ScenarioSpec::from_json(
+            r#"{"name":"x","workloads":["mopd"],"events":[{"kind":"gpu_pool_scale","factor":0.5,"at_secs":3}]}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            spec.events[0].event,
+            ScenarioEvent::GpuPoolScale { factor: 0.5 }
+        );
+        let j = spec.to_json().to_string();
+        assert_eq!(ScenarioSpec::from_json(&j).unwrap().to_json().to_string(), j);
+        assert!(ScenarioSpec::from_json(
+            r#"{"name":"x","workloads":["mopd"],"events":[{"kind":"gpu_pool_scale","factor":0.0,"at_secs":3}]}"#
+        )
+        .is_err());
     }
 }

@@ -4,8 +4,8 @@
 //! backend (each backend executes the subset of the mix it supports). Packs
 //! are deliberately small — the DES makes them seconds-fast — while still
 //! hitting the stress axes the paper motivates: workload mixing, arrival
-//! bursts, API rate-limit flaps, GPU restore-storms, and mid-run CPU pool
-//! squeezes. `arl-tangram scenario --list` prints this catalog.
+//! bursts, API rate-limit flaps, GPU restore-storms, and mid-run CPU and
+//! GPU pool squeezes. `arl-tangram scenario --list` prints this catalog.
 
 use super::{ScenarioEvent, ScenarioSpec, TimedEvent};
 use crate::rollout::workloads::{CatalogCfg, WorkloadKind};
@@ -162,6 +162,40 @@ pub fn builtin_packs() -> Vec<ScenarioSpec> {
             events: vec![at(30, ScenarioEvent::GpuCacheFlush)],
             autoscale: None,
         },
+        // GPU-thrash: teacher-sweep-style arrivals under cache-flush storms
+        // plus a mid-run provider-side GPU squeeze — the GPU-elasticity A/B
+        // reference pack. Two RL steps with a 120s training gap and long
+        // MOPD generation tails leave the teacher pool idle for most of the
+        // run (Fig. 3(b): <3% static teacher-GPU activity), which is where
+        // the `PoolClass::Gpu` lane's savings live; the flush storm and the
+        // gpu_pool_scale flap exercise fault × resize composition (a flush
+        // mid-scale-down must not cancel the autoscale factor, the fault
+        // restore must not undo it) and scale-up against cold caches.
+        ScenarioSpec {
+            name: "gpu-thrash".into(),
+            workloads: vec![WorkloadKind::Mopd],
+            batch: 16,
+            steps: 2,
+            seed: 909,
+            arrival_spread: SimDur::from_secs(8),
+            catalog: CatalogCfg {
+                cpu_nodes: 2,
+                cores_per_node: 64,
+                gpu_nodes: 3,
+                n_teachers: 8,
+                ..CatalogCfg::default()
+            },
+            events: vec![
+                at(20, ScenarioEvent::GpuCacheFlush),
+                at(50, ScenarioEvent::GpuCacheFlush),
+                at(80, ScenarioEvent::GpuPoolScale { factor: 0.5 }),
+                at(110, ScenarioEvent::GpuCacheFlush),
+                at(140, ScenarioEvent::GpuPoolScale { factor: 1.0 }),
+                at(200, ScenarioEvent::GpuCacheFlush),
+                at(300, ScenarioEvent::GpuCacheFlush),
+            ],
+            autoscale: None,
+        },
         // Multi-step flap+squeeze composition: API rate-limit flaps and CPU
         // pool squeezes interleave across two RL steps, so admission rides
         // quota windows while the cordon machinery shrinks and restores the
@@ -204,8 +238,9 @@ mod tests {
         assert!(pack_by_name("coldstart-storm").is_some());
         assert!(pack_by_name("teacher-sweep").is_some());
         assert!(pack_by_name("flap-squeeze").is_some());
+        assert!(pack_by_name("gpu-thrash").is_some());
         assert!(pack_by_name("nope").is_none());
-        assert!(builtin_packs().len() >= 8);
+        assert!(builtin_packs().len() >= 9);
     }
 
     #[test]

@@ -58,6 +58,94 @@ fn coldstart_storm_saves_resource_hours_at_act_parity() {
 }
 
 #[test]
+fn gpu_thrash_saves_resource_hours_at_act_parity() {
+    // The PoolClass::Gpu acceptance differential: autoscaling the
+    // gpu-thrash pack (teacher-sweep arrivals under cache-flush storms and
+    // a provider-side GPU squeeze) must save aggregate resource-hours vs
+    // the static run — with the `gpus` pool itself contributing — while
+    // staying within 10% of its mean ACT, with full completion both sides.
+    let (stat, auto, spec, _) = ab_outcomes("gpu-thrash");
+    let expected =
+        spec.workloads_for(BackendKind::Tangram).len() * spec.batch * spec.steps as usize;
+    assert_eq!(stat.metrics.trajectories.len(), expected);
+    assert_eq!(auto.metrics.trajectories.len(), expected, "autoscaling lost trajectories");
+    assert_eq!(auto.metrics.failed_actions(), 0, "autoscaling failed actions");
+
+    assert!(stat.metrics.savings_vs_static().abs() < 1e-12);
+    let savings = auto.metrics.savings_vs_static();
+    assert!(savings > 0.0, "autoscaler saved nothing: {savings}");
+
+    // the GPU lane itself must be elastic, not just ride on CPU/API savings
+    let (gpu_used, gpu_static) = auto.metrics.pool_unit_hours("gpus");
+    assert!(gpu_static > 0.0);
+    assert!(
+        gpu_used < gpu_static,
+        "gpus pool never scaled down: used {gpu_used} !< static {gpu_static}"
+    );
+
+    let (a, b) = (stat.metrics.mean_act(), auto.metrics.mean_act());
+    assert!(a > 0.0);
+    let drift = (b - a).abs() / a;
+    assert!(
+        drift <= 0.10,
+        "mean ACT drifted {:.1}% (static {a:.2}s vs autoscaled {b:.2}s)",
+        drift * 100.0
+    );
+}
+
+#[test]
+fn gpu_thrash_faults_compose_with_gpu_autoscaling() {
+    // Driver-level mirror of the backend composition regression: the pack
+    // injects gpu_cache_flush storms and a gpu_pool_scale flap+restore in
+    // the middle of autoscaled GPU resizes — every injection must apply,
+    // the run must complete, and the trace must carry gpus scale events.
+    let spec = {
+        let mut s = pack_by_name("gpu-thrash").unwrap();
+        s.autoscale = Some(AutoscaleCfg::default());
+        s
+    };
+    let outcome = run_scenario(&spec, BackendKind::Tangram).unwrap();
+    let applied: Vec<bool> = outcome
+        .events
+        .iter()
+        .filter_map(|e| match &e.kind {
+            TraceKind::Inject { applied, .. } => Some(*applied),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(applied.len(), spec.events.len());
+    assert!(applied.iter().all(|&a| a), "tangram must honor flushes and GPU squeezes");
+    let gpu_scales = outcome
+        .events
+        .iter()
+        .filter(|e| matches!(&e.kind, TraceKind::Scale { pool, .. } if pool == "gpus"))
+        .count();
+    assert!(gpu_scales > 0, "no gpus scale decisions recorded");
+    assert_eq!(outcome.metrics.failed_actions(), 0);
+    assert_eq!(
+        outcome.metrics.trajectories.len(),
+        spec.workloads_for(BackendKind::Tangram).len() * spec.batch * spec.steps as usize
+    );
+}
+
+#[test]
+fn gpu_thrash_autoscaled_trace_records_and_replays() {
+    use arl_tangram::scenario::replay_trace;
+    let mut spec = pack_by_name("gpu-thrash").unwrap();
+    spec.autoscale = Some(AutoscaleCfg::default());
+    let outcome = run_scenario(&spec, BackendKind::Tangram).unwrap();
+    let text = trace_file_contents(&spec, BackendKind::Tangram, &outcome);
+    let recorded = parse_trace_file(&text).unwrap();
+    assert_eq!(recorded.spec.autoscale, spec.autoscale);
+    let report = replay_trace(&recorded).unwrap();
+    assert!(
+        report.identical,
+        "gpu-thrash autoscaled replay diverged: {:?} {:?}",
+        report.summary_diff, report.trace_divergences
+    );
+}
+
+#[test]
 fn autoscaled_runs_are_deterministic() {
     let spec = {
         let mut s = pack_by_name("coldstart-storm").unwrap();

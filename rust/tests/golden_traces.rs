@@ -13,8 +13,9 @@
 //!   diff (reviewers see exactly which decisions moved). See ROADMAP.md
 //!   "Golden traces".
 
+use arl_tangram::autoscale::AutoscaleCfg;
 use arl_tangram::config::BackendKind;
-use arl_tangram::scenario::{builtin_packs, run_scenario, trace_file_contents};
+use arl_tangram::scenario::{builtin_packs, run_scenario, trace_file_contents, ScenarioSpec};
 use std::path::PathBuf;
 
 fn golden_dir() -> PathBuf {
@@ -34,6 +35,50 @@ fn golden_dir() -> PathBuf {
 /// binary run concurrently) so the parser never sees a half-written bless.
 static GOLDEN_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
 
+/// Check (or bless) one pack×backend variant against its golden file.
+/// Returns `true` when the file was freshly blessed.
+fn check_variant(
+    dir: &std::path::Path,
+    spec: &ScenarioSpec,
+    backend: BackendKind,
+    suffix: &str,
+    bless_all: bool,
+    blessed: &mut Vec<String>,
+) -> bool {
+    let path = dir.join(format!("{}__{}{suffix}.jsonl", spec.name, backend.name()));
+    let outcome = run_scenario(spec, backend).expect("scenario runs");
+    let fresh = trace_file_contents(spec, backend, &outcome);
+    if bless_all || !path.exists() {
+        std::fs::write(&path, &fresh).expect("write golden trace");
+        blessed.push(path.display().to_string());
+        return true;
+    }
+    let recorded = std::fs::read_to_string(&path).expect("read golden trace");
+    if recorded != fresh {
+        let diverged = recorded
+            .lines()
+            .zip(fresh.lines())
+            .enumerate()
+            .find(|(_, (a, b))| a != b)
+            .map(|(i, (a, b))| format!("line {}:\n  golden: {a}\n  fresh:  {b}", i + 1))
+            .unwrap_or_else(|| {
+                format!(
+                    "line counts differ: golden {} vs fresh {}",
+                    recorded.lines().count(),
+                    fresh.lines().count()
+                )
+            });
+        panic!(
+            "golden trace diverged: {}\n{diverged}\n\
+             If this scheduling change is INTENTIONAL, regenerate with\n  \
+             ARL_GOLDEN_BLESS=1 cargo test --test golden_traces\n\
+             and commit the updated rust/testdata/golden/ files (ROADMAP.md \"Golden traces\").",
+            path.display(),
+        );
+    }
+    false
+}
+
 #[test]
 fn every_pack_and_backend_replays_byte_identical_against_golden() {
     let _guard = GOLDEN_LOCK.lock().unwrap();
@@ -47,39 +92,23 @@ fn every_pack_and_backend_replays_byte_identical_against_golden() {
             if spec.workloads_for(backend).is_empty() {
                 continue; // single-purpose baseline: unsupported mix subset
             }
-            let path = dir.join(format!("{}__{}.jsonl", spec.name, backend.name()));
-            let outcome = run_scenario(&spec, backend).expect("scenario runs");
-            let fresh = trace_file_contents(&spec, backend, &outcome);
-            if bless_all || !path.exists() {
-                std::fs::write(&path, &fresh).expect("write golden trace");
-                blessed.push(path.display().to_string());
-                continue;
+            if !check_variant(&dir, &spec, backend, "", bless_all, &mut blessed) {
+                checked += 1;
             }
-            let recorded = std::fs::read_to_string(&path).expect("read golden trace");
-            if recorded != fresh {
-                let diverged = recorded
-                    .lines()
-                    .zip(fresh.lines())
-                    .enumerate()
-                    .find(|(_, (a, b))| a != b)
-                    .map(|(i, (a, b))| {
-                        format!("line {}:\n  golden: {a}\n  fresh:  {b}", i + 1)
-                    })
-                    .unwrap_or_else(|| {
-                        format!(
-                            "line counts differ: golden {} vs fresh {}",
-                            recorded.lines().count(),
-                            fresh.lines().count()
-                        )
-                    });
-                panic!(
-                    "golden trace diverged: {}\n{diverged}\n\
-                     If this scheduling change is INTENTIONAL, regenerate with\n  \
-                     ARL_GOLDEN_BLESS=1 cargo test --test golden_traces\n\
-                     and commit the updated rust/testdata/golden/ files (ROADMAP.md \"Golden traces\").",
-                    path.display(),
-                );
-            }
+        }
+        // autoscaled variant: tangram is the only elastic backend, so one
+        // autoscaled golden per pack pins the full scale-decision stream
+        // (the autoscale config is embedded in the trace header's spec)
+        let mut auto_spec = spec.clone();
+        auto_spec.autoscale = Some(AutoscaleCfg::default());
+        if !check_variant(
+            &dir,
+            &auto_spec,
+            BackendKind::Tangram,
+            "__autoscaled",
+            bless_all,
+            &mut blessed,
+        ) {
             checked += 1;
         }
     }
@@ -90,9 +119,10 @@ fn every_pack_and_backend_replays_byte_identical_against_golden() {
             blessed.join("\n  ")
         );
     }
-    // acceptance floor from the conformance suite: 8 packs × their backends
+    // acceptance floor: 9 packs × their backends (34 combos) plus one
+    // autoscaled tangram trace per pack (9)
     assert!(
-        checked + blessed.len() >= 28,
+        checked + blessed.len() >= 43,
         "pack×backend golden coverage shrank: {} combos",
         checked + blessed.len()
     );

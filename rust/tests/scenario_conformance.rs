@@ -83,7 +83,8 @@ fn every_pack_replays_byte_identically_on_every_backend() {
             per_backend.get(backend)
         );
     }
-    assert!(combos >= 28, "only {combos} pack×backend combos ran");
+    // 9 packs (gpu-thrash joined the catalog) over their supported backends
+    assert!(combos >= 34, "only {combos} pack×backend combos ran");
 }
 
 #[test]
@@ -227,6 +228,49 @@ fn teacher_sweep_multiplexes_the_larger_fleet() {
         .filter(|a| a.kind == arl_tangram::action::ActionKind::RewardModel)
         .count();
     assert!(rm_actions >= spec.batch, "teacher fleet barely exercised: {rm_actions}");
+}
+
+#[test]
+fn gpu_thrash_squeezes_and_recovers_the_gpu_pool() {
+    // The GPU pool-squeeze mirror of pool-squeeze: every flush and
+    // gpu_pool_scale injection must apply on tangram, the run completes
+    // every trajectory across both steps, and the flush storm raises
+    // restore overhead vs the same spec without events.
+    use arl_tangram::action::ActionKind;
+    let spec = pack_by_name("gpu-thrash").unwrap();
+    assert_eq!(spec.steps, 2, "gpu-thrash is a multi-step pack");
+    let outcome = run_scenario(&spec, BackendKind::Tangram).unwrap();
+    let applied: Vec<bool> = outcome
+        .events
+        .iter()
+        .filter_map(|e| match &e.kind {
+            TraceKind::Inject { applied, .. } => Some(*applied),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(applied.len(), spec.events.len());
+    assert!(applied.iter().all(|&a| a), "tangram must honor flushes and GPU squeezes");
+    assert_eq!(
+        outcome.metrics.trajectories.len(),
+        expected_trajectories(&spec, BackendKind::Tangram)
+    );
+    assert_eq!(outcome.metrics.failed_actions(), 0);
+    let mut calm = spec.clone();
+    calm.events.clear();
+    let without = run_scenario(&calm, BackendKind::Tangram).unwrap();
+    let restore = |m: &arl_tangram::metrics::Metrics| -> f64 {
+        m.actions
+            .iter()
+            .filter(|a| a.kind == ActionKind::RewardModel)
+            .map(|a| a.overhead.secs_f64())
+            .sum()
+    };
+    assert!(
+        restore(&outcome.metrics) > restore(&without.metrics),
+        "thrash must raise restore overhead: {} !> {}",
+        restore(&outcome.metrics),
+        restore(&without.metrics)
+    );
 }
 
 #[test]
