@@ -7,7 +7,7 @@
 //! invocations super-linearly with pool count on multi-node packs — one
 //! completion pumps one pool, not `O(pools)` — at identical metrics.
 
-use arl_tangram::bench::{sched_bench_json, sched_bench_rows};
+use arl_tangram::bench::{admission_bench, sched_bench_json, sched_bench_rows};
 
 fn main() {
     println!("=== dirty-pool scheduling vs full sweep (tangram) ===");
@@ -29,8 +29,18 @@ fn main() {
             if r.metrics_equal { "equal" } else { "DIVERGED" },
         );
     }
+    let admission = admission_bench();
+    println!(
+        "admission ({}): mean ACT {:.2}s with vs {:.2}s without (ratio {:.4}), savings {:.3} / {:.3}",
+        admission.pack,
+        admission.mean_act_with,
+        admission.mean_act_without,
+        admission.act_ratio(),
+        admission.savings_with,
+        admission.savings_without,
+    );
     let out = std::env::var("ARL_BENCH_OUT").unwrap_or_else(|_| "BENCH_sched.json".to_string());
-    let json = sched_bench_json(&rows);
+    let json = sched_bench_json(&rows, &admission);
     match std::fs::write(&out, &json) {
         Ok(()) => println!("\nwrote {out}"),
         Err(e) => {

@@ -67,15 +67,18 @@ pub enum PoolClass {
 }
 
 impl PoolClass {
+    /// Every class in the deterministic evaluation order (the lane order of
+    /// `lanes::ElasticLane` implementations).
+    pub const ALL: [PoolClass; 3] = [PoolClass::Cpu, PoolClass::Gpu, PoolClass::Api];
+
     /// Stable pool name — matches the `Backend::provisioned` gauge names so
     /// provision records form one series per pool (per-endpoint API targets
     /// share the `api_lanes` series; see [`Autoscaler::billed_units`]).
+    /// Indexed, not matched: scaling paths stay free of per-class `match`es
+    /// (the `ElasticLane` refactor's contract).
     pub fn name(self) -> &'static str {
-        match self {
-            PoolClass::Cpu => "cpu_cores",
-            PoolClass::Gpu => "gpus",
-            PoolClass::Api => "api_lanes",
-        }
+        const NAMES: [&str; 3] = ["cpu_cores", "gpus", "api_lanes"];
+        NAMES[self as usize]
     }
 }
 
@@ -168,6 +171,16 @@ pub struct AutoscaleCfg {
     pub api_warmup: SimDur,
     /// Scale-factor quantization step (multiples are exact in f64/JSON).
     pub quantum: f64,
+    /// Autoscale-aware admission: when set, the driver schedules a wakeup
+    /// at each warming requisition's maturity instant and applies the
+    /// resize there, instead of waiting for the next evaluation tick past
+    /// the warm-up — queued work is pre-admitted against capacity that is
+    /// billed-but-still-warming, so queue wait overlaps the cold start
+    /// instead of following it. Billing points never move (scale-ups bill
+    /// from the decision instant either way); only the substrate-apply
+    /// instant does, so `savings_vs_static` agrees with the admission-off
+    /// run up to the decision-timing drift the earlier applies induce.
+    pub admission: bool,
 }
 
 impl Default for AutoscaleCfg {
@@ -185,6 +198,7 @@ impl Default for AutoscaleCfg {
             gpu_warmup: SimDur::from_secs(5),
             api_warmup: SimDur::from_secs(2),
             quantum: 0.125,
+            admission: false,
         }
     }
 }
@@ -215,16 +229,14 @@ impl AutoscaleCfg {
         Ok(())
     }
 
+    /// Per-class cold-start penalty, indexed (no per-class `match` on the
+    /// scaling path — the `ElasticLane` contract).
     pub fn warmup(&self, class: PoolClass) -> SimDur {
-        match class {
-            PoolClass::Cpu => self.cpu_warmup,
-            PoolClass::Gpu => self.gpu_warmup,
-            PoolClass::Api => self.api_warmup,
-        }
+        [self.cpu_warmup, self.gpu_warmup, self.api_warmup][class as usize]
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("policy", Json::str(self.policy.name())),
             ("interval_secs", Json::num(self.interval.secs_f64())),
             ("min_factor", Json::num(self.min_factor)),
@@ -237,7 +249,13 @@ impl AutoscaleCfg {
             ("gpu_warmup_secs", Json::num(self.gpu_warmup.secs_f64())),
             ("api_warmup_secs", Json::num(self.api_warmup.secs_f64())),
             ("quantum", Json::num(self.quantum)),
-        ])
+        ];
+        // emitted only when set, so default-config trace headers keep their
+        // pre-admission bytes (the golden-trace compatibility choice)
+        if self.admission {
+            pairs.push(("admission", Json::Bool(true)));
+        }
+        Json::obj(pairs)
     }
 
     pub fn from_json(j: &Json) -> Result<Self> {
@@ -272,6 +290,10 @@ impl AutoscaleCfg {
                 "gpu_warmup_secs" => cfg.gpu_warmup = d()?,
                 "api_warmup_secs" => cfg.api_warmup = d()?,
                 "quantum" => cfg.quantum = f()?,
+                "admission" => {
+                    cfg.admission =
+                        v.as_bool().ok_or_else(|| err!("'admission' must be a boolean"))?
+                }
                 other => bail!("unknown autoscale key '{other}'"),
             }
         }
@@ -343,6 +365,39 @@ impl Autoscaler {
 
     pub fn interval(&self) -> SimDur {
         self.cfg.interval
+    }
+
+    /// Whether autoscale-aware admission is on (see `AutoscaleCfg::admission`).
+    pub fn admission(&self) -> bool {
+        self.cfg.admission
+    }
+
+    /// Earliest instant a warming requisition becomes schedulable, if any —
+    /// the admission wakeup the driver schedules so capacity applies at
+    /// maturity instead of at the next evaluation tick past it.
+    pub fn next_pending_ready(&self) -> Option<SimTime> {
+        self.targets.values().filter_map(|st| st.pending.map(|(ready, _)| ready)).min()
+    }
+
+    /// Mature every warming requisition whose cold start has elapsed and
+    /// return the substrate resizes to run, in deterministic target order.
+    /// This is the admission fast path: it touches only `pending` state —
+    /// no policy evaluation, no demand-memory decay, no hysteresis clock —
+    /// so maturation itself never perturbs the decision stream or the
+    /// billed totals; only the apply instants move earlier.
+    pub fn mature(&mut self, now: SimTime) -> Vec<ScaleCmd> {
+        let mut cmds = Vec::new();
+        for (&(class, endpoint), st) in self.targets.iter_mut() {
+            if let Some((ready, f)) = st.pending {
+                if now >= ready {
+                    st.pending = None;
+                    st.factor = f;
+                    self.applied += 1;
+                    cmds.push(ScaleCmd::Apply { class, endpoint, factor: f });
+                }
+            }
+        }
+        cmds
     }
 
     pub fn policy_name(&self) -> &'static str {
@@ -694,6 +749,88 @@ mod tests {
             }],
             "requisitioned endpoint 0 plus endpoint 1 at full provision"
         );
+    }
+
+    #[test]
+    fn admission_flag_round_trips_and_defaults_off() {
+        let cfg = AutoscaleCfg::default();
+        assert!(!cfg.admission);
+        // default config omits the key entirely (golden-header stability)
+        assert!(!cfg.to_json().to_string().contains("admission"));
+        let on = AutoscaleCfg { admission: true, ..AutoscaleCfg::default() };
+        let j = on.to_json();
+        assert!(j.to_string().contains("\"admission\":true"));
+        let back = AutoscaleCfg::from_json(&j).unwrap();
+        assert_eq!(back, on);
+        assert!(
+            AutoscaleCfg::from_json(&Json::parse(r#"{"admission":"yes"}"#).unwrap()).is_err()
+        );
+    }
+
+    #[test]
+    fn mature_applies_exactly_at_the_ready_instant() {
+        let mut a = Autoscaler::new(AutoscaleCfg::default());
+        let idle = [obs(PoolClass::Cpu, 0, 0, 128)];
+        for s in [0u64, 2, 4, 6, 8, 10] {
+            let _ = a.eval(t(s), &idle);
+        }
+        assert_eq!(a.applied_factor(PoolClass::Cpu), 0.25);
+        assert_eq!(a.next_pending_ready(), None);
+        let busy = [obs(PoolClass::Cpu, 5, 10, 128)];
+        let cmds = a.eval(t(12), &busy);
+        assert!(matches!(cmds[0], ScaleCmd::Decide { .. }));
+        // requisitioned at t=12 under the 5s cpu cold start
+        assert_eq!(a.next_pending_ready(), Some(t(17)));
+        // billed from the decision instant while warming
+        assert_eq!(a.billed_units(PoolClass::Cpu), 128);
+        assert!(a.mature(t(16)).is_empty(), "cold start still running");
+        let cmds = a.mature(t(17));
+        assert_eq!(
+            cmds,
+            vec![ScaleCmd::Apply { class: PoolClass::Cpu, endpoint: None, factor: 1.0 }]
+        );
+        assert_eq!(a.applied_factor(PoolClass::Cpu), 1.0);
+        assert_eq!(a.next_pending_ready(), None);
+        // billing is unchanged by the early apply…
+        assert_eq!(a.billed_units(PoolClass::Cpu), 128);
+        // …and the next evaluation does not re-apply the matured resize
+        assert!(a.eval(t(18), &busy).is_empty());
+    }
+
+    #[test]
+    fn mature_keeps_other_targets_warming() {
+        // endpoint 0 bursts at t=12 (2s api warm-up → ready t=14), endpoint
+        // 1 bursts at t=13 via a direct second eval (ready t=15): maturing
+        // at t=14 must apply only endpoint 0 and keep endpoint 1 pending.
+        let mut a = Autoscaler::new(AutoscaleCfg::default());
+        let idle = [
+            obs_ep(PoolClass::Api, Some(0), 0, 0, 100),
+            obs_ep(PoolClass::Api, Some(1), 0, 0, 100),
+        ];
+        for s in [0u64, 2, 4, 6, 8, 10] {
+            let _ = a.eval(t(s), &idle);
+        }
+        let burst0 = [
+            obs_ep(PoolClass::Api, Some(0), 4, 0, 100),
+            obs_ep(PoolClass::Api, Some(1), 0, 0, 100),
+        ];
+        let _ = a.eval(t(12), &burst0);
+        let burst_both = [
+            obs_ep(PoolClass::Api, Some(0), 4, 0, 100),
+            obs_ep(PoolClass::Api, Some(1), 4, 0, 100),
+        ];
+        let _ = a.eval(t(13), &burst_both);
+        assert_eq!(a.next_pending_ready(), Some(t(14)));
+        let billed_warming = a.billed_units(PoolClass::Api);
+        assert_eq!(billed_warming, 200, "both requisitions on the bill");
+        let cmds = a.mature(t(14));
+        assert_eq!(
+            cmds,
+            vec![ScaleCmd::Apply { class: PoolClass::Api, endpoint: Some(0), factor: 1.0 }]
+        );
+        // endpoint 0's apply never un-bills endpoint 1's warming requisition
+        assert_eq!(a.billed_units(PoolClass::Api), 200);
+        assert_eq!(a.next_pending_ready(), Some(t(15)));
     }
 
     #[test]

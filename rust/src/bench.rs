@@ -259,8 +259,56 @@ pub fn sched_bench_rows() -> Vec<SchedBenchRow> {
         .collect()
 }
 
-/// Serialize bench rows to the `BENCH_sched.json` format.
-pub fn sched_bench_json(rows: &[SchedBenchRow]) -> String {
+/// Autoscale-aware admission on/off differential on the autoscaler A/B
+/// reference pack — the `admission` section of `BENCH_sched.json`, which
+/// `bench-gate` ratchets alongside the dirty-vs-sweep invocation ratio.
+#[derive(Debug, Clone)]
+pub struct AdmissionBench {
+    pub pack: String,
+    /// Mean ACT with admission on (queue wait overlaps cold starts).
+    pub mean_act_with: f64,
+    /// …and off (resizes wait for the next evaluation tick past warm-up).
+    pub mean_act_without: f64,
+    /// Resource-hour savings either way — admission moves apply instants,
+    /// never the bill, so these two must be equal.
+    pub savings_with: f64,
+    pub savings_without: f64,
+}
+
+impl AdmissionBench {
+    /// with/without mean-ACT ratio: ≤ 1 means admission helped (or was
+    /// neutral); the gate's hard invariant.
+    pub fn act_ratio(&self) -> f64 {
+        if self.mean_act_without <= 0.0 {
+            return 1.0;
+        }
+        self.mean_act_with / self.mean_act_without
+    }
+}
+
+/// Run the admission differential (coldstart-storm, autoscaled, tangram).
+pub fn admission_bench() -> AdmissionBench {
+    use crate::autoscale::AutoscaleCfg;
+    use crate::config::BackendKind;
+    use crate::scenario::{pack_by_name, run_scenario};
+    let mut off_spec = pack_by_name("coldstart-storm").expect("coldstart-storm pack");
+    off_spec.autoscale = Some(AutoscaleCfg::default());
+    let mut on_spec = off_spec.clone();
+    on_spec.autoscale.as_mut().expect("autoscale set above").admission = true;
+    let off = run_scenario(&off_spec, BackendKind::Tangram).expect("admission-off run");
+    let on = run_scenario(&on_spec, BackendKind::Tangram).expect("admission-on run");
+    AdmissionBench {
+        pack: off_spec.name,
+        mean_act_with: on.metrics.mean_act(),
+        mean_act_without: off.metrics.mean_act(),
+        savings_with: on.metrics.savings_vs_static(),
+        savings_without: off.metrics.savings_vs_static(),
+    }
+}
+
+/// Serialize bench rows (plus the admission differential) to the
+/// `BENCH_sched.json` format.
+pub fn sched_bench_json(rows: &[SchedBenchRow], admission: &AdmissionBench) -> String {
     use crate::util::json::Json;
     Json::obj(vec![
         ("bench", Json::str("sched_dirty_pool")),
@@ -285,6 +333,17 @@ pub fn sched_bench_json(rows: &[SchedBenchRow]) -> String {
                     ("actions", Json::num(r.actions as f64)),
                 ])
             })),
+        ),
+        (
+            "admission",
+            Json::obj(vec![
+                ("pack", Json::str(admission.pack.clone())),
+                ("mean_act_with", Json::num(admission.mean_act_with)),
+                ("mean_act_without", Json::num(admission.mean_act_without)),
+                ("act_ratio", Json::num(admission.act_ratio())),
+                ("savings_with", Json::num(admission.savings_with)),
+                ("savings_without", Json::num(admission.savings_without)),
+            ]),
         ),
     ])
     .to_string()
@@ -333,6 +392,41 @@ pub fn parse_sched_bench(text: &str) -> crate::util::error::Result<Vec<GateRow>>
             })
         })
         .collect()
+}
+
+/// Parsed `admission` section of a `BENCH_sched.json` report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdmissionGate {
+    pub pack: String,
+    /// with/without mean-ACT ratio (≤ 1 = admission helps or is neutral).
+    pub act_ratio: f64,
+    pub savings_with: f64,
+    pub savings_without: f64,
+}
+
+/// Parse the optional `admission` section written by [`sched_bench_json`]
+/// (older baselines predate it — `Ok(None)`).
+pub fn parse_admission(text: &str) -> crate::util::error::Result<Option<AdmissionGate>> {
+    use crate::err;
+    let j = crate::util::json::Json::parse(text).map_err(|e| err!("BENCH_sched.json: {e}"))?;
+    let Some(a) = j.get("admission") else {
+        return Ok(None);
+    };
+    let field = |k: &str| {
+        a.get(k)
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| err!("admission section missing number '{k}'"))
+    };
+    Ok(Some(AdmissionGate {
+        pack: a
+            .get("pack")
+            .and_then(|p| p.as_str())
+            .ok_or_else(|| err!("admission section missing 'pack'"))?
+            .to_string(),
+        act_ratio: field("act_ratio")?,
+        savings_with: field("savings_with")?,
+        savings_without: field("savings_without")?,
+    }))
 }
 
 /// Result of the bench regression gate.
@@ -416,7 +510,69 @@ pub fn sched_bench_gate(
             ));
         }
     }
+    gate_admission(&mut report, parse_admission(baseline)?, parse_admission(fresh)?, tolerance);
     Ok(report)
+}
+
+/// Admission ratchet: the fresh report must uphold the hard invariants
+/// (admission never raises mean ACT, never moves the bill) and must not
+/// lose more than `tolerance` of the baseline's admission benefit.
+fn gate_admission(
+    report: &mut GateReport,
+    base: Option<AdmissionGate>,
+    fresh: Option<AdmissionGate>,
+    tolerance: f64,
+) {
+    let Some(f) = fresh else {
+        if base.is_some() {
+            report
+                .failures
+                .push("admission section present in baseline but missing from fresh run".into());
+        }
+        return;
+    };
+    if f.act_ratio > 1.0 + 1e-6 {
+        report.failures.push(format!(
+            "admission differential ('{}'): mean ACT with admission exceeds without \
+             (ratio {:.4})",
+            f.pack, f.act_ratio
+        ));
+    }
+    // billing points never move, but earlier applies shift post-apply
+    // dynamics and therefore later scale-DOWN decision timing — savings
+    // must agree up to that one-evaluation drift
+    if (f.savings_with - f.savings_without).abs() > 0.01 {
+        report.failures.push(format!(
+            "admission differential ('{}'): billing moved ({} vs {}) — admission must only \
+             move apply instants",
+            f.pack, f.savings_with, f.savings_without
+        ));
+    }
+    match base {
+        Some(b) => {
+            // lower ratio = bigger benefit; allow `tolerance` relative slack
+            let ceiling = b.act_ratio * (1.0 + tolerance);
+            let verdict = if f.act_ratio > ceiling { "REGRESSED" } else { "ok" };
+            report.lines.push(format!(
+                "{:<16} admission ACT ratio {:.4} -> {:.4} (ceiling {:.4}) {}",
+                f.pack, b.act_ratio, f.act_ratio, ceiling, verdict
+            ));
+            if f.act_ratio > ceiling {
+                report.failures.push(format!(
+                    "admission differential ('{}'): benefit regressed {:.4} -> {:.4} \
+                     (>{:.0}% loss)",
+                    f.pack,
+                    b.act_ratio,
+                    f.act_ratio,
+                    tolerance * 100.0
+                ));
+            }
+        }
+        None => report.lines.push(format!(
+            "{:<16} admission ACT ratio {:.4} — no baseline yet, commit one to ratchet it",
+            f.pack, f.act_ratio
+        )),
+    }
 }
 
 #[cfg(test)]
@@ -511,5 +667,65 @@ mod tests {
         assert!(sched_bench_gate("not json", "{}", 0.1).is_err());
         assert!(sched_bench_gate(r#"{"rows":[]}"#, "{}", 0.1).is_err());
         assert!(parse_sched_bench(r#"{"rows":[{"pack":"x"}]}"#).is_err());
+    }
+
+    fn bench_json_with_admission(
+        rows: &[(&str, f64, bool)],
+        ratio: f64,
+        s_with: f64,
+        s_without: f64,
+    ) -> String {
+        let body: Vec<String> = rows
+            .iter()
+            .map(|(p, r, eq)| {
+                format!(r#"{{"pack":"{p}","reduction":{r},"metrics_equal":{eq}}}"#)
+            })
+            .collect();
+        format!(
+            r#"{{"bench":"sched_dirty_pool","rows":[{}],"admission":{{"pack":"coldstart-storm","mean_act_with":1.0,"mean_act_without":1.0,"act_ratio":{ratio},"savings_with":{s_with},"savings_without":{s_without}}}}}"#,
+            body.join(",")
+        )
+    }
+
+    #[test]
+    fn admission_section_parses_and_is_optional() {
+        let plain = bench_json(&[("steady-mix", 4.0, true)]);
+        assert_eq!(parse_admission(&plain).unwrap(), None);
+        let with = bench_json_with_admission(&[("steady-mix", 4.0, true)], 0.95, 0.4, 0.4);
+        let a = parse_admission(&with).unwrap().unwrap();
+        assert_eq!(a.pack, "coldstart-storm");
+        assert!((a.act_ratio - 0.95).abs() < 1e-12);
+        assert!(parse_admission(r#"{"admission":{"pack":"x"}}"#).is_err());
+    }
+
+    #[test]
+    fn gate_ratchets_the_admission_differential() {
+        let rows = [("steady-mix", 4.0, true)];
+        let base = bench_json_with_admission(&rows, 0.90, 0.4, 0.4);
+        // within tolerance: 0.95 ≤ 0.90 × 1.10
+        let ok = bench_json_with_admission(&rows, 0.95, 0.4, 0.4);
+        let g = sched_bench_gate(&base, &ok, 0.10).unwrap();
+        assert!(g.passed(), "{:?}", g.failures);
+        assert!(g.lines.iter().any(|l| l.contains("admission ACT ratio")));
+        // benefit regressed past the ceiling
+        let worse = bench_json_with_admission(&rows, 0.9999, 0.4, 0.4);
+        let g = sched_bench_gate(&base, &worse, 0.10).unwrap();
+        assert!(!g.passed());
+        assert!(g.failures.iter().any(|f| f.contains("benefit regressed")));
+        // hard invariant: admission must never raise mean ACT…
+        let raised = bench_json_with_admission(&rows, 1.05, 0.4, 0.4);
+        let g = sched_bench_gate(&base, &raised, 0.10).unwrap();
+        assert!(g.failures.iter().any(|f| f.contains("exceeds without")));
+        // …or move the bill
+        let moved = bench_json_with_admission(&rows, 0.9, 0.5, 0.4);
+        let g = sched_bench_gate(&base, &moved, 0.10).unwrap();
+        assert!(g.failures.iter().any(|f| f.contains("billing moved")));
+        // a vanished section is a ratchet failure; a missing baseline is not
+        let plain = bench_json(&rows);
+        let g = sched_bench_gate(&base, &plain, 0.10).unwrap();
+        assert!(g.failures.iter().any(|f| f.contains("missing from fresh")));
+        let g = sched_bench_gate(&plain, &ok, 0.10).unwrap();
+        assert!(g.passed(), "{:?}", g.failures);
+        assert!(g.lines.iter().any(|l| l.contains("no baseline yet")));
     }
 }

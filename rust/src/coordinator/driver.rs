@@ -13,7 +13,7 @@
 
 use super::backend::{Backend, Verdict};
 use crate::action::{Action, ActionId, ActionKind, ActionSpec, ActionState, TrajId};
-use crate::autoscale::{Autoscaler, ScaleCmd};
+use crate::autoscale::{Autoscaler, PoolClass, ScaleCmd};
 use crate::metrics::{ActionRecord, Metrics, ProvisionRecord, StepRecord, TrajRecord, UtilSample};
 use crate::rollout::workloads::Catalog;
 use crate::rollout::{Phase, Workload};
@@ -69,6 +69,12 @@ enum Ev {
     Inject(usize),
     /// Periodic autoscaler evaluation (only scheduled when one is wired).
     Autoscale,
+    /// Autoscale-aware admission wakeup at a warming requisition's
+    /// maturity instant: apply the matured resize there (and pump), so
+    /// queued work overlaps the cold start instead of waiting for the next
+    /// `Autoscale` tick past it. Only scheduled when
+    /// `AutoscaleCfg::admission` is set.
+    Admit,
 }
 
 struct TrajRt {
@@ -114,6 +120,8 @@ struct Driver<'a> {
     /// under a waiting backend would enqueue another Wakeup event and the
     /// event count explodes quadratically)
     wakeup_at: Option<SimTime>,
+    /// earliest already-scheduled admission wakeup (same dedup)
+    admit_at: Option<SimTime>,
     /// scenario fault timeline (delivered via `Ev::Inject`)
     injections: &'a [TimedEvent],
     /// decision-trace sink (scenario record/replay)
@@ -172,6 +180,7 @@ pub fn run_traced(
         next_action: 0,
         next_traj: 0,
         wakeup_at: None,
+        admit_at: None,
         injections,
         rec: recorder,
         asc: autoscaler,
@@ -201,6 +210,16 @@ pub fn run_traced(
         d.handle(now, ev);
     }
     d.metrics
+}
+
+/// Scale-trace label: it carries the endpoint so per-provider decisions
+/// stay auditable, while provision records keep the plain pool name — one
+/// billing series per pool.
+fn scale_label(class: PoolClass, endpoint: Option<u32>) -> String {
+    match endpoint {
+        Some(e) => format!("{}@{e}", class.name()),
+        None => class.name().to_string(),
+    }
 }
 
 impl Driver<'_> {
@@ -238,6 +257,7 @@ impl Driver<'_> {
             }
             Ev::Inject(i) => self.inject(now, i),
             Ev::Autoscale => self.autoscale(now),
+            Ev::Admit => self.admit(now),
         }
     }
 
@@ -251,15 +271,6 @@ impl Driver<'_> {
     /// included), an `Apply` records the substrate units the class actually
     /// reached.
     fn autoscale(&mut self, now: SimTime) {
-        // the scale-trace label carries the endpoint so per-provider
-        // decisions stay auditable; provision records keep the plain pool
-        // name — one billing series per pool
-        fn scale_label(class: crate::autoscale::PoolClass, endpoint: Option<u32>) -> String {
-            match endpoint {
-                Some(e) => format!("{}@{e}", class.name()),
-                None => class.name().to_string(),
-            }
-        }
         let obs = self.backend.scale_classes();
         let (cmds, interval) = match self.asc.as_deref_mut() {
             Some(a) => (a.eval(now, &obs), a.interval()),
@@ -287,34 +298,8 @@ impl Driver<'_> {
                     self.trace(now, TraceKind::Provision { pool, units: pool_units });
                 }
                 ScaleCmd::Apply { class, endpoint, factor } => {
-                    if let Some(reached) = self.backend.resize(now, class, endpoint, factor) {
+                    if self.apply_scale(now, class, endpoint, factor) {
                         applied = true;
-                        // substrate truth, floored by the autoscaler's
-                        // billed pool total: without the floor, an Apply on
-                        // one endpoint would re-record the class series at
-                        // substrate level and silently un-bill another
-                        // endpoint's still-warming requisition (billed from
-                        // its decision instant). Over-billing under an
-                        // active provider fault is the conservative side
-                        // for the savings claim.
-                        let billed =
-                            self.asc.as_deref().map_or(0, |a| a.billed_units(class));
-                        let units = reached.max(billed);
-                        let pool = class.name().to_string();
-                        self.metrics.provision.push(ProvisionRecord {
-                            at: now,
-                            pool: pool.clone(),
-                            units,
-                        });
-                        self.trace(
-                            now,
-                            TraceKind::Scale {
-                                pool: scale_label(class, endpoint),
-                                phase: "apply".into(),
-                                factor,
-                            },
-                        );
-                        self.trace(now, TraceKind::Provision { pool, units });
                     }
                 }
             }
@@ -327,6 +312,90 @@ impl Driver<'_> {
         }
         if !self.wls.iter().all(|w| w.done) {
             self.eng.schedule_in(interval, Ev::Autoscale);
+        }
+        self.schedule_admit(now);
+    }
+
+    /// Apply one resize in the substrate and record its billing point.
+    /// Returns whether the backend honored it. Shared by the evaluation
+    /// tick ([`Self::autoscale`]) and the admission path ([`Self::admit`]).
+    fn apply_scale(
+        &mut self,
+        now: SimTime,
+        class: PoolClass,
+        endpoint: Option<u32>,
+        factor: f64,
+    ) -> bool {
+        let Some(reached) = self.backend.resize(now, class, endpoint, factor) else {
+            return false;
+        };
+        // substrate truth, floored by the autoscaler's billed pool total:
+        // without the floor, an Apply on one endpoint would re-record the
+        // class series at substrate level and silently un-bill another
+        // endpoint's still-warming requisition (billed from its decision
+        // instant). Over-billing under an active provider fault is the
+        // conservative side for the savings claim.
+        let billed = self.asc.as_deref().map_or(0, |a| a.billed_units(class));
+        let units = reached.max(billed);
+        let pool = class.name().to_string();
+        self.metrics.provision.push(ProvisionRecord { at: now, pool: pool.clone(), units });
+        self.trace(
+            now,
+            TraceKind::Scale {
+                pool: scale_label(class, endpoint),
+                phase: "apply".into(),
+                factor,
+            },
+        );
+        self.trace(now, TraceKind::Provision { pool, units });
+        true
+    }
+
+    /// Admission wakeup: mature every requisition whose cold start elapsed
+    /// and resize the substrate NOW — between evaluation ticks — so queued
+    /// work starts the moment billed capacity turns schedulable. Decision
+    /// and billing state are untouched (see `Autoscaler::mature`): billing
+    /// points never move, only apply instants do.
+    fn admit(&mut self, now: SimTime) {
+        if self.admit_at == Some(now) {
+            self.admit_at = None;
+        }
+        if self.wls.iter().all(|w| w.done) {
+            // run over — a trailing maturation would only stretch the
+            // provision series past the admission-off run's end
+            return;
+        }
+        let cmds = match self.asc.as_deref_mut() {
+            Some(a) => a.mature(now),
+            None => return,
+        };
+        let mut applied = false;
+        for cmd in cmds {
+            if let ScaleCmd::Apply { class, endpoint, factor } = cmd {
+                if self.apply_scale(now, class, endpoint, factor) {
+                    applied = true;
+                }
+            }
+        }
+        if applied {
+            self.backend.tick(now);
+            self.pump(now);
+        }
+        self.schedule_admit(now);
+    }
+
+    /// Schedule the next admission wakeup at the earliest still-warming
+    /// requisition's maturity instant (deduped like [`Self::pump`]'s
+    /// backend wakeups). No-op unless `AutoscaleCfg::admission` is set.
+    fn schedule_admit(&mut self, now: SimTime) {
+        let Some(asc) = self.asc.as_deref() else { return };
+        if !asc.admission() {
+            return;
+        }
+        let Some(at) = asc.next_pending_ready() else { return };
+        if at > now && self.admit_at.map_or(true, |w| at < w || w <= now) {
+            self.eng.schedule_at(at, Ev::Admit);
+            self.admit_at = Some(at);
         }
     }
 

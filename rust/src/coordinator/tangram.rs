@@ -15,15 +15,23 @@
 //! recorded scenario traces) stay byte-deterministic across processes.
 //! `TangramCfg::full_sweep` restores the legacy scan-everything behaviour
 //! for differential testing and the scheduler-invocation benchmarks.
+//!
+//! Every *scaling* concern — classification, pressure reporting,
+//! fault × autoscale factor composition, substrate application, provision
+//! accounting — lives behind the [`ElasticLane`] abstraction
+//! ([`crate::lanes`]): the backend holds one [`CpuLane`], one [`GpuLane`],
+//! and one [`ApiLane`] and routes `scale_classes` / `resize` / the pool
+//! fault injections generically over the lane array — no per-class
+//! `match` remains on those paths.
 
 use super::backend::{Backend, Started, Verdict};
-use super::queue::ActionQueue;
 use crate::action::{Action, ActionId, ResourceKindId, TrajId};
 use crate::autoscale::{PoolClass, PoolPressure};
-use crate::cluster::api::{ApiEndpoint, ApiOutcome};
-use crate::cluster::cpu::{CpuLatency, NodeId};
+use crate::cluster::api::ApiOutcome;
+use crate::cluster::cpu::CpuLatency;
 use crate::cluster::gpu::RestoreModel;
-use crate::managers::{BasicManager, CpuManager, GpuManager, ServiceSpec};
+use crate::lanes::{ApiLane, CpuLane, ElasticLane, GpuLane, PoolId};
+use crate::managers::{CpuManager, GpuManager, ServiceSpec};
 use crate::rollout::workloads::Catalog;
 use crate::scenario::ScenarioEvent;
 use crate::scheduler::{ElasticScheduler, ResourceState, SchedulerConfig};
@@ -65,31 +73,25 @@ impl Default for TangramCfg {
     }
 }
 
-/// One schedulable resource pool. The derived ordering (CPU nodes by id,
-/// then the GPU cluster, then API endpoints by kind) is the deterministic
-/// drain order — `BTreeSet<PoolId>` iteration visits dirty pools exactly
-/// the way the legacy full sweep visited all pools.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
-enum PoolId {
-    CpuNode(NodeId),
-    Gpu,
-    Api(ResourceKindId),
-}
-
 pub struct TangramBackend {
     cfg: TangramCfg,
     cpu_kind: ResourceKindId,
     gpu_kind: ResourceKindId,
-    pub cpu: CpuManager,
-    pub gpu: GpuManager,
-    api_mgrs: HashMap<ResourceKindId, BasicManager>,
-    endpoints: HashMap<ResourceKindId, ApiEndpoint>,
+    /// The elastic lanes, one per [`PoolClass`]. Each lane owns its
+    /// substrate manager(s) AND the FCFS queues feeding it; the scheduling
+    /// hot path reads the managers through the lanes' `Deref`.
+    pub cpu: CpuLane,
+    pub gpu: GpuLane,
+    pub api: ApiLane,
     pub sched: ElasticScheduler,
-    cpu_queues: HashMap<NodeId, ActionQueue>,
-    gpu_queue: ActionQueue,
-    api_queues: HashMap<ResourceKindId, ActionQueue>,
     /// pools whose state changed since the last drain (sorted iteration)
     dirty: BTreeSet<PoolId>,
+    /// Cached sorted full-sweep pool index (every lane's sub-pools in lane
+    /// order). Built once at construction; any lane topology change (none
+    /// exists today — nodes and endpoints are fixed at deploy) must call
+    /// [`Self::rebuild_pool_index`] to invalidate it. Replaces the fresh
+    /// sorted `Vec<PoolId>` the drain path used to allocate per call.
+    all_pools: Vec<PoolId>,
     /// trajectories that have already run their first CPU action (container
     /// creation charged once)
     containers_created: HashSet<TrajId>,
@@ -104,25 +106,11 @@ pub struct TangramBackend {
     /// drain_started call count + cumulative wall time
     pub drain_calls: u64,
     pub drain_wall: std::time::Duration,
-    /// Scenario-fault scale factors (injections) and autoscaler scale
-    /// factors are tracked separately and COMPOSED (product) into the
-    /// substrate, so a scale-up never cancels an injected provider flap
-    /// and an injected restore never silently undoes an autoscaler
-    /// scale-down (the two layers own different knobs in production too).
-    /// The API autoscale factor is **per endpoint** (quota lanes resize
-    /// per provider); a `gpu_cache_flush` is orthogonal to both GPU
-    /// factors — it drops residencies, never cordons.
-    fault_cpu_scale: f64,
-    auto_cpu_scale: f64,
-    fault_gpu_scale: f64,
-    auto_gpu_scale: f64,
-    fault_api_scale: f64,
-    auto_api_scale: HashMap<ResourceKindId, f64>,
 }
 
 impl TangramBackend {
     pub fn new(cat: &Catalog, cfg: TangramCfg) -> Self {
-        let cpu = CpuManager::new(
+        let cpu_mgr = CpuManager::new(
             cfg.cpu_nodes,
             cfg.numa_per_node,
             cfg.cores_per_numa,
@@ -130,38 +118,18 @@ impl TangramBackend {
             cfg.cpu_latency.clone(),
         );
         let services: Vec<ServiceSpec> = cat.services.clone();
-        let mut gpu = GpuManager::new(cfg.gpu_nodes, cfg.restore.clone(), services);
-        gpu.prewarm(SimTime::ZERO);
-        let mut api_mgrs = HashMap::new();
-        let mut endpoints = HashMap::new();
-        let mut api_queues = HashMap::new();
-        for (i, (kind, spec)) in cat.api.iter().enumerate() {
-            // admit to ~90% of the provider's hard limit: the margin absorbs
-            // in-flight accounting races and keeps the provider out of its
-            // load-shedding regime (where latency inflates and errors grow)
-            let limit = ((spec.max_concurrency as f64 * 0.9) as u64).max(1);
-            api_mgrs.insert(*kind, BasicManager::concurrency(&spec.name, limit));
-            endpoints.insert(*kind, ApiEndpoint::new(spec.clone(), 0x5eed + i as u64));
-            api_queues.insert(*kind, ActionQueue::new());
-        }
-        let cpu_queues = cpu
-            .node_ids()
-            .into_iter()
-            .map(|n| (n, ActionQueue::new()))
-            .collect();
-        TangramBackend {
+        let mut gpu_mgr = GpuManager::new(cfg.gpu_nodes, cfg.restore.clone(), services);
+        gpu_mgr.prewarm(SimTime::ZERO);
+        let mut be = TangramBackend {
             sched: ElasticScheduler::new(cfg.sched.clone()),
             cfg,
             cpu_kind: cat.cpu_cores,
             gpu_kind: cat.gpu_units,
-            cpu,
-            gpu,
-            api_mgrs,
-            endpoints,
-            cpu_queues,
-            gpu_queue: ActionQueue::new(),
-            api_queues,
+            cpu: CpuLane::new(cpu_mgr, cat.cpu_cores),
+            gpu: GpuLane::new(gpu_mgr, cat.gpu_units),
+            api: ApiLane::new(&cat.api),
             dirty: BTreeSet::new(),
+            all_pools: Vec::new(),
             containers_created: HashSet::new(),
             api_outcomes: HashMap::new(),
             inflight_exec: HashMap::new(),
@@ -169,94 +137,49 @@ impl TangramBackend {
             sched_wall: std::time::Duration::ZERO,
             drain_calls: 0,
             drain_wall: std::time::Duration::ZERO,
-            fault_cpu_scale: 1.0,
-            auto_cpu_scale: 1.0,
-            fault_gpu_scale: 1.0,
-            auto_gpu_scale: 1.0,
-            fault_api_scale: 1.0,
-            auto_api_scale: HashMap::new(),
-        }
+        };
+        be.rebuild_pool_index();
+        be
     }
 
-    /// Push the composed (fault × autoscale) CPU scale into the cordon
-    /// machinery and re-dirty every node — capacity moved either way, and a
-    /// restore must immediately revive stalled queues (queue-stall bugfix).
-    fn apply_cpu_scale(&mut self) {
-        let f = (self.fault_cpu_scale * self.auto_cpu_scale).clamp(0.0, 1.0);
-        self.cpu.set_pool_scale(f);
-        let nodes: Vec<NodeId> = self.cpu_queues.keys().copied().collect();
-        for n in nodes {
-            self.dirty.insert(PoolId::CpuNode(n));
-        }
+    /// Every lane in [`PoolClass`] order — the deterministic classification
+    /// probe order, pressure-row order, and (concatenated over
+    /// [`ElasticLane::pool_ids`]) the sorted full-sweep drain order.
+    fn lanes(&self) -> [&dyn ElasticLane; 3] {
+        [&self.cpu, &self.gpu, &self.api]
     }
 
-    /// Push the composed (fault × autoscale) GPU scale into the whole-node
-    /// cordon machinery and re-dirty the GPU pool — capacity moved either
-    /// way, and a restore must immediately revive a stalled queue.
-    fn apply_gpu_scale(&mut self) {
-        let f = (self.fault_gpu_scale * self.auto_gpu_scale).clamp(0.0, 1.0);
-        let _ = self.gpu.set_pool_scale(f);
-        self.dirty.insert(PoolId::Gpu);
+    fn lanes_mut(&mut self) -> [&mut dyn ElasticLane; 3] {
+        [&mut self.cpu, &mut self.gpu, &mut self.api]
     }
 
-    /// Push the composed (fault × per-endpoint autoscale) API scale into
-    /// one provider's limits, re-derive its 90%-of-limit admission margin,
-    /// and re-dirty the endpoint pool.
-    fn apply_api_scale_one(&mut self, kind: ResourceKindId) {
-        let auto = self.auto_api_scale.get(&kind).copied().unwrap_or(1.0);
-        let f = (self.fault_api_scale * auto).max(0.0);
-        if let Some(ep) = self.endpoints.get_mut(&kind) {
-            ep.scale_limits(f);
-            if let Some(mgr) = self.api_mgrs.get_mut(&kind) {
-                mgr.limit = ((ep.spec.max_concurrency as f64 * 0.9) as u64).max(1);
-            }
-            self.dirty.insert(PoolId::Api(kind));
-        }
-    }
-
-    /// [`Self::apply_api_scale_one`] over every endpoint (fault flaps hit
-    /// all providers at once; autoscaler resizes come in per-endpoint).
-    fn apply_api_scale(&mut self) {
-        let mut kinds: Vec<ResourceKindId> = self.endpoints.keys().copied().collect();
-        kinds.sort();
-        for kind in kinds {
-            self.apply_api_scale_one(kind);
-        }
+    /// Rebuild the cached sorted full-sweep pool index. Must be called
+    /// after any lane add/remove (today: construction only).
+    fn rebuild_pool_index(&mut self) {
+        let pools: Vec<PoolId> = self.lanes().iter().flat_map(|l| l.pool_ids()).collect();
+        debug_assert!(
+            pools.windows(2).all(|w| w[0] < w[1]),
+            "lane pool ids must concatenate into sorted PoolId order"
+        );
+        self.all_pools = pools;
     }
 
     fn classify(&self, a: &Action) -> PoolId {
-        if a.spec.cost.dim(self.cpu_kind).min_units() > 0 {
-            let node = self
-                .cpu
-                .binding(a.spec.trajectory)
-                .expect("CPU action for unbound trajectory");
-            PoolId::CpuNode(node)
-        } else if a.spec.cost.dim(self.gpu_kind).min_units() > 0 {
-            PoolId::Gpu
-        } else {
-            let kind = a
-                .spec
-                .cost
-                .iter()
-                .find(|(_, d)| d.min_units() > 0)
-                .map(|(k, _)| k)
-                .expect("action with empty cost");
-            PoolId::Api(kind)
-        }
+        self.lanes().iter().find_map(|l| l.classify(a)).expect("action with empty cost")
     }
 
     /// Run the elastic scheduler over one queue and apply its decisions.
     fn schedule_pool(&mut self, now: SimTime, pool: PoolId, out: &mut Vec<Started>) {
         match pool {
             PoolId::CpuNode(node) => {
-                if self.cpu_queues[&node].is_empty() {
+                if self.cpu.queues[&node].is_empty() {
                     return;
                 }
                 let mut decisions = {
-                    let state = self.cpu.node_state(node);
+                    let state = self.cpu.mgr.node_state(node);
                     let mut map: HashMap<ResourceKindId, &dyn ResourceState> = HashMap::new();
                     map.insert(self.cpu_kind, &state);
-                    let refs = self.cpu_queues[&node].refs();
+                    let refs = self.cpu.queues[&node].refs();
                     let t0 = std::time::Instant::now();
                     let d = self.sched.schedule(now, &refs, &map);
                     self.sched_wall += t0.elapsed();
@@ -267,9 +190,9 @@ impl TangramBackend {
                 // when something is running that will free capacity. With an
                 // idle node, force the queue head at its minimum.
                 if decisions.is_empty()
-                    && self.cpu.node_state(node).running_completions().is_empty()
+                    && self.cpu.mgr.node_state(node).running_completions().is_empty()
                 {
-                    if let Some(head) = self.cpu_queues[&node].front() {
+                    if let Some(head) = self.cpu.queues[&node].front() {
                         let units = head.spec.cost.dim(self.cpu_kind).min_units();
                         let mut alloc = head.spec.cost.min_vector();
                         alloc.set(self.cpu_kind, units);
@@ -281,7 +204,7 @@ impl TangramBackend {
                     }
                 }
                 for dec in decisions {
-                    let a = match self.cpu_queues[&node].get(dec.action) {
+                    let a = match self.cpu.queues[&node].get(dec.action) {
                         Some(rc) => rc.clone(),
                         None => continue,
                     };
@@ -290,7 +213,7 @@ impl TangramBackend {
                     // overhead known only after allocate; estimate for the
                     // expected-done bookkeeping, then patch below
                     let est_done = now + exec;
-                    match self.cpu.allocate(
+                    match self.cpu.mgr.allocate(
                         a.id,
                         a.spec.trajectory,
                         dec.units as u32,
@@ -298,7 +221,7 @@ impl TangramBackend {
                         est_done,
                     ) {
                         Ok(lease) => {
-                            let _ = self.cpu_queues.get_mut(&node).unwrap().remove(a.id);
+                            let _ = self.cpu.queues.get_mut(&node).unwrap().remove(a.id);
                             self.inflight_exec.insert(a.id, exec);
                             out.push(Started {
                                 action: a.id,
@@ -321,13 +244,13 @@ impl TangramBackend {
                 }
             }
             PoolId::Gpu => {
-                if self.gpu_queue.is_empty() {
+                if self.gpu.queue.is_empty() {
                     return;
                 }
                 let mut decisions = {
                     let mut map: HashMap<ResourceKindId, &dyn ResourceState> = HashMap::new();
-                    map.insert(self.gpu_kind, &self.gpu);
-                    let refs = self.gpu_queue.refs();
+                    map.insert(self.gpu_kind, &self.gpu.mgr);
+                    let refs = self.gpu.queue.refs();
                     let t0 = std::time::Instant::now();
                     let d = self.sched.schedule(now, &refs, &map);
                     self.sched_wall += t0.elapsed();
@@ -336,8 +259,8 @@ impl TangramBackend {
                 };
                 // Liveness guard (see CPU pool): an idle cluster must not
                 // "wait" — force the head at its minimum legal DoP.
-                if decisions.is_empty() && self.gpu.running_completions().is_empty() {
-                    if let Some(head) = self.gpu_queue.front() {
+                if decisions.is_empty() && self.gpu.mgr.running_completions().is_empty() {
+                    if let Some(head) = self.gpu.queue.front() {
                         let units = head.spec.cost.dim(self.gpu_kind).min_units();
                         let mut alloc = head.spec.cost.min_vector();
                         alloc.set(self.gpu_kind, units);
@@ -349,15 +272,15 @@ impl TangramBackend {
                     }
                 }
                 for dec in decisions {
-                    let a = match self.gpu_queue.get(dec.action) {
+                    let a = match self.gpu.queue.get(dec.action) {
                         Some(rc) => rc.clone(),
                         None => continue,
                     };
                     let service = a.spec.service.expect("GPU action without service");
                     let exec = a.spec.exec_dur(dec.units);
-                    match self.gpu.allocate(a.id, service, dec.units as u8, now + exec) {
+                    match self.gpu.mgr.allocate(a.id, service, dec.units as u8, now + exec) {
                         Ok(lease) => {
-                            let _ = self.gpu_queue.remove(a.id);
+                            let _ = self.gpu.queue.remove(a.id);
                             self.inflight_exec.insert(a.id, exec);
                             out.push(Started {
                                 action: a.id,
@@ -372,10 +295,10 @@ impl TangramBackend {
             }
             PoolId::Api(kind) => {
                 loop {
-                    let mgr = self.api_mgrs.get_mut(&kind).unwrap();
+                    let mgr = self.api.mgrs.get_mut(&kind).unwrap();
                     mgr.tick(now);
-                    let ep = self.endpoints.get_mut(&kind).unwrap();
-                    let q = self.api_queues.get_mut(&kind).unwrap();
+                    let ep = self.api.endpoints.get_mut(&kind).unwrap();
+                    let q = self.api.queues.get_mut(&kind).unwrap();
                     if q.is_empty() {
                         break;
                     }
@@ -400,43 +323,39 @@ impl TangramBackend {
         }
     }
 
-    /// Every pool in *sorted* order (the legacy full sweep; see [`PoolId`]).
-    fn all_pools(&self) -> Vec<PoolId> {
-        let mut nodes: Vec<NodeId> = self.cpu_queues.keys().copied().collect();
-        nodes.sort();
-        let mut pools: Vec<PoolId> = nodes.into_iter().map(PoolId::CpuNode).collect();
-        pools.push(PoolId::Gpu);
-        let mut kinds: Vec<ResourceKindId> = self.api_queues.keys().copied().collect();
-        kinds.sort();
-        pools.extend(kinds.into_iter().map(PoolId::Api));
-        pools
+    /// Every pool in *sorted* order — the cached full-sweep index, built
+    /// at construction and rebuilt only on lane add/remove.
+    pub fn all_pools(&self) -> &[PoolId] {
+        &self.all_pools
     }
 
     /// Schedulable pools in this deployment (CPU nodes + GPU + endpoints).
     pub fn pool_count(&self) -> usize {
-        self.cpu_queues.len() + 1 + self.api_queues.len()
+        self.all_pools.len()
     }
 
     /// Currently-provisioned API quota lanes (sum of provider concurrency
     /// limits after any flaps/resizes).
     pub fn provisioned_lanes(&self) -> u64 {
-        self.endpoints.values().map(|e| e.spec.max_concurrency as u64).sum()
+        self.api.provisioned_lanes()
+    }
+
+    /// Mean wall-clock per invocation of one counted hot-path stat.
+    fn mean_latency(total: std::time::Duration, count: u64) -> std::time::Duration {
+        if count == 0 {
+            return std::time::Duration::ZERO;
+        }
+        total / count as u32
     }
 
     /// Mean scheduler decision latency (wall-clock, for §Perf).
     pub fn mean_sched_latency(&self) -> std::time::Duration {
-        if self.sched_invocations == 0 {
-            return std::time::Duration::ZERO;
-        }
-        self.sched_wall / self.sched_invocations as u32
+        Self::mean_latency(self.sched_wall, self.sched_invocations)
     }
 
     /// Mean `drain_started` wall time (the whole pump hot path).
     pub fn mean_drain_latency(&self) -> std::time::Duration {
-        if self.drain_calls == 0 {
-            return std::time::Duration::ZERO;
-        }
-        self.drain_wall / self.drain_calls as u32
+        Self::mean_latency(self.drain_wall, self.drain_calls)
     }
 }
 
@@ -453,14 +372,14 @@ impl Backend for TangramBackend {
         first_cpu_min: Option<u32>,
     ) -> Result<(), String> {
         if let Some(min_cores) = first_cpu_min {
-            self.cpu.bind_trajectory(traj, min_cores, mem_gb)?;
+            self.cpu.mgr.bind_trajectory(traj, min_cores, mem_gb)?;
         }
         Ok(())
     }
 
     fn traj_end(&mut self, _now: SimTime, traj: TrajId) {
-        if let Some(node) = self.cpu.binding(traj) {
-            let _ = self.cpu.release_trajectory(traj);
+        if let Some(node) = self.cpu.mgr.binding(traj) {
+            let _ = self.cpu.mgr.release_trajectory(traj);
             self.containers_created.remove(&traj);
             // container teardown returns memory and any still-assigned
             // cgroup cores to the node — capacity moved, so the pool must
@@ -472,9 +391,9 @@ impl Backend for TangramBackend {
     fn submit(&mut self, _now: SimTime, action: &Rc<Action>) {
         let pool = self.classify(action);
         match pool {
-            PoolId::CpuNode(n) => self.cpu_queues.get_mut(&n).unwrap().push_back(action.clone()),
-            PoolId::Gpu => self.gpu_queue.push_back(action.clone()),
-            PoolId::Api(k) => self.api_queues.get_mut(&k).unwrap().push_back(action.clone()),
+            PoolId::CpuNode(n) => self.cpu.queues.get_mut(&n).unwrap().push_back(action.clone()),
+            PoolId::Gpu => self.gpu.queue.push_back(action.clone()),
+            PoolId::Api(k) => self.api.queues.get_mut(&k).unwrap().push_back(action.clone()),
         }
         self.dirty.insert(pool);
     }
@@ -484,11 +403,11 @@ impl Backend for TangramBackend {
         let exec = self.inflight_exec.remove(&action.id);
         let verdict = match pool {
             PoolId::CpuNode(_) => {
-                self.cpu.complete(action.id).expect("cpu complete");
+                self.cpu.mgr.complete(action.id).expect("cpu complete");
                 Verdict::Done
             }
             PoolId::Gpu => {
-                self.gpu.complete(action.id, now).expect("gpu complete");
+                self.gpu.mgr.complete(action.id, now).expect("gpu complete");
                 Verdict::Done
             }
             PoolId::Api(k) => {
@@ -496,9 +415,9 @@ impl Backend for TangramBackend {
                     .api_outcomes
                     .remove(&action.id)
                     .unwrap_or(ApiOutcome::Ok);
-                let mgr = self.api_mgrs.get_mut(&k).unwrap();
+                let mgr = self.api.mgrs.get_mut(&k).unwrap();
                 mgr.complete(action.id, 1);
-                self.endpoints.get_mut(&k).unwrap().finish(outcome);
+                self.api.endpoints.get_mut(&k).unwrap().finish(outcome);
                 match outcome {
                     ApiOutcome::Ok => Verdict::Done,
                     _ => {
@@ -519,12 +438,12 @@ impl Backend for TangramBackend {
             if let Some(exec) = exec {
                 let kind = action.spec.kind;
                 self.sched.stats.observe(kind, exec);
-                for (&node, q) in self.cpu_queues.iter() {
+                for (&node, q) in self.cpu.queues.iter() {
                     if q.has_unprofiled(kind) {
                         self.dirty.insert(PoolId::CpuNode(node));
                     }
                 }
-                if self.gpu_queue.has_unprofiled(kind) {
+                if self.gpu.queue.has_unprofiled(kind) {
                     self.dirty.insert(PoolId::Gpu);
                 }
             }
@@ -538,46 +457,52 @@ impl Backend for TangramBackend {
     fn drain_started(&mut self, now: SimTime) -> Vec<Started> {
         let t0 = std::time::Instant::now();
         let mut out = Vec::new();
-        let pools: Vec<PoolId> = if self.cfg.full_sweep {
-            self.all_pools()
+        if self.cfg.full_sweep {
+            // cached sorted index — the sweep no longer allocates (and
+            // re-sorts) a fresh pool list on every drain; taken and put
+            // back around the loop because schedule_pool needs &mut self
+            let pools = std::mem::take(&mut self.all_pools);
+            for &pool in &pools {
+                self.schedule_pool(now, pool, &mut out);
+            }
+            self.all_pools = pools;
         } else {
             // BTreeSet iteration = sorted PoolId order (determinism)
-            std::mem::take(&mut self.dirty).into_iter().collect()
-        };
-        for pool in pools {
-            let before = out.len();
-            self.schedule_pool(now, pool, &mut out);
-            if self.cfg.full_sweep {
-                continue;
-            }
-            if out.len() > before {
-                // Started something — the pool's own state changed, so it
-                // is dirty again by definition. Re-arming keeps parity with
-                // the legacy sweep: the eviction estimate may have planned
-                // an immediate follow-on start on the leftover budget, which
-                // the sweep realized at the driver's next same-instant pump.
-                self.dirty.insert(pool);
-                continue;
-            }
-            // Stall re-arm: a pool with waiting work, nothing running that
-            // will free capacity, and nothing started (e.g. the liveness
-            // guard's forced head lost its cores to a cordon) has no future
-            // event of its own to dirty it — keep it dirty so every pump
-            // retries until capacity returns (cordon restore, traj teardown).
-            let stalled = match pool {
-                PoolId::CpuNode(n) => {
-                    !self.cpu_queues[&n].is_empty()
-                        && self.cpu.node_state(n).running_completions().is_empty()
+            for pool in std::mem::take(&mut self.dirty) {
+                let before = out.len();
+                self.schedule_pool(now, pool, &mut out);
+                if out.len() > before {
+                    // Started something — the pool's own state changed, so
+                    // it is dirty again by definition. Re-arming keeps
+                    // parity with the legacy sweep: the eviction estimate
+                    // may have planned an immediate follow-on start on the
+                    // leftover budget, which the sweep realized at the
+                    // driver's next same-instant pump.
+                    self.dirty.insert(pool);
+                    continue;
                 }
-                PoolId::Gpu => {
-                    !self.gpu_queue.is_empty() && self.gpu.running_completions().is_empty()
+                // Stall re-arm: a pool with waiting work, nothing running
+                // that will free capacity, and nothing started (e.g. the
+                // liveness guard's forced head lost its cores to a cordon)
+                // has no future event of its own to dirty it — keep it
+                // dirty so every pump retries until capacity returns
+                // (cordon restore, traj teardown).
+                let stalled = match pool {
+                    PoolId::CpuNode(n) => {
+                        !self.cpu.queues[&n].is_empty()
+                            && self.cpu.mgr.node_state(n).running_completions().is_empty()
+                    }
+                    PoolId::Gpu => {
+                        !self.gpu.queue.is_empty()
+                            && self.gpu.mgr.running_completions().is_empty()
+                    }
+                    // API admission is covered by completions and the quota-
+                    // window wakeup contract — never stalled silently
+                    PoolId::Api(_) => false,
+                };
+                if stalled {
+                    self.dirty.insert(pool);
                 }
-                // API admission is covered by completions and the quota-
-                // window wakeup contract — never stalled silently
-                PoolId::Api(_) => false,
-            };
-            if stalled {
-                self.dirty.insert(pool);
             }
         }
         self.drain_calls += 1;
@@ -595,11 +520,11 @@ impl Backend for TangramBackend {
     fn next_wakeup(&self, now: SimTime) -> Option<SimTime> {
         // quota-gated API queues wake at the next window boundary
         let mut earliest: Option<SimTime> = None;
-        for (kind, q) in &self.api_queues {
+        for (kind, q) in &self.api.queues {
             if q.is_empty() {
                 continue;
             }
-            let ep = &self.endpoints[kind];
+            let ep = &self.api.endpoints[kind];
             if ep.quota_left(now) == 0 {
                 let w = ep.spec.quota_window.0;
                 let next = SimTime((now.0 / w + 1) * w);
@@ -610,12 +535,12 @@ impl Backend for TangramBackend {
     }
 
     fn tick(&mut self, now: SimTime) {
-        for mgr in self.api_mgrs.values_mut() {
+        for mgr in self.api.mgrs.values_mut() {
             mgr.tick(now);
         }
         // a tick can roll quota windows open — any endpoint with waiting
         // work must be rescheduled on the pump that follows
-        for (kind, q) in &self.api_queues {
+        for (kind, q) in &self.api.queues {
             if !q.is_empty() {
                 self.dirty.insert(PoolId::Api(*kind));
             }
@@ -624,77 +549,23 @@ impl Backend for TangramBackend {
 
     fn utilization(&self) -> Vec<(String, f64)> {
         vec![
-            ("cpu".into(), self.cpu.utilization()),
-            ("gpu".into(), self.gpu.utilization()),
+            ("cpu".into(), self.cpu.mgr.utilization()),
+            ("gpu".into(), self.gpu.mgr.utilization()),
         ]
     }
 
     fn provisioned(&self) -> Vec<(String, u64)> {
-        vec![
-            ("cpu_cores".into(), self.cpu.total_cores() - self.cpu.cordoned_cores() as u64),
-            ("gpus".into(), self.gpu.provisioned_gpus() as u64),
-            ("api_lanes".into(), self.provisioned_lanes()),
-        ]
+        // one billing gauge per lane, named by class, in lane order
+        self.lanes()
+            .iter()
+            .map(|l| (l.class().name().to_string(), l.provisioned_units()))
+            .collect()
     }
 
     fn scale_classes(&self) -> Vec<PoolPressure> {
-        // sorted by (class, endpoint): Cpu < Gpu < Api, endpoints by kind
-        // id — the autoscaler's deterministic eval order
-        let total = self.cpu.total_cores();
-        let cordoned = self.cpu.cordoned_cores() as u64;
-        let free = self.cpu.free_cores();
-        let cpu = PoolPressure {
-            class: PoolClass::Cpu,
-            endpoint: None,
-            queued: self.cpu_queues.values().map(|q| q.len() as u64).sum(),
-            // minimum core demand of the waiting work (unit-denominated,
-            // so policies never mix action counts into core sums)
-            queued_units: self
-                .cpu_queues
-                .values()
-                .flat_map(|q| q.iter())
-                .map(|a| a.spec.cost.dim(self.cpu_kind).min_units())
-                .sum(),
-            // cordoned cores read as busy in free_cores; subtract them so
-            // in-use reflects real allocations only
-            in_use_units: total.saturating_sub(free).saturating_sub(cordoned),
-            provisioned_units: total - cordoned,
-            baseline_units: total,
-        };
-        let gpu = PoolPressure {
-            class: PoolClass::Gpu,
-            endpoint: None,
-            queued: self.gpu_queue.len() as u64,
-            queued_units: self
-                .gpu_queue
-                .iter()
-                .map(|a| a.spec.cost.dim(self.gpu_kind).min_units())
-                .sum(),
-            in_use_units: self.gpu.in_use_gpus(),
-            provisioned_units: self.gpu.provisioned_gpus() as u64,
-            baseline_units: self.gpu.total_gpus() as u64,
-        };
-        let mut rows = vec![cpu, gpu];
-        // per-endpoint API pressure: each provider's quota lanes scale
-        // independently (a flapping search provider must not drag the
-        // PDF-parse lanes down with it)
-        let mut kinds: Vec<ResourceKindId> = self.endpoints.keys().copied().collect();
-        kinds.sort();
-        for kind in kinds {
-            let ep = &self.endpoints[&kind];
-            let queued = self.api_queues[&kind].len() as u64;
-            rows.push(PoolPressure {
-                class: PoolClass::Api,
-                endpoint: Some(kind.0),
-                queued,
-                // every API call occupies exactly one provider lane
-                queued_units: queued,
-                in_use_units: ep.in_flight() as u64,
-                provisioned_units: ep.spec.max_concurrency as u64,
-                baseline_units: ep.base_concurrency() as u64,
-            });
-        }
-        rows
+        // lanes in class order, rows endpoint-sorted within each lane —
+        // the autoscaler's deterministic (class, endpoint) eval order
+        self.lanes().iter().flat_map(|l| l.pressures()).collect()
     }
 
     fn resize(
@@ -704,70 +575,45 @@ impl Backend for TangramBackend {
         endpoint: Option<u32>,
         factor: f64,
     ) -> Option<u64> {
-        // the autoscaler owns its own factor; the substrate sees the
-        // composition with any injected fault, through the same cordon /
-        // provider-limit machinery (incl. pool dirtying) as `inject`
-        match class {
-            PoolClass::Cpu => {
-                self.auto_cpu_scale = factor.clamp(0.0, 1.0);
-                self.apply_cpu_scale();
-                Some(self.cpu.total_cores() - self.cpu.cordoned_cores() as u64)
-            }
-            PoolClass::Gpu => {
-                self.auto_gpu_scale = factor.clamp(0.0, 1.0);
-                self.apply_gpu_scale();
-                Some(self.gpu.provisioned_gpus() as u64)
-            }
-            PoolClass::Api => {
-                let f = factor.max(0.0);
-                match endpoint {
-                    Some(e) => {
-                        self.auto_api_scale.insert(ResourceKindId(e), f);
-                        self.apply_api_scale_one(ResourceKindId(e));
-                    }
-                    None => {
-                        // blanket resize (tests / class-wide policies)
-                        let kinds: Vec<ResourceKindId> =
-                            self.endpoints.keys().copied().collect();
-                        for k in kinds {
-                            self.auto_api_scale.insert(k, f);
-                        }
-                        self.apply_api_scale();
-                    }
-                }
-                Some(self.provisioned_lanes())
-            }
+        // the autoscaler owns its own factor; the lane composes it with any
+        // injected fault and pushes the product through the same cordon /
+        // provider-limit machinery as `inject` — including the dirty list,
+        // so the pump that follows reschedules the affected pools
+        let resized = {
+            let mut lanes = self.lanes_mut();
+            let lane = lanes.iter_mut().find(|l| l.class() == class)?;
+            lane.set_auto(endpoint, factor)
+        };
+        for pool in resized.dirty {
+            self.dirty.insert(pool);
         }
+        Some(resized.reached)
     }
 
     fn inject(&mut self, _now: SimTime, event: &ScenarioEvent) -> bool {
-        match event {
-            ScenarioEvent::ApiLimitScale { factor } => {
-                // track the provider: the fault factor composes with any
-                // autoscaler factor (re-deriving the 90%-of-limit admission
-                // margins from the flapped specs)
-                self.fault_api_scale = *factor;
-                self.apply_api_scale();
-                !self.endpoints.is_empty()
-            }
-            ScenarioEvent::GpuCacheFlush => {
-                // orthogonal to the GPU scale factors: residencies drop,
-                // cordons are untouched — a flush mid-scale-down must not
-                // cancel the autoscale factor
-                self.gpu.flush_caches();
-                self.dirty.insert(PoolId::Gpu);
-                true
-            }
-            ScenarioEvent::GpuPoolScale { factor } => {
-                self.fault_gpu_scale = *factor;
-                self.apply_gpu_scale();
-                true
-            }
-            ScenarioEvent::CpuPoolScale { factor } => {
-                self.fault_cpu_scale = *factor;
-                self.apply_cpu_scale();
-                true
-            }
+        if let ScenarioEvent::GpuCacheFlush = event {
+            // orthogonal to the GPU scale factors: residencies drop,
+            // cordons are untouched — a flush mid-scale-down must not
+            // cancel the autoscale factor
+            self.gpu.mgr.flush_caches();
+            self.dirty.insert(PoolId::Gpu);
+            return true;
         }
+        // every other event is a class-wide pool fault: route it through
+        // the lane, which composes it with any autoscaler factor
+        let Some((class, factor)) = event.pool_fault() else {
+            return false;
+        };
+        let resized = {
+            let mut lanes = self.lanes_mut();
+            match lanes.iter_mut().find(|l| l.class() == class) {
+                Some(lane) => lane.set_fault(factor),
+                None => return false,
+            }
+        };
+        for pool in resized.dirty {
+            self.dirty.insert(pool);
+        }
+        resized.applied
     }
 }

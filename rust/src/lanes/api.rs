@@ -1,0 +1,166 @@
+//! The API quota-lane lane: per-endpoint provider state, Basic-manager
+//! admission, and FCFS queues behind the [`ElasticLane`] contract. One
+//! scale target **per provider endpoint** (sorted by kind id) — a flapping
+//! search provider must not drag the PDF-parse lanes down with it — while
+//! the class-wide fault factor models provider-side flaps hitting every
+//! endpoint at once.
+
+use super::{ElasticLane, PoolId, Resized};
+use crate::action::{Action, ResourceKindId};
+use crate::autoscale::{PoolClass, PoolPressure};
+use crate::cluster::api::{ApiEndpoint, ApiEndpointSpec};
+use crate::coordinator::queue::ActionQueue;
+use crate::managers::BasicManager;
+use std::collections::HashMap;
+
+/// API lane: one target per endpoint, all billing into one `api_lanes`
+/// provision series.
+pub struct ApiLane {
+    /// Admission managers (90%-of-limit margin) per endpoint.
+    pub mgrs: HashMap<ResourceKindId, BasicManager>,
+    /// Provider-side endpoint state per kind.
+    pub endpoints: HashMap<ResourceKindId, ApiEndpoint>,
+    /// Per-endpoint FCFS waiting queues.
+    pub queues: HashMap<ResourceKindId, ActionQueue>,
+    fault: f64,
+    auto: HashMap<ResourceKindId, f64>,
+}
+
+impl ApiLane {
+    pub fn new(api: &[(ResourceKindId, ApiEndpointSpec)]) -> Self {
+        let mut mgrs = HashMap::new();
+        let mut endpoints = HashMap::new();
+        let mut queues = HashMap::new();
+        for (i, (kind, spec)) in api.iter().enumerate() {
+            // admit to ~90% of the provider's hard limit: the margin absorbs
+            // in-flight accounting races and keeps the provider out of its
+            // load-shedding regime (where latency inflates and errors grow)
+            mgrs.insert(
+                *kind,
+                BasicManager::concurrency(&spec.name, Self::admission_limit(spec.max_concurrency)),
+            );
+            endpoints.insert(*kind, ApiEndpoint::new(spec.clone(), 0x5eed + i as u64));
+            queues.insert(*kind, ActionQueue::new());
+        }
+        ApiLane { mgrs, endpoints, queues, fault: 1.0, auto: HashMap::new() }
+    }
+
+    /// The 90%-of-provider-limit admission margin (floor 1).
+    fn admission_limit(max_concurrency: u32) -> u64 {
+        ((max_concurrency as f64 * 0.9) as u64).max(1)
+    }
+
+    /// Endpoint kinds in sorted order (the deterministic target order).
+    pub fn kinds(&self) -> Vec<ResourceKindId> {
+        let mut kinds: Vec<ResourceKindId> = self.endpoints.keys().copied().collect();
+        kinds.sort();
+        kinds
+    }
+
+    /// Currently-provisioned quota lanes (sum of provider concurrency
+    /// limits after any flaps/resizes).
+    pub fn provisioned_lanes(&self) -> u64 {
+        self.endpoints.values().map(|e| e.spec.max_concurrency as u64).sum()
+    }
+
+    /// Push the composed (fault × per-endpoint autoscale) factor into one
+    /// provider's limits, re-derive its admission margin, and report the
+    /// endpoint pool dirty.
+    fn apply_one(&mut self, kind: ResourceKindId, dirty: &mut Vec<PoolId>) {
+        let auto = self.auto.get(&kind).copied().unwrap_or(1.0);
+        let f = (self.fault * auto).max(0.0);
+        if let Some(ep) = self.endpoints.get_mut(&kind) {
+            ep.scale_limits(f);
+            if let Some(mgr) = self.mgrs.get_mut(&kind) {
+                mgr.limit = Self::admission_limit(ep.spec.max_concurrency);
+            }
+            dirty.push(PoolId::Api(kind));
+        }
+    }
+}
+
+impl ElasticLane for ApiLane {
+    fn class(&self) -> PoolClass {
+        PoolClass::Api
+    }
+
+    fn classify(&self, action: &Action) -> Option<PoolId> {
+        // lanes are probed in class order, so any remaining non-zero cost
+        // dimension belongs to an API endpoint kind
+        action
+            .spec
+            .cost
+            .iter()
+            .find(|(_, d)| d.min_units() > 0)
+            .map(|(k, _)| PoolId::Api(k))
+    }
+
+    fn pool_ids(&self) -> Vec<PoolId> {
+        self.kinds().into_iter().map(PoolId::Api).collect()
+    }
+
+    fn pressures(&self) -> Vec<PoolPressure> {
+        // one row per provider endpoint, sorted by kind id: each provider's
+        // quota lanes scale independently
+        self.kinds()
+            .into_iter()
+            .map(|kind| {
+                let ep = &self.endpoints[&kind];
+                let queued = self.queues[&kind].len() as u64;
+                PoolPressure {
+                    class: PoolClass::Api,
+                    endpoint: Some(kind.0),
+                    queued,
+                    // every API call occupies exactly one provider lane
+                    queued_units: queued,
+                    in_use_units: ep.in_flight() as u64,
+                    provisioned_units: ep.spec.max_concurrency as u64,
+                    baseline_units: ep.base_concurrency() as u64,
+                }
+            })
+            .collect()
+    }
+
+    fn provisioned_units(&self) -> u64 {
+        self.provisioned_lanes()
+    }
+
+    fn set_fault(&mut self, factor: f64) -> Resized {
+        // fault flaps hit all providers at once; each endpoint composes the
+        // flap with its own autoscale factor
+        self.fault = factor;
+        let mut dirty = Vec::new();
+        for kind in self.kinds() {
+            self.apply_one(kind, &mut dirty);
+        }
+        Resized {
+            reached: self.provisioned_lanes(),
+            applied: !self.endpoints.is_empty(),
+            dirty,
+        }
+    }
+
+    fn set_auto(&mut self, endpoint: Option<u32>, factor: f64) -> Resized {
+        let f = factor.max(0.0);
+        let mut dirty = Vec::new();
+        match endpoint {
+            Some(e) => {
+                self.auto.insert(ResourceKindId(e), f);
+                self.apply_one(ResourceKindId(e), &mut dirty);
+            }
+            None => {
+                // blanket resize (tests / class-wide policies); apply_one
+                // reads only this kind's factor, so one sorted pass does it
+                for kind in self.kinds() {
+                    self.auto.insert(kind, f);
+                    self.apply_one(kind, &mut dirty);
+                }
+            }
+        }
+        Resized {
+            reached: self.provisioned_lanes(),
+            applied: !self.endpoints.is_empty(),
+            dirty,
+        }
+    }
+}

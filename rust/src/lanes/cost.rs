@@ -1,0 +1,225 @@
+//! $/unit-hour cost model over the elastic lanes.
+//!
+//! Resource-hour accounting (`Metrics::pool_unit_hours`) treats every unit
+//! alike, but a GPU-hour does not cost what a core-hour costs. A
+//! [`CostModel`] attaches a **rate card** — $ per unit-hour, keyed by
+//! provision-pool name (`cpu_cores`, `gpus`, `api_lanes`) with optional
+//! per-endpoint overrides (`api_lanes@3`) — so `savings_vs_static` gains a
+//! dollar-weighted sibling (`Metrics::savings_vs_static_cost`) and the
+//! offline `--replay a --against b` comparison gains a cost-delta column.
+//!
+//! The model is **embedded in the `ScenarioSpec`** (and therefore in
+//! recorded trace files), so replays reproduce cost figures byte-for-byte.
+//! It is pure reporting: rates never influence a scheduling or scaling
+//! decision, which is what keeps the pure-refactor golden-trace invariant
+//! intact for static runs.
+//!
+//! Because billing stays one provision series per pool (per-endpoint API
+//! requisitions fold into `api_lanes` — see `Autoscaler::billed_units`),
+//! per-endpoint rate overrides resolve to a **baseline-weighted mean** over
+//! the class's endpoints ([`CostModel::resolve`]); the resolution is
+//! deterministic (sorted pressure rows) and reproducible offline from the
+//! embedded catalog.
+
+use crate::autoscale::{PoolClass, PoolPressure};
+use crate::util::error::Result;
+use crate::util::json::Json;
+use crate::{bail, err};
+use std::collections::BTreeMap;
+
+/// A $/unit-hour rate card keyed by provision-pool name, with optional
+/// per-endpoint overrides (`api_lanes@<endpoint kind id>`). The JSON form
+/// is flat: every key is a pool name except the reserved `default` key.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostModel {
+    /// Explicit rates; keys are pool names or `pool@endpoint` overrides.
+    pub rates: BTreeMap<String, f64>,
+    /// Rate for pools with no explicit entry.
+    pub default_rate: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        // a deliberately simple on-demand-flavored rate card; every value
+        // survives the shortest-round-trip f64 JSON path exactly
+        let mut rates = BTreeMap::new();
+        rates.insert("cpu_cores".to_string(), 0.05);
+        rates.insert("gpus".to_string(), 2.5);
+        rates.insert("api_lanes".to_string(), 0.25);
+        CostModel { rates, default_rate: 0.05 }
+    }
+}
+
+impl CostModel {
+    /// Rate for one target: the `pool@endpoint` override when present,
+    /// else the pool rate, else the default.
+    pub fn rate_for(&self, pool: &str, endpoint: Option<u32>) -> f64 {
+        if let Some(e) = endpoint {
+            if let Some(r) = self.rates.get(&format!("{pool}@{e}")) {
+                return *r;
+            }
+        }
+        self.rates.get(pool).copied().unwrap_or(self.default_rate)
+    }
+
+    /// Resolve the effective per-pool rates against a deployment: pools
+    /// whose class reports per-endpoint scale targets get the
+    /// baseline-weighted mean of their endpoint rates (billing is a single
+    /// provision series per pool), every other provisioned pool gets its
+    /// plain rate. Deterministic in the (sorted) inputs.
+    pub fn resolve(
+        &self,
+        pressures: &[PoolPressure],
+        provisioned: &[(String, u64)],
+    ) -> BTreeMap<String, f64> {
+        let mut out = BTreeMap::new();
+        for (pool, _) in provisioned {
+            out.insert(pool.clone(), self.rate_for(pool, None));
+        }
+        for class in PoolClass::ALL {
+            let rows: Vec<&PoolPressure> = pressures
+                .iter()
+                .filter(|p| p.class == class && p.endpoint.is_some())
+                .collect();
+            if rows.is_empty() {
+                continue;
+            }
+            let total: u64 = rows.iter().map(|p| p.baseline_units).sum();
+            if total == 0 {
+                continue;
+            }
+            let weighted: f64 = rows
+                .iter()
+                .map(|p| self.rate_for(class.name(), p.endpoint) * p.baseline_units as f64)
+                .sum();
+            out.insert(class.name().to_string(), weighted / total as f64);
+        }
+        out
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !self.default_rate.is_finite() || self.default_rate < 0.0 {
+            bail!("cost default rate {} must be a non-negative finite number", self.default_rate);
+        }
+        for (k, v) in &self.rates {
+            if k.is_empty() {
+                bail!("cost rate with an empty pool name");
+            }
+            if k == "default" {
+                // reserved by the JSON form — a rates entry under this name
+                // would serialize as a duplicate key and vanish on re-parse
+                bail!("'default' is the fallback-rate key, not a pool name");
+            }
+            if !v.is_finite() || *v < 0.0 {
+                bail!("cost rate '{k}' = {v} must be a non-negative finite number");
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> =
+            self.rates.iter().map(|(k, v)| (k.as_str(), Json::num(*v))).collect();
+        pairs.push(("default", Json::num(self.default_rate)));
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let obj = j.as_obj().ok_or_else(|| err!("'cost' must be an object"))?;
+        let mut model = CostModel { rates: BTreeMap::new(), default_rate: 0.05 };
+        for (k, v) in obj {
+            let rate = v.as_f64().ok_or_else(|| err!("cost rate '{k}' must be a number"))?;
+            if k == "default" {
+                model.default_rate = rate;
+            } else {
+                model.rates.insert(k.clone(), rate);
+            }
+        }
+        model.validate()?;
+        Ok(model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(class: PoolClass, endpoint: Option<u32>, baseline: u64) -> PoolPressure {
+        PoolPressure {
+            class,
+            endpoint,
+            queued: 0,
+            queued_units: 0,
+            in_use_units: 0,
+            provisioned_units: baseline,
+            baseline_units: baseline,
+        }
+    }
+
+    #[test]
+    fn default_card_round_trips_through_json() {
+        let m = CostModel::default();
+        let j = m.to_json();
+        let back = CostModel::from_json(&j).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(back.to_json().to_string(), j.to_string());
+    }
+
+    #[test]
+    fn endpoint_override_beats_pool_rate_beats_default() {
+        let mut m = CostModel::default();
+        m.rates.insert("api_lanes@3".into(), 1.5);
+        assert_eq!(m.rate_for("api_lanes", Some(3)), 1.5);
+        assert_eq!(m.rate_for("api_lanes", Some(4)), 0.25);
+        assert_eq!(m.rate_for("api_lanes", None), 0.25);
+        assert_eq!(m.rate_for("pods", None), m.default_rate);
+    }
+
+    #[test]
+    fn resolve_weights_endpoint_overrides_by_baseline_share() {
+        let mut m = CostModel::default();
+        m.rates.insert("api_lanes@0".into(), 1.0);
+        m.rates.insert("api_lanes@1".into(), 3.0);
+        let pressures = vec![
+            row(PoolClass::Cpu, None, 128),
+            row(PoolClass::Api, Some(0), 30),
+            row(PoolClass::Api, Some(1), 10),
+        ];
+        let provisioned = vec![
+            ("cpu_cores".to_string(), 128u64),
+            ("api_lanes".to_string(), 40u64),
+        ];
+        let rates = m.resolve(&pressures, &provisioned);
+        assert_eq!(rates["cpu_cores"], 0.05);
+        // (1.0×30 + 3.0×10) / 40 = 1.5
+        assert!((rates["api_lanes"] - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn resolve_covers_every_provisioned_pool() {
+        let m = CostModel::default();
+        let provisioned = vec![("pods".to_string(), 8u64), ("gpus".to_string(), 16u64)];
+        let rates = m.resolve(&[], &provisioned);
+        assert_eq!(rates["pods"], m.default_rate);
+        assert_eq!(rates["gpus"], 2.5);
+    }
+
+    #[test]
+    fn reserved_default_key_is_not_a_pool() {
+        let mut m = CostModel::default();
+        m.rates.insert("default".into(), 1.5);
+        assert!(m.validate().is_err(), "a 'default' pool rate would shadow the fallback");
+        // the JSON path routes the key to the fallback rate instead
+        let parsed = CostModel::from_json(&Json::parse(r#"{"default":1.5}"#).unwrap()).unwrap();
+        assert_eq!(parsed.default_rate, 1.5);
+        assert!(parsed.rates.is_empty());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(CostModel::from_json(&Json::parse(r#"{"gpus":"lots"}"#).unwrap()).is_err());
+        assert!(CostModel::from_json(&Json::parse(r#"{"gpus":-1}"#).unwrap()).is_err());
+        assert!(CostModel::from_json(&Json::parse(r#"{"default":-0.5}"#).unwrap()).is_err());
+        assert!(CostModel::from_json(&Json::parse("[]").unwrap()).is_err());
+    }
+}

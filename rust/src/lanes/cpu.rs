@@ -1,0 +1,124 @@
+//! The CPU environment lane: AOE manager + per-node FCFS queues behind the
+//! [`ElasticLane`] contract. Resizes cordon cores on every node through
+//! `CpuManager::set_pool_scale` (best-effort; busy cores are never
+//! preempted, one core per node stays online).
+
+use super::{ElasticLane, PoolId, Resized};
+use crate::action::{Action, ResourceKindId};
+use crate::autoscale::{PoolClass, PoolPressure};
+use crate::cluster::cpu::NodeId;
+use crate::coordinator::queue::ActionQueue;
+use crate::managers::CpuManager;
+use std::collections::HashMap;
+
+/// CPU lane: one scale target (`endpoint == None`), one sub-pool per node.
+///
+/// `Deref`s to the wrapped [`CpuManager`] so the scheduling hot path (and
+/// tests) keep reading allocation state through the lane.
+pub struct CpuLane {
+    /// The AOE manager (the `Deref` target).
+    pub mgr: CpuManager,
+    /// Per-node FCFS waiting queues (per-node scheduling, paper §5.2).
+    pub queues: HashMap<NodeId, ActionQueue>,
+    kind: ResourceKindId,
+    fault: f64,
+    auto: f64,
+}
+
+impl CpuLane {
+    pub fn new(mgr: CpuManager, kind: ResourceKindId) -> Self {
+        let queues = mgr.node_ids().into_iter().map(|n| (n, ActionQueue::new())).collect();
+        CpuLane { mgr, queues, kind, fault: 1.0, auto: 1.0 }
+    }
+
+    /// The resource kind this lane's cost dimension is keyed by.
+    pub fn kind(&self) -> ResourceKindId {
+        self.kind
+    }
+
+    /// Push the composed (fault × autoscale) factor into the cordon
+    /// machinery; every node must be re-dirtied — capacity moved either
+    /// way, and a restore must immediately revive stalled queues (the
+    /// queue-stall bugfix).
+    fn apply(&mut self) -> Vec<PoolId> {
+        let f = (self.fault * self.auto).clamp(0.0, 1.0);
+        self.mgr.set_pool_scale(f);
+        self.pool_ids()
+    }
+}
+
+impl std::ops::Deref for CpuLane {
+    type Target = CpuManager;
+    fn deref(&self) -> &CpuManager {
+        &self.mgr
+    }
+}
+
+impl std::ops::DerefMut for CpuLane {
+    fn deref_mut(&mut self) -> &mut CpuManager {
+        &mut self.mgr
+    }
+}
+
+impl ElasticLane for CpuLane {
+    fn class(&self) -> PoolClass {
+        PoolClass::Cpu
+    }
+
+    fn classify(&self, action: &Action) -> Option<PoolId> {
+        if action.spec.cost.dim(self.kind).min_units() == 0 {
+            return None;
+        }
+        let node = self
+            .mgr
+            .binding(action.spec.trajectory)
+            .expect("CPU action for unbound trajectory");
+        Some(PoolId::CpuNode(node))
+    }
+
+    fn pool_ids(&self) -> Vec<PoolId> {
+        let mut nodes: Vec<NodeId> = self.queues.keys().copied().collect();
+        nodes.sort();
+        nodes.into_iter().map(PoolId::CpuNode).collect()
+    }
+
+    fn pressures(&self) -> Vec<PoolPressure> {
+        let total = self.mgr.total_cores();
+        let cordoned = self.mgr.cordoned_cores() as u64;
+        let free = self.mgr.free_cores();
+        vec![PoolPressure {
+            class: PoolClass::Cpu,
+            endpoint: None,
+            queued: self.queues.values().map(|q| q.len() as u64).sum(),
+            // minimum core demand of the waiting work (unit-denominated,
+            // so policies never mix action counts into core sums)
+            queued_units: self
+                .queues
+                .values()
+                .flat_map(|q| q.iter())
+                .map(|a| a.spec.cost.dim(self.kind).min_units())
+                .sum(),
+            // cordoned cores read as busy in free_cores; subtract them so
+            // in-use reflects real allocations only
+            in_use_units: total.saturating_sub(free).saturating_sub(cordoned),
+            provisioned_units: total - cordoned,
+            baseline_units: total,
+        }]
+    }
+
+    fn provisioned_units(&self) -> u64 {
+        self.mgr.total_cores() - self.mgr.cordoned_cores() as u64
+    }
+
+    fn set_fault(&mut self, factor: f64) -> Resized {
+        self.fault = factor;
+        let dirty = self.apply();
+        Resized { reached: self.provisioned_units(), applied: true, dirty }
+    }
+
+    fn set_auto(&mut self, _endpoint: Option<u32>, factor: f64) -> Resized {
+        self.auto = factor.clamp(0.0, 1.0);
+        let dirty = self.apply();
+        Resized { reached: self.provisioned_units(), applied: true, dirty }
+    }
+}

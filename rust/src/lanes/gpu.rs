@@ -1,0 +1,107 @@
+//! The GPU service lane: EOE manager + the cluster-wide FCFS queue behind
+//! the [`ElasticLane`] contract. Resizes cordon **whole nodes** through
+//! `GpuCluster::set_pool_scale` with the sticky coldest-first order (see
+//! the cluster docs for the determinism invariant); a cache flush is
+//! orthogonal to both factors — it drops residencies, never cordons.
+
+use super::{ElasticLane, PoolId, Resized};
+use crate::action::{Action, ResourceKindId};
+use crate::autoscale::{PoolClass, PoolPressure};
+use crate::coordinator::queue::ActionQueue;
+use crate::managers::GpuManager;
+
+/// GPU lane: one scale target (`endpoint == None`), one cluster-wide pool.
+///
+/// `Deref`s to the wrapped [`GpuManager`] so the scheduling hot path (and
+/// tests) keep reading allocation/cache state through the lane.
+pub struct GpuLane {
+    /// The EOE manager (the `Deref` target).
+    pub mgr: GpuManager,
+    /// Cluster-wide FCFS waiting queue for GPU service actions.
+    pub queue: ActionQueue,
+    kind: ResourceKindId,
+    fault: f64,
+    auto: f64,
+}
+
+impl GpuLane {
+    pub fn new(mgr: GpuManager, kind: ResourceKindId) -> Self {
+        GpuLane { mgr, queue: ActionQueue::new(), kind, fault: 1.0, auto: 1.0 }
+    }
+
+    /// The resource kind this lane's cost dimension is keyed by.
+    pub fn kind(&self) -> ResourceKindId {
+        self.kind
+    }
+
+    /// Push the composed (fault × autoscale) factor into the whole-node
+    /// cordon machinery and report the pool dirty — capacity moved either
+    /// way, and a restore must immediately revive a stalled queue.
+    fn apply(&mut self) -> Vec<PoolId> {
+        let f = (self.fault * self.auto).clamp(0.0, 1.0);
+        let _ = self.mgr.set_pool_scale(f);
+        vec![PoolId::Gpu]
+    }
+}
+
+impl std::ops::Deref for GpuLane {
+    type Target = GpuManager;
+    fn deref(&self) -> &GpuManager {
+        &self.mgr
+    }
+}
+
+impl std::ops::DerefMut for GpuLane {
+    fn deref_mut(&mut self) -> &mut GpuManager {
+        &mut self.mgr
+    }
+}
+
+impl ElasticLane for GpuLane {
+    fn class(&self) -> PoolClass {
+        PoolClass::Gpu
+    }
+
+    fn classify(&self, action: &Action) -> Option<PoolId> {
+        if action.spec.cost.dim(self.kind).min_units() == 0 {
+            return None;
+        }
+        Some(PoolId::Gpu)
+    }
+
+    fn pool_ids(&self) -> Vec<PoolId> {
+        vec![PoolId::Gpu]
+    }
+
+    fn pressures(&self) -> Vec<PoolPressure> {
+        vec![PoolPressure {
+            class: PoolClass::Gpu,
+            endpoint: None,
+            queued: self.queue.len() as u64,
+            queued_units: self
+                .queue
+                .iter()
+                .map(|a| a.spec.cost.dim(self.kind).min_units())
+                .sum(),
+            in_use_units: self.mgr.in_use_gpus(),
+            provisioned_units: self.mgr.provisioned_gpus() as u64,
+            baseline_units: self.mgr.total_gpus() as u64,
+        }]
+    }
+
+    fn provisioned_units(&self) -> u64 {
+        self.mgr.provisioned_gpus() as u64
+    }
+
+    fn set_fault(&mut self, factor: f64) -> Resized {
+        self.fault = factor;
+        let dirty = self.apply();
+        Resized { reached: self.provisioned_units(), applied: true, dirty }
+    }
+
+    fn set_auto(&mut self, _endpoint: Option<u32>, factor: f64) -> Resized {
+        self.auto = factor.clamp(0.0, 1.0);
+        let dirty = self.apply();
+        Resized { reached: self.provisioned_units(), applied: true, dirty }
+    }
+}

@@ -1,0 +1,114 @@
+//! Elastic resource lanes: the unified substrate-side abstraction behind
+//! the paper's *unified action-level formulation* over heterogeneous
+//! external resources.
+//!
+//! Before this subsystem existed, the tangram backend special-cased every
+//! resource class: three copies of the compose-and-push scaling logic
+//! (`apply_cpu_scale` / `apply_gpu_scale` / `apply_api_scale_one`) and a
+//! per-class `match` in every scaling path (`scale_classes`, `resize`, the
+//! fault injections). An [`ElasticLane`] collapses that duplication: one
+//! trait, keyed by `(PoolClass, endpoint)` targets, that owns
+//!
+//! * **classification** — routing an [`Action`] to the lane's sub-pool
+//!   ([`ElasticLane::classify`] → [`PoolId`]);
+//! * **pressure reporting** — the [`PoolPressure`] observation rows the
+//!   autoscaler consumes, one per scale target, endpoint-sorted;
+//! * **fault × auto factor composition** — scenario fault factors and
+//!   autoscaler factors are tracked separately and COMPOSED (product) into
+//!   the substrate, so a scale-up never cancels an injected provider flap
+//!   and an injected restore never silently undoes an autoscaler
+//!   scale-down (the two layers own different knobs in production too);
+//! * **substrate application** — core cordons ([`CpuLane`]), whole-node
+//!   GPU cordons ([`GpuLane`]), provider limits + admission margins
+//!   ([`ApiLane`]);
+//! * **provision accounting** — the `Backend::provisioned` billing gauge
+//!   ([`ElasticLane::provisioned_units`]).
+//!
+//! # Lane contract (determinism rules)
+//!
+//! * Lanes enumerate in `PoolClass` order (Cpu < Gpu < Api) and each lane
+//!   returns its sub-pools and pressure rows **sorted** (nodes by id,
+//!   endpoints by kind id), so the concatenation over lanes is the sorted
+//!   global [`PoolId`] order — the deterministic drain/eval order recorded
+//!   scenario traces replay byte-for-byte.
+//! * [`ElasticLane::set_fault`] / [`ElasticLane::set_auto`] return the
+//!   sub-pools whose capacity moved ([`Resized::dirty`]); the backend must
+//!   re-dirty exactly those so a restore immediately revives stalled
+//!   queues (the cordon queue-stall contract).
+//! * Resizes are best-effort: busy capacity is never preempted, and every
+//!   lane keeps a floor online (one core per CPU node, one GPU node, one
+//!   API lane) so minimum-width actions keep making progress.
+
+pub mod api;
+pub mod cost;
+pub mod cpu;
+pub mod gpu;
+
+pub use api::ApiLane;
+pub use cost::CostModel;
+pub use cpu::CpuLane;
+pub use gpu::GpuLane;
+
+use crate::action::{Action, ResourceKindId};
+use crate::autoscale::{PoolClass, PoolPressure};
+use crate::cluster::cpu::NodeId;
+
+/// One schedulable resource pool. The derived ordering (CPU nodes by id,
+/// then the GPU cluster, then API endpoints by kind) is the deterministic
+/// drain order — `BTreeSet<PoolId>` iteration visits dirty pools exactly
+/// the way the legacy full sweep visited all pools.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum PoolId {
+    CpuNode(NodeId),
+    Gpu,
+    Api(ResourceKindId),
+}
+
+/// Result of pushing a composed scale factor into a lane's substrate.
+#[derive(Debug, Clone)]
+pub struct Resized {
+    /// Units the whole class actually reached (best-effort — busy capacity
+    /// is never preempted).
+    pub reached: u64,
+    /// Whether the lane has a substrate that honored the factor at all
+    /// (an API lane with zero endpoints reports `false`).
+    pub applied: bool,
+    /// Sub-pools whose capacity moved; the backend must re-dirty them so
+    /// the pump that follows reschedules their queues at the resize
+    /// instant.
+    pub dirty: Vec<PoolId>,
+}
+
+/// A class of elastically-resizable external resource, wrapping the
+/// substrate machinery (cluster managers, provider limits) plus the FCFS
+/// queues that feed it. See the module docs for the lane contract.
+pub trait ElasticLane {
+    /// The pool class this lane scales (one lane per class).
+    fn class(&self) -> PoolClass;
+
+    /// Route an action to this lane's sub-pool; `None` when the action's
+    /// cost vector does not touch this lane. Lanes are probed in class
+    /// order, so the API lane may claim any remaining non-zero dimension.
+    fn classify(&self, action: &Action) -> Option<PoolId>;
+
+    /// Sub-pools of this lane in sorted order (the cached full-sweep index
+    /// concatenates these across lanes).
+    fn pool_ids(&self) -> Vec<PoolId>;
+
+    /// Live demand observations, one row per scale target, sorted by
+    /// endpoint — the autoscaler's deterministic evaluation order.
+    fn pressures(&self) -> Vec<PoolPressure>;
+
+    /// Currently-provisioned units of the whole class (the
+    /// `Backend::provisioned` billing gauge, named [`PoolClass::name`]).
+    fn provisioned_units(&self) -> u64;
+
+    /// Set the class-wide scenario-fault factor and push the composed
+    /// (fault × auto) product into the substrate.
+    fn set_fault(&mut self, factor: f64) -> Resized;
+
+    /// Set the autoscaler factor for one target (`None` sweeps every
+    /// target of the lane) and push the composed product into the
+    /// substrate.
+    fn set_auto(&mut self, endpoint: Option<u32>, factor: f64) -> Resized;
+}

@@ -21,6 +21,7 @@ pub mod baselines;
 pub mod bench;
 pub mod cluster;
 pub mod coordinator;
+pub mod lanes;
 pub mod managers;
 pub mod metrics;
 pub mod config;

@@ -22,6 +22,7 @@
 //!   arl-tangram scenario --pack api-flap --backend tangram --record t.jsonl
 //!   arl-tangram scenario --replay t.jsonl
 //!   arl-tangram scenario --pack coldstart-storm --autoscale --record auto.jsonl
+//!   arl-tangram scenario --pack coldstart-storm --autoscale --admission   # overlap queue wait with cold starts
 //!   arl-tangram scenario --pack gpu-thrash --autoscale   # GPU-elastic A/B reference
 //!   arl-tangram scenario --replay static.jsonl --against auto.jsonl
 //!   arl-tangram bench-gate --baseline testdata/BENCH_sched.baseline.json
@@ -31,12 +32,14 @@ use arl_tangram::action::TaskId;
 use arl_tangram::autoscale::{AutoscaleCfg, PolicyKind};
 use arl_tangram::config::{BackendKind, ExperimentCfg};
 use arl_tangram::coordinator::{run, Backend};
+use arl_tangram::lanes::CostModel;
 use arl_tangram::metrics::Metrics;
 use arl_tangram::rollout::workloads::{Catalog, Workload, WorkloadKind};
 use arl_tangram::runtime::{PjrtEngine, RewardModel};
 use arl_tangram::scenario::{
-    ab_compare, build_backend, builtin_packs, pack_by_name, read_trace_file, replay_trace,
-    run_scenario, run_scenario_tangram, summary_json, write_trace_file, ScenarioSpec,
+    ab_compare, build_backend, builtin_packs, pack_by_name, pack_description, read_trace_file,
+    replay_trace, run_scenario, run_scenario_tangram, summary_json, write_trace_file,
+    ScenarioSpec,
 };
 use arl_tangram::util::cli::Args;
 use arl_tangram::util::logging;
@@ -171,6 +174,7 @@ fn cmd_scenario(argv: Vec<String>) -> i32 {
         .flag("full-sweep", "tangram only: schedule every pool on every pump (legacy A/B baseline)")
         .flag("autoscale", "size pools to demand with the elastic autoscaler (embedded in the trace)")
         .opt("autoscale-policy", "queue", "autoscaler policy: queue | ewma")
+        .flag("admission", "with --autoscale: pre-admit queued work against billed-but-warming capacity")
         .parse_from(argv)
     {
         Ok(a) => a,
@@ -192,6 +196,7 @@ fn cmd_scenario(argv: Vec<String>) -> i32 {
                 p.seed,
                 p.events.len()
             );
+            println!("{:<16}   {}", "", pack_description(&p.name));
         }
         return 0;
     }
@@ -282,6 +287,22 @@ fn cmd_scenario(argv: Vec<String>) -> i32 {
                 }
             };
             spec.autoscale = Some(AutoscaleCfg { policy, ..AutoscaleCfg::default() });
+            // autoscaled CLI runs always price their unit-hours; a spec
+            // file's own rate card wins over the default
+            if spec.cost.is_none() {
+                spec.cost = Some(CostModel::default());
+            }
+        }
+        if args.bool("admission") {
+            match spec.autoscale.as_mut() {
+                Some(asc) => asc.admission = true,
+                None => {
+                    eprintln!(
+                        "--admission needs --autoscale (or a spec with an embedded autoscale config)"
+                    );
+                    return 2;
+                }
+            }
         }
         let backend = match BackendKind::parse(&args.str("backend")) {
             Ok(b) => b,
@@ -353,7 +374,8 @@ fn cmd_scenario(argv: Vec<String>) -> i32 {
     }
 }
 
-/// Per-pool resource-hour report (the paper's §6 savings surface).
+/// Per-pool resource-hour (and, with a cost model, dollar) report — the
+/// paper's §6 savings surface plus its $-weighted sibling.
 fn print_resource_report(m: &Metrics, autoscaled: bool) {
     for (pool, used, stat) in m.resource_rows() {
         println!("resource-hours {pool:<10}: {used:10.2} unit-h (static {stat:10.2} unit-h)");
@@ -364,6 +386,18 @@ fn print_resource_report(m: &Metrics, autoscaled: bool) {
         savings * 100.0,
         if autoscaled { "" } else { " (static provisioning)" }
     );
+    let cost_rows = m.cost_rows();
+    if !cost_rows.is_empty() {
+        for (pool, rate, used, stat) in &cost_rows {
+            println!(
+                "cost {pool:<20}: {used:10.2} $ (static {stat:10.2} $ @ {rate} $/unit-h)"
+            );
+        }
+        println!(
+            "savings_vs_static_cost: {:7.1}%",
+            Metrics::cost_savings_of(&cost_rows) * 100.0
+        );
+    }
 }
 
 /// Offline A/B diff of two recorded traces: event-stream divergence check
@@ -393,13 +427,13 @@ fn cmd_scenario_against(path_a: &str, path_b: &str) -> i32 {
         None => "      -".to_string(),
     };
     println!(
-        "{:<10} {:>8} {:>8} {:>11} {:>11} {:>8} {:>11} {:>11} {:>8}",
+        "{:<10} {:>8} {:>8} {:>11} {:>11} {:>8} {:>11} {:>11} {:>8} {:>10} {:>10} {:>8}",
         "pool", "acts A", "acts B", "ACT A (s)", "ACT B (s)", "dACT", "unit-h A", "unit-h B",
-        "dRES"
+        "dRES", "cost A ($)", "cost B ($)", "dCOST"
     );
     for r in &report.rows {
         println!(
-            "{:<10} {:>8} {:>8} {:>11.2} {:>11.2} {:>8} {:>11.2} {:>11.2} {:>8}",
+            "{:<10} {:>8} {:>8} {:>11.2} {:>11.2} {:>8} {:>11.2} {:>11.2} {:>8} {:>10.2} {:>10.2} {:>8}",
             r.pool,
             r.a.actions,
             r.b.actions,
@@ -409,6 +443,9 @@ fn cmd_scenario_against(path_a: &str, path_b: &str) -> i32 {
             r.a.unit_hours,
             r.b.unit_hours,
             fmt_delta(r.hours_delta()),
+            r.cost_a,
+            r.cost_b,
+            fmt_delta(r.cost_delta()),
         );
     }
     if report.identical {

@@ -9,7 +9,7 @@ use crate::action::{ActionId, ActionKind, TaskId, TrajId};
 use crate::sim::{SimDur, SimTime};
 use crate::util::json::Json;
 use crate::util::{mean, percentile};
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 /// Final record of one action.
 #[derive(Debug, Clone)]
@@ -130,6 +130,12 @@ pub struct Metrics {
     pub steps: Vec<StepRecord>,
     pub util: Vec<UtilSample>,
     pub provision: Vec<ProvisionRecord>,
+    /// Resolved $/unit-hour per provision pool (`lanes::CostModel::resolve`
+    /// against the deployment; set by the scenario engine when the spec
+    /// embeds a cost model). `None` = unit-hour accounting only — the
+    /// serialized form is unchanged, which is what keeps static golden
+    /// traces byte-identical.
+    pub cost_rates: Option<BTreeMap<String, f64>>,
 }
 
 impl Metrics {
@@ -317,6 +323,64 @@ impl Metrics {
         1.0 - used / stat
     }
 
+    /// Dollar accounting for one pool under the resolved rate card:
+    /// `(used $, static $)` — rate × the [`Self::pool_unit_hours`] pair.
+    /// Pools without a resolved rate (or with no cost model at all) fall
+    /// back to rate 1.0, i.e. plain unit-hours.
+    pub fn pool_cost(&self, pool: &str) -> (f64, f64) {
+        let (used, stat) = self.pool_unit_hours(pool);
+        let rate = self.rate_of(pool);
+        (rate * used, rate * stat)
+    }
+
+    fn rate_of(&self, pool: &str) -> f64 {
+        self.cost_rates
+            .as_ref()
+            .and_then(|r| r.get(pool).copied())
+            .unwrap_or(1.0)
+    }
+
+    /// Per-pool dollar rows, sorted by pool name:
+    /// `(pool, rate, used $, static $)`. Empty without a cost model.
+    pub fn cost_rows(&self) -> Vec<(String, f64, f64, f64)> {
+        if self.cost_rates.is_none() {
+            return Vec::new();
+        }
+        self.resource_rows()
+            .into_iter()
+            .map(|(pool, used, stat)| {
+                let rate = self.rate_of(&pool);
+                (pool, rate, rate * used, rate * stat)
+            })
+            .collect()
+    }
+
+    /// Dollar-weighted savings over precomputed [`Self::cost_rows`] — the
+    /// reporting paths integrate the provision series once and derive the
+    /// headline figure from the same rows they print.
+    pub fn cost_savings_of(rows: &[(String, f64, f64, f64)]) -> f64 {
+        let (mut used, mut stat) = (0.0, 0.0);
+        for (_, _, u, s) in rows {
+            used += *u;
+            stat += *s;
+        }
+        if stat <= 0.0 {
+            return 0.0;
+        }
+        1.0 - used / stat
+    }
+
+    /// Dollar-weighted sibling of [`Self::savings_vs_static`]: pools are
+    /// weighted by $/unit-hour instead of unit-hours, so saving a GPU-hour
+    /// counts what it actually costs. Falls back to the unweighted figure
+    /// without a cost model; always finite (0 when nothing was billed).
+    pub fn savings_vs_static_cost(&self) -> f64 {
+        if self.cost_rates.is_none() {
+            return self.savings_vs_static();
+        }
+        Self::cost_savings_of(&self.cost_rows())
+    }
+
     pub fn failed_actions(&self) -> usize {
         self.actions.iter().filter(|a| a.failed).count()
     }
@@ -383,14 +447,23 @@ impl Metrics {
                 ("units", ns(p.units)),
             ])
         }));
-        Json::obj(vec![
+        let mut pairs = vec![
             ("actions", actions),
             ("provision", provision),
             ("savings_vs_static", Json::num(self.savings_vs_static())),
             ("steps", steps),
             ("trajectories", trajectories),
             ("util", util),
-        ])
+        ];
+        // cost keys appear ONLY when a cost model is wired, so cost-free
+        // runs (every static golden trace) keep their exact bytes
+        if let Some(rates) = &self.cost_rates {
+            let rates_json =
+                Json::obj(rates.iter().map(|(k, v)| (k.as_str(), Json::num(*v))).collect());
+            pairs.push(("cost_rates", rates_json));
+            pairs.push(("savings_vs_static_cost", Json::num(self.savings_vs_static_cost())));
+        }
+        Json::obj(pairs)
     }
 }
 
@@ -562,6 +635,45 @@ mod tests {
         m.provision.push(prov(50, "cpu_cores", 45));
         // aggregate: used = 90*.5 + 45*.5 + 10 = 77.5 of 100 static
         assert!((m.savings_vs_static() - 0.225).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cost_weighting_reprices_the_savings() {
+        // 128 cores halved mid-run + 16 GPUs static: unit-hours say the
+        // cpu shrink dominates, dollars say the (expensive) static GPUs do
+        let mut m = Metrics::new();
+        m.actions.push(rec(1, 0, 1, 100, ActionKind::EnvExec));
+        m.provision.push(prov(0, "cpu_cores", 128));
+        m.provision.push(prov(50, "cpu_cores", 64));
+        m.provision.push(prov(0, "gpus", 16));
+        let unweighted = m.savings_vs_static();
+        assert!(unweighted > 0.0);
+        // without a cost model the dollar figure IS the unweighted figure
+        assert_eq!(m.savings_vs_static_cost(), unweighted);
+        assert!(m.cost_rows().is_empty());
+        let mut rates = BTreeMap::new();
+        rates.insert("cpu_cores".to_string(), 0.1);
+        rates.insert("gpus".to_string(), 10.0);
+        m.cost_rates = Some(rates);
+        // used$ = 0.1×(128×50 + 64×50)/3600 + 10×16×100/3600
+        // stat$ = 0.1×128×100/3600 + 10×16×100/3600
+        let used = (0.1 * (128.0 * 50.0 + 64.0 * 50.0) + 10.0 * 1600.0) / 3600.0;
+        let stat = (0.1 * 12800.0 + 10.0 * 1600.0) / 3600.0;
+        let weighted = m.savings_vs_static_cost();
+        assert!((weighted - (1.0 - used / stat)).abs() < 1e-9, "got {weighted}");
+        assert!(weighted < unweighted, "cheap-cpu savings must deflate in dollars");
+        assert!(weighted.is_finite());
+        let rows = m.cost_rows();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].0, "cpu_cores");
+        assert!((rows[0].1 - 0.1).abs() < 1e-12);
+        let (gpu_used, gpu_stat) = m.pool_cost("gpus");
+        assert!((gpu_used - gpu_stat).abs() < 1e-9, "static pool: used$ == static$");
+        // cost keys only serialize when the model is wired
+        let j = m.to_json().to_string();
+        assert!(j.contains("savings_vs_static_cost"));
+        m.cost_rates = None;
+        assert!(!m.to_json().to_string().contains("savings_vs_static_cost"));
     }
 
     #[test]

@@ -29,18 +29,19 @@ pub mod packs;
 pub mod replay;
 pub mod trace;
 
-pub use packs::{builtin_packs, pack_by_name};
+pub use packs::{builtin_packs, pack_by_name, pack_description};
 pub use replay::{
     ab_compare, build_backend, diff_summaries, diff_traces, parse_trace_file, read_trace_file,
-    replay_trace, run_scenario, run_scenario_tangram, summary_json, trace_file_contents,
-    trace_pool_stats, write_trace_file, AbReport, AbRow, RecordedTrace, ReplayReport,
-    ScenarioOutcome, SchedStats, TracePoolStats,
+    replay_trace, resolved_cost_rates, run_scenario, run_scenario_tangram, summary_json,
+    trace_file_contents, trace_pool_stats, write_trace_file, AbReport, AbRow, RecordedTrace,
+    ReplayReport, ScenarioOutcome, SchedStats, TracePoolStats,
 };
 pub use trace::{TraceEvent, TraceKind, TraceRecorder};
 
 use crate::action::TaskId;
-use crate::autoscale::AutoscaleCfg;
+use crate::autoscale::{AutoscaleCfg, PoolClass};
 use crate::config::BackendKind;
+use crate::lanes::CostModel;
 use crate::coordinator::RunCfg;
 use crate::rollout::workloads::{CatalogCfg, Workload, WorkloadKind};
 use crate::sim::{SimDur, SimTime};
@@ -78,6 +79,20 @@ pub enum ScenarioEvent {
 }
 
 impl ScenarioEvent {
+    /// The class-wide fault factor this event pushes into an elastic lane
+    /// (`lanes::ElasticLane::set_fault`), or `None` for events that are
+    /// not pool-scale faults (a cache flush drops residencies, never
+    /// capacity). Backends route these generically instead of matching per
+    /// class.
+    pub fn pool_fault(&self) -> Option<(PoolClass, f64)> {
+        match self {
+            ScenarioEvent::ApiLimitScale { factor } => Some((PoolClass::Api, *factor)),
+            ScenarioEvent::GpuPoolScale { factor } => Some((PoolClass::Gpu, *factor)),
+            ScenarioEvent::CpuPoolScale { factor } => Some((PoolClass::Cpu, *factor)),
+            ScenarioEvent::GpuCacheFlush => None,
+        }
+    }
+
     /// Human-readable one-liner (trace + CLI reporting).
     pub fn describe(&self) -> String {
         match self {
@@ -154,6 +169,11 @@ pub struct ScenarioSpec {
     /// Elastic pool autoscaler (None = static provisioning). Embedded in
     /// the spec so recorded traces replay with the same scaling decisions.
     pub autoscale: Option<AutoscaleCfg>,
+    /// $/unit-hour rate card (None = unit-hours only). Embedded in the
+    /// spec — and therefore in recorded traces — so replays reproduce the
+    /// cost figures byte-for-byte. Pure reporting: never influences a
+    /// scheduling or scaling decision.
+    pub cost: Option<CostModel>,
 }
 
 fn workload_kind_parse(s: &str) -> Result<WorkloadKind> {
@@ -253,6 +273,9 @@ impl ScenarioSpec {
         if let Some(asc) = &self.autoscale {
             asc.validate()?;
         }
+        if let Some(cost) = &self.cost {
+            cost.validate()?;
+        }
         for te in &self.events {
             match te.event {
                 ScenarioEvent::ApiLimitScale { factor } => {
@@ -303,6 +326,9 @@ impl ScenarioSpec {
         if let Some(asc) = &self.autoscale {
             pairs.push(("autoscale", asc.to_json()));
         }
+        if let Some(cost) = &self.cost {
+            pairs.push(("cost", cost.to_json()));
+        }
         Json::obj(pairs)
     }
 
@@ -318,6 +344,7 @@ impl ScenarioSpec {
             catalog: CatalogCfg::default(),
             events: vec![],
             autoscale: None,
+            cost: None,
         };
         for (k, v) in obj {
             match k.as_str() {
@@ -359,6 +386,7 @@ impl ScenarioSpec {
                 }
                 "catalog" => spec.catalog = catalog_from_json(v)?,
                 "autoscale" => spec.autoscale = Some(AutoscaleCfg::from_json(v)?),
+                "cost" => spec.cost = Some(CostModel::from_json(v)?),
                 "events" => {
                     spec.events = v
                         .as_arr()
@@ -459,6 +487,54 @@ mod tests {
             r#"{"name":"x","workloads":["coding"],"autoscale":{"min_factor":0.001}}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn cost_model_round_trips_through_the_spec() {
+        let mut spec = pack_by_name("coldstart-storm").unwrap();
+        spec.cost = Some(CostModel::default());
+        let j = spec.to_json().to_string();
+        assert!(j.contains("\"cost\""));
+        let back = ScenarioSpec::from_json(&j).unwrap();
+        assert_eq!(back.cost, spec.cost);
+        assert_eq!(back.to_json().to_string(), j);
+        // a spec without a cost model keeps its pre-cost bytes (the static
+        // golden-trace compatibility invariant)
+        let plain = pack_by_name("coldstart-storm").unwrap();
+        assert!(!plain.to_json().to_string().contains("\"cost\""));
+        // invalid rate cards are rejected at spec load
+        assert!(ScenarioSpec::from_json(
+            r#"{"name":"x","workloads":["coding"],"cost":{"gpus":-2}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn pool_faults_map_events_to_lane_classes() {
+        assert_eq!(
+            ScenarioEvent::ApiLimitScale { factor: 0.5 }.pool_fault(),
+            Some((PoolClass::Api, 0.5))
+        );
+        assert_eq!(
+            ScenarioEvent::CpuPoolScale { factor: 0.25 }.pool_fault(),
+            Some((PoolClass::Cpu, 0.25))
+        );
+        assert_eq!(
+            ScenarioEvent::GpuPoolScale { factor: 0.5 }.pool_fault(),
+            Some((PoolClass::Gpu, 0.5))
+        );
+        assert_eq!(ScenarioEvent::GpuCacheFlush.pool_fault(), None);
+    }
+
+    #[test]
+    fn every_pack_has_a_catalog_description() {
+        for p in builtin_packs() {
+            assert!(
+                !pack_description(&p.name).is_empty(),
+                "pack '{}' has no --list description",
+                p.name
+            );
+        }
     }
 
     #[test]

@@ -40,6 +40,7 @@ pub fn builtin_packs() -> Vec<ScenarioSpec> {
             catalog: small_catalog(),
             events: vec![],
             autoscale: None,
+            cost: None,
         },
         // Thundering-herd arrivals plus a mid-burst provider flap: the
         // §2.3 burstiness story with the provider fighting back.
@@ -56,6 +57,7 @@ pub fn builtin_packs() -> Vec<ScenarioSpec> {
                 at(120, ScenarioEvent::ApiLimitScale { factor: 1.0 }),
             ],
             autoscale: None,
+            cost: None,
         },
         // Repeated deep rate-limit flaps on the DeepSearch path: quota and
         // concurrency collapse to 5% of baseline, twice, so the admission
@@ -75,6 +77,7 @@ pub fn builtin_packs() -> Vec<ScenarioSpec> {
                 at(150, ScenarioEvent::ApiLimitScale { factor: 1.0 }),
             ],
             autoscale: None,
+            cost: None,
         },
         // Restore storms: warm (service, DoP) caches are dropped every few
         // tens of seconds across the reward-burst window, so teacher and
@@ -100,6 +103,7 @@ pub fn builtin_packs() -> Vec<ScenarioSpec> {
                 at(300, ScenarioEvent::GpuCacheFlush),
             ],
             autoscale: None,
+            cost: None,
         },
         // Mid-run CPU pool squeeze: half of every node's cores cordon off
         // at t=20s and return at t=100s (elastic-pool resizing; Mopd rides
@@ -117,6 +121,7 @@ pub fn builtin_packs() -> Vec<ScenarioSpec> {
                 at(100, ScenarioEvent::CpuPoolScale { factor: 1.0 }),
             ],
             autoscale: None,
+            cost: None,
         },
         // Serverless cold-start storm: two RL steps of coding + MOPD with
         // repeated warm-cache drops, so GPU restores keep going cold while
@@ -141,6 +146,7 @@ pub fn builtin_packs() -> Vec<ScenarioSpec> {
                 at(300, ScenarioEvent::GpuCacheFlush),
             ],
             autoscale: None,
+            cost: None,
         },
         // Teacher-count sweep: MOPD against twice the teacher fleet on a
         // pool that cannot pin them all resident — multiplexing pressure,
@@ -161,6 +167,7 @@ pub fn builtin_packs() -> Vec<ScenarioSpec> {
             },
             events: vec![at(30, ScenarioEvent::GpuCacheFlush)],
             autoscale: None,
+            cost: None,
         },
         // GPU-thrash: teacher-sweep-style arrivals under cache-flush storms
         // plus a mid-run provider-side GPU squeeze — the GPU-elasticity A/B
@@ -195,6 +202,7 @@ pub fn builtin_packs() -> Vec<ScenarioSpec> {
                 at(300, ScenarioEvent::GpuCacheFlush),
             ],
             autoscale: None,
+            cost: None,
         },
         // Multi-step flap+squeeze composition: API rate-limit flaps and CPU
         // pool squeezes interleave across two RL steps, so admission rides
@@ -217,6 +225,7 @@ pub fn builtin_packs() -> Vec<ScenarioSpec> {
                 at(260, ScenarioEvent::ApiLimitScale { factor: 1.0 }),
             ],
             autoscale: None,
+            cost: None,
         },
     ]
 }
@@ -224,6 +233,25 @@ pub fn builtin_packs() -> Vec<ScenarioSpec> {
 /// Look up a built-in pack by name.
 pub fn pack_by_name(name: &str) -> Option<ScenarioSpec> {
     builtin_packs().into_iter().find(|p| p.name == name)
+}
+
+/// One-line description per built-in pack (`scenario --list` catalog).
+/// Kept OUT of [`ScenarioSpec`] on purpose: spec JSON is embedded in
+/// recorded trace headers, and adding a field there would re-bless every
+/// static golden trace for a cosmetic string.
+pub fn pack_description(name: &str) -> &'static str {
+    match name {
+        "steady-mix" => "fault-free tri-workload mix — the conformance baseline",
+        "burst-arrivals" => "thundering-herd arrivals with a mid-burst provider flap",
+        "api-flap" => "repeated deep API rate-limit flaps on the DeepSearch path",
+        "restore-storm" => "GPU cache-flush storm — every reward pays cold restores",
+        "pool-squeeze" => "mid-run CPU cordon squeeze and restore",
+        "coldstart-storm" => "2-step coding+MOPD under flush storms — autoscaler A/B reference",
+        "teacher-sweep" => "8 teachers on a pool that cannot pin them all resident",
+        "gpu-thrash" => "flush storms + GPU pool squeeze — GPU-elasticity A/B reference",
+        "flap-squeeze" => "API flaps and CPU squeezes composed across two RL steps",
+        _ => "",
+    }
 }
 
 #[cfg(test)]

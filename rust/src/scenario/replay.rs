@@ -94,7 +94,7 @@ pub fn run_scenario(spec: &ScenarioSpec, backend: BackendKind) -> Result<Scenari
     let mut rec = TraceRecorder::new();
     let mut asc = spec.autoscale.clone().map(Autoscaler::new);
     let cfg = spec.run_cfg();
-    let metrics = run_traced(
+    let mut metrics = run_traced(
         be.as_mut(),
         &cat,
         &wls,
@@ -103,7 +103,32 @@ pub fn run_scenario(spec: &ScenarioSpec, backend: BackendKind) -> Result<Scenari
         Some(&mut rec),
         asc.as_mut(),
     );
+    attach_cost(&mut metrics, spec, be.as_ref());
     Ok(ScenarioOutcome { metrics, events: rec.events })
+}
+
+/// Wire the spec's embedded rate card into the metrics (post-run: cost is
+/// pure reporting and must never influence a scheduling decision). The
+/// resolution only reads deploy-time invariants (baselines, pool names),
+/// so it matches [`resolved_cost_rates`]'s offline reconstruction exactly.
+fn attach_cost(metrics: &mut Metrics, spec: &ScenarioSpec, be: &dyn Backend) {
+    if let Some(cost) = &spec.cost {
+        metrics.cost_rates = Some(cost.resolve(&be.scale_classes(), &be.provisioned()));
+    }
+}
+
+/// Effective $/unit-hour per pool for a recorded trace: the embedded
+/// spec's cost model — or the default rate card when the spec has none —
+/// resolved against a fresh deployment of the embedded catalog. Purely
+/// offline; deterministic.
+pub fn resolved_cost_rates(
+    spec: &ScenarioSpec,
+    backend: BackendKind,
+) -> BTreeMap<String, f64> {
+    let cost = spec.cost.clone().unwrap_or_default();
+    let cat = Catalog::build(&spec.catalog);
+    let be = build_backend(&spec.catalog, &cat, backend);
+    cost.resolve(&be.scale_classes(), &be.provisioned())
 }
 
 /// Scheduler hot-path counters of one Tangram scenario run (the dirty-pool
@@ -143,7 +168,7 @@ pub fn run_scenario_tangram(
     let mut rec = TraceRecorder::new();
     let mut asc = spec.autoscale.clone().map(Autoscaler::new);
     let cfg = spec.run_cfg();
-    let metrics = run_traced(
+    let mut metrics = run_traced(
         &mut be,
         &cat,
         &wls,
@@ -152,6 +177,7 @@ pub fn run_scenario_tangram(
         Some(&mut rec),
         asc.as_mut(),
     );
+    attach_cost(&mut metrics, spec, &be);
     let stats = SchedStats {
         invocations: be.sched_invocations,
         drain_calls: be.drain_calls,
@@ -174,7 +200,7 @@ pub fn summary_json(m: &Metrics) -> Json {
             .map(|(pool, used, _)| (pool.as_str(), Json::num(*used)))
             .collect(),
     );
-    Json::obj(vec![
+    let mut pairs = vec![
         ("actions", Json::num(m.actions.len() as f64)),
         ("failed_actions", Json::num(m.failed_actions() as f64)),
         ("retries", Json::num(m.total_retries() as f64)),
@@ -189,7 +215,23 @@ pub fn summary_json(m: &Metrics) -> Json {
         ("resource_unit_hours", hours),
         ("savings_vs_static", Json::num(m.savings_vs_static())),
         ("metrics_fnv64", Json::str(format!("{:016x}", fnv1a64(full.as_bytes())))),
-    ])
+    ];
+    // dollar figures ride along ONLY for cost-model runs — cost-free trace
+    // summaries (every static golden) keep their exact bytes
+    let cost_rows = m.cost_rows();
+    if !cost_rows.is_empty() {
+        let pool_cost = Json::obj(
+            cost_rows
+                .iter()
+                .map(|(pool, _, used, _)| (pool.as_str(), Json::num(*used)))
+                .collect(),
+        );
+        pairs.push(("pool_cost", pool_cost));
+        // derived from the rows computed above — same accumulation order
+        // as Metrics::savings_vs_static_cost, so the figures agree bitwise
+        pairs.push(("savings_vs_static_cost", Json::num(Metrics::cost_savings_of(&cost_rows))));
+    }
+    Json::obj(pairs)
 }
 
 /// `None` when the serialized summaries are byte-identical; otherwise the
@@ -371,6 +413,10 @@ pub struct AbRow {
     pub pool: String,
     pub a: TracePoolStats,
     pub b: TracePoolStats,
+    /// $ = resolved rate × unit-hours, under each trace's own embedded
+    /// rate card (the default card when a spec carries no cost model).
+    pub cost_a: f64,
+    pub cost_b: f64,
 }
 
 impl AbRow {
@@ -388,6 +434,10 @@ impl AbRow {
 
     pub fn hours_delta(&self) -> Option<f64> {
         Self::delta(self.a.unit_hours, self.b.unit_hours)
+    }
+
+    pub fn cost_delta(&self) -> Option<f64> {
+        Self::delta(self.cost_a, self.cost_b)
     }
 }
 
@@ -449,15 +499,24 @@ pub fn ab_compare(a: &RecordedTrace, b: &RecordedTrace) -> AbReport {
     let summary_diff = diff_summaries(&a.summary, &b.summary);
     let sa = trace_pool_stats(&a.events);
     let sb = trace_pool_stats(&b.events);
+    // each side prices its unit-hours under its own embedded rate card
+    let ra = resolved_cost_rates(&a.spec, a.backend);
+    let rb = resolved_cost_rates(&b.spec, b.backend);
     let mut pools: Vec<String> = sa.keys().chain(sb.keys()).cloned().collect();
     pools.sort();
     pools.dedup();
     let rows = pools
         .into_iter()
-        .map(|pool| AbRow {
-            a: sa.get(&pool).cloned().unwrap_or_default(),
-            b: sb.get(&pool).cloned().unwrap_or_default(),
-            pool,
+        .map(|pool| {
+            let sta = sa.get(&pool).cloned().unwrap_or_default();
+            let stb = sb.get(&pool).cloned().unwrap_or_default();
+            AbRow {
+                cost_a: ra.get(&pool).copied().unwrap_or(1.0) * sta.unit_hours,
+                cost_b: rb.get(&pool).copied().unwrap_or(1.0) * stb.unit_hours,
+                a: sta,
+                b: stb,
+                pool,
+            }
         })
         .collect();
     AbReport {

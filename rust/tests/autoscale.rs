@@ -5,8 +5,11 @@
 //! The unit-level hysteresis/cold-start behaviour lives in
 //! `src/autoscale/mod.rs`; these tests run the whole driver stack.
 
-use arl_tangram::autoscale::{AutoscaleCfg, PolicyKind};
+use arl_tangram::autoscale::{
+    AutoscaleCfg, Autoscaler, PolicyKind, PoolClass, PoolPressure, ScaleCmd,
+};
 use arl_tangram::config::BackendKind;
+use arl_tangram::lanes::CostModel;
 use arl_tangram::scenario::{
     ab_compare, pack_by_name, parse_trace_file, run_scenario, summary_json, trace_file_contents,
     trace_pool_stats, TraceKind,
@@ -206,6 +209,16 @@ fn ab_compare_quantifies_the_savings() {
         cpu.b.unit_hours,
         cpu.a.unit_hours
     );
+    // the cost column prices unit-hours under the (default) rate card:
+    // fewer core-hours ⇒ fewer dollars, and the delta is reported
+    assert!(cpu.cost_a > 0.0);
+    assert!(
+        cpu.cost_b < cpu.cost_a,
+        "autoscaled cpu dollars must shrink: {} !< {}",
+        cpu.cost_b,
+        cpu.cost_a
+    );
+    assert!(cpu.cost_delta().unwrap() < 0.0);
     // self-comparison is the identity
     let same = ab_compare(&a, &a);
     assert!(same.identical);
@@ -251,6 +264,227 @@ fn trace_pool_stats_integrates_provision_series() {
     assert!((cpu.mean_act_secs - 10.0).abs() < 1e-9);
     // 100u × 100s + 50u × 100s = 15000 unit-s
     assert!((cpu.unit_hours - 15000.0 / 3600.0).abs() < 1e-9, "{}", cpu.unit_hours);
+}
+
+#[test]
+fn admission_overlaps_cold_start_at_equal_billing() {
+    // The acceptance differential: on coldstart-storm, pre-admitting
+    // queued work against billed-but-warming capacity must (1) complete
+    // everything, (2) keep the bill byte-equal (admission moves apply
+    // instants, never billing points), and (3) never raise mean ACT —
+    // queue wait overlaps the cold start instead of following it.
+    let mut off_spec = pack_by_name("coldstart-storm").unwrap();
+    off_spec.autoscale = Some(AutoscaleCfg::default());
+    let mut on_spec = off_spec.clone();
+    on_spec.autoscale.as_mut().unwrap().admission = true;
+    let off = run_scenario(&off_spec, BackendKind::Tangram).unwrap();
+    let on = run_scenario(&on_spec, BackendKind::Tangram).unwrap();
+
+    assert_eq!(on.metrics.trajectories.len(), off.metrics.trajectories.len());
+    assert_eq!(on.metrics.failed_actions(), 0);
+
+    // Billing points never move (scale-ups bill from the decision instant
+    // either way), but earlier applies change post-apply dynamics, so a
+    // later scale-DOWN decision may drift by an evaluation tick or two —
+    // savings must agree up to that drift, nothing more.
+    let (s_on, s_off) = (on.metrics.savings_vs_static(), off.metrics.savings_vs_static());
+    assert!(s_off > 0.0);
+    assert!(
+        (s_on - s_off).abs() < 0.01,
+        "savings moved past decision-timing drift: {s_on} vs {s_off}"
+    );
+
+    let (a_on, a_off) = (on.metrics.mean_act(), off.metrics.mean_act());
+    assert!(
+        a_on <= a_off + 1e-9,
+        "admission must not raise mean ACT: {a_on:.4}s !<= {a_off:.4}s"
+    );
+
+    // deterministic: the admission path schedules its wakeups from
+    // autoscaler state only, so two runs are byte-identical
+    let on2 = run_scenario(&on_spec, BackendKind::Tangram).unwrap();
+    assert_eq!(
+        summary_json(&on.metrics).to_string(),
+        summary_json(&on2.metrics).to_string()
+    );
+    assert_eq!(on.events, on2.events);
+}
+
+#[test]
+fn admission_trace_records_and_replays() {
+    // record → parse → replay byte-identity with admission AND the cost
+    // model embedded in the spec (self-contained trace files)
+    use arl_tangram::scenario::replay_trace;
+    let mut spec = pack_by_name("coldstart-storm").unwrap();
+    spec.autoscale = Some(AutoscaleCfg { admission: true, ..AutoscaleCfg::default() });
+    spec.cost = Some(CostModel::default());
+    let outcome = run_scenario(&spec, BackendKind::Tangram).unwrap();
+    let text = trace_file_contents(&spec, BackendKind::Tangram, &outcome);
+    let recorded = parse_trace_file(&text).unwrap();
+    assert_eq!(recorded.spec.autoscale, spec.autoscale, "admission must survive the file");
+    assert_eq!(recorded.spec.cost, spec.cost, "rate card must survive the file");
+    let report = replay_trace(&recorded).unwrap();
+    assert!(
+        report.identical,
+        "admission replay diverged: {:?} {:?}",
+        report.summary_diff, report.trace_divergences
+    );
+}
+
+#[test]
+fn cost_model_prices_the_autoscaled_run() {
+    let mut spec = pack_by_name("coldstart-storm").unwrap();
+    spec.autoscale = Some(AutoscaleCfg::default());
+    spec.cost = Some(CostModel::default());
+    let outcome = run_scenario(&spec, BackendKind::Tangram).unwrap();
+    let m = &outcome.metrics;
+    assert!(m.cost_rates.is_some(), "spec cost model must reach the metrics");
+    let weighted = m.savings_vs_static_cost();
+    assert!(weighted.is_finite());
+    assert!(weighted > 0.0, "autoscaled run must save dollars too: {weighted}");
+    let rows = m.cost_rows();
+    assert!(!rows.is_empty());
+    for (pool, rate, used, stat) in &rows {
+        assert!(rate.is_finite() && *rate > 0.0, "{pool}: rate {rate}");
+        assert!(used.is_finite() && stat.is_finite());
+        assert!(used <= stat, "{pool}: used$ {used} !<= static$ {stat}");
+    }
+    // summary carries the dollar keys for cost-model runs…
+    let s = summary_json(m).to_string();
+    assert!(s.contains("savings_vs_static_cost"));
+    assert!(s.contains("pool_cost"));
+    // …and cost-free runs keep their pre-cost summary bytes
+    let mut plain = pack_by_name("coldstart-storm").unwrap();
+    plain.autoscale = Some(AutoscaleCfg::default());
+    let plain_out = run_scenario(&plain, BackendKind::Tangram).unwrap();
+    assert!(!summary_json(&plain_out.metrics).to_string().contains("pool_cost"));
+}
+
+// ---------------------------------------------------------------------------
+// billed_units under interleaved Decide/Apply (testkit property)
+// ---------------------------------------------------------------------------
+
+/// Per-round observed load for a fixed set of API endpoints of one pool:
+/// `rounds[i][ep] = (queued, in_use)`.
+#[derive(Debug, Clone)]
+struct BilledCase {
+    rounds: Vec<Vec<(u64, u64)>>,
+}
+
+struct BilledGen {
+    endpoints: usize,
+}
+
+impl arl_tangram::testkit::Gen for BilledGen {
+    type Value = BilledCase;
+    fn generate(&self, rng: &mut arl_tangram::util::rng::Rng) -> BilledCase {
+        let rounds = rng.range(8, 40) as usize;
+        BilledCase {
+            rounds: (0..rounds)
+                .map(|_| {
+                    (0..self.endpoints)
+                        .map(|_| (rng.range(0, 4), rng.range(0, 120)))
+                        .collect()
+                })
+                .collect(),
+        }
+    }
+    fn shrink(&self, v: &BilledCase) -> Vec<BilledCase> {
+        let mut out = vec![];
+        if v.rounds.len() > 1 {
+            out.push(BilledCase { rounds: v.rounds[..v.rounds.len() / 2].to_vec() });
+            let mut minus_one = v.clone();
+            minus_one.rounds.pop();
+            out.push(minus_one);
+        }
+        // quiet the last round (drives toward minimal failing load shapes)
+        if let Some(last) = v.rounds.last() {
+            if last.iter().any(|&(q, u)| q + u > 0) {
+                let mut quiet = v.clone();
+                *quiet.rounds.last_mut().unwrap() = vec![(0, 0); last.len()];
+                out.push(quiet);
+            }
+        }
+        out
+    }
+}
+
+#[test]
+fn billed_units_survive_interleaved_decides_and_applies() {
+    // Property (satellite of the lane refactor): with multiple endpoints
+    // of one pool scaling independently, the folded pool bill
+    // (`Autoscaler::billed_units`) must (1) keep every warming
+    // requisition on the bill — one endpoint's Apply never un-bills
+    // another endpoint's pending scale-up — and (2) be monotone
+    // non-decreasing across evaluations while anything is warming and no
+    // scale-down applied.
+    const BASE: u64 = 100;
+    const ENDPOINTS: usize = 3;
+    let generator = BilledGen { endpoints: ENDPOINTS };
+    let cases = arl_tangram::testkit::default_cases().min(128);
+    arl_tangram::testkit::check("billed_units_interleaved", &generator, cases, |case| {
+        let mut asc = Autoscaler::new(AutoscaleCfg::default());
+        let mut applied: Vec<f64> = vec![1.0; ENDPOINTS];
+        let mut warming: Vec<Option<f64>> = vec![None; ENDPOINTS];
+        let mut prev_billed = asc.billed_units(PoolClass::Api);
+        for (i, round) in case.rounds.iter().enumerate() {
+            let now = arl_tangram::sim::SimTime(2_000_000_000 * i as u64);
+            let obs: Vec<PoolPressure> = round
+                .iter()
+                .enumerate()
+                .map(|(ep, &(queued, in_use))| PoolPressure {
+                    class: PoolClass::Api,
+                    endpoint: Some(ep as u32),
+                    queued,
+                    queued_units: queued,
+                    in_use_units: in_use,
+                    provisioned_units: BASE,
+                    baseline_units: BASE,
+                })
+                .collect();
+            let cmds = asc.eval(now, &obs);
+            let mut scaled_down = false;
+            for cmd in &cmds {
+                match cmd {
+                    ScaleCmd::Decide { endpoint: Some(e), factor, .. } => {
+                        warming[*e as usize] = Some(*factor);
+                    }
+                    ScaleCmd::Apply { endpoint: Some(e), factor, .. } => {
+                        let e = *e as usize;
+                        if *factor < applied[e] - 1e-9 {
+                            scaled_down = true;
+                        }
+                        applied[e] = *factor;
+                        warming[e] = None;
+                    }
+                    other => return Err(format!("unexpected endpoint-less cmd {other:?}")),
+                }
+            }
+            let billed = asc.billed_units(PoolClass::Api);
+            // (1) the folded bill covers every target at its *effective*
+            // factor — a warming requisition counts at its requisitioned
+            // factor, so no Apply on a sibling endpoint can un-bill it
+            let expected: u64 = (0..ENDPOINTS)
+                .map(|e| (BASE as f64 * warming[e].unwrap_or(applied[e])).round() as u64)
+                .sum::<u64>()
+                .max(1);
+            if billed != expected {
+                return Err(format!(
+                    "round {i}: billed {billed} != model {expected} \
+                     (applied {applied:?}, warming {warming:?})"
+                ));
+            }
+            // (2) monotone while warming, absent an applied scale-down
+            if warming.iter().any(Option::is_some) && !scaled_down && billed < prev_billed {
+                return Err(format!(
+                    "round {i}: billed fell {prev_billed} -> {billed} with a warming \
+                     requisition and no scale-down"
+                ));
+            }
+            prev_billed = billed;
+        }
+        Ok(())
+    });
 }
 
 #[test]

@@ -15,6 +15,7 @@
 
 use arl_tangram::autoscale::AutoscaleCfg;
 use arl_tangram::config::BackendKind;
+use arl_tangram::lanes::CostModel;
 use arl_tangram::scenario::{builtin_packs, run_scenario, trace_file_contents, ScenarioSpec};
 use std::path::PathBuf;
 
@@ -98,9 +99,13 @@ fn every_pack_and_backend_replays_byte_identical_against_golden() {
         }
         // autoscaled variant: tangram is the only elastic backend, so one
         // autoscaled golden per pack pins the full scale-decision stream
-        // (the autoscale config is embedded in the trace header's spec)
+        // (the autoscale config is embedded in the trace header's spec).
+        // The default rate card rides along, pinning the cost header +
+        // summary additions; cost is pure reporting, so the event stream
+        // is identical to a cost-free autoscaled run.
         let mut auto_spec = spec.clone();
         auto_spec.autoscale = Some(AutoscaleCfg::default());
+        auto_spec.cost = Some(CostModel::default());
         if !check_variant(
             &dir,
             &auto_spec,
