@@ -506,6 +506,7 @@ impl Driver<'_> {
                 self.backend.submit(now, &a);
                 self.actions.insert(id, a);
                 self.waiting += 1;
+                self.metrics.ledger.submitted += 1;
                 self.trace(
                     now,
                     TraceKind::Submit {
@@ -582,6 +583,7 @@ impl Driver<'_> {
                 a.overhead += s.overhead;
                 self.attempt.insert(s.action, (s.overhead, s.exec));
                 self.waiting = self.waiting.saturating_sub(1);
+                self.metrics.ledger.started += 1;
                 self.trace(
                     now,
                     TraceKind::Start {
@@ -623,6 +625,7 @@ impl Driver<'_> {
                 let handle = self.actions[&id].clone();
                 self.backend.submit(now, &handle);
                 self.waiting += 1;
+                self.metrics.ledger.retried += 1;
                 self.trace(
                     now,
                     TraceKind::Complete { action: id.0, outcome: "retry".to_string(), retries },
@@ -630,6 +633,11 @@ impl Driver<'_> {
             }
             Verdict::Done | Verdict::Failed => {
                 let failed = effective == Verdict::Failed;
+                if failed {
+                    self.metrics.ledger.failed += 1;
+                } else {
+                    self.metrics.ledger.done += 1;
+                }
                 let a = self.actions.remove(&id).unwrap();
                 let (overhead, _exec) = self.attempt.remove(&id).unwrap_or_default();
                 self.trace(

@@ -8,7 +8,8 @@
 //!              JSONL, and byte-diff a later replay against it; `--against`
 //!              A/B-diffs two recordings (per-pool ACT/resource-hour table);
 //!              `--autoscale` sizes pools to demand and reports the
-//!              resource-hour savings vs static provisioning
+//!              resource-hour savings vs static provisioning; `--fuzz`
+//!              sweeps seeded random specs through the invariant oracle
 //!   bench-gate compare a fresh BENCH_sched.json against the committed
 //!              baseline (CI perf ratchet; exit 1 on >tolerance regression)
 //!   serve      load the AOT artifacts and run a reward-scoring smoke loop
@@ -25,6 +26,7 @@
 //!   arl-tangram scenario --pack coldstart-storm --autoscale --admission   # overlap queue wait with cold starts
 //!   arl-tangram scenario --pack gpu-thrash --autoscale   # GPU-elastic A/B reference
 //!   arl-tangram scenario --replay static.jsonl --against auto.jsonl
+//!   arl-tangram scenario --fuzz 0 --cases 50   # seeded fuzz + invariant oracle sweep
 //!   arl-tangram bench-gate --baseline testdata/BENCH_sched.baseline.json
 //!   arl-tangram serve --artifacts artifacts
 
@@ -37,11 +39,13 @@ use arl_tangram::metrics::Metrics;
 use arl_tangram::rollout::workloads::{Catalog, Workload, WorkloadKind};
 use arl_tangram::runtime::{PjrtEngine, RewardModel};
 use arl_tangram::scenario::{
-    ab_compare, build_backend, builtin_packs, pack_by_name, pack_description, read_trace_file,
-    replay_trace, run_scenario, run_scenario_tangram, summary_json, write_trace_file,
-    ScenarioSpec,
+    ab_compare, build_backend, builtin_packs, fuzz_spec, pack_by_name, pack_description,
+    read_trace_file, replay_trace, run_scenario, run_scenario_tangram, summary_json,
+    write_trace_file, ScenarioSpec,
 };
+use arl_tangram::testkit::oracle;
 use arl_tangram::util::cli::Args;
+use arl_tangram::util::json::Json;
 use arl_tangram::util::logging;
 
 fn main() {
@@ -170,6 +174,9 @@ fn cmd_scenario(argv: Vec<String>) -> i32 {
         .opt("record", "", "write the decision trace + summary to this JSONL file")
         .opt("replay", "", "re-run a recorded trace file and diff (exit 1 on divergence)")
         .opt("against", "", "with --replay: A/B-diff the two trace files offline instead")
+        .opt("fuzz", "", "fuzz mode: oracle-check generated specs from this base seed")
+        .opt("cases", "1", "with --fuzz: number of consecutive seeds to check")
+        .opt("fail-out", "", "with --fuzz: write the minimized failing spec JSON here")
         .flag("list", "list built-in scenario packs")
         .flag("full-sweep", "tangram only: schedule every pool on every pump (legacy A/B baseline)")
         .flag("autoscale", "size pools to demand with the elastic autoscaler (embedded in the trace)")
@@ -199,6 +206,11 @@ fn cmd_scenario(argv: Vec<String>) -> i32 {
             println!("{:<16}   {}", "", pack_description(&p.name));
         }
         return 0;
+    }
+
+    // ---- fuzz path (--fuzz <seed> [--cases N]) --------------------------
+    if !args.str("fuzz").is_empty() {
+        return cmd_scenario_fuzz(&args);
     }
 
     // ---- A/B path (--replay a.jsonl --against b.jsonl) ------------------
@@ -398,6 +410,70 @@ fn print_resource_report(m: &Metrics, autoscaled: bool) {
             Metrics::cost_savings_of(&cost_rows) * 100.0
         );
     }
+}
+
+/// `scenario --fuzz <seed> [--cases N]`: run the `testkit::oracle` invariant
+/// battery over consecutive fuzzed seeds; on a violation, shrink the spec
+/// simplest-first, print (and optionally write) the minimized reproduction,
+/// and exit 1 so CI promotes the seed to the regression corpus.
+fn cmd_scenario_fuzz(args: &Args) -> i32 {
+    let base = args.u64("fuzz");
+    let cases = args.u64("cases").max(1);
+    let record = args.str("record");
+    if !record.is_empty() && cases != 1 {
+        eprintln!("--record with --fuzz needs --cases 1");
+        return 2;
+    }
+    for i in 0..cases {
+        let seed = base.wrapping_add(i);
+        let spec = fuzz_spec(seed);
+        let report = match oracle::check_spec(&spec) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("fuzz seed {seed}: engine error: {e}");
+                return 2;
+            }
+        };
+        if !report.is_clean() {
+            eprintln!("fuzz seed {seed} VIOLATED:\n{}", report.describe());
+            let (min_spec, min_msg) = oracle::minimize_failure(spec, report.describe());
+            eprintln!("minimized spec:\n{}", min_spec.to_json());
+            eprintln!("minimized violations:\n{min_msg}");
+            let out_path = args.str("fail-out");
+            if !out_path.is_empty() {
+                let body = Json::obj(vec![
+                    ("seed", Json::num(seed as f64)),
+                    ("spec", min_spec.to_json()),
+                    ("violations", Json::str(min_msg)),
+                ]);
+                if let Err(e) = std::fs::write(&out_path, format!("{body}\n")) {
+                    eprintln!("writing {out_path}: {e}");
+                }
+            }
+            return 1;
+        }
+        println!(
+            "fuzz seed {seed} OK: {} actions, {} trace events",
+            report.actions, report.trace_events
+        );
+    }
+    if !record.is_empty() {
+        let spec = fuzz_spec(base);
+        match run_scenario_tangram(&spec, false) {
+            Ok((outcome, _)) => {
+                if let Err(e) = write_trace_file(&record, &spec, BackendKind::Tangram, &outcome) {
+                    eprintln!("record error: {e}");
+                    return 2;
+                }
+                println!("recorded fuzz seed {base} to {record}");
+            }
+            Err(e) => {
+                eprintln!("record error: {e}");
+                return 2;
+            }
+        }
+    }
+    0
 }
 
 /// Offline A/B diff of two recorded traces: event-stream divergence check

@@ -136,6 +136,42 @@ pub struct Metrics {
     /// serialized form is unchanged, which is what keeps static golden
     /// traces byte-identical.
     pub cost_rates: Option<BTreeMap<String, f64>>,
+    /// Submit/start/complete conservation counters maintained by the DES
+    /// driver (the `testkit::oracle` ledger invariant reads these against
+    /// the recorded trace). Deliberately NOT serialized by the JSON
+    /// summary: golden traces and summary digests stay byte-identical.
+    pub ledger: ActionLedger,
+}
+
+/// Conservation counters over the action lifecycle: every submitted action
+/// is started at least once, retried zero or more times, and completed
+/// exactly once (done or failed). Violations mean the scheduler lost,
+/// duplicated, or double-completed work.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct ActionLedger {
+    /// Actions handed to the backend (first submission only, not retries).
+    pub submitted: u64,
+    /// Backend launches, including retry re-launches.
+    pub started: u64,
+    /// Retry re-submissions after a `Verdict::Retry`.
+    pub retried: u64,
+    /// Terminal successful completions.
+    pub done: u64,
+    /// Terminal failures (retry budget exhausted).
+    pub failed: u64,
+}
+
+impl ActionLedger {
+    /// Terminal completions of either outcome.
+    pub fn completed(&self) -> u64 {
+        self.done + self.failed
+    }
+
+    /// The conservation law itself: one terminal completion per submission,
+    /// and one launch per submission plus one per retry.
+    pub fn balanced(&self) -> bool {
+        self.submitted == self.completed() && self.started == self.submitted + self.retried
+    }
 }
 
 impl Metrics {

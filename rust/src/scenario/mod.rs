@@ -25,10 +25,12 @@
 //! `StaticGpu::drain_started`, and the sparse-DP frontier ordering in
 //! `scheduler::dp`).
 
+pub mod fuzz;
 pub mod packs;
 pub mod replay;
 pub mod trace;
 
+pub use fuzz::fuzz_spec;
 pub use packs::{builtin_packs, pack_by_name, pack_description};
 pub use replay::{
     ab_compare, build_backend, diff_summaries, diff_traces, parse_trace_file, read_trace_file,

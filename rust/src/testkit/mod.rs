@@ -5,6 +5,8 @@
 //! failing case and reports the smallest reproduction found, plus the seed
 //! for exact replay.
 
+pub mod oracle;
+
 use crate::util::rng::Rng;
 
 /// Number of cases per property (override with `ARL_PROPTEST_CASES`).

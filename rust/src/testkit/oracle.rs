@@ -1,0 +1,557 @@
+//! Invariant oracle over fuzzed scenario executions.
+//!
+//! Every contract PRs 1–5 accumulated — record→replay byte-identity,
+//! submit/complete conservation, provision floors and warming monotonicity,
+//! fault × autoscale product composition, `PoolClass`-ordered lane
+//! enumeration, dirty-pool ≡ full-sweep — is checked here mechanically over
+//! any [`ScenarioSpec`], so the seeded fuzzer (`scenario --fuzz`) can hunt
+//! scheduler bugs instead of waiting for a hand-authored pack to trip one.
+//!
+//! The battery is deliberately conservative: each invariant is stated in a
+//! form that is *provable* from the scheduler's contracts, so a reported
+//! [`Violation`] is a real bug (or a broken contract), never fuzz noise.
+//! A failing spec is shrunk simplest-first by [`minimize_failure`], reusing
+//! the property-test shrink machinery, and the offending seed is promoted
+//! to `rust/testdata/fuzz_seeds.txt` as a permanent regression.
+
+use crate::autoscale::PoolClass;
+use crate::config::BackendKind;
+use crate::coordinator::Backend;
+use crate::rollout::workloads::Catalog;
+use crate::scenario::{
+    build_backend, fuzz_spec, parse_trace_file, replay_trace, run_scenario_tangram,
+    trace_file_contents, ScenarioEvent, ScenarioOutcome, ScenarioSpec, TraceKind,
+};
+use crate::sim::SimTime;
+use crate::testkit::{shrink_failure, Gen};
+use crate::util::error::Result;
+use crate::util::rng::{Rng, SplitMix64};
+use std::collections::BTreeMap;
+
+/// One invariant breach: which law broke, and the concrete evidence.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub invariant: &'static str,
+    pub detail: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}] {}", self.invariant, self.detail)
+    }
+}
+
+/// Outcome of running the full battery over one spec.
+#[derive(Debug)]
+pub struct OracleReport {
+    /// Terminal actions completed by the primary (dirty-pool) run.
+    pub actions: usize,
+    /// Trace events recorded by the primary run.
+    pub trace_events: usize,
+    pub violations: Vec<Violation>,
+}
+
+impl OracleReport {
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// All violations, one per line (empty string when clean).
+    pub fn describe(&self) -> String {
+        self.violations.iter().map(|v| format!("{v}\n")).collect()
+    }
+}
+
+/// Run every invariant over `spec`. `Err` means the engine itself could not
+/// execute the spec (invalid spec, unsupported backend) — distinct from a
+/// clean run that *violated* an invariant, which lands in the report.
+pub fn check_spec(spec: &ScenarioSpec) -> Result<OracleReport> {
+    let (dirty, _) = run_scenario_tangram(spec, false)?;
+    let (sweep, _) = run_scenario_tangram(spec, true)?;
+    let mut violations = Vec::new();
+    check_replay(spec, &dirty, &mut violations)?;
+    check_ledger(&dirty, &mut violations);
+    check_provision(spec, &dirty, &mut violations);
+    check_lane_order(spec, &mut violations);
+    check_composition(spec, &mut violations);
+    check_dirty_sweep(spec, &dirty, &sweep, &mut violations);
+    Ok(OracleReport {
+        actions: dirty.metrics.actions.len(),
+        trace_events: dirty.events.len(),
+        violations,
+    })
+}
+
+/// Generate the fuzz spec for `seed` and run the battery over it.
+pub fn check_seed(seed: u64) -> Result<OracleReport> {
+    check_spec(&fuzz_spec(seed))
+}
+
+// ---- invariants -----------------------------------------------------------
+
+/// Record→replay byte-identity: serializing the run to the trace-file
+/// format, parsing it back, and re-executing must reproduce the identical
+/// summary and event stream.
+fn check_replay(spec: &ScenarioSpec, out: &ScenarioOutcome, v: &mut Vec<Violation>) -> Result<()> {
+    let text = trace_file_contents(spec, BackendKind::Tangram, out);
+    let recorded = parse_trace_file(&text)?;
+    let report = replay_trace(&recorded)?;
+    if !report.identical {
+        let mut detail = String::new();
+        if let Some(d) = &report.summary_diff {
+            detail.push_str(d);
+        }
+        for d in report.trace_divergences.iter().take(3) {
+            detail.push_str("; ");
+            detail.push_str(d);
+        }
+        v.push(Violation { invariant: "record-replay-identity", detail });
+    }
+    Ok(())
+}
+
+/// No lost / duplicated / double-completed actions. Cross-checks the
+/// driver's [`crate::metrics::ActionLedger`] against a scan of the recorded
+/// trace: one `Submit` per action, one terminal `Complete`, and one `Start`
+/// per submission plus one per retry.
+fn check_ledger(out: &ScenarioOutcome, v: &mut Vec<Violation>) {
+    let led = out.metrics.ledger;
+    if !led.balanced() {
+        v.push(Violation {
+            invariant: "action-ledger",
+            detail: format!("driver ledger unbalanced: {led:?}"),
+        });
+    }
+    if led.submitted != out.metrics.actions.len() as u64
+        || led.failed != out.metrics.failed_actions() as u64
+        || led.retried != out.metrics.total_retries()
+    {
+        v.push(Violation {
+            invariant: "action-ledger",
+            detail: format!(
+                "ledger {led:?} disagrees with records: {} actions, {} failed, {} retries",
+                out.metrics.actions.len(),
+                out.metrics.failed_actions(),
+                out.metrics.total_retries()
+            ),
+        });
+    }
+
+    #[derive(Default)]
+    struct Scan {
+        submits: u32,
+        starts: u32,
+        retry_completes: u32,
+        terminal: u32,
+    }
+    let mut scan: BTreeMap<u64, Scan> = BTreeMap::new();
+    for ev in &out.events {
+        match &ev.kind {
+            TraceKind::Submit { action, .. } => scan.entry(*action).or_default().submits += 1,
+            TraceKind::Start { action, .. } => {
+                let e = scan.entry(*action).or_default();
+                if e.submits == 0 {
+                    v.push(Violation {
+                        invariant: "action-ledger",
+                        detail: format!("action {action} started before any submit"),
+                    });
+                }
+                e.starts += 1;
+            }
+            TraceKind::Complete { action, outcome, .. } => {
+                let e = scan.entry(*action).or_default();
+                if outcome == "retry" {
+                    e.retry_completes += 1;
+                } else {
+                    e.terminal += 1;
+                }
+            }
+            _ => {}
+        }
+    }
+    for (id, s) in &scan {
+        if s.submits != 1 || s.terminal != 1 || s.starts != s.retry_completes + 1 {
+            v.push(Violation {
+                invariant: "action-ledger",
+                detail: format!(
+                    "action {id}: {} submits, {} starts, {} retries, {} terminal completes",
+                    s.submits, s.starts, s.retry_completes, s.terminal
+                ),
+            });
+        }
+    }
+    if scan.len() != out.metrics.actions.len() {
+        v.push(Violation {
+            invariant: "action-ledger",
+            detail: format!(
+                "trace saw {} distinct actions, metrics recorded {}",
+                scan.len(),
+                out.metrics.actions.len()
+            ),
+        });
+    }
+}
+
+/// Provision conservation: billed units stay positive, never exceed the
+/// static baseline (fault factors ≤ 1), respect the autoscale floor
+/// `max(1, Σ round(baselineᵢ · min_factor))`, and never dip below a billed
+/// scale-up level while that capacity is still warming.
+fn check_provision(spec: &ScenarioSpec, out: &ScenarioOutcome, v: &mut Vec<Violation>) {
+    // per-pool baseline = the initial provision gauge at t=0
+    let mut baseline: BTreeMap<&str, u64> = BTreeMap::new();
+    for rec in &out.metrics.provision {
+        baseline.entry(rec.pool.as_str()).or_insert(rec.units);
+    }
+    // the baseline cap only holds when no API fault scales limits UP
+    let mut api_cap_holds = true;
+    for te in &spec.events {
+        if let ScenarioEvent::ApiLimitScale { factor } = &te.event {
+            if *factor > 1.0 {
+                api_cap_holds = false;
+            }
+        }
+    }
+    let floors = autoscale_floors(spec);
+    for rec in &out.metrics.provision {
+        if rec.units == 0 {
+            v.push(Violation {
+                invariant: "provision-conservation",
+                detail: format!("pool '{}' billed zero units at {:?}", rec.pool, rec.at),
+            });
+        }
+        let cap = baseline[rec.pool.as_str()];
+        if rec.units > cap && (rec.pool != "api_lanes" || api_cap_holds) {
+            v.push(Violation {
+                invariant: "provision-conservation",
+                detail: format!(
+                    "pool '{}' billed {} units over its baseline {}",
+                    rec.pool, rec.units, cap
+                ),
+            });
+        }
+        if let Some(floor) = floors.get(rec.pool.as_str()) {
+            if rec.units < *floor {
+                v.push(Violation {
+                    invariant: "provision-conservation",
+                    detail: format!(
+                        "pool '{}' billed {} units below the autoscale floor {}",
+                        rec.pool, rec.units, floor
+                    ),
+                });
+            }
+        }
+    }
+    check_warming_monotone(out, v);
+}
+
+/// Per-class floor implied by `min_factor`, computed from a fresh
+/// deployment's scale targets (quantized factors never go below the floor,
+/// and per-target rounding is monotone in the factor).
+fn autoscale_floors(spec: &ScenarioSpec) -> BTreeMap<&'static str, u64> {
+    let mut floors = BTreeMap::new();
+    let Some(asc) = &spec.autoscale else {
+        return floors;
+    };
+    let cat = Catalog::build(&spec.catalog);
+    let backend = build_backend(&spec.catalog, &cat, BackendKind::Tangram);
+    let targets = backend.scale_classes();
+    for class in PoolClass::ALL {
+        let mut sum = 0u64;
+        for p in targets.iter().filter(|p| p.class == class) {
+            sum += (p.baseline_units as f64 * asc.min_factor).round() as u64;
+        }
+        floors.insert(class.name(), sum.max(1));
+    }
+    floors
+}
+
+/// While a billed scale-up is warming (between its `Scale{decide}` and the
+/// matching `Scale{apply}`), the pool's provision gauge must not fall below
+/// the level billed at the decision — unless an intervening scale-*down*
+/// decision for the class lowers it, which clears the requirement.
+fn check_warming_monotone(out: &ScenarioOutcome, v: &mut Vec<Violation>) {
+    let class_of = |label: &str| label.split('@').next().unwrap_or(label).to_string();
+    // last decided/applied factor per exact scale label ("gpus", "api_lanes@2")
+    let mut last_factor: BTreeMap<String, f64> = BTreeMap::new();
+    // per class: floor billed by a pending up-scale, awaiting its apply
+    let mut warming_floor: BTreeMap<String, u64> = BTreeMap::new();
+    // class whose next Provision event sets (rather than checks) the floor
+    let mut expect_floor: Option<String> = None;
+    for ev in &out.events {
+        match &ev.kind {
+            TraceKind::Scale { pool, phase, factor } => {
+                let class = class_of(pool);
+                let prev = *last_factor.get(pool).unwrap_or(&1.0);
+                if phase == "decide" {
+                    if *factor > prev {
+                        expect_floor = Some(class);
+                    } else {
+                        // a scale-down decision legitimately lowers billing
+                        warming_floor.remove(&class);
+                        expect_floor = None;
+                    }
+                } else {
+                    // capacity became schedulable; warming constraint ends
+                    warming_floor.remove(&class);
+                }
+                last_factor.insert(pool.clone(), *factor);
+            }
+            TraceKind::Provision { pool, units } => {
+                if expect_floor.as_deref() == Some(pool.as_str()) {
+                    warming_floor.insert(pool.clone(), *units);
+                    expect_floor = None;
+                } else if let Some(floor) = warming_floor.get(pool) {
+                    if units < floor {
+                        v.push(Violation {
+                            invariant: "warming-monotone",
+                            detail: format!(
+                                "pool '{pool}' billed {units} below its warming level {floor}"
+                            ),
+                        });
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Lanes enumerate in `PoolClass` order: scale targets sorted by
+/// `(class, endpoint)` with no duplicate key, and the provision gauges
+/// named in non-descending class order.
+fn check_lane_order(spec: &ScenarioSpec, v: &mut Vec<Violation>) {
+    let cat = Catalog::build(&spec.catalog);
+    let backend = build_backend(&spec.catalog, &cat, BackendKind::Tangram);
+    let rows = backend.scale_classes();
+    for w in rows.windows(2) {
+        if w[0].key() >= w[1].key() {
+            v.push(Violation {
+                invariant: "lane-order",
+                detail: format!("scale targets out of order: {:?} !< {:?}", w[0].key(), w[1].key()),
+            });
+        }
+    }
+    let class_rank = |name: &str| PoolClass::ALL.iter().position(|c| c.name() == name);
+    let mut ranks = Vec::new();
+    for (name, _) in backend.provisioned() {
+        if let Some(rank) = class_rank(&name) {
+            ranks.push(rank);
+        }
+    }
+    if ranks.windows(2).any(|w| w[0] > w[1]) {
+        v.push(Violation {
+            invariant: "lane-order",
+            detail: format!("provision gauges out of class order: {:?}", backend.provisioned()),
+        });
+    }
+}
+
+/// Fault × autoscale composition stays a product: injecting fault `f` and
+/// resizing to `a` — in either order — must provision exactly what a single
+/// factor `f·a` provisions, and re-applying the same factor is idempotent.
+fn check_composition(spec: &ScenarioSpec, v: &mut Vec<Violation>) {
+    let cat = Catalog::build(&spec.catalog);
+    let mut r = SplitMix64::new(spec.seed ^ 0xFAC7_0125);
+    let menu = [0.125f64, 0.25, 0.375, 0.5, 0.75, 1.0];
+    for class in PoolClass::ALL {
+        for _ in 0..3 {
+            let f = *r.pick(&menu);
+            let a = *r.pick(&menu);
+            let mut fault_first = build_backend(&spec.catalog, &cat, BackendKind::Tangram);
+            fault_first.inject(SimTime::ZERO, &fault_event(class, f));
+            resize_class(fault_first.as_mut(), class, a);
+            let mut auto_first = build_backend(&spec.catalog, &cat, BackendKind::Tangram);
+            resize_class(auto_first.as_mut(), class, a);
+            auto_first.inject(SimTime::ZERO, &fault_event(class, f));
+            let mut product = build_backend(&spec.catalog, &cat, BackendKind::Tangram);
+            product.inject(SimTime::ZERO, &fault_event(class, f * a));
+            if fault_first.provisioned() != auto_first.provisioned() {
+                v.push(Violation {
+                    invariant: "fault-auto-product",
+                    detail: format!(
+                        "{}: fault {f} x auto {a} is order-dependent: {:?} vs {:?}",
+                        class.name(),
+                        fault_first.provisioned(),
+                        auto_first.provisioned()
+                    ),
+                });
+            }
+            if fault_first.provisioned() != product.provisioned() {
+                v.push(Violation {
+                    invariant: "fault-auto-product",
+                    detail: format!(
+                        "{}: fault {f} then auto {a} != single factor: {:?} vs {:?}",
+                        class.name(),
+                        fault_first.provisioned(),
+                        product.provisioned()
+                    ),
+                });
+            }
+            let before = fault_first.provisioned();
+            resize_class(fault_first.as_mut(), class, a);
+            if fault_first.provisioned() != before {
+                v.push(Violation {
+                    invariant: "fault-auto-product",
+                    detail: format!(
+                        "{}: re-applying auto {a} was not idempotent: {:?} vs {:?}",
+                        class.name(),
+                        before,
+                        fault_first.provisioned()
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// The class-wide fault injection for `class` at `factor`.
+fn fault_event(class: PoolClass, factor: f64) -> ScenarioEvent {
+    match class {
+        PoolClass::Cpu => ScenarioEvent::CpuPoolScale { factor },
+        PoolClass::Gpu => ScenarioEvent::GpuPoolScale { factor },
+        PoolClass::Api => ScenarioEvent::ApiLimitScale { factor },
+    }
+}
+
+/// Resize every scale target of `class` to the same autoscale factor.
+fn resize_class(backend: &mut dyn Backend, class: PoolClass, factor: f64) {
+    let mut endpoints = Vec::new();
+    for p in backend.scale_classes() {
+        if p.class == class {
+            endpoints.push(p.endpoint);
+        }
+    }
+    for ep in endpoints {
+        backend.resize(SimTime::ZERO, class, ep, factor);
+    }
+}
+
+/// Dirty-pool incremental scheduling completes identical work to a full
+/// sweep; on fault-free, autoscale-free specs the agreement is
+/// decision-for-decision (same per-action allocation and timing).
+fn check_dirty_sweep(
+    spec: &ScenarioSpec,
+    dirty: &ScenarioOutcome,
+    sweep: &ScenarioOutcome,
+    v: &mut Vec<Violation>,
+) {
+    let d = &dirty.metrics;
+    let s = &sweep.metrics;
+    if d.trajectories.len() != s.trajectories.len()
+        || d.actions.len() != s.actions.len()
+        || d.failed_actions() != s.failed_actions()
+        || d.total_retries() != s.total_retries()
+    {
+        v.push(Violation {
+            invariant: "dirty-vs-sweep",
+            detail: format!(
+                "traj/act/failed/retry counts: dirty {}/{}/{}/{} vs sweep {}/{}/{}/{}",
+                d.trajectories.len(),
+                d.actions.len(),
+                d.failed_actions(),
+                d.total_retries(),
+                s.trajectories.len(),
+                s.actions.len(),
+                s.failed_actions(),
+                s.total_retries()
+            ),
+        });
+        return;
+    }
+    if !spec.events.is_empty() || spec.autoscale.is_some() {
+        return;
+    }
+    for (da, sa) in d.actions.iter().zip(s.actions.iter()) {
+        if da.id != sa.id
+            || da.units != sa.units
+            || da.started != sa.started
+            || da.finished != sa.finished
+            || da.retries != sa.retries
+        {
+            v.push(Violation {
+                invariant: "dirty-vs-sweep",
+                detail: format!(
+                    "per-action divergence at {:?}: dirty {:?}@{:?}..{:?} vs sweep {:?}@{:?}..{:?}",
+                    da.id, da.units, da.started, da.finished, sa.units, sa.started, sa.finished
+                ),
+            });
+            return;
+        }
+    }
+}
+
+// ---- failure minimization -------------------------------------------------
+
+/// [`Gen`] over fuzzed specs whose `shrink` simplifies a failing spec's
+/// timeline simplest-first: drop the fault timeline, then the autoscaler,
+/// then the cost card, then halve the run and the catalog.
+pub struct FuzzSpecGen;
+
+impl Gen for FuzzSpecGen {
+    type Value = ScenarioSpec;
+
+    fn generate(&self, rng: &mut Rng) -> ScenarioSpec {
+        // keep the derived fuzz seed inside the spec-validated 2^53 bound
+        fuzz_spec(rng.next_u64() >> 11)
+    }
+
+    fn shrink(&self, spec: &ScenarioSpec) -> Vec<ScenarioSpec> {
+        let mut out = Vec::new();
+        let mut push = |s: ScenarioSpec| {
+            if s.validate().is_ok() {
+                out.push(s);
+            }
+        };
+        if !spec.events.is_empty() {
+            push(ScenarioSpec { events: vec![], ..spec.clone() });
+        }
+        if spec.autoscale.is_some() {
+            push(ScenarioSpec { autoscale: None, ..spec.clone() });
+        }
+        if spec.cost.is_some() {
+            push(ScenarioSpec { cost: None, ..spec.clone() });
+        }
+        if spec.events.len() > 1 {
+            push(ScenarioSpec {
+                events: spec.events[..spec.events.len() / 2].to_vec(),
+                ..spec.clone()
+            });
+            push(ScenarioSpec {
+                events: spec.events[..spec.events.len() - 1].to_vec(),
+                ..spec.clone()
+            });
+        }
+        if spec.workloads.len() > 1 {
+            push(ScenarioSpec { workloads: spec.workloads[..1].to_vec(), ..spec.clone() });
+        }
+        if spec.batch > 1 {
+            push(ScenarioSpec { batch: spec.batch / 2, ..spec.clone() });
+        }
+        if spec.steps > 1 {
+            push(ScenarioSpec { steps: 1, ..spec.clone() });
+        }
+        if spec.arrival_spread.0 > 0 {
+            push(ScenarioSpec { arrival_spread: crate::sim::SimDur(0), ..spec.clone() });
+        }
+        if spec.catalog.cpu_nodes > 1 || spec.catalog.gpu_nodes > 1 {
+            let mut cat = spec.catalog.clone();
+            cat.cpu_nodes = 1;
+            cat.gpu_nodes = 1;
+            push(ScenarioSpec { catalog: cat, ..spec.clone() });
+        }
+        out
+    }
+}
+
+/// Shrink a violating spec to the simplest spec that still violates *some*
+/// invariant, re-running the full battery on every candidate. Returns the
+/// minimized spec and its violation summary.
+pub fn minimize_failure(spec: ScenarioSpec, msg: String) -> (ScenarioSpec, String) {
+    let prop = |s: &ScenarioSpec| match check_spec(s) {
+        Ok(r) if r.is_clean() => Ok(()),
+        Ok(r) => Err(r.describe()),
+        Err(e) => Err(format!("engine error: {e}")),
+    };
+    // each probe is three full simulations; keep the budget modest
+    shrink_failure(&FuzzSpecGen, spec, msg, &prop, 60)
+}

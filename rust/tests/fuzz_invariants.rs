@@ -1,0 +1,254 @@
+//! The seeded scenario fuzzer + invariant oracle (tier-1 slice).
+//!
+//! `scenario --fuzz` hunts scheduler bugs by sampling random-but-
+//! deterministic specs and running every accumulated contract over each
+//! execution. These tests pin the harness itself: generator determinism
+//! and validity, the oracle's clean verdict over a fixed seed slice, the
+//! committed regression corpus (`testdata/fuzz_seeds.txt` — every seed a
+//! past failure or a sentinel), the failure minimizer, and GPU cordon
+//! determinism under *fuzzed* cache residency (previously hand-built
+//! fixtures only).
+
+use arl_tangram::action::ServiceId;
+use arl_tangram::cluster::{GpuCluster, GpuNodeId};
+use arl_tangram::config::BackendKind;
+use arl_tangram::scenario::{fuzz_spec, run_scenario_tangram, trace_file_contents, ScenarioSpec};
+use arl_tangram::sim::SimTime;
+use arl_tangram::testkit::oracle::{check_seed, check_spec, FuzzSpecGen};
+use arl_tangram::testkit::shrink_failure;
+use arl_tangram::util::rng::{Rng, SplitMix64};
+
+#[test]
+fn fuzz_spec_is_deterministic_including_trace() {
+    // acceptance: same seed twice -> byte-identical spec AND recorded trace
+    for seed in [0u64, 7, 1234, 99_999] {
+        let a = fuzz_spec(seed);
+        let b = fuzz_spec(seed);
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string(), "spec drifted, seed {seed}");
+        let (out_a, _) = run_scenario_tangram(&a, false).unwrap();
+        let (out_b, _) = run_scenario_tangram(&b, false).unwrap();
+        let trace_a = trace_file_contents(&a, BackendKind::Tangram, &out_a);
+        let trace_b = trace_file_contents(&b, BackendKind::Tangram, &out_b);
+        assert_eq!(trace_a, trace_b, "trace drifted, seed {seed}");
+    }
+}
+
+#[test]
+fn nearby_seeds_diverge() {
+    let a = fuzz_spec(1).to_json().to_string();
+    let b = fuzz_spec(2).to_json().to_string();
+    assert_ne!(a, b, "adjacent seeds must not collide");
+}
+
+#[test]
+fn fuzz_specs_validate_and_round_trip() {
+    for seed in 0..200 {
+        let spec = fuzz_spec(seed);
+        spec.validate().unwrap_or_else(|e| panic!("seed {seed} invalid: {e}"));
+        let text = spec.to_json().to_string();
+        let back = ScenarioSpec::from_json(&text).unwrap();
+        assert_eq!(back.to_json().to_string(), text, "seed {seed} JSON round-trip drifted");
+    }
+}
+
+#[test]
+fn oracle_clean_over_seed_slice() {
+    // a slice of the CI smoke range; the fuzz-smoke CI step covers 50
+    for seed in 0..8 {
+        let report = check_seed(seed).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert!(report.is_clean(), "seed {seed}:\n{}", report.describe());
+        assert!(report.actions > 0, "seed {seed} completed no actions");
+    }
+}
+
+#[test]
+fn regression_corpus_stays_clean() {
+    // every committed seed replays through the FULL oracle; a failing fuzz
+    // seed gets minimized, fixed, and appended here permanently
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/testdata/fuzz_seeds.txt");
+    let text = std::fs::read_to_string(path).expect("fuzz_seeds.txt missing");
+    let mut checked = 0;
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let seed: u64 = line.parse().unwrap_or_else(|_| panic!("bad corpus line '{line}'"));
+        let report = check_seed(seed).unwrap_or_else(|e| panic!("corpus seed {seed}: {e}"));
+        assert!(report.is_clean(), "corpus seed {seed} regressed:\n{}", report.describe());
+        checked += 1;
+    }
+    assert!(checked >= 8, "corpus suspiciously small ({checked} seeds)");
+}
+
+#[test]
+fn minimizer_shrinks_timeline_simplest_first() {
+    // a synthetic "any fault timeline fails" property must shrink a 3-4
+    // event spec down to a single event, trying whole-timeline drops first
+    let mut seed = 0;
+    let spec = loop {
+        let s = fuzz_spec(seed);
+        if s.events.len() >= 3 {
+            break s;
+        }
+        seed += 1;
+    };
+    let prop = |s: &ScenarioSpec| {
+        if s.events.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("{} events", s.events.len()))
+        }
+    };
+    let original_events = spec.events.len();
+    let msg = format!("{original_events} events");
+    let (best, _) = shrink_failure(&FuzzSpecGen, spec, msg, &prop, 200);
+    assert_eq!(best.events.len(), 1, "expected a single-event reproduction");
+    assert!(best.validate().is_ok(), "shrunk spec must stay valid");
+    assert!(original_events > 1);
+}
+
+#[test]
+fn minimizer_strips_autoscale_and_cost() {
+    let mut seed = 0;
+    let spec = loop {
+        let s = fuzz_spec(seed);
+        if s.autoscale.is_some() && s.cost.is_some() {
+            break s;
+        }
+        seed += 1;
+    };
+    // property independent of autoscale/cost: they must both be dropped
+    let prop = |s: &ScenarioSpec| {
+        if s.batch >= 2 {
+            Err("batch too big".to_string())
+        } else {
+            Ok(())
+        }
+    };
+    let (best, _) = shrink_failure(&FuzzSpecGen, spec, "batch".into(), &prop, 200);
+    assert!(best.autoscale.is_none(), "autoscale not stripped");
+    assert!(best.cost.is_none(), "cost card not stripped");
+    assert!(best.events.is_empty(), "events not stripped");
+    assert_eq!(best.batch, 2, "batch not minimized");
+}
+
+#[test]
+fn oracle_flags_a_corrupted_run() {
+    // sanity: the battery is not vacuous — a spec the engine cannot even
+    // validate must surface as Err, not as a clean report
+    let mut spec = fuzz_spec(0);
+    spec.batch = 0;
+    assert!(check_spec(&spec).is_err());
+}
+
+// ---- GPU cordon determinism under fuzzed cache residency ------------------
+
+/// Build an `n`-node cluster with pseudo-random cache residency planted via
+/// the public allocate/release path (the only way `last_used` tags enter).
+fn fuzzed_cluster(n: u32, seed: u64) -> GpuCluster {
+    let mut cluster = GpuCluster::new(n);
+    let mut r = Rng::new(seed);
+    let mut held = Vec::new();
+    for _ in 0..(n as usize * 3) {
+        let service = ServiceId(r.range(0, 5) as u32);
+        let dop = *r.pick(&[1u8, 2, 4, 8]);
+        if let Some(alloc) = cluster.allocate(service, dop) {
+            held.push((alloc.chunk, service, dop));
+        }
+    }
+    for (chunk, service, dop) in held {
+        let at = SimTime(r.range(1, 1_000_000_000));
+        cluster.release(chunk, service, dop, at);
+    }
+    cluster
+}
+
+#[test]
+fn cordons_are_coldest_first_with_id_tiebreak() {
+    let factors = [0.125f64, 0.25, 0.375, 0.5, 0.625, 0.75, 1.0];
+    let mut sm = SplitMix64::new(0xC04D_0135);
+    for case in 0..32u64 {
+        let n = 3 + (case % 4) as u32; // 3..=6 nodes
+        let seed = sm.next_u64();
+        let f = *sm.pick(&factors);
+        let mut cluster = fuzzed_cluster(n, seed);
+
+        // expected cordon set from the public per-node state BEFORE the
+        // resize: idle nodes ranked coldest-first, higher id breaking ties
+        let mut rank: Vec<(bool, SimTime, std::cmp::Reverse<u32>)> = (0..n)
+            .map(|i| {
+                let node = cluster.node(GpuNodeId(i));
+                (node.busy_gpus() > 0, node.cache_hotness(), std::cmp::Reverse(i))
+            })
+            .collect();
+        rank.sort();
+        let target_online = ((n as f64 * f).round() as u32).clamp(1, n);
+        let mut expect_cordoned = Vec::new();
+        for key in rank.iter().take((n - target_online) as usize) {
+            expect_cordoned.push(key.2 .0);
+        }
+
+        let cordoned = cluster.set_pool_scale(f);
+        assert_eq!(cordoned, n - target_online, "cordon count, case {case}");
+        assert!(n - cluster.cordoned_nodes() >= 1, "no node online, case {case}");
+        for id in 0..n {
+            let node = cluster.node(GpuNodeId(id));
+            let expect = expect_cordoned.contains(&id);
+            assert_eq!(
+                node.is_cordoned(),
+                expect,
+                "case {case}: node {id} cordon state (expected set {expect_cordoned:?})"
+            );
+            if node.is_cordoned() {
+                // cordoning flushes residency: a deprovisioned node must
+                // not advertise warm caches
+                assert_eq!(
+                    node.cache_hotness(),
+                    SimTime::ZERO,
+                    "case {case}: node {id} kept its cache across a cordon"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn cordon_selection_is_deterministic() {
+    for case in 0..8u64 {
+        let n = 4 + (case % 3) as u32;
+        let mut a = fuzzed_cluster(n, case * 17 + 1);
+        let mut b = fuzzed_cluster(n, case * 17 + 1);
+        a.set_pool_scale(0.4);
+        b.set_pool_scale(0.4);
+        for id in 0..n {
+            assert_eq!(
+                a.node(GpuNodeId(id)).is_cordoned(),
+                b.node(GpuNodeId(id)).is_cordoned(),
+                "case {case}: node {id} cordon state diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn equal_hotness_cordons_higher_ids_first() {
+    // untouched cluster: every node's hotness is ZERO, so the tie-break
+    // alone decides — higher node ids are cordoned first
+    let mut cluster = GpuCluster::new(4);
+    let cordoned = cluster.set_pool_scale(0.5);
+    assert_eq!(cordoned, 2);
+    assert!(!cluster.node(GpuNodeId(0)).is_cordoned());
+    assert!(!cluster.node(GpuNodeId(1)).is_cordoned());
+    assert!(cluster.node(GpuNodeId(2)).is_cordoned());
+    assert!(cluster.node(GpuNodeId(3)).is_cordoned());
+}
+
+#[test]
+fn at_least_one_node_survives_any_factor() {
+    for &f in &[0.0f64, 0.01, 0.05, 0.1] {
+        let mut cluster = fuzzed_cluster(3, 99);
+        cluster.set_pool_scale(f);
+        assert!(3 - cluster.cordoned_nodes() >= 1, "factor {f} cordoned everything");
+    }
+}

@@ -9,15 +9,21 @@
 //!    unit sets, and preserve FCFS admission;
 //!  * Basic manager never exceeds provider limits under random workloads;
 //!  * DES engine monotonicity under random event storms;
-//!  * routing/batching state conservation in the CPU manager.
+//!  * routing/batching state conservation in the CPU manager;
+//!  * `lanes::CostModel`: cost rows agree with per-pool dollar totals,
+//!    endpoint-override resolution is order-independent, and a uniform
+//!    rate card reproduces the unweighted savings metric.
 
 use arl_tangram::action::{
     Action, ActionId, ActionKind, ActionSpec, CostSpec, DimCost, ElasticityModel,
     ResourceClass, ResourceKindId, ResourceRegistry, ServiceId, TaskId, TrajId,
 };
+use arl_tangram::autoscale::{PoolClass, PoolPressure};
 use arl_tangram::cluster::cpu::CpuLatency;
 use arl_tangram::cluster::gpu::GpuCluster;
+use arl_tangram::lanes::CostModel;
 use arl_tangram::managers::{BasicManager, CpuManager};
+use arl_tangram::metrics::{Metrics, ProvisionRecord};
 use arl_tangram::scheduler::{
     dp_arrange, BasicOperator, ChunkOperator, CompletionHeap, DpOperator, ElasticScheduler,
     ResourceState, SchedulerConfig,
@@ -25,6 +31,7 @@ use arl_tangram::scheduler::{
 use arl_tangram::sim::{Engine, SimDur, SimTime};
 use arl_tangram::testkit::{check, default_cases, Gen};
 use arl_tangram::util::rng::Rng;
+use std::collections::BTreeMap;
 use std::collections::HashMap;
 
 // ---------------------------------------------------------------------------
@@ -696,6 +703,172 @@ fn prop_cpu_manager_conserves_cores_and_memory() {
         }
         if m.free_cores() != total_cores {
             return Err(format!("cores leaked: {} != {total_cores}", m.free_cores()));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// lanes::CostModel — rate cards and dollar-weighted savings
+// ---------------------------------------------------------------------------
+
+/// Rates drawn from an eighths menu: every product and partial sum in the
+/// resolution arithmetic is exactly representable, so the order-independence
+/// and sum-agreement properties below can assert *bitwise* f64 equality.
+const RATE_MENU: [f64; 6] = [0.125, 0.25, 0.5, 1.0, 2.5, 4.0];
+
+#[derive(Debug, Clone)]
+struct CostCase {
+    rates: Vec<(String, f64)>,
+    default_rate: f64,
+    /// Synthetic provision series: (pool, at secs, units).
+    provision: Vec<(String, u64, u64)>,
+}
+
+struct CostGen;
+
+impl Gen for CostGen {
+    type Value = CostCase;
+    fn generate(&self, rng: &mut Rng) -> CostCase {
+        let mut rates = Vec::new();
+        for pool in ["cpu_cores", "gpus", "api_lanes"] {
+            if rng.chance(0.7) {
+                rates.push((pool.to_string(), *rng.pick(&RATE_MENU)));
+            }
+        }
+        for e in 0..rng.range(0, 2) {
+            rates.push((format!("api_lanes@{e}"), *rng.pick(&RATE_MENU)));
+        }
+        let mut provision = Vec::new();
+        for pool in ["cpu_cores", "gpus", "api_lanes"] {
+            let mut at = 0;
+            for _ in 0..rng.range(1, 5) {
+                provision.push((pool.to_string(), at, rng.range(1, 64)));
+                at += rng.range(1, 50);
+            }
+        }
+        CostCase { rates, default_rate: *rng.pick(&RATE_MENU), provision }
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        if !v.rates.is_empty() {
+            out.push(CostCase { rates: Vec::new(), ..v.clone() });
+        }
+        if v.provision.len() > 1 {
+            let half = v.provision[..v.provision.len() / 2].to_vec();
+            out.push(CostCase { provision: half, ..v.clone() });
+        }
+        out
+    }
+}
+
+fn cost_model_of(case: &CostCase) -> CostModel {
+    let mut rates = BTreeMap::new();
+    for (k, r) in &case.rates {
+        rates.insert(k.clone(), *r);
+    }
+    CostModel { rates, default_rate: case.default_rate }
+}
+
+fn metrics_of(case: &CostCase, rates: BTreeMap<String, f64>) -> Metrics {
+    let mut m = Metrics::default();
+    for (pool, at, units) in &case.provision {
+        m.provision.push(ProvisionRecord {
+            at: SimTime(SimDur::from_secs(*at).0),
+            pool: pool.clone(),
+            units: *units,
+        });
+    }
+    m.cost_rates = Some(rates);
+    m
+}
+
+#[test]
+fn prop_cost_rows_sum_to_pool_cost() {
+    check("cost rows = pool_cost", &CostGen, default_cases(), |case| {
+        let model = cost_model_of(case);
+        let mut resolved = BTreeMap::new();
+        for pool in ["cpu_cores", "gpus", "api_lanes"] {
+            resolved.insert(pool.to_string(), model.rate_for(pool, None));
+        }
+        let m = metrics_of(case, resolved);
+        let rows = m.cost_rows();
+        if rows.len() != 3 {
+            return Err(format!("expected 3 cost rows, got {}", rows.len()));
+        }
+        let (mut used_sum, mut stat_sum) = (0.0, 0.0);
+        for (pool, rate, used, stat) in &rows {
+            let (pu, ps) = m.pool_cost(pool);
+            if *used != pu || *stat != ps {
+                return Err(format!("row for '{pool}' != pool_cost: {used}/{stat} vs {pu}/{ps}"));
+            }
+            if *rate <= 0.0 {
+                return Err(format!("non-positive rate {rate} for '{pool}'"));
+            }
+            used_sum += *used;
+            stat_sum += *stat;
+        }
+        let savings = Metrics::cost_savings_of(&rows);
+        let direct = if stat_sum <= 0.0 { 0.0 } else { 1.0 - used_sum / stat_sum };
+        if (savings - direct).abs() > 1e-12 {
+            return Err(format!("cost_savings_of {savings} != recomputed {direct}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_endpoint_resolution_order_independent() {
+    check("resolve order-independent", &CostGen, default_cases(), |case| {
+        let model = cost_model_of(case);
+        let pressure = |endpoint: Option<u32>, baseline: u64| PoolPressure {
+            class: if endpoint.is_some() { PoolClass::Api } else { PoolClass::Cpu },
+            endpoint,
+            queued: 0,
+            queued_units: 0,
+            in_use_units: 0,
+            provisioned_units: baseline,
+            baseline_units: baseline,
+        };
+        let mut pressures = vec![
+            pressure(None, 64),
+            pressure(Some(0), 7),
+            pressure(Some(1), 13),
+            pressure(Some(2), 41),
+        ];
+        let provisioned = vec![
+            ("cpu_cores".to_string(), 64u64),
+            ("gpus".to_string(), 16u64),
+            ("api_lanes".to_string(), 61u64),
+        ];
+        let forward = model.resolve(&pressures, &provisioned);
+        pressures.reverse();
+        let backward = model.resolve(&pressures, &provisioned);
+        pressures.rotate_left(1);
+        let rotated = model.resolve(&pressures, &provisioned);
+        if forward != backward || forward != rotated {
+            return Err(format!("resolution order-dependent: {forward:?} vs {backward:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_uniform_card_savings_sign_agrees() {
+    check("uniform card sign", &CostGen, default_cases(), |case| {
+        let rate = case.default_rate;
+        let mut uniform = BTreeMap::new();
+        for pool in ["cpu_cores", "gpus", "api_lanes"] {
+            uniform.insert(pool.to_string(), rate);
+        }
+        let m = metrics_of(case, uniform);
+        let weighted = m.savings_vs_static_cost();
+        let unweighted = m.savings_vs_static();
+        if (weighted - unweighted).abs() > 1e-9 {
+            return Err(format!("uniform card diverged: {weighted} vs {unweighted}"));
+        }
+        if weighted.abs() > 1e-9 && weighted.signum() != unweighted.signum() {
+            return Err(format!("savings signs disagree: {weighted} vs {unweighted}"));
         }
         Ok(())
     });
