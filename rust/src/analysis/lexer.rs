@@ -1,0 +1,343 @@
+//! Minimal Rust lexer for the determinism lint.
+//!
+//! Hand-rolled in the `util::json` idiom: a byte cursor, no regexes, no
+//! `syn`. It produces exactly the structure the lexical rules need —
+//! identifiers, single-char punctuation, literals, line numbers — and
+//! discards comments and whitespace (`arl-lint: allow` comments are parsed
+//! from raw source lines by the engine, not from tokens). Block comments
+//! nest, raw strings honor their `#` fences, and lifetimes are told apart
+//! from char literals, so token streams stay aligned with real Rust even
+//! in tricky files.
+
+/// Token class. `Punct` is always a single character; multi-char operators
+/// (`::`, `->`, `..`) appear as consecutive punct tokens and are matched
+/// positionally by the rules.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Punct,
+    Str,
+    Char,
+    Num,
+    Lifetime,
+}
+
+/// One lexed token. `text` carries the lexeme for idents and puncts (the
+/// only kinds the rules match by content); literals keep an empty text.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: usize,
+}
+
+impl Token {
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct && self.text.len() == 1 && self.text.as_bytes()[0] == c as u8
+    }
+}
+
+/// Tokenize `src`. Never fails: unterminated literals simply run to EOF,
+/// which is good enough for a linter that only sees `rustc`-clean input.
+pub fn lex(src: &str) -> Vec<Token> {
+    Lexer { s: src.as_bytes(), pos: 0, line: 1, out: Vec::new() }.run()
+}
+
+struct Lexer<'a> {
+    s: &'a [u8],
+    pos: usize,
+    line: usize,
+    out: Vec<Token>,
+}
+
+impl Lexer<'_> {
+    fn run(mut self) -> Vec<Token> {
+        while self.pos < self.s.len() {
+            let c = self.s[self.pos];
+            if c == b'\n' {
+                self.line += 1;
+                self.pos += 1;
+            } else if c.is_ascii_whitespace() {
+                self.pos += 1;
+            } else if c == b'/' && self.peek(1) == Some(b'/') {
+                self.line_comment();
+            } else if c == b'/' && self.peek(1) == Some(b'*') {
+                self.block_comment();
+            } else if c == b'"' {
+                self.string();
+                self.push_lit(TokKind::Str);
+            } else if c == b'\'' {
+                self.char_or_lifetime();
+            } else if c == b'_' || c.is_ascii_alphabetic() {
+                if !self.try_prefixed_literal() {
+                    self.ident();
+                }
+            } else if c.is_ascii_digit() {
+                self.number();
+            } else {
+                self.out.push(Token {
+                    kind: TokKind::Punct,
+                    text: (c as char).to_string(),
+                    line: self.line,
+                });
+                self.pos += 1;
+            }
+        }
+        self.out
+    }
+
+    fn peek(&self, off: usize) -> Option<u8> {
+        self.s.get(self.pos + off).copied()
+    }
+
+    fn push_lit(&mut self, kind: TokKind) {
+        self.out.push(Token { kind, text: String::new(), line: self.line });
+    }
+
+    fn line_comment(&mut self) {
+        while self.pos < self.s.len() && self.s[self.pos] != b'\n' {
+            self.pos += 1;
+        }
+    }
+
+    fn block_comment(&mut self) {
+        // Rust block comments nest
+        self.pos += 2;
+        let mut depth = 1usize;
+        while self.pos < self.s.len() && depth > 0 {
+            match self.s[self.pos] {
+                b'\n' => self.line += 1,
+                b'/' if self.peek(1) == Some(b'*') => {
+                    depth += 1;
+                    self.pos += 1;
+                }
+                b'*' if self.peek(1) == Some(b'/') => {
+                    depth -= 1;
+                    self.pos += 1;
+                }
+                _ => {}
+            }
+            self.pos += 1;
+        }
+    }
+
+    /// Consume a `"…"` literal starting at the opening quote.
+    fn string(&mut self) {
+        self.pos += 1;
+        while self.pos < self.s.len() {
+            match self.s[self.pos] {
+                b'\\' => self.pos += 1,
+                b'\n' => self.line += 1,
+                b'"' => {
+                    self.pos += 1;
+                    return;
+                }
+                _ => {}
+            }
+            self.pos += 1;
+        }
+    }
+
+    /// Consume a `r"…"` / `r#"…"#` literal starting at the first `#` or `"`.
+    fn raw_string(&mut self) {
+        let mut hashes = 0usize;
+        while self.peek(0) == Some(b'#') {
+            hashes += 1;
+            self.pos += 1;
+        }
+        self.pos += 1; // opening quote
+        while self.pos < self.s.len() {
+            let c = self.s[self.pos];
+            if c == b'\n' {
+                self.line += 1;
+            } else if c == b'"' {
+                let mut ok = true;
+                for k in 0..hashes {
+                    if self.peek(1 + k) != Some(b'#') {
+                        ok = false;
+                        break;
+                    }
+                }
+                if ok {
+                    self.pos += 1 + hashes;
+                    return;
+                }
+            }
+            self.pos += 1;
+        }
+    }
+
+    /// `r"…"`, `r#"…"#`, `b"…"`, `br"…"`, `b'…'` — string/char literals with
+    /// an ident-looking prefix. Returns false if the cursor is a plain ident.
+    fn try_prefixed_literal(&mut self) -> bool {
+        let c = self.s[self.pos];
+        let (skip, next) = match (c, self.peek(1)) {
+            (b'r', Some(b'"')) => (1, b'"'),
+            (b'r', Some(b'#')) => {
+                // raw string `r#"…"#` vs raw ident `r#type`
+                let mut k = 1;
+                while self.peek(k) == Some(b'#') {
+                    k += 1;
+                }
+                if self.peek(k) == Some(b'"') {
+                    (1, b'#')
+                } else {
+                    return false;
+                }
+            }
+            (b'b', Some(b'"')) => (1, b'"'),
+            (b'b', Some(b'\'')) => (1, b'\''),
+            (b'b', Some(b'r')) => match self.peek(2) {
+                Some(b'"') => (2, b'"'),
+                Some(b'#') => (2, b'#'),
+                _ => return false,
+            },
+            _ => return false,
+        };
+        self.pos += skip;
+        match next {
+            b'"' => {
+                self.string();
+                self.push_lit(TokKind::Str);
+            }
+            b'#' => {
+                self.raw_string();
+                self.push_lit(TokKind::Str);
+            }
+            _ => {
+                self.char_literal();
+                self.push_lit(TokKind::Char);
+            }
+        }
+        true
+    }
+
+    /// At a `'`: lifetime (`'a`) or char literal (`'x'`, `'\n'`).
+    fn char_or_lifetime(&mut self) {
+        let ident_next = matches!(self.peek(1), Some(c) if c == b'_' || c.is_ascii_alphabetic());
+        if ident_next && self.peek(2) != Some(b'\'') {
+            self.pos += 1;
+            while self.pos < self.s.len()
+                && (self.s[self.pos] == b'_' || self.s[self.pos].is_ascii_alphanumeric())
+            {
+                self.pos += 1;
+            }
+            self.push_lit(TokKind::Lifetime);
+        } else {
+            self.char_literal();
+            self.push_lit(TokKind::Char);
+        }
+    }
+
+    /// Consume a char literal starting at the opening `'`.
+    fn char_literal(&mut self) {
+        self.pos += 1;
+        while self.pos < self.s.len() {
+            match self.s[self.pos] {
+                b'\\' => self.pos += 1,
+                b'\'' => {
+                    self.pos += 1;
+                    return;
+                }
+                b'\n' => return, // malformed; don't eat the rest of the file
+                _ => {}
+            }
+            self.pos += 1;
+        }
+    }
+
+    fn ident(&mut self) {
+        let start = self.pos;
+        while self.pos < self.s.len()
+            && (self.s[self.pos] == b'_' || self.s[self.pos].is_ascii_alphanumeric())
+        {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.s[start..self.pos]).unwrap_or("").to_string();
+        self.out.push(Token { kind: TokKind::Ident, text, line: self.line });
+    }
+
+    /// Numbers including suffixes (`1u64`, `0xFF`) and decimals; a `.` is
+    /// consumed only when a digit follows, so `0..n` and `1.max(x)` keep
+    /// their puncts.
+    fn number(&mut self) {
+        while self.pos < self.s.len() {
+            let c = self.s[self.pos];
+            if c == b'_' || c.is_ascii_alphanumeric() {
+                self.pos += 1;
+            } else if c == b'.'
+                && matches!(self.peek(1), Some(d) if d.is_ascii_digit())
+            {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        self.push_lit(TokKind::Num);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_are_invisible() {
+        let src = r##"
+            // Instant::now in a comment
+            /* nested /* SystemTime */ still comment */
+            let s = "Instant::now()";
+            let r = r#"SystemTime "quoted" inside"#;
+            let b = b"bytes";
+            real_ident();
+        "##;
+        let ids = idents(src);
+        assert!(ids.contains(&"real_ident".to_string()));
+        assert!(!ids.iter().any(|i| i == "Instant" || i == "SystemTime" || i == "now"));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let toks = lex("fn f<'a>(x: &'a str) -> char { 'x' }");
+        let lifetimes = toks.iter().filter(|t| t.kind == TokKind::Lifetime).count();
+        let chars = toks.iter().filter(|t| t.kind == TokKind::Char).count();
+        assert_eq!(lifetimes, 2);
+        assert_eq!(chars, 1);
+    }
+
+    #[test]
+    fn line_numbers_track_newlines() {
+        let toks = lex("a\nb\n\nc");
+        let lines: Vec<usize> = toks.iter().map(|t| t.line).collect();
+        assert_eq!(lines, vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn escaped_quotes_and_ranges() {
+        let toks = lex(r#"let c = '\''; let s = "a\"b"; for i in 0..map.len() {}"#);
+        assert!(toks.iter().any(|t| t.is_ident("map")));
+        assert!(toks.iter().any(|t| t.is_ident("len")));
+        // the range dots survive as puncts
+        assert!(toks.windows(2).any(|w| w[0].is_punct('.') && w[1].is_punct('.')));
+    }
+
+    #[test]
+    fn numbers_keep_method_dots() {
+        let toks = lex("let x = 1.0 + 2.max(3) + 0xFFu64;");
+        let nums = toks.iter().filter(|t| t.kind == TokKind::Num).count();
+        assert_eq!(nums, 3);
+        assert!(toks.iter().any(|t| t.is_ident("max")));
+    }
+}

@@ -1,0 +1,322 @@
+//! Determinism lint: static source-level enforcement of the replay
+//! contracts (`arl-tangram lint`).
+//!
+//! Every claim this reproduction makes — byte-identical record→replay, the
+//! golden trace suites, the fuzz oracle — rests on source conventions:
+//! sorted pool/lane iteration, factors quantized to 1/8, no wall-clock or
+//! ambient randomness in decision paths, the `Metrics::ledger` field kept
+//! off the serialized surface. The fuzz oracle catches violations at
+//! runtime per-seed; this module catches them at review time on every
+//! line. Like the rest of `util/`, it is dependency-free and hand-rolled
+//! (no `syn`, no clippy plugins): a small Rust lexer ([`lexer`]) feeds six
+//! lexical rules ([`rules`]), and accepted findings live in a committed
+//! `lint_baseline.json` that is only allowed to shrink.
+//!
+//! Rule summary (full semantics in `testdata/README.md`):
+//!
+//! | rule              | contract                                          |
+//! |-------------------|---------------------------------------------------|
+//! | `nondet-iteration`| no HashMap/HashSet iteration in decision paths    |
+//! | `wall-clock`      | `Instant`/`SystemTime` only in `util::stopwatch`  |
+//! | `ambient-rng`     | randomness only via seeded `util::rng::SplitMix64`|
+//! | `raw-factor`      | factor arithmetic goes through `quantize`         |
+//! | `panic-budget`    | per-file `.unwrap()/.expect()` count ratchet      |
+//! | `golden-surface`  | unserialized fields stay out of `to_json` paths   |
+//!
+//! Suppression: `// arl-lint: allow(<rule>): <reason>` on the offending
+//! line or the comment block directly above it; the reason is mandatory.
+
+pub mod lexer;
+pub mod rules;
+
+pub use rules::{lint_source, LintConfig};
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+/// The six determinism rules.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum RuleId {
+    NondetIteration,
+    WallClock,
+    AmbientRng,
+    RawFactor,
+    PanicBudget,
+    GoldenSurface,
+}
+
+impl RuleId {
+    pub const ALL: [RuleId; 6] = [
+        RuleId::NondetIteration,
+        RuleId::WallClock,
+        RuleId::AmbientRng,
+        RuleId::RawFactor,
+        RuleId::PanicBudget,
+        RuleId::GoldenSurface,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RuleId::NondetIteration => "nondet-iteration",
+            RuleId::WallClock => "wall-clock",
+            RuleId::AmbientRng => "ambient-rng",
+            RuleId::RawFactor => "raw-factor",
+            RuleId::PanicBudget => "panic-budget",
+            RuleId::GoldenSurface => "golden-surface",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<RuleId> {
+        RuleId::ALL.iter().copied().find(|r| r.name() == s)
+    }
+}
+
+impl fmt::Display for RuleId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One lint hit: rule, repo-relative file, 1-based line, human message.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: RuleId,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Lint every `.rs` file under `root` (recursive, sorted traversal so
+/// reports are byte-stable). File paths in findings are `root`-prefixed
+/// with forward slashes, matching the committed baseline keys.
+pub fn lint_tree(root: &Path, cfg: &LintConfig) -> Result<Vec<Finding>, String> {
+    let prefix = root.to_string_lossy().replace('\\', "/");
+    let mut files: Vec<(std::path::PathBuf, String)> = Vec::new();
+    collect_rs(root, &prefix, &mut files)?;
+    files.sort_by(|a, b| a.1.cmp(&b.1));
+    let mut out = Vec::new();
+    for (path, rel) in files {
+        let src = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        out.extend(lint_source(&rel, &src, cfg));
+    }
+    Ok(out)
+}
+
+fn collect_rs(
+    dir: &Path,
+    prefix: &str,
+    out: &mut Vec<(std::path::PathBuf, String)>,
+) -> Result<(), String> {
+    let entries =
+        std::fs::read_dir(dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+        let path = entry.path();
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if path.is_dir() {
+            collect_rs(&path, &format!("{prefix}/{name}"), out)?;
+        } else if name.ends_with(".rs") {
+            out.push((path, format!("{prefix}/{name}")));
+        }
+    }
+    Ok(())
+}
+
+/// Accepted findings: exact per-(rule, file) counts. The ratchet is
+/// two-sided — counts above the baseline are new violations, counts below
+/// it are a stale baseline that must be shrunk (`--write-baseline`) so
+/// headroom can never silently accumulate.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Baseline {
+    /// rule name → file → accepted finding count.
+    pub counts: BTreeMap<String, BTreeMap<String, u64>>,
+}
+
+/// Outcome of checking findings against a [`Baseline`].
+#[derive(Debug, Clone, Default)]
+pub struct Comparison {
+    /// (rule, file) buckets that grew past the baseline.
+    pub violations: Vec<String>,
+    /// (rule, file) buckets that shrank below the baseline.
+    pub stale: Vec<String>,
+}
+
+impl Comparison {
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty() && self.stale.is_empty()
+    }
+}
+
+impl Baseline {
+    pub fn from_findings(findings: &[Finding]) -> Baseline {
+        let mut counts: BTreeMap<String, BTreeMap<String, u64>> = BTreeMap::new();
+        for f in findings {
+            *counts
+                .entry(f.rule.name().to_string())
+                .or_default()
+                .entry(f.file.clone())
+                .or_insert(0) += 1;
+        }
+        Baseline { counts }
+    }
+
+    /// Load a committed baseline. A missing file is an empty baseline (zero
+    /// accepted findings), so a fresh tree is held to the strictest bar.
+    pub fn load(path: &Path) -> Result<Baseline, String> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(Baseline::default())
+            }
+            Err(e) => return Err(format!("read {}: {e}", path.display())),
+        };
+        let json = Json::parse(&text).map_err(|e| format!("parse {}: {e}", path.display()))?;
+        let obj = json
+            .as_obj()
+            .ok_or_else(|| format!("{}: expected an object", path.display()))?;
+        let mut counts: BTreeMap<String, BTreeMap<String, u64>> = BTreeMap::new();
+        for (rule, files) in obj {
+            if RuleId::parse(rule).is_none() {
+                return Err(format!("{}: unknown rule {rule:?}", path.display()));
+            }
+            let files = files
+                .as_obj()
+                .ok_or_else(|| format!("{}: rule {rule:?} is not an object", path.display()))?;
+            let entry = counts.entry(rule.clone()).or_default();
+            for (file, n) in files {
+                let n = n
+                    .as_u64()
+                    .ok_or_else(|| format!("{}: {rule}/{file} is not a count", path.display()))?;
+                entry.insert(file.clone(), n);
+            }
+        }
+        Ok(Baseline { counts })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .map_err(|e| format!("write {}: {e}", path.display()))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let rules: Vec<(&str, Json)> = self
+            .counts
+            .iter()
+            .map(|(rule, files)| {
+                let pairs: Vec<(&str, Json)> = files
+                    .iter()
+                    .map(|(f, n)| (f.as_str(), Json::num(*n as f64)))
+                    .collect();
+                (rule.as_str(), Json::obj(pairs))
+            })
+            .collect();
+        Json::obj(rules)
+    }
+
+    /// Two-sided ratchet check of `findings` against this baseline.
+    pub fn compare(&self, findings: &[Finding]) -> Comparison {
+        let actual = Baseline::from_findings(findings);
+        let mut cmp = Comparison::default();
+        let mut keys: std::collections::BTreeSet<(&String, &String)> =
+            std::collections::BTreeSet::new();
+        for (rule, files) in self.counts.iter().chain(actual.counts.iter()) {
+            for file in files.keys() {
+                keys.insert((rule, file));
+            }
+        }
+        for (rule, file) in keys {
+            let base = self.counts.get(rule).and_then(|f| f.get(file)).copied().unwrap_or(0);
+            let now = actual.counts.get(rule).and_then(|f| f.get(file)).copied().unwrap_or(0);
+            if now > base {
+                cmp.violations.push(format!(
+                    "{file}: [{rule}] {now} findings, baseline accepts {base} — fix the new \
+                     ones or add an `arl-lint: allow` with a reason"
+                ));
+            } else if now < base {
+                cmp.stale.push(format!(
+                    "{file}: [{rule}] baseline accepts {base} but only {now} remain — shrink \
+                     it with `arl-tangram lint --write-baseline` (the ratchet is one-way)"
+                ));
+            }
+        }
+        cmp
+    }
+}
+
+/// Machine-readable report for `arl-tangram lint --json`.
+pub fn report_json(findings: &[Finding], cmp: &Comparison) -> Json {
+    let counts = Baseline::from_findings(findings).to_json();
+    Json::obj(vec![
+        ("ok", Json::Bool(cmp.ok())),
+        (
+            "findings",
+            Json::arr(findings.iter().map(|f| {
+                Json::obj(vec![
+                    ("rule", Json::str(f.rule.name())),
+                    ("file", Json::str(f.file.as_str())),
+                    ("line", Json::num(f.line as f64)),
+                    ("message", Json::str(f.message.as_str())),
+                ])
+            })),
+        ),
+        ("counts", counts),
+        ("violations", Json::arr(cmp.violations.iter().map(|v| Json::str(v.as_str())))),
+        ("stale", Json::arr(cmp.stale.iter().map(|s| Json::str(s.as_str())))),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finding(rule: RuleId, file: &str) -> Finding {
+        Finding { rule, file: file.into(), line: 1, message: String::new() }
+    }
+
+    #[test]
+    fn baseline_roundtrip_and_compare() {
+        let fs = vec![
+            finding(RuleId::PanicBudget, "src/a.rs"),
+            finding(RuleId::PanicBudget, "src/a.rs"),
+            finding(RuleId::WallClock, "src/b.rs"),
+        ];
+        let b = Baseline::from_findings(&fs);
+        let text = format!("{}", b.to_json());
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.path(&["panic-budget", "src/a.rs"]).unwrap().as_u64(), Some(2));
+        assert!(b.compare(&fs).ok());
+    }
+
+    #[test]
+    fn ratchet_flags_growth_and_staleness() {
+        let base = Baseline::from_findings(&[finding(RuleId::PanicBudget, "src/a.rs")]);
+        // growth: two findings against a baseline of one
+        let grown = vec![
+            finding(RuleId::PanicBudget, "src/a.rs"),
+            finding(RuleId::PanicBudget, "src/a.rs"),
+        ];
+        let cmp = base.compare(&grown);
+        assert_eq!(cmp.violations.len(), 1);
+        assert!(cmp.stale.is_empty());
+        // staleness: zero findings against a baseline of one
+        let cmp = base.compare(&[]);
+        assert!(cmp.violations.is_empty());
+        assert_eq!(cmp.stale.len(), 1);
+    }
+
+    #[test]
+    fn missing_baseline_is_empty() {
+        let b = Baseline::load(Path::new("testdata/definitely-missing-baseline.json")).unwrap();
+        assert!(b.counts.is_empty());
+        assert!(b.compare(&[]).ok());
+    }
+}

@@ -1,0 +1,668 @@
+//! The six determinism rules, evaluated over the lexer's token stream.
+//!
+//! Every rule is lexical: no type inference, no name resolution. The
+//! `nondet-iteration` rule approximates typing by collecting every binding
+//! declared `name: HashMap<…>` / `name: HashSet<…>` — `let` bindings and fn
+//! params scoped to their function, struct fields to their file — plus a
+//! configured list of hash-typed fields shared across files (lane queue
+//! maps and manager tables that the coordinator reaches through its lanes).
+//! False positives are possible by construction; that is what the
+//! structured `// arl-lint: allow(<rule>): <reason>` comment and the
+//! committed shrink-only baseline are for. Tokens inside `#[cfg(test)]` /
+//! `#[test]` items are exempt from every rule: tests are not decision
+//! paths.
+
+use super::lexer::{lex, TokKind, Token};
+use super::{Finding, RuleId};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Rule configuration. `Default` encodes this repository's contracts; tests
+/// construct variants to probe individual rules.
+#[derive(Debug, Clone)]
+pub struct LintConfig {
+    /// Path prefixes of decision-path modules: code here feeds the
+    /// record/replay decision stream, so iteration order and factor
+    /// arithmetic are contractual.
+    pub decision_paths: Vec<String>,
+    /// Exact file paths allowed to read the wall clock (observability
+    /// helpers only; wall time must never feed serialized state).
+    pub wall_clock_allow: Vec<String>,
+    /// Hash-typed struct fields reached across file boundaries (e.g. the
+    /// coordinator iterating its lanes' queue maps).
+    pub shared_hash_fields: Vec<String>,
+    /// Serialization functions whose bodies form the golden surface.
+    pub serialize_fns: Vec<String>,
+    /// Identifiers that are contractually excluded from serialization.
+    pub unserialized_fields: Vec<String>,
+}
+
+impl Default for LintConfig {
+    fn default() -> Self {
+        LintConfig {
+            decision_paths: vec![
+                "src/coordinator/".into(),
+                "src/lanes/".into(),
+                "src/autoscale/".into(),
+                "src/scheduler/".into(),
+                "src/managers/".into(),
+            ],
+            wall_clock_allow: vec!["src/util/stopwatch.rs".into()],
+            shared_hash_fields: vec![
+                "queues".into(),
+                "mgrs".into(),
+                "endpoints".into(),
+                "active".into(),
+                "bindings".into(),
+                "services".into(),
+            ],
+            serialize_fns: vec!["to_json".into(), "summary_json".into()],
+            unserialized_fields: vec!["ledger".into()],
+        }
+    }
+}
+
+/// Hash-iteration method names that observe (or depend on) bucket order.
+const ITER_METHODS: [&str; 10] = [
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "into_iter",
+    "into_keys",
+    "into_values",
+    "drain",
+    "retain",
+];
+
+/// Ambient randomness identifiers (the `rand` ecosystem's entropy taps).
+const BANNED_RNG: [&str; 6] =
+    ["thread_rng", "from_entropy", "OsRng", "StdRng", "SmallRng", "RandomState"];
+
+/// Lint one file. `path` is the repo-relative path with forward slashes
+/// (e.g. `src/lanes/api.rs`); it selects which rules apply. Findings
+/// suppressed by `arl-lint: allow` comments are already filtered out.
+pub fn lint_source(path: &str, src: &str, cfg: &LintConfig) -> Vec<Finding> {
+    let toks = lex(src);
+    let mask = test_mask(&toks);
+    let mut out = Vec::new();
+    rule_nondet_iteration(path, &toks, &mask, cfg, &mut out);
+    rule_wall_clock(path, &toks, &mask, cfg, &mut out);
+    rule_ambient_rng(path, &toks, &mask, &mut out);
+    rule_raw_factor(path, &toks, &mask, cfg, &mut out);
+    rule_panic_budget(path, &toks, &mask, &mut out);
+    rule_golden_surface(path, &toks, &mask, cfg, &mut out);
+
+    let lines: Vec<&str> = src.lines().collect();
+    let allows = parse_allows(&lines);
+    out.retain(|f| !suppressed(f, &allows, &lines));
+    out.sort_by(|a, b| (a.line, a.rule as u8).cmp(&(b.line, b.rule as u8)));
+    out.dedup_by(|a, b| a.rule == b.rule && a.line == b.line);
+    out
+}
+
+fn in_decision_path(path: &str, cfg: &LintConfig) -> bool {
+    cfg.decision_paths.iter().any(|p| path.starts_with(p.as_str()))
+}
+
+// ---------------------------------------------------------------------------
+// token-stream geometry
+// ---------------------------------------------------------------------------
+
+/// Mark every token covered by a `#[cfg(test)]` / `#[test]` item (attribute
+/// through the close of the following brace block, or through `;` for
+/// braceless items). `#[cfg(not(test))]` guards real code and is not
+/// masked.
+fn test_mask(toks: &[Token]) -> Vec<bool> {
+    let mut mask = vec![false; toks.len()];
+    let mut i = 0;
+    while i + 1 < toks.len() {
+        if !(toks[i].is_punct('#') && toks[i + 1].is_punct('[')) {
+            i += 1;
+            continue;
+        }
+        let attr_end = match matching(toks, i + 1, '[', ']') {
+            Some(e) => e,
+            None => break,
+        };
+        let mut has_test = false;
+        let mut has_not = false;
+        for t in &toks[i + 2..attr_end] {
+            has_test |= t.is_ident("test");
+            has_not |= t.is_ident("not");
+        }
+        if !has_test || has_not {
+            i = attr_end + 1;
+            continue;
+        }
+        // skip any stacked attributes between the cfg and the item
+        let mut j = attr_end + 1;
+        while j + 1 < toks.len() && toks[j].is_punct('#') && toks[j + 1].is_punct('[') {
+            match matching(toks, j + 1, '[', ']') {
+                Some(e) => j = e + 1,
+                None => return mask,
+            }
+        }
+        // item body: first top-level `{…}` block, or a braceless `…;`
+        let mut depth = 0i32;
+        let mut end = None;
+        while j < toks.len() {
+            if toks[j].is_punct('(') {
+                depth += 1;
+            } else if toks[j].is_punct(')') {
+                depth -= 1;
+            } else if depth == 0 && toks[j].is_punct(';') {
+                end = Some(j);
+                break;
+            } else if depth == 0 && toks[j].is_punct('{') {
+                end = matching(toks, j, '{', '}');
+                break;
+            }
+            j += 1;
+        }
+        let end = match end {
+            Some(e) => e,
+            None => toks.len() - 1,
+        };
+        for m in mask.iter_mut().take(end + 1).skip(i) {
+            *m = true;
+        }
+        i = end + 1;
+    }
+    mask
+}
+
+/// Index of the delimiter closing the one at `open`.
+fn matching(toks: &[Token], open: usize, oc: char, cc: char) -> Option<usize> {
+    let mut depth = 0i32;
+    for (j, t) in toks.iter().enumerate().skip(open) {
+        if t.is_punct(oc) {
+            depth += 1;
+        } else if t.is_punct(cc) {
+            depth -= 1;
+            if depth == 0 {
+                return Some(j);
+            }
+        }
+    }
+    None
+}
+
+/// `(start, end)` token spans of every `fn` with a body (signature through
+/// closing brace). Trait-method signatures without bodies are skipped.
+fn fn_regions(toks: &[Token]) -> Vec<(usize, usize)> {
+    let mut regions = Vec::new();
+    for i in 0..toks.len() {
+        if !toks[i].is_ident("fn") {
+            continue;
+        }
+        let mut depth = 0i32;
+        let mut j = i + 1;
+        while j < toks.len() {
+            if toks[j].is_punct('(') {
+                depth += 1;
+            } else if toks[j].is_punct(')') {
+                depth -= 1;
+            } else if depth == 0 && toks[j].is_punct(';') {
+                break; // body-less trait signature
+            } else if depth == 0 && toks[j].is_punct('{') {
+                if let Some(close) = matching(toks, j, '{', '}') {
+                    regions.push((i, close));
+                }
+                break;
+            }
+            j += 1;
+        }
+    }
+    regions
+}
+
+// ---------------------------------------------------------------------------
+// rule: nondet-iteration
+// ---------------------------------------------------------------------------
+
+fn rule_nondet_iteration(
+    path: &str,
+    toks: &[Token],
+    mask: &[bool],
+    cfg: &LintConfig,
+    out: &mut Vec<Finding>,
+) {
+    if !in_decision_path(path, cfg) {
+        return;
+    }
+    let regions = fn_regions(toks);
+
+    // phase A: collect hash-typed declarations (`name: HashMap<…>`)
+    let mut file_scope: BTreeSet<String> = BTreeSet::new();
+    let mut fn_scope: Vec<(usize, usize, String)> = Vec::new();
+    for i in 0..toks.len() {
+        if !(toks[i].is_ident("HashMap") || toks[i].is_ident("HashSet")) {
+            continue;
+        }
+        let name = match decl_name_before(toks, i) {
+            Some(n) => n,
+            None => continue,
+        };
+        match innermost(&regions, i) {
+            Some((s, e)) => fn_scope.push((s, e, name)),
+            None => {
+                file_scope.insert(name);
+            }
+        }
+    }
+    let hash_typed = |name: &str, at: usize| -> bool {
+        cfg.shared_hash_fields.iter().any(|f| f == name)
+            || file_scope.contains(name)
+            || fn_scope.iter().any(|(s, e, n)| *s <= at && at <= *e && n == name)
+    };
+
+    // phase B: flag iteration over hash-typed names
+    for i in 0..toks.len() {
+        if mask[i] {
+            continue;
+        }
+        // receiver: `name.iter()` / `name.values()` / …
+        if i >= 2
+            && toks[i].kind == TokKind::Ident
+            && ITER_METHODS.contains(&toks[i].text.as_str())
+            && toks[i - 1].is_punct('.')
+            && matches!(toks.get(i + 1), Some(t) if t.is_punct('('))
+            && toks[i - 2].kind == TokKind::Ident
+            && hash_typed(&toks[i - 2].text, i - 2)
+        {
+            out.push(Finding {
+                rule: RuleId::NondetIteration,
+                file: path.to_string(),
+                line: toks[i].line,
+                message: format!(
+                    "`{}.{}()` iterates a HashMap/HashSet in a decision path; \
+                     use a sorted structure or justify with an allow comment",
+                    toks[i - 2].text, toks[i].text
+                ),
+            });
+        }
+        // `for … in <expr-mentioning-hash-binding> {`
+        if toks[i].is_ident("for") && !matches!(toks.get(i + 1), Some(t) if t.is_punct('<')) {
+            for j in i + 1..toks.len().min(i + 64) {
+                if toks[j].is_punct('{') || toks[j].is_punct(';') {
+                    break;
+                }
+                if toks[j].kind == TokKind::Ident && hash_typed(&toks[j].text, j) {
+                    out.push(Finding {
+                        rule: RuleId::NondetIteration,
+                        file: path.to_string(),
+                        line: toks[j].line,
+                        message: format!(
+                            "`for` over HashMap/HashSet-typed `{}` in a decision path; \
+                             use a sorted structure or justify with an allow comment",
+                            toks[j].text
+                        ),
+                    });
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// For a `HashMap`/`HashSet` type token at `i`, walk back through the type
+/// path (`&`, lifetimes, `mut`, `std::collections::`) to the `name:`
+/// annotation introducing it. Returns `None` for value positions
+/// (`HashMap::new()`), return types, and nested generics (`Vec<HashMap<…>>`
+/// — the container itself is not a hash table).
+fn decl_name_before(toks: &[Token], i: usize) -> Option<String> {
+    let mut j = i.checked_sub(1)?;
+    loop {
+        let t = &toks[j];
+        let skip = t.is_punct('&')
+            || t.kind == TokKind::Lifetime
+            || t.is_ident("std")
+            || t.is_ident("collections")
+            || t.is_ident("mut")
+            || t.is_ident("dyn");
+        if skip {
+            j = j.checked_sub(1)?;
+        } else if t.is_punct(':') && j >= 1 && toks[j - 1].is_punct(':') {
+            j = j.checked_sub(2)?; // path separator `::`
+        } else {
+            break;
+        }
+    }
+    if toks[j].is_punct(':')
+        && j >= 1
+        && toks[j - 1].kind == TokKind::Ident
+        && !(j >= 2 && toks[j - 2].is_punct(':'))
+    {
+        Some(toks[j - 1].text.clone())
+    } else {
+        None
+    }
+}
+
+fn innermost(regions: &[(usize, usize)], at: usize) -> Option<(usize, usize)> {
+    regions
+        .iter()
+        .filter(|(s, e)| *s <= at && at <= *e)
+        .min_by_key(|(s, e)| e - s)
+        .copied()
+}
+
+// ---------------------------------------------------------------------------
+// rule: wall-clock
+// ---------------------------------------------------------------------------
+
+fn rule_wall_clock(
+    path: &str,
+    toks: &[Token],
+    mask: &[bool],
+    cfg: &LintConfig,
+    out: &mut Vec<Finding>,
+) {
+    if cfg.wall_clock_allow.iter().any(|p| p == path) {
+        return;
+    }
+    for (i, t) in toks.iter().enumerate() {
+        if mask[i] {
+            continue;
+        }
+        if t.is_ident("Instant") || t.is_ident("SystemTime") {
+            out.push(Finding {
+                rule: RuleId::WallClock,
+                file: path.to_string(),
+                line: t.line,
+                message: format!(
+                    "`{}` outside the observability allowlist; \
+                     time spans via `util::stopwatch::Stopwatch`, decisions via virtual SimTime",
+                    t.text
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// rule: ambient-rng
+// ---------------------------------------------------------------------------
+
+fn rule_ambient_rng(path: &str, toks: &[Token], mask: &[bool], out: &mut Vec<Finding>) {
+    for (i, t) in toks.iter().enumerate() {
+        if mask[i] {
+            continue;
+        }
+        let banned = BANNED_RNG.contains(&t.text.as_str())
+            || (t.is_ident("rand")
+                && matches!(toks.get(i + 1), Some(a) if a.is_punct(':'))
+                && matches!(toks.get(i + 2), Some(b) if b.is_punct(':')));
+        if banned {
+            out.push(Finding {
+                rule: RuleId::AmbientRng,
+                file: path.to_string(),
+                line: t.line,
+                message: format!(
+                    "ambient randomness (`{}`); all randomness must flow from a \
+                     seeded `util::rng::SplitMix64`",
+                    t.text
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// rule: raw-factor
+// ---------------------------------------------------------------------------
+
+/// A statement in a decision path that does arithmetic on a `*factor*`
+/// identifier without going through `Autoscaler::quantize` bypasses the
+/// 1/8-quantization contract. Statements are token spans between `;`/`{`/`}`
+/// boundaries.
+fn rule_raw_factor(
+    path: &str,
+    toks: &[Token],
+    mask: &[bool],
+    cfg: &LintConfig,
+    out: &mut Vec<Finding>,
+) {
+    if !in_decision_path(path, cfg) {
+        return;
+    }
+    let mut start = 0usize;
+    for i in 0..=toks.len() {
+        let boundary = i == toks.len()
+            || toks[i].is_punct(';')
+            || toks[i].is_punct('{')
+            || toks[i].is_punct('}');
+        if !boundary {
+            continue;
+        }
+        let span = &toks[start..i];
+        let span_mask = &mask[start..i];
+        start = i + 1;
+        let factor_tok = span.iter().zip(span_mask).find(|(t, m)| {
+            !**m && t.kind == TokKind::Ident && t.text.to_lowercase().contains("factor")
+        });
+        let factor_tok = match factor_tok {
+            Some((t, _)) => t,
+            None => continue,
+        };
+        let has_arith = span.iter().any(|t| t.is_punct('*') || t.is_punct('/'));
+        let has_quantize = span.iter().any(|t| t.is_ident("quantize"));
+        if has_arith && !has_quantize {
+            out.push(Finding {
+                rule: RuleId::RawFactor,
+                file: path.to_string(),
+                line: factor_tok.line,
+                message: format!(
+                    "arithmetic on `{}` without `Autoscaler::quantize`; scale factors \
+                     must come from the quantized menu",
+                    factor_tok.text
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// rule: panic-budget
+// ---------------------------------------------------------------------------
+
+fn rule_panic_budget(path: &str, toks: &[Token], mask: &[bool], out: &mut Vec<Finding>) {
+    for i in 1..toks.len() {
+        if mask[i] {
+            continue;
+        }
+        let t = &toks[i];
+        if (t.is_ident("unwrap") || t.is_ident("expect"))
+            && toks[i - 1].is_punct('.')
+            && matches!(toks.get(i + 1), Some(n) if n.is_punct('('))
+        {
+            out.push(Finding {
+                rule: RuleId::PanicBudget,
+                file: path.to_string(),
+                line: t.line,
+                message: format!(
+                    "`.{}()` in non-test code counts against the per-file panic budget",
+                    t.text
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// rule: golden-surface
+// ---------------------------------------------------------------------------
+
+fn rule_golden_surface(
+    path: &str,
+    toks: &[Token],
+    mask: &[bool],
+    cfg: &LintConfig,
+    out: &mut Vec<Finding>,
+) {
+    for i in 0..toks.len() {
+        if mask[i] || !toks[i].is_ident("fn") {
+            continue;
+        }
+        let name = match toks.get(i + 1) {
+            Some(t) if t.kind == TokKind::Ident => &t.text,
+            _ => continue,
+        };
+        if !cfg.serialize_fns.iter().any(|f| f == name) {
+            continue;
+        }
+        // body = first top-level brace block after the signature
+        let mut j = i + 2;
+        let mut depth = 0i32;
+        while j < toks.len() {
+            if toks[j].is_punct('(') {
+                depth += 1;
+            } else if toks[j].is_punct(')') {
+                depth -= 1;
+            } else if depth == 0 && (toks[j].is_punct(';') || toks[j].is_punct('{')) {
+                break;
+            }
+            j += 1;
+        }
+        if j >= toks.len() || toks[j].is_punct(';') {
+            continue;
+        }
+        let close = match matching(toks, j, '{', '}') {
+            Some(c) => c,
+            None => continue,
+        };
+        for t in &toks[j..close] {
+            if cfg.unserialized_fields.iter().any(|f| t.is_ident(f)) {
+                out.push(Finding {
+                    rule: RuleId::GoldenSurface,
+                    file: path.to_string(),
+                    line: t.line,
+                    message: format!(
+                        "`{}` is contractually unserialized (golden byte-identity) but is \
+                         referenced from `{name}`",
+                        t.text
+                    ),
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// allow comments
+// ---------------------------------------------------------------------------
+
+/// Parse every `// arl-lint: allow(<rule>): <reason>` comment. The reason is
+/// mandatory — an allow without one grants nothing.
+fn parse_allows(lines: &[&str]) -> BTreeMap<usize, BTreeSet<RuleId>> {
+    let mut allows: BTreeMap<usize, BTreeSet<RuleId>> = BTreeMap::new();
+    for (idx, line) in lines.iter().enumerate() {
+        let comment = match line.find("//") {
+            Some(c) => &line[c..],
+            None => continue,
+        };
+        let rest = match comment.find("arl-lint:") {
+            Some(p) => comment[p + "arl-lint:".len()..].trim_start(),
+            None => continue,
+        };
+        let rest = match rest.strip_prefix("allow(") {
+            Some(r) => r,
+            None => continue,
+        };
+        let close = match rest.find(')') {
+            Some(c) => c,
+            None => continue,
+        };
+        let rule = match RuleId::parse(rest[..close].trim()) {
+            Some(r) => r,
+            None => continue,
+        };
+        let reason = match rest[close + 1..].trim_start().strip_prefix(':') {
+            Some(r) => r.trim(),
+            None => continue,
+        };
+        if reason.is_empty() {
+            continue;
+        }
+        allows.entry(idx + 1).or_default().insert(rule);
+    }
+    allows
+}
+
+/// A finding is suppressed by an allow on its own line (trailing comment)
+/// or in the run of comment-only lines directly above it.
+fn suppressed(f: &Finding, allows: &BTreeMap<usize, BTreeSet<RuleId>>, lines: &[&str]) -> bool {
+    let hit = |l: usize| allows.get(&l).is_some_and(|s| s.contains(&f.rule));
+    if hit(f.line) {
+        return true;
+    }
+    let mut l = f.line.saturating_sub(1);
+    while l >= 1 && lines.get(l - 1).map(|s| s.trim_start().starts_with("//")).unwrap_or(false) {
+        if hit(l) {
+            return true;
+        }
+        l -= 1;
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint_decision(src: &str) -> Vec<Finding> {
+        lint_source("src/lanes/fixture.rs", src, &LintConfig::default())
+    }
+
+    #[test]
+    fn decl_scoping_separates_functions() {
+        // `dp` is a HashMap in one fn and a Vec in another — only the
+        // HashMap fn's iteration may fire.
+        let src = "
+            fn sparse() {
+                let mut dp: HashMap<usize, f64> = HashMap::new();
+                for (k, v) in dp.iter() { let _ = (k, v); }
+            }
+            fn dense() {
+                let mut dp = vec![0.0; 8];
+                for v in dp.iter() { let _ = v; }
+            }
+        ";
+        let f = lint_decision(src);
+        assert_eq!(f.iter().filter(|f| f.rule == RuleId::NondetIteration).count(), 1);
+        assert_eq!(f[0].line, 4);
+    }
+
+    #[test]
+    fn struct_fields_are_file_scoped() {
+        let src = "
+            struct Lane { table: HashMap<u32, u64> }
+            impl Lane {
+                fn sum(&self) -> u64 { self.table.values().sum() }
+            }
+        ";
+        let f = lint_decision(src);
+        assert_eq!(f.iter().filter(|f| f.rule == RuleId::NondetIteration).count(), 1);
+    }
+
+    #[test]
+    fn test_mask_exempts_cfg_test_items() {
+        let src = "
+            #[cfg(test)]
+            mod tests {
+                fn helper(m: &HashMap<u32, u32>) -> u32 { m.values().sum() }
+            }
+        ";
+        assert!(lint_decision(src).is_empty());
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_masked() {
+        let src = "
+            #[cfg(not(test))]
+            fn live(m: &HashMap<u32, u32>) -> u32 { m.values().sum() }
+        ";
+        assert_eq!(lint_decision(src).len(), 1);
+    }
+}

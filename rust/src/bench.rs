@@ -11,7 +11,7 @@ use crate::baselines::{BaselineBackend, K8sCfg, ServerlessCfg};
 use crate::coordinator::{run, Backend, RunCfg, TangramBackend, TangramCfg};
 use crate::metrics::Metrics;
 use crate::rollout::workloads::{Catalog, CatalogCfg, Workload, WorkloadKind};
-use std::time::Instant;
+use crate::util::stopwatch::Stopwatch;
 
 // ---------------------------------------------------------------------------
 // timing harness
@@ -61,7 +61,7 @@ pub fn time_it<F: FnMut()>(name: &str, iters: usize, mut f: F) -> TimingStats {
     }
     let mut samples = Vec::with_capacity(iters);
     for _ in 0..iters {
-        let t = Instant::now();
+        let t = Stopwatch::start();
         f();
         samples.push(t.elapsed().as_nanos() as f64);
     }
@@ -153,9 +153,9 @@ pub fn run_experiment(
     seed: u64,
 ) -> (Metrics, f64) {
     let cfg = RunCfg { batch, steps, seed, ..RunCfg::default() };
-    let t = Instant::now();
+    let t = Stopwatch::start();
     let m = run(backend, cat, wls, &cfg);
-    (m, t.elapsed().as_secs_f64())
+    (m, t.secs())
 }
 
 pub fn coding_wl() -> Workload {

@@ -52,6 +52,8 @@ impl ApiLane {
 
     /// Endpoint kinds in sorted order (the deterministic target order).
     pub fn kinds(&self) -> Vec<ResourceKindId> {
+        // arl-lint: allow(nondet-iteration): collected then sorted — the
+        // returned order is deterministic
         let mut kinds: Vec<ResourceKindId> = self.endpoints.keys().copied().collect();
         kinds.sort();
         kinds
@@ -60,6 +62,8 @@ impl ApiLane {
     /// Currently-provisioned quota lanes (sum of provider concurrency
     /// limits after any flaps/resizes).
     pub fn provisioned_lanes(&self) -> u64 {
+        // arl-lint: allow(nondet-iteration): commutative sum — order cannot
+        // change the result
         self.endpoints.values().map(|e| e.spec.max_concurrency as u64).sum()
     }
 

@@ -77,6 +77,8 @@ impl ElasticLane for CpuLane {
     }
 
     fn pool_ids(&self) -> Vec<PoolId> {
+        // arl-lint: allow(nondet-iteration): collected then sorted — the
+        // returned order is deterministic
         let mut nodes: Vec<NodeId> = self.queues.keys().copied().collect();
         nodes.sort();
         nodes.into_iter().map(PoolId::CpuNode).collect()
@@ -89,12 +91,14 @@ impl ElasticLane for CpuLane {
         vec![PoolPressure {
             class: PoolClass::Cpu,
             endpoint: None,
+            // arl-lint: allow(nondet-iteration): commutative sum — order
+            // cannot change the result
             queued: self.queues.values().map(|q| q.len() as u64).sum(),
             // minimum core demand of the waiting work (unit-denominated,
             // so policies never mix action counts into core sums)
             queued_units: self
                 .queues
-                .values()
+                .values() // arl-lint: allow(nondet-iteration): commutative sum
                 .flat_map(|q| q.iter())
                 .map(|a| a.spec.cost.dim(self.kind).min_units())
                 .sum(),

@@ -16,6 +16,7 @@
 //! real model compute.
 
 pub mod action;
+pub mod analysis;
 pub mod autoscale;
 pub mod baselines;
 pub mod bench;

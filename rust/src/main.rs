@@ -12,6 +12,11 @@
 //!              sweeps seeded random specs through the invariant oracle
 //!   bench-gate compare a fresh BENCH_sched.json against the committed
 //!              baseline (CI perf ratchet; exit 1 on >tolerance regression)
+//!   lint       determinism lint: static source-level checks of the replay
+//!              contracts (sorted iteration, quantized factors, no wall
+//!              clock / ambient rng in decision paths) ratcheted against
+//!              the committed lint_baseline.json; exit 1 on any finding
+//!              the baseline does not accept
 //!   serve      load the AOT artifacts and run a reward-scoring smoke loop
 //!              through the coordinator (PJRT on the hot path)
 //!   version    print build info
@@ -28,9 +33,11 @@
 //!   arl-tangram scenario --replay static.jsonl --against auto.jsonl
 //!   arl-tangram scenario --fuzz 0 --cases 50   # seeded fuzz + invariant oracle sweep
 //!   arl-tangram bench-gate --baseline testdata/BENCH_sched.baseline.json
+//!   arl-tangram lint --json
 //!   arl-tangram serve --artifacts artifacts
 
 use arl_tangram::action::TaskId;
+use arl_tangram::analysis::{self, Baseline, LintConfig};
 use arl_tangram::autoscale::{AutoscaleCfg, PolicyKind};
 use arl_tangram::config::{BackendKind, ExperimentCfg};
 use arl_tangram::coordinator::{run, Backend};
@@ -47,6 +54,7 @@ use arl_tangram::testkit::oracle;
 use arl_tangram::util::cli::Args;
 use arl_tangram::util::json::Json;
 use arl_tangram::util::logging;
+use arl_tangram::util::stopwatch::Stopwatch;
 
 fn main() {
     logging::init_from_env();
@@ -60,6 +68,7 @@ fn main() {
         "run" => cmd_run(argv),
         "scenario" => cmd_scenario(argv),
         "bench-gate" => cmd_bench_gate(argv),
+        "lint" => cmd_lint(argv),
         "serve" => cmd_serve(argv),
         "version" => {
             println!("arl-tangram {}", arl_tangram::crate_version());
@@ -67,7 +76,7 @@ fn main() {
         }
         other => {
             eprintln!(
-                "unknown subcommand '{other}' (expected: run | scenario | bench-gate | serve | version)"
+                "unknown subcommand '{other}' (expected: run | scenario | bench-gate | lint | serve | version)"
             );
             2
         }
@@ -148,9 +157,9 @@ fn cmd_run(argv: Vec<String>) -> i32 {
         "running {:?} on {name}: batch={} steps={} seed={}",
         cfg.workloads, cfg.run.batch, cfg.run.steps, cfg.run.seed
     );
-    let t = std::time::Instant::now();
+    let t = Stopwatch::start();
     let m = run(backend.as_mut(), &cat, &wls, &cfg.run);
-    println!("simulated in {:.1}s wall\n", t.elapsed().as_secs_f64());
+    println!("simulated in {:.1}s wall\n", t.secs());
     println!("trajectories        : {}", m.trajectories.len());
     println!("actions             : {} ({} failed, {} retries)", m.actions.len(), m.failed_actions(), m.total_retries());
     println!("mean ACT            : {:9.2}s (p99 {:.2}s)", m.mean_act(), m.p99_act());
@@ -335,7 +344,7 @@ fn cmd_scenario(argv: Vec<String>) -> i32 {
             eprintln!("--full-sweep is an A/B debug mode and cannot be combined with --record");
             return 2;
         }
-        let t = std::time::Instant::now();
+        let t = Stopwatch::start();
         // the tangram path also surfaces the scheduler hot-path counters
         let (outcome, sched) = if backend == BackendKind::Tangram {
             match run_scenario_tangram(&spec, full_sweep) {
@@ -359,7 +368,7 @@ fn cmd_scenario(argv: Vec<String>) -> i32 {
             spec.name,
             backend.name(),
             outcome.events.len(),
-            t.elapsed().as_secs_f64()
+            t.secs()
         );
         println!("summary: {}", summary_json(&outcome.metrics));
         print_resource_report(&outcome.metrics, spec.autoscale.is_some());
@@ -620,7 +629,7 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
         }
     };
     let n = args.u64("requests");
-    let t = std::time::Instant::now();
+    let t = Stopwatch::start();
     for i in 0..n {
         let tokens: Vec<i32> = (0..rm.batch * rm.seq).map(|j| ((j as u64 + i) % 64) as i32).collect();
         let mask = vec![1f32; rm.batch * rm.seq];
@@ -636,11 +645,87 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
             }
         }
     }
-    let dt = t.elapsed().as_secs_f64();
+    let dt = t.secs();
     println!(
         "served {n} scoring batches in {dt:.2}s ({:.1} req/s, {:.1}ms median-ish)",
         n as f64 / dt,
         dt / n as f64 * 1e3
     );
     0
+}
+
+/// `arl-tangram lint` — the determinism lint over `rust/src`.
+///
+/// Exit codes: 0 = clean against the baseline, 1 = new findings or a stale
+/// baseline, 2 = usage/setup error (mirrors `bench-gate`).
+fn cmd_lint(argv: Vec<String>) -> i32 {
+    let args = match Args::new("static determinism lint over the source tree")
+        .opt("root", "src", "source root to scan")
+        .opt("baseline", "lint_baseline.json", "accepted-findings baseline (shrink-only ratchet)")
+        .flag("json", "emit a machine-readable report to stdout")
+        .flag("write-baseline", "rewrite the baseline from current findings and exit")
+        .parse_from(argv)
+    {
+        Ok(a) => a,
+        Err(usage) => {
+            eprintln!("{usage}");
+            return 2;
+        }
+    };
+    let cfg = LintConfig::default();
+    let root = args.str("root");
+    let findings = match analysis::lint_tree(std::path::Path::new(&root), &cfg) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("lint: {e}");
+            return 2;
+        }
+    };
+    let bpath = args.str("baseline");
+    if args.bool("write-baseline") {
+        let baseline = Baseline::from_findings(&findings);
+        if let Err(e) = baseline.save(std::path::Path::new(&bpath)) {
+            eprintln!("lint: {e}");
+            return 2;
+        }
+        let files: usize = baseline.counts.values().map(|f| f.len()).sum();
+        println!("wrote {bpath}: {} findings across {files} (rule, file) buckets", findings.len());
+        return 0;
+    }
+    let baseline = match Baseline::load(std::path::Path::new(&bpath)) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("lint: {e}");
+            return 2;
+        }
+    };
+    let cmp = baseline.compare(&findings);
+    if args.bool("json") {
+        println!("{}", analysis::report_json(&findings, &cmp));
+    } else {
+        for v in &cmp.violations {
+            eprintln!("lint: {v}");
+        }
+        for s in &cmp.stale {
+            eprintln!("lint: {s}");
+        }
+        // print the individual findings for every offending bucket so the
+        // fix is a line number away, not a diff of counts
+        if !cmp.violations.is_empty() {
+            for f in &findings {
+                eprintln!("  {f}");
+            }
+        }
+        println!(
+            "lint: {} findings, {} accepted by baseline — {}",
+            findings.len(),
+            baseline.counts.values().map(|f| f.values().sum::<u64>()).sum::<u64>(),
+            if cmp.ok() { "OK" } else { "FAIL" }
+        );
+    }
+    if cmp.ok() {
+        0
+    } else {
+        1
+    }
 }

@@ -127,6 +127,8 @@ impl ResourceState for BasicManager {
     }
 
     fn running_completions(&self) -> Vec<(SimTime, u64)> {
+        // arl-lint: allow(nondet-iteration): the scheduler heapifies these
+        // by the full (time, units) pair — return order is immaterial
         self.active.values().copied().collect()
     }
 }

@@ -225,7 +225,7 @@ impl ResourceState for CpuNodeState<'_> {
     fn running_completions(&self) -> Vec<(SimTime, u64)> {
         self.mgr
             .active
-            .values()
+            .values() // arl-lint: allow(nondet-iteration): consumer heapifies
             .filter(|a| a.node == self.node)
             .map(|a| (a.expected_done, a.units))
             .collect()

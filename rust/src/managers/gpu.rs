@@ -75,11 +75,11 @@ pub struct GpuManager {
 }
 
 impl GpuManager {
-    pub fn new(n_nodes: u32, restore: RestoreModel, services: Vec<ServiceSpec>) -> Self {
+    pub fn new(n_nodes: u32, restore: RestoreModel, specs: Vec<ServiceSpec>) -> Self {
         GpuManager {
             cluster: GpuCluster::new(n_nodes),
             restore,
-            services: services.into_iter().map(|s| (s.id, s)).collect(),
+            services: specs.into_iter().map(|s| (s.id, s)).collect(),
             active: HashMap::new(),
             n_warm: 0,
             n_cold: 0,
@@ -92,6 +92,8 @@ impl GpuManager {
     }
 
     pub fn services(&self) -> impl Iterator<Item = &ServiceSpec> {
+        // arl-lint: allow(nondet-iteration): order-agnostic accessor; no
+        // decision-path consumer iterates it
         self.services.values()
     }
 
@@ -118,7 +120,7 @@ impl GpuManager {
     /// actual chunk sizes, not requested DoPs — a DoP-3 action holds 4).
     pub fn in_use_gpus(&self) -> u64 {
         self.active
-            .values()
+            .values() // arl-lint: allow(nondet-iteration): commutative sum
             .map(|a| a.lease.chunk.size() as u64)
             .sum()
     }
@@ -143,6 +145,8 @@ impl GpuManager {
     /// and backing up their states in CPU memory"). Deploy each service once
     /// at its *largest* DoP round-robin until the cluster is covered.
     pub fn prewarm(&mut self, now: SimTime) {
+        // arl-lint: allow(nondet-iteration): collected then sorted by id on
+        // the next line — deploy order is deterministic
         let mut specs: Vec<ServiceSpec> = self.services.values().cloned().collect();
         specs.sort_by_key(|s| s.id);
         'outer: loop {
@@ -254,7 +258,7 @@ impl ResourceState for GpuManager {
 
     fn running_completions(&self) -> Vec<(SimTime, u64)> {
         self.active
-            .values()
+            .values() // arl-lint: allow(nondet-iteration): consumer heapifies
             .map(|a| (a.expected_done, a.lease.dop as u64))
             .collect()
     }

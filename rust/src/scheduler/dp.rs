@@ -222,6 +222,8 @@ pub fn dp_arrange(
         // must resolve identically in every process (HashMap order is
         // per-process random), or recorded scenario traces would not
         // replay byte-identically. Sorting fixes the tie-winner.
+        // arl-lint: allow(nondet-iteration): collected then sorted on the
+        // next line — iteration order is deterministic
         let mut frontier: Vec<(usize, f64)> = dp.iter().map(|(&j, &c)| (j, c)).collect();
         frontier.sort_unstable_by_key(|&(j, _)| j);
         for (j, base) in frontier {
@@ -248,7 +250,7 @@ pub fn dp_arrange(
 
     // best terminal state (ties broken by state id — see frontier note)
     let (mut state, total) = dp
-        .iter()
+        .iter() // arl-lint: allow(nondet-iteration): min_by fully tie-broken
         .min_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(a.0.cmp(b.0)))
         .map(|(&s, &c)| (s, c))?;
 

@@ -17,7 +17,7 @@ use crate::action::{
     Action, ActionId, ActionKind, ResourceKindId, ResourceVector,
 };
 use crate::sim::{SimDur, SimTime};
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 /// Scheduler tunables.
 #[derive(Debug, Clone)]
@@ -124,12 +124,14 @@ impl ElasticScheduler {
 
     /// Algorithm 1. `queue` is the FCFS waiting queue; `resources[kind]`
     /// exposes each pool. Returns decisions for the selected actions
-    /// (everything else stays queued).
+    /// (everything else stays queued). The resource map is a `BTreeMap` so
+    /// every iteration over it is sorted by kind — scheduling decisions must
+    /// replay byte-identically and hash order is per-process random.
     pub fn schedule(
         &self,
         now: SimTime,
         queue: &[&Action],
-        resources: &HashMap<ResourceKindId, &dyn ResourceState>,
+        resources: &BTreeMap<ResourceKindId, &dyn ResourceState>,
     ) -> Vec<Decision> {
         if queue.is_empty() {
             return vec![];
@@ -139,7 +141,7 @@ impl ElasticScheduler {
         // pool by quantity, and whose per-action minimums the topologies can
         // accommodate.
         let mut cand: Vec<&Action> = Vec::new();
-        let mut budget: HashMap<ResourceKindId, u64> = resources
+        let mut budget: BTreeMap<ResourceKindId, u64> = resources
             .iter()
             .map(|(k, r)| (*k, r.available_units()))
             .collect();
@@ -188,7 +190,7 @@ impl ElasticScheduler {
         // their minimums on *other* kinds stay fixed (the single-key-resource
         // assumption of §4.1 decouples the groups).
         let mut selected: Vec<Decision> = Vec::new();
-        let mut grouped: HashMap<ResourceKindId, Vec<&Action>> = HashMap::new();
+        let mut grouped: BTreeMap<ResourceKindId, Vec<&Action>> = BTreeMap::new();
         for a in &cand {
             match a.spec.key_resource {
                 Some(k) if resources.contains_key(&k) => {
@@ -198,8 +200,8 @@ impl ElasticScheduler {
             }
         }
 
-        let mut kinds: Vec<ResourceKindId> = grouped.keys().copied().collect();
-        kinds.sort(); // deterministic iteration
+        // BTreeMap keys are already sorted — deterministic group order
+        let kinds: Vec<ResourceKindId> = grouped.keys().copied().collect();
         for kind in kinds {
             let group = &grouped[&kind];
             let res = resources[&kind];
@@ -467,7 +469,7 @@ mod tests {
         pool: &Pool,
         kind: ResourceKindId,
     ) -> Vec<Decision> {
-        let mut map: HashMap<ResourceKindId, &dyn ResourceState> = HashMap::new();
+        let mut map: BTreeMap<ResourceKindId, &dyn ResourceState> = BTreeMap::new();
         map.insert(kind, pool);
         sched.schedule(SimTime::ZERO, queue, &map)
     }

@@ -9,6 +9,7 @@ pub mod error;
 pub mod json;
 pub mod logging;
 pub mod rng;
+pub mod stopwatch;
 
 /// Simple descriptive statistics over a slice (used everywhere in metrics).
 pub fn mean(xs: &[f64]) -> f64 {

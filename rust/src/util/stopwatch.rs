@@ -1,0 +1,48 @@
+//! Wall-clock stopwatch — the single allowlisted real-time site.
+//!
+//! Everything the simulation decides runs on virtual [`crate::sim::SimTime`];
+//! wall time exists only to report how long the simulator itself took
+//! (scheduler hot-path counters, `run`/`scenario` wall lines, the bench
+//! harness). Those eight timing blocks used to each call
+//! `std::time::Instant::now()` directly; they now share this helper so the
+//! determinism lint (`arl-tangram lint`, rule `wall-clock`) can allowlist
+//! exactly one file. Wall time must never feed scheduling decisions or
+//! serialized state — golden traces are virtual-time only.
+
+use std::time::{Duration, Instant};
+
+/// Started timer over the monotonic wall clock.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch {
+    t0: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Stopwatch {
+        Stopwatch { t0: Instant::now() }
+    }
+
+    /// Wall time elapsed since [`Stopwatch::start`].
+    pub fn elapsed(&self) -> Duration {
+        self.t0.elapsed()
+    }
+
+    /// Elapsed wall seconds (the common report unit).
+    pub fn secs(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elapsed_is_monotonic() {
+        let sw = Stopwatch::start();
+        let a = sw.elapsed();
+        let b = sw.elapsed();
+        assert!(b >= a);
+        assert!(sw.secs() >= 0.0);
+    }
+}

@@ -1,0 +1,361 @@
+//! Determinism-lint rule fixtures: for each of the six rules, a source
+//! fragment that must FIRE, one that must PASS, and one where an
+//! `arl-lint: allow` suppresses the finding. Each firing fixture fails if
+//! its rule were disabled, so the battery pins the rule set itself. The
+//! final test self-lints `src/` against the committed `lint_baseline.json`
+//! — the same check CI runs via `arl-tangram lint`.
+
+use arl_tangram::analysis::{lint_source, lint_tree, Baseline, LintConfig, RuleId};
+use std::path::Path;
+
+/// Lint a fragment as if it lived in a decision-path module.
+fn lint_decision(src: &str) -> Vec<RuleId> {
+    lint_source("src/lanes/fixture.rs", src, &LintConfig::default())
+        .into_iter()
+        .map(|f| f.rule)
+        .collect()
+}
+
+/// Lint a fragment as if it lived outside the decision paths.
+fn lint_plain(src: &str) -> Vec<RuleId> {
+    lint_source("src/metrics/fixture.rs", src, &LintConfig::default())
+        .into_iter()
+        .map(|f| f.rule)
+        .collect()
+}
+
+fn fires(rules: &[RuleId], rule: RuleId) -> bool {
+    rules.contains(&rule)
+}
+
+// ---------------------------------------------------------------------------
+// nondet-iteration
+// ---------------------------------------------------------------------------
+
+#[test]
+fn nondet_iteration_fires_on_hash_iteration_in_decision_path() {
+    let src = "
+        fn pump(m: &HashMap<u32, u64>) -> u64 {
+            let mut acc = 0;
+            for (k, v) in m.iter() {
+                acc += k as u64 + v;
+            }
+            acc
+        }
+    ";
+    assert!(fires(&lint_decision(src), RuleId::NondetIteration));
+}
+
+#[test]
+fn nondet_iteration_fires_on_shared_hash_field() {
+    // `queues` is a configured shared hash field — flagged even without a
+    // local declaration in this file.
+    let src = "
+        fn pump(&mut self) {
+            for q in self.lane.queues.values_mut() {
+                q.touch();
+            }
+        }
+    ";
+    assert!(fires(&lint_decision(src), RuleId::NondetIteration));
+}
+
+#[test]
+fn nondet_iteration_passes_on_btreemap_and_outside_decision_paths() {
+    // BTreeMap iteration is deterministic — never flagged.
+    let src = "
+        fn pump(m: &BTreeMap<u32, u64>) -> u64 {
+            m.values().sum()
+        }
+    ";
+    assert!(!fires(&lint_decision(src), RuleId::NondetIteration));
+    // HashMap iteration outside a decision path is out of scope.
+    let src = "
+        fn tally(m: &HashMap<u32, u64>) -> u64 {
+            m.values().sum()
+        }
+    ";
+    assert!(!fires(&lint_plain(src), RuleId::NondetIteration));
+}
+
+#[test]
+fn nondet_iteration_is_scoped_per_function() {
+    // `dp` is a HashMap in one fn and a Vec in another: only the HashMap
+    // fn's iteration fires.
+    let src = "
+        fn sparse() {
+            let mut dp: HashMap<usize, f64> = HashMap::new();
+            for (k, v) in dp.iter() { let _ = (k, v); }
+        }
+        fn dense() {
+            let mut dp = vec![0.0; 8];
+            for v in dp.iter() { let _ = v; }
+        }
+    ";
+    let findings = lint_source("src/lanes/fixture.rs", src, &LintConfig::default());
+    let hits: Vec<_> =
+        findings.iter().filter(|f| f.rule == RuleId::NondetIteration).collect();
+    assert_eq!(hits.len(), 1);
+    assert_eq!(hits[0].line, 4);
+}
+
+#[test]
+fn nondet_iteration_allow_suppresses() {
+    let src = "
+        fn pump(m: &HashMap<u32, u64>) -> u64 {
+            // arl-lint: allow(nondet-iteration): commutative sum
+            m.values().sum()
+        }
+    ";
+    assert!(!fires(&lint_decision(src), RuleId::NondetIteration));
+}
+
+#[test]
+fn allow_without_reason_grants_nothing() {
+    let src = "
+        fn pump(m: &HashMap<u32, u64>) -> u64 {
+            // arl-lint: allow(nondet-iteration):
+            m.values().sum()
+        }
+    ";
+    assert!(fires(&lint_decision(src), RuleId::NondetIteration));
+}
+
+// ---------------------------------------------------------------------------
+// wall-clock
+// ---------------------------------------------------------------------------
+
+#[test]
+fn wall_clock_fires_everywhere_but_the_allowlist() {
+    let src = "
+        fn slow() {
+            let t0 = std::time::Instant::now();
+            work();
+            report(t0.elapsed());
+        }
+    ";
+    assert!(fires(&lint_plain(src), RuleId::WallClock));
+    assert!(fires(&lint_decision(src), RuleId::WallClock));
+    // the one allowlisted file may hold the Instant
+    let allowed = lint_source("src/util/stopwatch.rs", src, &LintConfig::default());
+    assert!(!allowed.iter().any(|f| f.rule == RuleId::WallClock));
+}
+
+#[test]
+fn wall_clock_fires_on_system_time_import() {
+    let src = "use std::time::SystemTime;";
+    assert!(fires(&lint_plain(src), RuleId::WallClock));
+}
+
+#[test]
+fn wall_clock_passes_on_sim_time_and_comments() {
+    let src = "
+        // Instant::now() would be wrong here; SimTime is virtual.
+        fn decide(now: SimTime) -> SimTime {
+            now + SimDur::from_secs(1)
+        }
+    ";
+    assert!(!fires(&lint_plain(src), RuleId::WallClock));
+}
+
+#[test]
+fn wall_clock_allow_suppresses() {
+    let src = "
+        fn slow() {
+            // arl-lint: allow(wall-clock): latency probe, never serialized
+            let t0 = std::time::Instant::now();
+            report(t0.elapsed());
+        }
+    ";
+    assert!(!fires(&lint_plain(src), RuleId::WallClock));
+}
+
+// ---------------------------------------------------------------------------
+// ambient-rng
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ambient_rng_fires_on_entropy_taps() {
+    assert!(fires(&lint_plain("fn f() { let mut r = thread_rng(); }"), RuleId::AmbientRng));
+    assert!(fires(&lint_plain("fn f() { let r = StdRng::from_entropy(); }"), RuleId::AmbientRng));
+    assert!(fires(&lint_plain("fn f() { let x = rand::random::<u64>(); }"), RuleId::AmbientRng));
+}
+
+#[test]
+fn ambient_rng_passes_on_seeded_splitmix() {
+    let src = "
+        fn f(seed: u64) -> u64 {
+            let mut rng = SplitMix64::new(seed);
+            rng.next_u64()
+        }
+    ";
+    assert!(!fires(&lint_plain(src), RuleId::AmbientRng));
+}
+
+#[test]
+fn ambient_rng_allow_suppresses() {
+    let src = "
+        fn f() {
+            // arl-lint: allow(ambient-rng): port-collision jitter, not a decision
+            let r = OsRng.next_u64();
+        }
+    ";
+    assert!(!fires(&lint_plain(src), RuleId::AmbientRng));
+}
+
+// ---------------------------------------------------------------------------
+// raw-factor
+// ---------------------------------------------------------------------------
+
+#[test]
+fn raw_factor_fires_on_unquantized_arithmetic() {
+    let src = "
+        fn resize(&mut self, factor: f64) {
+            self.units = (self.units as f64 * factor) as u64;
+        }
+    ";
+    assert!(fires(&lint_decision(src), RuleId::RawFactor));
+}
+
+#[test]
+fn raw_factor_passes_through_quantize() {
+    let src = "
+        fn resize(&mut self, factor: f64) {
+            let factor = self.auto.quantize(factor * self.fault);
+            self.apply(factor);
+        }
+    ";
+    assert!(!fires(&lint_decision(src), RuleId::RawFactor));
+}
+
+#[test]
+fn raw_factor_ignores_non_decision_paths() {
+    let src = "
+        fn plot(factor: f64) -> f64 {
+            factor * 100.0
+        }
+    ";
+    assert!(!fires(&lint_plain(src), RuleId::RawFactor));
+}
+
+#[test]
+fn raw_factor_allow_suppresses() {
+    let src = "
+        fn bill(&self, factor: f64) -> f64 {
+            // arl-lint: allow(raw-factor): billing display only, no decision
+            factor * self.rate
+        }
+    ";
+    assert!(!fires(&lint_decision(src), RuleId::RawFactor));
+}
+
+// ---------------------------------------------------------------------------
+// panic-budget
+// ---------------------------------------------------------------------------
+
+#[test]
+fn panic_budget_counts_unwrap_and_expect() {
+    let src = "
+        fn f(x: Option<u32>, y: Option<u32>) -> u32 {
+            let a = x.unwrap();
+            a + y.expect(\"known present\")
+        }
+    ";
+    let findings = lint_source("src/metrics/fixture.rs", src, &LintConfig::default());
+    assert_eq!(findings.iter().filter(|f| f.rule == RuleId::PanicBudget).count(), 2);
+}
+
+#[test]
+fn panic_budget_ignores_tests_and_non_calls() {
+    let src = "
+        #[cfg(test)]
+        mod tests {
+            #[test]
+            fn t() { assert_eq!(parse(\"1\").unwrap(), 1); }
+        }
+        fn unwrap_like() -> u32 { 1 } // ident named unwrap is not a call
+    ";
+    assert!(!fires(&lint_plain(src), RuleId::PanicBudget));
+}
+
+#[test]
+fn panic_budget_allow_suppresses() {
+    let src = "
+        fn f(x: Option<u32>) -> u32 {
+            // arl-lint: allow(panic-budget): invariant: caller checked is_some
+            x.unwrap()
+        }
+    ";
+    assert!(!fires(&lint_plain(src), RuleId::PanicBudget));
+}
+
+// ---------------------------------------------------------------------------
+// golden-surface
+// ---------------------------------------------------------------------------
+
+#[test]
+fn golden_surface_fires_on_ledger_in_serializers() {
+    let src = "
+        impl Metrics {
+            pub fn to_json(&self) -> Json {
+                Json::num(self.ledger.len() as f64)
+            }
+        }
+    ";
+    assert!(fires(&lint_plain(src), RuleId::GoldenSurface));
+    let src = "
+        pub fn summary_json(m: &Metrics) -> Json {
+            serialize(&m.ledger)
+        }
+    ";
+    assert!(fires(&lint_plain(src), RuleId::GoldenSurface));
+}
+
+#[test]
+fn golden_surface_passes_outside_serializers() {
+    let src = "
+        pub fn audit(&self) -> usize {
+            self.ledger.len()
+        }
+    ";
+    assert!(!fires(&lint_plain(src), RuleId::GoldenSurface));
+}
+
+#[test]
+fn golden_surface_allow_suppresses() {
+    let src = "
+        pub fn to_json(&self) -> Json {
+            // arl-lint: allow(golden-surface): debug dump, not a golden file
+            Json::num(self.ledger.len() as f64)
+        }
+    ";
+    assert!(!fires(&lint_plain(src), RuleId::GoldenSurface));
+}
+
+// ---------------------------------------------------------------------------
+// self-lint: the tree must match the committed baseline
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tree_matches_committed_baseline() {
+    let findings = lint_tree(Path::new("src"), &LintConfig::default()).expect("lint src/");
+    let baseline = Baseline::load(Path::new("lint_baseline.json")).expect("load baseline");
+    let cmp = baseline.compare(&findings);
+    assert!(
+        cmp.ok(),
+        "lint drift against lint_baseline.json\nviolations: {:#?}\nstale: {:#?}",
+        cmp.violations,
+        cmp.stale
+    );
+}
+
+#[test]
+fn tree_has_no_findings_outside_the_panic_budget() {
+    // The other five rules are clean by construction (annotations carry
+    // the justified exceptions); only the unwrap/expect ratchet has
+    // accepted findings.
+    let findings = lint_tree(Path::new("src"), &LintConfig::default()).expect("lint src/");
+    let hard: Vec<_> =
+        findings.iter().filter(|f| f.rule != RuleId::PanicBudget).collect();
+    assert!(hard.is_empty(), "non-ratchet findings: {hard:#?}");
+}

@@ -32,7 +32,6 @@ use arl_tangram::sim::{Engine, SimDur, SimTime};
 use arl_tangram::testkit::{check, default_cases, Gen};
 use arl_tangram::util::rng::Rng;
 use std::collections::BTreeMap;
-use std::collections::HashMap;
 
 // ---------------------------------------------------------------------------
 // DPArrange vs brute force
@@ -548,7 +547,7 @@ fn prop_scheduler_never_overallocates() {
             .collect();
         let refs: Vec<&Action> = actions.iter().collect();
         let pool = FlatPool(inst.units);
-        let mut map: HashMap<ResourceKindId, &dyn ResourceState> = HashMap::new();
+        let mut map: BTreeMap<ResourceKindId, &dyn ResourceState> = BTreeMap::new();
         map.insert(cpu, &pool);
         let sched = ElasticScheduler::new(SchedulerConfig::default());
         let decisions = sched.schedule(SimTime::ZERO, &refs, &map);
