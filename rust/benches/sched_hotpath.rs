@@ -7,7 +7,7 @@
 
 use arl_tangram::action::{
     Action, ActionId, ActionKind, ActionSpec, CostSpec, DimCost, ElasticityModel,
-    ResourceClass, ResourceKindId, ResourceRegistry, ServiceId, TaskId, TrajId,
+    ResourceClass, ResourceKindId, ResourceRegistry, ServiceId, TaskId, TenantId, TrajId,
 };
 use arl_tangram::bench::{time_it, timing_header};
 use arl_tangram::scheduler::{
@@ -62,6 +62,7 @@ fn mk_queue(reg: &ResourceRegistry, kind: ResourceKindId, n: usize, scalable: bo
                 ActionId(i as u64),
                 ActionSpec {
                     task: TaskId(0),
+                    tenant: TenantId(0),
                     trajectory: TrajId(i as u64),
                     kind: ActionKind::RewardCpu,
                     cost,

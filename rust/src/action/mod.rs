@@ -129,6 +129,11 @@ impl ActionKind {
 /// Identifiers threading actions back to their RL context.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct TaskId(pub u32);
+/// The RL job (tenant) an action belongs to. Single-job scenarios use
+/// tenant 0 everywhere; multi-tenant specs share the same elastic pools
+/// under weighted-fair queueing (ROADMAP item 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub struct TenantId(pub u32);
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct TrajId(pub u64);
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -143,6 +148,8 @@ pub struct ServiceId(pub u32);
 #[derive(Debug, Clone)]
 pub struct ActionSpec {
     pub task: TaskId,
+    /// The RL job this action belongs to (0 for single-tenant scenarios).
+    pub tenant: TenantId,
     pub trajectory: TrajId,
     pub kind: ActionKind,
     /// Vectorized resource cost `C_i`: one [`DimCost`] per registered kind.
@@ -278,6 +285,7 @@ mod tests {
         let cpu = r.by_name("cpu").unwrap();
         let spec = ActionSpec {
             task: TaskId(0),
+            tenant: TenantId(0),
             trajectory: TrajId(0),
             kind: ActionKind::RewardCpu,
             cost: CostSpec::single(&r, cpu, DimCost::Range { min: 1, max: 8 }),
@@ -303,6 +311,7 @@ mod tests {
         let cpu = r.by_name("cpu").unwrap();
         let spec = ActionSpec {
             task: TaskId(0),
+            tenant: TenantId(0),
             trajectory: TrajId(0),
             kind: ActionKind::EnvExec,
             cost: CostSpec::single(&r, cpu, DimCost::Fixed(1)),

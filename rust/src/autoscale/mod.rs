@@ -22,7 +22,8 @@
 //!
 //! # Scale targets
 //!
-//! A *target* is `(PoolClass, Option<endpoint>)`: the CPU and GPU pools are
+//! A *target* is a [`LaneKey`] (`class` + optional `endpoint`): the CPU and
+//! GPU pools are
 //! single-target classes (`endpoint == None`), while the API class reports
 //! one [`PoolPressure`] row **per provider endpoint** (sorted by endpoint
 //! id) so each provider's quota lanes resize independently — a flapping
@@ -82,13 +83,35 @@ impl PoolClass {
     }
 }
 
+/// The deterministic identity of one scale target: a pool class plus the
+/// optional sub-pool endpoint inside it. The derived `Ord` matches the old
+/// `(PoolClass, Option<u32>)` tuple order exactly (`None < Some`), so every
+/// sorted-iteration contract keyed by lane survives the type unchanged.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct LaneKey {
+    pub class: PoolClass,
+    /// `None` for the single-target CPU and GPU pools, `Some(endpoint kind
+    /// id)` for per-endpoint API rows.
+    pub endpoint: Option<u32>,
+}
+
+impl LaneKey {
+    /// The whole-class target (CPU, GPU, or a class-wide API resize).
+    pub fn class_wide(class: PoolClass) -> LaneKey {
+        LaneKey { class, endpoint: None }
+    }
+
+    /// A per-endpoint sub-pool target.
+    pub fn endpoint(class: PoolClass, endpoint: u32) -> LaneKey {
+        LaneKey { class, endpoint: Some(endpoint) }
+    }
+}
+
 /// A live demand observation for one scale target (`Backend::scale_classes`).
 #[derive(Debug, Clone)]
 pub struct PoolPressure {
-    pub class: PoolClass,
-    /// Sub-pool identity inside the class: `None` for the single-target CPU
-    /// and GPU pools, `Some(endpoint kind id)` for per-endpoint API rows.
-    pub endpoint: Option<u32>,
+    /// The scale target this observation belongs to.
+    pub key: LaneKey,
     /// Actions waiting in this target's queues.
     pub queued: u64,
     /// Minimum units the queued actions demand (so unit-denominated
@@ -104,8 +127,8 @@ pub struct PoolPressure {
 
 impl PoolPressure {
     /// The deterministic target key this observation scales.
-    pub fn key(&self) -> (PoolClass, Option<u32>) {
-        (self.class, self.endpoint)
+    pub fn key(&self) -> LaneKey {
+        self.key
     }
 }
 
@@ -312,9 +335,9 @@ pub enum ScaleCmd {
     /// Scale-up decided: capacity is billed from now but only becomes
     /// schedulable once the cold-start penalty elapses — the matching
     /// [`ScaleCmd::Apply`] fires at the first evaluation past the warm-up.
-    Decide { class: PoolClass, endpoint: Option<u32>, factor: f64, pool_units: u64 },
+    Decide { key: LaneKey, factor: f64, pool_units: u64 },
     /// Resize the substrate now (`Backend::resize`).
-    Apply { class: PoolClass, endpoint: Option<u32>, factor: f64 },
+    Apply { key: LaneKey, factor: f64 },
 }
 
 #[derive(Debug)]
@@ -345,11 +368,11 @@ impl TargetState {
 const EPS: f64 = 1e-9;
 
 /// Policy wrapper owning the hysteresis / cold-start state machine, keyed
-/// by scale target (`(PoolClass, Option<endpoint>)`).
+/// by scale target ([`LaneKey`]).
 pub struct Autoscaler {
     cfg: AutoscaleCfg,
     policy: Box<dyn ScalePolicy>,
-    targets: BTreeMap<(PoolClass, Option<u32>), TargetState>,
+    targets: BTreeMap<LaneKey, TargetState>,
     /// Applied resizes (test/reporting aid).
     pub applied: u64,
 }
@@ -387,13 +410,13 @@ impl Autoscaler {
     /// billed totals; only the apply instants move earlier.
     pub fn mature(&mut self, now: SimTime) -> Vec<ScaleCmd> {
         let mut cmds = Vec::new();
-        for (&(class, endpoint), st) in self.targets.iter_mut() {
+        for (&key, st) in self.targets.iter_mut() {
             if let Some((ready, f)) = st.pending {
                 if now >= ready {
                     st.pending = None;
                     st.factor = f;
                     self.applied += 1;
-                    cmds.push(ScaleCmd::Apply { class, endpoint, factor: f });
+                    cmds.push(ScaleCmd::Apply { key, factor: f });
                 }
             }
         }
@@ -407,12 +430,12 @@ impl Autoscaler {
     /// Factor currently applied in the substrate for a single-target class
     /// (1.0 before any resize).
     pub fn applied_factor(&self, class: PoolClass) -> f64 {
-        self.applied_factor_of(class, None)
+        self.applied_factor_of(LaneKey::class_wide(class))
     }
 
     /// Factor currently applied for one target (1.0 before any resize).
-    pub fn applied_factor_of(&self, class: PoolClass, endpoint: Option<u32>) -> f64 {
-        self.targets.get(&(class, endpoint)).map_or(1.0, |s| s.factor)
+    pub fn applied_factor_of(&self, key: LaneKey) -> f64 {
+        self.targets.get(&key).map_or(1.0, |s| s.factor)
     }
 
     /// Pool-total billed units of a class: per-target `baseline × effective
@@ -423,7 +446,7 @@ impl Autoscaler {
         let sum: u64 = self
             .targets
             .iter()
-            .filter(|((c, _), _)| *c == class)
+            .filter(|(k, _)| k.class == class)
             .map(|(_, st)| (st.baseline as f64 * st.effective()).round() as u64)
             .sum();
         sum.max(1)
@@ -449,7 +472,7 @@ impl Autoscaler {
         let mut cmds = Vec::new();
         for o in obs {
             let desired = Self::quantize(self.policy.desired(now, o, &self.cfg), &self.cfg);
-            let warm = self.cfg.warmup(o.class);
+            let warm = self.cfg.warmup(o.key.class);
             let mut matured: Option<f64> = None;
             let mut apply: Option<f64> = None;
             let mut decide: Option<f64> = None;
@@ -493,20 +516,15 @@ impl Autoscaler {
             }
             if let Some(f) = matured {
                 self.applied += 1;
-                cmds.push(ScaleCmd::Apply { class: o.class, endpoint: o.endpoint, factor: f });
+                cmds.push(ScaleCmd::Apply { key: o.key, factor: f });
             }
             if let Some(f) = apply {
                 self.applied += 1;
-                cmds.push(ScaleCmd::Apply { class: o.class, endpoint: o.endpoint, factor: f });
+                cmds.push(ScaleCmd::Apply { key: o.key, factor: f });
             }
             if let Some(f) = decide {
-                let pool_units = self.billed_units(o.class);
-                cmds.push(ScaleCmd::Decide {
-                    class: o.class,
-                    endpoint: o.endpoint,
-                    factor: f,
-                    pool_units,
-                });
+                let pool_units = self.billed_units(o.key.class);
+                cmds.push(ScaleCmd::Decide { key: o.key, factor: f, pool_units });
             }
         }
         cmds
@@ -529,8 +547,7 @@ mod tests {
         base: u64,
     ) -> PoolPressure {
         PoolPressure {
-            class,
-            endpoint,
+            key: LaneKey { class, endpoint },
             queued,
             queued_units: queued,
             in_use_units: in_use,
@@ -590,7 +607,7 @@ mod tests {
         let cmds = a.eval(t(10), &idle);
         assert_eq!(
             cmds,
-            vec![ScaleCmd::Apply { class: PoolClass::Cpu, endpoint: None, factor: 0.25 }],
+            vec![ScaleCmd::Apply { key: LaneKey::class_wide(PoolClass::Cpu), factor: 0.25 }],
             "sustained idle must scale down to the floor"
         );
         assert_eq!(a.applied_factor(PoolClass::Cpu), 0.25);
@@ -612,8 +629,7 @@ mod tests {
         assert_eq!(
             cmds,
             vec![ScaleCmd::Decide {
-                class: PoolClass::Cpu,
-                endpoint: None,
+                key: LaneKey::class_wide(PoolClass::Cpu),
                 factor: 1.0,
                 pool_units: 128
             }]
@@ -624,7 +640,7 @@ mod tests {
         let cmds = a.eval(t(18), &busy);
         assert_eq!(
             cmds,
-            vec![ScaleCmd::Apply { class: PoolClass::Cpu, endpoint: None, factor: 1.0 }]
+            vec![ScaleCmd::Apply { key: LaneKey::class_wide(PoolClass::Cpu), factor: 1.0 }]
         );
         assert_eq!(a.applied_factor(PoolClass::Cpu), 1.0);
     }
@@ -645,8 +661,7 @@ mod tests {
         assert_eq!(
             cmds,
             vec![ScaleCmd::Decide {
-                class: PoolClass::Gpu,
-                endpoint: None,
+                key: LaneKey::class_wide(PoolClass::Gpu),
                 factor: 1.0,
                 pool_units: 24
             }]
@@ -656,7 +671,7 @@ mod tests {
         let cmds = a.eval(t(20), &busy);
         assert_eq!(
             cmds,
-            vec![ScaleCmd::Apply { class: PoolClass::Gpu, endpoint: None, factor: 1.0 }]
+            vec![ScaleCmd::Apply { key: LaneKey::class_wide(PoolClass::Gpu), factor: 1.0 }]
         );
     }
 
@@ -691,7 +706,7 @@ mod tests {
         let cmds = a.eval(t(10), &all);
         assert_eq!(
             cmds,
-            vec![ScaleCmd::Apply { class: PoolClass::Api, endpoint: None, factor: 0.25 }]
+            vec![ScaleCmd::Apply { key: LaneKey::class_wide(PoolClass::Api), factor: 0.25 }]
         );
         assert_eq!(a.applied_factor(PoolClass::Cpu), 1.0);
         assert_eq!(a.applied_factor(PoolClass::Gpu), 1.0);
@@ -713,10 +728,10 @@ mod tests {
         let cmds = a.eval(t(10), &rows);
         assert_eq!(
             cmds,
-            vec![ScaleCmd::Apply { class: PoolClass::Api, endpoint: Some(3), factor: 0.25 }]
+            vec![ScaleCmd::Apply { key: LaneKey::endpoint(PoolClass::Api, 3), factor: 0.25 }]
         );
-        assert_eq!(a.applied_factor_of(PoolClass::Api, Some(2)), 1.0);
-        assert_eq!(a.applied_factor_of(PoolClass::Api, Some(3)), 0.25);
+        assert_eq!(a.applied_factor_of(LaneKey::endpoint(PoolClass::Api, 2)), 1.0);
+        assert_eq!(a.applied_factor_of(LaneKey::endpoint(PoolClass::Api, 3)), 0.25);
     }
 
     #[test]
@@ -732,7 +747,7 @@ mod tests {
         for s in [0u64, 2, 4, 6, 8, 10] {
             let _ = a.eval(t(s), &idle0);
         }
-        assert_eq!(a.applied_factor_of(PoolClass::Api, Some(0)), 0.25);
+        assert_eq!(a.applied_factor_of(LaneKey::endpoint(PoolClass::Api, 0)), 0.25);
         assert_eq!(a.billed_units(PoolClass::Api), 25 + 100);
         let burst = [
             obs_ep(PoolClass::Api, Some(0), 6, 10, 100),
@@ -742,8 +757,7 @@ mod tests {
         assert_eq!(
             cmds,
             vec![ScaleCmd::Decide {
-                class: PoolClass::Api,
-                endpoint: Some(0),
+                key: LaneKey::endpoint(PoolClass::Api, 0),
                 factor: 1.0,
                 pool_units: 200
             }],
@@ -787,7 +801,7 @@ mod tests {
         let cmds = a.mature(t(17));
         assert_eq!(
             cmds,
-            vec![ScaleCmd::Apply { class: PoolClass::Cpu, endpoint: None, factor: 1.0 }]
+            vec![ScaleCmd::Apply { key: LaneKey::class_wide(PoolClass::Cpu), factor: 1.0 }]
         );
         assert_eq!(a.applied_factor(PoolClass::Cpu), 1.0);
         assert_eq!(a.next_pending_ready(), None);
@@ -826,7 +840,7 @@ mod tests {
         let cmds = a.mature(t(14));
         assert_eq!(
             cmds,
-            vec![ScaleCmd::Apply { class: PoolClass::Api, endpoint: Some(0), factor: 1.0 }]
+            vec![ScaleCmd::Apply { key: LaneKey::endpoint(PoolClass::Api, 0), factor: 1.0 }]
         );
         // endpoint 0's apply never un-bills endpoint 1's warming requisition
         assert_eq!(a.billed_units(PoolClass::Api), 200);
@@ -849,9 +863,9 @@ mod tests {
         let cmds = a.eval(t(25), &idle);
         assert_eq!(cmds.len(), 1, "hold elapsed from the post-burst reset");
         match &cmds[0] {
-            ScaleCmd::Apply { class, endpoint, factor } => {
-                assert_eq!(*class, PoolClass::Cpu);
-                assert_eq!(*endpoint, None);
+            ScaleCmd::Apply { key, factor } => {
+                assert_eq!(key.class, PoolClass::Cpu);
+                assert_eq!(key.endpoint, None);
                 assert!(*factor < 1.0, "stepped decay must be moving down, got {factor}");
             }
             other => panic!("expected a scale-down Apply, got {other:?}"),

@@ -4,11 +4,10 @@
 //! *desired* capacity factor in `[0, 1]`; the [`super::Autoscaler`] wrapper
 //! owns everything temporal (quantization, cold-start warm-ups, scale-down
 //! hysteresis), so policies stay pure demand models and remain trivially
-//! deterministic. Targets are `(PoolClass, Option<endpoint>)` — the API
-//! class feeds one observation per provider endpoint, and each keeps its
-//! own demand memory.
+//! deterministic. Targets are [`LaneKey`]s — the API class feeds one
+//! observation per provider endpoint, and each keeps its own demand memory.
 
-use super::{AutoscaleCfg, PoolClass, PoolPressure};
+use super::{AutoscaleCfg, LaneKey, PoolPressure};
 use crate::sim::SimTime;
 use std::collections::BTreeMap;
 
@@ -30,7 +29,7 @@ pub trait ScalePolicy {
 /// idle (inter-step training gaps, run tails) steps the pool down.
 #[derive(Debug, Default)]
 pub struct QueuePressure {
-    peak: BTreeMap<(PoolClass, Option<u32>), f64>,
+    peak: BTreeMap<LaneKey, f64>,
 }
 
 impl ScalePolicy for QueuePressure {
@@ -60,7 +59,7 @@ impl ScalePolicy for QueuePressure {
 /// noise — the right trade for steady high-duty workloads.
 #[derive(Debug, Default)]
 pub struct EwmaForecast {
-    demand: BTreeMap<(PoolClass, Option<u32>), f64>,
+    demand: BTreeMap<LaneKey, f64>,
 }
 
 impl ScalePolicy for EwmaForecast {
@@ -80,11 +79,11 @@ impl ScalePolicy for EwmaForecast {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::autoscale::PoolClass;
 
     fn obs(queued: u64, in_use: u64, base: u64) -> PoolPressure {
         PoolPressure {
-            class: PoolClass::Cpu,
-            endpoint: None,
+            key: LaneKey::class_wide(PoolClass::Cpu),
             queued,
             queued_units: queued,
             in_use_units: in_use,
@@ -129,11 +128,9 @@ mod tests {
         let cfg = AutoscaleCfg::default();
         let mut p = QueuePressure::default();
         let mut hot = obs(0, 100, 128);
-        hot.class = PoolClass::Api;
-        hot.endpoint = Some(0);
+        hot.key = LaneKey::endpoint(PoolClass::Api, 0);
         let mut cold = obs(0, 0, 128);
-        cold.class = PoolClass::Api;
-        cold.endpoint = Some(1);
+        cold.key = LaneKey::endpoint(PoolClass::Api, 1);
         let d_hot = p.desired(SimTime::ZERO, &hot, &cfg);
         let d_cold = p.desired(SimTime::ZERO, &cold, &cfg);
         assert!(d_hot > 0.9, "hot endpoint near full, got {d_hot}");

@@ -108,7 +108,7 @@ mod tests {
     use super::*;
     use crate::action::{
         ActionKind, ActionSpec, CostSpec, DimCost, ElasticityModel, ResourceClass,
-        ResourceRegistry, TaskId, TrajId,
+        ResourceRegistry, TaskId, TenantId, TrajId,
     };
     use crate::cluster::api::ApiEndpointSpec;
 
@@ -131,6 +131,7 @@ mod tests {
             ActionId(id),
             ActionSpec {
                 task: TaskId(0),
+                tenant: TenantId(0),
                 trajectory: TrajId(id),
                 kind: ActionKind::ApiCall,
                 cost: CostSpec::single(reg, k, DimCost::Fixed(1)),

@@ -231,7 +231,7 @@ mod tests {
     use super::*;
     use crate::action::{
         ActionKind, ActionSpec, CostSpec, DimCost, ElasticityModel, ResourceClass,
-        ResourceRegistry, TaskId,
+        ResourceRegistry, TaskId, TenantId,
     };
 
     fn action(reg: &ResourceRegistry, id: u64, traj: u64, max: u64) -> Action {
@@ -240,6 +240,7 @@ mod tests {
             ActionId(id),
             ActionSpec {
                 task: TaskId(0),
+                tenant: TenantId(0),
                 trajectory: TrajId(traj),
                 kind: ActionKind::RewardCpu,
                 cost: CostSpec::single(reg, cpu, DimCost::Range { min: 1, max }),

@@ -152,7 +152,7 @@ mod tests {
     use super::*;
     use crate::action::{
         ActionKind, ActionSpec, CostSpec, DimCost, ElasticityModel, ResourceClass,
-        ResourceRegistry, ServiceId, TaskId, TrajId,
+        ResourceRegistry, ServiceId, TaskId, TenantId, TrajId,
     };
 
     fn mk_action(reg: &ResourceRegistry, id: u64, svc: u32, at: SimTime) -> Action {
@@ -161,6 +161,7 @@ mod tests {
             ActionId(id),
             ActionSpec {
                 task: TaskId(0),
+                tenant: TenantId(0),
                 trajectory: TrajId(id),
                 kind: ActionKind::RewardModel,
                 cost: CostSpec::single(reg, gpu, DimCost::Discrete(vec![4])),

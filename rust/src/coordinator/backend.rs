@@ -44,7 +44,7 @@
 //! is what lets the driver reclaim exclusive ownership for bookkeeping.
 
 use crate::action::{Action, ActionId, TrajId};
-use crate::autoscale::{PoolClass, PoolPressure};
+use crate::autoscale::{LaneKey, PoolPressure};
 use crate::scenario::ScenarioEvent;
 use crate::sim::{SimDur, SimTime};
 use std::rc::Rc;
@@ -136,8 +136,8 @@ pub trait Backend {
     }
 
     /// Live demand observations for every scale target this backend can
-    /// elastically resize, sorted by `(PoolClass, endpoint)` (the
-    /// autoscaler's deterministic evaluation order). The CPU and GPU pools
+    /// elastically resize, sorted by [`LaneKey`] (the autoscaler's
+    /// deterministic evaluation order). The CPU and GPU pools
     /// are single-target classes (`endpoint == None`); the API class
     /// reports one row **per provider endpoint** (sorted by endpoint kind
     /// id) so quota lanes resize per provider. The default — no resizable
@@ -150,21 +150,23 @@ pub trait Backend {
     /// Elastically resize one scale target to `factor` × its full static
     /// provision, returning the provisioned unit count the **whole class**
     /// actually reached (resizes are best-effort: busy capacity is never
-    /// preempted). `endpoint` narrows an API-class resize to one provider
-    /// (`None` on single-target classes, or to sweep every endpoint).
-    /// Implementations reuse the same substrate machinery as the
+    /// preempted). `key.endpoint` narrows an API-class resize to one
+    /// provider (`None` on single-target classes, or to sweep every
+    /// endpoint). Implementations reuse the same substrate machinery as the
     /// `cpu_pool_scale` / `gpu_pool_scale` / `api_limit_scale` fault
     /// injections — including dirtying the affected pools, so the pump
     /// that follows reschedules them. `None` means the substrate cannot
     /// resize this class (the deliberately-inelastic default).
-    fn resize(
-        &mut self,
-        now: SimTime,
-        class: PoolClass,
-        endpoint: Option<u32>,
-        factor: f64,
-    ) -> Option<u64> {
-        let _ = (now, class, endpoint, factor);
+    fn resize(&mut self, now: SimTime, key: LaneKey, factor: f64) -> Option<u64> {
+        let _ = (now, key, factor);
         None
+    }
+
+    /// Install per-tenant weighted-fair-queueing weights on every lane
+    /// queue. The default ignores them — inelastic baselines keep plain
+    /// FCFS, which single-tenant workloads cannot distinguish from WFQ
+    /// anyway (see `coordinator::queue`).
+    fn set_tenant_weights(&mut self, weights: &[(u32, u32)]) {
+        let _ = weights;
     }
 }

@@ -6,14 +6,15 @@
 //! external actions on the backend), then the training phase runs on the
 //! internal GPU cluster, then the next step begins. Collects [`Metrics`].
 //!
-//! [`run_traced`] additionally wires in the scenario subsystem: timed
-//! [`ScenarioEvent`] fault injections delivered through
-//! [`Backend::inject`], and an optional [`TraceRecorder`] that captures
-//! every scheduling decision for differential replay.
+//! [`run_session`] additionally wires in the scenario subsystem through a
+//! [`Session`]: timed [`ScenarioEvent`] fault injections delivered through
+//! [`Backend::inject`], an optional [`TraceRecorder`] that captures every
+//! scheduling decision for differential replay, an optional [`Autoscaler`],
+//! and per-tenant WFQ weights installed into the backend's lane queues.
 
 use super::backend::{Backend, Verdict};
-use crate::action::{Action, ActionId, ActionKind, ActionSpec, ActionState, TrajId};
-use crate::autoscale::{Autoscaler, PoolClass, ScaleCmd};
+use crate::action::{Action, ActionId, ActionKind, ActionSpec, ActionState, TenantId, TrajId};
+use crate::autoscale::{Autoscaler, LaneKey, ScaleCmd};
 use crate::metrics::{ActionRecord, Metrics, ProvisionRecord, StepRecord, TrajRecord, UtilSample};
 use crate::rollout::workloads::Catalog;
 use crate::rollout::{Phase, Workload};
@@ -80,6 +81,9 @@ enum Ev {
 struct TrajRt {
     plan: crate::rollout::TrajectoryPlan,
     wl: usize,
+    /// Copied from the workload at spawn so action construction needs no
+    /// second borrow into `wls`.
+    tenant: TenantId,
     phase: usize,
     started: SimTime,
     gen: SimDur,
@@ -132,31 +136,89 @@ struct Driver<'a> {
     waiting: u64,
 }
 
-/// Run the experiment; returns collected metrics.
+/// Everything a run carries besides the backend/workload essentials: the
+/// scenario fault timeline, the decision-trace recorder, the elastic
+/// autoscaler, and per-tenant WFQ weights. Built builder-style so call
+/// sites name exactly the hooks they use and [`run_session`] keeps a fixed
+/// five-argument shape no matter how many hooks are added later.
+///
+/// The session *owns* its hooks; after the run, reclaim the recorder or
+/// autoscaler with [`Session::take_recorder`] / [`Session::take_autoscaler`].
+#[derive(Default)]
+pub struct Session {
+    injections: Vec<TimedEvent>,
+    recorder: Option<TraceRecorder>,
+    autoscaler: Option<Autoscaler>,
+    tenant_weights: Vec<(u32, u32)>,
+}
+
+impl Session {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Timed scenario fault injections, delivered via [`Backend::inject`].
+    pub fn with_injections(mut self, injections: Vec<TimedEvent>) -> Self {
+        self.injections = injections;
+        self
+    }
+
+    /// Record every scheduling decision for differential replay.
+    pub fn with_recorder(mut self, recorder: TraceRecorder) -> Self {
+        self.recorder = Some(recorder);
+        self
+    }
+
+    /// Evaluate an elastic autoscaler on its virtual-time cadence, resizing
+    /// pools through [`Backend::resize`] and billing capacity into the
+    /// provision records.
+    pub fn with_autoscaler(mut self, autoscaler: Autoscaler) -> Self {
+        self.autoscaler = Some(autoscaler);
+        self
+    }
+
+    /// Per-tenant WFQ weights installed into the backend's lane queues
+    /// before the run (empty ⇒ every tenant at weight 1).
+    pub fn with_tenant_weights(mut self, weights: Vec<(u32, u32)>) -> Self {
+        self.tenant_weights = weights;
+        self
+    }
+
+    /// Reclaim the recorder after a run (e.g. to write the trace file).
+    pub fn take_recorder(&mut self) -> Option<TraceRecorder> {
+        self.recorder.take()
+    }
+
+    /// Reclaim the autoscaler after a run (e.g. to read `applied`).
+    pub fn take_autoscaler(&mut self) -> Option<Autoscaler> {
+        self.autoscaler.take()
+    }
+}
+
+/// Run the experiment with default hooks; returns collected metrics.
 pub fn run(
     backend: &mut dyn Backend,
     cat: &Catalog,
     workloads: &[Workload],
     cfg: &RunCfg,
 ) -> Metrics {
-    run_traced(backend, cat, workloads, cfg, &[], None, None)
+    run_session(backend, cat, workloads, cfg, &mut Session::new())
 }
 
-/// [`run`] with the scenario hooks: `injections` are delivered to
-/// [`Backend::inject`] at their timestamps, every scheduling decision is
-/// recorded into `recorder` (when given) for differential replay, and
-/// `autoscaler` (when given) is evaluated on its virtual-time cadence,
-/// resizing pools through [`Backend::resize`] and billing capacity into
-/// the provision records.
-pub fn run_traced(
+/// [`run`] with the scenario hooks carried by a [`Session`] (fault
+/// injections, trace recorder, autoscaler, tenant weights).
+pub fn run_session(
     backend: &mut dyn Backend,
     cat: &Catalog,
     workloads: &[Workload],
     cfg: &RunCfg,
-    injections: &[TimedEvent],
-    recorder: Option<&mut TraceRecorder>,
-    autoscaler: Option<&mut Autoscaler>,
+    session: &mut Session,
 ) -> Metrics {
+    let Session { injections, recorder, autoscaler, tenant_weights } = session;
+    let injections: &[TimedEvent] = injections;
+    if !tenant_weights.is_empty() {
+        backend.set_tenant_weights(tenant_weights);
+    }
     let mut d = Driver {
         backend,
         cat,
@@ -197,7 +259,10 @@ pub fn run_traced(
         d.trace(SimTime::ZERO, TraceKind::Provision { pool, units });
     }
     for wl in 0..d.wls.len() {
-        d.eng.schedule_at(SimTime::ZERO, Ev::StepStart(wl));
+        // a tenant's arrival phase shifts only its first step; later steps
+        // chain off rollout + train completion as usual
+        let at = SimTime::ZERO + d.wls[wl].workload.phase;
+        d.eng.schedule_at(at, Ev::StepStart(wl));
     }
     for (i, te) in injections.iter().enumerate() {
         d.eng.schedule_at(te.at, Ev::Inject(i));
@@ -215,10 +280,10 @@ pub fn run_traced(
 /// Scale-trace label: it carries the endpoint so per-provider decisions
 /// stay auditable, while provision records keep the plain pool name — one
 /// billing series per pool.
-fn scale_label(class: PoolClass, endpoint: Option<u32>) -> String {
-    match endpoint {
-        Some(e) => format!("{}@{e}", class.name()),
-        None => class.name().to_string(),
+fn scale_label(key: LaneKey) -> String {
+    match key.endpoint {
+        Some(e) => format!("{}@{e}", key.class.name()),
+        None => key.class.name().to_string(),
     }
 }
 
@@ -279,9 +344,9 @@ impl Driver<'_> {
         let mut applied = false;
         for cmd in cmds {
             match cmd {
-                ScaleCmd::Decide { class, endpoint, factor, pool_units } => {
+                ScaleCmd::Decide { key, factor, pool_units } => {
                     // requisitioned: billed now, schedulable after warm-up
-                    let pool = class.name().to_string();
+                    let pool = key.class.name().to_string();
                     self.metrics.provision.push(ProvisionRecord {
                         at: now,
                         pool: pool.clone(),
@@ -290,15 +355,15 @@ impl Driver<'_> {
                     self.trace(
                         now,
                         TraceKind::Scale {
-                            pool: scale_label(class, endpoint),
+                            pool: scale_label(key),
                             phase: "decide".into(),
                             factor,
                         },
                     );
                     self.trace(now, TraceKind::Provision { pool, units: pool_units });
                 }
-                ScaleCmd::Apply { class, endpoint, factor } => {
-                    if self.apply_scale(now, class, endpoint, factor) {
+                ScaleCmd::Apply { key, factor } => {
+                    if self.apply_scale(now, key, factor) {
                         applied = true;
                     }
                 }
@@ -319,14 +384,8 @@ impl Driver<'_> {
     /// Apply one resize in the substrate and record its billing point.
     /// Returns whether the backend honored it. Shared by the evaluation
     /// tick ([`Self::autoscale`]) and the admission path ([`Self::admit`]).
-    fn apply_scale(
-        &mut self,
-        now: SimTime,
-        class: PoolClass,
-        endpoint: Option<u32>,
-        factor: f64,
-    ) -> bool {
-        let Some(reached) = self.backend.resize(now, class, endpoint, factor) else {
+    fn apply_scale(&mut self, now: SimTime, key: LaneKey, factor: f64) -> bool {
+        let Some(reached) = self.backend.resize(now, key, factor) else {
             return false;
         };
         // substrate truth, floored by the autoscaler's billed pool total:
@@ -335,17 +394,13 @@ impl Driver<'_> {
         // endpoint's still-warming requisition (billed from its decision
         // instant). Over-billing under an active provider fault is the
         // conservative side for the savings claim.
-        let billed = self.asc.as_deref().map_or(0, |a| a.billed_units(class));
+        let billed = self.asc.as_deref().map_or(0, |a| a.billed_units(key.class));
         let units = reached.max(billed);
-        let pool = class.name().to_string();
+        let pool = key.class.name().to_string();
         self.metrics.provision.push(ProvisionRecord { at: now, pool: pool.clone(), units });
         self.trace(
             now,
-            TraceKind::Scale {
-                pool: scale_label(class, endpoint),
-                phase: "apply".into(),
-                factor,
-            },
+            TraceKind::Scale { pool: scale_label(key), phase: "apply".into(), factor },
         );
         self.trace(now, TraceKind::Provision { pool, units });
         true
@@ -371,8 +426,8 @@ impl Driver<'_> {
         };
         let mut applied = false;
         for cmd in cmds {
-            if let ScaleCmd::Apply { class, endpoint, factor } = cmd {
-                if self.apply_scale(now, class, endpoint, factor) {
+            if let ScaleCmd::Apply { key, factor } = cmd {
+                if self.apply_scale(now, key, factor) {
                     applied = true;
                 }
             }
@@ -435,6 +490,7 @@ impl Driver<'_> {
                 TrajRt {
                     plan,
                     wl,
+                    tenant: self.wls[wl].workload.tenant,
                     phase: 0,
                     started: now + offset,
                     gen: SimDur::ZERO,
@@ -491,6 +547,7 @@ impl Driver<'_> {
                 self.next_action += 1;
                 let spec = ActionSpec {
                     task: rt.plan.task,
+                    tenant: rt.tenant,
                     trajectory: t,
                     kind: tpl.kind,
                     cost: tpl.cost.clone(),
@@ -502,6 +559,7 @@ impl Driver<'_> {
                 };
                 rt.phase += 1;
                 let kind = spec.kind;
+                let tenant = spec.tenant;
                 let a = Rc::new(Action::new(id, spec, now));
                 self.backend.submit(now, &a);
                 self.actions.insert(id, a);
@@ -513,6 +571,7 @@ impl Driver<'_> {
                         action: id.0,
                         traj: t.0,
                         kind: kind.name().to_string(),
+                        tenant: tenant.0,
                         queue_depth: self.waiting,
                     },
                 );
@@ -651,6 +710,7 @@ impl Driver<'_> {
                 self.metrics.actions.push(ActionRecord {
                     id,
                     task: a.spec.task,
+                    tenant: a.spec.tenant,
                     trajectory: a.spec.trajectory,
                     kind: a.spec.kind,
                     submitted: a.submitted_at,

@@ -7,7 +7,7 @@ pub mod queue;
 pub mod tangram;
 
 pub use backend::{Backend, Started, Verdict};
-pub use driver::{run, run_traced, RunCfg};
+pub use driver::{run, run_session, RunCfg, Session};
 pub use queue::ActionQueue;
 pub use tangram::{TangramBackend, TangramCfg};
 
@@ -156,7 +156,7 @@ mod tests {
         // Fault injections and autoscaler resizes own separate factors and
         // the substrate sees their product — a scale-up must never cancel a
         // provider fault, and a fault restore must never undo a scale-down.
-        use crate::autoscale::PoolClass;
+        use crate::autoscale::{LaneKey, PoolClass};
         use crate::scenario::ScenarioEvent;
         use crate::sim::SimTime;
         let cat = small_cat();
@@ -164,18 +164,18 @@ mod tests {
         let t = SimTime::ZERO;
         assert!(be.inject(t, &ScenarioEvent::CpuPoolScale { factor: 0.5 }));
         // autoscaler squeezes the faulted pool further: 0.5 × 0.5 = 0.25
-        assert_eq!(be.resize(t, PoolClass::Cpu, None, 0.5), Some(8));
+        assert_eq!(be.resize(t, LaneKey::class_wide(PoolClass::Cpu), 0.5), Some(8));
         // fault restores, autoscaler factor survives: capacity = 0.5 × 32
         assert!(be.inject(t, &ScenarioEvent::CpuPoolScale { factor: 1.0 }));
         assert_eq!(be.cpu.total_cores() - be.cpu.cordoned_cores() as u64, 16);
         // autoscaler restores under no fault → the full pool returns
-        assert_eq!(be.resize(t, PoolClass::Cpu, None, 1.0), Some(32));
+        assert_eq!(be.resize(t, LaneKey::class_wide(PoolClass::Cpu), 1.0), Some(32));
         // API side: a provider flap survives an autoscaler scale-up
         let lanes0 = be.provisioned_lanes();
         assert!(be.inject(t, &ScenarioEvent::ApiLimitScale { factor: 0.5 }));
         let flapped = be.provisioned_lanes();
         assert!(flapped < lanes0);
-        let after = be.resize(t, PoolClass::Api, None, 1.0).unwrap();
+        let after = be.resize(t, LaneKey::class_wide(PoolClass::Api), 1.0).unwrap();
         assert_eq!(after, flapped, "scale-up must not cancel the provider fault");
     }
 
@@ -185,7 +185,7 @@ mod tests {
         // a gpu_cache_flush injected mid-scale-down must not cancel the
         // autoscale factor, a gpu_pool_scale fault composes (product), and
         // a fault restore must not undo the autoscaler's scale-down.
-        use crate::autoscale::PoolClass;
+        use crate::autoscale::{LaneKey, PoolClass};
         use crate::scenario::ScenarioEvent;
         use crate::sim::SimTime;
         let cat = small_cat();
@@ -203,7 +203,7 @@ mod tests {
         let t = SimTime::ZERO;
         assert_eq!(be.gpu.provisioned_gpus(), 32);
         // autoscaler cordons half the nodes
-        assert_eq!(be.resize(t, PoolClass::Gpu, None, 0.5), Some(16));
+        assert_eq!(be.resize(t, LaneKey::class_wide(PoolClass::Gpu), 0.5), Some(16));
         assert_eq!(be.gpu.cordoned_nodes(), 2);
         // a cache flush mid-scale-down drops residencies but NOT cordons
         assert!(be.inject(t, &ScenarioEvent::GpuCacheFlush));
@@ -216,13 +216,13 @@ mod tests {
         assert!(be.inject(t, &ScenarioEvent::GpuPoolScale { factor: 1.0 }));
         assert_eq!(be.gpu.provisioned_gpus(), 16, "fault restore must not undo it");
         // autoscaler restores under no fault → the full pool returns
-        assert_eq!(be.resize(t, PoolClass::Gpu, None, 1.0), Some(32));
+        assert_eq!(be.resize(t, LaneKey::class_wide(PoolClass::Gpu), 1.0), Some(32));
         assert_eq!(be.gpu.cordoned_nodes(), 0);
     }
 
     #[test]
     fn api_endpoints_resize_independently() {
-        use crate::autoscale::{PoolClass, PoolPressure};
+        use crate::autoscale::{LaneKey, PoolClass, PoolPressure};
         use crate::sim::SimTime;
         let cat = small_cat();
         let mut be = tangram_for(&cat);
@@ -230,9 +230,9 @@ mod tests {
         let rows: Vec<PoolPressure> = be.scale_classes();
         // one row per class target: cpu, gpu, then one per endpoint sorted
         // by endpoint kind id
-        assert_eq!(rows[0].class, PoolClass::Cpu);
-        assert_eq!(rows[1].class, PoolClass::Gpu);
-        let eps: Vec<u32> = rows[2..].iter().map(|r| r.endpoint.unwrap()).collect();
+        assert_eq!(rows[0].key.class, PoolClass::Cpu);
+        assert_eq!(rows[1].key.class, PoolClass::Gpu);
+        let eps: Vec<u32> = rows[2..].iter().map(|r| r.key.endpoint.unwrap()).collect();
         assert_eq!(rows[2..].len(), cat.api.len());
         let mut sorted = eps.clone();
         sorted.sort_unstable();
@@ -240,13 +240,13 @@ mod tests {
         // squeeze only the first endpoint: its lanes shrink, the rest stay
         let lanes0 = be.provisioned_lanes();
         let first = eps[0];
-        let after = be.resize(t, PoolClass::Api, Some(first), 0.25).unwrap();
+        let after = be.resize(t, LaneKey::endpoint(PoolClass::Api, first), 0.25).unwrap();
         assert!(after < lanes0);
         let rows2 = be.scale_classes();
-        let row_first = rows2.iter().find(|r| r.endpoint == Some(first)).unwrap();
+        let row_first = rows2.iter().find(|r| r.key.endpoint == Some(first)).unwrap();
         assert!(row_first.provisioned_units < row_first.baseline_units);
-        for r in rows2.iter().filter(|r| r.class == PoolClass::Api) {
-            if r.endpoint != Some(first) {
+        for r in rows2.iter().filter(|r| r.key.class == PoolClass::Api) {
+            if r.key.endpoint != Some(first) {
                 assert_eq!(
                     r.provisioned_units, r.baseline_units,
                     "untouched endpoints must keep their static provision"
@@ -254,7 +254,7 @@ mod tests {
             }
         }
         // restoring the endpoint returns the full lane count
-        assert_eq!(be.resize(t, PoolClass::Api, Some(first), 1.0), Some(lanes0));
+        assert_eq!(be.resize(t, LaneKey::endpoint(PoolClass::Api, first), 1.0), Some(lanes0));
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! FCFS waiting queue over shared action handles.
+//! Deterministic weighted-fair waiting queue over shared action handles.
 //!
 //! The coordinator's hot path used to keep `Vec<Action>` queues: `remove(0)`
 //! shifted the whole tail on every admission, positional removal re-shifted
@@ -7,10 +7,31 @@
 //! that with a `VecDeque<Rc<Action>>` — pops are O(1), queue entries are
 //! 8-byte handles — plus an id index so decisions for actions that already
 //! left the queue (topology raced) are rejected in O(1).
+//!
+//! # Weighted fair queueing (multi-tenant)
+//!
+//! With several RL jobs sharing one lane, plain FCFS lets a bursty tenant
+//! park a wall of actions in front of everyone else's. The queue therefore
+//! orders entries by a per-tenant **virtual finish time**: each push charges
+//! the tenant `WFQ_SCALE / weight` virtual units past the later of the
+//! queue's virtual clock and the tenant's previous finish, and entries sort
+//! by `(finish, tenant, action id)` — a fully deterministic order (ties
+//! broken by tenant id, then action id; no wall clock, no hashing).
+//!
+//! **Single-tenant degeneracy (the golden-trace invariant):** with one
+//! tenant every push lands strictly after the tenant's previous finish, so
+//! the sort order is exactly arrival order — byte-for-byte FCFS. All
+//! pre-tenancy scenarios therefore replay unchanged. `set_fcfs(true)`
+//! forces plain arrival order even with many tenants (the differential
+//! baseline the fairness tests compare against).
 
 use crate::action::{Action, ActionId, ActionKind};
-use std::collections::{HashSet, VecDeque};
+use std::collections::{BTreeMap, HashSet, VecDeque};
 use std::rc::Rc;
+
+/// Virtual-time units one weight-1 push costs. Large enough that integer
+/// division by any sane weight keeps distinct per-tenant finish spacing.
+const WFQ_SCALE: u64 = 1 << 20;
 
 /// Index of an [`ActionKind`] into the per-kind unprofiled counters.
 fn kind_index(k: ActionKind) -> usize {
@@ -22,11 +43,26 @@ fn kind_index(k: ActionKind) -> usize {
     }
 }
 
-/// FCFS queue of waiting actions, indexed by [`ActionId`].
+/// Weighted-fair queue of waiting actions, indexed by [`ActionId`].
 #[derive(Debug, Default)]
 pub struct ActionQueue {
     items: VecDeque<Rc<Action>>,
+    /// `(virtual finish, tenant, action id)` per entry, aligned with
+    /// `items` — the deterministic service order.
+    keys: VecDeque<(u64, u32, u64)>,
     ids: HashSet<ActionId>,
+    /// The queue's virtual clock: advances to the finish tag of every
+    /// serviced entry, so an idle tenant re-enters at the present instead
+    /// of back-filling virtual history.
+    vtime: u64,
+    /// Last assigned virtual finish per tenant.
+    last_finish: BTreeMap<u32, u64>,
+    /// WFQ weight per tenant (absent ⇒ 1).
+    weights: BTreeMap<u32, u64>,
+    /// Plain arrival order, ignoring tenants (differential baseline).
+    fcfs: bool,
+    /// Arrival sequence for `fcfs` keys.
+    seq: u64,
     /// Queued actions per kind with no profiled duration. The scheduler
     /// estimates these from the historical-average EWMA, so a pool holding
     /// any must be re-dirtied when that kind's EWMA moves (the dirty-pool
@@ -37,6 +73,22 @@ pub struct ActionQueue {
 impl ActionQueue {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Install per-tenant WFQ weights (weights below 1 are clamped to 1;
+    /// tenants not listed default to weight 1). Installing on a non-empty
+    /// queue is unsupported — weights are a session-construction knob.
+    pub fn set_weights(&mut self, weights: &[(u32, u32)]) {
+        debug_assert!(self.items.is_empty(), "weights installed mid-flight");
+        self.weights = weights.iter().map(|&(t, w)| (t, (w as u64).max(1))).collect();
+    }
+
+    /// Force plain arrival order (ignoring tenants). The fairness tests'
+    /// differential baseline; never used by production backends unless the
+    /// scenario explicitly opts out of WFQ.
+    pub fn set_fcfs(&mut self, fcfs: bool) {
+        debug_assert!(self.items.is_empty(), "ordering mode flipped mid-flight");
+        self.fcfs = fcfs;
     }
 
     pub fn len(&self) -> usize {
@@ -64,22 +116,43 @@ impl ActionQueue {
         }
     }
 
-    /// Enqueue at the tail (FCFS order = submit order).
+    /// Enqueue in service order: WFQ virtual-finish position (single-tenant
+    /// degenerates to the tail, i.e. FCFS), or the plain tail under
+    /// `set_fcfs(true)`. The name predates tenancy — callers still say
+    /// "push_back" for "submit".
     pub fn push_back(&mut self, action: Rc<Action>) {
         debug_assert!(!self.ids.contains(&action.id), "duplicate queue entry");
         self.ids.insert(action.id);
         self.track(&action, 1);
-        self.items.push_back(action);
+        if self.fcfs {
+            self.seq += 1;
+            self.keys.push_back((self.seq, action.spec.tenant.0, action.id.0));
+            self.items.push_back(action);
+            return;
+        }
+        let tenant = action.spec.tenant.0;
+        let weight = self.weights.get(&tenant).copied().unwrap_or(1);
+        let prev = self.last_finish.get(&tenant).copied().unwrap_or(0);
+        let start = self.vtime.max(prev);
+        let finish = start + WFQ_SCALE / weight;
+        self.last_finish.insert(tenant, finish);
+        let key = (finish, tenant, action.id.0);
+        let idx = self.keys.partition_point(|k| k < &key);
+        self.keys.insert(idx, key);
+        self.items.insert(idx, action);
     }
 
-    /// The FCFS head, if any.
+    /// The service-order head, if any.
     pub fn front(&self) -> Option<&Action> {
         self.items.front().map(|a| a.as_ref())
     }
 
-    /// Dequeue the FCFS head.
+    /// Dequeue the service-order head.
     pub fn pop_front(&mut self) -> Option<Rc<Action>> {
         let a = self.items.pop_front()?;
+        if let Some(k) = self.keys.pop_front() {
+            self.vtime = self.vtime.max(k.0);
+        }
         self.ids.remove(&a.id);
         self.track(&a, -1);
         Some(a)
@@ -94,8 +167,9 @@ impl ActionQueue {
         self.items.iter().find(|a| a.id == id)
     }
 
-    /// Remove a queued action by id (scheduler decisions apply out of FCFS
-    /// order within one drain).
+    /// Remove a queued action by id (scheduler decisions apply out of
+    /// service order within one drain). Servicing mid-queue advances the
+    /// virtual clock exactly like a head pop — the entry was served.
     pub fn remove(&mut self, id: ActionId) -> Option<Rc<Action>> {
         if !self.ids.remove(&id) {
             return None;
@@ -106,11 +180,14 @@ impl ActionQueue {
             .position(|a| a.id == id)
             .expect("queue id index out of sync");
         let a = self.items.remove(idx)?;
+        if let Some(k) = self.keys.remove(idx) {
+            self.vtime = self.vtime.max(k.0);
+        }
         self.track(&a, -1);
         Some(a)
     }
 
-    /// Borrowed FCFS view for the scheduler (`&[&Action]`).
+    /// Borrowed service-order view for the scheduler (`&[&Action]`).
     pub fn refs(&self) -> Vec<&Action> {
         self.items.iter().map(|a| a.as_ref()).collect()
     }
@@ -125,17 +202,22 @@ mod tests {
     use super::*;
     use crate::action::{
         ActionKind, ActionSpec, CostSpec, DimCost, ElasticityModel, ResourceClass,
-        ResourceRegistry, TaskId, TrajId,
+        ResourceRegistry, TaskId, TenantId, TrajId,
     };
     use crate::sim::{SimDur, SimTime};
 
     fn mk(id: u64) -> Rc<Action> {
+        mk_tenant(id, 0)
+    }
+
+    fn mk_tenant(id: u64, tenant: u32) -> Rc<Action> {
         let mut reg = ResourceRegistry::new();
         let cpu = reg.register("cpu", ResourceClass::CpuCores, 8);
         Rc::new(Action::new(
             ActionId(id),
             ActionSpec {
                 task: TaskId(0),
+                tenant: TenantId(tenant),
                 trajectory: TrajId(id),
                 kind: ActionKind::EnvExec,
                 cost: CostSpec::single(&reg, cpu, DimCost::Fixed(1)),
@@ -204,5 +286,95 @@ mod tests {
         assert_eq!(Rc::strong_count(&a), 2);
         let back = q.pop_front().unwrap();
         assert!(Rc::ptr_eq(&a, &back), "queue must hand back the same allocation");
+    }
+
+    fn drain_order(q: &mut ActionQueue) -> Vec<u64> {
+        let mut out = Vec::new();
+        while let Some(a) = q.pop_front() {
+            out.push(a.id.0);
+        }
+        out
+    }
+
+    #[test]
+    fn single_tenant_wfq_is_exactly_fcfs() {
+        // the golden-trace invariant: with one tenant (any weight, any
+        // interleaving of pops and pushes) WFQ order IS arrival order
+        let mut wfq = ActionQueue::new();
+        wfq.set_weights(&[(0, 3)]);
+        let mut fcfs = ActionQueue::new();
+        fcfs.set_fcfs(true);
+        for i in 0..3 {
+            wfq.push_back(mk(i));
+            fcfs.push_back(mk(i));
+        }
+        assert_eq!(wfq.pop_front().unwrap().id.0, fcfs.pop_front().unwrap().id.0);
+        for i in 3..6 {
+            wfq.push_back(mk(i));
+            fcfs.push_back(mk(i));
+        }
+        assert_eq!(drain_order(&mut wfq), drain_order(&mut fcfs));
+    }
+
+    #[test]
+    fn wfq_interleaves_tenants_by_weight() {
+        // tenant 0 parks a burst of 6 first; tenant 1 then submits 3. Under
+        // FCFS tenant 1 waits out the whole burst; under 1:1 WFQ its first
+        // action is serviced after exactly one more tenant-0 action.
+        let mut q = ActionQueue::new();
+        for i in 0..6 {
+            q.push_back(mk_tenant(i, 0));
+        }
+        // pop one so vtime advances to tenant 0's first finish
+        assert_eq!(q.pop_front().unwrap().id.0, 0);
+        for i in 10..13 {
+            q.push_back(mk_tenant(i, 1));
+        }
+        let order = drain_order(&mut q);
+        let pos_first_t1 = order.iter().position(|&id| id == 10).unwrap();
+        assert!(
+            pos_first_t1 <= 1,
+            "late tenant must not wait out the parked burst, order {order:?}"
+        );
+        // both tenants drain alternately from the interleave point on
+        assert_eq!(order, vec![1, 10, 2, 11, 3, 12, 4, 5]);
+    }
+
+    #[test]
+    fn wfq_weights_bias_the_interleave() {
+        // weight 2 vs 1: tenant 0 gets two slots per tenant-1 slot
+        let mut q = ActionQueue::new();
+        q.set_weights(&[(0, 2), (1, 1)]);
+        for i in 0..4 {
+            q.push_back(mk_tenant(i, 0));
+        }
+        for i in 10..12 {
+            q.push_back(mk_tenant(i, 1));
+        }
+        let order = drain_order(&mut q);
+        assert_eq!(order, vec![0, 1, 10, 2, 3, 11]);
+    }
+
+    #[test]
+    fn wfq_ties_break_by_tenant_then_id() {
+        // equal weights, simultaneous first pushes: finishes tie, the lower
+        // tenant id wins, then action id within a tenant
+        let mut q = ActionQueue::new();
+        q.push_back(mk_tenant(5, 1));
+        q.push_back(mk_tenant(4, 0));
+        let order = drain_order(&mut q);
+        assert_eq!(order, vec![4, 5]);
+    }
+
+    #[test]
+    fn fcfs_mode_ignores_tenants() {
+        let mut q = ActionQueue::new();
+        q.set_fcfs(true);
+        q.set_weights(&[(0, 8), (1, 1)]);
+        for i in 0..3 {
+            q.push_back(mk_tenant(i, 1));
+        }
+        q.push_back(mk_tenant(3, 0));
+        assert_eq!(drain_order(&mut q), vec![0, 1, 2, 3]);
     }
 }

@@ -4,8 +4,9 @@
 //! Routing: CPU actions go to the per-node queue of their trajectory's
 //! bound node (per-node scheduling, §5.2); GPU service actions go to the
 //! cluster-wide GPU queue; API actions go to per-endpoint queues under
-//! Basic-manager admission. Every queue is FCFS and scheduled with the same
-//! elastic algorithm (§4.2).
+//! Basic-manager admission. Every queue is a deterministic per-tenant
+//! weighted-fair queue (exactly FCFS on single-tenant runs — see
+//! `coordinator::queue`) scheduled with the same elastic algorithm (§4.2).
 //!
 //! Scheduling is **dirty-pool incremental** (see the contract on
 //! [`Backend`]): each pump re-runs the elastic scheduler only over pools
@@ -26,7 +27,7 @@
 
 use super::backend::{Backend, Started, Verdict};
 use crate::action::{Action, ActionId, ResourceKindId, TrajId};
-use crate::autoscale::{PoolClass, PoolPressure};
+use crate::autoscale::{LaneKey, PoolPressure};
 use crate::cluster::api::ApiOutcome;
 use crate::cluster::cpu::CpuLatency;
 use crate::cluster::gpu::RestoreModel;
@@ -55,6 +56,11 @@ pub struct TangramCfg {
     /// Debug/bench escape hatch: schedule every pool on every pump (the
     /// pre-dirty-pool behaviour) instead of only dirty pools.
     pub full_sweep: bool,
+    /// Differential escape hatch: plain arrival-order queues instead of
+    /// per-tenant weighted-fair queues. Indistinguishable on single-tenant
+    /// runs (WFQ degenerates to FCFS there); the fairness tests compare
+    /// multi-tenant runs against this baseline.
+    pub fcfs_queues: bool,
 }
 
 impl Default for TangramCfg {
@@ -70,6 +76,7 @@ impl Default for TangramCfg {
             restore: RestoreModel::default(),
             max_api_retries: 3,
             full_sweep: false,
+            fcfs_queues: false,
         }
     }
 }
@@ -78,7 +85,7 @@ pub struct TangramBackend {
     cfg: TangramCfg,
     cpu_kind: ResourceKindId,
     gpu_kind: ResourceKindId,
-    /// The elastic lanes, one per [`PoolClass`]. Each lane owns its
+    /// The elastic lanes, one per pool class. Each lane owns its
     /// substrate manager(s) AND the FCFS queues feeding it; the scheduling
     /// hot path reads the managers through the lanes' `Deref`.
     pub cpu: CpuLane,
@@ -140,7 +147,27 @@ impl TangramBackend {
             drain_wall: std::time::Duration::ZERO,
         };
         be.rebuild_pool_index();
+        if be.cfg.fcfs_queues {
+            be.for_each_queue(|q| q.set_fcfs(true));
+        }
         be
+    }
+
+    /// Visit every lane queue (construction-time configuration only: WFQ
+    /// weights, the FCFS differential knob). Queues are all empty here, and
+    /// the applied setting is per-queue — visit order cannot matter.
+    fn for_each_queue(&mut self, mut f: impl FnMut(&mut crate::coordinator::queue::ActionQueue)) {
+        // arl-lint: allow(nondet-iteration): per-queue configuration — each
+        // queue gets the same setting, order-insensitive
+        for q in self.cpu.queues.values_mut() {
+            f(q);
+        }
+        f(&mut self.gpu.queue);
+        // arl-lint: allow(nondet-iteration): per-queue configuration — each
+        // queue gets the same setting, order-insensitive
+        for q in self.api.queues.values_mut() {
+            f(q);
+        }
     }
 
     /// Every lane in [`PoolClass`] order — the deterministic classification
@@ -577,26 +604,24 @@ impl Backend for TangramBackend {
         self.lanes().iter().flat_map(|l| l.pressures()).collect()
     }
 
-    fn resize(
-        &mut self,
-        _now: SimTime,
-        class: PoolClass,
-        endpoint: Option<u32>,
-        factor: f64,
-    ) -> Option<u64> {
+    fn resize(&mut self, _now: SimTime, key: LaneKey, factor: f64) -> Option<u64> {
         // the autoscaler owns its own factor; the lane composes it with any
         // injected fault and pushes the product through the same cordon /
         // provider-limit machinery as `inject` — including the dirty list,
         // so the pump that follows reschedules the affected pools
         let resized = {
             let mut lanes = self.lanes_mut();
-            let lane = lanes.iter_mut().find(|l| l.class() == class)?;
-            lane.set_auto(endpoint, factor)
+            let lane = lanes.iter_mut().find(|l| l.class() == key.class)?;
+            lane.set_auto(key.endpoint, factor)
         };
         for pool in resized.dirty {
             self.dirty.insert(pool);
         }
         Some(resized.reached)
+    }
+
+    fn set_tenant_weights(&mut self, weights: &[(u32, u32)]) {
+        self.for_each_queue(|q| q.set_weights(weights));
     }
 
     fn inject(&mut self, _now: SimTime, event: &ScenarioEvent) -> bool {

@@ -7,7 +7,7 @@
 
 use super::{ElasticLane, PoolId, Resized};
 use crate::action::{Action, ResourceKindId};
-use crate::autoscale::{PoolClass, PoolPressure};
+use crate::autoscale::{LaneKey, PoolClass, PoolPressure};
 use crate::cluster::api::{ApiEndpoint, ApiEndpointSpec};
 use crate::coordinator::queue::ActionQueue;
 use crate::managers::BasicManager;
@@ -112,8 +112,7 @@ impl ElasticLane for ApiLane {
                 let ep = &self.endpoints[&kind];
                 let queued = self.queues[&kind].len() as u64;
                 PoolPressure {
-                    class: PoolClass::Api,
-                    endpoint: Some(kind.0),
+                    key: LaneKey::endpoint(PoolClass::Api, kind.0),
                     queued,
                     // every API call occupies exactly one provider lane
                     queued_units: queued,

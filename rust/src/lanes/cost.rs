@@ -79,7 +79,7 @@ impl CostModel {
         for class in PoolClass::ALL {
             let rows: Vec<&PoolPressure> = pressures
                 .iter()
-                .filter(|p| p.class == class && p.endpoint.is_some())
+                .filter(|p| p.key.class == class && p.key.endpoint.is_some())
                 .collect();
             if rows.is_empty() {
                 continue;
@@ -90,7 +90,7 @@ impl CostModel {
             }
             let weighted: f64 = rows
                 .iter()
-                .map(|p| self.rate_for(class.name(), p.endpoint) * p.baseline_units as f64)
+                .map(|p| self.rate_for(class.name(), p.key.endpoint) * p.baseline_units as f64)
                 .sum();
             out.insert(class.name().to_string(), weighted / total as f64);
         }
@@ -143,11 +143,11 @@ impl CostModel {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::autoscale::LaneKey;
 
     fn row(class: PoolClass, endpoint: Option<u32>, baseline: u64) -> PoolPressure {
         PoolPressure {
-            class,
-            endpoint,
+            key: LaneKey { class, endpoint },
             queued: 0,
             queued_units: 0,
             in_use_units: 0,

@@ -5,7 +5,7 @@
 
 use super::{ElasticLane, PoolId, Resized};
 use crate::action::{Action, ResourceKindId};
-use crate::autoscale::{PoolClass, PoolPressure};
+use crate::autoscale::{LaneKey, PoolClass, PoolPressure};
 use crate::cluster::cpu::NodeId;
 use crate::coordinator::queue::ActionQueue;
 use crate::managers::CpuManager;
@@ -89,8 +89,7 @@ impl ElasticLane for CpuLane {
         let cordoned = self.mgr.cordoned_cores() as u64;
         let free = self.mgr.free_cores();
         vec![PoolPressure {
-            class: PoolClass::Cpu,
-            endpoint: None,
+            key: LaneKey::class_wide(PoolClass::Cpu),
             // arl-lint: allow(nondet-iteration): commutative sum — order
             // cannot change the result
             queued: self.queues.values().map(|q| q.len() as u64).sum(),

@@ -6,7 +6,7 @@
 
 use super::{ElasticLane, PoolId, Resized};
 use crate::action::{Action, ResourceKindId};
-use crate::autoscale::{PoolClass, PoolPressure};
+use crate::autoscale::{LaneKey, PoolClass, PoolPressure};
 use crate::coordinator::queue::ActionQueue;
 use crate::managers::GpuManager;
 
@@ -75,8 +75,7 @@ impl ElasticLane for GpuLane {
 
     fn pressures(&self) -> Vec<PoolPressure> {
         vec![PoolPressure {
-            class: PoolClass::Gpu,
-            endpoint: None,
+            key: LaneKey::class_wide(PoolClass::Gpu),
             queued: self.queue.len() as u64,
             queued_units: self
                 .queue

@@ -7,7 +7,7 @@
 //! (`apply_cpu_scale` / `apply_gpu_scale` / `apply_api_scale_one`) and a
 //! per-class `match` in every scaling path (`scale_classes`, `resize`, the
 //! fault injections). An [`ElasticLane`] collapses that duplication: one
-//! trait, keyed by `(PoolClass, endpoint)` targets, that owns
+//! trait, keyed by `LaneKey` (class + endpoint) targets, that owns
 //!
 //! * **classification** — routing an [`Action`] to the lane's sub-pool
 //!   ([`ElasticLane::classify`] → [`PoolId`]);

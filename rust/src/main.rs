@@ -174,6 +174,127 @@ fn cmd_run(argv: Vec<String>) -> i32 {
     0
 }
 
+/// A `scenario` usage error: the message for stderr; the caller exits 2.
+#[derive(Debug, PartialEq)]
+struct UsageError(String);
+
+impl std::fmt::Display for UsageError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.0.fmt(f)
+    }
+}
+
+/// Where the `scenario` run path gets its spec from.
+#[derive(Debug, PartialEq)]
+enum SpecSource {
+    File(String),
+    Pack(String),
+}
+
+/// What a validated `scenario` flag set asks for.
+#[derive(Debug, PartialEq)]
+enum ScenarioMode {
+    List,
+    Fuzz,
+    Against { replay: String, against: String },
+    Replay { path: String },
+    Run { source: SpecSource, backend: BackendKind, full_sweep: bool },
+}
+
+/// The `scenario` subcommand's flag set, lifted out of [`Args`] so every
+/// usage rule lives in one unit-testable decision function instead of
+/// scattered eprintln-and-exit checks.
+#[derive(Debug, Default, Clone)]
+struct ScenarioArgs {
+    list: bool,
+    pack: String,
+    spec: String,
+    backend: String,
+    record: String,
+    replay: String,
+    against: String,
+    fuzz: String,
+    cases: u64,
+    full_sweep: bool,
+    autoscale: bool,
+    autoscale_policy: String,
+    admission: bool,
+}
+
+impl ScenarioArgs {
+    fn from_cli(args: &Args) -> ScenarioArgs {
+        ScenarioArgs {
+            list: args.bool("list"),
+            pack: args.str("pack"),
+            spec: args.str("spec"),
+            backend: args.str("backend"),
+            record: args.str("record"),
+            replay: args.str("replay"),
+            against: args.str("against"),
+            fuzz: args.str("fuzz"),
+            cases: args.u64("cases"),
+            full_sweep: args.bool("full-sweep"),
+            autoscale: args.bool("autoscale"),
+            autoscale_policy: args.str("autoscale-policy"),
+            admission: args.bool("admission"),
+        }
+    }
+
+    /// Resolve the flag set to a [`ScenarioMode`], or the exact usage
+    /// complaint. Mode precedence mirrors the CLI contract: `--list`, then
+    /// `--fuzz`, then `--against`, then `--replay`, then the run path.
+    fn validate(&self) -> Result<ScenarioMode, UsageError> {
+        let usage = |m: &str| Err(UsageError(m.to_string()));
+        if self.list {
+            return Ok(ScenarioMode::List);
+        }
+        if !self.fuzz.is_empty() {
+            if !self.record.is_empty() && self.cases.max(1) != 1 {
+                return usage("--record with --fuzz needs --cases 1");
+            }
+            return Ok(ScenarioMode::Fuzz);
+        }
+        if !self.against.is_empty() {
+            if self.replay.is_empty() {
+                return usage("--against needs --replay (the A side of the comparison)");
+            }
+            return Ok(ScenarioMode::Against {
+                replay: self.replay.clone(),
+                against: self.against.clone(),
+            });
+        }
+        if !self.replay.is_empty() {
+            return Ok(ScenarioMode::Replay { path: self.replay.clone() });
+        }
+        let backend = BackendKind::parse(&self.backend).map_err(|e| UsageError(e.to_string()))?;
+        if self.full_sweep && backend != BackendKind::Tangram {
+            return usage("--full-sweep only applies to the tangram backend");
+        }
+        if self.full_sweep && !self.record.is_empty() {
+            // a recorded trace replays through the default (dirty-pool)
+            // scheduler; pinning a sweep-mode recording would report
+            // spurious divergences
+            return usage("--full-sweep is an A/B debug mode and cannot be combined with --record");
+        }
+        if self.autoscale {
+            PolicyKind::parse(&self.autoscale_policy).map_err(|e| UsageError(e.to_string()))?;
+        }
+        if self.admission && !self.autoscale && self.spec.is_empty() {
+            return usage(
+                "--admission needs --autoscale (or a spec with an embedded autoscale config)",
+            );
+        }
+        let source = if !self.spec.is_empty() {
+            SpecSource::File(self.spec.clone())
+        } else if !self.pack.is_empty() {
+            SpecSource::Pack(self.pack.clone())
+        } else {
+            return usage("need --pack, --spec, --replay, or --list");
+        };
+        Ok(ScenarioMode::Run { source, backend, full_sweep: self.full_sweep })
+    }
+}
+
 fn cmd_scenario(argv: Vec<String>) -> i32 {
     let args = match Args::new("record/replay deterministic scenario traces")
         .opt("pack", "", "built-in scenario pack (see --list)")
@@ -200,9 +321,29 @@ fn cmd_scenario(argv: Vec<String>) -> i32 {
         }
     };
 
-    if args.bool("list") {
+    let mode = match ScenarioArgs::from_cli(&args).validate() {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+
+    if matches!(mode, ScenarioMode::List) {
         for p in builtin_packs() {
-            let wls: Vec<&str> = p.workloads.iter().map(|w| w.name()).collect();
+            // multi-tenant packs carry their workloads inside the tenant
+            // mixes; render those as tenant(weight):mix entries instead
+            let wls: Vec<String> = if p.tenants.is_empty() {
+                p.workloads.iter().map(|w| w.name().to_string()).collect()
+            } else {
+                p.tenants
+                    .iter()
+                    .map(|t| {
+                        let mix: Vec<&str> = t.workloads.iter().map(|w| w.name()).collect();
+                        format!("t{}(w{}):{}", t.id, t.weight, mix.join("+"))
+                    })
+                    .collect()
+            };
             println!(
                 "{:<16} workloads=[{}] batch={} steps={} seed={} events={}",
                 p.name,
@@ -218,22 +359,18 @@ fn cmd_scenario(argv: Vec<String>) -> i32 {
     }
 
     // ---- fuzz path (--fuzz <seed> [--cases N]) --------------------------
-    if !args.str("fuzz").is_empty() {
+    if matches!(mode, ScenarioMode::Fuzz) {
         return cmd_scenario_fuzz(&args);
     }
 
     // ---- A/B path (--replay a.jsonl --against b.jsonl) ------------------
-    if !args.str("against").is_empty() {
-        if args.str("replay").is_empty() {
-            eprintln!("--against needs --replay (the A side of the comparison)");
-            return 2;
-        }
-        return cmd_scenario_against(&args.str("replay"), &args.str("against"));
+    if let ScenarioMode::Against { replay, against } = &mode {
+        return cmd_scenario_against(replay, against);
     }
 
     // ---- replay path ----------------------------------------------------
-    if !args.str("replay").is_empty() {
-        let recorded = match read_trace_file(&args.str("replay")) {
+    if let ScenarioMode::Replay { path } = &mode {
+        let recorded = match read_trace_file(path) {
             Ok(r) => r,
             Err(e) => {
                 eprintln!("replay error: {e}");
@@ -270,8 +407,13 @@ fn cmd_scenario(argv: Vec<String>) -> i32 {
         1
     } else {
         // ---- record/run path --------------------------------------------
-        let mut spec = if !args.str("spec").is_empty() {
-            match std::fs::read_to_string(args.str("spec"))
+        let (source, backend, full_sweep) = match mode {
+            ScenarioMode::Run { source, backend, full_sweep } => (source, backend, full_sweep),
+            // list / fuzz / against / replay all returned above
+            _ => return 2,
+        };
+        let mut spec = match source {
+            SpecSource::File(path) => match std::fs::read_to_string(&path)
                 .map_err(arl_tangram::util::error::Error::from)
                 .and_then(|t| ScenarioSpec::from_json(&t))
             {
@@ -280,21 +422,14 @@ fn cmd_scenario(argv: Vec<String>) -> i32 {
                     eprintln!("spec error: {e}");
                     return 2;
                 }
-            }
-        } else if !args.str("pack").is_empty() {
-            match pack_by_name(&args.str("pack")) {
+            },
+            SpecSource::Pack(name) => match pack_by_name(&name) {
                 Some(s) => s,
                 None => {
-                    eprintln!(
-                        "unknown pack '{}' — try `arl-tangram scenario --list`",
-                        args.str("pack")
-                    );
+                    eprintln!("unknown pack '{name}' — try `arl-tangram scenario --list`");
                     return 2;
                 }
-            }
-        } else {
-            eprintln!("need --pack, --spec, --replay, or --list");
-            return 2;
+            },
         };
         if !args.str("seed").is_empty() {
             spec.seed = args.u64("seed");
@@ -324,25 +459,6 @@ fn cmd_scenario(argv: Vec<String>) -> i32 {
                     return 2;
                 }
             }
-        }
-        let backend = match BackendKind::parse(&args.str("backend")) {
-            Ok(b) => b,
-            Err(e) => {
-                eprintln!("{e}");
-                return 2;
-            }
-        };
-        let full_sweep = args.bool("full-sweep");
-        if full_sweep && backend != BackendKind::Tangram {
-            eprintln!("--full-sweep only applies to the tangram backend");
-            return 2;
-        }
-        if full_sweep && !args.str("record").is_empty() {
-            // a recorded trace replays through the default (dirty-pool)
-            // scheduler; pinning a sweep-mode recording would report
-            // spurious divergences
-            eprintln!("--full-sweep is an A/B debug mode and cannot be combined with --record");
-            return 2;
         }
         let t = Stopwatch::start();
         // the tangram path also surfaces the scheduler hot-path counters
@@ -419,6 +535,24 @@ fn print_resource_report(m: &Metrics, autoscaled: bool) {
             Metrics::cost_savings_of(&cost_rows) * 100.0
         );
     }
+    if m.multi_tenant() {
+        let mut costs: std::collections::BTreeMap<u32, f64> = std::collections::BTreeMap::new();
+        for (tenant, _pool, dollars) in m.tenant_cost_rows() {
+            *costs.entry(tenant).or_insert(0.0) += dollars;
+        }
+        for (tenant, r) in m.tenant_rollups() {
+            println!(
+                "tenant {tenant:<6}: {:5} actions ({} failed, {} retries) \
+                 | mean ACT {:8.2}s | mean queue {:8.2}s | attributed {:8.2} $",
+                r.actions,
+                r.failed,
+                r.retries,
+                r.mean_act_secs(),
+                r.mean_queue_secs(),
+                costs.get(&tenant).copied().unwrap_or(0.0)
+            );
+        }
+    }
 }
 
 /// `scenario --fuzz <seed> [--cases N]`: run the `testkit::oracle` invariant
@@ -428,11 +562,8 @@ fn print_resource_report(m: &Metrics, autoscaled: bool) {
 fn cmd_scenario_fuzz(args: &Args) -> i32 {
     let base = args.u64("fuzz");
     let cases = args.u64("cases").max(1);
+    // ScenarioArgs::validate already rejected --record with --cases != 1
     let record = args.str("record");
-    if !record.is_empty() && cases != 1 {
-        eprintln!("--record with --fuzz needs --cases 1");
-        return 2;
-    }
     for i in 0..cases {
         let seed = base.wrapping_add(i);
         let spec = fuzz_spec(seed);
@@ -532,6 +663,26 @@ fn cmd_scenario_against(path_a: &str, path_b: &str) -> i32 {
             r.cost_b,
             fmt_delta(r.cost_delta()),
         );
+    }
+    if !report.tenant_rows.is_empty() {
+        println!(
+            "{:<10} {:>8} {:>8} {:>11} {:>11} {:>8} {:>9} {:>9}",
+            "tenant", "acts A", "acts B", "ACT A (s)", "ACT B (s)", "dACT", "retries A",
+            "retries B"
+        );
+        for r in &report.tenant_rows {
+            println!(
+                "{:<10} {:>8} {:>8} {:>11.2} {:>11.2} {:>8} {:>9} {:>9}",
+                r.tenant,
+                r.a.actions,
+                r.b.actions,
+                r.a.mean_act_secs,
+                r.b.mean_act_secs,
+                fmt_delta(r.act_delta()),
+                r.a.retries,
+                r.b.retries,
+            );
+        }
     }
     if report.identical {
         println!("traces are byte-identical");
@@ -727,5 +878,119 @@ fn cmd_lint(argv: Vec<String>) -> i32 {
         0
     } else {
         1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> ScenarioArgs {
+        ScenarioArgs { backend: "tangram".into(), cases: 1, ..ScenarioArgs::default() }
+    }
+
+    #[test]
+    fn list_wins_over_everything() {
+        let mut a = base();
+        a.list = true;
+        a.fuzz = "7".into();
+        a.replay = "x.jsonl".into();
+        assert_eq!(a.validate(), Ok(ScenarioMode::List));
+    }
+
+    #[test]
+    fn fuzz_record_needs_single_case() {
+        let mut a = base();
+        a.fuzz = "7".into();
+        a.record = "t.jsonl".into();
+        a.cases = 3;
+        assert!(a.validate().unwrap_err().0.contains("--cases 1"));
+        a.cases = 1;
+        assert_eq!(a.validate(), Ok(ScenarioMode::Fuzz));
+        // the CLI clamps --cases to at least 1, so 0 means "one case"
+        a.cases = 0;
+        assert_eq!(a.validate(), Ok(ScenarioMode::Fuzz));
+    }
+
+    #[test]
+    fn against_requires_replay() {
+        let mut a = base();
+        a.against = "b.jsonl".into();
+        assert!(a.validate().unwrap_err().0.contains("--replay"));
+        a.replay = "a.jsonl".into();
+        assert_eq!(
+            a.validate(),
+            Ok(ScenarioMode::Against { replay: "a.jsonl".into(), against: "b.jsonl".into() })
+        );
+    }
+
+    #[test]
+    fn replay_mode_and_spec_precedence() {
+        let mut a = base();
+        a.replay = "a.jsonl".into();
+        assert_eq!(a.validate(), Ok(ScenarioMode::Replay { path: "a.jsonl".into() }));
+
+        let mut a = base();
+        a.pack = "steady-mix".into();
+        a.spec = "custom.json".into(); // --spec overrides --pack
+        assert_eq!(
+            a.validate(),
+            Ok(ScenarioMode::Run {
+                source: SpecSource::File("custom.json".into()),
+                backend: BackendKind::Tangram,
+                full_sweep: false,
+            })
+        );
+    }
+
+    #[test]
+    fn run_needs_a_source_and_a_known_backend() {
+        let a = base();
+        assert!(a.validate().unwrap_err().0.contains("--pack"));
+        let mut a = base();
+        a.pack = "steady-mix".into();
+        a.backend = "quantum".into();
+        assert!(a.validate().is_err());
+    }
+
+    #[test]
+    fn full_sweep_rules() {
+        let mut a = base();
+        a.pack = "steady-mix".into();
+        a.full_sweep = true;
+        assert!(matches!(a.validate(), Ok(ScenarioMode::Run { full_sweep: true, .. })));
+        a.backend = "k8s".into();
+        assert!(a.validate().unwrap_err().0.contains("tangram"));
+        a.backend = "tangram".into();
+        a.record = "t.jsonl".into();
+        assert!(a.validate().unwrap_err().0.contains("--record"));
+    }
+
+    #[test]
+    fn admission_needs_autoscale_or_spec() {
+        let mut a = base();
+        a.pack = "steady-mix".into();
+        a.admission = true;
+        assert!(a.validate().unwrap_err().0.contains("--autoscale"));
+        a.autoscale = true;
+        a.autoscale_policy = "queue".into();
+        assert!(matches!(a.validate(), Ok(ScenarioMode::Run { .. })));
+        // a spec file may embed its own autoscale config; that case is
+        // checked after the spec is loaded, not at the flag level
+        let mut a = base();
+        a.spec = "s.json".into();
+        a.admission = true;
+        assert!(matches!(a.validate(), Ok(ScenarioMode::Run { .. })));
+    }
+
+    #[test]
+    fn autoscale_policy_is_parse_checked() {
+        let mut a = base();
+        a.pack = "steady-mix".into();
+        a.autoscale = true;
+        a.autoscale_policy = "psychic".into();
+        assert!(a.validate().is_err());
+        a.autoscale_policy = "ewma".into();
+        assert!(a.validate().is_ok());
     }
 }

@@ -5,7 +5,7 @@
 //! normalized durations; Fig. 8 = mean ACT vs batch/capacity; Table 1 =
 //! exec/queue/overhead decomposition.
 
-use crate::action::{ActionId, ActionKind, TaskId, TrajId};
+use crate::action::{ActionId, ActionKind, TaskId, TenantId, TrajId};
 use crate::sim::{SimDur, SimTime};
 use crate::util::json::Json;
 use crate::util::{mean, percentile};
@@ -16,6 +16,9 @@ use std::collections::{BTreeMap, HashMap};
 pub struct ActionRecord {
     pub id: ActionId,
     pub task: TaskId,
+    /// Tenant (training job) the action belongs to; `TenantId(0)` in
+    /// single-tenant runs.
+    pub tenant: TenantId,
     pub trajectory: TrajId,
     pub kind: ActionKind,
     pub submitted: SimTime,
@@ -159,6 +162,66 @@ pub struct ActionLedger {
     pub done: u64,
     /// Terminal failures (retry budget exhausted).
     pub failed: u64,
+}
+
+/// Per-tenant aggregate over the action records (multi-tenant reporting):
+/// counts plus summed ACT / queue-wait nanoseconds. Summing every tenant's
+/// rollup field-by-field reproduces the global rollup **bitwise** — the
+/// integer sums carry no rounding, which is what the tenancy conservation
+/// tests assert.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct TenantRollup {
+    /// All completed actions of the tenant (failed included).
+    pub actions: u64,
+    /// Terminally-failed actions.
+    pub failed: u64,
+    /// Transparent retries summed over all actions.
+    pub retries: u64,
+    /// Summed ACT (submit→finish) of successful actions, virtual ns.
+    pub act_ns: u64,
+    /// Summed queue wait (submit→start) of successful actions, virtual ns.
+    pub queue_ns: u64,
+}
+
+impl TenantRollup {
+    fn absorb(&mut self, a: &ActionRecord) {
+        self.actions += 1;
+        self.retries += a.retries as u64;
+        if a.failed {
+            self.failed += 1;
+        } else {
+            self.act_ns += a.act().0;
+            self.queue_ns += a.queue_dur().0;
+        }
+    }
+
+    /// Mean ACT in seconds over the tenant's successful actions.
+    pub fn mean_act_secs(&self) -> f64 {
+        let ok = self.actions - self.failed;
+        if ok == 0 {
+            return 0.0;
+        }
+        self.act_ns as f64 / 1e9 / ok as f64
+    }
+
+    /// Mean queue wait in seconds over the tenant's successful actions.
+    pub fn mean_queue_secs(&self) -> f64 {
+        let ok = self.actions - self.failed;
+        if ok == 0 {
+            return 0.0;
+        }
+        self.queue_ns as f64 / 1e9 / ok as f64
+    }
+}
+
+/// Provision pool an action kind's resource consumption bills against
+/// (matches the [`crate::coordinator::Backend::provisioned`] gauge names).
+pub fn pool_of_kind(kind: ActionKind) -> &'static str {
+    match kind {
+        ActionKind::EnvExec | ActionKind::RewardCpu => "cpu_cores",
+        ActionKind::RewardModel => "gpus",
+        ActionKind::ApiCall => "api_lanes",
+    }
 }
 
 impl ActionLedger {
@@ -421,6 +484,82 @@ impl Metrics {
         self.actions.iter().filter(|a| a.failed).count()
     }
 
+    // ---- multi-tenant rollups --------------------------------------------
+
+    /// Whether any action belongs to a tenant other than 0. Gates every
+    /// tenant-specific serialization so single-tenant runs keep their exact
+    /// bytes.
+    pub fn multi_tenant(&self) -> bool {
+        self.actions.iter().any(|a| a.tenant.0 != 0)
+    }
+
+    /// Per-tenant aggregates, sorted by tenant id. Computed on demand — the
+    /// collector itself stays a flat record sink.
+    pub fn tenant_rollups(&self) -> BTreeMap<u32, TenantRollup> {
+        let mut out: BTreeMap<u32, TenantRollup> = BTreeMap::new();
+        for a in &self.actions {
+            out.entry(a.tenant.0).or_default().absorb(a);
+        }
+        out
+    }
+
+    /// Mean ACT in seconds over one tenant's successful actions.
+    pub fn mean_act_of_tenant(&self, tenant: u32) -> f64 {
+        mean(&self
+            .actions
+            .iter()
+            .filter(|a| !a.failed && a.tenant.0 == tenant)
+            .map(|a| a.act().secs_f64())
+            .collect::<Vec<_>>())
+    }
+
+    /// A tenant's share of each provision pool's busy unit-time:
+    /// `(pool, share in [0,1])`, sorted by pool, pools the tenant never
+    /// touched omitted. Shares are `units × busy-time` ratios, so across
+    /// tenants they sum to 1 per pool with any usage at all.
+    pub fn tenant_pool_shares(&self) -> BTreeMap<u32, BTreeMap<&'static str, f64>> {
+        // u128 unit-time sums: 64-bit ns × 64-bit units cannot overflow
+        let mut per: BTreeMap<u32, BTreeMap<&'static str, u128>> = BTreeMap::new();
+        let mut totals: BTreeMap<&'static str, u128> = BTreeMap::new();
+        for a in &self.actions {
+            let w = a.units as u128 * (a.finished - a.started).0 as u128;
+            if w == 0 {
+                continue;
+            }
+            let pool = pool_of_kind(a.kind);
+            *per.entry(a.tenant.0).or_default().entry(pool).or_default() += w;
+            *totals.entry(pool).or_default() += w;
+        }
+        per.into_iter()
+            .map(|(t, pools)| {
+                let shares = pools
+                    .into_iter()
+                    .map(|(pool, w)| (pool, w as f64 / totals[pool] as f64))
+                    .collect();
+                (t, shares)
+            })
+            .collect()
+    }
+
+    /// Per-tenant dollar attribution: each pool's **used** cost (rate ×
+    /// integrated unit-hours) prorated by the tenant's busy unit-time share
+    /// of that pool. Rows `(tenant, pool, dollars)` sorted by (tenant,
+    /// pool); without a cost model the rates fall back to 1.0 (plain
+    /// unit-hours), same as [`Self::pool_cost`].
+    pub fn tenant_cost_rows(&self) -> Vec<(u32, String, f64)> {
+        let mut out = Vec::new();
+        let mut used_cache: BTreeMap<&'static str, f64> = BTreeMap::new();
+        for (tenant, shares) in self.tenant_pool_shares() {
+            for (pool, share) in shares {
+                let used = *used_cache
+                    .entry(pool)
+                    .or_insert_with(|| self.pool_cost(pool).0);
+                out.push((tenant, pool.to_string(), used * share));
+            }
+        }
+        out
+    }
+
     pub fn total_retries(&self) -> u64 {
         self.actions.iter().map(|a| a.retries as u64).sum()
     }
@@ -435,7 +574,7 @@ impl Metrics {
             Json::Num(n as f64)
         }
         let actions = Json::arr(self.actions.iter().map(|a| {
-            Json::obj(vec![
+            let mut pairs = vec![
                 ("id", ns(a.id.0)),
                 ("task", ns(a.task.0 as u64)),
                 ("traj", ns(a.trajectory.0)),
@@ -447,7 +586,13 @@ impl Metrics {
                 ("units", ns(a.units)),
                 ("retries", ns(a.retries as u64)),
                 ("failed", Json::Bool(a.failed)),
-            ])
+            ];
+            // tenant 0 is implicit so single-tenant summaries keep their
+            // exact historical bytes
+            if a.tenant.0 != 0 {
+                pairs.push(("tenant", ns(a.tenant.0 as u64)));
+            }
+            Json::obj(pairs)
         }));
         let trajectories = Json::arr(self.trajectories.iter().map(|t| {
             Json::obj(vec![
@@ -499,6 +644,40 @@ impl Metrics {
             pairs.push(("cost_rates", rates_json));
             pairs.push(("savings_vs_static_cost", Json::num(self.savings_vs_static_cost())));
         }
+        // tenant rollups appear ONLY in multi-tenant runs — same gate as
+        // the per-action tenant key
+        let tenant_keys: Vec<String>;
+        if self.multi_tenant() {
+            let mut costs: BTreeMap<u32, Vec<(String, f64)>> = BTreeMap::new();
+            for (t, pool, dollars) in self.tenant_cost_rows() {
+                costs.entry(t).or_default().push((pool, dollars));
+            }
+            let rollups = self.tenant_rollups();
+            tenant_keys = rollups.keys().map(|t| t.to_string()).collect();
+            let objs: Vec<(&str, Json)> = rollups
+                .iter()
+                .zip(tenant_keys.iter())
+                .map(|((t, r), key)| {
+                    let mut p = vec![
+                        ("act_ns", ns(r.act_ns)),
+                        ("actions", ns(r.actions)),
+                        ("failed", ns(r.failed)),
+                        ("queue_ns", ns(r.queue_ns)),
+                        ("retries", ns(r.retries)),
+                    ];
+                    if let Some(c) = costs.get(t) {
+                        p.push((
+                            "cost",
+                            Json::obj(
+                                c.iter().map(|(pool, d)| (pool.as_str(), Json::num(*d))).collect(),
+                            ),
+                        ));
+                    }
+                    (key.as_str(), Json::obj(p))
+                })
+                .collect();
+            pairs.push(("tenant_rollups", Json::obj(objs)));
+        }
         Json::obj(pairs)
     }
 }
@@ -511,6 +690,7 @@ mod tests {
         ActionRecord {
             id: ActionId(id),
             task: TaskId(0),
+            tenant: TenantId(0),
             trajectory: TrajId(id),
             kind,
             submitted: SimTime(sub * 1_000_000_000),
@@ -710,6 +890,80 @@ mod tests {
         assert!(j.contains("savings_vs_static_cost"));
         m.cost_rates = None;
         assert!(!m.to_json().to_string().contains("savings_vs_static_cost"));
+    }
+
+    #[test]
+    fn tenant_rollups_sum_bitwise_to_global() {
+        let mut m = Metrics::new();
+        m.actions.push(rec(1, 0, 2, 10, ActionKind::EnvExec));
+        let mut b = rec(2, 1, 3, 9, ActionKind::ApiCall);
+        b.tenant = TenantId(1);
+        b.retries = 2;
+        m.actions.push(b);
+        let mut c = rec(3, 5, 6, 7, ActionKind::RewardModel);
+        c.tenant = TenantId(1);
+        c.failed = true;
+        m.actions.push(c);
+        assert!(m.multi_tenant());
+        let rolls = m.tenant_rollups();
+        assert_eq!(rolls.len(), 2);
+        let mut total = TenantRollup::default();
+        for r in rolls.values() {
+            total.actions += r.actions;
+            total.failed += r.failed;
+            total.retries += r.retries;
+            total.act_ns += r.act_ns;
+            total.queue_ns += r.queue_ns;
+        }
+        // bitwise: the u64 sums over tenants equal the global sums
+        let mut global = TenantRollup::default();
+        for a in &m.actions {
+            global.absorb(a);
+        }
+        assert_eq!(total, global);
+        assert_eq!(global.actions, 3);
+        assert_eq!(global.failed, 1);
+        assert_eq!(global.retries, 2);
+        assert!((rolls[&1].mean_act_secs() - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tenant_pool_shares_sum_to_one_per_pool() {
+        let mut m = Metrics::new();
+        // tenant 0: 10 unit-secs of cpu; tenant 1: 30 unit-secs of cpu
+        let a = rec(1, 0, 0, 10, ActionKind::EnvExec); // units 1, busy 10s
+        m.actions.push(a);
+        let mut b = rec(2, 0, 0, 30, ActionKind::RewardCpu);
+        b.tenant = TenantId(1);
+        m.actions.push(b);
+        let shares = m.tenant_pool_shares();
+        assert!((shares[&0]["cpu_cores"] - 0.25).abs() < 1e-12);
+        assert!((shares[&1]["cpu_cores"] - 0.75).abs() < 1e-12);
+        // cost rows prorate the used pool bill by exactly those shares
+        m.provision.push(prov(0, "cpu_cores", 4));
+        let rows = m.tenant_cost_rows();
+        assert_eq!(rows.len(), 2);
+        let total: f64 = rows.iter().map(|(_, _, d)| d).sum();
+        let (used, _) = m.pool_cost("cpu_cores");
+        assert!((total - used).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tenant_keys_only_serialize_multi_tenant() {
+        let mut m = Metrics::new();
+        m.actions.push(rec(1, 0, 2, 10, ActionKind::EnvExec));
+        let j = m.to_json().to_string();
+        assert!(!j.contains("tenant"), "single-tenant bytes must be unchanged");
+        let mut b = rec(2, 0, 1, 5, ActionKind::ApiCall);
+        b.tenant = TenantId(1);
+        m.actions.push(b);
+        let j = m.to_json().to_string();
+        assert!(j.contains("\"tenant\":1"));
+        assert!(j.contains("tenant_rollups"));
+        let parsed = Json::parse(&j).unwrap();
+        let rolls = parsed.get("tenant_rollups").unwrap();
+        assert!(rolls.get("0").is_some());
+        assert!(rolls.get("1").is_some());
     }
 
     #[test]

@@ -18,7 +18,7 @@
 use super::{ActionTemplate, Phase, TrajectoryPlan};
 use crate::action::{
     ActionKind, CostSpec, DimCost, ElasticityModel, ResourceClass,
-    ResourceKindId, ResourceRegistry, ServiceId, TaskId,
+    ResourceKindId, ResourceRegistry, ServiceId, TaskId, TenantId,
 };
 use crate::cluster::api::ApiEndpointSpec;
 use crate::managers::ServiceSpec;
@@ -158,7 +158,13 @@ impl WorkloadKind {
 #[derive(Debug, Clone)]
 pub struct Workload {
     pub task: TaskId,
+    /// Tenant (training job) this task belongs to in multi-tenant runs;
+    /// `TenantId(0)` for the classic single-tenant experiments.
+    pub tenant: TenantId,
     pub kind: WorkloadKind,
+    /// Arrival phase: the tenant's first step starts this far into the run
+    /// (ZERO = all tenants arrive together).
+    pub phase: SimDur,
     /// Duration of the (GPU-training-cluster) train phase per step.
     pub train_dur: SimDur,
     /// Max CPU DoP for scalable reward actions (paper ablation: 32).
@@ -175,7 +181,15 @@ impl Workload {
             WorkloadKind::DeepSearch => SimDur::from_secs(60),
             WorkloadKind::Mopd => SimDur::from_secs(120),
         };
-        Workload { task, kind, train_dur, max_reward_dop: 32, fixed_dop: None }
+        Workload {
+            task,
+            tenant: TenantId(0),
+            kind,
+            phase: SimDur::ZERO,
+            train_dur,
+            max_reward_dop: 32,
+            fixed_dop: None,
+        }
     }
 
     /// Materialize one trajectory plan.

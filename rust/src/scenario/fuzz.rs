@@ -18,7 +18,7 @@
 use crate::autoscale::{AutoscaleCfg, PolicyKind};
 use crate::lanes::CostModel;
 use crate::rollout::workloads::{CatalogCfg, WorkloadKind};
-use crate::scenario::{ScenarioEvent, ScenarioSpec, TimedEvent};
+use crate::scenario::{ScenarioEvent, ScenarioSpec, TenantMix, TimedEvent};
 use crate::sim::{SimDur, SimTime};
 use crate::util::rng::SplitMix64;
 use std::collections::BTreeMap;
@@ -99,6 +99,31 @@ pub fn fuzz_spec(seed: u64) -> ScenarioSpec {
         None
     };
 
+    // Multi-tenant fork: drawn from a separately-salted stream so the base
+    // spec for a given seed keeps its exact bytes — a multi-tenant fuzz case
+    // is its single-tenant twin with the same workloads re-homed to tenant 0
+    // plus 1–2 extra tenants under random WFQ weights and arrival phases.
+    let mut tr = SplitMix64::new(seed ^ 0x5EED_F022_D1CE_0002);
+    let (workloads, tenants) = if tr.chance(1, 2) {
+        let mut tenants = vec![TenantMix {
+            id: 0,
+            weight: tr.range(1, 4) as u32,
+            workloads,
+            phase: SimDur::ZERO,
+        }];
+        for id in 1..=tr.range(1, 2) as u32 {
+            tenants.push(TenantMix {
+                id,
+                weight: tr.range(1, 4) as u32,
+                workloads: (0..tr.range(1, 2)).map(|_| *tr.pick(&kinds)).collect(),
+                phase: SimDur::from_secs(tr.range(0, 10)),
+            });
+        }
+        (vec![], tenants)
+    } else {
+        (workloads, vec![])
+    };
+
     ScenarioSpec {
         name: format!("fuzz-{seed}"),
         workloads,
@@ -110,6 +135,7 @@ pub fn fuzz_spec(seed: u64) -> ScenarioSpec {
         events,
         autoscale,
         cost,
+        tenants,
     }
 }
 
@@ -149,5 +175,15 @@ mod tests {
         assert!(specs.iter().any(|s| s.cost.is_some()));
         assert!(specs.iter().any(|s| s.cost.is_none()));
         assert!(specs.iter().any(|s| s.autoscale.as_ref().is_some_and(|a| a.admission)));
+        // tenancy: both single- and multi-tenant shapes appear, and every
+        // multi-tenant spec yields non-trivial weights somewhere in the window
+        assert!(specs.iter().any(|s| s.tenants.is_empty()));
+        assert!(specs.iter().any(|s| s.tenants.len() >= 2));
+        assert!(specs
+            .iter()
+            .any(|s| s.tenants.iter().any(|t| t.weight > 1)));
+        assert!(specs
+            .iter()
+            .any(|s| s.tenants.iter().any(|t| t.phase > SimDur::ZERO)));
     }
 }

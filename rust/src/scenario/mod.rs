@@ -35,12 +35,13 @@ pub use packs::{builtin_packs, pack_by_name, pack_description};
 pub use replay::{
     ab_compare, build_backend, diff_summaries, diff_traces, parse_trace_file, read_trace_file,
     replay_trace, resolved_cost_rates, run_scenario, run_scenario_tangram, summary_json,
-    trace_file_contents, trace_pool_stats, write_trace_file, AbReport, AbRow, RecordedTrace,
-    ReplayReport, ScenarioOutcome, SchedStats, TracePoolStats,
+    trace_file_contents, trace_pool_stats, trace_tenant_stats, write_trace_file, AbReport, AbRow,
+    AbTenantRow, RecordedTrace, ReplayReport, ScenarioOutcome, SchedStats, TracePoolStats,
+    TraceTenantStats,
 };
 pub use trace::{TraceEvent, TraceKind, TraceRecorder};
 
-use crate::action::TaskId;
+use crate::action::{TaskId, TenantId};
 use crate::autoscale::{AutoscaleCfg, PoolClass};
 use crate::config::BackendKind;
 use crate::lanes::CostModel;
@@ -152,12 +153,36 @@ pub struct TimedEvent {
     pub event: ScenarioEvent,
 }
 
+/// One tenant (training job) in a multi-tenant scenario: its action-level
+/// WFQ weight at the lane queues, its workload mix, and its arrival phase.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantMix {
+    /// Tenant id carried on every action (ids strictly increasing across
+    /// the `tenants` array; 0 is the implicit tenant of single-tenant
+    /// specs).
+    pub id: u32,
+    /// Weighted-fair-queueing weight (≥ 1). All-equal weights make WFQ
+    /// order indistinguishable from FCFS on a per-tenant basis.
+    pub weight: u32,
+    /// The tenant's workload mix; task ids are assigned by global position
+    /// across the concatenated tenant mixes.
+    pub workloads: Vec<WorkloadKind>,
+    /// Arrival phase: the tenant's first step starts this far into the run
+    /// (models a job joining a busy shared deployment).
+    pub phase: SimDur,
+}
+
 /// Declarative scenario description (JSON-loadable via `util::json`).
 #[derive(Debug, Clone)]
 pub struct ScenarioSpec {
     pub name: String,
-    /// Workload mix; task ids are assigned by position.
+    /// Workload mix; task ids are assigned by position. Mutually exclusive
+    /// with `tenants` (single-tenant shorthand — every workload belongs to
+    /// the implicit tenant 0).
     pub workloads: Vec<WorkloadKind>,
+    /// Multi-tenant workload mixes (empty = single-tenant; the key is then
+    /// omitted from the serialized spec, keeping legacy bytes identical).
+    pub tenants: Vec<TenantMix>,
     pub batch: usize,
     pub steps: u32,
     pub seed: u64,
@@ -180,6 +205,44 @@ pub struct ScenarioSpec {
 
 fn workload_kind_parse(s: &str) -> Result<WorkloadKind> {
     WorkloadKind::parse(s).ok_or_else(|| err!("unknown workload '{s}'"))
+}
+
+fn tenant_mix_from_json(j: &Json) -> Result<TenantMix> {
+    let obj = j.as_obj().ok_or_else(|| err!("tenant mix must be an object"))?;
+    let mut t = TenantMix { id: 0, weight: 1, workloads: vec![], phase: SimDur::ZERO };
+    for (k, v) in obj {
+        match k.as_str() {
+            "id" => {
+                t.id = v.as_u64().ok_or_else(|| err!("tenant 'id' must be an integer"))? as u32
+            }
+            "weight" => {
+                t.weight =
+                    v.as_u64().ok_or_else(|| err!("tenant 'weight' must be an integer"))? as u32
+            }
+            "workloads" => {
+                t.workloads = v
+                    .as_arr()
+                    .ok_or_else(|| err!("tenant 'workloads' must be an array"))?
+                    .iter()
+                    .map(|w| {
+                        workload_kind_parse(
+                            w.as_str().ok_or_else(|| err!("workload must be a string"))?,
+                        )
+                    })
+                    .collect::<Result<_>>()?
+            }
+            "phase_secs" => {
+                let s =
+                    v.as_f64().ok_or_else(|| err!("tenant 'phase_secs' must be a number"))?;
+                if s < 0.0 {
+                    bail!("tenant 'phase_secs' must be non-negative");
+                }
+                t.phase = SimDur::from_secs_f64(s);
+            }
+            other => bail!("unknown tenant key '{other}'"),
+        }
+    }
+    Ok(t)
 }
 
 fn catalog_to_json(c: &CatalogCfg) -> Json {
@@ -232,15 +295,43 @@ impl ScenarioSpec {
         }
     }
 
+    /// The scenario's effective workload mix with owning tenant and arrival
+    /// phase per entry: the top-level `workloads` under the implicit tenant
+    /// 0, or the concatenation of the per-tenant mixes. Task ids are
+    /// assigned by position in this flattened order.
+    fn flat_workloads(&self) -> Vec<(WorkloadKind, u32, SimDur)> {
+        if self.tenants.is_empty() {
+            self.workloads.iter().map(|&k| (k, 0, SimDur::ZERO)).collect()
+        } else {
+            self.tenants
+                .iter()
+                .flat_map(|t| t.workloads.iter().map(|&k| (k, t.id, t.phase)))
+                .collect()
+        }
+    }
+
     /// The subset of this scenario's workload mix the backend supports,
-    /// with task ids stable across backends (assigned by mix position).
+    /// with task ids stable across backends (assigned by flattened mix
+    /// position) and tenant/phase carried onto each workload.
     pub fn workloads_for(&self, backend: BackendKind) -> Vec<Workload> {
-        self.workloads
-            .iter()
+        self.flat_workloads()
+            .into_iter()
             .enumerate()
-            .filter(|(_, &k)| Self::backend_supports(backend, k))
-            .map(|(i, &k)| Workload::new(TaskId(i as u32), k))
+            .filter(|&(_, (k, _, _))| Self::backend_supports(backend, k))
+            .map(|(i, (k, tenant, phase))| {
+                let mut w = Workload::new(TaskId(i as u32), k);
+                w.tenant = TenantId(tenant);
+                w.phase = phase;
+                w
+            })
             .collect()
+    }
+
+    /// Per-tenant WFQ weights for [`crate::coordinator::Session`]
+    /// (empty on single-tenant specs — every queue then stays at the
+    /// FCFS-equivalent default weight).
+    pub fn tenant_weights(&self) -> Vec<(u32, u32)> {
+        self.tenants.iter().map(|t| (t.id, t.weight)).collect()
     }
 
     /// Driver configuration for this scenario.
@@ -258,8 +349,29 @@ impl ScenarioSpec {
         if self.name.is_empty() {
             bail!("scenario needs a name");
         }
-        if self.workloads.is_empty() {
+        if self.workloads.is_empty() && self.tenants.is_empty() {
             bail!("scenario '{}' has no workloads", self.name);
+        }
+        if !self.tenants.is_empty() {
+            if !self.workloads.is_empty() {
+                bail!(
+                    "scenario '{}': declare workloads under 'tenants' or at top level, not both",
+                    self.name
+                );
+            }
+            let mut prev: Option<u32> = None;
+            for t in &self.tenants {
+                if prev.is_some_and(|p| t.id <= p) {
+                    bail!("scenario '{}': tenant ids must be strictly increasing", self.name);
+                }
+                prev = Some(t.id);
+                if t.weight == 0 {
+                    bail!("scenario '{}': tenant {} weight must be ≥ 1", self.name, t.id);
+                }
+                if t.workloads.is_empty() {
+                    bail!("scenario '{}': tenant {} has no workloads", self.name, t.id);
+                }
+            }
         }
         if self.batch == 0 || self.steps == 0 {
             bail!("scenario '{}': batch and steps must be positive", self.name);
@@ -331,6 +443,24 @@ impl ScenarioSpec {
         if let Some(cost) = &self.cost {
             pairs.push(("cost", cost.to_json()));
         }
+        // the tenants key appears ONLY on multi-tenant specs, so every
+        // legacy single-tenant spec keeps its exact bytes
+        if !self.tenants.is_empty() {
+            pairs.push((
+                "tenants",
+                Json::arr(self.tenants.iter().map(|t| {
+                    Json::obj(vec![
+                        ("id", Json::num(t.id as f64)),
+                        ("weight", Json::num(t.weight as f64)),
+                        (
+                            "workloads",
+                            Json::arr(t.workloads.iter().map(|w| Json::str(w.name()))),
+                        ),
+                        ("phase_secs", Json::num(t.phase.secs_f64())),
+                    ])
+                })),
+            ));
+        }
         Json::obj(pairs)
     }
 
@@ -347,6 +477,7 @@ impl ScenarioSpec {
             events: vec![],
             autoscale: None,
             cost: None,
+            tenants: vec![],
         };
         for (k, v) in obj {
             match k.as_str() {
@@ -389,6 +520,14 @@ impl ScenarioSpec {
                 "catalog" => spec.catalog = catalog_from_json(v)?,
                 "autoscale" => spec.autoscale = Some(AutoscaleCfg::from_json(v)?),
                 "cost" => spec.cost = Some(CostModel::from_json(v)?),
+                "tenants" => {
+                    spec.tenants = v
+                        .as_arr()
+                        .ok_or_else(|| err!("'tenants' must be an array"))?
+                        .iter()
+                        .map(tenant_mix_from_json)
+                        .collect::<Result<_>>()?
+                }
                 "events" => {
                     spec.events = v
                         .as_arr()
@@ -509,6 +648,76 @@ mod tests {
             r#"{"name":"x","workloads":["coding"],"cost":{"gpus":-2}}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn tenant_specs_round_trip_and_validate() {
+        let spec = ScenarioSpec::from_json(
+            r#"{"name":"t","tenants":[
+                {"id":0,"weight":4,"workloads":["coding"],"phase_secs":0},
+                {"id":1,"weight":1,"workloads":["mopd","deepsearch"],"phase_secs":20}
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.tenants.len(), 2);
+        assert_eq!(spec.tenant_weights(), vec![(0, 4), (1, 1)]);
+        let j = spec.to_json().to_string();
+        assert!(j.contains("\"tenants\""));
+        let back = ScenarioSpec::from_json(&j).unwrap();
+        assert_eq!(back.tenants, spec.tenants);
+        assert_eq!(back.to_json().to_string(), j);
+        // single-tenant specs keep their legacy bytes — no tenants key
+        let plain = pack_by_name("steady-mix").unwrap();
+        assert!(!plain.to_json().to_string().contains("\"tenants\""));
+        assert!(plain.tenant_weights().is_empty());
+    }
+
+    #[test]
+    fn tenant_validation_rejects_bad_mixes() {
+        // both top-level workloads and tenants
+        assert!(ScenarioSpec::from_json(
+            r#"{"name":"t","workloads":["coding"],"tenants":[{"id":0,"weight":1,"workloads":["coding"]}]}"#
+        )
+        .is_err());
+        // non-increasing ids
+        assert!(ScenarioSpec::from_json(
+            r#"{"name":"t","tenants":[{"id":1,"weight":1,"workloads":["coding"]},{"id":1,"weight":1,"workloads":["mopd"]}]}"#
+        )
+        .is_err());
+        // zero weight
+        assert!(ScenarioSpec::from_json(
+            r#"{"name":"t","tenants":[{"id":0,"weight":0,"workloads":["coding"]}]}"#
+        )
+        .is_err());
+        // empty tenant mix
+        assert!(ScenarioSpec::from_json(
+            r#"{"name":"t","tenants":[{"id":0,"weight":1,"workloads":[]}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn tenant_workloads_flatten_with_stable_task_ids() {
+        let spec = ScenarioSpec::from_json(
+            r#"{"name":"t","tenants":[
+                {"id":0,"weight":2,"workloads":["coding","mopd"]},
+                {"id":3,"weight":1,"workloads":["deepsearch"],"phase_secs":5}
+            ]}"#,
+        )
+        .unwrap();
+        let all = spec.workloads_for(BackendKind::Tangram);
+        assert_eq!(all.len(), 3);
+        assert_eq!(all[0].task, TaskId(0));
+        assert_eq!(all[0].tenant, TenantId(0));
+        assert_eq!(all[1].kind, WorkloadKind::Mopd);
+        assert_eq!(all[2].task, TaskId(2));
+        assert_eq!(all[2].tenant, TenantId(3));
+        assert_eq!(all[2].phase, SimDur::from_secs(5));
+        // capability filtering keeps flattened task ids stable
+        let un = spec.workloads_for(BackendKind::Unmanaged);
+        assert_eq!(un.len(), 1);
+        assert_eq!(un[0].task, TaskId(2));
+        assert_eq!(un[0].tenant, TenantId(3));
     }
 
     #[test]

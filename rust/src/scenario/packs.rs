@@ -7,7 +7,7 @@
 //! bursts, API rate-limit flaps, GPU restore-storms, and mid-run CPU and
 //! GPU pool squeezes. `arl-tangram scenario --list` prints this catalog.
 
-use super::{ScenarioEvent, ScenarioSpec, TimedEvent};
+use super::{ScenarioEvent, ScenarioSpec, TenantMix, TimedEvent};
 use crate::rollout::workloads::{CatalogCfg, WorkloadKind};
 use crate::sim::{SimDur, SimTime};
 
@@ -41,6 +41,7 @@ pub fn builtin_packs() -> Vec<ScenarioSpec> {
             events: vec![],
             autoscale: None,
             cost: None,
+            tenants: vec![],
         },
         // Thundering-herd arrivals plus a mid-burst provider flap: the
         // §2.3 burstiness story with the provider fighting back.
@@ -58,6 +59,7 @@ pub fn builtin_packs() -> Vec<ScenarioSpec> {
             ],
             autoscale: None,
             cost: None,
+            tenants: vec![],
         },
         // Repeated deep rate-limit flaps on the DeepSearch path: quota and
         // concurrency collapse to 5% of baseline, twice, so the admission
@@ -78,6 +80,7 @@ pub fn builtin_packs() -> Vec<ScenarioSpec> {
             ],
             autoscale: None,
             cost: None,
+            tenants: vec![],
         },
         // Restore storms: warm (service, DoP) caches are dropped every few
         // tens of seconds across the reward-burst window, so teacher and
@@ -104,6 +107,7 @@ pub fn builtin_packs() -> Vec<ScenarioSpec> {
             ],
             autoscale: None,
             cost: None,
+            tenants: vec![],
         },
         // Mid-run CPU pool squeeze: half of every node's cores cordon off
         // at t=20s and return at t=100s (elastic-pool resizing; Mopd rides
@@ -122,6 +126,7 @@ pub fn builtin_packs() -> Vec<ScenarioSpec> {
             ],
             autoscale: None,
             cost: None,
+            tenants: vec![],
         },
         // Serverless cold-start storm: two RL steps of coding + MOPD with
         // repeated warm-cache drops, so GPU restores keep going cold while
@@ -147,6 +152,7 @@ pub fn builtin_packs() -> Vec<ScenarioSpec> {
             ],
             autoscale: None,
             cost: None,
+            tenants: vec![],
         },
         // Teacher-count sweep: MOPD against twice the teacher fleet on a
         // pool that cannot pin them all resident — multiplexing pressure,
@@ -168,6 +174,7 @@ pub fn builtin_packs() -> Vec<ScenarioSpec> {
             events: vec![at(30, ScenarioEvent::GpuCacheFlush)],
             autoscale: None,
             cost: None,
+            tenants: vec![],
         },
         // GPU-thrash: teacher-sweep-style arrivals under cache-flush storms
         // plus a mid-run provider-side GPU squeeze — the GPU-elasticity A/B
@@ -203,6 +210,7 @@ pub fn builtin_packs() -> Vec<ScenarioSpec> {
             ],
             autoscale: None,
             cost: None,
+            tenants: vec![],
         },
         // Multi-step flap+squeeze composition: API rate-limit flaps and CPU
         // pool squeezes interleave across two RL steps, so admission rides
@@ -226,6 +234,81 @@ pub fn builtin_packs() -> Vec<ScenarioSpec> {
             ],
             autoscale: None,
             cost: None,
+            tenants: vec![],
+        },
+        // Two coding tenants on a deliberately small shared CPU pool: a
+        // steady high-weight job (one task) vs a bursty low-weight sweep
+        // (four tasks arriving 20s late). Under plain FCFS the burst buries
+        // the steady tenant's queue waits; the lane WFQ keeps the steady
+        // tenant's ACT near its isolated-run value — the fairness
+        // differential the tenancy tests measure.
+        ScenarioSpec {
+            name: "tenant-fairshare".into(),
+            workloads: vec![],
+            batch: 10,
+            steps: 1,
+            seed: 1010,
+            arrival_spread: SimDur::ZERO,
+            catalog: CatalogCfg {
+                cpu_nodes: 2,
+                cores_per_node: 32,
+                gpu_nodes: 1,
+                n_teachers: 2,
+                ..CatalogCfg::default()
+            },
+            events: vec![],
+            autoscale: None,
+            cost: None,
+            tenants: vec![
+                TenantMix {
+                    id: 0,
+                    weight: 8,
+                    workloads: vec![WorkloadKind::Coding],
+                    phase: SimDur::ZERO,
+                },
+                TenantMix {
+                    id: 1,
+                    weight: 1,
+                    workloads: vec![
+                        WorkloadKind::Coding,
+                        WorkloadKind::Coding,
+                        WorkloadKind::Coding,
+                        WorkloadKind::Coding,
+                    ],
+                    phase: SimDur::from_secs(20),
+                },
+            ],
+        },
+        // A batch MOPD sweep sharing GPUs and API lanes with an interactive
+        // DeepSearch job that joins 5s in at 4× weight: the cross-class
+        // multi-tenant mix (teacher GPU bursts vs rate-limited API calls +
+        // judge rewards) with per-tenant cost attribution across all three
+        // pools.
+        ScenarioSpec {
+            name: "tenant-batch-interactive".into(),
+            workloads: vec![],
+            batch: 8,
+            steps: 1,
+            seed: 1111,
+            arrival_spread: SimDur::ZERO,
+            catalog: small_catalog(),
+            events: vec![],
+            autoscale: None,
+            cost: None,
+            tenants: vec![
+                TenantMix {
+                    id: 0,
+                    weight: 1,
+                    workloads: vec![WorkloadKind::Mopd],
+                    phase: SimDur::ZERO,
+                },
+                TenantMix {
+                    id: 1,
+                    weight: 4,
+                    workloads: vec![WorkloadKind::DeepSearch],
+                    phase: SimDur::from_secs(5),
+                },
+            ],
         },
     ]
 }
@@ -250,6 +333,8 @@ pub fn pack_description(name: &str) -> &'static str {
         "teacher-sweep" => "8 teachers on a pool that cannot pin them all resident",
         "gpu-thrash" => "flush storms + GPU pool squeeze — GPU-elasticity A/B reference",
         "flap-squeeze" => "API flaps and CPU squeezes composed across two RL steps",
+        "tenant-fairshare" => "steady vs bursty coding tenants on one WFQ CPU pool (8:1)",
+        "tenant-batch-interactive" => "batch MOPD vs interactive DeepSearch tenants (1:4)",
         _ => "",
     }
 }
@@ -258,7 +343,6 @@ pub fn pack_description(name: &str) -> &'static str {
 mod tests {
     use super::*;
     use crate::config::BackendKind;
-    use crate::scenario::ScenarioSpec as Spec;
 
     #[test]
     fn lookup_works() {
@@ -267,8 +351,10 @@ mod tests {
         assert!(pack_by_name("teacher-sweep").is_some());
         assert!(pack_by_name("flap-squeeze").is_some());
         assert!(pack_by_name("gpu-thrash").is_some());
+        assert!(pack_by_name("tenant-fairshare").is_some());
+        assert!(pack_by_name("tenant-batch-interactive").is_some());
         assert!(pack_by_name("nope").is_none());
-        assert!(builtin_packs().len() >= 9);
+        assert!(builtin_packs().len() >= 11);
     }
 
     #[test]
@@ -276,11 +362,28 @@ mod tests {
         for backend in BackendKind::ALL {
             let n = builtin_packs()
                 .iter()
-                .filter(|p| {
-                    p.workloads.iter().any(|&w| Spec::backend_supports(backend, w))
-                })
+                .filter(|p| !p.workloads_for(backend).is_empty())
                 .count();
             assert!(n >= 3, "{backend:?} only covered by {n} packs");
+        }
+    }
+
+    #[test]
+    fn tenant_packs_are_multi_tenant_and_validate() {
+        for name in ["tenant-fairshare", "tenant-batch-interactive"] {
+            let p = pack_by_name(name).unwrap();
+            p.validate().unwrap();
+            assert!(p.workloads.is_empty(), "{name}: tenant packs use the tenants mix");
+            assert!(p.tenants.len() >= 2, "{name}");
+            assert!(
+                p.tenants.iter().any(|t| t.id != 0),
+                "{name}: must exercise a non-zero tenant id"
+            );
+            let weights = p.tenant_weights();
+            assert!(
+                weights.iter().any(|&(_, w)| w != weights[0].1),
+                "{name}: weights must actually differ for the WFQ to matter"
+            );
         }
     }
 }

@@ -20,7 +20,7 @@ use super::ScenarioSpec;
 use crate::autoscale::Autoscaler;
 use crate::baselines::{BaselineBackend, ServerlessCfg};
 use crate::config::{BackendKind, ExperimentCfg};
-use crate::coordinator::{run_traced, Backend, TangramBackend};
+use crate::coordinator::{run_session, Backend, Session, TangramBackend};
 use crate::metrics::Metrics;
 use crate::rollout::workloads::{Catalog, CatalogCfg};
 use crate::sim::SimTime;
@@ -91,20 +91,28 @@ pub fn run_scenario(spec: &ScenarioSpec, backend: BackendKind) -> Result<Scenari
     }
     let cat = Catalog::build(&spec.catalog);
     let mut be = build_backend(&spec.catalog, &cat, backend);
-    let mut rec = TraceRecorder::new();
-    let mut asc = spec.autoscale.clone().map(Autoscaler::new);
+    let mut session = session_for(spec);
     let cfg = spec.run_cfg();
-    let mut metrics = run_traced(
-        be.as_mut(),
-        &cat,
-        &wls,
-        &cfg,
-        &spec.events,
-        Some(&mut rec),
-        asc.as_mut(),
-    );
+    let mut metrics = run_session(be.as_mut(), &cat, &wls, &cfg, &mut session);
     attach_cost(&mut metrics, spec, be.as_ref());
+    let rec = session.take_recorder().unwrap_or_default();
     Ok(ScenarioOutcome { metrics, events: rec.events })
+}
+
+/// Build the run [`Session`] a spec describes: its fault timeline, a fresh
+/// trace recorder, its embedded autoscaler (when any), and its per-tenant
+/// WFQ weights (empty on single-tenant specs). The one spec→session mapping
+/// shared by every scenario entry point, so record, replay, and the
+/// differential tests always run under identical hooks.
+fn session_for(spec: &ScenarioSpec) -> Session {
+    let mut session = Session::new()
+        .with_injections(spec.events.clone())
+        .with_recorder(TraceRecorder::new())
+        .with_tenant_weights(spec.tenant_weights());
+    if let Some(asc) = spec.autoscale.clone() {
+        session = session.with_autoscaler(Autoscaler::new(asc));
+    }
+    session
 }
 
 /// Wire the spec's embedded rate card into the metrics (post-run: cost is
@@ -165,19 +173,11 @@ pub fn run_scenario_tangram(
     let mut tcfg = tangram_cfg_for(&spec.catalog);
     tcfg.full_sweep = full_sweep;
     let mut be = TangramBackend::new(&cat, tcfg);
-    let mut rec = TraceRecorder::new();
-    let mut asc = spec.autoscale.clone().map(Autoscaler::new);
+    let mut session = session_for(spec);
     let cfg = spec.run_cfg();
-    let mut metrics = run_traced(
-        &mut be,
-        &cat,
-        &wls,
-        &cfg,
-        &spec.events,
-        Some(&mut rec),
-        asc.as_mut(),
-    );
+    let mut metrics = run_session(&mut be, &cat, &wls, &cfg, &mut session);
     attach_cost(&mut metrics, spec, &be);
+    let rec = session.take_recorder().unwrap_or_default();
     let stats = SchedStats {
         invocations: be.sched_invocations,
         drain_calls: be.drain_calls,
@@ -230,6 +230,35 @@ pub fn summary_json(m: &Metrics) -> Json {
         // derived from the rows computed above — same accumulation order
         // as Metrics::savings_vs_static_cost, so the figures agree bitwise
         pairs.push(("savings_vs_static_cost", Json::num(Metrics::cost_savings_of(&cost_rows))));
+    }
+    // per-tenant headline rows ride along ONLY for multi-tenant runs — every
+    // single-tenant golden summary keeps its exact bytes
+    let tenant_keys: Vec<String>;
+    if m.multi_tenant() {
+        let rollups = m.tenant_rollups();
+        tenant_keys = rollups.keys().map(|t| t.to_string()).collect();
+        let mut costs: BTreeMap<u32, f64> = BTreeMap::new();
+        for (t, _, dollars) in m.tenant_cost_rows() {
+            *costs.entry(t).or_default() += dollars;
+        }
+        let tenants = Json::obj(
+            rollups
+                .iter()
+                .zip(tenant_keys.iter())
+                .map(|((t, r), key)| {
+                    let row = Json::obj(vec![
+                        ("actions", Json::num(r.actions as f64)),
+                        ("cost", Json::num(costs.get(t).copied().unwrap_or(0.0))),
+                        ("failed", Json::num(r.failed as f64)),
+                        ("mean_act_secs", Json::num(r.mean_act_secs())),
+                        ("mean_queue_secs", Json::num(r.mean_queue_secs())),
+                        ("retries", Json::num(r.retries as f64)),
+                    ]);
+                    (key.as_str(), row)
+                })
+                .collect(),
+        );
+        pairs.push(("tenants", tenants));
     }
     Json::obj(pairs)
 }
@@ -419,25 +448,51 @@ pub struct AbRow {
     pub cost_b: f64,
 }
 
-impl AbRow {
-    /// Relative delta of B vs A, `None` when A has no signal.
-    fn delta(a: f64, b: f64) -> Option<f64> {
-        if a.abs() < 1e-12 {
-            return None;
-        }
-        Some((b - a) / a)
+/// Relative delta of B vs A, `None` when A has no signal.
+fn rel_delta(a: f64, b: f64) -> Option<f64> {
+    if a.abs() < 1e-12 {
+        return None;
     }
+    Some((b - a) / a)
+}
 
+impl AbRow {
     pub fn act_delta(&self) -> Option<f64> {
-        Self::delta(self.a.mean_act_secs, self.b.mean_act_secs)
+        rel_delta(self.a.mean_act_secs, self.b.mean_act_secs)
     }
 
     pub fn hours_delta(&self) -> Option<f64> {
-        Self::delta(self.a.unit_hours, self.b.unit_hours)
+        rel_delta(self.a.unit_hours, self.b.unit_hours)
     }
 
     pub fn cost_delta(&self) -> Option<f64> {
-        Self::delta(self.cost_a, self.cost_b)
+        rel_delta(self.cost_a, self.cost_b)
+    }
+}
+
+/// Per-tenant ACT/retry aggregates of one recorded trace. No unit-hours:
+/// `provision` billing points are pool-level, not tenant-attributed, so a
+/// trace alone cannot split capacity dollars by tenant (the in-run metrics
+/// do that via busy-time shares).
+#[derive(Debug, Default, Clone)]
+pub struct TraceTenantStats {
+    pub actions: usize,
+    pub mean_act_secs: f64,
+    pub retries: u64,
+}
+
+/// One per-tenant row of the `--against` comparison table (present only
+/// when either trace carries multi-tenant submits).
+#[derive(Debug, Clone)]
+pub struct AbTenantRow {
+    pub tenant: u32,
+    pub a: TraceTenantStats,
+    pub b: TraceTenantStats,
+}
+
+impl AbTenantRow {
+    pub fn act_delta(&self) -> Option<f64> {
+        rel_delta(self.a.mean_act_secs, self.b.mean_act_secs)
     }
 }
 
@@ -450,6 +505,9 @@ pub struct AbReport {
     pub summary_diff: Option<String>,
     /// Per-pool ACT / resource-hour table, sorted by pool name.
     pub rows: Vec<AbRow>,
+    /// Per-tenant ACT table, sorted by tenant id; empty unless at least one
+    /// side recorded a multi-tenant run.
+    pub tenant_rows: Vec<AbTenantRow>,
 }
 
 /// Reduce one trace's event stream to per-pool ACT and resource-hour stats.
@@ -491,6 +549,43 @@ pub fn trace_pool_stats(events: &[TraceEvent]) -> BTreeMap<String, TracePoolStat
     out
 }
 
+/// Reduce one trace's event stream to per-tenant ACT/retry stats. Same ACT
+/// convention as [`trace_pool_stats`] (final completion minus first submit;
+/// retries fold into their action); `retry` completions count against the
+/// submitting tenant.
+pub fn trace_tenant_stats(events: &[TraceEvent]) -> BTreeMap<u32, TraceTenantStats> {
+    let mut submits: HashMap<u64, (SimTime, u32)> = HashMap::new();
+    let mut acts: BTreeMap<u32, Vec<f64>> = BTreeMap::new();
+    let mut retries: BTreeMap<u32, u64> = BTreeMap::new();
+    for e in events {
+        match &e.kind {
+            TraceKind::Submit { action, tenant, .. } => {
+                submits.entry(*action).or_insert((e.at, *tenant));
+            }
+            TraceKind::Complete { action, outcome, .. } => {
+                if outcome == "retry" {
+                    if let Some(&(_, t)) = submits.get(action) {
+                        *retries.entry(t).or_default() += 1;
+                    }
+                } else if let Some((t0, t)) = submits.remove(action) {
+                    acts.entry(t).or_default().push(e.at.saturating_sub(t0).secs_f64());
+                }
+            }
+            _ => {}
+        }
+    }
+    let mut out: BTreeMap<u32, TraceTenantStats> = BTreeMap::new();
+    for (t, v) in acts {
+        let st = out.entry(t).or_default();
+        st.actions = v.len();
+        st.mean_act_secs = crate::util::mean(&v);
+    }
+    for (t, n) in retries {
+        out.entry(t).or_default().retries = n;
+    }
+    out
+}
+
 /// Compare two recorded traces event-by-event and build the per-pool
 /// ACT/resource-hour delta table — the A/B harness for autoscaler-on vs
 /// static (or any two scheduler variants). Purely offline: nothing re-runs.
@@ -519,11 +614,30 @@ pub fn ab_compare(a: &RecordedTrace, b: &RecordedTrace) -> AbReport {
             }
         })
         .collect();
+    // the tenant table appears only when a side actually ran multi-tenant —
+    // single-tenant A/B output is unchanged
+    let ta = trace_tenant_stats(&a.events);
+    let tb = trace_tenant_stats(&b.events);
+    let tenant_rows = if ta.keys().chain(tb.keys()).any(|t| *t != 0) {
+        let mut ids: Vec<u32> = ta.keys().chain(tb.keys()).copied().collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids.into_iter()
+            .map(|tenant| AbTenantRow {
+                a: ta.get(&tenant).cloned().unwrap_or_default(),
+                b: tb.get(&tenant).cloned().unwrap_or_default(),
+                tenant,
+            })
+            .collect()
+    } else {
+        Vec::new()
+    };
     AbReport {
         identical: divergences.is_empty() && summary_diff.is_none(),
         divergences,
         summary_diff,
         rows,
+        tenant_rows,
     }
 }
 
@@ -565,5 +679,32 @@ mod tests {
     fn unsupported_backend_is_an_error() {
         let spec = crate::scenario::pack_by_name("api-flap").unwrap(); // deepsearch only
         assert!(run_scenario(&spec, BackendKind::K8s).is_err());
+    }
+
+    #[test]
+    fn tenant_summary_and_trace_stats() {
+        let spec = crate::scenario::pack_by_name("tenant-fairshare").unwrap();
+        let outcome = run_scenario(&spec, BackendKind::Tangram).unwrap();
+        let summary = summary_json(&outcome.metrics);
+        assert!(summary.get("tenants").is_some());
+        let ts = trace_tenant_stats(&outcome.events);
+        assert_eq!(ts.keys().copied().collect::<Vec<_>>(), vec![0, 1]);
+        assert!(ts.values().all(|s| s.actions > 0));
+        // single-tenant runs keep their summary bytes and an all-zero ledger
+        let single = crate::scenario::pack_by_name("steady-mix").unwrap();
+        let so = run_scenario(&single, BackendKind::Tangram).unwrap();
+        assert!(summary_json(&so.metrics).get("tenants").is_none());
+        assert!(trace_tenant_stats(&so.events).keys().all(|t| *t == 0));
+        // and a single-tenant A/B comparison carries no tenant table
+        let rt = |spec: &ScenarioSpec, outcome: &ScenarioOutcome| RecordedTrace {
+            spec: spec.clone(),
+            backend: BackendKind::Tangram,
+            events: outcome.events.clone(),
+            summary: summary_json(&outcome.metrics),
+        };
+        assert!(ab_compare(&rt(&single, &so), &rt(&single, &so)).tenant_rows.is_empty());
+        let ab = ab_compare(&rt(&spec, &outcome), &rt(&spec, &outcome));
+        assert_eq!(ab.tenant_rows.len(), 2);
+        assert!(ab.identical);
     }
 }

@@ -2,7 +2,7 @@
 //! recorder).
 //!
 //! The [`TraceRecorder`] hooks into the DES driver
-//! ([`crate::coordinator::driver::run_traced`]) and captures every
+//! ([`crate::coordinator::driver::run_session`]) and captures every
 //! scheduling-relevant transition — action submit/start/complete, trajectory
 //! and step boundaries, fault injections — as a compact JSONL event stream.
 //! Two same-seed runs of the same [`crate::scenario::ScenarioSpec`] must
@@ -30,8 +30,10 @@ pub enum TraceKind {
     TrajSpawn { traj: u64, task: u32 },
     /// A trajectory finished (all phases done or terminally failed).
     TrajEnd { traj: u64, failed: bool, restarts: u32 },
-    /// An action entered the backend's waiting queue.
-    Submit { action: u64, traj: u64, kind: String, queue_depth: u64 },
+    /// An action entered the backend's waiting queue. `tenant` is 0 in
+    /// single-tenant runs and is then omitted from the serialized form
+    /// (legacy traces stay byte-identical and parse back with tenant 0).
+    Submit { action: u64, traj: u64, kind: String, tenant: u32, queue_depth: u64 },
     /// The backend started an attempt: granted units, charged overhead.
     Start { action: u64, units: u64, overhead_ns: u64, exec_ns: u64, queue_depth: u64 },
     /// An attempt finished with the driver's effective verdict
@@ -129,10 +131,13 @@ impl TraceEvent {
                 pairs.push(("failed", Json::Bool(*failed)));
                 pairs.push(("restarts", num(*restarts as u64)));
             }
-            TraceKind::Submit { action, traj, kind, queue_depth } => {
+            TraceKind::Submit { action, traj, kind, tenant, queue_depth } => {
                 pairs.push(("action", num(*action)));
                 pairs.push(("traj", num(*traj)));
                 pairs.push(("kind", Json::str(kind.clone())));
+                if *tenant != 0 {
+                    pairs.push(("tenant", num(*tenant as u64)));
+                }
                 pairs.push(("queue_depth", num(*queue_depth)));
             }
             TraceKind::Start { action, units, overhead_ns, exec_ns, queue_depth } => {
@@ -191,6 +196,7 @@ impl TraceEvent {
                 action: get_u64(j, "action")?,
                 traj: get_u64(j, "traj")?,
                 kind: get_str(j, "kind")?,
+                tenant: j.get("tenant").and_then(Json::as_u64).unwrap_or(0) as u32,
                 queue_depth: get_u64(j, "queue_depth")?,
             },
             "start" => TraceKind::Start {
@@ -286,7 +292,18 @@ mod tests {
                     action: 1,
                     traj: 2,
                     kind: "env_exec".into(),
+                    tenant: 0,
                     queue_depth: 1,
+                },
+            },
+            TraceEvent {
+                at: SimTime(6),
+                kind: TraceKind::Submit {
+                    action: 2,
+                    traj: 3,
+                    kind: "api_call".into(),
+                    tenant: 2,
+                    queue_depth: 2,
                 },
             },
             TraceEvent {
@@ -346,6 +363,26 @@ mod tests {
             b.push(e.at, e.kind);
         }
         assert_eq!(a.to_jsonl(), b.to_jsonl());
+    }
+
+    #[test]
+    fn submit_tenant_gating() {
+        // tenant 0 serializes without the key (legacy byte-compatibility);
+        // a legacy line without the key parses back as tenant 0
+        let mut rec = TraceRecorder::new();
+        for e in sample() {
+            rec.push(e.at, e.kind);
+        }
+        let text = rec.to_jsonl();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(!lines[1].contains("tenant"), "{}", lines[1]);
+        assert!(lines[2].contains("\"tenant\":2"), "{}", lines[2]);
+        let legacy = "{\"action\":7,\"at\":5,\"ev\":\"submit\",\"kind\":\"env_exec\",\"queue_depth\":1,\"traj\":2}";
+        let back = TraceRecorder::parse_jsonl(legacy).unwrap();
+        match &back[0].kind {
+            TraceKind::Submit { tenant, .. } => assert_eq!(*tenant, 0),
+            other => panic!("wrong kind {other:?}"),
+        }
     }
 
     #[test]

@@ -402,7 +402,7 @@ mod tests {
     use super::*;
     use crate::action::{
         ActionSpec, CostSpec, DimCost, ElasticityModel, ResourceClass,
-        ResourceRegistry, TaskId, TrajId,
+        ResourceRegistry, TaskId, TenantId, TrajId,
     };
 
     /// Flat-pool resource for tests.
@@ -436,6 +436,7 @@ mod tests {
     fn scalable(reg: &ResourceRegistry, kind: ResourceKindId, id: u64, secs: u64, max: u64) -> Action {
         let spec = ActionSpec {
             task: TaskId(0),
+            tenant: TenantId(0),
             trajectory: TrajId(id),
             kind: ActionKind::RewardCpu,
             cost: CostSpec::single(reg, kind, DimCost::Range { min: 1, max }),
@@ -451,6 +452,7 @@ mod tests {
     fn rigid(reg: &ResourceRegistry, kind: ResourceKindId, id: u64, units: u64) -> Action {
         let spec = ActionSpec {
             task: TaskId(0),
+            tenant: TenantId(0),
             trajectory: TrajId(id),
             kind: ActionKind::EnvExec,
             cost: CostSpec::single(reg, kind, DimCost::Fixed(units)),

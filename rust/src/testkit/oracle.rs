@@ -14,19 +14,20 @@
 //! the property-test shrink machinery, and the offending seed is promoted
 //! to `rust/testdata/fuzz_seeds.txt` as a permanent regression.
 
-use crate::autoscale::PoolClass;
+use crate::autoscale::{Autoscaler, PoolClass};
 use crate::config::BackendKind;
-use crate::coordinator::Backend;
+use crate::coordinator::{run_session, Backend, Session};
 use crate::rollout::workloads::Catalog;
 use crate::scenario::{
     build_backend, fuzz_spec, parse_trace_file, replay_trace, run_scenario_tangram,
-    trace_file_contents, ScenarioEvent, ScenarioOutcome, ScenarioSpec, TraceKind,
+    trace_file_contents, trace_tenant_stats, ScenarioEvent, ScenarioOutcome, ScenarioSpec,
+    TraceKind, TraceRecorder,
 };
 use crate::sim::SimTime;
 use crate::testkit::{shrink_failure, Gen};
 use crate::util::error::Result;
 use crate::util::rng::{Rng, SplitMix64};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 /// One invariant breach: which law broke, and the concrete evidence.
 #[derive(Debug, Clone)]
@@ -75,6 +76,8 @@ pub fn check_spec(spec: &ScenarioSpec) -> Result<OracleReport> {
     check_lane_order(spec, &mut violations);
     check_composition(spec, &mut violations);
     check_dirty_sweep(spec, &dirty, &sweep, &mut violations);
+    check_tenants(spec, &dirty, &mut violations);
+    check_wfq_neutrality(spec, &mut violations)?;
     Ok(OracleReport {
         actions: dirty.metrics.actions.len(),
         trace_events: dirty.events.len(),
@@ -257,7 +260,7 @@ fn autoscale_floors(spec: &ScenarioSpec) -> BTreeMap<&'static str, u64> {
     let targets = backend.scale_classes();
     for class in PoolClass::ALL {
         let mut sum = 0u64;
-        for p in targets.iter().filter(|p| p.class == class) {
+        for p in targets.iter().filter(|p| p.key.class == class) {
             sum += (p.baseline_units as f64 * asc.min_factor).round() as u64;
         }
         floors.insert(class.name(), sum.max(1));
@@ -415,14 +418,14 @@ fn fault_event(class: PoolClass, factor: f64) -> ScenarioEvent {
 
 /// Resize every scale target of `class` to the same autoscale factor.
 fn resize_class(backend: &mut dyn Backend, class: PoolClass, factor: f64) {
-    let mut endpoints = Vec::new();
+    let mut keys = Vec::new();
     for p in backend.scale_classes() {
-        if p.class == class {
-            endpoints.push(p.endpoint);
+        if p.key.class == class {
+            keys.push(p.key);
         }
     }
-    for ep in endpoints {
-        backend.resize(SimTime::ZERO, class, ep, factor);
+    for key in keys {
+        backend.resize(SimTime::ZERO, key, factor);
     }
 }
 
@@ -480,6 +483,122 @@ fn check_dirty_sweep(
     }
 }
 
+/// Tenant conservation: every tenant id observed in the records or the
+/// trace is declared by the spec (0 for single-tenant specs), the
+/// per-tenant rollups sum **bitwise** to the global tallies, and the
+/// trace's per-tenant terminal completions agree with the records.
+fn check_tenants(spec: &ScenarioSpec, out: &ScenarioOutcome, v: &mut Vec<Violation>) {
+    let declared: BTreeSet<u32> = if spec.tenants.is_empty() {
+        std::iter::once(0).collect()
+    } else {
+        spec.tenants.iter().map(|t| t.id).collect()
+    };
+    let m = &out.metrics;
+    let rollups = m.tenant_rollups();
+    for t in rollups.keys() {
+        if !declared.contains(t) {
+            v.push(Violation {
+                invariant: "tenant-conservation",
+                detail: format!("undeclared tenant {t} in the action records"),
+            });
+        }
+    }
+    let mut sum = crate::metrics::TenantRollup::default();
+    for r in rollups.values() {
+        sum.actions += r.actions;
+        sum.failed += r.failed;
+        sum.retries += r.retries;
+        sum.act_ns += r.act_ns;
+        sum.queue_ns += r.queue_ns;
+    }
+    let ok = |a: &&crate::metrics::ActionRecord| !a.failed;
+    let global_act: u64 = m.actions.iter().filter(ok).map(|a| a.act().0).sum();
+    let global_queue: u64 = m.actions.iter().filter(ok).map(|a| a.queue_dur().0).sum();
+    if sum.actions != m.actions.len() as u64
+        || sum.failed != m.failed_actions() as u64
+        || sum.retries != m.total_retries()
+        || sum.act_ns != global_act
+        || sum.queue_ns != global_queue
+    {
+        v.push(Violation {
+            invariant: "tenant-conservation",
+            detail: format!(
+                "rollup sum {sum:?} != global ({} actions, {} failed, {} retries, \
+                 {global_act} act_ns, {global_queue} queue_ns)",
+                m.actions.len(),
+                m.failed_actions(),
+                m.total_retries()
+            ),
+        });
+    }
+    // the recorded trace agrees tenant-by-tenant with the records
+    let ts = trace_tenant_stats(&out.events);
+    for t in ts.keys() {
+        if !declared.contains(t) {
+            v.push(Violation {
+                invariant: "tenant-conservation",
+                detail: format!("undeclared tenant {t} in the recorded trace"),
+            });
+        }
+    }
+    for (t, r) in &rollups {
+        let seen = ts.get(t).map_or(0, |s| s.actions as u64);
+        if seen != r.actions {
+            v.push(Violation {
+                invariant: "tenant-conservation",
+                detail: format!(
+                    "tenant {t}: trace completed {seen} actions, records hold {}",
+                    r.actions
+                ),
+            });
+        }
+    }
+}
+
+/// WFQ neutrality: installing an all-equal weight table must be a no-op.
+/// A multi-tenant run with every weight forced to 1 must produce a trace
+/// and metrics stream byte-identical to the same run with no weight table
+/// installed at all — per-tenant WFQ at uniform weight IS arrival order.
+fn check_wfq_neutrality(spec: &ScenarioSpec, v: &mut Vec<Violation>) -> Result<()> {
+    if spec.tenants.is_empty() {
+        return Ok(());
+    }
+    let mut eq = spec.clone();
+    eq.cost = None; // cost attribution is post-run reporting; keep arms equal
+    for t in &mut eq.tenants {
+        t.weight = 1;
+    }
+    // normal path: the Session installs the all-ones weight table
+    let weighted = crate::scenario::run_scenario(&eq, BackendKind::Tangram)?;
+    // manual session: identical hooks, but no weight table installed
+    let cat = Catalog::build(&eq.catalog);
+    let wls = eq.workloads_for(BackendKind::Tangram);
+    let mut be = build_backend(&eq.catalog, &cat, BackendKind::Tangram);
+    let mut session = Session::new()
+        .with_injections(eq.events.clone())
+        .with_recorder(TraceRecorder::new());
+    if let Some(a) = eq.autoscale.clone() {
+        session = session.with_autoscaler(Autoscaler::new(a));
+    }
+    let cfg = eq.run_cfg();
+    let metrics = run_session(be.as_mut(), &cat, &wls, &cfg, &mut session);
+    let events = session.take_recorder().map(|r| r.events).unwrap_or_default();
+    if events != weighted.events {
+        let divs = crate::scenario::diff_traces(&weighted.events, &events, 3);
+        v.push(Violation {
+            invariant: "wfq-neutrality",
+            detail: format!("equal weights != unweighted: {}", divs.join("; ")),
+        });
+    }
+    if metrics.to_json().to_string() != weighted.metrics.to_json().to_string() {
+        v.push(Violation {
+            invariant: "wfq-neutrality",
+            detail: "equal-weights metrics diverged from the unweighted run".to_string(),
+        });
+    }
+    Ok(())
+}
+
 // ---- failure minimization -------------------------------------------------
 
 /// [`Gen`] over fuzzed specs whose `shrink` simplifies a failing spec's
@@ -502,6 +621,19 @@ impl Gen for FuzzSpecGen {
                 out.push(s);
             }
         };
+        if !spec.tenants.is_empty() {
+            // single-tenant twin: same work, no tenancy dimension
+            let mut s = spec.clone();
+            s.workloads = s.tenants.iter().flat_map(|t| t.workloads.iter().copied()).collect();
+            s.tenants.clear();
+            push(s);
+            if spec.tenants.len() > 1 {
+                // dropping the last mix keeps ids strictly increasing
+                let mut s = spec.clone();
+                s.tenants.truncate(spec.tenants.len() - 1);
+                push(s);
+            }
+        }
         if !spec.events.is_empty() {
             push(ScenarioSpec { events: vec![], ..spec.clone() });
         }

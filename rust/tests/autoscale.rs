@@ -6,7 +6,7 @@
 //! `src/autoscale/mod.rs`; these tests run the whole driver stack.
 
 use arl_tangram::autoscale::{
-    AutoscaleCfg, Autoscaler, PolicyKind, PoolClass, PoolPressure, ScaleCmd,
+    AutoscaleCfg, Autoscaler, LaneKey, PolicyKind, PoolClass, PoolPressure, ScaleCmd,
 };
 use arl_tangram::config::BackendKind;
 use arl_tangram::lanes::CostModel;
@@ -433,8 +433,7 @@ fn billed_units_survive_interleaved_decides_and_applies() {
                 .iter()
                 .enumerate()
                 .map(|(ep, &(queued, in_use))| PoolPressure {
-                    class: PoolClass::Api,
-                    endpoint: Some(ep as u32),
+                    key: LaneKey::endpoint(PoolClass::Api, ep as u32),
                     queued,
                     queued_units: queued,
                     in_use_units: in_use,
@@ -446,10 +445,10 @@ fn billed_units_survive_interleaved_decides_and_applies() {
             let mut scaled_down = false;
             for cmd in &cmds {
                 match cmd {
-                    ScaleCmd::Decide { endpoint: Some(e), factor, .. } => {
+                    ScaleCmd::Decide { key: LaneKey { endpoint: Some(e), .. }, factor, .. } => {
                         warming[*e as usize] = Some(*factor);
                     }
-                    ScaleCmd::Apply { endpoint: Some(e), factor, .. } => {
+                    ScaleCmd::Apply { key: LaneKey { endpoint: Some(e), .. }, factor, .. } => {
                         let e = *e as usize;
                         if *factor < applied[e] - 1e-9 {
                             scaled_down = true;

@@ -14,7 +14,7 @@
 
 use arl_tangram::action::TaskId;
 use arl_tangram::config::BackendKind;
-use arl_tangram::coordinator::{run_traced, RunCfg, TangramBackend, TangramCfg};
+use arl_tangram::coordinator::{run_session, RunCfg, Session, TangramBackend, TangramCfg};
 use arl_tangram::rollout::workloads::{Catalog, CatalogCfg, Workload, WorkloadKind};
 use arl_tangram::scenario::{builtin_packs, run_scenario_tangram, ScenarioEvent, TimedEvent};
 use arl_tangram::sim::{SimDur, SimTime};
@@ -66,6 +66,7 @@ fn dirty_pool_matches_full_sweep_at_fewer_invocations() {
         let has_elastic_pools = spec
             .workloads
             .iter()
+            .chain(spec.tenants.iter().flat_map(|t| t.workloads.iter()))
             .any(|&w| matches!(w, WorkloadKind::Coding | WorkloadKind::Mopd));
         if has_elastic_pools {
             assert!(
@@ -134,7 +135,8 @@ fn cordoned_node_recovers_on_restore() {
         at(30, ScenarioEvent::CpuPoolScale { factor: 0.1 }),
         at(2_000, ScenarioEvent::CpuPoolScale { factor: 1.0 }),
     ];
-    let m = run_traced(&mut be, &cat, &[wl], &cfg, &events, None, None);
+    let mut session = Session::new().with_injections(events);
+    let m = run_session(&mut be, &cat, &[wl], &cfg, &mut session);
     assert_eq!(m.trajectories.len(), 4, "trajectories lost under cordon");
     assert_eq!(m.failed_actions(), 0);
     assert_eq!(be.cpu.free_cores(), 16, "cores leaked across the cordon");

@@ -134,6 +134,53 @@ fn minimizer_strips_autoscale_and_cost() {
 }
 
 #[test]
+fn fuzzed_multi_tenant_specs_pass_the_oracle() {
+    // the tenancy fork draws from its own salted stream, so roughly half
+    // the seeds re-home their workloads under 2-3 weighted tenants; those
+    // must clear the full battery (including the tenant-conservation and
+    // WFQ-neutrality invariants) just like single-tenant specs
+    let mut checked = 0;
+    for seed in 0..64 {
+        let spec = fuzz_spec(seed);
+        if spec.tenants.len() < 2 {
+            continue;
+        }
+        let report = check_spec(&spec).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert!(report.is_clean(), "seed {seed}:\n{}", report.describe());
+        checked += 1;
+        if checked == 4 {
+            break; // full battery per spec — keep the tier-1 slice bounded
+        }
+    }
+    assert!(checked >= 4, "fuzzer produced too few multi-tenant specs ({checked})");
+}
+
+#[test]
+fn minimizer_flattens_tenancy_first() {
+    // a failure independent of tenancy must shrink back to the flat
+    // single-tenant shape before any other simplification is attempted
+    let mut seed = 0;
+    let spec = loop {
+        let s = fuzz_spec(seed);
+        if s.tenants.len() >= 2 {
+            break s;
+        }
+        seed += 1;
+    };
+    let prop = |s: &ScenarioSpec| {
+        if s.batch >= 2 {
+            Err("batch too big".to_string())
+        } else {
+            Ok(())
+        }
+    };
+    let (best, _) = shrink_failure(&FuzzSpecGen, spec, "batch".into(), &prop, 200);
+    assert!(best.tenants.is_empty(), "tenancy not flattened away");
+    assert!(!best.workloads.is_empty(), "workloads lost in the flatten");
+    assert!(best.validate().is_ok(), "shrunk spec must stay valid");
+}
+
+#[test]
 fn oracle_flags_a_corrupted_run() {
     // sanity: the battery is not vacuous — a spec the engine cannot even
     // validate must surface as Err, not as a clean report

@@ -124,10 +124,10 @@ fn every_pack_and_backend_replays_byte_identical_against_golden() {
             blessed.join("\n  ")
         );
     }
-    // acceptance floor: 9 packs × their backends (34 combos) plus one
-    // autoscaled tangram trace per pack (9)
+    // acceptance floor: 11 packs × their backends (40 combos, the tenant
+    // packs cover 6) plus one autoscaled tangram trace per pack (11)
     assert!(
-        checked + blessed.len() >= 43,
+        checked + blessed.len() >= 51,
         "pack×backend golden coverage shrank: {} combos",
         checked + blessed.len()
     );

@@ -16,9 +16,9 @@
 
 use arl_tangram::action::{
     Action, ActionId, ActionKind, ActionSpec, CostSpec, DimCost, ElasticityModel,
-    ResourceClass, ResourceKindId, ResourceRegistry, ServiceId, TaskId, TrajId,
+    ResourceClass, ResourceKindId, ResourceRegistry, ServiceId, TaskId, TenantId, TrajId,
 };
-use arl_tangram::autoscale::{PoolClass, PoolPressure};
+use arl_tangram::autoscale::{LaneKey, PoolClass, PoolPressure};
 use arl_tangram::cluster::cpu::CpuLatency;
 use arl_tangram::cluster::gpu::GpuCluster;
 use arl_tangram::lanes::CostModel;
@@ -520,6 +520,7 @@ fn prop_scheduler_never_overallocates() {
                     ActionId(i as u64),
                     ActionSpec {
                         task: TaskId(0),
+                        tenant: TenantId(0),
                         trajectory: TrajId(i as u64),
                         kind: ActionKind::RewardCpu,
                         cost: CostSpec::single(
@@ -821,8 +822,10 @@ fn prop_endpoint_resolution_order_independent() {
     check("resolve order-independent", &CostGen, default_cases(), |case| {
         let model = cost_model_of(case);
         let pressure = |endpoint: Option<u32>, baseline: u64| PoolPressure {
-            class: if endpoint.is_some() { PoolClass::Api } else { PoolClass::Cpu },
-            endpoint,
+            key: LaneKey {
+                class: if endpoint.is_some() { PoolClass::Api } else { PoolClass::Cpu },
+                endpoint,
+            },
             queued: 0,
             queued_units: 0,
             in_use_units: 0,

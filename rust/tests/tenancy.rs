@@ -1,0 +1,159 @@
+//! Multi-tenant scheduling tests.
+//!
+//! Three pillars of the tenancy contract:
+//!   1. conservation — per-tenant rollups sum field-by-field (bitwise, the
+//!      sums are integer ns) to the global tallies on every built-in pack;
+//!   2. the fairness differential — under lane WFQ a steady high-weight
+//!      tenant keeps its mean ACT within 1.15× of its isolated-run value
+//!      while a bursty co-tenant saturates the shared pool, and plain FCFS
+//!      (tenancy-blind queues) demonstrably does NOT hold that bound;
+//!   3. neutrality — on single-tenant runs WFQ order is indistinguishable
+//!      from FCFS, byte-for-byte, so the redesign cannot perturb any
+//!      pre-tenancy golden trace.
+
+use arl_tangram::action::TenantId;
+use arl_tangram::config::{BackendKind, ExperimentCfg};
+use arl_tangram::coordinator::{run_session, Session, TangramBackend, TangramCfg};
+use arl_tangram::metrics::TenantRollup;
+use arl_tangram::rollout::workloads::Catalog;
+use arl_tangram::scenario::{builtin_packs, pack_by_name, run_scenario, ScenarioSpec, TraceRecorder};
+
+/// The same catalog→deployment scaling the scenario engine uses, plus the
+/// FCFS knob for the differential arms.
+fn tangram_cfg(spec: &ScenarioSpec, fcfs_queues: bool) -> TangramCfg {
+    let exp = ExperimentCfg { catalog: spec.catalog.clone(), ..ExperimentCfg::default() };
+    TangramCfg { fcfs_queues, ..exp.tangram_cfg() }
+}
+
+#[test]
+fn tenant_rollups_sum_bitwise_to_global_on_every_pack() {
+    for spec in builtin_packs() {
+        let out = run_scenario(&spec, BackendKind::Tangram).unwrap();
+        let m = &out.metrics;
+        let mut sum = TenantRollup::default();
+        for r in m.tenant_rollups().values() {
+            sum.actions += r.actions;
+            sum.failed += r.failed;
+            sum.retries += r.retries;
+            sum.act_ns += r.act_ns;
+            sum.queue_ns += r.queue_ns;
+        }
+        assert_eq!(sum.actions, m.actions.len() as u64, "'{}': action count", spec.name);
+        assert_eq!(sum.failed, m.failed_actions() as u64, "'{}': failed count", spec.name);
+        assert_eq!(sum.retries, m.total_retries(), "'{}': retry count", spec.name);
+        let global_act: u64 =
+            m.actions.iter().filter(|a| !a.failed).map(|a| a.act().0).sum();
+        let global_queue: u64 =
+            m.actions.iter().filter(|a| !a.failed).map(|a| a.queue_dur().0).sum();
+        assert_eq!(sum.act_ns, global_act, "'{}': summed ACT ns", spec.name);
+        assert_eq!(sum.queue_ns, global_queue, "'{}': summed queue ns", spec.name);
+    }
+}
+
+#[test]
+fn tenant_packs_tag_every_declared_tenant() {
+    for name in ["tenant-fairshare", "tenant-batch-interactive"] {
+        let spec = pack_by_name(name).unwrap();
+        let out = run_scenario(&spec, BackendKind::Tangram).unwrap();
+        let rollups = out.metrics.tenant_rollups();
+        let ids: Vec<u32> = rollups.keys().copied().collect();
+        let declared: Vec<u32> = spec.tenants.iter().map(|t| t.id).collect();
+        assert_eq!(ids, declared, "'{name}': rollup tenant ids");
+        assert!(rollups.values().all(|r| r.actions > 0), "'{name}': idle tenant");
+        assert!(out.metrics.multi_tenant(), "'{name}'");
+    }
+}
+
+#[test]
+fn wfq_protects_the_steady_tenant_where_fcfs_does_not() {
+    let spec = pack_by_name("tenant-fairshare").unwrap();
+    let cat = Catalog::build(&spec.catalog);
+    let cfg = spec.run_cfg();
+    let wls = spec.workloads_for(BackendKind::Tangram);
+    let steady: Vec<_> =
+        wls.iter().filter(|w| w.tenant == TenantId(0)).cloned().collect();
+    assert!(!steady.is_empty() && steady.len() < wls.len());
+
+    // isolated baseline: the steady tenant alone on the same deployment
+    let mut be = TangramBackend::new(&cat, tangram_cfg(&spec, false));
+    let mut session = Session::new();
+    let iso = run_session(&mut be, &cat, &steady, &cfg, &mut session).mean_act();
+    assert!(iso > 0.0);
+
+    // shared pool under WFQ with the pack's 8:1 weights
+    let mut be = TangramBackend::new(&cat, tangram_cfg(&spec, false));
+    let mut session = Session::new().with_tenant_weights(spec.tenant_weights());
+    let wfq = run_session(&mut be, &cat, &wls, &cfg, &mut session).mean_act_of_tenant(0);
+
+    // shared pool under plain FCFS: tenancy-blind arrival-order queues
+    let mut be = TangramBackend::new(&cat, tangram_cfg(&spec, true));
+    let mut session = Session::new();
+    let fcfs = run_session(&mut be, &cat, &wls, &cfg, &mut session).mean_act_of_tenant(0);
+
+    assert!(
+        wfq <= iso * 1.15,
+        "WFQ failed to protect the steady tenant: shared {wfq:.2}s vs isolated {iso:.2}s"
+    );
+    assert!(
+        fcfs > iso * 1.15,
+        "FCFS held the fairness bound ({fcfs:.2}s vs isolated {iso:.2}s) — \
+         the differential lost its teeth; deepen the bursty tenant"
+    );
+}
+
+#[test]
+fn single_tenant_wfq_is_byte_identical_to_fcfs() {
+    // WFQ with one tenant degenerates to (finish-time, action-id) order ==
+    // arrival order: flipping the queues to FCFS must not move a byte in
+    // either the trace or the metrics of a faulted single-tenant pack.
+    let spec = pack_by_name("pool-squeeze").unwrap();
+    let cat = Catalog::build(&spec.catalog);
+    let cfg = spec.run_cfg();
+    let wls = spec.workloads_for(BackendKind::Tangram);
+    let arm = |fcfs_queues: bool| {
+        let mut be = TangramBackend::new(&cat, tangram_cfg(&spec, fcfs_queues));
+        let mut session = Session::new()
+            .with_injections(spec.events.clone())
+            .with_recorder(TraceRecorder::new());
+        let m = run_session(&mut be, &cat, &wls, &cfg, &mut session);
+        let events = session.take_recorder().unwrap_or_default().events;
+        let lines: Vec<String> = events.iter().map(|e| e.to_json().to_string()).collect();
+        (m.to_json().to_string(), lines)
+    };
+    let (m_wfq, e_wfq) = arm(false);
+    let (m_fcfs, e_fcfs) = arm(true);
+    assert_eq!(m_wfq, m_fcfs, "metrics diverged between WFQ and FCFS");
+    assert_eq!(e_wfq, e_fcfs, "trace diverged between WFQ and FCFS");
+}
+
+#[test]
+fn tenant_weights_change_scheduling_but_conserve_work() {
+    // Same multi-tenant pack, weights flipped from 8:1 to 1:8 — the traces
+    // must differ (the weights are load-bearing) while the completed-work
+    // totals stay identical (fairness redistributes waiting, never work).
+    let spec = pack_by_name("tenant-fairshare").unwrap();
+    let mut flipped = spec.clone();
+    for t in &mut flipped.tenants {
+        t.weight = if t.weight > 1 { 1 } else { 8 };
+    }
+    let a = run_scenario(&spec, BackendKind::Tangram).unwrap();
+    let b = run_scenario(&flipped, BackendKind::Tangram).unwrap();
+    assert_eq!(a.metrics.actions.len(), b.metrics.actions.len());
+    assert_eq!(a.metrics.trajectories.len(), b.metrics.trajectories.len());
+    assert_eq!(a.metrics.failed_actions(), b.metrics.failed_actions());
+    let order = |events: &[arl_tangram::scenario::TraceEvent]| -> Vec<String> {
+        events.iter().map(|e| e.to_json().to_string()).collect::<Vec<_>>()
+    };
+    assert_ne!(
+        order(&a.events),
+        order(&b.events),
+        "flipping WFQ weights 8:1 → 1:8 left the trace untouched"
+    );
+    // and the steady tenant is strictly better off holding the high weight
+    assert!(
+        a.metrics.mean_act_of_tenant(0) < b.metrics.mean_act_of_tenant(0),
+        "tenant 0 with weight 8 ({:.2}s) should beat tenant 0 with weight 1 ({:.2}s)",
+        a.metrics.mean_act_of_tenant(0),
+        b.metrics.mean_act_of_tenant(0)
+    );
+}
