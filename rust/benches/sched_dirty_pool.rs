@@ -1,13 +1,14 @@
 //! Dirty-pool scheduler bench: every built-in scenario pack on the tangram
 //! backend, dirty-pool vs legacy full-sweep scheduling, reporting elastic-
-//! scheduler invocation counts and mean `drain_started` wall time. Writes
+//! scheduler invocation counts and mean `drain_started` wall time, plus a
+//! timed million-action pass (actions/sec + peak RSS). Writes
 //! `BENCH_sched.json` (override the path with `ARL_BENCH_OUT`).
 //!
 //! The hot-path claim this regenerates: scheduling only dirty pools cuts
 //! invocations super-linearly with pool count on multi-node packs — one
 //! completion pumps one pool, not `O(pools)` — at identical metrics.
 
-use arl_tangram::bench::{admission_bench, sched_bench_json, sched_bench_rows};
+use arl_tangram::bench::{admission_bench, sched_bench_json, sched_bench_rows, throughput_bench};
 
 fn main() {
     println!("=== dirty-pool scheduling vs full sweep (tangram) ===");
@@ -39,8 +40,23 @@ fn main() {
         admission.savings_with,
         admission.savings_without,
     );
+    let throughput = match throughput_bench() {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("throughput bench failed: {e}");
+            std::process::exit(1);
+        }
+    };
+    println!(
+        "throughput ({}): {} actions in {:.2}s = {:.0} actions/sec, peak RSS {} KiB",
+        throughput.pack,
+        throughput.actions,
+        throughput.wall_secs,
+        throughput.actions_per_sec,
+        throughput.peak_rss_kb,
+    );
     let out = std::env::var("ARL_BENCH_OUT").unwrap_or_else(|_| "BENCH_sched.json".to_string());
-    let json = sched_bench_json(&rows, &admission);
+    let json = sched_bench_json(&rows, &admission, Some(&throughput));
     match std::fs::write(&out, &json) {
         Ok(()) => println!("\nwrote {out}"),
         Err(e) => {

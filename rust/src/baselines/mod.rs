@@ -17,7 +17,7 @@ pub use static_gpu::StaticGpu;
 
 use crate::action::{Action, TrajId};
 use crate::cluster::api::{ApiEndpoint, ApiOutcome};
-use crate::coordinator::backend::{Backend, Started, Verdict};
+use crate::coordinator::backend::{Backend, StartedSink, Verdict};
 use crate::rollout::workloads::Catalog;
 use crate::scenario::ScenarioEvent;
 use crate::sim::SimTime;
@@ -218,20 +218,27 @@ impl Backend for BaselineBackend {
         }
     }
 
-    fn drain_started(&mut self, now: SimTime) -> Vec<Started> {
-        let mut out = Vec::new();
+    fn drain_started_into(&mut self, now: SimTime, sink: &mut StartedSink) {
+        // sub-backends drain in the fixed cpu → gpu → api order, the same
+        // class order the sorted-pool contract gives the tangram backend
         if let Some(k8s) = &mut self.k8s {
-            out.extend(k8s.drain_started(now));
+            for s in k8s.drain_started(now) {
+                sink.push(s);
+            }
         }
-        match &mut self.gpu {
-            GpuBaseline::Static(s) => out.extend(s.drain_started(now)),
-            GpuBaseline::Serverless(s) => out.extend(s.drain_started(now)),
-            GpuBaseline::None => {}
+        let gpu_started = match &mut self.gpu {
+            GpuBaseline::Static(s) => s.drain_started(now),
+            GpuBaseline::Serverless(s) => s.drain_started(now),
+            GpuBaseline::None => Vec::new(),
+        };
+        for s in gpu_started {
+            sink.push(s);
         }
         if let Some(api) = &mut self.api {
-            out.extend(api.drain_started(now));
+            for s in api.drain_started(now) {
+                sink.push(s);
+            }
         }
-        out
     }
 
     fn has_dirty(&self) -> bool {

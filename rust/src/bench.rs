@@ -306,11 +306,51 @@ pub fn admission_bench() -> AdmissionBench {
     }
 }
 
-/// Serialize bench rows (plus the admission differential) to the
-/// `BENCH_sched.json` format.
-pub fn sched_bench_json(rows: &[SchedBenchRow], admission: &AdmissionBench) -> String {
+/// Actions-per-second of the million-action scale pack on the dirty-pool
+/// tangram configuration, plus the process's peak RSS after the run — the
+/// `throughput` section of `BENCH_sched.json`, ratcheted by `bench-gate`
+/// (shrink-only on actions/sec, grow-capped on RSS).
+#[derive(Debug, Clone)]
+pub struct ThroughputBench {
+    pub pack: String,
+    /// Terminal actions the run completed.
+    pub actions: u64,
+    /// Wall-clock of the simulation run (seconds).
+    pub wall_secs: f64,
+    /// `actions / wall_secs`.
+    pub actions_per_sec: f64,
+    /// Peak resident set of the bench process after the run (KiB; 0 where
+    /// `/proc` is unavailable — the gate then skips the RSS ratchet).
+    pub peak_rss_kb: u64,
+}
+
+/// Run the throughput bench: one timed dirty-pool tangram pass over the
+/// million-action pack.
+pub fn throughput_bench() -> crate::util::error::Result<ThroughputBench> {
+    use crate::scenario::{million_action_pack, run_scenario_tangram};
+    let spec = million_action_pack();
+    let t = Stopwatch::start();
+    let (outcome, _) = run_scenario_tangram(&spec, false)?;
+    let wall_secs = t.secs();
+    let actions = outcome.metrics.actions.len() as u64;
+    Ok(ThroughputBench {
+        pack: spec.name,
+        actions,
+        wall_secs,
+        actions_per_sec: actions as f64 / wall_secs.max(1e-9),
+        peak_rss_kb: crate::metrics::peak_rss_kb(),
+    })
+}
+
+/// Serialize bench rows (plus the admission differential and, when
+/// measured, the throughput section) to the `BENCH_sched.json` format.
+pub fn sched_bench_json(
+    rows: &[SchedBenchRow],
+    admission: &AdmissionBench,
+    throughput: Option<&ThroughputBench>,
+) -> String {
     use crate::util::json::Json;
-    Json::obj(vec![
+    let mut pairs = vec![
         ("bench", Json::str("sched_dirty_pool")),
         ("backend", Json::str("tangram")),
         (
@@ -345,8 +385,20 @@ pub fn sched_bench_json(rows: &[SchedBenchRow], admission: &AdmissionBench) -> S
                 ("savings_without", Json::num(admission.savings_without)),
             ]),
         ),
-    ])
-    .to_string()
+    ];
+    if let Some(t) = throughput {
+        pairs.push((
+            "throughput",
+            Json::obj(vec![
+                ("pack", Json::str(t.pack.clone())),
+                ("actions", Json::num(t.actions as f64)),
+                ("wall_secs", Json::num(t.wall_secs)),
+                ("actions_per_sec", Json::num(t.actions_per_sec)),
+                ("peak_rss_kb", Json::num(t.peak_rss_kb as f64)),
+            ]),
+        ));
+    }
+    Json::obj(pairs).to_string()
 }
 
 // ---------------------------------------------------------------------------
@@ -426,6 +478,40 @@ pub fn parse_admission(text: &str) -> crate::util::error::Result<Option<Admissio
         act_ratio: field("act_ratio")?,
         savings_with: field("savings_with")?,
         savings_without: field("savings_without")?,
+    }))
+}
+
+/// Parsed `throughput` section of a `BENCH_sched.json` report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ThroughputGate {
+    pub pack: String,
+    pub actions: f64,
+    pub actions_per_sec: f64,
+    pub peak_rss_kb: f64,
+}
+
+/// Parse the optional `throughput` section written by [`sched_bench_json`]
+/// (older baselines predate it — `Ok(None)`).
+pub fn parse_throughput(text: &str) -> crate::util::error::Result<Option<ThroughputGate>> {
+    use crate::err;
+    let j = crate::util::json::Json::parse(text).map_err(|e| err!("BENCH_sched.json: {e}"))?;
+    let Some(t) = j.get("throughput") else {
+        return Ok(None);
+    };
+    let field = |k: &str| {
+        t.get(k)
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| err!("throughput section missing number '{k}'"))
+    };
+    Ok(Some(ThroughputGate {
+        pack: t
+            .get("pack")
+            .and_then(|p| p.as_str())
+            .ok_or_else(|| err!("throughput section missing 'pack'"))?
+            .to_string(),
+        actions: field("actions")?,
+        actions_per_sec: field("actions_per_sec")?,
+        peak_rss_kb: field("peak_rss_kb")?,
     }))
 }
 
@@ -511,7 +597,77 @@ pub fn sched_bench_gate(
         }
     }
     gate_admission(&mut report, parse_admission(baseline)?, parse_admission(fresh)?, tolerance);
+    gate_throughput(&mut report, parse_throughput(baseline)?, parse_throughput(fresh)?, tolerance);
     Ok(report)
+}
+
+/// Throughput ratchet: actions/sec may only shrink within a widened slack
+/// (5× the invocation-ratio tolerance — it is the one wall-clock-derived
+/// figure in the report, so CI machine noise needs the extra headroom), and
+/// peak RSS may only grow within the same slack. A zero RSS on either side
+/// means `/proc` was unavailable there; the RSS ratchet is skipped rather
+/// than compared against a placeholder.
+fn gate_throughput(
+    report: &mut GateReport,
+    base: Option<ThroughputGate>,
+    fresh: Option<ThroughputGate>,
+    tolerance: f64,
+) {
+    let Some(f) = fresh else {
+        if base.is_some() {
+            report
+                .failures
+                .push("throughput section present in baseline but missing from fresh run".into());
+        }
+        return;
+    };
+    if f.actions < 1.0 || f.actions_per_sec <= 0.0 {
+        report.failures.push(format!(
+            "throughput bench ('{}') completed no work ({:.0} actions, {:.0} actions/sec)",
+            f.pack, f.actions, f.actions_per_sec
+        ));
+    }
+    let slack = 5.0 * tolerance;
+    match base {
+        Some(b) => {
+            let floor = b.actions_per_sec * (1.0 - slack);
+            let verdict = if f.actions_per_sec < floor { "REGRESSED" } else { "ok" };
+            report.lines.push(format!(
+                "{:<16} throughput {:.0} -> {:.0} actions/sec (floor {:.0}) {}",
+                f.pack, b.actions_per_sec, f.actions_per_sec, floor, verdict
+            ));
+            if f.actions_per_sec < floor {
+                report.failures.push(format!(
+                    "throughput ('{}'): actions/sec regressed {:.0} -> {:.0} (>{:.0}% loss)",
+                    f.pack,
+                    b.actions_per_sec,
+                    f.actions_per_sec,
+                    slack * 100.0
+                ));
+            }
+            if b.peak_rss_kb > 0.0 && f.peak_rss_kb > 0.0 {
+                let ceiling = b.peak_rss_kb * (1.0 + slack);
+                let verdict = if f.peak_rss_kb > ceiling { "REGRESSED" } else { "ok" };
+                report.lines.push(format!(
+                    "{:<16} peak RSS {:.0} -> {:.0} KiB (ceiling {:.0}) {}",
+                    f.pack, b.peak_rss_kb, f.peak_rss_kb, ceiling, verdict
+                ));
+                if f.peak_rss_kb > ceiling {
+                    report.failures.push(format!(
+                        "throughput ('{}'): peak RSS grew {:.0} -> {:.0} KiB (>{:.0}% growth)",
+                        f.pack,
+                        b.peak_rss_kb,
+                        f.peak_rss_kb,
+                        slack * 100.0
+                    ));
+                }
+            }
+        }
+        None => report.lines.push(format!(
+            "{:<16} throughput {:.0} actions/sec — no baseline yet, commit one to ratchet it",
+            f.pack, f.actions_per_sec
+        )),
+    }
 }
 
 /// Admission ratchet: the fresh report must uphold the hard invariants
@@ -727,5 +883,112 @@ mod tests {
         let g = sched_bench_gate(&plain, &ok, 0.10).unwrap();
         assert!(g.passed(), "{:?}", g.failures);
         assert!(g.lines.iter().any(|l| l.contains("no baseline yet")));
+    }
+
+    fn bench_json_with_throughput(
+        rows: &[(&str, f64, bool)],
+        actions_per_sec: f64,
+        peak_rss_kb: f64,
+    ) -> String {
+        let body: Vec<String> = rows
+            .iter()
+            .map(|(p, r, eq)| {
+                format!(r#"{{"pack":"{p}","reduction":{r},"metrics_equal":{eq}}}"#)
+            })
+            .collect();
+        format!(
+            r#"{{"bench":"sched_dirty_pool","rows":[{}],"throughput":{{"pack":"million-action","actions":1000000,"wall_secs":10.0,"actions_per_sec":{actions_per_sec},"peak_rss_kb":{peak_rss_kb}}}}}"#,
+            body.join(",")
+        )
+    }
+
+    #[test]
+    fn throughput_section_parses_and_is_optional() {
+        let plain = bench_json(&[("steady-mix", 4.0, true)]);
+        assert_eq!(parse_throughput(&plain).unwrap(), None);
+        let with = bench_json_with_throughput(&[("steady-mix", 4.0, true)], 100000.0, 50000.0);
+        let t = parse_throughput(&with).unwrap().unwrap();
+        assert_eq!(t.pack, "million-action");
+        assert!((t.actions_per_sec - 100000.0).abs() < 1e-9);
+        assert!((t.peak_rss_kb - 50000.0).abs() < 1e-9);
+        assert!(parse_throughput(r#"{"throughput":{"pack":"x"}}"#).is_err());
+    }
+
+    #[test]
+    fn gate_ratchets_actions_per_sec_with_widened_slack() {
+        let rows = [("steady-mix", 4.0, true)];
+        let base = bench_json_with_throughput(&rows, 100000.0, 50000.0);
+        // 5× the 10% tolerance → the floor is 50% of baseline
+        let ok = bench_json_with_throughput(&rows, 60000.0, 50000.0);
+        let g = sched_bench_gate(&base, &ok, 0.10).unwrap();
+        assert!(g.passed(), "{:?}", g.failures);
+        assert!(g.lines.iter().any(|l| l.contains("throughput")));
+        let worse = bench_json_with_throughput(&rows, 40000.0, 50000.0);
+        let g = sched_bench_gate(&base, &worse, 0.10).unwrap();
+        assert!(!g.passed());
+        assert!(g.failures.iter().any(|f| f.contains("actions/sec regressed")));
+    }
+
+    #[test]
+    fn gate_caps_peak_rss_growth_and_skips_unmeasured_rss() {
+        let rows = [("steady-mix", 4.0, true)];
+        let base = bench_json_with_throughput(&rows, 100000.0, 50000.0);
+        // RSS ceiling is 1.5× baseline at the widened slack
+        let grown = bench_json_with_throughput(&rows, 100000.0, 80000.0);
+        let g = sched_bench_gate(&base, &grown, 0.10).unwrap();
+        assert!(!g.passed());
+        assert!(g.failures.iter().any(|f| f.contains("peak RSS grew")));
+        // an unmeasured side (0 KiB — no /proc) skips the RSS ratchet
+        let unmeasured = bench_json_with_throughput(&rows, 100000.0, 0.0);
+        let g = sched_bench_gate(&base, &unmeasured, 0.10).unwrap();
+        assert!(g.passed(), "{:?}", g.failures);
+        let g = sched_bench_gate(&unmeasured, &grown, 0.10).unwrap();
+        assert!(g.passed(), "{:?}", g.failures);
+    }
+
+    #[test]
+    fn gate_handles_missing_throughput_sections() {
+        let rows = [("steady-mix", 4.0, true)];
+        let base = bench_json_with_throughput(&rows, 100000.0, 50000.0);
+        let plain = bench_json(&rows);
+        // a vanished section is a ratchet failure…
+        let g = sched_bench_gate(&base, &plain, 0.10).unwrap();
+        assert!(g.failures.iter().any(|f| f.contains("throughput section present")));
+        // …a missing baseline only reports
+        let g = sched_bench_gate(&plain, &base, 0.10).unwrap();
+        assert!(g.passed(), "{:?}", g.failures);
+        assert!(g.lines.iter().any(|l| l.contains("no baseline yet")));
+        // an empty fresh measurement is a hard failure even with no baseline
+        let dead = bench_json_with_throughput(&rows, 0.0, 0.0);
+        let g = sched_bench_gate(&plain, &dead, 0.10).unwrap();
+        assert!(g.failures.iter().any(|f| f.contains("completed no work")));
+    }
+
+    #[test]
+    fn bench_json_round_trips_the_throughput_section() {
+        let t = ThroughputBench {
+            pack: "million-action".into(),
+            actions: 1_000_000,
+            wall_secs: 8.0,
+            actions_per_sec: 125_000.0,
+            peak_rss_kb: 40_960,
+        };
+        let adm = AdmissionBench {
+            pack: "coldstart-storm".into(),
+            mean_act_with: 1.0,
+            mean_act_without: 1.0,
+            savings_with: 0.4,
+            savings_without: 0.4,
+        };
+        let text = sched_bench_json(&[], &adm, Some(&t));
+        let parsed = parse_throughput(&text).unwrap().unwrap();
+        assert_eq!(parsed.pack, "million-action");
+        assert_eq!(parsed.actions.to_bits(), 1_000_000f64.to_bits());
+        assert_eq!(parsed.actions_per_sec.to_bits(), 125_000f64.to_bits());
+        assert_eq!(parsed.peak_rss_kb.to_bits(), 40_960f64.to_bits());
+        // and without a measurement the key is absent entirely
+        let text = sched_bench_json(&[], &adm, None);
+        assert_eq!(parse_throughput(&text).unwrap(), None);
+        assert!(!text.contains("throughput"));
     }
 }

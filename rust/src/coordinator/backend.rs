@@ -21,15 +21,23 @@
 //!   moves the historical-average estimate of a kind the pool holds
 //!   unprofiled queued actions of (the one *cross-pool* coupling — the
 //!   EWMA feeds every pool's decision objective).
-//! * [`Backend::drain_started`] schedules **only dirty pools, in sorted
-//!   order** (sorted so same-timestamp `Started` ordering — and therefore
-//!   recorded scenario traces — stays deterministic across processes), and
-//!   clears the set. Two kinds of pool re-arm themselves: one that
-//!   *started* work (its own state changed; the next pump may start more
-//!   on the leftover capacity, exactly as the legacy full sweep did), and
-//!   one that is *stalled* (non-empty queue, nothing running that will
-//!   free capacity, nothing started) — re-arming the latter is what keeps
-//!   a cordoned-then-restored CPU node live.
+//! * [`Backend::drain_started_into`] schedules **only dirty pools, in
+//!   sorted order** (sorted so same-timestamp `Started` ordering — and
+//!   therefore recorded scenario traces — stays deterministic across
+//!   processes), and clears the set. Two kinds of pool re-arm themselves:
+//!   one that *started* work (its own state changed; the next pump may
+//!   start more on the leftover capacity, exactly as the legacy full sweep
+//!   did), and one that is *stalled* (non-empty queue, nothing running
+//!   that will free capacity, nothing started) — re-arming the latter is
+//!   what keeps a cordoned-then-restored CPU node live.
+//! * Decisions flow into a caller-owned [`StartedSink`], so the driver
+//!   reuses one buffer across every pump instead of allocating a
+//!   `Vec<Started>` per drain. [`Backend::drain_started`] remains as a
+//!   default allocating adapter for tests and one-shot callers.
+//! * Backends that partition the drain across logical shards
+//!   ([`Backend::set_shards`]) must merge per-shard decisions back in the
+//!   global sorted-pool order, so the sink's contents — and therefore
+//!   recorded traces — are byte-identical for any shard count.
 //! * [`Backend::has_dirty`] tells the driver whether a drain could start
 //!   anything at all; the driver skips `drain_started` entirely when it
 //!   returns `false`. Backends whose admission is time-gated rather than
@@ -59,6 +67,45 @@ pub struct Started {
     pub exec: SimDur,
     /// Units of the key resource granted.
     pub units: u64,
+}
+
+/// Reusable decision buffer for [`Backend::drain_started_into`].
+///
+/// The driver owns one sink for the whole run and hands it to the backend
+/// on every pump; the backend pushes its decisions and the driver drains
+/// them, so the steady state is alloc-free (the backing `Vec` keeps its
+/// high-water capacity). Push order is the contract: decisions must arrive
+/// in the global sorted-pool order regardless of how the backend
+/// partitions the drain internally.
+#[derive(Debug, Default)]
+pub struct StartedSink {
+    buf: Vec<Started>,
+}
+
+impl StartedSink {
+    /// Record one start decision.
+    pub fn push(&mut self, s: Started) {
+        self.buf.push(s);
+    }
+
+    /// Decisions currently buffered.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Drain the buffered decisions in push order, keeping the capacity.
+    pub fn drain(&mut self) -> std::vec::Drain<'_, Started> {
+        self.buf.drain(..)
+    }
+
+    /// Consume the sink into its backing `Vec` (the legacy return shape).
+    pub fn into_vec(self) -> Vec<Started> {
+        self.buf
+    }
 }
 
 /// What to do when an attempt finishes.
@@ -99,9 +146,20 @@ pub trait Backend {
     fn on_complete(&mut self, now: SimTime, action: &Action) -> Verdict;
 
     /// Collect actions that can start now (called after submits/completions
-    /// and timed wakeups). Under the dirty-pool contract this schedules
-    /// only pools whose state changed since the previous drain.
-    fn drain_started(&mut self, now: SimTime) -> Vec<Started>;
+    /// and timed wakeups), pushing decisions into the caller's sink in the
+    /// global sorted-pool order. Under the dirty-pool contract this
+    /// schedules only pools whose state changed since the previous drain.
+    /// The driver reuses one sink across pumps, so implementations must not
+    /// assume it starts with spare capacity — only that it starts empty.
+    fn drain_started_into(&mut self, now: SimTime, sink: &mut StartedSink);
+
+    /// Allocating adapter over [`Backend::drain_started_into`] for tests
+    /// and one-shot callers; the driver's hot path never uses it.
+    fn drain_started(&mut self, now: SimTime) -> Vec<Started> {
+        let mut sink = StartedSink::default();
+        self.drain_started_into(now, &mut sink);
+        sink.into_vec()
+    }
 
     /// Dirty-pool contract: `true` when at least one pool's state changed
     /// since the last [`Backend::drain_started`], so draining could start
@@ -168,5 +226,15 @@ pub trait Backend {
     /// anyway (see `coordinator::queue`).
     fn set_tenant_weights(&mut self, weights: &[(u32, u32)]) {
         let _ = weights;
+    }
+
+    /// Partition the drain across `n` logical shards (contiguous slices of
+    /// the sorted pool list, processed in ascending shard order and merged
+    /// back in that order — which *is* the global sorted-pool order, so the
+    /// decision stream is byte-identical for any `n`). `n = 1` must be
+    /// bitwise the unsharded path. The default ignores the knob — backends
+    /// without sub-pool parallelism have nothing to partition.
+    fn set_shards(&mut self, n: usize) {
+        let _ = n;
     }
 }

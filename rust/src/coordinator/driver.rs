@@ -12,7 +12,7 @@
 //! scheduling decision for differential replay, an optional [`Autoscaler`],
 //! and per-tenant WFQ weights installed into the backend's lane queues.
 
-use super::backend::{Backend, Verdict};
+use super::backend::{Backend, StartedSink, Verdict};
 use crate::action::{Action, ActionId, ActionKind, ActionSpec, ActionState, TenantId, TrajId};
 use crate::autoscale::{Autoscaler, LaneKey, ScaleCmd};
 use crate::metrics::{ActionRecord, Metrics, ProvisionRecord, StepRecord, TrajRecord, UtilSample};
@@ -134,6 +134,9 @@ struct Driver<'a> {
     asc: Option<&'a mut Autoscaler>,
     /// actions submitted but not yet started (trace queue-depth gauge)
     waiting: u64,
+    /// reusable drain buffer: one sink for the whole run, so the steady
+    /// state of the pump hot path allocates nothing per drain
+    sink: StartedSink,
 }
 
 /// Everything a run carries besides the backend/workload essentials: the
@@ -150,6 +153,10 @@ pub struct Session {
     recorder: Option<TraceRecorder>,
     autoscaler: Option<Autoscaler>,
     tenant_weights: Vec<(u32, u32)>,
+    /// Drain shards requested via [`Session::with_shards`] (0 = leave the
+    /// backend's default — unset is distinct from asking for 1 shard so
+    /// replay can honor whatever the backend was constructed with).
+    shards: usize,
 }
 
 impl Session {
@@ -184,6 +191,15 @@ impl Session {
         self
     }
 
+    /// Partition the backend's drain across `n` logical shards
+    /// ([`Backend::set_shards`]). Decisions merge in the global sorted-pool
+    /// order, so any `n` produces byte-identical traces; `n = 1` is
+    /// bitwise the unsharded path. `0` leaves the backend's default.
+    pub fn with_shards(mut self, n: usize) -> Self {
+        self.shards = n;
+        self
+    }
+
     /// Reclaim the recorder after a run (e.g. to write the trace file).
     pub fn take_recorder(&mut self) -> Option<TraceRecorder> {
         self.recorder.take()
@@ -214,10 +230,13 @@ pub fn run_session(
     cfg: &RunCfg,
     session: &mut Session,
 ) -> Metrics {
-    let Session { injections, recorder, autoscaler, tenant_weights } = session;
+    let Session { injections, recorder, autoscaler, tenant_weights, shards } = session;
     let injections: &[TimedEvent] = injections;
     if !tenant_weights.is_empty() {
         backend.set_tenant_weights(tenant_weights);
+    }
+    if *shards > 0 {
+        backend.set_shards(*shards);
     }
     let mut d = Driver {
         backend,
@@ -247,6 +266,7 @@ pub fn run_session(
         rec: recorder,
         asc: autoscaler,
         waiting: 0,
+        sink: StartedSink::default(),
     };
     // pin the initial provision of every pool (the resource-hour series
     // baseline; without resizes this is the whole static bill)
@@ -628,8 +648,13 @@ impl Driver<'_> {
     /// pool, the drain is skipped entirely (nothing could start).
     fn pump(&mut self, now: SimTime) {
         if self.backend.has_dirty() {
-            let started = self.backend.drain_started(now);
-            for s in started {
+            // the sink is moved out for the drain (an empty `StartedSink`
+            // is allocation-free) and put back below, keeping its
+            // high-water capacity across pumps — the steady-state hot path
+            // allocates nothing per drain
+            let mut sink = std::mem::take(&mut self.sink);
+            self.backend.drain_started_into(now, &mut sink);
+            for s in sink.drain() {
                 let rc = self.actions.get_mut(&s.action).expect("unknown started action");
                 let a = Rc::get_mut(rc)
                     .expect("started action still referenced by a backend queue");
@@ -655,6 +680,7 @@ impl Driver<'_> {
                 );
                 self.eng.schedule_in(s.overhead + s.exec, Ev::ActionDone(s.action));
             }
+            self.sink = sink;
         }
         if let Some(at) = self.backend.next_wakeup(now) {
             if at > now && self.wakeup_at.map_or(true, |w| at < w || w <= now) {

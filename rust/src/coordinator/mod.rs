@@ -6,7 +6,7 @@ pub mod driver;
 pub mod queue;
 pub mod tangram;
 
-pub use backend::{Backend, Started, Verdict};
+pub use backend::{Backend, Started, StartedSink, Verdict};
 pub use driver::{run, run_session, RunCfg, Session};
 pub use queue::ActionQueue;
 pub use tangram::{TangramBackend, TangramCfg};
@@ -272,6 +272,95 @@ mod tests {
         let m = run(&mut be, &cat, &[wl], &cfg);
         assert_eq!(m.trajectories.len(), 64);
         assert_eq!(m.failed_actions(), 0);
+    }
+
+    #[test]
+    fn full_sweep_index_survives_a_scheduling_panic() {
+        // Regression for the full-sweep drain's cached pool index: the old
+        // take/put-back idiom (`mem::take(&mut self.all_pools)` … restore)
+        // lost the index on any unwind out of `schedule_pool`, after which
+        // every full-sweep drain silently scheduled zero pools. The drain
+        // now walks the cache in place, so an unwind leaves it intact.
+        use crate::action::{
+            Action, ActionId, ActionKind, ActionSpec, CostSpec, DimCost, ElasticityModel,
+            TenantId, TrajId,
+        };
+        use crate::sim::SimTime;
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        use std::rc::Rc;
+        let cat = small_cat();
+        let mut be = TangramBackend::new(
+            &cat,
+            TangramCfg {
+                cpu_nodes: 2,
+                numa_per_node: 2,
+                cores_per_numa: 8,
+                node_mem_gb: 256,
+                gpu_nodes: 2,
+                full_sweep: true,
+                ..TangramCfg::default()
+            },
+        );
+        let pools_before = be.pool_count();
+        assert!(pools_before > 0);
+        // a GPU-cost action with no service id: the GPU arm of
+        // `schedule_pool` panics on it ("GPU action without service")
+        let poisoned = Rc::new(Action::new(
+            ActionId(1),
+            ActionSpec {
+                task: TaskId(0),
+                tenant: TenantId(0),
+                trajectory: TrajId(1),
+                kind: ActionKind::RewardModel,
+                cost: CostSpec::single(&cat.registry, cat.gpu_units, DimCost::Fixed(1)),
+                key_resource: Some(cat.gpu_units),
+                elasticity: ElasticityModel::None,
+                profiled_dur: Some(SimDur::from_secs(1)),
+                service: None,
+                true_dur: SimDur::from_secs(1),
+            },
+            SimTime::ZERO,
+        ));
+        be.gpu.queue.push_back(poisoned);
+        let unwound = catch_unwind(AssertUnwindSafe(|| be.drain_started(SimTime::ZERO)));
+        assert!(unwound.is_err(), "the poisoned action must panic the sweep");
+        assert_eq!(be.pool_count(), pools_before, "pool index lost on unwind");
+        // with the poison removed, the backend keeps working
+        let _ = be.gpu.queue.pop_front();
+        let started = be.drain_started(SimTime::ZERO);
+        assert!(started.is_empty(), "recovered drain runs clean on empty queues");
+    }
+
+    #[test]
+    fn sharded_drain_matches_serial_metrics() {
+        // Worker-count independence at the metrics level: contiguous shard
+        // chunks processed in ascending order visit pools exactly like the
+        // serial drain, so every decision — and thus every derived metric —
+        // is identical for any shard count, including counts far above the
+        // pool count. (Byte-level trace parity lives in scenario::replay.)
+        let cat = small_cat();
+        let wls = [
+            Workload::new(TaskId(1), WorkloadKind::DeepSearch),
+            Workload::new(TaskId(2), WorkloadKind::Mopd),
+        ];
+        let cfg = RunCfg { batch: 12, steps: 1, seed: 31, ..RunCfg::default() };
+        let serial = run(&mut tangram_for(&cat), &cat, &wls, &cfg);
+        for shards in [2usize, 3, 8, 64] {
+            let mut be = tangram_for(&cat);
+            be.set_shards(shards);
+            let m = run(&mut be, &cat, &wls, &cfg);
+            assert_eq!(m.actions.len(), serial.actions.len(), "shards={shards}");
+            assert_eq!(
+                m.mean_act().to_bits(),
+                serial.mean_act().to_bits(),
+                "shards={shards}"
+            );
+            assert_eq!(
+                m.mean_step_dur().to_bits(),
+                serial.mean_step_dur().to_bits(),
+                "shards={shards}"
+            );
+        }
     }
 
     #[test]

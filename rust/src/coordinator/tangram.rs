@@ -17,6 +17,16 @@
 //! `TangramCfg::full_sweep` restores the legacy scan-everything behaviour
 //! for differential testing and the scheduler-invocation benchmarks.
 //!
+//! The drain optionally partitions its pool work-list across **logical
+//! shards** ([`Backend::set_shards`]): contiguous slices of the sorted
+//! list, processed in ascending shard order and merged back in that order
+//! — which *is* the global sorted-pool order, so the decision stream (and
+//! every recorded trace) is byte-identical for any shard count and
+//! `--shards 1` is bitwise the unsharded path. Contiguous-in-order
+//! chunking (not round-robin) also keeps the one cross-pool coupling in a
+//! drain — the container-creation first-marker — ordered exactly as the
+//! serial loop ordered it.
+//!
 //! Every *scaling* concern — classification, pressure reporting,
 //! fault × autoscale factor composition, substrate application, provision
 //! accounting — lives behind the [`ElasticLane`] abstraction
@@ -25,7 +35,7 @@
 //! fault injections generically over the lane array — no per-class
 //! `match` remains on those paths.
 
-use super::backend::{Backend, Started, Verdict};
+use super::backend::{Backend, Started, StartedSink, Verdict};
 use crate::action::{Action, ActionId, ResourceKindId, TrajId};
 use crate::autoscale::{LaneKey, PoolPressure};
 use crate::cluster::api::ApiOutcome;
@@ -100,6 +110,10 @@ pub struct TangramBackend {
     /// [`Self::rebuild_pool_index`] to invalidate it. Replaces the fresh
     /// sorted `Vec<PoolId>` the drain path used to allocate per call.
     all_pools: Vec<PoolId>,
+    /// Logical drain shards (see the module docs): contiguous slices of
+    /// the sorted pool work-list, processed in ascending order. `1` is the
+    /// unsharded path; any value yields byte-identical decisions.
+    shards: usize,
     /// trajectories that have already run their first CPU action (container
     /// creation charged once)
     containers_created: HashSet<TrajId>,
@@ -138,6 +152,7 @@ impl TangramBackend {
             api: ApiLane::new(&cat.api),
             dirty: BTreeSet::new(),
             all_pools: Vec::new(),
+            shards: 1,
             containers_created: HashSet::new(),
             api_outcomes: HashMap::new(),
             inflight_exec: HashMap::new(),
@@ -197,7 +212,7 @@ impl TangramBackend {
     }
 
     /// Run the elastic scheduler over one queue and apply its decisions.
-    fn schedule_pool(&mut self, now: SimTime, pool: PoolId, out: &mut Vec<Started>) {
+    fn schedule_pool(&mut self, now: SimTime, pool: PoolId, out: &mut StartedSink) {
         match pool {
             PoolId::CpuNode(node) => {
                 if self.cpu.queues[&node].is_empty() {
@@ -368,6 +383,22 @@ impl TangramBackend {
         self.api.provisioned_lanes()
     }
 
+    /// Shards actually used for a work-list of `len` pools: never more
+    /// shards than pools, never fewer than one.
+    fn shard_count(&self, len: usize) -> usize {
+        self.shards.min(len).max(1)
+    }
+
+    /// Contiguous balanced chunk `[lo, hi)` of a `len`-pool work-list for
+    /// `shard` of [`Self::shard_count`] shards. Chunks tile the list in
+    /// ascending order, so processing shards 0..n in order visits pools in
+    /// exactly the serial (sorted) order — the deterministic-merge
+    /// invariant the shard-parity tests pin.
+    fn shard_bounds(&self, len: usize, shard: usize) -> (usize, usize) {
+        let n = self.shard_count(len);
+        (shard * len / n, (shard + 1) * len / n)
+    }
+
     /// Mean wall-clock per invocation of one counted hot-path stat.
     fn mean_latency(total: std::time::Duration, count: u64) -> std::time::Duration {
         if count == 0 {
@@ -484,60 +515,58 @@ impl Backend for TangramBackend {
         verdict
     }
 
-    fn drain_started(&mut self, now: SimTime) -> Vec<Started> {
+    fn drain_started_into(&mut self, now: SimTime, sink: &mut StartedSink) {
         let t0 = Stopwatch::start();
-        let mut out = Vec::new();
         if self.cfg.full_sweep {
-            // cached sorted index — the sweep no longer allocates (and
-            // re-sorts) a fresh pool list on every drain; taken and put
-            // back around the loop because schedule_pool needs &mut self
-            let pools = std::mem::take(&mut self.all_pools);
-            for &pool in &pools {
-                self.schedule_pool(now, pool, &mut out);
-            }
-            self.all_pools = pools;
-        } else {
-            // BTreeSet iteration = sorted PoolId order (determinism)
-            for pool in std::mem::take(&mut self.dirty) {
-                let before = out.len();
-                self.schedule_pool(now, pool, &mut out);
-                if out.len() > before {
-                    // Started something — the pool's own state changed, so
-                    // it is dirty again by definition. Re-arming keeps
-                    // parity with the legacy sweep: the eviction estimate
-                    // may have planned an immediate follow-on start on the
-                    // leftover budget, which the sweep realized at the
-                    // driver's next same-instant pump.
-                    self.dirty.insert(pool);
-                    continue;
+            // Cached sorted index, walked by index so a panic inside
+            // schedule_pool (however unlikely) can never leave the cache
+            // empty — the old take/put-back idiom lost `all_pools` on any
+            // unwind between the take and the restore. The index loop is a
+            // `while` because holding a borrow of `self.all_pools` across
+            // the `&mut self` call is not possible.
+            for shard in 0..self.shard_count(self.all_pools.len()) {
+                let (mut i, hi) = self.shard_bounds(self.all_pools.len(), shard);
+                while i < hi {
+                    let pool = self.all_pools[i];
+                    self.schedule_pool(now, pool, sink);
+                    i += 1;
                 }
-                // Stall re-arm: a pool with waiting work, nothing running
-                // that will free capacity, and nothing started (e.g. the
-                // liveness guard's forced head lost its cores to a cordon)
-                // has no future event of its own to dirty it — keep it
-                // dirty so every pump retries until capacity returns
-                // (cordon restore, traj teardown).
-                let stalled = match pool {
-                    PoolId::CpuNode(n) => {
-                        !self.cpu.queues[&n].is_empty()
-                            && self.cpu.mgr.node_state(n).running_completions().is_empty()
+            }
+        } else {
+            // BTreeSet iteration = sorted PoolId order (determinism); the
+            // shard partition is contiguous over that order, so ascending
+            // shards concatenate back into exactly the serial visit order.
+            let pools: Vec<PoolId> = std::mem::take(&mut self.dirty).into_iter().collect();
+            for shard in 0..self.shard_count(pools.len()) {
+                let (lo, hi) = self.shard_bounds(pools.len(), shard);
+                for &pool in &pools[lo..hi] {
+                    let before = sink.len();
+                    self.schedule_pool(now, pool, sink);
+                    if sink.len() > before {
+                        // Started something — the pool's own state changed,
+                        // so it is dirty again by definition. Re-arming
+                        // keeps parity with the legacy sweep: the eviction
+                        // estimate may have planned an immediate follow-on
+                        // start on the leftover budget, which the sweep
+                        // realized at the driver's next same-instant pump.
+                        self.dirty.insert(pool);
+                        continue;
                     }
-                    PoolId::Gpu => {
-                        !self.gpu.queue.is_empty()
-                            && self.gpu.mgr.running_completions().is_empty()
+                    // Stall re-arm: a pool with waiting work, nothing
+                    // running that will free capacity, and nothing started
+                    // (e.g. the liveness guard's forced head lost its cores
+                    // to a cordon) has no future event of its own to dirty
+                    // it — keep it dirty so every pump retries until
+                    // capacity returns (cordon restore, traj teardown).
+                    // Each lane owns its class's stall predicate.
+                    if self.lanes().iter().any(|l| l.has_stalled_waiters(pool)) {
+                        self.dirty.insert(pool);
                     }
-                    // API admission is covered by completions and the quota-
-                    // window wakeup contract — never stalled silently
-                    PoolId::Api(_) => false,
-                };
-                if stalled {
-                    self.dirty.insert(pool);
                 }
             }
         }
         self.drain_calls += 1;
         self.drain_wall += t0.elapsed();
-        out
     }
 
     fn has_dirty(&self) -> bool {
@@ -622,6 +651,10 @@ impl Backend for TangramBackend {
 
     fn set_tenant_weights(&mut self, weights: &[(u32, u32)]) {
         self.for_each_queue(|q| q.set_weights(weights));
+    }
+
+    fn set_shards(&mut self, n: usize) {
+        self.shards = n.max(1);
     }
 
     fn inject(&mut self, _now: SimTime, event: &ScenarioEvent) -> bool {

@@ -166,4 +166,11 @@ impl ElasticLane for ApiLane {
             dirty,
         }
     }
+
+    fn has_stalled_waiters(&self, _pool: PoolId) -> bool {
+        // API admission is never silently stalled: a queued call either
+        // rides an in-flight completion or the quota-window wakeup
+        // (`next_wakeup`), so there is always a future event of its own
+        false
+    }
 }

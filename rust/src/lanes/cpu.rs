@@ -124,4 +124,14 @@ impl ElasticLane for CpuLane {
         let dirty = self.apply();
         Resized { reached: self.provisioned_units(), applied: true, dirty }
     }
+
+    fn has_stalled_waiters(&self, pool: PoolId) -> bool {
+        // a cordoned node with queued work and nothing running has no
+        // completion coming to revive it — only a resize/restore will
+        let PoolId::CpuNode(node) = pool else {
+            return false;
+        };
+        self.queues.get(&node).is_some_and(|q| !q.is_empty())
+            && self.mgr.node_state(node).running_completions().is_empty()
+    }
 }

@@ -103,4 +103,12 @@ impl ElasticLane for GpuLane {
         let dirty = self.apply();
         Resized { reached: self.provisioned_units(), applied: true, dirty }
     }
+
+    fn has_stalled_waiters(&self, pool: PoolId) -> bool {
+        // a cordoned-down cluster with queued service work and nothing
+        // running sees no completion — only a resize/restore revives it
+        pool == PoolId::Gpu
+            && !self.queue.is_empty()
+            && self.mgr.running_completions().is_empty()
+    }
 }

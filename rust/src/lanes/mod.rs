@@ -111,4 +111,13 @@ pub trait ElasticLane {
     /// target of the lane) and push the composed product into the
     /// substrate.
     fn set_auto(&mut self, endpoint: Option<u32>, factor: f64) -> Resized;
+
+    /// Whether `pool` (a sub-pool of this lane; `false` for any other
+    /// lane's pool) is **stalled**: it has waiting work but nothing running
+    /// that will free capacity, and no future event of its own will arrive
+    /// to revive it. The backend keeps stalled pools dirty across drains so
+    /// a later resize/restore can start their queues — this is the
+    /// cordon queue-stall contract, owned by the lane so the backend's
+    /// drain hot path needs no per-class `match`.
+    fn has_stalled_waiters(&self, pool: PoolId) -> bool;
 }

@@ -32,6 +32,8 @@
 //!   arl-tangram scenario --pack gpu-thrash --autoscale   # GPU-elastic A/B reference
 //!   arl-tangram scenario --replay static.jsonl --against auto.jsonl
 //!   arl-tangram scenario --fuzz 0 --cases 50   # seeded fuzz + invariant oracle sweep
+//!   arl-tangram scenario --pack steady-mix --shards 4    # sharded drain, byte-identical trace
+//!   arl-tangram scenario --pack million-action --scale 2 # multiply catalog×batch before running
 //!   arl-tangram bench-gate --baseline testdata/BENCH_sched.baseline.json
 //!   arl-tangram lint --json
 //!   arl-tangram serve --artifacts artifacts
@@ -47,8 +49,8 @@ use arl_tangram::rollout::workloads::{Catalog, Workload, WorkloadKind};
 use arl_tangram::runtime::{PjrtEngine, RewardModel};
 use arl_tangram::scenario::{
     ab_compare, build_backend, builtin_packs, fuzz_spec, pack_by_name, pack_description,
-    read_trace_file, replay_trace, run_scenario, run_scenario_tangram, summary_json,
-    write_trace_file, ScenarioSpec,
+    read_trace_file, replay_trace_sharded, run_scenario_sharded, run_scenario_tangram,
+    run_scenario_tangram_sharded, summary_json, write_trace_file, ScenarioSpec,
 };
 use arl_tangram::testkit::oracle;
 use arl_tangram::util::cli::Args;
@@ -197,8 +199,8 @@ enum ScenarioMode {
     List,
     Fuzz,
     Against { replay: String, against: String },
-    Replay { path: String },
-    Run { source: SpecSource, backend: BackendKind, full_sweep: bool },
+    Replay { path: String, shards: usize },
+    Run { source: SpecSource, backend: BackendKind, full_sweep: bool, shards: usize, scale: u32 },
 }
 
 /// The `scenario` subcommand's flag set, lifted out of [`Args`] so every
@@ -219,6 +221,8 @@ struct ScenarioArgs {
     autoscale: bool,
     autoscale_policy: String,
     admission: bool,
+    shards: u64,
+    scale: u64,
 }
 
 impl ScenarioArgs {
@@ -237,6 +241,8 @@ impl ScenarioArgs {
             autoscale: args.bool("autoscale"),
             autoscale_policy: args.str("autoscale-policy"),
             admission: args.bool("admission"),
+            shards: args.u64("shards"),
+            scale: args.u64("scale"),
         }
     }
 
@@ -248,9 +254,18 @@ impl ScenarioArgs {
         if self.list {
             return Ok(ScenarioMode::List);
         }
+        if self.shards == 0 {
+            return usage("--shards must be at least 1");
+        }
+        if self.scale == 0 {
+            return usage("--scale must be at least 1 (it multiplies the spec; 1 = unscaled)");
+        }
         if !self.fuzz.is_empty() {
             if !self.record.is_empty() && self.cases.max(1) != 1 {
                 return usage("--record with --fuzz needs --cases 1");
+            }
+            if self.shards > 1 || self.scale > 1 {
+                return usage("--fuzz generates its own specs; --shards/--scale do not apply");
             }
             return Ok(ScenarioMode::Fuzz);
         }
@@ -258,15 +273,29 @@ impl ScenarioArgs {
             if self.replay.is_empty() {
                 return usage("--against needs --replay (the A side of the comparison)");
             }
+            if self.shards > 1 || self.scale > 1 {
+                return usage("--against diffs recorded traces offline; --shards/--scale do not apply");
+            }
             return Ok(ScenarioMode::Against {
                 replay: self.replay.clone(),
                 against: self.against.clone(),
             });
         }
         if !self.replay.is_empty() {
-            return Ok(ScenarioMode::Replay { path: self.replay.clone() });
+            if self.scale > 1 {
+                // a recording pins its spec; scaling the re-run would
+                // guarantee a divergence, not test anything
+                return usage("--scale multiplies a spec before it runs and cannot be combined with --replay");
+            }
+            return Ok(ScenarioMode::Replay {
+                path: self.replay.clone(),
+                shards: self.shards as usize,
+            });
         }
         let backend = BackendKind::parse(&self.backend).map_err(|e| UsageError(e.to_string()))?;
+        if self.shards > 1 && backend != BackendKind::Tangram {
+            return usage("--shards only applies to the tangram backend");
+        }
         if self.full_sweep && backend != BackendKind::Tangram {
             return usage("--full-sweep only applies to the tangram backend");
         }
@@ -291,7 +320,13 @@ impl ScenarioArgs {
         } else {
             return usage("need --pack, --spec, --replay, or --list");
         };
-        Ok(ScenarioMode::Run { source, backend, full_sweep: self.full_sweep })
+        Ok(ScenarioMode::Run {
+            source,
+            backend,
+            full_sweep: self.full_sweep,
+            shards: self.shards as usize,
+            scale: self.scale.min(u32::MAX as u64) as u32,
+        })
     }
 }
 
@@ -305,6 +340,8 @@ fn cmd_scenario(argv: Vec<String>) -> i32 {
         .opt("replay", "", "re-run a recorded trace file and diff (exit 1 on divergence)")
         .opt("against", "", "with --replay: A/B-diff the two trace files offline instead")
         .opt("fuzz", "", "fuzz mode: oracle-check generated specs from this base seed")
+        .opt("shards", "1", "tangram drain shards (traces are byte-identical for any value)")
+        .opt("scale", "1", "multiply the spec's catalog and batch by N before running")
         .opt("cases", "1", "with --fuzz: number of consecutive seeds to check")
         .opt("fail-out", "", "with --fuzz: write the minimized failing spec JSON here")
         .flag("list", "list built-in scenario packs")
@@ -369,7 +406,7 @@ fn cmd_scenario(argv: Vec<String>) -> i32 {
     }
 
     // ---- replay path ----------------------------------------------------
-    if let ScenarioMode::Replay { path } = &mode {
+    if let ScenarioMode::Replay { path, shards } = &mode {
         let recorded = match read_trace_file(path) {
             Ok(r) => r,
             Err(e) => {
@@ -378,12 +415,13 @@ fn cmd_scenario(argv: Vec<String>) -> i32 {
             }
         };
         println!(
-            "replaying '{}' on {} ({} recorded events)",
+            "replaying '{}' on {} ({} recorded events{})",
             recorded.spec.name,
             recorded.backend.name(),
-            recorded.events.len()
+            recorded.events.len(),
+            if *shards > 1 { format!(", {shards} shards") } else { String::new() }
         );
-        let report = match replay_trace(&recorded) {
+        let report = match replay_trace_sharded(&recorded, *shards) {
             Ok(r) => r,
             Err(e) => {
                 eprintln!("replay error: {e}");
@@ -407,8 +445,10 @@ fn cmd_scenario(argv: Vec<String>) -> i32 {
         1
     } else {
         // ---- record/run path --------------------------------------------
-        let (source, backend, full_sweep) = match mode {
-            ScenarioMode::Run { source, backend, full_sweep } => (source, backend, full_sweep),
+        let (source, backend, full_sweep, shards, scale) = match mode {
+            ScenarioMode::Run { source, backend, full_sweep, shards, scale } => {
+                (source, backend, full_sweep, shards, scale)
+            }
             // list / fuzz / against / replay all returned above
             _ => return 2,
         };
@@ -433,6 +473,9 @@ fn cmd_scenario(argv: Vec<String>) -> i32 {
         };
         if !args.str("seed").is_empty() {
             spec.seed = args.u64("seed");
+        }
+        if scale > 1 {
+            spec.scale(scale);
         }
         if args.bool("autoscale") {
             let policy = match PolicyKind::parse(&args.str("autoscale-policy")) {
@@ -463,7 +506,7 @@ fn cmd_scenario(argv: Vec<String>) -> i32 {
         let t = Stopwatch::start();
         // the tangram path also surfaces the scheduler hot-path counters
         let (outcome, sched) = if backend == BackendKind::Tangram {
-            match run_scenario_tangram(&spec, full_sweep) {
+            match run_scenario_tangram_sharded(&spec, full_sweep, shards) {
                 Ok((o, s)) => (o, Some(s)),
                 Err(e) => {
                     eprintln!("scenario error: {e}");
@@ -471,7 +514,7 @@ fn cmd_scenario(argv: Vec<String>) -> i32 {
                 }
             }
         } else {
-            match run_scenario(&spec, backend) {
+            match run_scenario_sharded(&spec, backend, shards) {
                 Ok(o) => (o, None),
                 Err(e) => {
                     eprintln!("scenario error: {e}");
@@ -886,7 +929,13 @@ mod tests {
     use super::*;
 
     fn base() -> ScenarioArgs {
-        ScenarioArgs { backend: "tangram".into(), cases: 1, ..ScenarioArgs::default() }
+        ScenarioArgs {
+            backend: "tangram".into(),
+            cases: 1,
+            shards: 1,
+            scale: 1,
+            ..ScenarioArgs::default()
+        }
     }
 
     #[test]
@@ -928,7 +977,7 @@ mod tests {
     fn replay_mode_and_spec_precedence() {
         let mut a = base();
         a.replay = "a.jsonl".into();
-        assert_eq!(a.validate(), Ok(ScenarioMode::Replay { path: "a.jsonl".into() }));
+        assert_eq!(a.validate(), Ok(ScenarioMode::Replay { path: "a.jsonl".into(), shards: 1 }));
 
         let mut a = base();
         a.pack = "steady-mix".into();
@@ -939,6 +988,8 @@ mod tests {
                 source: SpecSource::File("custom.json".into()),
                 backend: BackendKind::Tangram,
                 full_sweep: false,
+                shards: 1,
+                scale: 1,
             })
         );
     }
@@ -981,6 +1032,57 @@ mod tests {
         a.spec = "s.json".into();
         a.admission = true;
         assert!(matches!(a.validate(), Ok(ScenarioMode::Run { .. })));
+    }
+
+    #[test]
+    fn shards_rules() {
+        // zero is a usage error in any mode
+        let mut a = base();
+        a.pack = "steady-mix".into();
+        a.shards = 0;
+        assert!(a.validate().unwrap_err().0.contains("--shards"));
+        // sharded tangram run and sharded replay both validate, carrying N
+        a.shards = 4;
+        assert!(matches!(a.validate(), Ok(ScenarioMode::Run { shards: 4, .. })));
+        let mut a = base();
+        a.replay = "t.jsonl".into();
+        a.shards = 8;
+        assert_eq!(a.validate(), Ok(ScenarioMode::Replay { path: "t.jsonl".into(), shards: 8 }));
+        // non-tangram backends have no sharded drain
+        let mut a = base();
+        a.pack = "steady-mix".into();
+        a.backend = "k8s".into();
+        a.shards = 2;
+        assert!(a.validate().unwrap_err().0.contains("tangram"));
+        // fuzz and offline A/B reject the flag
+        let mut a = base();
+        a.fuzz = "7".into();
+        a.shards = 2;
+        assert!(a.validate().unwrap_err().0.contains("--fuzz"));
+        let mut a = base();
+        a.replay = "a.jsonl".into();
+        a.against = "b.jsonl".into();
+        a.shards = 2;
+        assert!(a.validate().unwrap_err().0.contains("offline"));
+    }
+
+    #[test]
+    fn scale_rules() {
+        let mut a = base();
+        a.pack = "steady-mix".into();
+        a.scale = 0;
+        assert!(a.validate().unwrap_err().0.contains("--scale"));
+        a.scale = 10;
+        assert!(matches!(a.validate(), Ok(ScenarioMode::Run { scale: 10, .. })));
+        // a recording pins its spec — scaling the re-run is a usage error
+        let mut a = base();
+        a.replay = "t.jsonl".into();
+        a.scale = 2;
+        assert!(a.validate().unwrap_err().0.contains("--replay"));
+        let mut a = base();
+        a.fuzz = "7".into();
+        a.scale = 2;
+        assert!(a.validate().unwrap_err().0.contains("--fuzz"));
     }
 
     #[test]

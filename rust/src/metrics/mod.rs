@@ -125,6 +125,30 @@ pub fn integrate_unit_secs(points: &[(SimTime, u64)], end: SimTime) -> f64 {
     secs
 }
 
+/// Peak resident-set size of this process in KiB (`VmHWM` from
+/// `/proc/self/status`), or 0 where the proc interface is unavailable.
+/// Host-side reporting for the throughput bench — never feeds a simulated
+/// decision, so the platform dependence cannot touch determinism.
+#[cfg(target_os = "linux")]
+pub fn peak_rss_kb() -> u64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let digits: String = rest.chars().filter(|c| c.is_ascii_digit()).collect();
+            return digits.parse().unwrap_or(0);
+        }
+    }
+    0
+}
+
+/// Peak resident-set size in KiB — 0 on platforms without `/proc`.
+#[cfg(not(target_os = "linux"))]
+pub fn peak_rss_kb() -> u64 {
+    0
+}
+
 /// Collector for one experiment run.
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -701,6 +725,14 @@ mod tests {
             retries: 0,
             failed: false,
         }
+    }
+
+    #[test]
+    fn peak_rss_reports_where_proc_exists() {
+        #[cfg(target_os = "linux")]
+        assert!(peak_rss_kb() > 0, "a running test process has a high-water RSS");
+        #[cfg(not(target_os = "linux"))]
+        assert_eq!(peak_rss_kb(), 0);
     }
 
     #[test]

@@ -124,7 +124,7 @@ pub fn fuzz_spec(seed: u64) -> ScenarioSpec {
         (workloads, vec![])
     };
 
-    ScenarioSpec {
+    let mut spec = ScenarioSpec {
         name: format!("fuzz-{seed}"),
         workloads,
         batch: r.range(4, 12) as usize,
@@ -136,7 +136,17 @@ pub fn fuzz_spec(seed: u64) -> ScenarioSpec {
         autoscale,
         cost,
         tenants,
+    };
+
+    // Scale fork: a separately-salted stream (the base spec for a seed keeps
+    // its exact bytes) occasionally doubles the spec through the same
+    // `ScenarioSpec::scale` path the CLI's `--scale` uses, so the oracle
+    // battery exercises scale-multiplied catalogs and batches too.
+    let mut sr = SplitMix64::new(seed ^ 0x5EED_F022_D1CE_0003);
+    if sr.chance(1, 8) {
+        spec.scale(2);
     }
+    spec
 }
 
 #[cfg(test)]
@@ -185,5 +195,25 @@ mod tests {
         assert!(specs
             .iter()
             .any(|s| s.tenants.iter().any(|t| t.phase > SimDur::ZERO)));
+    }
+
+    #[test]
+    fn scale_fork_is_salted_and_applies() {
+        // replays the fork's own stream: which seeds in the window scaled
+        let scaled: Vec<u64> = (0..64)
+            .filter(|&s| SplitMix64::new(s ^ 0x5EED_F022_D1CE_0003).chance(1, 8))
+            .collect();
+        assert!(!scaled.is_empty(), "no scale-multiplied specs in the window");
+        assert!(scaled.len() < 32, "the scale fork must stay the rare case");
+        for &s in &scaled {
+            let spec = fuzz_spec(s);
+            spec.validate().unwrap_or_else(|e| panic!("scaled seed {s}: {e}"));
+            // base batch is 4..=12; the ×2 scale leaves an even batch ≥ 8
+            assert!(
+                spec.batch >= 8 && spec.batch % 2 == 0,
+                "seed {s}: scale fork did not fire (batch {})",
+                spec.batch
+            );
+        }
     }
 }

@@ -313,9 +313,42 @@ pub fn builtin_packs() -> Vec<ScenarioSpec> {
     ]
 }
 
-/// Look up a built-in pack by name.
+/// The million-action scale pack (`--pack million-action`): the throughput
+/// ratchet's workload. Deliberately NOT in [`builtin_packs`] — the
+/// conformance matrix, fuzz corpus, and golden set stay seconds-fast and
+/// their floors unchanged — but fully addressable by name, so the CLI and
+/// the bench harness run it like any other pack. Three workload classes ×
+/// batch 1024 × 48 steps ≈ 150k trajectories ≈ a million-order submitted
+/// action stream, on a catalog sized so queues drain instead of piling up.
+pub fn million_action_pack() -> ScenarioSpec {
+    ScenarioSpec {
+        name: "million-action".into(),
+        workloads: vec![WorkloadKind::Coding, WorkloadKind::DeepSearch, WorkloadKind::Mopd],
+        batch: 1024,
+        steps: 48,
+        seed: 1_000_000,
+        arrival_spread: SimDur::from_secs(10),
+        catalog: CatalogCfg {
+            cpu_nodes: 8,
+            cores_per_node: 64,
+            gpu_nodes: 4,
+            n_teachers: 8,
+            ..CatalogCfg::default()
+        },
+        events: vec![],
+        autoscale: None,
+        cost: None,
+        tenants: vec![],
+    }
+}
+
+/// Look up a pack by name: the built-in catalog, plus the by-name-only
+/// scale packs ([`million_action_pack`]).
 pub fn pack_by_name(name: &str) -> Option<ScenarioSpec> {
-    builtin_packs().into_iter().find(|p| p.name == name)
+    builtin_packs()
+        .into_iter()
+        .find(|p| p.name == name)
+        .or_else(|| (name == "million-action").then(million_action_pack))
 }
 
 /// One-line description per built-in pack (`scenario --list` catalog).
@@ -335,6 +368,7 @@ pub fn pack_description(name: &str) -> &'static str {
         "flap-squeeze" => "API flaps and CPU squeezes composed across two RL steps",
         "tenant-fairshare" => "steady vs bursty coding tenants on one WFQ CPU pool (8:1)",
         "tenant-batch-interactive" => "batch MOPD vs interactive DeepSearch tenants (1:4)",
+        "million-action" => "million-action scale pack — the throughput ratchet's workload",
         _ => "",
     }
 }
@@ -355,6 +389,23 @@ mod tests {
         assert!(pack_by_name("tenant-batch-interactive").is_some());
         assert!(pack_by_name("nope").is_none());
         assert!(builtin_packs().len() >= 11);
+    }
+
+    #[test]
+    fn million_action_pack_is_by_name_only_and_million_scale() {
+        let p = pack_by_name("million-action").unwrap();
+        p.validate().unwrap();
+        assert!(!pack_description("million-action").is_empty());
+        // the conformance matrix, fuzz corpus, and golden floors must not
+        // absorb a multi-second scale pack
+        assert!(
+            builtin_packs().iter().all(|b| b.name != "million-action"),
+            "scale packs stay out of the built-in catalog"
+        );
+        // million-order action stream: every trajectory submits several
+        // actions, so the trajectory count alone must clear ~10^5
+        let trajectories = p.workloads.len() * p.batch * p.steps as usize;
+        assert!(trajectories >= 100_000, "trajectories {trajectories}");
     }
 
     #[test]

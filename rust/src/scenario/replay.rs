@@ -80,6 +80,17 @@ pub fn build_backend(
 /// (on inelastic baselines it observes nothing and never resizes — that
 /// asymmetry is the paper's point).
 pub fn run_scenario(spec: &ScenarioSpec, backend: BackendKind) -> Result<ScenarioOutcome> {
+    run_scenario_sharded(spec, backend, 1)
+}
+
+/// [`run_scenario`] with an explicit drain shard count (the sharded-drain
+/// contract: any count replays byte-identically; backends without a sharded
+/// drain ignore it). `--shards N` on the CLI lands here.
+pub fn run_scenario_sharded(
+    spec: &ScenarioSpec,
+    backend: BackendKind,
+    shards: usize,
+) -> Result<ScenarioOutcome> {
     spec.validate()?;
     let wls = spec.workloads_for(backend);
     if wls.is_empty() {
@@ -91,7 +102,7 @@ pub fn run_scenario(spec: &ScenarioSpec, backend: BackendKind) -> Result<Scenari
     }
     let cat = Catalog::build(&spec.catalog);
     let mut be = build_backend(&spec.catalog, &cat, backend);
-    let mut session = session_for(spec);
+    let mut session = session_for(spec).with_shards(shards);
     let cfg = spec.run_cfg();
     let mut metrics = run_session(be.as_mut(), &cat, &wls, &cfg, &mut session);
     attach_cost(&mut metrics, spec, be.as_ref());
@@ -163,6 +174,18 @@ pub fn run_scenario_tangram(
     spec: &ScenarioSpec,
     full_sweep: bool,
 ) -> Result<(ScenarioOutcome, SchedStats)> {
+    run_scenario_tangram_sharded(spec, full_sweep, 1)
+}
+
+/// [`run_scenario_tangram`] with an explicit drain shard count. The shard
+/// partition is contiguous over the sorted pool order, so any count yields
+/// the serial decision stream byte-for-byte — the parity tests and the
+/// fuzz oracle's shards invariant run through here.
+pub fn run_scenario_tangram_sharded(
+    spec: &ScenarioSpec,
+    full_sweep: bool,
+    shards: usize,
+) -> Result<(ScenarioOutcome, SchedStats)> {
     spec.validate()?;
     let wls = spec.workloads_for(BackendKind::Tangram);
     if wls.is_empty() {
@@ -173,7 +196,7 @@ pub fn run_scenario_tangram(
     let mut tcfg = tangram_cfg_for(&spec.catalog);
     tcfg.full_sweep = full_sweep;
     let mut be = TangramBackend::new(&cat, tcfg);
-    let mut session = session_for(spec);
+    let mut session = session_for(spec).with_shards(shards);
     let cfg = spec.run_cfg();
     let mut metrics = run_session(&mut be, &cat, &wls, &cfg, &mut session);
     attach_cost(&mut metrics, spec, &be);
@@ -401,7 +424,13 @@ pub struct ReplayReport {
 
 /// Re-run the recorded scenario and diff against the recording.
 pub fn replay_trace(recorded: &RecordedTrace) -> Result<ReplayReport> {
-    let outcome = run_scenario(&recorded.spec, recorded.backend)?;
+    replay_trace_sharded(recorded, 1)
+}
+
+/// [`replay_trace`] with an explicit drain shard count: the CI parity smoke
+/// replays a golden at `--shards 4` and must still match it byte-for-byte.
+pub fn replay_trace_sharded(recorded: &RecordedTrace, shards: usize) -> Result<ReplayReport> {
+    let outcome = run_scenario_sharded(&recorded.spec, recorded.backend, shards)?;
     let fresh_summary = summary_json(&outcome.metrics);
     let summary_diff = diff_summaries(&recorded.summary, &fresh_summary);
     let trace_divergences = diff_traces(&recorded.events, &outcome.events, 10);
@@ -665,6 +694,49 @@ mod tests {
             rt.summary.to_string(),
             summary_json(&outcome.metrics).to_string()
         );
+    }
+
+    #[test]
+    fn shard_counts_record_byte_identical_traces() {
+        // The sharded-drain contract: the FULL serialized trace file —
+        // header, every decision event, summary (with its FNV digest over
+        // the complete metrics record stream) — is byte-identical for any
+        // worker count, including counts above the pool count. No
+        // re-blessing, ever.
+        let spec = crate::scenario::pack_by_name("steady-mix").unwrap();
+        let (base, _) = run_scenario_tangram_sharded(&spec, false, 1).unwrap();
+        let base_text = trace_file_contents(&spec, BackendKind::Tangram, &base);
+        for shards in [2usize, 8, 64] {
+            let (o, _) = run_scenario_tangram_sharded(&spec, false, shards).unwrap();
+            let text = trace_file_contents(&spec, BackendKind::Tangram, &o);
+            assert_eq!(text, base_text, "trace bytes diverged at shards={shards}");
+        }
+        // the full-sweep differential path shards over the cached index —
+        // same contract there
+        let (sweep1, _) = run_scenario_tangram_sharded(&spec, true, 1).unwrap();
+        let (sweep3, _) = run_scenario_tangram_sharded(&spec, true, 3).unwrap();
+        assert_eq!(
+            trace_file_contents(&spec, BackendKind::Tangram, &sweep1),
+            trace_file_contents(&spec, BackendKind::Tangram, &sweep3),
+            "full-sweep trace bytes diverged under sharding"
+        );
+    }
+
+    #[test]
+    fn sharded_replay_matches_a_serial_recording() {
+        // the CI parity smoke in library form: record serial, replay at
+        // --shards 4, byte-identical summary and event stream
+        let spec = crate::scenario::pack_by_name("steady-mix").unwrap();
+        let outcome = run_scenario(&spec, BackendKind::Tangram).unwrap();
+        let recorded = RecordedTrace {
+            spec: spec.clone(),
+            backend: BackendKind::Tangram,
+            events: outcome.events.clone(),
+            summary: summary_json(&outcome.metrics),
+        };
+        let report = replay_trace_sharded(&recorded, 4).unwrap();
+        assert!(report.identical, "diff: {:?}", report.summary_diff);
+        assert_eq!(report.replayed_events, outcome.events.len());
     }
 
     #[test]

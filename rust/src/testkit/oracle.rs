@@ -20,8 +20,8 @@ use crate::coordinator::{run_session, Backend, Session};
 use crate::rollout::workloads::Catalog;
 use crate::scenario::{
     build_backend, fuzz_spec, parse_trace_file, replay_trace, run_scenario_tangram,
-    trace_file_contents, trace_tenant_stats, ScenarioEvent, ScenarioOutcome, ScenarioSpec,
-    TraceKind, TraceRecorder,
+    run_scenario_tangram_sharded, trace_file_contents, trace_tenant_stats, ScenarioEvent,
+    ScenarioOutcome, ScenarioSpec, TraceKind, TraceRecorder,
 };
 use crate::sim::SimTime;
 use crate::testkit::{shrink_failure, Gen};
@@ -78,6 +78,7 @@ pub fn check_spec(spec: &ScenarioSpec) -> Result<OracleReport> {
     check_dirty_sweep(spec, &dirty, &sweep, &mut violations);
     check_tenants(spec, &dirty, &mut violations);
     check_wfq_neutrality(spec, &mut violations)?;
+    check_shards_parity(spec, &dirty, &mut violations)?;
     Ok(OracleReport {
         actions: dirty.metrics.actions.len(),
         trace_events: dirty.events.len(),
@@ -594,6 +595,32 @@ fn check_wfq_neutrality(spec: &ScenarioSpec, v: &mut Vec<Violation>) -> Result<(
         v.push(Violation {
             invariant: "wfq-neutrality",
             detail: "equal-weights metrics diverged from the unweighted run".to_string(),
+        });
+    }
+    Ok(())
+}
+
+/// Sharded-drain parity: re-running the dirty-pool configuration with the
+/// drain partitioned across 3 logical shards must serialize to the exact
+/// trace-file bytes of the serial run — the worker-count-independence
+/// contract behind `--shards N` (contiguous chunks of the sorted pool
+/// order, merged in ascending shard order).
+fn check_shards_parity(
+    spec: &ScenarioSpec,
+    dirty: &ScenarioOutcome,
+    v: &mut Vec<Violation>,
+) -> Result<()> {
+    let (sharded, _) = run_scenario_tangram_sharded(spec, false, 3)?;
+    let serial_text = trace_file_contents(spec, BackendKind::Tangram, dirty);
+    let sharded_text = trace_file_contents(spec, BackendKind::Tangram, &sharded);
+    if serial_text != sharded_text {
+        let divs = crate::scenario::diff_traces(&dirty.events, &sharded.events, 3);
+        v.push(Violation {
+            invariant: "shards-parity",
+            detail: format!(
+                "shards=3 trace bytes diverged from the serial drain: {}",
+                divs.join("; ")
+            ),
         });
     }
     Ok(())
