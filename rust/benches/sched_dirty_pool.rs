@@ -1,8 +1,10 @@
 //! Dirty-pool scheduler bench: every built-in scenario pack on the tangram
 //! backend, dirty-pool vs legacy full-sweep scheduling, reporting elastic-
 //! scheduler invocation counts and mean `drain_started` wall time, plus a
-//! timed million-action pass (actions/sec + peak RSS). Writes
-//! `BENCH_sched.json` (override the path with `ARL_BENCH_OUT`).
+//! timed million-action pass serial and on the `--shards 4 --threads 4`
+//! worker pool (actions/sec, threaded speedup, peak RSS). Writes
+//! `BENCH_sched.json` (override the path with `ARL_BENCH_OUT`; the worker
+//! pool must clear `ARL_BENCH_MIN_SPEEDUP`, default 1.3x).
 //!
 //! The hot-path claim this regenerates: scheduling only dirty pools cuts
 //! invocations super-linearly with pool count on multi-node packs — one
@@ -55,6 +57,14 @@ fn main() {
         throughput.actions_per_sec,
         throughput.peak_rss_kb,
     );
+    println!(
+        "threaded   ({} threads): {} actions in {:.2}s = {:.0} actions/sec, speedup {:.2}x",
+        throughput.threads,
+        throughput.actions,
+        throughput.wall_secs_threaded,
+        throughput.actions_per_sec_threaded,
+        throughput.speedup(),
+    );
     let out = std::env::var("ARL_BENCH_OUT").unwrap_or_else(|_| "BENCH_sched.json".to_string());
     let json = sched_bench_json(&rows, &admission, Some(&throughput));
     match std::fs::write(&out, &json) {
@@ -84,6 +94,20 @@ fn main() {
     });
     if dirty_total >= sweep_total {
         eprintln!("no aggregate invocation reduction: {dirty_total} !< {sweep_total}");
+        std::process::exit(1);
+    }
+    // the worker pool must pay for itself: actions/sec at 4 threads over
+    // the serial drain, floor configurable for noisy runners
+    let min_speedup: f64 = std::env::var("ARL_BENCH_MIN_SPEEDUP")
+        .unwrap_or_else(|_| "1.3".to_string())
+        .parse()
+        .unwrap_or(1.3);
+    if throughput.speedup() < min_speedup {
+        eprintln!(
+            "threaded drain speedup {:.2}x below the {min_speedup:.2}x floor \
+             (set ARL_BENCH_MIN_SPEEDUP to adjust)",
+            throughput.speedup()
+        );
         std::process::exit(1);
     }
 }

@@ -11,11 +11,10 @@ use arl_tangram::action::{
 };
 use arl_tangram::bench::{time_it, timing_header};
 use arl_tangram::scheduler::{
-    dp_arrange, BasicOperator, ChunkOperator, DpOperator, ElasticScheduler, ResourceState,
-    SchedulerConfig,
+    dp_arrange, BasicOperator, ChunkOperator, DpOperator, ElasticScheduler, ResourceMap,
+    ResourceState, SchedulerConfig,
 };
 use arl_tangram::sim::{Engine, SimDur, SimTime};
-use std::collections::BTreeMap;
 
 struct Pool {
     units: u64,
@@ -89,7 +88,7 @@ fn main() {
         let queue = mk_queue(&reg, cpu, n, true);
         let refs: Vec<&Action> = queue.iter().collect();
         let pool = Pool { units: 256, chunks: None };
-        let mut map: BTreeMap<ResourceKindId, &dyn ResourceState> = BTreeMap::new();
+        let mut map = ResourceMap::new();
         map.insert(cpu, &pool);
         let s = time_it(&format!("alg1 cpu-pool queue={n}"), 200, || {
             std::hint::black_box(sched.schedule(SimTime::ZERO, &refs, &map));
@@ -103,7 +102,7 @@ fn main() {
         let refs: Vec<&Action> = queue.iter().collect();
         let bounds = ChunkOperator::cluster_bounds(40);
         let pool = Pool { units: 40, chunks: Some(([0, 0, 0, 5], bounds)) };
-        let mut map: BTreeMap<ResourceKindId, &dyn ResourceState> = BTreeMap::new();
+        let mut map = ResourceMap::new();
         map.insert(cpu, &pool);
         let s = time_it(&format!("alg1 gpu-chunks queue={n}"), 100, || {
             std::hint::black_box(sched.schedule(SimTime::ZERO, &refs, &map));

@@ -8,9 +8,9 @@
 //! off the serialized surface. The fuzz oracle catches violations at
 //! runtime per-seed; this module catches them at review time on every
 //! line. Like the rest of `util/`, it is dependency-free and hand-rolled
-//! (no `syn`, no clippy plugins): a small Rust lexer ([`lexer`]) feeds six
-//! lexical rules ([`rules`]), and accepted findings live in a committed
-//! `lint_baseline.json` that is only allowed to shrink.
+//! (no `syn`, no clippy plugins): a small Rust lexer ([`lexer`]) feeds
+//! seven lexical rules ([`rules`]), and accepted findings live in a
+//! committed `lint_baseline.json` that is only allowed to shrink.
 //!
 //! Rule summary (full semantics in `testdata/README.md`):
 //!
@@ -22,6 +22,7 @@
 //! | `raw-factor`      | factor arithmetic goes through `quantize`         |
 //! | `panic-budget`    | per-file `.unwrap()/.expect()` count ratchet      |
 //! | `golden-surface`  | unserialized fields stay out of `to_json` paths   |
+//! | `ambient-threads` | threads spawn only in `coordinator::parallel`     |
 //!
 //! Suppression: `// arl-lint: allow(<rule>): <reason>` on the offending
 //! line or the comment block directly above it; the reason is mandatory.
@@ -36,7 +37,7 @@ use std::collections::BTreeMap;
 use std::fmt;
 use std::path::Path;
 
-/// The six determinism rules.
+/// The seven determinism rules.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum RuleId {
     NondetIteration,
@@ -45,16 +46,18 @@ pub enum RuleId {
     RawFactor,
     PanicBudget,
     GoldenSurface,
+    AmbientThreads,
 }
 
 impl RuleId {
-    pub const ALL: [RuleId; 6] = [
+    pub const ALL: [RuleId; 7] = [
         RuleId::NondetIteration,
         RuleId::WallClock,
         RuleId::AmbientRng,
         RuleId::RawFactor,
         RuleId::PanicBudget,
         RuleId::GoldenSurface,
+        RuleId::AmbientThreads,
     ];
 
     pub fn name(self) -> &'static str {
@@ -65,6 +68,7 @@ impl RuleId {
             RuleId::RawFactor => "raw-factor",
             RuleId::PanicBudget => "panic-budget",
             RuleId::GoldenSurface => "golden-surface",
+            RuleId::AmbientThreads => "ambient-threads",
         }
     }
 

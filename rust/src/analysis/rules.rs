@@ -1,4 +1,4 @@
-//! The six determinism rules, evaluated over the lexer's token stream.
+//! The seven determinism rules, evaluated over the lexer's token stream.
 //!
 //! Every rule is lexical: no type inference, no name resolution. The
 //! `nondet-iteration` rule approximates typing by collecting every binding
@@ -34,6 +34,10 @@ pub struct LintConfig {
     pub serialize_fns: Vec<String>,
     /// Identifiers that are contractually excluded from serialization.
     pub unserialized_fields: Vec<String>,
+    /// Exact file paths allowed to spawn threads or build channels (the
+    /// coordinator's drain worker pool only; ambient parallelism anywhere
+    /// else could reorder observable decisions).
+    pub thread_allow: Vec<String>,
 }
 
 impl Default for LintConfig {
@@ -57,6 +61,7 @@ impl Default for LintConfig {
             ],
             serialize_fns: vec!["to_json".into(), "summary_json".into()],
             unserialized_fields: vec!["ledger".into()],
+            thread_allow: vec!["src/coordinator/parallel.rs".into()],
         }
     }
 }
@@ -79,6 +84,11 @@ const ITER_METHODS: [&str; 10] = [
 const BANNED_RNG: [&str; 6] =
     ["thread_rng", "from_entropy", "OsRng", "StdRng", "SmallRng", "RandomState"];
 
+/// Threading identifiers that stand alone (no `::` context needed): channel
+/// constructors and join-handle types always mean ambient parallelism.
+const BANNED_THREADS: [&str; 5] =
+    ["mpsc", "sync_channel", "JoinHandle", "ScopedJoinHandle", "Condvar"];
+
 /// Lint one file. `path` is the repo-relative path with forward slashes
 /// (e.g. `src/lanes/api.rs`); it selects which rules apply. Findings
 /// suppressed by `arl-lint: allow` comments are already filtered out.
@@ -92,6 +102,7 @@ pub fn lint_source(path: &str, src: &str, cfg: &LintConfig) -> Vec<Finding> {
     rule_raw_factor(path, &toks, &mask, cfg, &mut out);
     rule_panic_budget(path, &toks, &mask, &mut out);
     rule_golden_surface(path, &toks, &mask, cfg, &mut out);
+    rule_ambient_threads(path, &toks, &mask, cfg, &mut out);
 
     let lines: Vec<&str> = src.lines().collect();
     let allows = parse_allows(&lines);
@@ -550,6 +561,53 @@ fn rule_golden_surface(
 }
 
 // ---------------------------------------------------------------------------
+// rule: ambient-threads
+// ---------------------------------------------------------------------------
+
+/// Threads (and the channels that usually ride along) may exist in exactly
+/// one place: the coordinator's drain worker pool, where plans are applied
+/// in a deterministic order on the driver thread. Anywhere else, ambient
+/// parallelism can reorder observable decisions — the one failure mode no
+/// runtime oracle can reliably reproduce, so it is banned at the source
+/// level. Lexically: the ident `thread` in path position (`::` directly
+/// before or after, catching `std::thread::spawn`, `thread::scope`, and
+/// `use std::thread`), plus the standalone channel/handle identifiers in
+/// [`BANNED_THREADS`].
+fn rule_ambient_threads(
+    path: &str,
+    toks: &[Token],
+    mask: &[bool],
+    cfg: &LintConfig,
+    out: &mut Vec<Finding>,
+) {
+    if cfg.thread_allow.iter().any(|p| p == path) {
+        return;
+    }
+    let path_sep_at = |j: usize| -> bool {
+        j + 1 < toks.len() && toks[j].is_punct(':') && toks[j + 1].is_punct(':')
+    };
+    for (i, t) in toks.iter().enumerate() {
+        if mask[i] {
+            continue;
+        }
+        let in_path = t.is_ident("thread")
+            && ((i >= 2 && path_sep_at(i - 2)) || path_sep_at(i + 1));
+        if in_path || BANNED_THREADS.contains(&t.text.as_str()) {
+            out.push(Finding {
+                rule: RuleId::AmbientThreads,
+                file: path.to_string(),
+                line: t.line,
+                message: format!(
+                    "`{}` outside `coordinator::parallel`; threads are allowed only in \
+                     the drain worker pool, where apply order stays deterministic",
+                    t.text
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // allow comments
 // ---------------------------------------------------------------------------
 
@@ -664,5 +722,39 @@ mod tests {
             fn live(m: &HashMap<u32, u32>) -> u32 { m.values().sum() }
         ";
         assert_eq!(lint_decision(src).len(), 1);
+    }
+
+    #[test]
+    fn ambient_threads_fires_on_spawns_and_channels() {
+        let src = "
+            fn racy() {
+                let h = std::thread::spawn(|| 1);
+                let (tx, rx) = mpsc::channel();
+            }
+        ";
+        let f = lint_decision(src);
+        assert_eq!(f.iter().filter(|f| f.rule == RuleId::AmbientThreads).count(), 2);
+        // `use std::thread;` is path position too
+        let f = lint_decision("use std::thread;");
+        assert_eq!(f.iter().filter(|f| f.rule == RuleId::AmbientThreads).count(), 1);
+    }
+
+    #[test]
+    fn ambient_threads_skips_plain_idents_and_the_allowlist() {
+        // `threads` (the knob) and a local named `thread` with no `::`
+        // context are not spawns
+        let src = "
+            fn knob(threads: usize) -> usize { let thread = threads; thread }
+        ";
+        assert!(lint_decision(src)
+            .iter()
+            .all(|f| f.rule != RuleId::AmbientThreads));
+        // the worker pool itself is allowlisted
+        let pool = "fn drain() { std::thread::scope(|s| {}); }";
+        let f = lint_source("src/coordinator/parallel.rs", pool, &LintConfig::default());
+        assert!(f.iter().all(|f| f.rule != RuleId::AmbientThreads));
+        // but the same code anywhere else fires
+        let f = lint_source("src/coordinator/tangram.rs", pool, &LintConfig::default());
+        assert_eq!(f.iter().filter(|f| f.rule == RuleId::AmbientThreads).count(), 1);
     }
 }

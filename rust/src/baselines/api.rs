@@ -10,14 +10,14 @@ use crate::cluster::api::{ApiEndpoint, ApiOutcome};
 use crate::coordinator::backend::Started;
 use crate::sim::{SimDur, SimTime};
 use std::collections::{HashMap, VecDeque};
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// The unmanaged API client.
 #[derive(Debug)]
 pub struct UnmanagedApi {
     endpoints: HashMap<ResourceKindId, ApiEndpoint>,
     outcomes: HashMap<ActionId, (ResourceKindId, ApiOutcome)>,
-    queue: VecDeque<Rc<Action>>,
+    queue: VecDeque<Arc<Action>>,
 }
 
 impl UnmanagedApi {
@@ -32,7 +32,7 @@ impl UnmanagedApi {
             .any(|(k, d)| d.min_units() > 0 && self.endpoints.contains_key(&k))
     }
 
-    pub fn submit(&mut self, action: &Rc<Action>) {
+    pub fn submit(&mut self, action: &Arc<Action>) {
         self.queue.push_back(action.clone());
     }
 
@@ -112,8 +112,8 @@ mod tests {
     };
     use crate::cluster::api::ApiEndpointSpec;
 
-    fn rc(a: Action) -> Rc<Action> {
-        Rc::new(a)
+    fn rc(a: Action) -> Arc<Action> {
+        Arc::new(a)
     }
 
     fn setup() -> (ResourceRegistry, UnmanagedApi, ResourceKindId) {

@@ -11,7 +11,7 @@ use crate::action::{Action, ActionId, TrajId};
 use crate::coordinator::backend::Started;
 use crate::sim::{SimDur, SimTime};
 use std::collections::{HashMap, VecDeque};
-use std::rc::Rc;
+use std::sync::Arc;
 
 #[derive(Debug, Clone)]
 pub struct K8sCfg {
@@ -68,7 +68,7 @@ pub struct K8sCpu {
     pods: HashMap<TrajId, Pod>,
     /// when the control plane frees up for the next creation
     cp_next_free: SimTime,
-    queue: VecDeque<Rc<Action>>,
+    queue: VecDeque<Arc<Action>>,
     running: HashMap<ActionId, (TrajId, u32)>, // cores held
     pub n_cp_timeouts: u64,
 }
@@ -139,7 +139,7 @@ impl K8sCpu {
         }
     }
 
-    pub fn submit(&mut self, action: &Rc<Action>) {
+    pub fn submit(&mut self, action: &Arc<Action>) {
         self.queue.push_back(action.clone());
     }
 
@@ -270,7 +270,7 @@ mod tests {
             ..K8sCfg::default()
         });
         k.traj_start(SimTime::ZERO, TrajId(1), 4).unwrap();
-        k.submit(&Rc::new(action(&r, 1, 1, 32)));
+        k.submit(&Arc::new(action(&r, 1, 1, 32)));
         // pod not ready yet
         assert!(k.drain_started(SimTime::ZERO).is_empty());
         let later = SimTime::ZERO + SimDur::from_secs(10);
@@ -319,7 +319,7 @@ mod tests {
         }
         let t = SimTime::ZERO + SimDur::from_secs(30);
         for i in 0..16 {
-            k.submit(&Rc::new(action(&r, i, i, 4)));
+            k.submit(&Arc::new(action(&r, i, i, 4)));
         }
         let started = k.drain_started(t);
         // physical cores (8) gate actual execution: 4+4 = 2 actions at limit,

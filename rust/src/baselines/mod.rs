@@ -22,7 +22,7 @@ use crate::rollout::workloads::Catalog;
 use crate::scenario::ScenarioEvent;
 use crate::sim::SimTime;
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// GPU half of a baseline deployment.
 pub enum GpuBaseline {
@@ -170,7 +170,7 @@ impl Backend for BaselineBackend {
         }
     }
 
-    fn submit(&mut self, _now: SimTime, action: &Rc<Action>) {
+    fn submit(&mut self, _now: SimTime, action: &Arc<Action>) {
         if self.is_cpu(action) {
             self.k8s
                 .as_mut()

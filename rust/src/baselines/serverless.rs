@@ -13,7 +13,7 @@ use crate::cluster::gpu::{GpuCluster, RestoreModel};
 use crate::coordinator::backend::Started;
 use crate::sim::{SimDur, SimTime};
 use std::collections::{HashMap, HashSet, VecDeque};
-use std::rc::Rc;
+use std::sync::Arc;
 
 #[derive(Debug, Clone)]
 pub struct ServerlessCfg {
@@ -50,7 +50,7 @@ pub struct ServerlessGpu {
     cfg: ServerlessCfg,
     cluster: GpuCluster,
     restore: RestoreModel,
-    queue: VecDeque<Rc<Action>>,
+    queue: VecDeque<Arc<Action>>,
     running: HashMap<ActionId, crate::cluster::gpu::ChunkRef>,
     /// actions that timed out in queue → report Failed on completion
     pub timed_out: HashSet<ActionId>,
@@ -68,7 +68,7 @@ impl ServerlessGpu {
         }
     }
 
-    pub fn submit(&mut self, action: &Rc<Action>) {
+    pub fn submit(&mut self, action: &Arc<Action>) {
         self.queue.push_back(action.clone());
     }
 
@@ -188,13 +188,13 @@ mod tests {
             gpu_nodes: 1,
             ..ServerlessCfg::default()
         });
-        s.submit(&Rc::new(mk_action(&r, 1, 0, SimTime::ZERO)));
+        s.submit(&Arc::new(mk_action(&r, 1, 0, SimTime::ZERO)));
         let st = s.drain_started(SimTime::ZERO);
         assert_eq!(st.len(), 1);
         assert!(st[0].overhead >= ServerlessCfg::default().startup);
         s.complete(SimTime::ZERO + SimDur::from_secs(5), ActionId(1));
         // same service again: still cold
-        s.submit(&Rc::new(mk_action(&r, 2, 0, SimTime::ZERO)));
+        s.submit(&Arc::new(mk_action(&r, 2, 0, SimTime::ZERO)));
         let st2 = s.drain_started(SimTime::ZERO + SimDur::from_secs(5));
         assert!(st2[0].overhead >= ServerlessCfg::default().startup);
     }
@@ -209,7 +209,7 @@ mod tests {
         });
         // two instances fit (8 GPUs / TP4); the third waits
         for i in 0..3 {
-            s.submit(&Rc::new(mk_action(&r, i, i as u32, SimTime::ZERO)));
+            s.submit(&Arc::new(mk_action(&r, i, i as u32, SimTime::ZERO)));
         }
         let st = s.drain_started(SimTime::ZERO);
         assert_eq!(st.len(), 2);

@@ -9,7 +9,7 @@ use crate::action::{Action, ActionId, ServiceId};
 use crate::coordinator::backend::Started;
 use crate::sim::{SimDur, SimTime};
 use std::collections::{HashMap, VecDeque};
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// One pinned replica.
 #[derive(Debug)]
@@ -26,7 +26,7 @@ struct ServiceDeployment {
     name: String,
     dop: u8,
     replicas: Vec<Replica>,
-    queue: VecDeque<Rc<Action>>,
+    queue: VecDeque<Arc<Action>>,
 }
 
 /// The static deployment: a fixed map service → replicas.
@@ -64,7 +64,7 @@ impl StaticGpu {
         StaticGpu { services, running: HashMap::new(), total_gpus: total }
     }
 
-    pub fn submit(&mut self, action: &Rc<Action>) {
+    pub fn submit(&mut self, action: &Arc<Action>) {
         let svc = action.spec.service.expect("GPU action without service");
         self.services
             .get_mut(&svc)
@@ -190,8 +190,8 @@ mod tests {
         ]);
         assert_eq!(s.total_gpus(), 8);
         // two requests for service 0, none for service 1
-        s.submit(&Rc::new(mk_action(&r, 1, 0, 8)));
-        s.submit(&Rc::new(mk_action(&r, 2, 0, 8)));
+        s.submit(&Arc::new(mk_action(&r, 1, 0, 8)));
+        s.submit(&Arc::new(mk_action(&r, 2, 0, 8)));
         let started = s.drain_started(SimTime::ZERO);
         // only one replica of service 0 → second request queues even though
         // service 1's replica idles (the paper's task-level waste)
@@ -210,7 +210,7 @@ mod tests {
             (ServiceId(0), "a".into(), 4, 2),
             (ServiceId(1), "b".into(), 2, 1),
         ]);
-        s.submit(&Rc::new(mk_action(&r, 1, 0, 4)));
+        s.submit(&Arc::new(mk_action(&r, 1, 0, 4)));
         let _ = s.drain_started(SimTime::ZERO);
         let u = s.utilization();
         let a = u.iter().find(|(n, _)| n == "svc:a").unwrap();
@@ -225,7 +225,7 @@ mod tests {
     fn exec_uses_pinned_dop() {
         let r = reg();
         let mut s = StaticGpu::new(vec![(ServiceId(0), "a".into(), 8, 1)]);
-        s.submit(&Rc::new(mk_action(&r, 1, 0, 8)));
+        s.submit(&Arc::new(mk_action(&r, 1, 0, 8)));
         let started = s.drain_started(SimTime::ZERO);
         // perfect scaling at dop 8 → 1s
         assert_eq!(started[0].exec, SimDur::from_secs(1));

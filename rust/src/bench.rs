@@ -307,37 +307,76 @@ pub fn admission_bench() -> AdmissionBench {
 }
 
 /// Actions-per-second of the million-action scale pack on the dirty-pool
-/// tangram configuration, plus the process's peak RSS after the run — the
-/// `throughput` section of `BENCH_sched.json`, ratcheted by `bench-gate`
-/// (shrink-only on actions/sec, grow-capped on RSS).
+/// tangram configuration — serial and with the sharded worker pool — plus
+/// the process's peak RSS after the runs: the `throughput` section of
+/// `BENCH_sched.json`, ratcheted by `bench-gate` (shrink-only on
+/// actions/sec and on the threaded speedup, grow-capped on RSS).
 #[derive(Debug, Clone)]
 pub struct ThroughputBench {
     pub pack: String,
     /// Terminal actions the run completed.
     pub actions: u64,
-    /// Wall-clock of the simulation run (seconds).
+    /// Wall-clock of the serial simulation run (seconds).
     pub wall_secs: f64,
     /// `actions / wall_secs`.
     pub actions_per_sec: f64,
+    /// Worker threads used by the threaded pass (shards match the count).
+    pub threads: usize,
+    /// Wall-clock of the threaded pass (seconds).
+    pub wall_secs_threaded: f64,
+    /// `actions / wall_secs_threaded`.
+    pub actions_per_sec_threaded: f64,
     /// Peak resident set of the bench process after the run (KiB; 0 where
     /// `/proc` is unavailable — the gate then skips the RSS ratchet).
     pub peak_rss_kb: u64,
 }
 
-/// Run the throughput bench: one timed dirty-pool tangram pass over the
-/// million-action pack.
+impl ThroughputBench {
+    /// threaded / serial actions-per-sec ratio (> 1 = the worker pool pays
+    /// for itself on this machine).
+    pub fn speedup(&self) -> f64 {
+        if self.actions_per_sec <= 0.0 {
+            return 1.0;
+        }
+        self.actions_per_sec_threaded / self.actions_per_sec
+    }
+}
+
+/// Worker threads (and matching shard count) for the threaded throughput
+/// pass — parallelism needs shards > 1, and four of each is the smallest
+/// deployment the paper's testbed runners all have cores for.
+pub const THROUGHPUT_THREADS: usize = 4;
+
+/// Run the throughput bench: a timed serial dirty-pool tangram pass over
+/// the million-action pack, then the same spec again on the
+/// `--shards 4 --threads 4` worker pool. The traces are byte-identical by
+/// the drain contract, so the comparison isolates pure wall-clock.
 pub fn throughput_bench() -> crate::util::error::Result<ThroughputBench> {
-    use crate::scenario::{million_action_pack, run_scenario_tangram};
+    use crate::err;
+    use crate::scenario::{million_action_pack, run_scenario_tangram, run_scenario_tangram_threaded};
     let spec = million_action_pack();
     let t = Stopwatch::start();
     let (outcome, _) = run_scenario_tangram(&spec, false)?;
     let wall_secs = t.secs();
     let actions = outcome.metrics.actions.len() as u64;
+    let t = Stopwatch::start();
+    let (threaded, _) =
+        run_scenario_tangram_threaded(&spec, false, THROUGHPUT_THREADS, THROUGHPUT_THREADS)?;
+    let wall_secs_threaded = t.secs();
+    let actions_threaded = threaded.metrics.actions.len() as u64;
+    if actions_threaded != actions {
+        return Err(err!(
+            "threaded throughput pass diverged from serial: {actions_threaded} vs {actions} actions"
+        ));
+    }
     Ok(ThroughputBench {
         pack: spec.name,
         actions,
         wall_secs,
         actions_per_sec: actions as f64 / wall_secs.max(1e-9),
+        threads: THROUGHPUT_THREADS,
+        wall_secs_threaded,
+        actions_per_sec_threaded: actions as f64 / wall_secs_threaded.max(1e-9),
         peak_rss_kb: crate::metrics::peak_rss_kb(),
     })
 }
@@ -394,6 +433,10 @@ pub fn sched_bench_json(
                 ("actions", Json::num(t.actions as f64)),
                 ("wall_secs", Json::num(t.wall_secs)),
                 ("actions_per_sec", Json::num(t.actions_per_sec)),
+                ("threads", Json::num(t.threads as f64)),
+                ("wall_secs_threaded", Json::num(t.wall_secs_threaded)),
+                ("actions_per_sec_threaded", Json::num(t.actions_per_sec_threaded)),
+                ("speedup", Json::num(t.speedup())),
                 ("peak_rss_kb", Json::num(t.peak_rss_kb as f64)),
             ]),
         ));
@@ -481,12 +524,16 @@ pub fn parse_admission(text: &str) -> crate::util::error::Result<Option<Admissio
     }))
 }
 
-/// Parsed `throughput` section of a `BENCH_sched.json` report.
+/// Parsed `throughput` section of a `BENCH_sched.json` report. The
+/// threaded keys are `None` on baselines written before the worker pool
+/// existed — the speedup ratchet then reports instead of comparing.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ThroughputGate {
     pub pack: String,
     pub actions: f64,
     pub actions_per_sec: f64,
+    pub actions_per_sec_threaded: Option<f64>,
+    pub speedup: Option<f64>,
     pub peak_rss_kb: f64,
 }
 
@@ -511,6 +558,8 @@ pub fn parse_throughput(text: &str) -> crate::util::error::Result<Option<Through
             .to_string(),
         actions: field("actions")?,
         actions_per_sec: field("actions_per_sec")?,
+        actions_per_sec_threaded: t.get("actions_per_sec_threaded").and_then(|v| v.as_f64()),
+        speedup: t.get("speedup").and_then(|v| v.as_f64()),
         peak_rss_kb: field("peak_rss_kb")?,
     }))
 }
@@ -601,12 +650,14 @@ pub fn sched_bench_gate(
     Ok(report)
 }
 
-/// Throughput ratchet: actions/sec may only shrink within a widened slack
-/// (5× the invocation-ratio tolerance — it is the one wall-clock-derived
-/// figure in the report, so CI machine noise needs the extra headroom), and
-/// peak RSS may only grow within the same slack. A zero RSS on either side
-/// means `/proc` was unavailable there; the RSS ratchet is skipped rather
-/// than compared against a placeholder.
+/// Throughput ratchet: actions/sec and the threaded speedup may only
+/// shrink within a widened slack (5× the invocation-ratio tolerance —
+/// they are the wall-clock-derived figures in the report, so CI machine
+/// noise needs the extra headroom), and peak RSS may only grow within the
+/// same slack. A zero RSS on either side means `/proc` was unavailable
+/// there; the RSS ratchet is skipped rather than compared against a
+/// placeholder. A baseline without the threaded keys (written before the
+/// worker pool existed) only reports the fresh speedup.
 fn gate_throughput(
     report: &mut GateReport,
     base: Option<ThroughputGate>,
@@ -644,6 +695,36 @@ fn gate_throughput(
                     f.actions_per_sec,
                     slack * 100.0
                 ));
+            }
+            match (b.speedup, f.speedup) {
+                (Some(bs), Some(fs)) => {
+                    let floor = bs * (1.0 - slack);
+                    let verdict = if fs < floor { "REGRESSED" } else { "ok" };
+                    report.lines.push(format!(
+                        "{:<16} threaded speedup {:.2}x -> {:.2}x (floor {:.2}x) {}",
+                        f.pack, bs, fs, floor, verdict
+                    ));
+                    if fs < floor {
+                        report.failures.push(format!(
+                            "throughput ('{}'): threaded speedup regressed {:.2}x -> {:.2}x \
+                             (>{:.0}% loss)",
+                            f.pack,
+                            bs,
+                            fs,
+                            slack * 100.0
+                        ));
+                    }
+                }
+                (Some(_), None) => report.failures.push(format!(
+                    "throughput ('{}'): threaded speedup present in baseline but missing from \
+                     fresh run",
+                    f.pack
+                )),
+                (None, Some(fs)) => report.lines.push(format!(
+                    "{:<16} threaded speedup {:.2}x — no baseline yet, commit one to ratchet it",
+                    f.pack, fs
+                )),
+                (None, None) => {}
             }
             if b.peak_rss_kb > 0.0 && f.peak_rss_kb > 0.0 {
                 let ceiling = b.peak_rss_kb * (1.0 + slack);
@@ -964,6 +1045,65 @@ mod tests {
         assert!(g.failures.iter().any(|f| f.contains("completed no work")));
     }
 
+    fn bench_json_with_speedup(
+        rows: &[(&str, f64, bool)],
+        actions_per_sec: f64,
+        speedup: f64,
+    ) -> String {
+        let body: Vec<String> = rows
+            .iter()
+            .map(|(p, r, eq)| {
+                format!(r#"{{"pack":"{p}","reduction":{r},"metrics_equal":{eq}}}"#)
+            })
+            .collect();
+        let threaded = actions_per_sec * speedup;
+        format!(
+            r#"{{"bench":"sched_dirty_pool","rows":[{}],"throughput":{{"pack":"million-action","actions":1000000,"wall_secs":10.0,"actions_per_sec":{actions_per_sec},"threads":4,"wall_secs_threaded":5.0,"actions_per_sec_threaded":{threaded},"speedup":{speedup},"peak_rss_kb":50000.0}}}}"#,
+            body.join(",")
+        )
+    }
+
+    #[test]
+    fn threaded_speedup_keys_parse_as_optional() {
+        // pre-worker-pool baselines have no threaded keys
+        let old = bench_json_with_throughput(&[("steady-mix", 4.0, true)], 100000.0, 50000.0);
+        let t = parse_throughput(&old).unwrap().unwrap();
+        assert_eq!(t.speedup, None);
+        assert_eq!(t.actions_per_sec_threaded, None);
+        let new = bench_json_with_speedup(&[("steady-mix", 4.0, true)], 100000.0, 1.8);
+        let t = parse_throughput(&new).unwrap().unwrap();
+        assert!((t.speedup.unwrap() - 1.8).abs() < 1e-12);
+        assert!((t.actions_per_sec_threaded.unwrap() - 180000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gate_ratchets_the_threaded_speedup_shrink_only() {
+        let rows = [("steady-mix", 4.0, true)];
+        let base = bench_json_with_speedup(&rows, 100000.0, 2.0);
+        // within the widened slack: 1.2 ≥ 2.0 × (1 − 0.5)
+        let ok = bench_json_with_speedup(&rows, 100000.0, 1.2);
+        let g = sched_bench_gate(&base, &ok, 0.10).unwrap();
+        assert!(g.passed(), "{:?}", g.failures);
+        assert!(g.lines.iter().any(|l| l.contains("threaded speedup")));
+        // growth never fails
+        let faster = bench_json_with_speedup(&rows, 100000.0, 3.0);
+        let g = sched_bench_gate(&base, &faster, 0.10).unwrap();
+        assert!(g.passed(), "{:?}", g.failures);
+        // past the floor fails
+        let worse = bench_json_with_speedup(&rows, 100000.0, 0.9);
+        let g = sched_bench_gate(&base, &worse, 0.10).unwrap();
+        assert!(!g.passed());
+        assert!(g.failures.iter().any(|f| f.contains("threaded speedup regressed")));
+        // vanished threaded keys are a ratchet failure…
+        let plain = bench_json_with_throughput(&rows, 100000.0, 50000.0);
+        let g = sched_bench_gate(&base, &plain, 0.10).unwrap();
+        assert!(g.failures.iter().any(|f| f.contains("missing from")));
+        // …an old baseline without them only reports
+        let g = sched_bench_gate(&plain, &ok, 0.10).unwrap();
+        assert!(g.passed(), "{:?}", g.failures);
+        assert!(g.lines.iter().any(|l| l.contains("no baseline yet")));
+    }
+
     #[test]
     fn bench_json_round_trips_the_throughput_section() {
         let t = ThroughputBench {
@@ -971,8 +1111,12 @@ mod tests {
             actions: 1_000_000,
             wall_secs: 8.0,
             actions_per_sec: 125_000.0,
+            threads: 4,
+            wall_secs_threaded: 4.0,
+            actions_per_sec_threaded: 250_000.0,
             peak_rss_kb: 40_960,
         };
+        assert_eq!(t.speedup().to_bits(), 2.0f64.to_bits());
         let adm = AdmissionBench {
             pack: "coldstart-storm".into(),
             mean_act_with: 1.0,
@@ -985,6 +1129,11 @@ mod tests {
         assert_eq!(parsed.pack, "million-action");
         assert_eq!(parsed.actions.to_bits(), 1_000_000f64.to_bits());
         assert_eq!(parsed.actions_per_sec.to_bits(), 125_000f64.to_bits());
+        assert_eq!(
+            parsed.actions_per_sec_threaded.map(f64::to_bits),
+            Some(250_000f64.to_bits())
+        );
+        assert_eq!(parsed.speedup.map(f64::to_bits), Some(2.0f64.to_bits()));
         assert_eq!(parsed.peak_rss_kb.to_bits(), 40_960f64.to_bits());
         // and without a measurement the key is absent entirely
         let text = sched_bench_json(&[], &adm, None);

@@ -1,0 +1,201 @@
+//! Dense slab of driver-owned action handles, indexed by [`ActionId`].
+//!
+//! The driver assigns action ids from a monotone counter, so the live id
+//! set is a sliding window: a dense `VecDeque` offset by the lowest
+//! still-tracked id replaces the per-action hashing (and rehash churn) of
+//! the old `HashMap<ActionId, Arc<Action>>` on every submit, retry and
+//! completion lookup — an O(1) offset and bounds check per access, no
+//! hasher in the hot path. Memory is bounded by the in-flight window:
+//! leading completed slots are reclaimed as soon as the oldest tracked
+//! action is removed.
+
+use crate::action::{Action, ActionId};
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+/// Offset-indexed slab of shared action handles (see the module docs).
+#[derive(Debug, Default)]
+pub struct ActionArena {
+    /// Id of `slots[0]`; ids map to dense offsets from here.
+    base: u64,
+    slots: VecDeque<Option<Arc<Action>>>,
+    live: usize,
+}
+
+impl ActionArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Actions currently tracked.
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    fn slot(&self, id: ActionId) -> Option<usize> {
+        id.0.checked_sub(self.base).map(|o| o as usize).filter(|&o| o < self.slots.len())
+    }
+
+    /// Track `action` under `id`. The driver hands out ascending ids, so
+    /// inserts only ever extend the window's trailing edge.
+    pub fn insert(&mut self, id: ActionId, action: Arc<Action>) {
+        if self.slots.is_empty() {
+            self.base = id.0;
+        }
+        debug_assert!(id.0 >= self.base, "action ids must be monotone");
+        let Some(offset) = id.0.checked_sub(self.base) else {
+            return;
+        };
+        let offset = offset as usize;
+        while self.slots.len() <= offset {
+            self.slots.push_back(None);
+        }
+        debug_assert!(self.slots[offset].is_none(), "duplicate arena insert");
+        if self.slots[offset].replace(action).is_none() {
+            self.live += 1;
+        }
+    }
+
+    pub fn get(&self, id: ActionId) -> Option<&Arc<Action>> {
+        self.slot(id).and_then(|o| self.slots[o].as_ref())
+    }
+
+    pub fn get_mut(&mut self, id: ActionId) -> Option<&mut Arc<Action>> {
+        let o = self.slot(id)?;
+        self.slots[o].as_mut()
+    }
+
+    /// Stop tracking `id`, returning its handle and reclaiming any leading
+    /// vacated slots (the sliding-window trim that bounds memory at the
+    /// in-flight width instead of the all-time action count).
+    pub fn remove(&mut self, id: ActionId) -> Option<Arc<Action>> {
+        let o = self.slot(id)?;
+        let taken = self.slots[o].take();
+        if taken.is_some() {
+            self.live -= 1;
+            while let Some(None) = self.slots.front() {
+                self.slots.pop_front();
+                self.base += 1;
+            }
+        }
+        taken
+    }
+}
+
+impl std::ops::Index<ActionId> for ActionArena {
+    type Output = Arc<Action>;
+
+    fn index(&self, id: ActionId) -> &Arc<Action> {
+        self.get(id).expect("action not tracked in the arena")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::action::{
+        ActionKind, ActionSpec, CostSpec, DimCost, ElasticityModel, ResourceClass,
+        ResourceRegistry, TaskId, TenantId, TrajId,
+    };
+    use crate::sim::{SimDur, SimTime};
+
+    fn mk(id: u64) -> Arc<Action> {
+        let mut reg = ResourceRegistry::new();
+        let cpu = reg.register("cpu", ResourceClass::CpuCores, 8);
+        Arc::new(Action::new(
+            ActionId(id),
+            ActionSpec {
+                task: TaskId(0),
+                tenant: TenantId(0),
+                trajectory: TrajId(id),
+                kind: ActionKind::EnvExec,
+                cost: CostSpec::single(&reg, cpu, DimCost::Fixed(1)),
+                key_resource: Some(cpu),
+                elasticity: ElasticityModel::None,
+                profiled_dur: None,
+                service: None,
+                true_dur: SimDur::from_secs(1),
+            },
+            SimTime::ZERO,
+        ))
+    }
+
+    #[test]
+    fn insert_get_remove_round_trip() {
+        let mut arena = ActionArena::new();
+        assert!(arena.is_empty());
+        for id in 10..14 {
+            arena.insert(ActionId(id), mk(id));
+        }
+        assert_eq!(arena.len(), 4);
+        assert_eq!(arena.get(ActionId(12)).map(|a| a.id), Some(ActionId(12)));
+        assert!(arena.get(ActionId(9)).is_none(), "below the window");
+        assert!(arena.get(ActionId(14)).is_none(), "beyond the window");
+        assert_eq!(arena[ActionId(11)].id, ActionId(11));
+        let a = arena.remove(ActionId(12)).expect("tracked");
+        assert_eq!(a.id, ActionId(12));
+        assert!(arena.remove(ActionId(12)).is_none(), "second removal misses");
+        assert!(arena.get(ActionId(12)).is_none());
+        assert_eq!(arena.len(), 3);
+    }
+
+    #[test]
+    fn window_slides_as_leading_actions_retire() {
+        let mut arena = ActionArena::new();
+        for id in 0..100 {
+            arena.insert(ActionId(id), mk(id));
+        }
+        // retire in order: the slab must trim from the front and stay at
+        // the in-flight width, not the all-time count
+        for id in 0..90 {
+            assert!(arena.remove(ActionId(id)).is_some());
+        }
+        assert_eq!(arena.len(), 10);
+        assert!(arena.slots.len() <= 10, "leading slots must be reclaimed");
+        assert_eq!(arena.base, 90);
+        // the window keeps sliding across fresh inserts
+        arena.insert(ActionId(100), mk(100));
+        assert_eq!(arena.get(ActionId(100)).map(|a| a.id), Some(ActionId(100)));
+        assert_eq!(arena.get(ActionId(95)).map(|a| a.id), Some(ActionId(95)));
+    }
+
+    #[test]
+    fn out_of_order_removal_trims_lazily() {
+        let mut arena = ActionArena::new();
+        for id in 0..4 {
+            arena.insert(ActionId(id), mk(id));
+        }
+        // removing a middle action leaves a hole but no trim
+        assert!(arena.remove(ActionId(1)).is_some());
+        assert_eq!(arena.base, 0);
+        // removing the head trims through the hole in one sweep
+        assert!(arena.remove(ActionId(0)).is_some());
+        assert_eq!(arena.base, 2);
+        assert_eq!(arena.len(), 2);
+        assert_eq!(arena.get(ActionId(2)).map(|a| a.id), Some(ActionId(2)));
+        // draining everything empties the slab; a later insert re-bases
+        assert!(arena.remove(ActionId(2)).is_some());
+        assert!(arena.remove(ActionId(3)).is_some());
+        assert!(arena.is_empty());
+        assert_eq!(arena.slots.len(), 0);
+        arena.insert(ActionId(1000), mk(1000));
+        assert_eq!(arena.base, 1000);
+        assert_eq!(arena.len(), 1);
+    }
+
+    #[test]
+    fn get_mut_reaches_the_tracked_handle() {
+        let mut arena = ActionArena::new();
+        arena.insert(ActionId(7), mk(7));
+        let handle = arena.get_mut(ActionId(7)).expect("tracked");
+        assert!(Arc::get_mut(handle).is_some(), "sole owner is mutable");
+        let extra = arena[ActionId(7)].clone();
+        let handle = arena.get_mut(ActionId(7)).expect("tracked");
+        assert!(Arc::get_mut(handle).is_none(), "shared handle is not");
+        drop(extra);
+    }
+}

@@ -45,17 +45,20 @@
 //!   anything is queued" — the default implementation returns `true`, which
 //!   is always correct and merely forfeits the optimization.
 //!
-//! Actions are handed over as [`Rc<Action>`] so queue management moves
+//! Actions are handed over as [`Arc<Action>`] so queue management moves
 //! 8-byte handles instead of cloning full `Action`s on every submit and
 //! retry. While an action is queued (state `Waiting`) the driver never
 //! mutates it; backends drop their handle when they start the action, which
 //! is what lets the driver reclaim exclusive ownership for bookkeeping.
+//! The handles are atomically counted so a backend may *read* its queues
+//! from worker threads during a drain ([`Backend::set_threads`]); all
+//! mutation stays on the driver thread.
 
 use crate::action::{Action, ActionId, TrajId};
 use crate::autoscale::{LaneKey, PoolPressure};
 use crate::scenario::ScenarioEvent;
 use crate::sim::{SimDur, SimTime};
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// An action the backend has decided to start now.
 #[derive(Debug, Clone)]
@@ -138,9 +141,9 @@ pub trait Backend {
     fn traj_end(&mut self, now: SimTime, traj: TrajId);
 
     /// Enqueue one action (also used for retries). The backend keeps a
-    /// clone of the `Rc` handle while the action waits and drops it when
+    /// clone of the `Arc` handle while the action waits and drops it when
     /// the action starts (see the dirty-pool contract above).
-    fn submit(&mut self, now: SimTime, action: &Rc<Action>);
+    fn submit(&mut self, now: SimTime, action: &Arc<Action>);
 
     /// An attempt finished executing; release resources and judge it.
     fn on_complete(&mut self, now: SimTime, action: &Action) -> Verdict;
@@ -235,6 +238,19 @@ pub trait Backend {
     /// bitwise the unsharded path. The default ignores the knob — backends
     /// without sub-pool parallelism have nothing to partition.
     fn set_shards(&mut self, n: usize) {
+        let _ = n;
+    }
+
+    /// Execute the shard slices of [`Backend::set_shards`] on up to `n`
+    /// worker threads. Workers run only the *read-only* decision half of a
+    /// drain; decisions are applied serially in ascending shard order, so
+    /// the sink's contents — and therefore recorded traces — stay
+    /// byte-identical for any `(shards, threads)` combination, and `n = 1`
+    /// is bitwise the serial path. Effective parallelism is capped by the
+    /// shard count: `--shards 1` leaves a single worker regardless of `n`.
+    /// The default ignores the knob — backends without a sharded drain have
+    /// nothing to parallelize.
+    fn set_threads(&mut self, n: usize) {
         let _ = n;
     }
 }

@@ -12,6 +12,7 @@
 //! scheduling decision for differential replay, an optional [`Autoscaler`],
 //! and per-tenant WFQ weights installed into the backend's lane queues.
 
+use super::arena::ActionArena;
 use super::backend::{Backend, StartedSink, Verdict};
 use crate::action::{Action, ActionId, ActionKind, ActionSpec, ActionState, TenantId, TrajId};
 use crate::autoscale::{Autoscaler, LaneKey, ScaleCmd};
@@ -23,7 +24,7 @@ use crate::scenario::{ScenarioEvent, TimedEvent};
 use crate::sim::{Engine, SimDur, SimTime};
 use crate::util::rng::Rng;
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// Experiment-run parameters.
 #[derive(Debug, Clone)]
@@ -109,11 +110,13 @@ struct Driver<'a> {
     eng: Engine<Ev>,
     metrics: Metrics,
     rng: Rng,
-    /// Single owner of every live action. Backends hold `Rc` handles only
+    /// Single owner of every live action. Backends hold `Arc` handles only
     /// while an action waits in a queue and drop them on start, so the
-    /// driver can reclaim exclusive access (`Rc::get_mut`) for the mutable
-    /// bookkeeping — no full-`Action` clones on submit or retry.
-    actions: HashMap<ActionId, Rc<Action>>,
+    /// driver can reclaim exclusive access (`Arc::get_mut`) for the mutable
+    /// bookkeeping — no full-`Action` clones on submit or retry. Ids are
+    /// handed out monotonically, so a sliding-window slab beats a hash map
+    /// on every hot-path lookup (see [`ActionArena`]).
+    actions: ActionArena,
     /// (overhead, exec) of the in-flight attempt
     attempt: HashMap<ActionId, (SimDur, SimDur)>,
     trajs: HashMap<TrajId, TrajRt>,
@@ -157,6 +160,10 @@ pub struct Session {
     /// backend's default — unset is distinct from asking for 1 shard so
     /// replay can honor whatever the backend was constructed with).
     shards: usize,
+    /// Worker threads for the decide half of the drain, requested via
+    /// [`Session::with_threads`] (0 = leave the backend's default, the
+    /// same unset-vs-explicit distinction as `shards`).
+    threads: usize,
 }
 
 impl Session {
@@ -200,6 +207,17 @@ impl Session {
         self
     }
 
+    /// Run the decide half of each drain on up to `n` worker threads
+    /// ([`Backend::set_threads`]). Plans apply serially in ascending shard
+    /// order, so any `n` produces byte-identical traces; `n = 1` is
+    /// bitwise the serial path. `0` leaves the backend's default.
+    /// Parallelism is capped by the shard count — pair with
+    /// [`Session::with_shards`].
+    pub fn with_threads(mut self, n: usize) -> Self {
+        self.threads = n;
+        self
+    }
+
     /// Reclaim the recorder after a run (e.g. to write the trace file).
     pub fn take_recorder(&mut self) -> Option<TraceRecorder> {
         self.recorder.take()
@@ -230,13 +248,16 @@ pub fn run_session(
     cfg: &RunCfg,
     session: &mut Session,
 ) -> Metrics {
-    let Session { injections, recorder, autoscaler, tenant_weights, shards } = session;
+    let Session { injections, recorder, autoscaler, tenant_weights, shards, threads } = session;
     let injections: &[TimedEvent] = injections;
     if !tenant_weights.is_empty() {
         backend.set_tenant_weights(tenant_weights);
     }
     if *shards > 0 {
         backend.set_shards(*shards);
+    }
+    if *threads > 0 {
+        backend.set_threads(*threads);
     }
     let mut d = Driver {
         backend,
@@ -245,7 +266,7 @@ pub fn run_session(
         eng: Engine::new(),
         metrics: Metrics::new(),
         rng: Rng::new(cfg.seed),
-        actions: HashMap::new(),
+        actions: ActionArena::new(),
         attempt: HashMap::new(),
         trajs: HashMap::new(),
         wls: workloads
@@ -580,7 +601,7 @@ impl Driver<'_> {
                 rt.phase += 1;
                 let kind = spec.kind;
                 let tenant = spec.tenant;
-                let a = Rc::new(Action::new(id, spec, now));
+                let a = Arc::new(Action::new(id, spec, now));
                 self.backend.submit(now, &a);
                 self.actions.insert(id, a);
                 self.waiting += 1;
@@ -655,8 +676,8 @@ impl Driver<'_> {
             let mut sink = std::mem::take(&mut self.sink);
             self.backend.drain_started_into(now, &mut sink);
             for s in sink.drain() {
-                let rc = self.actions.get_mut(&s.action).expect("unknown started action");
-                let a = Rc::get_mut(rc)
+                let rc = self.actions.get_mut(s.action).expect("unknown started action");
+                let a = Arc::get_mut(rc)
                     .expect("started action still referenced by a backend queue");
                 debug_assert_eq!(a.state, ActionState::Waiting);
                 a.state = ActionState::Running;
@@ -691,8 +712,8 @@ impl Driver<'_> {
     }
 
     fn action_done(&mut self, now: SimTime, id: ActionId) {
-        let verdict = self.backend.on_complete(now, &self.actions[&id]);
-        let retries = self.actions[&id].retry_count;
+        let verdict = self.backend.on_complete(now, &self.actions[id]);
+        let retries = self.actions[id].retry_count;
         let effective = match verdict {
             Verdict::Retry if retries >= self.cfg.max_api_retries => Verdict::Failed,
             v => v,
@@ -700,14 +721,14 @@ impl Driver<'_> {
         match effective {
             Verdict::Retry => {
                 let retries = {
-                    let rc = self.actions.get_mut(&id).unwrap();
-                    let a = Rc::get_mut(rc)
+                    let rc = self.actions.get_mut(id).unwrap();
+                    let a = Arc::get_mut(rc)
                         .expect("retried action still referenced by a backend queue");
                     a.retry_count += 1;
                     a.state = ActionState::Waiting;
                     a.retry_count
                 };
-                let handle = self.actions[&id].clone();
+                let handle = self.actions[id].clone();
                 self.backend.submit(now, &handle);
                 self.waiting += 1;
                 self.metrics.ledger.retried += 1;
@@ -723,7 +744,7 @@ impl Driver<'_> {
                 } else {
                     self.metrics.ledger.done += 1;
                 }
-                let a = self.actions.remove(&id).unwrap();
+                let a = self.actions.remove(id).unwrap();
                 let (overhead, _exec) = self.attempt.remove(&id).unwrap_or_default();
                 self.trace(
                     now,

@@ -1,11 +1,14 @@
 //! The coordinator layer: backend abstraction, the ARL-Tangram coordinator,
 //! and the discrete-event experiment driver.
 
+pub mod arena;
 pub mod backend;
 pub mod driver;
+mod parallel;
 pub mod queue;
 pub mod tangram;
 
+pub use arena::ActionArena;
 pub use backend::{Backend, Started, StartedSink, Verdict};
 pub use driver::{run, run_session, RunCfg, Session};
 pub use queue::ActionQueue;
@@ -287,7 +290,7 @@ mod tests {
         };
         use crate::sim::SimTime;
         use std::panic::{catch_unwind, AssertUnwindSafe};
-        use std::rc::Rc;
+        use std::sync::Arc;
         let cat = small_cat();
         let mut be = TangramBackend::new(
             &cat,
@@ -305,7 +308,7 @@ mod tests {
         assert!(pools_before > 0);
         // a GPU-cost action with no service id: the GPU arm of
         // `schedule_pool` panics on it ("GPU action without service")
-        let poisoned = Rc::new(Action::new(
+        let poisoned = Arc::new(Action::new(
             ActionId(1),
             ActionSpec {
                 task: TaskId(0),
@@ -359,6 +362,38 @@ mod tests {
                 m.mean_step_dur().to_bits(),
                 serial.mean_step_dur().to_bits(),
                 "shards={shards}"
+            );
+        }
+    }
+
+    #[test]
+    fn threaded_drain_matches_serial_metrics() {
+        // Worker-thread independence: the pool only runs the read-only
+        // decide half of a drain and plans apply in ascending shard order,
+        // so every decision — and thus every derived metric — is identical
+        // for any thread count, including counts above the shard count.
+        let cat = small_cat();
+        let wls = [
+            Workload::new(TaskId(1), WorkloadKind::DeepSearch),
+            Workload::new(TaskId(2), WorkloadKind::Mopd),
+        ];
+        let cfg = RunCfg { batch: 12, steps: 1, seed: 31, ..RunCfg::default() };
+        let serial = run(&mut tangram_for(&cat), &cat, &wls, &cfg);
+        for threads in [2usize, 4, 16] {
+            let mut be = tangram_for(&cat);
+            be.set_shards(4);
+            be.set_threads(threads);
+            let m = run(&mut be, &cat, &wls, &cfg);
+            assert_eq!(m.actions.len(), serial.actions.len(), "threads={threads}");
+            assert_eq!(
+                m.mean_act().to_bits(),
+                serial.mean_act().to_bits(),
+                "threads={threads}"
+            );
+            assert_eq!(
+                m.mean_step_dur().to_bits(),
+                serial.mean_step_dur().to_bits(),
+                "threads={threads}"
             );
         }
     }

@@ -1,0 +1,71 @@
+//! Scoped worker pool for the threaded sharded drain.
+//!
+//! The only place in the tree allowed to spawn threads (the determinism
+//! lint's `ambient-threads` rule allowlists exactly this file): ambient
+//! parallelism anywhere else could reorder observable decisions, while
+//! this pool runs only the *read-only* decide half of a drain
+//! ([`TangramBackend::decide_pool`]) and hands every plan back to the
+//! driver thread, which applies them in ascending shard order —
+//! byte-identical to the serial drain for any worker count.
+//!
+//! Workers are scoped (`std::thread::scope`), spawned per drain, and share
+//! `&TangramBackend` immutably; each worker owns a contiguous range of
+//! shards (cut with the same balanced formula as the shard slices
+//! themselves), so segment `s` of the returned vector always holds shard
+//! `s`'s plans regardless of which worker produced it.
+
+use super::tangram::{shard_slice, PoolPlan, TangramBackend};
+use crate::lanes::PoolId;
+use crate::sim::SimTime;
+
+/// Decide every shard slice of `pools` on up to `workers` scoped threads.
+///
+/// Returns one segment per shard, in ascending shard order: the
+/// `(pool, plan)` pairs of that shard's contiguous pool slice, in slice
+/// order. Concatenating the segments therefore reproduces the serial
+/// sorted-pool visit order exactly. A panicking worker is resumed on the
+/// caller's thread with its original payload.
+pub(crate) fn decide_shards(
+    be: &TangramBackend,
+    now: SimTime,
+    pools: &[PoolId],
+    shards: usize,
+    workers: usize,
+) -> Vec<Vec<(PoolId, PoolPlan)>> {
+    let mut segments: Vec<Vec<(PoolId, PoolPlan)>> = Vec::new();
+    segments.resize_with(shards, Vec::new);
+    let workers = workers.min(shards).max(1);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(workers);
+        let mut rest = segments.as_mut_slice();
+        let mut lo = 0usize;
+        for w in 0..workers {
+            // Contiguous worker ranges over the shard list; slices tile the
+            // list in order, so the previous range's `hi` is this one's
+            // `lo` and `rest` can be split off front-to-back.
+            let (_, hi) = shard_slice(shards, w, workers);
+            let (mine, tail) = rest.split_at_mut(hi - lo);
+            rest = tail;
+            let base = lo;
+            lo = hi;
+            handles.push(scope.spawn(move || {
+                for (offset, segment) in mine.iter_mut().enumerate() {
+                    let shard = base + offset;
+                    let (plo, phi) = shard_slice(pools.len(), shard, shards);
+                    segment.reserve(phi - plo);
+                    for &pool in &pools[plo..phi] {
+                        segment.push((pool, be.decide_pool(now, pool)));
+                    }
+                }
+            }));
+        }
+        for handle in handles {
+            if let Err(payload) = handle.join() {
+                // surface worker panics on the driver thread with the
+                // original payload instead of a bare join-failure message
+                std::panic::resume_unwind(payload);
+            }
+        }
+    });
+    segments
+}

@@ -4,7 +4,7 @@
 //! shifted the whole tail on every admission, positional removal re-shifted
 //! it on every scheduler decision, and every submit/retry cloned a full
 //! `Action` (spec, cost vectors, elasticity model). [`ActionQueue`] replaces
-//! that with a `VecDeque<Rc<Action>>` — pops are O(1), queue entries are
+//! that with a `VecDeque<Arc<Action>>` — pops are O(1), queue entries are
 //! 8-byte handles — plus an id index so decisions for actions that already
 //! left the queue (topology raced) are rejected in O(1).
 //!
@@ -27,7 +27,7 @@
 
 use crate::action::{Action, ActionId, ActionKind};
 use std::collections::{BTreeMap, HashSet, VecDeque};
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// Virtual-time units one weight-1 push costs. Large enough that integer
 /// division by any sane weight keeps distinct per-tenant finish spacing.
@@ -46,7 +46,7 @@ fn kind_index(k: ActionKind) -> usize {
 /// Weighted-fair queue of waiting actions, indexed by [`ActionId`].
 #[derive(Debug, Default)]
 pub struct ActionQueue {
-    items: VecDeque<Rc<Action>>,
+    items: VecDeque<Arc<Action>>,
     /// `(virtual finish, tenant, action id)` per entry, aligned with
     /// `items` — the deterministic service order.
     keys: VecDeque<(u64, u32, u64)>,
@@ -120,7 +120,7 @@ impl ActionQueue {
     /// degenerates to the tail, i.e. FCFS), or the plain tail under
     /// `set_fcfs(true)`. The name predates tenancy — callers still say
     /// "push_back" for "submit".
-    pub fn push_back(&mut self, action: Rc<Action>) {
+    pub fn push_back(&mut self, action: Arc<Action>) {
         debug_assert!(!self.ids.contains(&action.id), "duplicate queue entry");
         self.ids.insert(action.id);
         self.track(&action, 1);
@@ -148,7 +148,7 @@ impl ActionQueue {
     }
 
     /// Dequeue the service-order head.
-    pub fn pop_front(&mut self) -> Option<Rc<Action>> {
+    pub fn pop_front(&mut self) -> Option<Arc<Action>> {
         let a = self.items.pop_front()?;
         if let Some(k) = self.keys.pop_front() {
             self.vtime = self.vtime.max(k.0);
@@ -160,7 +160,7 @@ impl ActionQueue {
 
     /// Shared handle for a queued action (`None` if it already left the
     /// queue — the id index makes the miss O(1)).
-    pub fn get(&self, id: ActionId) -> Option<&Rc<Action>> {
+    pub fn get(&self, id: ActionId) -> Option<&Arc<Action>> {
         if !self.ids.contains(&id) {
             return None;
         }
@@ -170,7 +170,7 @@ impl ActionQueue {
     /// Remove a queued action by id (scheduler decisions apply out of
     /// service order within one drain). Servicing mid-queue advances the
     /// virtual clock exactly like a head pop — the entry was served.
-    pub fn remove(&mut self, id: ActionId) -> Option<Rc<Action>> {
+    pub fn remove(&mut self, id: ActionId) -> Option<Arc<Action>> {
         if !self.ids.remove(&id) {
             return None;
         }
@@ -192,7 +192,7 @@ impl ActionQueue {
         self.items.iter().map(|a| a.as_ref()).collect()
     }
 
-    pub fn iter(&self) -> impl Iterator<Item = &Rc<Action>> {
+    pub fn iter(&self) -> impl Iterator<Item = &Arc<Action>> {
         self.items.iter()
     }
 }
@@ -206,14 +206,14 @@ mod tests {
     };
     use crate::sim::{SimDur, SimTime};
 
-    fn mk(id: u64) -> Rc<Action> {
+    fn mk(id: u64) -> Arc<Action> {
         mk_tenant(id, 0)
     }
 
-    fn mk_tenant(id: u64, tenant: u32) -> Rc<Action> {
+    fn mk_tenant(id: u64, tenant: u32) -> Arc<Action> {
         let mut reg = ResourceRegistry::new();
         let cpu = reg.register("cpu", ResourceClass::CpuCores, 8);
-        Rc::new(Action::new(
+        Arc::new(Action::new(
             ActionId(id),
             ActionSpec {
                 task: TaskId(0),
@@ -283,9 +283,9 @@ mod tests {
         let mut q = ActionQueue::new();
         let a = mk(7);
         q.push_back(a.clone());
-        assert_eq!(Rc::strong_count(&a), 2);
+        assert_eq!(Arc::strong_count(&a), 2);
         let back = q.pop_front().unwrap();
-        assert!(Rc::ptr_eq(&a, &back), "queue must hand back the same allocation");
+        assert!(Arc::ptr_eq(&a, &back), "queue must hand back the same allocation");
     }
 
     fn drain_order(q: &mut ActionQueue) -> Vec<u64> {

@@ -27,6 +27,22 @@
 //! drain — the container-creation first-marker — ordered exactly as the
 //! serial loop ordered it.
 //!
+//! The shard slices optionally execute on a **worker pool**
+//! ([`Backend::set_threads`], [`crate::coordinator::parallel`]): each pool
+//! visit splits into a read-only *decide* half ([`PoolPlan`] — the elastic
+//! scheduler invocation plus the liveness guard, taking `&self`) and a
+//! mutating *apply* half (queue removal, manager allocation, sink pushes,
+//! the serial API admission loop). Workers run only decides, one worker
+//! per shard up to the thread budget; the driver thread then applies every
+//! plan in ascending shard order. Pools are disjoint, and nothing an apply
+//! mutates (manager leases, `containers_created`, in-flight tables, the
+//! EWMA — which only moves in `on_complete`) feeds another pool's decide
+//! within the same drain, so batching all decides before the first apply
+//! produces byte-identical plans to the serial interleaving — the
+//! threads-parity invariant the fuzzer re-checks on every seed. With one
+//! thread (or one shard) the drain runs the exact serial
+//! decide-then-apply-per-pool loop unchanged.
+//!
 //! Every *scaling* concern — classification, pressure reporting,
 //! fault × autoscale factor composition, substrate application, provision
 //! accounting — lives behind the [`ElasticLane`] abstraction
@@ -45,11 +61,11 @@ use crate::lanes::{ApiLane, CpuLane, ElasticLane, GpuLane, PoolId};
 use crate::managers::{CpuManager, GpuManager, ServiceSpec};
 use crate::rollout::workloads::Catalog;
 use crate::scenario::ScenarioEvent;
-use crate::scheduler::{ElasticScheduler, ResourceState, SchedulerConfig};
+use crate::scheduler::{Decision, ElasticScheduler, ResourceMap, SchedulerConfig};
 use crate::sim::{SimDur, SimTime};
 use crate::util::stopwatch::Stopwatch;
-use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
-use std::rc::Rc;
+use std::collections::{BTreeSet, HashMap, HashSet};
+use std::sync::Arc;
 
 /// Cluster-scale knobs for the Tangram deployment.
 #[derive(Debug, Clone)]
@@ -114,6 +130,10 @@ pub struct TangramBackend {
     /// the sorted pool work-list, processed in ascending order. `1` is the
     /// unsharded path; any value yields byte-identical decisions.
     shards: usize,
+    /// Worker-thread budget for the decide half of a drain (see the module
+    /// docs). Effective parallelism is `threads.min(shard_count)`; `1` is
+    /// the serial path, and any value yields byte-identical decisions.
+    threads: usize,
     /// trajectories that have already run their first CPU action (container
     /// creation charged once)
     containers_created: HashSet<TrajId>,
@@ -128,6 +148,35 @@ pub struct TangramBackend {
     /// drain_started call count + cumulative wall time
     pub drain_calls: u64,
     pub drain_wall: std::time::Duration,
+}
+
+/// Deferred outcome of the read-only decision half of one pool visit.
+///
+/// Produced by [`TangramBackend::decide_pool`] (shared `&self`, safe on
+/// worker threads) and consumed by `apply_plan` on the driver thread in
+/// ascending shard order — the deterministic-merge contract.
+pub(crate) enum PoolPlan {
+    /// Nothing to decide (empty CPU/GPU queue).
+    Empty,
+    /// CPU or GPU pool: elastic-scheduler decisions with the liveness
+    /// guard already folded in, plus the scheduler wall time they cost
+    /// (the invocation-count delta is always exactly one).
+    Decisions { decisions: Vec<Decision>, wall: std::time::Duration },
+    /// API pool: admission is inherently serial — every admitted call
+    /// advances the endpoint's PRNG and quota window — so the whole arm
+    /// runs in the apply half. The marker still flows through the plan
+    /// pipeline so threaded and serial drains share one code path.
+    Api,
+}
+
+/// Contiguous balanced chunk `[lo, hi)` of a `len`-pool work-list for
+/// `shard` of `shards` shards. Chunks tile the list in ascending order, so
+/// processing shards `0..shards` in order visits pools in exactly the
+/// serial (sorted) order — the deterministic-merge invariant the
+/// shard-parity tests pin. Shared with the worker pool in
+/// [`crate::coordinator::parallel`] so both sides cut identical slices.
+pub(crate) fn shard_slice(len: usize, shard: usize, shards: usize) -> (usize, usize) {
+    (shard * len / shards, (shard + 1) * len / shards)
 }
 
 impl TangramBackend {
@@ -153,6 +202,7 @@ impl TangramBackend {
             dirty: BTreeSet::new(),
             all_pools: Vec::new(),
             shards: 1,
+            threads: 1,
             containers_created: HashSet::new(),
             api_outcomes: HashMap::new(),
             inflight_exec: HashMap::new(),
@@ -211,23 +261,26 @@ impl TangramBackend {
         self.lanes().iter().find_map(|l| l.classify(a)).expect("action with empty cost")
     }
 
-    /// Run the elastic scheduler over one queue and apply its decisions.
-    fn schedule_pool(&mut self, now: SimTime, pool: PoolId, out: &mut StartedSink) {
+    /// Read-only decision half of one pool visit (see [`PoolPlan`]).
+    /// Borrows `self` shared so shard workers can decide concurrently;
+    /// everything it reads — queues, manager availability, the duration
+    /// EWMA — is mutated only by [`Self::apply_plan`] for *other* pools or
+    /// outside the drain entirely, which is what makes batched decides
+    /// byte-equal to the serial decide/apply interleaving.
+    pub(crate) fn decide_pool(&self, now: SimTime, pool: PoolId) -> PoolPlan {
         match pool {
             PoolId::CpuNode(node) => {
                 if self.cpu.queues[&node].is_empty() {
-                    return;
+                    return PoolPlan::Empty;
                 }
-                let mut decisions = {
+                let (mut decisions, wall) = {
                     let state = self.cpu.mgr.node_state(node);
-                    let mut map: BTreeMap<ResourceKindId, &dyn ResourceState> = BTreeMap::new();
+                    let mut map = ResourceMap::new();
                     map.insert(self.cpu_kind, &state);
                     let refs = self.cpu.queues[&node].refs();
                     let t0 = Stopwatch::start();
                     let d = self.sched.schedule(now, &refs, &map);
-                    self.sched_wall += t0.elapsed();
-                    self.sched_invocations += 1;
-                    d
+                    (d, t0.elapsed())
                 };
                 // Liveness guard: "wait for more capacity" is only sound
                 // when something is running that will free capacity. With an
@@ -239,13 +292,66 @@ impl TangramBackend {
                         let units = head.spec.cost.dim(self.cpu_kind).min_units();
                         let mut alloc = head.spec.cost.min_vector();
                         alloc.set(self.cpu_kind, units);
-                        decisions.push(crate::scheduler::Decision {
-                            action: head.id,
-                            units,
-                            alloc,
-                        });
+                        decisions.push(Decision { action: head.id, units, alloc });
                     }
                 }
+                PoolPlan::Decisions { decisions, wall }
+            }
+            PoolId::Gpu => {
+                if self.gpu.queue.is_empty() {
+                    return PoolPlan::Empty;
+                }
+                let (mut decisions, wall) = {
+                    let mut map = ResourceMap::new();
+                    map.insert(self.gpu_kind, &self.gpu.mgr);
+                    let refs = self.gpu.queue.refs();
+                    let t0 = Stopwatch::start();
+                    let d = self.sched.schedule(now, &refs, &map);
+                    (d, t0.elapsed())
+                };
+                // Liveness guard (see CPU pool): an idle cluster must not
+                // "wait" — force the head at its minimum legal DoP.
+                if decisions.is_empty() && self.gpu.mgr.running_completions().is_empty() {
+                    if let Some(head) = self.gpu.queue.front() {
+                        let units = head.spec.cost.dim(self.gpu_kind).min_units();
+                        let mut alloc = head.spec.cost.min_vector();
+                        alloc.set(self.gpu_kind, units);
+                        decisions.push(Decision { action: head.id, units, alloc });
+                    }
+                }
+                PoolPlan::Decisions { decisions, wall }
+            }
+            // API admission mutates on every step (endpoint PRNG, quota
+            // bookkeeping, even the idle-loop `mgr.tick`) — decide is a
+            // marker and the entire arm runs serially in the apply half.
+            PoolId::Api(_) => PoolPlan::Api,
+        }
+    }
+
+    /// Mutating apply half of one pool visit: queue removal, manager
+    /// allocation, first-container bookkeeping, sink pushes — and the whole
+    /// serial API admission loop. Always runs on the driver thread, pools
+    /// in ascending (shard, pool) order, which is exactly the serial visit
+    /// order — the byte-identity invariant.
+    fn apply_plan(&mut self, now: SimTime, pool: PoolId, plan: PoolPlan, out: &mut StartedSink) {
+        let decisions = match plan {
+            PoolPlan::Empty => return,
+            PoolPlan::Api => {
+                let PoolId::Api(kind) = pool else {
+                    debug_assert!(false, "API plan for a non-API pool");
+                    return;
+                };
+                self.apply_api(now, kind, out);
+                return;
+            }
+            PoolPlan::Decisions { decisions, wall } => {
+                self.sched_wall += wall;
+                self.sched_invocations += 1;
+                decisions
+            }
+        };
+        match pool {
+            PoolId::CpuNode(node) => {
                 for dec in decisions {
                     let a = match self.cpu.queues[&node].get(dec.action) {
                         Some(rc) => rc.clone(),
@@ -287,33 +393,6 @@ impl TangramBackend {
                 }
             }
             PoolId::Gpu => {
-                if self.gpu.queue.is_empty() {
-                    return;
-                }
-                let mut decisions = {
-                    let mut map: BTreeMap<ResourceKindId, &dyn ResourceState> = BTreeMap::new();
-                    map.insert(self.gpu_kind, &self.gpu.mgr);
-                    let refs = self.gpu.queue.refs();
-                    let t0 = Stopwatch::start();
-                    let d = self.sched.schedule(now, &refs, &map);
-                    self.sched_wall += t0.elapsed();
-                    self.sched_invocations += 1;
-                    d
-                };
-                // Liveness guard (see CPU pool): an idle cluster must not
-                // "wait" — force the head at its minimum legal DoP.
-                if decisions.is_empty() && self.gpu.mgr.running_completions().is_empty() {
-                    if let Some(head) = self.gpu.queue.front() {
-                        let units = head.spec.cost.dim(self.gpu_kind).min_units();
-                        let mut alloc = head.spec.cost.min_vector();
-                        alloc.set(self.gpu_kind, units);
-                        decisions.push(crate::scheduler::Decision {
-                            action: head.id,
-                            units,
-                            alloc,
-                        });
-                    }
-                }
                 for dec in decisions {
                     let a = match self.gpu.queue.get(dec.action) {
                         Some(rc) => rc.clone(),
@@ -336,34 +415,48 @@ impl TangramBackend {
                     }
                 }
             }
-            PoolId::Api(kind) => {
-                loop {
-                    let mgr = self.api.mgrs.get_mut(&kind).unwrap();
-                    mgr.tick(now);
-                    let ep = self.api.endpoints.get_mut(&kind).unwrap();
-                    let q = self.api.queues.get_mut(&kind).unwrap();
-                    if q.is_empty() {
-                        break;
-                    }
-                    // admission: provider concurrency via the Basic manager
-                    // plus the provider's remaining window quota
-                    if mgr.available_units() == 0 || ep.quota_left(now) == 0 {
-                        break;
-                    }
-                    let a = q.pop_front().expect("non-empty queue has a head");
-                    let (outcome, dur) = ep.issue(now);
-                    debug_assert_ne!(
-                        outcome,
-                        ApiOutcome::RateLimited,
-                        "admission control must prevent provider 429s"
-                    );
-                    mgr.allocate(a.id, 1, now + dur).expect("admission raced");
-                    self.api_outcomes.insert(a.id, outcome);
-                    self.inflight_exec.insert(a.id, dur);
-                    out.push(Started { action: a.id, overhead: SimDur::ZERO, exec: dur, units: 1 });
-                }
-            }
+            PoolId::Api(_) => debug_assert!(false, "decision plan for an API pool"),
         }
+    }
+
+    /// The serial API admission loop (see [`PoolPlan::Api`]): provider
+    /// concurrency via the Basic manager plus the provider's remaining
+    /// window quota, admitted strictly in queue order.
+    fn apply_api(&mut self, now: SimTime, kind: ResourceKindId, out: &mut StartedSink) {
+        loop {
+            let mgr = self.api.mgrs.get_mut(&kind).unwrap();
+            mgr.tick(now);
+            let ep = self.api.endpoints.get_mut(&kind).unwrap();
+            let q = self.api.queues.get_mut(&kind).unwrap();
+            if q.is_empty() {
+                break;
+            }
+            // admission: provider concurrency via the Basic manager
+            // plus the provider's remaining window quota
+            if mgr.available_units() == 0 || ep.quota_left(now) == 0 {
+                break;
+            }
+            let a = q.pop_front().expect("non-empty queue has a head");
+            let (outcome, dur) = ep.issue(now);
+            debug_assert_ne!(
+                outcome,
+                ApiOutcome::RateLimited,
+                "admission control must prevent provider 429s"
+            );
+            mgr.allocate(a.id, 1, now + dur).expect("admission raced");
+            self.api_outcomes.insert(a.id, outcome);
+            self.inflight_exec.insert(a.id, dur);
+            out.push(Started { action: a.id, overhead: SimDur::ZERO, exec: dur, units: 1 });
+        }
+    }
+
+    /// Run the elastic scheduler over one queue and apply its decisions —
+    /// the fused serial path (each pool's decide immediately applied),
+    /// bitwise the pre-threading code path and the `threads == 1`
+    /// behaviour.
+    fn schedule_pool(&mut self, now: SimTime, pool: PoolId, out: &mut StartedSink) {
+        let plan = self.decide_pool(now, pool);
+        self.apply_plan(now, pool, plan, out);
     }
 
     /// Every pool in *sorted* order — the cached full-sweep index, built
@@ -395,8 +488,15 @@ impl TangramBackend {
     /// exactly the serial (sorted) order — the deterministic-merge
     /// invariant the shard-parity tests pin.
     fn shard_bounds(&self, len: usize, shard: usize) -> (usize, usize) {
-        let n = self.shard_count(len);
-        (shard * len / n, (shard + 1) * len / n)
+        shard_slice(len, shard, self.shard_count(len))
+    }
+
+    /// Worker threads a drain over `len` pools actually uses: one per
+    /// shard up to the configured budget, never fewer than one. With
+    /// `--shards 1` the drain stays serial regardless of the budget —
+    /// parallelism comes from shards, threads only execute them.
+    fn worker_count(&self, len: usize) -> usize {
+        self.threads.min(self.shard_count(len)).max(1)
     }
 
     /// Mean wall-clock per invocation of one counted hot-path stat.
@@ -447,7 +547,7 @@ impl Backend for TangramBackend {
         }
     }
 
-    fn submit(&mut self, _now: SimTime, action: &Rc<Action>) {
+    fn submit(&mut self, _now: SimTime, action: &Arc<Action>) {
         let pool = self.classify(action);
         match pool {
             PoolId::CpuNode(n) => self.cpu.queues.get_mut(&n).unwrap().push_back(action.clone()),
@@ -518,18 +618,33 @@ impl Backend for TangramBackend {
     fn drain_started_into(&mut self, now: SimTime, sink: &mut StartedSink) {
         let t0 = Stopwatch::start();
         if self.cfg.full_sweep {
-            // Cached sorted index, walked by index so a panic inside
-            // schedule_pool (however unlikely) can never leave the cache
-            // empty — the old take/put-back idiom lost `all_pools` on any
-            // unwind between the take and the restore. The index loop is a
-            // `while` because holding a borrow of `self.all_pools` across
-            // the `&mut self` call is not possible.
-            for shard in 0..self.shard_count(self.all_pools.len()) {
-                let (mut i, hi) = self.shard_bounds(self.all_pools.len(), shard);
-                while i < hi {
-                    let pool = self.all_pools[i];
-                    self.schedule_pool(now, pool, sink);
-                    i += 1;
+            if self.worker_count(self.all_pools.len()) > 1 {
+                // Threaded sweep: batch-decide every shard slice on the
+                // worker pool, then apply in ascending shard order (the
+                // serial visit order — see the module docs).
+                let pools = self.all_pools.clone();
+                let shards = self.shard_count(pools.len());
+                let workers = self.worker_count(pools.len());
+                let plans = super::parallel::decide_shards(self, now, &pools, shards, workers);
+                for segment in plans {
+                    for (pool, plan) in segment {
+                        self.apply_plan(now, pool, plan, sink);
+                    }
+                }
+            } else {
+                // Cached sorted index, walked by index so a panic inside
+                // schedule_pool (however unlikely) can never leave the cache
+                // empty — the old take/put-back idiom lost `all_pools` on any
+                // unwind between the take and the restore. The index loop is a
+                // `while` because holding a borrow of `self.all_pools` across
+                // the `&mut self` call is not possible.
+                for shard in 0..self.shard_count(self.all_pools.len()) {
+                    let (mut i, hi) = self.shard_bounds(self.all_pools.len(), shard);
+                    while i < hi {
+                        let pool = self.all_pools[i];
+                        self.schedule_pool(now, pool, sink);
+                        i += 1;
+                    }
                 }
             }
         } else {
@@ -537,30 +652,50 @@ impl Backend for TangramBackend {
             // shard partition is contiguous over that order, so ascending
             // shards concatenate back into exactly the serial visit order.
             let pools: Vec<PoolId> = std::mem::take(&mut self.dirty).into_iter().collect();
-            for shard in 0..self.shard_count(pools.len()) {
-                let (lo, hi) = self.shard_bounds(pools.len(), shard);
-                for &pool in &pools[lo..hi] {
-                    let before = sink.len();
-                    self.schedule_pool(now, pool, sink);
-                    if sink.len() > before {
-                        // Started something — the pool's own state changed,
-                        // so it is dirty again by definition. Re-arming
-                        // keeps parity with the legacy sweep: the eviction
-                        // estimate may have planned an immediate follow-on
-                        // start on the leftover budget, which the sweep
-                        // realized at the driver's next same-instant pump.
-                        self.dirty.insert(pool);
-                        continue;
+            if self.worker_count(pools.len()) > 1 {
+                let shards = self.shard_count(pools.len());
+                let workers = self.worker_count(pools.len());
+                let plans = super::parallel::decide_shards(self, now, &pools, shards, workers);
+                for segment in plans {
+                    for (pool, plan) in segment {
+                        let before = sink.len();
+                        self.apply_plan(now, pool, plan, sink);
+                        // re-arm rules identical to the serial loop below
+                        if sink.len() > before {
+                            self.dirty.insert(pool);
+                            continue;
+                        }
+                        if self.lanes().iter().any(|l| l.has_stalled_waiters(pool)) {
+                            self.dirty.insert(pool);
+                        }
                     }
-                    // Stall re-arm: a pool with waiting work, nothing
-                    // running that will free capacity, and nothing started
-                    // (e.g. the liveness guard's forced head lost its cores
-                    // to a cordon) has no future event of its own to dirty
-                    // it — keep it dirty so every pump retries until
-                    // capacity returns (cordon restore, traj teardown).
-                    // Each lane owns its class's stall predicate.
-                    if self.lanes().iter().any(|l| l.has_stalled_waiters(pool)) {
-                        self.dirty.insert(pool);
+                }
+            } else {
+                for shard in 0..self.shard_count(pools.len()) {
+                    let (lo, hi) = self.shard_bounds(pools.len(), shard);
+                    for &pool in &pools[lo..hi] {
+                        let before = sink.len();
+                        self.schedule_pool(now, pool, sink);
+                        if sink.len() > before {
+                            // Started something — the pool's own state changed,
+                            // so it is dirty again by definition. Re-arming
+                            // keeps parity with the legacy sweep: the eviction
+                            // estimate may have planned an immediate follow-on
+                            // start on the leftover budget, which the sweep
+                            // realized at the driver's next same-instant pump.
+                            self.dirty.insert(pool);
+                            continue;
+                        }
+                        // Stall re-arm: a pool with waiting work, nothing
+                        // running that will free capacity, and nothing started
+                        // (e.g. the liveness guard's forced head lost its cores
+                        // to a cordon) has no future event of its own to dirty
+                        // it — keep it dirty so every pump retries until
+                        // capacity returns (cordon restore, traj teardown).
+                        // Each lane owns its class's stall predicate.
+                        if self.lanes().iter().any(|l| l.has_stalled_waiters(pool)) {
+                            self.dirty.insert(pool);
+                        }
                     }
                 }
             }
@@ -655,6 +790,10 @@ impl Backend for TangramBackend {
 
     fn set_shards(&mut self, n: usize) {
         self.shards = n.max(1);
+    }
+
+    fn set_threads(&mut self, n: usize) {
+        self.threads = n.max(1);
     }
 
     fn inject(&mut self, _now: SimTime, event: &ScenarioEvent) -> bool {

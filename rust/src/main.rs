@@ -33,6 +33,7 @@
 //!   arl-tangram scenario --replay static.jsonl --against auto.jsonl
 //!   arl-tangram scenario --fuzz 0 --cases 50   # seeded fuzz + invariant oracle sweep
 //!   arl-tangram scenario --pack steady-mix --shards 4    # sharded drain, byte-identical trace
+//!   arl-tangram scenario --pack steady-mix --shards 4 --threads 4  # worker threads, same bytes
 //!   arl-tangram scenario --pack million-action --scale 2 # multiply catalog×batch before running
 //!   arl-tangram bench-gate --baseline testdata/BENCH_sched.baseline.json
 //!   arl-tangram lint --json
@@ -49,8 +50,8 @@ use arl_tangram::rollout::workloads::{Catalog, Workload, WorkloadKind};
 use arl_tangram::runtime::{PjrtEngine, RewardModel};
 use arl_tangram::scenario::{
     ab_compare, build_backend, builtin_packs, fuzz_spec, pack_by_name, pack_description,
-    read_trace_file, replay_trace_sharded, run_scenario_sharded, run_scenario_tangram,
-    run_scenario_tangram_sharded, summary_json, write_trace_file, ScenarioSpec,
+    read_trace_file, replay_trace_threaded, run_scenario_tangram, run_scenario_tangram_threaded,
+    run_scenario_threaded, summary_json, write_trace_file, ScenarioSpec,
 };
 use arl_tangram::testkit::oracle;
 use arl_tangram::util::cli::Args;
@@ -199,8 +200,15 @@ enum ScenarioMode {
     List,
     Fuzz,
     Against { replay: String, against: String },
-    Replay { path: String, shards: usize },
-    Run { source: SpecSource, backend: BackendKind, full_sweep: bool, shards: usize, scale: u32 },
+    Replay { path: String, shards: usize, threads: usize },
+    Run {
+        source: SpecSource,
+        backend: BackendKind,
+        full_sweep: bool,
+        shards: usize,
+        threads: usize,
+        scale: u32,
+    },
 }
 
 /// The `scenario` subcommand's flag set, lifted out of [`Args`] so every
@@ -222,6 +230,7 @@ struct ScenarioArgs {
     autoscale_policy: String,
     admission: bool,
     shards: u64,
+    threads: u64,
     scale: u64,
 }
 
@@ -242,6 +251,7 @@ impl ScenarioArgs {
             autoscale_policy: args.str("autoscale-policy"),
             admission: args.bool("admission"),
             shards: args.u64("shards"),
+            threads: args.u64("threads"),
             scale: args.u64("scale"),
         }
     }
@@ -257,6 +267,9 @@ impl ScenarioArgs {
         if self.shards == 0 {
             return usage("--shards must be at least 1");
         }
+        if self.threads == 0 {
+            return usage("--threads must be at least 1");
+        }
         if self.scale == 0 {
             return usage("--scale must be at least 1 (it multiplies the spec; 1 = unscaled)");
         }
@@ -264,8 +277,10 @@ impl ScenarioArgs {
             if !self.record.is_empty() && self.cases.max(1) != 1 {
                 return usage("--record with --fuzz needs --cases 1");
             }
-            if self.shards > 1 || self.scale > 1 {
-                return usage("--fuzz generates its own specs; --shards/--scale do not apply");
+            if self.shards > 1 || self.threads > 1 || self.scale > 1 {
+                return usage(
+                    "--fuzz generates its own specs; --shards/--threads/--scale do not apply",
+                );
             }
             return Ok(ScenarioMode::Fuzz);
         }
@@ -273,8 +288,10 @@ impl ScenarioArgs {
             if self.replay.is_empty() {
                 return usage("--against needs --replay (the A side of the comparison)");
             }
-            if self.shards > 1 || self.scale > 1 {
-                return usage("--against diffs recorded traces offline; --shards/--scale do not apply");
+            if self.shards > 1 || self.threads > 1 || self.scale > 1 {
+                return usage(
+                    "--against diffs recorded traces offline; --shards/--threads/--scale do not apply",
+                );
             }
             return Ok(ScenarioMode::Against {
                 replay: self.replay.clone(),
@@ -290,11 +307,15 @@ impl ScenarioArgs {
             return Ok(ScenarioMode::Replay {
                 path: self.replay.clone(),
                 shards: self.shards as usize,
+                threads: self.threads as usize,
             });
         }
         let backend = BackendKind::parse(&self.backend).map_err(|e| UsageError(e.to_string()))?;
         if self.shards > 1 && backend != BackendKind::Tangram {
             return usage("--shards only applies to the tangram backend");
+        }
+        if self.threads > 1 && backend != BackendKind::Tangram {
+            return usage("--threads only applies to the tangram backend");
         }
         if self.full_sweep && backend != BackendKind::Tangram {
             return usage("--full-sweep only applies to the tangram backend");
@@ -325,6 +346,7 @@ impl ScenarioArgs {
             backend,
             full_sweep: self.full_sweep,
             shards: self.shards as usize,
+            threads: self.threads as usize,
             scale: self.scale.min(u32::MAX as u64) as u32,
         })
     }
@@ -341,6 +363,7 @@ fn cmd_scenario(argv: Vec<String>) -> i32 {
         .opt("against", "", "with --replay: A/B-diff the two trace files offline instead")
         .opt("fuzz", "", "fuzz mode: oracle-check generated specs from this base seed")
         .opt("shards", "1", "tangram drain shards (traces are byte-identical for any value)")
+        .opt("threads", "1", "tangram decide-half worker threads (byte-identical for any value)")
         .opt("scale", "1", "multiply the spec's catalog and batch by N before running")
         .opt("cases", "1", "with --fuzz: number of consecutive seeds to check")
         .opt("fail-out", "", "with --fuzz: write the minimized failing spec JSON here")
@@ -406,7 +429,7 @@ fn cmd_scenario(argv: Vec<String>) -> i32 {
     }
 
     // ---- replay path ----------------------------------------------------
-    if let ScenarioMode::Replay { path, shards } = &mode {
+    if let ScenarioMode::Replay { path, shards, threads } = &mode {
         let recorded = match read_trace_file(path) {
             Ok(r) => r,
             Err(e) => {
@@ -414,14 +437,21 @@ fn cmd_scenario(argv: Vec<String>) -> i32 {
                 return 2;
             }
         };
+        let mut knobs = String::new();
+        if *shards > 1 {
+            knobs.push_str(&format!(", {shards} shards"));
+        }
+        if *threads > 1 {
+            knobs.push_str(&format!(", {threads} threads"));
+        }
         println!(
             "replaying '{}' on {} ({} recorded events{})",
             recorded.spec.name,
             recorded.backend.name(),
             recorded.events.len(),
-            if *shards > 1 { format!(", {shards} shards") } else { String::new() }
+            knobs
         );
-        let report = match replay_trace_sharded(&recorded, *shards) {
+        let report = match replay_trace_threaded(&recorded, *shards, *threads) {
             Ok(r) => r,
             Err(e) => {
                 eprintln!("replay error: {e}");
@@ -445,9 +475,9 @@ fn cmd_scenario(argv: Vec<String>) -> i32 {
         1
     } else {
         // ---- record/run path --------------------------------------------
-        let (source, backend, full_sweep, shards, scale) = match mode {
-            ScenarioMode::Run { source, backend, full_sweep, shards, scale } => {
-                (source, backend, full_sweep, shards, scale)
+        let (source, backend, full_sweep, shards, threads, scale) = match mode {
+            ScenarioMode::Run { source, backend, full_sweep, shards, threads, scale } => {
+                (source, backend, full_sweep, shards, threads, scale)
             }
             // list / fuzz / against / replay all returned above
             _ => return 2,
@@ -506,7 +536,7 @@ fn cmd_scenario(argv: Vec<String>) -> i32 {
         let t = Stopwatch::start();
         // the tangram path also surfaces the scheduler hot-path counters
         let (outcome, sched) = if backend == BackendKind::Tangram {
-            match run_scenario_tangram_sharded(&spec, full_sweep, shards) {
+            match run_scenario_tangram_threaded(&spec, full_sweep, shards, threads) {
                 Ok((o, s)) => (o, Some(s)),
                 Err(e) => {
                     eprintln!("scenario error: {e}");
@@ -514,7 +544,7 @@ fn cmd_scenario(argv: Vec<String>) -> i32 {
                 }
             }
         } else {
-            match run_scenario_sharded(&spec, backend, shards) {
+            match run_scenario_threaded(&spec, backend, shards, threads) {
                 Ok(o) => (o, None),
                 Err(e) => {
                     eprintln!("scenario error: {e}");
@@ -933,6 +963,7 @@ mod tests {
             backend: "tangram".into(),
             cases: 1,
             shards: 1,
+            threads: 1,
             scale: 1,
             ..ScenarioArgs::default()
         }
@@ -977,7 +1008,10 @@ mod tests {
     fn replay_mode_and_spec_precedence() {
         let mut a = base();
         a.replay = "a.jsonl".into();
-        assert_eq!(a.validate(), Ok(ScenarioMode::Replay { path: "a.jsonl".into(), shards: 1 }));
+        assert_eq!(
+            a.validate(),
+            Ok(ScenarioMode::Replay { path: "a.jsonl".into(), shards: 1, threads: 1 })
+        );
 
         let mut a = base();
         a.pack = "steady-mix".into();
@@ -989,6 +1023,7 @@ mod tests {
                 backend: BackendKind::Tangram,
                 full_sweep: false,
                 shards: 1,
+                threads: 1,
                 scale: 1,
             })
         );
@@ -1047,7 +1082,10 @@ mod tests {
         let mut a = base();
         a.replay = "t.jsonl".into();
         a.shards = 8;
-        assert_eq!(a.validate(), Ok(ScenarioMode::Replay { path: "t.jsonl".into(), shards: 8 }));
+        assert_eq!(
+            a.validate(),
+            Ok(ScenarioMode::Replay { path: "t.jsonl".into(), shards: 8, threads: 1 })
+        );
         // non-tangram backends have no sharded drain
         let mut a = base();
         a.pack = "steady-mix".into();
@@ -1063,6 +1101,42 @@ mod tests {
         a.replay = "a.jsonl".into();
         a.against = "b.jsonl".into();
         a.shards = 2;
+        assert!(a.validate().unwrap_err().0.contains("offline"));
+    }
+
+    #[test]
+    fn threads_rules() {
+        // zero is a usage error in any mode
+        let mut a = base();
+        a.pack = "steady-mix".into();
+        a.threads = 0;
+        assert!(a.validate().unwrap_err().0.contains("--threads"));
+        // threaded tangram run and threaded replay both validate, carrying N
+        a.threads = 4;
+        assert!(matches!(a.validate(), Ok(ScenarioMode::Run { threads: 4, .. })));
+        let mut a = base();
+        a.replay = "t.jsonl".into();
+        a.shards = 4;
+        a.threads = 4;
+        assert_eq!(
+            a.validate(),
+            Ok(ScenarioMode::Replay { path: "t.jsonl".into(), shards: 4, threads: 4 })
+        );
+        // non-tangram backends have no worker pool
+        let mut a = base();
+        a.pack = "steady-mix".into();
+        a.backend = "k8s".into();
+        a.threads = 2;
+        assert!(a.validate().unwrap_err().0.contains("tangram"));
+        // fuzz and offline A/B reject the flag
+        let mut a = base();
+        a.fuzz = "7".into();
+        a.threads = 2;
+        assert!(a.validate().unwrap_err().0.contains("--fuzz"));
+        let mut a = base();
+        a.replay = "a.jsonl".into();
+        a.against = "b.jsonl".into();
+        a.threads = 2;
         assert!(a.validate().unwrap_err().0.contains("offline"));
     }
 

@@ -34,8 +34,9 @@ pub use fuzz::fuzz_spec;
 pub use packs::{builtin_packs, million_action_pack, pack_by_name, pack_description};
 pub use replay::{
     ab_compare, build_backend, diff_summaries, diff_traces, parse_trace_file, read_trace_file,
-    replay_trace, replay_trace_sharded, resolved_cost_rates, run_scenario, run_scenario_sharded,
-    run_scenario_tangram, run_scenario_tangram_sharded, summary_json, trace_file_contents,
+    replay_trace, replay_trace_sharded, replay_trace_threaded, resolved_cost_rates, run_scenario,
+    run_scenario_sharded, run_scenario_tangram, run_scenario_tangram_sharded,
+    run_scenario_tangram_threaded, run_scenario_threaded, summary_json, trace_file_contents,
     trace_pool_stats, trace_tenant_stats, write_trace_file, AbReport, AbRow, AbTenantRow,
     RecordedTrace, ReplayReport, ScenarioOutcome, SchedStats, TracePoolStats, TraceTenantStats,
 };

@@ -91,6 +91,20 @@ pub fn run_scenario_sharded(
     backend: BackendKind,
     shards: usize,
 ) -> Result<ScenarioOutcome> {
+    run_scenario_threaded(spec, backend, shards, 0)
+}
+
+/// [`run_scenario_sharded`] with an explicit worker-thread count for the
+/// decide half of each drain (the threaded-drain contract: plans apply in
+/// ascending shard order, so any `(shards, threads)` pair replays
+/// byte-identically; `0` leaves the backend's default, mirroring the shard
+/// knob). `--threads N` on the CLI lands here.
+pub fn run_scenario_threaded(
+    spec: &ScenarioSpec,
+    backend: BackendKind,
+    shards: usize,
+    threads: usize,
+) -> Result<ScenarioOutcome> {
     spec.validate()?;
     let wls = spec.workloads_for(backend);
     if wls.is_empty() {
@@ -102,7 +116,7 @@ pub fn run_scenario_sharded(
     }
     let cat = Catalog::build(&spec.catalog);
     let mut be = build_backend(&spec.catalog, &cat, backend);
-    let mut session = session_for(spec).with_shards(shards);
+    let mut session = session_for(spec).with_shards(shards).with_threads(threads);
     let cfg = spec.run_cfg();
     let mut metrics = run_session(be.as_mut(), &cat, &wls, &cfg, &mut session);
     attach_cost(&mut metrics, spec, be.as_ref());
@@ -186,6 +200,21 @@ pub fn run_scenario_tangram_sharded(
     full_sweep: bool,
     shards: usize,
 ) -> Result<(ScenarioOutcome, SchedStats)> {
+    run_scenario_tangram_threaded(spec, full_sweep, shards, 0)
+}
+
+/// [`run_scenario_tangram_sharded`] with an explicit worker-thread count.
+/// Workers run only the read-only decide half of each drain and plans apply
+/// in ascending shard order, so any `(shards, threads)` pair yields the
+/// serial decision stream byte-for-byte — the threads-parity tests, the
+/// fuzz oracle's threads invariant, and the throughput bench run through
+/// here. `0` leaves the backend's default.
+pub fn run_scenario_tangram_threaded(
+    spec: &ScenarioSpec,
+    full_sweep: bool,
+    shards: usize,
+    threads: usize,
+) -> Result<(ScenarioOutcome, SchedStats)> {
     spec.validate()?;
     let wls = spec.workloads_for(BackendKind::Tangram);
     if wls.is_empty() {
@@ -196,7 +225,7 @@ pub fn run_scenario_tangram_sharded(
     let mut tcfg = tangram_cfg_for(&spec.catalog);
     tcfg.full_sweep = full_sweep;
     let mut be = TangramBackend::new(&cat, tcfg);
-    let mut session = session_for(spec).with_shards(shards);
+    let mut session = session_for(spec).with_shards(shards).with_threads(threads);
     let cfg = spec.run_cfg();
     let mut metrics = run_session(&mut be, &cat, &wls, &cfg, &mut session);
     attach_cost(&mut metrics, spec, &be);
@@ -430,7 +459,18 @@ pub fn replay_trace(recorded: &RecordedTrace) -> Result<ReplayReport> {
 /// [`replay_trace`] with an explicit drain shard count: the CI parity smoke
 /// replays a golden at `--shards 4` and must still match it byte-for-byte.
 pub fn replay_trace_sharded(recorded: &RecordedTrace, shards: usize) -> Result<ReplayReport> {
-    let outcome = run_scenario_sharded(&recorded.spec, recorded.backend, shards)?;
+    replay_trace_threaded(recorded, shards, 0)
+}
+
+/// [`replay_trace_sharded`] with an explicit worker-thread count: the CI
+/// parity smoke replays a golden at `--shards 4 --threads 4` and must still
+/// match it byte-for-byte. `0` leaves the backend's default.
+pub fn replay_trace_threaded(
+    recorded: &RecordedTrace,
+    shards: usize,
+    threads: usize,
+) -> Result<ReplayReport> {
+    let outcome = run_scenario_threaded(&recorded.spec, recorded.backend, shards, threads)?;
     let fresh_summary = summary_json(&outcome.metrics);
     let summary_diff = diff_summaries(&recorded.summary, &fresh_summary);
     let trace_divergences = diff_traces(&recorded.events, &outcome.events, 10);
@@ -720,6 +760,55 @@ mod tests {
             trace_file_contents(&spec, BackendKind::Tangram, &sweep3),
             "full-sweep trace bytes diverged under sharding"
         );
+    }
+
+    #[test]
+    fn shard_and_thread_grid_records_byte_identical_traces() {
+        // The threaded-drain contract over the full (shards, threads) grid:
+        // workers run only the read-only decide half and plans apply in
+        // ascending shard order, so the FULL serialized trace file is
+        // byte-identical to the serial run for every combination — thread
+        // counts above the shard count included. No re-blessing, ever.
+        let spec = crate::scenario::pack_by_name("steady-mix").unwrap();
+        let (base, _) = run_scenario_tangram_threaded(&spec, false, 1, 1).unwrap();
+        let base_text = trace_file_contents(&spec, BackendKind::Tangram, &base);
+        for shards in [1usize, 2, 8] {
+            for threads in [1usize, 2, 4] {
+                let (o, _) =
+                    run_scenario_tangram_threaded(&spec, false, shards, threads).unwrap();
+                let text = trace_file_contents(&spec, BackendKind::Tangram, &o);
+                assert_eq!(
+                    text, base_text,
+                    "trace bytes diverged at shards={shards} threads={threads}"
+                );
+            }
+        }
+        // the full-sweep differential path drains through the same worker
+        // pool — same contract there
+        let (sweep1, _) = run_scenario_tangram_threaded(&spec, true, 1, 1).unwrap();
+        let (sweep43, _) = run_scenario_tangram_threaded(&spec, true, 4, 3).unwrap();
+        assert_eq!(
+            trace_file_contents(&spec, BackendKind::Tangram, &sweep1),
+            trace_file_contents(&spec, BackendKind::Tangram, &sweep43),
+            "full-sweep trace bytes diverged under threading"
+        );
+    }
+
+    #[test]
+    fn threaded_replay_matches_a_serial_recording() {
+        // the CI parity smoke in library form: record serial, replay at
+        // --shards 4 --threads 4, byte-identical summary and event stream
+        let spec = crate::scenario::pack_by_name("steady-mix").unwrap();
+        let outcome = run_scenario(&spec, BackendKind::Tangram).unwrap();
+        let recorded = RecordedTrace {
+            spec: spec.clone(),
+            backend: BackendKind::Tangram,
+            events: outcome.events.clone(),
+            summary: summary_json(&outcome.metrics),
+        };
+        let report = replay_trace_threaded(&recorded, 4, 4).unwrap();
+        assert!(report.identical, "diff: {:?}", report.summary_diff);
+        assert_eq!(report.replayed_events, outcome.events.len());
     }
 
     #[test]

@@ -17,7 +17,7 @@ use crate::action::{
     Action, ActionId, ActionKind, ResourceKindId, ResourceVector,
 };
 use crate::sim::{SimDur, SimTime};
-use std::collections::{BTreeMap, HashMap};
+use std::collections::HashMap;
 
 /// Scheduler tunables.
 #[derive(Debug, Clone)]
@@ -38,6 +38,53 @@ impl Default for SchedulerConfig {
             max_candidates: 32,
             default_dur: SimDur::from_millis(500),
         }
+    }
+}
+
+/// Sorted-vec index map from resource kind to pool view — the scheduler's
+/// per-decision replacement for `BTreeMap<ResourceKindId, &dyn ResourceState>`.
+/// A pool exposes a handful of kinds (typically one), so a binary-searched
+/// `Vec` beats tree nodes on both build and iteration cost in the per-drain
+/// hot path while keeping the property the determinism lint's ordering
+/// contract requires: iteration is sorted by kind, never hash order.
+#[derive(Default)]
+pub struct ResourceMap<'a> {
+    entries: Vec<(ResourceKindId, &'a dyn ResourceState)>,
+}
+
+impl<'a> ResourceMap<'a> {
+    pub fn new() -> Self {
+        ResourceMap { entries: Vec::new() }
+    }
+
+    /// Insert (or replace) the view for `kind`, keeping entries sorted.
+    pub fn insert(&mut self, kind: ResourceKindId, res: &'a dyn ResourceState) {
+        match self.entries.binary_search_by_key(&kind, |e| e.0) {
+            Ok(i) => self.entries[i].1 = res,
+            Err(i) => self.entries.insert(i, (kind, res)),
+        }
+    }
+
+    pub fn get(&self, kind: ResourceKindId) -> Option<&'a dyn ResourceState> {
+        self.entries.binary_search_by_key(&kind, |e| e.0).ok().map(|i| self.entries[i].1)
+    }
+
+    pub fn contains_key(&self, kind: ResourceKindId) -> bool {
+        self.entries.binary_search_by_key(&kind, |e| e.0).is_ok()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Entries in ascending kind order (the deterministic iteration order
+    /// every scheduling decision depends on).
+    pub fn iter(&self) -> impl Iterator<Item = (ResourceKindId, &'a dyn ResourceState)> + '_ {
+        self.entries.iter().map(|&(k, r)| (k, r))
     }
 }
 
@@ -124,14 +171,15 @@ impl ElasticScheduler {
 
     /// Algorithm 1. `queue` is the FCFS waiting queue; `resources[kind]`
     /// exposes each pool. Returns decisions for the selected actions
-    /// (everything else stays queued). The resource map is a `BTreeMap` so
-    /// every iteration over it is sorted by kind — scheduling decisions must
-    /// replay byte-identically and hash order is per-process random.
+    /// (everything else stays queued). The resource map is a sorted-vec
+    /// [`ResourceMap`] so every iteration over it is sorted by kind —
+    /// scheduling decisions must replay byte-identically and hash order is
+    /// per-process random.
     pub fn schedule(
         &self,
         now: SimTime,
         queue: &[&Action],
-        resources: &BTreeMap<ResourceKindId, &dyn ResourceState>,
+        resources: &ResourceMap<'_>,
     ) -> Vec<Decision> {
         if queue.is_empty() {
             return vec![];
@@ -141,28 +189,29 @@ impl ElasticScheduler {
         // pool by quantity, and whose per-action minimums the topologies can
         // accommodate.
         let mut cand: Vec<&Action> = Vec::new();
-        let mut budget: BTreeMap<ResourceKindId, u64> = resources
-            .iter()
-            .map(|(k, r)| (*k, r.available_units()))
-            .collect();
-        'outer: for a in queue.iter().take(self.cfg.max_candidates) {
+        // Per-decision budget index: sorted kind → remaining units. Mirrors
+        // the ResourceMap's order; binary-searched instead of tree-walked so
+        // the hot path allocates one flat Vec, not a node per kind.
+        let mut budget: Vec<(ResourceKindId, u64)> =
+            resources.iter().map(|(k, r)| (k, r.available_units())).collect();
+        'outer: for &a in queue.iter().take(self.cfg.max_candidates) {
             // quantity check
             for (kind, dim) in a.spec.cost.iter() {
                 let need = dim.min_units();
                 if need == 0 {
                     continue;
                 }
-                match budget.get(&kind) {
-                    Some(&have) if have >= need => {}
+                match budget.binary_search_by_key(&kind, |e| e.0) {
+                    Ok(i) if budget[i].1 >= need => {}
                     _ => break 'outer,
                 }
             }
             // topology check on the grown prefix, per kind
             let mut ok = true;
-            for (&kind, res) in resources.iter() {
+            for (kind, res) in resources.iter() {
                 let mins: Vec<u64> = cand
                     .iter()
-                    .chain(std::iter::once(a))
+                    .chain(std::iter::once(&a))
                     .map(|c| c.spec.cost.dim(kind).min_units())
                     .filter(|&m| m > 0)
                     .collect();
@@ -176,7 +225,10 @@ impl ElasticScheduler {
             }
             for (kind, dim) in a.spec.cost.iter() {
                 if dim.min_units() > 0 {
-                    *budget.get_mut(&kind).unwrap() -= dim.min_units();
+                    let i = budget
+                        .binary_search_by_key(&kind, |e| e.0)
+                        .expect("budget kind vanished between checks");
+                    budget[i].1 -= dim.min_units();
                 }
             }
             cand.push(a);
@@ -188,23 +240,25 @@ impl ElasticScheduler {
         // ---- group by key elasticity resource (Alg 1 lines 3-4) ----------
         // Actions whose key resource is a given kind form that kind's group;
         // their minimums on *other* kinds stay fixed (the single-key-resource
-        // assumption of §4.1 decouples the groups).
+        // assumption of §4.1 decouples the groups). Sorted-vec insert keeps
+        // the deterministic ascending-kind group order the BTreeMap used to
+        // provide.
         let mut selected: Vec<Decision> = Vec::new();
-        let mut grouped: BTreeMap<ResourceKindId, Vec<&Action>> = BTreeMap::new();
-        for a in &cand {
-            match a.spec.key_resource {
-                Some(k) if resources.contains_key(&k) => {
-                    grouped.entry(k).or_default().push(a)
-                }
-                _ => selected.push(min_decision(a)),
+        let mut grouped: Vec<(ResourceKindId, &dyn ResourceState, Vec<&Action>)> = Vec::new();
+        for &a in &cand {
+            match a.spec.key_resource.and_then(|k| resources.get(k).map(|r| (k, r))) {
+                Some((k, res)) => match grouped.binary_search_by_key(&k, |e| e.0) {
+                    Ok(i) => grouped[i].2.push(a),
+                    Err(i) => grouped.insert(i, (k, res, vec![a])),
+                },
+                None => selected.push(min_decision(a)),
             }
         }
 
-        // BTreeMap keys are already sorted — deterministic group order
-        let kinds: Vec<ResourceKindId> = grouped.keys().copied().collect();
-        for kind in kinds {
-            let group = &grouped[&kind];
-            let res = resources[&kind];
+        // grouped entries are already in ascending kind order
+        for (kind, res, group) in &grouped {
+            let kind = *kind;
+            let res = *res;
 
             // Alg 1 lines 5-6: if elasticity is unknown (or zero) for every
             // member, select all at minimum units.
@@ -471,9 +525,30 @@ mod tests {
         pool: &Pool,
         kind: ResourceKindId,
     ) -> Vec<Decision> {
-        let mut map: BTreeMap<ResourceKindId, &dyn ResourceState> = BTreeMap::new();
+        let mut map = ResourceMap::new();
         map.insert(kind, pool);
         sched.schedule(SimTime::ZERO, queue, &map)
+    }
+
+    #[test]
+    fn resource_map_is_sorted_and_replaces_on_duplicate_insert() {
+        let a = Pool { units: 3, running: vec![] };
+        let b = Pool { units: 7, running: vec![] };
+        let mut map = ResourceMap::new();
+        assert!(map.is_empty());
+        map.insert(ResourceKindId(9), &a);
+        map.insert(ResourceKindId(2), &b);
+        map.insert(ResourceKindId(5), &a);
+        assert_eq!(map.len(), 3);
+        let kinds: Vec<u32> = map.iter().map(|(k, _)| k.0).collect();
+        assert_eq!(kinds, vec![2, 5, 9], "iteration must be ascending by kind");
+        assert!(map.contains_key(ResourceKindId(5)));
+        assert!(!map.contains_key(ResourceKindId(4)));
+        assert_eq!(map.get(ResourceKindId(2)).map(|r| r.available_units()), Some(7));
+        // duplicate insert replaces the view, not the ordering
+        map.insert(ResourceKindId(2), &a);
+        assert_eq!(map.len(), 3);
+        assert_eq!(map.get(ResourceKindId(2)).map(|r| r.available_units()), Some(3));
     }
 
     #[test]

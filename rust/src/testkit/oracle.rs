@@ -20,8 +20,8 @@ use crate::coordinator::{run_session, Backend, Session};
 use crate::rollout::workloads::Catalog;
 use crate::scenario::{
     build_backend, fuzz_spec, parse_trace_file, replay_trace, run_scenario_tangram,
-    run_scenario_tangram_sharded, trace_file_contents, trace_tenant_stats, ScenarioEvent,
-    ScenarioOutcome, ScenarioSpec, TraceKind, TraceRecorder,
+    run_scenario_tangram_sharded, run_scenario_tangram_threaded, trace_file_contents,
+    trace_tenant_stats, ScenarioEvent, ScenarioOutcome, ScenarioSpec, TraceKind, TraceRecorder,
 };
 use crate::sim::SimTime;
 use crate::testkit::{shrink_failure, Gen};
@@ -600,28 +600,46 @@ fn check_wfq_neutrality(spec: &ScenarioSpec, v: &mut Vec<Violation>) -> Result<(
     Ok(())
 }
 
-/// Sharded-drain parity: re-running the dirty-pool configuration with the
-/// drain partitioned across 3 logical shards must serialize to the exact
-/// trace-file bytes of the serial run — the worker-count-independence
-/// contract behind `--shards N` (contiguous chunks of the sorted pool
-/// order, merged in ascending shard order).
+/// Sharded- and threaded-drain parity, composed so one fuzz seed covers
+/// both knobs: re-running the dirty-pool configuration with the drain
+/// partitioned across 3 logical shards *and* decided on 2 worker threads
+/// must serialize to the exact trace-file bytes of the serial run — the
+/// worker-count-independence contract behind `--shards N --threads N`
+/// (contiguous chunks of the sorted pool order, decided in parallel,
+/// applied in ascending shard order). On a mismatch, a third run at the
+/// same shard count but one thread attributes the divergence to the shard
+/// partition or to the worker pool.
 fn check_shards_parity(
     spec: &ScenarioSpec,
     dirty: &ScenarioOutcome,
     v: &mut Vec<Violation>,
 ) -> Result<()> {
-    let (sharded, _) = run_scenario_tangram_sharded(spec, false, 3)?;
+    let (threaded, _) = run_scenario_tangram_threaded(spec, false, 3, 2)?;
     let serial_text = trace_file_contents(spec, BackendKind::Tangram, dirty);
-    let sharded_text = trace_file_contents(spec, BackendKind::Tangram, &sharded);
-    if serial_text != sharded_text {
-        let divs = crate::scenario::diff_traces(&dirty.events, &sharded.events, 3);
-        v.push(Violation {
-            invariant: "shards-parity",
-            detail: format!(
-                "shards=3 trace bytes diverged from the serial drain: {}",
-                divs.join("; ")
-            ),
-        });
+    let threaded_text = trace_file_contents(spec, BackendKind::Tangram, &threaded);
+    if serial_text != threaded_text {
+        let divs = crate::scenario::diff_traces(&dirty.events, &threaded.events, 3);
+        // attribute: does the same shard count diverge without the pool?
+        let (sharded, _) = run_scenario_tangram_sharded(spec, false, 3)?;
+        let sharded_text = trace_file_contents(spec, BackendKind::Tangram, &sharded);
+        if sharded_text != serial_text {
+            v.push(Violation {
+                invariant: "shards-parity",
+                detail: format!(
+                    "shards=3 trace bytes diverged from the serial drain: {}",
+                    divs.join("; ")
+                ),
+            });
+        } else {
+            v.push(Violation {
+                invariant: "threads-parity",
+                detail: format!(
+                    "shards=3 threads=2 trace bytes diverged from the serial drain \
+                     (shards=3 alone matches): {}",
+                    divs.join("; ")
+                ),
+            });
+        }
     }
     Ok(())
 }

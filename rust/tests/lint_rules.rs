@@ -1,4 +1,4 @@
-//! Determinism-lint rule fixtures: for each of the six rules, a source
+//! Determinism-lint rule fixtures: for each of the seven rules, a source
 //! fragment that must FIRE, one that must PASS, and one where an
 //! `arl-lint: allow` suppresses the finding. Each firing fixture fails if
 //! its rule were disabled, so the battery pins the rule set itself. The
@@ -330,6 +330,67 @@ fn golden_surface_allow_suppresses() {
         }
     ";
     assert!(!fires(&lint_plain(src), RuleId::GoldenSurface));
+}
+
+// ---------------------------------------------------------------------------
+// ambient-threads
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ambient_threads_fires_on_spawns_and_channels() {
+    let src = "
+        fn fan_out() {
+            let h = std::thread::spawn(|| work());
+            h.join().unwrap();
+        }
+    ";
+    assert!(fires(&lint_decision(src), RuleId::AmbientThreads));
+    assert!(fires(&lint_plain(src), RuleId::AmbientThreads));
+    let src = "
+        fn pipe() {
+            let (tx, rx) = mpsc::channel();
+            tx.send(1).unwrap();
+            let _ = rx.recv();
+        }
+    ";
+    assert!(fires(&lint_plain(src), RuleId::AmbientThreads));
+    let src = "use std::thread;";
+    assert!(fires(&lint_plain(src), RuleId::AmbientThreads));
+}
+
+#[test]
+fn ambient_threads_passes_on_plain_idents_and_the_worker_pool() {
+    // `threads` / a bare `thread` ident without a `::` path are config
+    // knobs, not spawns.
+    let src = "
+        fn plan(threads: usize) -> usize {
+            let per_thread = 4;
+            threads * per_thread
+        }
+    ";
+    assert!(!fires(&lint_plain(src), RuleId::AmbientThreads));
+    // The coordinator's worker pool is the one allowlisted spawn site.
+    let src = "
+        fn drain() {
+            std::thread::scope(|s| { let _ = s; });
+        }
+    ";
+    let allowed = lint_source("src/coordinator/parallel.rs", src, &LintConfig::default());
+    assert!(!allowed.iter().any(|f| f.rule == RuleId::AmbientThreads));
+    // The same fragment anywhere else fires.
+    assert!(fires(&lint_decision(src), RuleId::AmbientThreads));
+}
+
+#[test]
+fn ambient_threads_allow_suppresses() {
+    let src = "
+        fn probe() {
+            // arl-lint: allow(ambient-threads): watchdog timer, never touches sim state
+            let h = std::thread::spawn(|| beat());
+            h.join().unwrap();
+        }
+    ";
+    assert!(!fires(&lint_plain(src), RuleId::AmbientThreads));
 }
 
 // ---------------------------------------------------------------------------

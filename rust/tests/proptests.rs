@@ -16,7 +16,7 @@
 
 use arl_tangram::action::{
     Action, ActionId, ActionKind, ActionSpec, CostSpec, DimCost, ElasticityModel,
-    ResourceClass, ResourceKindId, ResourceRegistry, ServiceId, TaskId, TenantId, TrajId,
+    ResourceClass, ResourceRegistry, ServiceId, TaskId, TenantId, TrajId,
 };
 use arl_tangram::autoscale::{LaneKey, PoolClass, PoolPressure};
 use arl_tangram::cluster::cpu::CpuLatency;
@@ -26,7 +26,7 @@ use arl_tangram::managers::{BasicManager, CpuManager};
 use arl_tangram::metrics::{Metrics, ProvisionRecord};
 use arl_tangram::scheduler::{
     dp_arrange, BasicOperator, ChunkOperator, CompletionHeap, DpOperator, ElasticScheduler,
-    ResourceState, SchedulerConfig,
+    ResourceMap, ResourceState, SchedulerConfig,
 };
 use arl_tangram::sim::{Engine, SimDur, SimTime};
 use arl_tangram::testkit::{check, default_cases, Gen};
@@ -548,7 +548,7 @@ fn prop_scheduler_never_overallocates() {
             .collect();
         let refs: Vec<&Action> = actions.iter().collect();
         let pool = FlatPool(inst.units);
-        let mut map: BTreeMap<ResourceKindId, &dyn ResourceState> = BTreeMap::new();
+        let mut map = ResourceMap::new();
         map.insert(cpu, &pool);
         let sched = ElasticScheduler::new(SchedulerConfig::default());
         let decisions = sched.schedule(SimTime::ZERO, &refs, &map);
